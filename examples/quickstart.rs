@@ -1,0 +1,78 @@
+//! Quickstart: simulate the paper's worked example (§4.3, Figures 1-2)
+//! and a larger allreduce, printing results and the Theorem 5 message
+//! counts.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use ftcoll::prelude::*;
+use ftcoll::topology::UpCorrectionGroups;
+use ftcoll::types::MsgKind;
+
+fn main() {
+    // --- the §4.3 scenario: 7 processes sum their ranks, process 1 died
+    println!("== fault-tolerant reduce: n=7, f=1, process 1 failed pre-operationally ==");
+    let cfg = SimConfig::new(7, 1)
+        .payload(PayloadKind::RankValue)
+        .failure(FailureSpec::Pre { rank: 1 });
+    let rep = run_reduce(&cfg);
+    let value = rep.root_value().expect("root delivered");
+    println!("root result: {}   (paper: 0+2+3+4+5+6 = 20)", value.as_f64_scalar());
+    println!(
+        "messages: up-correction {}  tree {}  (Theorem 5 failure-free: {} and {})",
+        rep.metrics.msgs(MsgKind::UpCorrection),
+        rep.metrics.msgs(MsgKind::TreeUp),
+        UpCorrectionGroups::new(7, 1).failure_free_messages(),
+        7 - 1,
+    );
+    println!("simulated latency: {} ns\n", rep.makespan().unwrap());
+
+    // --- the same phenomenon without fault tolerance (Figure 1): an
+    // interior node fails and its whole subtree is lost. (In our
+    // binomial layout rank 4 is interior with children {5,6}; rank 1 of
+    // the paper's depth-first layout plays the same role there.)
+    println!("== baseline fault-agnostic tree reduce, interior process 4 failed ==");
+    let bcfg = SimConfig::new(7, 1)
+        .payload(PayloadKind::RankValue)
+        .failure(FailureSpec::Pre { rank: 4 });
+    let rep = ftcoll::sim::run_baseline_tree_reduce(&bcfg);
+    println!(
+        "root result: {}   (expected 21-4 = 17 with FT; subtree {{4,5,6}} lost → 6)",
+        rep.root_value().unwrap().as_f64_scalar()
+    );
+    let rep_ft = run_reduce(&bcfg);
+    println!(
+        "fault-tolerant reduce, same failure: {}   (only the failed value missing)",
+        rep_ft.root_value().unwrap().as_f64_scalar()
+    );
+    println!();
+
+    // --- allreduce with a failed candidate root
+    println!("== fault-tolerant allreduce: n=32, f=2, ranks 0 and 7 failed ==");
+    let cfg = SimConfig::new(32, 2)
+        .payload(PayloadKind::RankValue)
+        .failures(vec![FailureSpec::Pre { rank: 0 }, FailureSpec::Pre { rank: 7 }]);
+    let rep = run_allreduce(&cfg);
+    let expect: f64 = (0..32).filter(|&r| r != 0 && r != 7).map(|r| r as f64).sum();
+    let mut delivered = 0;
+    for r in 0..32u32 {
+        if let Some(Outcome::Allreduce { value, attempts }) = rep.outcomes[r as usize].first()
+        {
+            assert_eq!(value.as_f64_scalar(), expect);
+            if delivered == 0 {
+                println!(
+                    "value {} at every live rank, attempts = {} (root 0 was dead, rotated to 1)",
+                    value.as_f64_scalar(),
+                    attempts
+                );
+            }
+            delivered += 1;
+        }
+    }
+    println!("delivered at {delivered}/30 live ranks");
+    println!(
+        "total messages {}  bytes {}  simulated latency {} ns",
+        rep.metrics.total_msgs(),
+        rep.metrics.total_bytes(),
+        rep.final_time
+    );
+}

@@ -1,0 +1,136 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO **text** artifacts the
+rust runtime loads via the PJRT C API.
+
+Interchange format is HLO text, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per artifact plus ``manifest.tsv`` (parsed
+by rust/src/runtime/registry.rs) and ``manifest.json`` (for humans).
+The manifest line format is::
+
+    name<TAB>file<TAB>in:<spec>;<spec>...<TAB>out:<spec>;<spec>...
+
+with ``<spec> = dtype[dim,dim,...]`` (e.g. ``f32[2048]``, ``i32[]``).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .model import ModelConfig
+
+#: payload lengths the combine artifacts are built for; the rust registry
+#: pads smaller payloads up to the nearest available length
+COMBINE_DIMS = (1024, 16384)
+#: k of the k-way tree-fold artifact (max children+1 the engine batches)
+COMBINE_K = 8
+#: ops lowered for combine2 (the paper's standard reduction functions)
+COMBINE_OPS = ("sum", "max", "min")
+#: dp_train worker batch size (rows per local grad step)
+TRAIN_BATCH = 8
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """jit-lower `fn` and convert the StableHLO module to HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s) -> str:
+    dt = jnp.dtype(s.dtype)
+    name = {"float32": "f32", "int32": "i32", "int64": "i64", "uint32": "u32"}[dt.name]
+    return f"{name}[{','.join(str(d) for d in s.shape)}]"
+
+
+def out_specs(fn, example_args):
+    outs = jax.eval_shape(fn, *example_args)
+    return [spec_str(o) for o in outs]
+
+
+def artifact_list():
+    """(name, fn, example_args) for every artifact we ship."""
+    arts = []
+    for op in COMBINE_OPS:
+        for d in COMBINE_DIMS:
+            fn, args = model.make_combine2(op, d)
+            arts.append((f"combine2_{op}_f32_{d}", fn, args))
+    for d in COMBINE_DIMS:
+        fn, args = model.make_combinek("sum", COMBINE_K, d)
+        arts.append((f"combinek{COMBINE_K}_sum_f32_{d}", fn, args))
+
+    # training artifacts — the flat parameter dimension P is data-driven
+    p, _ = model.flat_spec(ModelConfig)
+    fn, args = model.make_init_params(ModelConfig)
+    arts.append(("tr_init_params", fn, args))
+    fn, args = model.make_grad_step(TRAIN_BATCH, ModelConfig)
+    arts.append(("tr_grad_step", fn, args))
+    fn, args = model.make_sgd_update(ModelConfig)
+    arts.append(("tr_sgd_update", fn, args))
+    fn, args = model.make_loss_eval(TRAIN_BATCH, ModelConfig)
+    arts.append(("tr_loss_eval", fn, args))
+    # gradient-length 2-way combine for the dp_train allreduce payload
+    fn, args = model.make_combine2("sum", p)
+    arts.append((f"combine2_sum_f32_{p}", fn, args))
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", help="comma-separated artifact-name filter")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest_rows = []
+    meta = {
+        "model": ModelConfig.dims(),
+        "param_count": model.flat_spec(ModelConfig)[0],
+        "train_batch": TRAIN_BATCH,
+        "artifacts": {},
+    }
+    for name, fn, example_args in artifact_list():
+        if only and name not in only:
+            continue
+        text = to_hlo_text(fn, example_args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        ins = ";".join(spec_str(s) for s in example_args)
+        outs = ";".join(out_specs(fn, example_args))
+        manifest_rows.append(f"{name}\t{fname}\tin:{ins}\tout:{outs}")
+        meta["artifacts"][name] = {
+            "file": fname,
+            "inputs": ins.split(";"),
+            "outputs": outs.split(";"),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "hlo_bytes": len(text),
+        }
+        print(f"  {name:<28} {len(text):>9} bytes  in [{ins}] out [{outs}]")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest_rows) + "\n")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {len(manifest_rows)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for ft-collectives.
+
+The paper's compute hot-spot is the basic reduction function applied to
+message payloads: 2-way combines on the tree path (`combine2`) and k-way
+combines when a process folds its whole up-correction group / child set at
+once (`combinek`).  Kernels are lowered with ``interpret=True`` (CPU PJRT
+cannot execute Mosaic custom-calls; see DESIGN.md §Hardware-Adaptation)
+and pinned against the pure-jnp oracle in :mod:`compile.kernels.ref`.
+"""
+
+from .combine import combine2, combinek, OPS, BLOCK
+from . import ref
+
+__all__ = ["combine2", "combinek", "OPS", "BLOCK", "ref"]

@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the specification: pytest asserts the kernels match them
+elementwise (exactly for min/max, to float tolerance for sum/prod whose
+accumulation order may differ).
+"""
+
+import jax.numpy as jnp
+
+
+def combine2_ref(x, y, op: str):
+    """Elementwise 2-way combine — the basic reduction function of §4."""
+    if op == "sum":
+        return x + y
+    if op == "max":
+        return jnp.maximum(x, y)
+    if op == "min":
+        return jnp.minimum(x, y)
+    if op == "prod":
+        return x * y
+    raise ValueError(f"unknown op {op!r}")
+
+
+def combinek_ref(stack, op: str):
+    """k-way combine of a [k, d] stack down to [d]."""
+    if op == "sum":
+        return jnp.sum(stack, axis=0)
+    if op == "max":
+        return jnp.max(stack, axis=0)
+    if op == "min":
+        return jnp.min(stack, axis=0)
+    if op == "prod":
+        return jnp.prod(stack, axis=0)
+    raise ValueError(f"unknown op {op!r}")

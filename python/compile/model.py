@@ -1,0 +1,226 @@
+"""Layer-2 JAX compute graphs.
+
+Two graph families are lowered AOT for the rust coordinator:
+
+* **Combine graphs** — the basic reduction function over payload vectors,
+  delegating the elementwise work to the Layer-1 Pallas kernels
+  (:mod:`compile.kernels.combine`).  These run on the allreduce hot path.
+* **Training graphs** — a small byte-level transformer LM for the
+  end-to-end data-parallel example (``examples/dp_train.rs``): parameter
+  init, the local forward/backward step producing flat gradients, and the
+  SGD update.  Parameters travel as a single flat f32 vector so the rust
+  side can allreduce them with the same combine artifacts it uses for
+  everything else (the gradient buffer *is* a reduce payload, §1's HPC
+  framing).
+
+Everything here is build-time Python: ``aot.py`` lowers these functions
+to HLO text once; the rust runtime loads and executes the artifacts.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import combine2, combinek
+
+# ---------------------------------------------------------------------------
+# combine graphs
+
+
+def make_combine2(op: str, d: int):
+    """2-way payload combine [d]⊕[d]→[d] via the Pallas kernel."""
+
+    def fn(x, y):
+        return (combine2(x, y, op=op),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+        jax.ShapeDtypeStruct((d,), jnp.float32),
+    )
+
+
+def make_combinek(op: str, k: int, d: int):
+    """k-way payload combine [k,d]→[d] via the Pallas kernel."""
+
+    def fn(stack):
+        return (combinek(stack, op=op),)
+
+    return fn, (jax.ShapeDtypeStruct((k, d), jnp.float32),)
+
+
+# ---------------------------------------------------------------------------
+# transformer LM (byte-level)
+
+
+class ModelConfig:
+    """Static hyper-parameters for the dp_train example model.
+
+    ~0.47M parameters: sized so a few hundred CPU training steps finish
+    in seconds while exercising the same artifact path a 100M-parameter
+    model would (the flat-gradient payload just gets longer).
+    """
+
+    vocab = 256
+    d_model = 128
+    n_head = 4
+    n_layer = 2
+    d_ff = 512
+    seq_len = 64
+
+    @classmethod
+    def dims(cls):
+        return dict(
+            vocab=cls.vocab,
+            d_model=cls.d_model,
+            n_head=cls.n_head,
+            n_layer=cls.n_layer,
+            d_ff=cls.d_ff,
+            seq_len=cls.seq_len,
+        )
+
+
+def init_params(key, cfg=ModelConfig):
+    """Initialize the parameter pytree."""
+    keys = iter(jax.random.split(key, 4 + 8 * cfg.n_layer))
+    scale = 0.02
+    p = {
+        "tok_emb": scale * jax.random.normal(next(keys), (cfg.vocab, cfg.d_model)),
+        "pos_emb": scale * jax.random.normal(next(keys), (cfg.seq_len, cfg.d_model)),
+        "head": scale * jax.random.normal(next(keys), (cfg.d_model, cfg.vocab)),
+        "ln_f": jnp.ones((cfg.d_model,)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layer):
+        p["layers"].append(
+            {
+                "wq": scale * jax.random.normal(next(keys), (cfg.d_model, cfg.d_model)),
+                "wk": scale * jax.random.normal(next(keys), (cfg.d_model, cfg.d_model)),
+                "wv": scale * jax.random.normal(next(keys), (cfg.d_model, cfg.d_model)),
+                "wo": scale * jax.random.normal(next(keys), (cfg.d_model, cfg.d_model)),
+                "w1": scale * jax.random.normal(next(keys), (cfg.d_model, cfg.d_ff)),
+                "w2": scale * jax.random.normal(next(keys), (cfg.d_ff, cfg.d_model)),
+                "ln1": jnp.ones((cfg.d_model,)),
+                "ln2": jnp.ones((cfg.d_model,)),
+            }
+        )
+    return p
+
+
+def _rmsnorm(x, g):
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def _attention(x, layer, cfg):
+    B, T, D = x.shape
+    H = cfg.n_head
+    hd = D // H
+
+    def split(w):
+        return (x @ w).reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(layer["wq"]), split(layer["wk"]), split(layer["wv"])
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(hd)
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ layer["wo"]
+
+
+def model_apply(params, tokens, cfg=ModelConfig):
+    """Forward pass: [B, T] int32 tokens → [B, T, vocab] logits."""
+    B, T = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:T]
+    for layer in params["layers"]:
+        x = x + _attention(_rmsnorm(x, layer["ln1"]), layer, cfg)
+        h = _rmsnorm(x, layer["ln2"])
+        x = x + jax.nn.gelu(h @ layer["w1"]) @ layer["w2"]
+    x = _rmsnorm(x, params["ln_f"])
+    return x @ params["head"]
+
+
+def loss_fn(params, batch, cfg=ModelConfig):
+    """Next-token cross-entropy. `batch` is [B, T+1] int32."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits = model_apply(params, inputs, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return -jnp.mean(ll)
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter artifacts
+
+
+@functools.lru_cache()
+def flat_spec(cfg=ModelConfig):
+    """(param_count, unravel) for the flat f32 parameter vector."""
+    params = jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+    flat, unravel = ravel_pytree(
+        jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), params)
+    )
+    return int(flat.shape[0]), unravel
+
+
+def make_init_params(cfg=ModelConfig):
+    """Artifact: (seed i32[]) → flat params f32[P]."""
+    _, unravel = flat_spec(cfg)
+
+    def fn(seed):
+        params = init_params(jax.random.key(seed), cfg)
+        flat, _ = ravel_pytree(params)
+        return (flat,)
+
+    return fn, (jax.ShapeDtypeStruct((), jnp.int32),)
+
+
+def make_grad_step(batch_size: int, cfg=ModelConfig):
+    """Artifact: (flat_params f32[P], batch i32[B,T+1]) → (flat_grads
+    f32[P], loss f32[])."""
+    n, unravel = flat_spec(cfg)
+
+    def fn(flat_params, batch):
+        params = unravel(flat_params)
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        flat_grads, _ = ravel_pytree(grads)
+        return (flat_grads, loss)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((batch_size, cfg.seq_len + 1), jnp.int32),
+    )
+
+
+def make_sgd_update(cfg=ModelConfig):
+    """Artifact: (flat_params f32[P], summed grads f32[P], lr_over_w
+    f32[]) → new flat params f32[P].
+
+    The caller passes ``lr / world_size`` so the gradient *sum* produced
+    by the allreduce (whose combine op is the plain payload sum) turns
+    into the mean-gradient SGD step.
+    """
+    n, _ = flat_spec(cfg)
+
+    def fn(flat_params, grad_sum, lr_over_w):
+        return (flat_params - lr_over_w * grad_sum,)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+
+
+def make_loss_eval(batch_size: int, cfg=ModelConfig):
+    """Artifact: (flat_params f32[P], batch i32[B,T+1]) → loss f32[]."""
+    n, unravel = flat_spec(cfg)
+
+    def fn(flat_params, batch):
+        return (loss_fn(unravel(flat_params), batch),)
+
+    return fn, (
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((batch_size, cfg.seq_len + 1), jnp.int32),
+    )

@@ -1,0 +1,117 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/k/dtypes; assert_allclose against ref.py is THE
+correctness signal for the compute layer (the rust runtime then pins the
+AOT artifacts against the same oracle values in runtime_pjrt.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import combine2, combinek, OPS, BLOCK
+from compile.kernels.ref import combine2_ref, combinek_ref
+from compile.kernels.combine import vmem_footprint_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape):
+    return jax.random.uniform(jax.random.key(key), shape, minval=-4.0, maxval=4.0)
+
+
+# ---------------------------------------------------------------------------
+# directed cases
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_combine2_matches_ref_exact_block(op):
+    x, y = rand(0, (BLOCK,)), rand(1, (BLOCK,))
+    got = combine2(x, y, op=op)
+    np.testing.assert_allclose(got, combine2_ref(x, y, op), rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("d", [1, 7, BLOCK - 1, BLOCK + 1, 3 * BLOCK + 17])
+def test_combine2_ragged_lengths(op, d):
+    x, y = rand(2, (d,)), rand(3, (d,))
+    got = combine2(x, y, op=op)
+    assert got.shape == (d,)
+    np.testing.assert_allclose(got, combine2_ref(x, y, op), rtol=1e-6)
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("k", [1, 2, 3, 8])
+def test_combinek_matches_ref(op, k):
+    s = rand(4, (k, 2 * BLOCK))
+    got = combinek(s, op=op)
+    np.testing.assert_allclose(got, combinek_ref(s, op), rtol=1e-5)
+
+
+def test_combinek_equals_chained_combine2():
+    s = rand(5, (5, BLOCK))
+    acc = s[0]
+    for j in range(1, 5):
+        acc = combine2(acc, s[j], op="sum")
+    np.testing.assert_allclose(combinek(s, op="sum"), acc, rtol=1e-5)
+
+
+def test_padding_identity_is_exact():
+    # padding must not leak into the visible prefix even for min/max
+    for op in OPS:
+        x, y = rand(6, (10,)), rand(7, (10,))
+        np.testing.assert_allclose(
+            combine2(x, y, op=op), combine2_ref(x, y, op), rtol=1e-6
+        )
+
+
+def test_unknown_op_raises():
+    with pytest.raises((ValueError, KeyError)):
+        combine2(jnp.zeros(4), jnp.zeros(4), op="xor")
+
+
+def test_vmem_footprint_within_budget():
+    # k=8 fold with the default block must sit far below ~16 MiB VMEM
+    assert vmem_footprint_bytes(8) < 1 << 20
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d=st.integers(min_value=1, max_value=3 * BLOCK),
+    op=st.sampled_from(OPS),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_combine2_hypothesis(d, op, seed):
+    x, y = rand(seed, (d,)), rand(seed + 1, (d,))
+    np.testing.assert_allclose(
+        combine2(x, y, op=op), combine2_ref(x, y, op), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=8),
+    d=st.integers(min_value=1, max_value=BLOCK + 64),
+    op=st.sampled_from(OPS),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_combinek_hypothesis(k, d, op, seed):
+    s = rand(seed, (k, d))
+    np.testing.assert_allclose(
+        combinek(s, op=op), combinek_ref(s, op), rtol=1e-5, atol=1e-6
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16))
+def test_combine2_sum_commutative(seed):
+    x, y = rand(seed, (130,)), rand(seed + 9, (130,))
+    np.testing.assert_allclose(
+        combine2(x, y, op="sum"), combine2(y, x, op="sum"), rtol=1e-6
+    )

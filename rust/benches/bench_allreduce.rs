@@ -1,0 +1,33 @@
+//! E8 bench: wall-clock of simulating allreduce vs the ring and gossip
+//! baselines (simulated-latency tables come from `experiments --exp
+//! allreduce_cmp`).
+
+use ftcoll::benchlib::Bencher;
+use ftcoll::collectives::baseline::GossipConfig;
+use ftcoll::prelude::*;
+use ftcoll::sim;
+
+fn main() {
+    let mut b = Bencher::new("bench_allreduce");
+    for (n, f) in [(64u32, 1u32), (256, 2), (1024, 2)] {
+        b.bench(&format!("sim_allreduce/n{n}_f{f}"), || {
+            let rep = sim::run_allreduce(&SimConfig::new(n, f));
+            assert!(rep.outcomes.iter().flatten().count() > 0);
+        });
+        b.bench(&format!("sim_allreduce_dead_root/n{n}_f{f}"), || {
+            let cfg = SimConfig::new(n, f).failure(FailureSpec::Pre { rank: 0 });
+            let rep = sim::run_allreduce(&cfg);
+            assert!(rep.outcomes.iter().flatten().count() > 0);
+        });
+        b.bench(&format!("sim_ring_allreduce/n{n}"), || {
+            let rep = sim::run_baseline_ring_allreduce(&SimConfig::new(n, 0));
+            assert!(rep.outcomes.iter().flatten().count() > 0);
+        });
+        b.bench(&format!("sim_gossip/n{n}_f{f}"), || {
+            let rep =
+                sim::run_baseline_gossip(&SimConfig::new(n, f), GossipConfig::new(n, f));
+            assert!(rep.outcomes.iter().flatten().count() > 0);
+        });
+    }
+    b.write_csv();
+}

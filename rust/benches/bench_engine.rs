@@ -1,0 +1,45 @@
+//! E11 bench: live threaded-engine collective latency (engine spin-up +
+//! full collective + teardown — the per-step coordination cost dp_train
+//! pays on top of the compute).
+
+use ftcoll::benchlib::Bencher;
+use ftcoll::coordinator::{live_allreduce, live_reduce, EngineConfig};
+use ftcoll::prelude::*;
+
+fn main() {
+    let mut b = Bencher::new("bench_engine");
+    for n in [4u32, 8, 16, 32] {
+        b.bench(&format!("live_reduce/n{n}_f1"), || {
+            let mut cfg = EngineConfig::new(n, 1);
+            cfg.payload = PayloadKind::RankValue;
+            let rep = live_reduce(&cfg, 0);
+            assert!(rep.outcomes[0].is_some());
+        });
+    }
+    for n in [4u32, 8, 16] {
+        b.bench(&format!("live_allreduce/n{n}_f1"), || {
+            let mut cfg = EngineConfig::new(n, 1);
+            cfg.payload = PayloadKind::RankValue;
+            let rep = live_allreduce(&cfg);
+            assert!(rep.outcomes.iter().filter(|o| o.is_some()).count() == n as usize);
+        });
+    }
+    // payload scaling: 1 MiB-ish gradients through the native reducer
+    for len in [1024u32, 262_144] {
+        b.bench(&format!("live_allreduce_vec/n4_f1_len{len}"), || {
+            let mut cfg = EngineConfig::new(4, 1);
+            cfg.payload = PayloadKind::VectorF32 { len };
+            let rep = live_allreduce(&cfg);
+            assert!(rep.outcomes[0].is_some());
+        });
+    }
+    // failure handling cost: one dead candidate root (rotation)
+    b.bench("live_allreduce_dead_root/n8_f1", || {
+        let mut cfg = EngineConfig::new(8, 1);
+        cfg.payload = PayloadKind::RankValue;
+        cfg.failures = vec![FailureSpec::Pre { rank: 0 }];
+        let rep = live_allreduce(&cfg);
+        assert!(rep.outcomes[1].is_some());
+    });
+    b.write_csv();
+}

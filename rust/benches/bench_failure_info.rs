@@ -1,0 +1,41 @@
+//! E5 bench: failure-information scheme cost — bytes on the wire (the
+//! table, also via `experiments --exp failinfo`) and the wall-clock cost
+//! of the List scheme's aggregation at scale.
+
+use ftcoll::benchlib::{write_table, Bencher};
+use ftcoll::prelude::*;
+use ftcoll::sim;
+
+fn main() {
+    // table: finfo bytes per scheme at n=1024, f=4, k failures
+    let mut rows = Vec::new();
+    for k in [0u32, 2, 4] {
+        for scheme in Scheme::ALL {
+            let failures: Vec<FailureSpec> =
+                (0..k).map(|i| FailureSpec::Pre { rank: 11 + 7 * i }).collect();
+            let cfg = SimConfig::new(1024, 4).scheme(scheme).failures(failures);
+            let rep = sim::run_reduce(&cfg);
+            rows.push(format!(
+                "1024,4,{k},{},{},{}",
+                scheme.name(),
+                rep.metrics.finfo_bytes(),
+                rep.metrics.total_bytes()
+            ));
+        }
+    }
+    write_table(
+        "bench_failure_info_table",
+        "n,f,failures,scheme,finfo_bytes,total_bytes",
+        &rows,
+    );
+
+    let mut b = Bencher::new("bench_failure_info");
+    for scheme in Scheme::ALL {
+        b.bench(&format!("sim_reduce_n4096_f8/{}", scheme.name()), || {
+            let cfg = SimConfig::new(4096, 8).scheme(scheme);
+            let rep = sim::run_reduce(&cfg);
+            std::hint::black_box(rep.metrics.finfo_bytes());
+        });
+    }
+    b.write_csv();
+}

@@ -1,0 +1,36 @@
+//! E3/E4 bench: regenerates the Theorem 5 / Theorem 7 message-count
+//! tables (asserting the formulas) and times the counting runs.
+
+use ftcoll::benchlib::{write_table, Bencher};
+use ftcoll::prelude::*;
+use ftcoll::sim;
+use ftcoll::topology::UpCorrectionGroups;
+use ftcoll::types::MsgKind;
+
+fn main() {
+    // the table itself (same data as `experiments --exp thm5`)
+    let mut rows = Vec::new();
+    for n in [16u32, 256, 4096] {
+        for f in [0u32, 1, 4, 8] {
+            let rep = sim::run_reduce(&SimConfig::new(n, f));
+            let uc = rep.metrics.msgs(MsgKind::UpCorrection);
+            let formula = UpCorrectionGroups::new(n, f).failure_free_messages();
+            assert_eq!(uc, formula, "Theorem 5 violated at n={n} f={f}");
+            rows.push(format!("{n},{f},{uc},{}", rep.metrics.msgs(MsgKind::TreeUp)));
+        }
+    }
+    write_table("bench_msgcounts_table", "n,f,upcorr_msgs,tree_msgs", &rows);
+
+    let mut b = Bencher::new("bench_msgcounts");
+    b.bench("thm5_sweep_n4096", || {
+        for f in [0u32, 2, 8] {
+            let rep = sim::run_reduce(&SimConfig::new(4096, f));
+            std::hint::black_box(rep.metrics.total_msgs());
+        }
+    });
+    b.bench("thm7_allreduce_n1024_f4", || {
+        let rep = sim::run_allreduce(&SimConfig::new(1024, 4));
+        std::hint::black_box(rep.metrics.total_msgs());
+    });
+    b.write_csv();
+}

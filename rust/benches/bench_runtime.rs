@@ -1,0 +1,66 @@
+//! E11 bench: PJRT combine-artifact throughput — the data-path hot spot
+//! of the live engine (§Perf L1/L2 target: HBM-roofline-shaped scaling
+//! in the payload size; on CPU this is memory-bandwidth bound).
+//!
+//! Requires `make artifacts`; exits 0 with a notice otherwise.
+
+use ftcoll::benchlib::Bencher;
+use ftcoll::collectives::ReduceOp;
+use ftcoll::runtime::{default_artifact_dir, Executor};
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.tsv").exists() {
+        println!("SKIP bench_runtime: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let mut exec = Executor::new(&dir).expect("executor");
+    let mut b = Bencher::new("bench_runtime");
+
+    for len in [1024usize, 16384, 467_584] {
+        let a: Vec<f32> = (0..len).map(|i| i as f32).collect();
+        let c: Vec<f32> = (0..len).map(|i| (i * 3) as f32).collect();
+        // warm the executable outside the timed region
+        let mut acc = a.clone();
+        exec.combine2_f32(ReduceOp::Sum, &mut acc, &c).unwrap();
+        let r = b.bench(&format!("pjrt_combine2_sum/len{len}"), || {
+            let mut acc = a.clone();
+            exec.combine2_f32(ReduceOp::Sum, &mut acc, &c).unwrap();
+            std::hint::black_box(acc[0]);
+        });
+        let bytes = 3.0 * 4.0 * len as f64; // 2 reads + 1 write
+        println!(
+            "  -> {:.2} GB/s effective (median)",
+            bytes / (r.median_ns as f64)
+        );
+    }
+
+    // k-way vs chained 2-way: the fused artifact halves accumulator traffic
+    let rows: Vec<Vec<f32>> = (0..8).map(|i| vec![i as f32; 16384]).collect();
+    exec.combinek_f32(ReduceOp::Sum, &rows).unwrap();
+    b.bench("pjrt_combinek8_sum/len16384", || {
+        let v = exec.combinek_f32(ReduceOp::Sum, &rows).unwrap();
+        std::hint::black_box(v[0]);
+    });
+    b.bench("pjrt_chained2_sum/8xlen16384", || {
+        let mut acc = rows[0].clone();
+        for r in &rows[1..] {
+            exec.combine2_f32(ReduceOp::Sum, &mut acc, r).unwrap();
+        }
+        std::hint::black_box(acc[0]);
+    });
+
+    // training step artifact (the dp_train per-worker cost)
+    use ftcoll::runtime::executor::Input;
+    let p = exec.registry().get("tr_init_params").unwrap().outputs[0].elements();
+    let params = vec![0.01f32; p];
+    let batch: Vec<i32> = (0..8 * 65).map(|i| (i % 17) as i32).collect();
+    exec.execute("tr_grad_step", &[Input::F32(&params), Input::I32(&batch)]).unwrap();
+    b.bench("pjrt_tr_grad_step/467k_params_b8", || {
+        let out = exec
+            .execute("tr_grad_step", &[Input::F32(&params), Input::I32(&batch)])
+            .unwrap();
+        std::hint::black_box(out[1].scalar_f32());
+    });
+    b.write_csv();
+}

@@ -1,0 +1,42 @@
+//! E11 bench: raw discrete-event-simulator throughput (events/second) —
+//! the §Perf L3 target for the simulation substrate.
+
+use ftcoll::benchlib::{fmt_ns, Bencher};
+use ftcoll::prelude::*;
+use ftcoll::sim;
+
+fn main() {
+    let mut b = Bencher::new("bench_sim");
+
+    // event throughput on a large failure-free reduce
+    for n in [1024u32, 8192, 32768] {
+        let probe = sim::run_reduce(&SimConfig::new(n, 4));
+        let events = probe.metrics.events();
+        let r = b.bench(&format!("des_reduce/n{n}_f4 ({events} events)"), || {
+            let rep = sim::run_reduce(&SimConfig::new(n, 4));
+            std::hint::black_box(rep.final_time);
+        });
+        let evps = events as f64 / (r.median_ns as f64 / 1e9);
+        println!("  -> {:.2} M events/s (median)", evps / 1e6);
+    }
+
+    // allreduce (heavier: correction traffic)
+    let probe = sim::run_allreduce(&SimConfig::new(8192, 2));
+    let events = probe.metrics.events();
+    let r = b.bench(&format!("des_allreduce/n8192_f2 ({events} events)"), || {
+        let rep = sim::run_allreduce(&SimConfig::new(8192, 2));
+        std::hint::black_box(rep.final_time);
+    });
+    println!(
+        "  -> {:.2} M events/s (median), {} per event",
+        events as f64 / (r.median_ns as f64 / 1e9) / 1e6,
+        fmt_ns(r.median_ns / events.max(1))
+    );
+
+    // tracing overhead
+    b.bench("des_reduce_traced/n1024_f4", || {
+        let rep = sim::run_reduce(&SimConfig::new(1024, 4).tracing(true));
+        std::hint::black_box(rep.trace.events().len());
+    });
+    b.write_csv();
+}

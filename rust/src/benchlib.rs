@@ -1,0 +1,170 @@
+//! Minimal benchmarking harness (the offline image has no criterion;
+//! benches are `harness = false` binaries built on this module).
+//!
+//! Measures wall-clock over warmup + timed iterations, reports
+//! min/median/mean/p95 like criterion's summary line, and writes a CSV
+//! row per benchmark to `results/<bench>.csv` so EXPERIMENTS.md can cite
+//! stable numbers.
+
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub min_ns: u64,
+    pub median_ns: u64,
+    pub mean_ns: u64,
+    pub p95_ns: u64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<52} {:>10} iters  min {:>12}  median {:>12}  mean {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.min_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3} s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3} ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3} µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns} ns")
+    }
+}
+
+/// A single benchmark runner. Chooses iteration count to fill
+/// `target_time` (bounded by `max_iters`), after `warmup` iterations.
+pub struct Bencher {
+    target_time: Duration,
+    warmup: u32,
+    max_iters: u64,
+    results: Vec<BenchResult>,
+    csv_name: String,
+}
+
+impl Bencher {
+    pub fn new(csv_name: &str) -> Self {
+        // FTCOLL_BENCH_FAST=1 trims times for CI smoke runs.
+        let fast = std::env::var("FTCOLL_BENCH_FAST").is_ok();
+        Bencher {
+            target_time: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            warmup: if fast { 1 } else { 3 },
+            max_iters: if fast { 200 } else { 100_000 },
+            results: Vec::new(),
+            csv_name: csv_name.to_string(),
+        }
+    }
+
+    /// Benchmark `f`, labelling the result `name`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        // estimate one iteration
+        let t0 = Instant::now();
+        f();
+        let est = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = ((self.target_time.as_nanos() / est.as_nanos()).max(1) as u64)
+            .min(self.max_iters);
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as u64);
+        }
+        samples.sort_unstable();
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            min_ns: samples[0],
+            median_ns: samples[samples.len() / 2],
+            mean_ns: (samples.iter().sum::<u64>() / iters).max(1),
+            p95_ns: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+        };
+        println!("{}", result.line());
+        self.results.push(result.clone());
+        result
+    }
+
+    /// Write accumulated results to `results/<csv_name>.csv`.
+    pub fn write_csv(&self) {
+        let _ = std::fs::create_dir_all("results");
+        let path = format!("results/{}.csv", self.csv_name);
+        let mut out = match std::fs::File::create(&path) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("warn: cannot write {path}: {e}");
+                return;
+            }
+        };
+        let _ = writeln!(out, "name,iters,min_ns,median_ns,mean_ns,p95_ns");
+        for r in &self.results {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{},{}",
+                r.name, r.iters, r.min_ns, r.median_ns, r.mean_ns, r.p95_ns
+            );
+        }
+        println!("wrote {path}");
+    }
+}
+
+/// Write an arbitrary data table (header + rows) to `results/<name>.csv`
+/// and echo it to stdout — used by benches that regenerate paper tables
+/// rather than time code.
+pub fn write_table(name: &str, header: &str, rows: &[String]) {
+    let _ = std::fs::create_dir_all("results");
+    let path = format!("results/{name}.csv");
+    match std::fs::File::create(&path) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{header}");
+            for r in rows {
+                let _ = writeln!(f, "{r}");
+            }
+            println!("wrote {path}");
+        }
+        Err(e) => eprintln!("warn: cannot write {path}: {e}"),
+    }
+    println!("{header}");
+    for r in rows {
+        println!("{r}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("FTCOLL_BENCH_FAST", "1");
+        let mut b = Bencher::new("selftest");
+        let r = b.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.min_ns <= r.median_ns);
+        assert!(r.median_ns <= r.p95_ns);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500), "500 ns");
+        assert_eq!(fmt_ns(1_500), "1.500 µs");
+        assert_eq!(fmt_ns(2_000_000), "2.000 ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.000 s");
+    }
+}

@@ -1,0 +1,143 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline image).
+//!
+//! Grammar: `ftcoll <subcommand> [--key value]... [--flag]...`
+//! Unknown keys are an error; `parse_args` returns the subcommand and a
+//! key/value map the subcommands consume through typed getters.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing subcommand; try `ftcoll help`")]
+    MissingSubcommand,
+    #[error("option `--{0}` expects a value")]
+    MissingValue(String),
+    #[error("invalid value `{1}` for `--{0}`: {2}")]
+    BadValue(String, String, String),
+    #[error("unknown option(s): {0}")]
+    UnknownOptions(String),
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, CliError> {
+        let mut it = argv.iter().peekable();
+        let subcommand = it.next().cloned().ok_or(CliError::MissingSubcommand)?;
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| CliError::UnknownOptions(arg.clone()))?
+                .to_string();
+            // `--key=value` or `--key value` or bare flag
+            if let Some((k, v)) = key.split_once('=') {
+                opts.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                opts.insert(key, it.next().unwrap().clone());
+            } else {
+                flags.push(key);
+            }
+        }
+        Ok(Args { subcommand, opts, flags, consumed: Default::default() })
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        if self.flags.iter().any(|f| f == name) {
+            self.consumed.borrow_mut().push(name.to_string());
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        let v = self.opts.get(name).map(|s| s.as_str());
+        if v.is_some() {
+            self.consumed.borrow_mut().push(name.to_string());
+        }
+        v
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e: T::Err| {
+                CliError::BadValue(name.to_string(), v.to_string(), e.to_string())
+            }),
+        }
+    }
+
+    /// Error out if any provided option was never consumed (catches
+    /// typos like `--shceme`).
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::UnknownOptions(unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = Args::parse(&argv(&["reduce", "--n", "16", "--f=2", "--trace"])).unwrap();
+        assert_eq!(a.subcommand, "reduce");
+        assert_eq!(a.get("n"), Some("16"));
+        assert_eq!(a.get("f"), Some("2"));
+        assert!(a.flag("trace"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = Args::parse(&argv(&["reduce", "--n", "16"])).unwrap();
+        assert_eq!(a.get_parsed("n", 8u32).unwrap(), 16);
+        assert_eq!(a.get_parsed("f", 1u32).unwrap(), 1);
+        assert!(a.get_parsed::<u32>("n", 0).is_ok());
+    }
+
+    #[test]
+    fn bad_value_reports_key() {
+        let a = Args::parse(&argv(&["reduce", "--n", "lots"])).unwrap();
+        let err = a.get_parsed::<u32>("n", 0).unwrap_err();
+        assert!(err.to_string().contains("--n"), "{err}");
+    }
+
+    #[test]
+    fn unconsumed_options_error() {
+        let a = Args::parse(&argv(&["reduce", "--shceme", "bit"])).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn missing_subcommand() {
+        assert!(Args::parse(&argv(&[])).is_err());
+    }
+}

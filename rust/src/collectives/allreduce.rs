@@ -1,0 +1,473 @@
+//! Fault-tolerant allreduce (Algorithm 5, §5.2): a fault-tolerant reduce
+//! to a root `r`, followed by a fault-tolerant broadcast of the result
+//! from `r`. If `r` is detected to have failed, every process
+//! consistently rotates to the next candidate root and retries.
+//!
+//! §5.1 assumption: a set of at least `f+1` processes is known to fail
+//! only pre-operationally; the candidate roots are drawn (consistently,
+//! deterministically) from that set, so a root never dies *during* its
+//! broadcast and the fail-stop monitor gives every process the same
+//! verdict about each candidate.
+//!
+//! Implementation notes (beyond the pseudocode):
+//! * Attempts are tagged with an *epoch* carried in every message.
+//!   Processes can be in different attempts transiently; messages from a
+//!   future epoch are buffered and replayed when the process catches up
+//!   (dropping them would lose a peer's contribution — detection is
+//!   consistent but not synchronized). Past-epoch messages are dropped.
+//! * The reduce and broadcast state machines for the current attempt run
+//!   *concurrently*: a process may receive the broadcast value while its
+//!   own reduce subtree is still timing out on a failed child. It then
+//!   delivers early but keeps serving the reduce so its ancestors do not
+//!   mistake it for dead.
+//! * `deliver_allreduce` happens at most once; rotation stops as soon as
+//!   the operation delivered.
+
+use super::broadcast::{BcastConfig, Broadcast, CorrectionMode};
+use super::failure_info::Scheme;
+use super::reduce::{Reduce, ReduceConfig};
+use super::{Ctx, Outcome, Protocol};
+use crate::types::{Msg, MsgKind, ProtoError, Rank, TimeNs, Value};
+
+/// Static configuration of one allreduce operation.
+#[derive(Clone, Debug)]
+pub struct AllreduceConfig {
+    pub n: u32,
+    pub f: u32,
+    pub scheme: Scheme,
+    /// Correction mode of the broadcast half.
+    pub correction: CorrectionMode,
+    /// Candidate roots, tried in order ("a deterministic selection that
+    /// selects enough processes eventually", §5.2). Must contain at
+    /// least `f+1` ranks from the set known not to fail in-operationally.
+    pub candidates: Vec<Rank>,
+    pub op_id: u64,
+}
+
+impl AllreduceConfig {
+    /// Default candidates: ranks `0..=f` (the paper's
+    /// `r ← successor(r)` starting at 0).
+    pub fn new(n: u32, f: u32) -> Self {
+        let candidates = (0..=f.min(n - 1)).collect();
+        AllreduceConfig {
+            n,
+            f,
+            scheme: Scheme::List,
+            correction: CorrectionMode::Always,
+            candidates,
+            op_id: 1,
+        }
+    }
+
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    pub fn candidates(mut self, candidates: Vec<Rank>) -> Self {
+        assert!(!candidates.is_empty());
+        self.candidates = candidates;
+        self
+    }
+}
+
+/// Wrapper context that stamps the current epoch on outgoing messages and
+/// captures inner deliveries instead of passing them to the caller.
+struct SubCtx<'a> {
+    inner: &'a mut dyn Ctx,
+    epoch: u32,
+    captured: Vec<Outcome>,
+}
+
+impl<'a> Ctx for SubCtx<'a> {
+    fn rank(&self) -> Rank {
+        self.inner.rank()
+    }
+    fn n(&self) -> u32 {
+        self.inner.n()
+    }
+    fn now(&self) -> TimeNs {
+        self.inner.now()
+    }
+    fn send(&mut self, to: Rank, mut msg: Msg) {
+        msg.epoch = self.epoch;
+        self.inner.send(to, msg);
+    }
+    fn watch(&mut self, peer: Rank) {
+        self.inner.watch(peer);
+    }
+    fn unwatch(&mut self, peer: Rank) {
+        self.inner.unwatch(peer);
+    }
+    fn set_timer(&mut self, delay: TimeNs, token: u64) {
+        self.inner.set_timer(delay, token);
+    }
+    fn combine(&mut self, acc: &mut Value, other: &Value) {
+        self.inner.combine(acc, other);
+    }
+    fn deliver(&mut self, out: Outcome) {
+        self.captured.push(out);
+    }
+}
+
+/// Per-process state machine for fault-tolerant allreduce.
+pub struct Allreduce {
+    cfg: AllreduceConfig,
+    /// This process's contribution (cloned into each attempt's reduce).
+    data: Value,
+    /// Current attempt index into `cfg.candidates`.
+    epoch: u32,
+    reduce: Option<Reduce>,
+    bcast: Option<Broadcast>,
+    /// Messages from future epochs, replayed on catch-up.
+    buffered: Vec<(Rank, Msg)>,
+    rank: Rank,
+    delivered: bool,
+    /// Terminal error delivered (candidates exhausted).
+    errored: bool,
+}
+
+impl Allreduce {
+    pub fn new(cfg: AllreduceConfig, data: Value) -> Self {
+        assert!(!cfg.candidates.is_empty(), "need at least one candidate root");
+        Allreduce {
+            cfg,
+            data,
+            epoch: 0,
+            reduce: None,
+            bcast: None,
+            buffered: Vec::new(),
+            rank: 0,
+            delivered: false,
+            errored: false,
+        }
+    }
+
+    fn current_root(&self) -> Rank {
+        self.cfg.candidates[self.epoch as usize]
+    }
+
+    fn start_attempt(&mut self, ctx: &mut dyn Ctx) {
+        let root = self.current_root();
+        // watch the candidate root so its (pre-operational) failure is
+        // detected even by processes it owes no protocol message to
+        if root != self.rank {
+            ctx.watch(root);
+        }
+        let rcfg = ReduceConfig {
+            n: self.cfg.n,
+            f: self.cfg.f,
+            root,
+            scheme: self.cfg.scheme,
+            op_id: self.cfg.op_id,
+            epoch: self.epoch,
+        };
+        self.reduce = Some(Reduce::new(rcfg, self.data.clone()));
+        // the non-root broadcast half is passive and can be created
+        // up-front; the root's is created once the reduce delivers the
+        // value
+        if root != self.rank {
+            let bcfg = BcastConfig {
+                n: self.cfg.n,
+                f: self.cfg.f,
+                root,
+                mode: self.cfg.correction,
+                distance: None,
+                op_id: self.cfg.op_id,
+                epoch: self.epoch,
+            };
+            self.bcast = Some(Broadcast::new(bcfg, None));
+        } else {
+            self.bcast = None;
+        }
+
+        let mut sub = SubCtx { inner: ctx, epoch: self.epoch, captured: Vec::new() };
+        self.reduce.as_mut().unwrap().on_start(&mut sub);
+        if let Some(b) = self.bcast.as_mut() {
+            b.on_start(&mut sub);
+        }
+        let captured = sub.captured;
+        self.handle_captured(captured, ctx);
+        self.replay_buffered(ctx);
+    }
+
+    fn replay_buffered(&mut self, ctx: &mut dyn Ctx) {
+        let epoch = self.epoch;
+        let (now, later): (Vec<_>, Vec<_>) = std::mem::take(&mut self.buffered)
+            .into_iter()
+            .partition(|(_, m)| m.epoch == epoch);
+        self.buffered = later;
+        for (from, msg) in now {
+            self.route_message(from, msg, ctx);
+        }
+    }
+
+    fn route_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        let mut sub = SubCtx { inner: ctx, epoch: self.epoch, captured: Vec::new() };
+        match msg.kind {
+            MsgKind::UpCorrection | MsgKind::TreeUp => {
+                if let Some(r) = self.reduce.as_mut() {
+                    r.on_message(from, msg, &mut sub);
+                }
+            }
+            MsgKind::BcastTree | MsgKind::BcastCorrection => {
+                if let Some(b) = self.bcast.as_mut() {
+                    b.on_message(from, msg, &mut sub);
+                }
+            }
+            MsgKind::Baseline => {}
+        }
+        let captured = sub.captured;
+        self.handle_captured(captured, ctx);
+    }
+
+    fn handle_captured(&mut self, captured: Vec<Outcome>, ctx: &mut dyn Ctx) {
+        for out in captured {
+            match out {
+                Outcome::ReduceDone => {
+                    // our subtree duties for this attempt are complete;
+                    // nothing to do — the broadcast half is already live
+                }
+                Outcome::ReduceRoot { value, .. } => {
+                    // we are the attempt's root: broadcast the result
+                    debug_assert_eq!(self.rank, self.current_root());
+                    let bcfg = BcastConfig {
+                        n: self.cfg.n,
+                        f: self.cfg.f,
+                        root: self.rank,
+                        mode: self.cfg.correction,
+                        distance: None,
+                        op_id: self.cfg.op_id,
+                        epoch: self.epoch,
+                    };
+                    self.bcast = Some(Broadcast::new(bcfg, Some(value)));
+                    let mut sub =
+                        SubCtx { inner: ctx, epoch: self.epoch, captured: Vec::new() };
+                    self.bcast.as_mut().unwrap().on_start(&mut sub);
+                    let captured = sub.captured;
+                    self.handle_captured(captured, ctx);
+                }
+                Outcome::Broadcast(value) => {
+                    if !self.delivered {
+                        self.delivered = true;
+                        if self.rank != self.current_root() {
+                            ctx.unwatch(self.current_root());
+                        }
+                        ctx.deliver(Outcome::Allreduce { value, attempts: self.epoch + 1 });
+                    }
+                }
+                Outcome::Error(e) => {
+                    // reduce exploded (> f failures): out of contract;
+                    // surface it once
+                    if !self.delivered && !self.errored {
+                        self.errored = true;
+                        ctx.deliver(Outcome::Error(e));
+                    }
+                }
+                Outcome::Allreduce { .. } => unreachable!("inner protocols never allreduce"),
+            }
+        }
+    }
+
+    fn rotate(&mut self, ctx: &mut dyn Ctx) {
+        self.epoch += 1;
+        if (self.epoch as usize) >= self.cfg.candidates.len() {
+            if !self.delivered && !self.errored {
+                self.errored = true;
+                ctx.deliver(Outcome::Error(ProtoError::RootCandidatesExhausted(
+                    self.cfg.candidates.len() as u32,
+                )));
+            }
+            return;
+        }
+        self.start_attempt(ctx);
+    }
+}
+
+impl Protocol for Allreduce {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.rank = ctx.rank();
+        self.start_attempt(ctx);
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if msg.op != self.cfg.op_id || self.errored {
+            return;
+        }
+        if msg.epoch < self.epoch {
+            return; // aborted attempt
+        }
+        if msg.epoch > self.epoch || self.reduce.is_none() {
+            // a peer already rotated (we will once the monitor
+            // confirms), or we have not started yet (racy executor
+            // start order) — hold the message for replay
+            self.buffered.push((from, msg));
+            return;
+        }
+        self.route_message(from, msg, ctx);
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        if self.errored {
+            return;
+        }
+        if peer == self.current_root() && !self.delivered {
+            // consistent detection (§5.2): abandon the attempt — every
+            // live process reaches the same verdict and the same next
+            // root. Inner protocols of the dead attempt are dropped; any
+            // stale watches resolve to notifications we ignore below.
+            self.rotate(ctx);
+            return;
+        }
+        // route to the live attempt's reduce (broadcast watches no one)
+        let mut sub = SubCtx { inner: ctx, epoch: self.epoch, captured: Vec::new() };
+        if let Some(r) = self.reduce.as_mut() {
+            r.on_peer_failed(peer, &mut sub);
+        }
+        let captured = sub.captured;
+        self.handle_captured(captured, ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+    use crate::types::MsgKind;
+
+    fn scalar(v: f64) -> Value {
+        Value::F64(vec![v])
+    }
+
+    fn m(kind: MsgKind, epoch: u32, v: f64) -> Msg {
+        let mut msg = TestCtx::msg(kind, v);
+        msg.epoch = epoch;
+        msg
+    }
+
+    /// n=2, f=1, candidates {0,1}: rank 1 reduces to 0 (they share the
+    /// short group), 0 broadcasts back. Driven by a two-node message
+    /// pump until quiescence.
+    #[test]
+    fn two_process_happy_path() {
+        let mut c0 = TestCtx::new(0, 2);
+        let mut a0 = Allreduce::new(AllreduceConfig::new(2, 1), scalar(10.0));
+        let mut c1 = TestCtx::new(1, 2);
+        let mut a1 = Allreduce::new(AllreduceConfig::new(2, 1), scalar(32.0));
+        a0.on_start(&mut c0);
+        a1.on_start(&mut c1);
+        // both grouped together (short group) → both send up-corr
+        assert!(c0.sent.iter().any(|(to, m)| *to == 1 && m.kind == MsgKind::UpCorrection));
+        assert!(c1.sent.iter().any(|(to, m)| *to == 0 && m.kind == MsgKind::UpCorrection));
+
+        // pump until quiescent
+        for _ in 0..16 {
+            let s0 = c0.take_sent();
+            let s1 = c1.take_sent();
+            if s0.is_empty() && s1.is_empty() {
+                break;
+            }
+            for (to, msg) in s0 {
+                assert_eq!(to, 1);
+                a1.on_message(0, msg, &mut c1);
+            }
+            for (to, msg) in s1 {
+                assert_eq!(to, 0);
+                a0.on_message(1, msg, &mut c0);
+            }
+        }
+        for (name, c) in [("rank0", &c0), ("rank1", &c1)] {
+            assert_eq!(c.delivered.len(), 1, "{name}");
+            match &c.delivered[0] {
+                Outcome::Allreduce { value, attempts } => {
+                    assert_eq!(value.as_f64_scalar(), 42.0, "{name}");
+                    assert_eq!(*attempts, 1, "{name}");
+                }
+                o => panic!("{name}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    /// Root candidate 0 failed pre-operationally: rotation to 1.
+    #[test]
+    fn rotates_on_root_failure() {
+        let mut c2 = TestCtx::new(2, 3);
+        let mut a2 = Allreduce::new(AllreduceConfig::new(3, 1), scalar(2.0));
+        a2.on_start(&mut c2);
+        assert!(c2.watched.contains(&0));
+        let before = c2.take_sent();
+        assert!(before.iter().all(|(_, m)| m.epoch == 0));
+
+        a2.on_peer_failed(0, &mut c2);
+        let after = c2.take_sent();
+        // new attempt with root 1, epoch 1
+        assert!(after.iter().all(|(_, m)| m.epoch == 1));
+        assert!(c2.watched.contains(&1));
+        assert!(c2.delivered.is_empty());
+    }
+
+    /// Future-epoch messages are buffered, then replayed after rotation.
+    #[test]
+    fn buffers_future_epoch_messages() {
+        let mut c2 = TestCtx::new(2, 3);
+        let mut a2 = Allreduce::new(AllreduceConfig::new(3, 1), scalar(2.0));
+        a2.on_start(&mut c2);
+        c2.take_sent();
+
+        // rank 1 has already rotated and broadcasts the epoch-1 result
+        a2.on_message(1, m(MsgKind::BcastTree, 1, 99.0), &mut c2);
+        assert!(c2.delivered.is_empty(), "future epoch must not act early");
+
+        a2.on_peer_failed(0, &mut c2); // we catch up → replay
+        match &c2.delivered[0] {
+            Outcome::Allreduce { value, attempts } => {
+                assert_eq!(value.as_f64_scalar(), 99.0);
+                assert_eq!(*attempts, 2);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    /// Stale (aborted-epoch) messages are dropped.
+    #[test]
+    fn drops_stale_epoch_messages() {
+        let mut c2 = TestCtx::new(2, 3);
+        let mut a2 = Allreduce::new(AllreduceConfig::new(3, 1), scalar(2.0));
+        a2.on_start(&mut c2);
+        a2.on_peer_failed(0, &mut c2); // now at epoch 1
+        c2.take_sent();
+        a2.on_message(1, m(MsgKind::BcastTree, 0, 77.0), &mut c2);
+        assert!(c2.delivered.is_empty());
+    }
+
+    /// Candidates exhausted → terminal error (out of contract).
+    #[test]
+    fn exhausted_candidates_error() {
+        let mut c2 = TestCtx::new(2, 3);
+        let mut a2 =
+            Allreduce::new(AllreduceConfig::new(3, 1).candidates(vec![0, 1]), scalar(2.0));
+        a2.on_start(&mut c2);
+        a2.on_peer_failed(0, &mut c2);
+        a2.on_peer_failed(1, &mut c2);
+        assert_eq!(c2.delivered.len(), 1);
+        assert!(matches!(
+            c2.delivered[0],
+            Outcome::Error(ProtoError::RootCandidatesExhausted(2))
+        ));
+        // further notifications are swallowed
+        a2.on_peer_failed(1, &mut c2);
+        assert_eq!(c2.delivered.len(), 1);
+    }
+
+    /// Delivery happens at most once even if duplicate broadcast values
+    /// arrive.
+    #[test]
+    fn delivers_at_most_once() {
+        let mut c2 = TestCtx::new(2, 4);
+        let mut a2 = Allreduce::new(AllreduceConfig::new(4, 1), scalar(2.0));
+        a2.on_start(&mut c2);
+        a2.on_message(0, m(MsgKind::BcastTree, 0, 50.0), &mut c2);
+        a2.on_message(1, m(MsgKind::BcastCorrection, 0, 50.0), &mut c2);
+        assert_eq!(c2.delivered.len(), 1);
+    }
+}

@@ -1,0 +1,134 @@
+//! Flat gather-to-root reduce: every non-root sends its value directly
+//! to the root; the root combines whatever arrives and times out on
+//! failed senders.
+//!
+//! Trivially fault-tolerant (any subset of senders may die without
+//! affecting the others' contributions) but serializes n-1 receives at
+//! the root — the O(n) latency baseline that motivates tree algorithms
+//! in the first place, and the natural crossover comparison for E6.
+
+use crate::collectives::failure_info::FailureInfo;
+use crate::collectives::{Ctx, Outcome, Protocol};
+use crate::types::{Msg, MsgKind, Rank, Value};
+use std::collections::HashSet;
+
+pub struct FlatGather {
+    n: u32,
+    root: Rank,
+    op_id: u64,
+    acc: Option<Value>,
+    pending: HashSet<Rank>,
+    failed: Vec<Rank>,
+    delivered: bool,
+}
+
+impl FlatGather {
+    pub fn new(n: u32, root: Rank, op_id: u64, input: Value) -> Self {
+        assert!(root < n);
+        FlatGather {
+            n,
+            root,
+            op_id,
+            acc: Some(input),
+            pending: HashSet::new(),
+            failed: Vec::new(),
+            delivered: false,
+        }
+    }
+
+    fn finish_if_ready(&mut self, ctx: &mut dyn Ctx) {
+        if !self.pending.is_empty() || self.delivered {
+            return;
+        }
+        self.delivered = true;
+        let value = self.acc.take().expect("accumulator");
+        let mut known_failed = std::mem::take(&mut self.failed);
+        known_failed.sort_unstable();
+        ctx.deliver(Outcome::ReduceRoot { value, known_failed });
+    }
+}
+
+impl Protocol for FlatGather {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        if ctx.rank() == self.root {
+            self.pending = (0..self.n).filter(|&r| r != self.root).collect();
+            let pending: Vec<Rank> = self.pending.iter().copied().collect();
+            for p in pending {
+                ctx.watch(p);
+            }
+            self.finish_if_ready(ctx); // n == 1
+        } else {
+            let value = self.acc.take().expect("input");
+            ctx.send(
+                self.root,
+                Msg {
+                    op: self.op_id,
+                    epoch: 0,
+                    kind: MsgKind::Baseline,
+                    payload: value,
+                    finfo: FailureInfo::Bit(false),
+                },
+            );
+            ctx.deliver(Outcome::ReduceDone);
+        }
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if msg.op != self.op_id || msg.kind != MsgKind::Baseline {
+            return;
+        }
+        if self.pending.remove(&from) {
+            ctx.unwatch(from);
+            let mut acc = self.acc.take().expect("accumulator");
+            ctx.combine(&mut acc, &msg.payload);
+            self.acc = Some(acc);
+            self.finish_if_ready(ctx);
+        }
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        if self.pending.remove(&peer) {
+            self.failed.push(peer);
+            self.finish_if_ready(ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+
+    fn scalar(v: f64) -> Value {
+        Value::F64(vec![v])
+    }
+
+    #[test]
+    fn root_combines_all_with_failures() {
+        let mut ctx = TestCtx::new(0, 5);
+        let mut g = FlatGather::new(5, 0, 1, scalar(0.0));
+        g.on_start(&mut ctx);
+        g.on_message(1, TestCtx::msg(MsgKind::Baseline, 1.0), &mut ctx);
+        g.on_peer_failed(2, &mut ctx);
+        g.on_message(3, TestCtx::msg(MsgKind::Baseline, 3.0), &mut ctx);
+        g.on_message(4, TestCtx::msg(MsgKind::Baseline, 4.0), &mut ctx);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, known_failed } => {
+                assert_eq!(value.as_f64_scalar(), 8.0);
+                assert_eq!(known_failed, &vec![2]);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    #[test]
+    fn sender_fires_and_forgets() {
+        let mut ctx = TestCtx::new(3, 5);
+        let mut g = FlatGather::new(5, 0, 1, scalar(3.0));
+        g.on_start(&mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 0);
+        assert!(matches!(ctx.delivered[0], Outcome::ReduceDone));
+    }
+}

@@ -1,0 +1,221 @@
+//! Gossip broadcast with optional ring correction — the Corrected Gossip
+//! related-work baseline (Hoefler et al., IPDPS'17; §2 of the paper).
+//!
+//! The root starts informed. Every informed process sends the value to a
+//! uniformly random peer each round, for `rounds` rounds (timer-driven;
+//! the paper under reproduction notes that in Corrected Gossip the
+//! gossip/correction phases are *global*, whereas here — like the rest of
+//! this crate — each process runs its phases locally).
+//!
+//! With `correct = true`, a process that finishes its gossip rounds sends
+//! ring corrections to its `f+1` successors, turning the probabilistic
+//! dissemination into a guaranteed one (same argument as
+//! [`crate::collectives::broadcast`]).
+
+use crate::collectives::failure_info::FailureInfo;
+use crate::collectives::{Ctx, Outcome, Protocol};
+use crate::prng::Pcg;
+use crate::topology::Ring;
+use crate::types::{Msg, MsgKind, Rank, TimeNs, Value};
+
+#[derive(Clone, Debug)]
+pub struct GossipConfig {
+    pub n: u32,
+    pub f: u32,
+    pub root: Rank,
+    /// Gossip rounds each informed process performs.
+    pub rounds: u32,
+    /// Delay between a process's gossip rounds.
+    pub round_delay: TimeNs,
+    /// Append ring correction after the local gossip rounds.
+    pub correct: bool,
+    pub op_id: u64,
+    pub seed: u64,
+}
+
+impl GossipConfig {
+    pub fn new(n: u32, f: u32) -> Self {
+        GossipConfig {
+            n,
+            f,
+            root: 0,
+            rounds: (32 - n.leading_zeros()).max(2), // ~log2(n)
+            round_delay: 1_000,
+            correct: true,
+            op_id: 1,
+            seed: 0xFEED,
+        }
+    }
+}
+
+pub struct Gossip {
+    cfg: GossipConfig,
+    ring: Ring,
+    rank: Rank,
+    rng: Pcg,
+    value: Option<Value>,
+    rounds_done: u32,
+    delivered: bool,
+}
+
+impl Gossip {
+    /// `input` is the broadcast value at the root.
+    pub fn new(cfg: GossipConfig, input: Option<Value>) -> Self {
+        let ring = Ring::new(cfg.n, cfg.root);
+        Gossip {
+            ring,
+            rank: 0,
+            rng: Pcg::new(cfg.seed),
+            value: if input.is_some() { input } else { None },
+            rounds_done: 0,
+            delivered: false,
+            cfg,
+        }
+    }
+
+    fn send_value(&self, ctx: &mut dyn Ctx, to: Rank, kind: MsgKind) {
+        ctx.send(
+            to,
+            Msg {
+                op: self.cfg.op_id,
+                epoch: 0,
+                kind,
+                payload: self.value.clone().expect("informed"),
+                finfo: FailureInfo::Bit(false),
+            },
+        );
+    }
+
+    fn random_peer(&mut self) -> Rank {
+        // uniform over everyone but self
+        let r = self.rng.below(self.cfg.n as u64 - 1) as u32;
+        if r >= self.rank {
+            r + 1
+        } else {
+            r
+        }
+    }
+
+    fn acquire(&mut self, value: Value, ctx: &mut dyn Ctx) {
+        if self.value.is_some() {
+            return;
+        }
+        self.value = Some(value.clone());
+        if !self.delivered {
+            self.delivered = true;
+            ctx.deliver(Outcome::Broadcast(value));
+        }
+        self.schedule_round(ctx);
+    }
+
+    fn schedule_round(&mut self, ctx: &mut dyn Ctx) {
+        if self.rounds_done < self.cfg.rounds {
+            ctx.set_timer(self.cfg.round_delay, self.rounds_done as u64);
+        } else if self.cfg.correct {
+            self.correction(ctx);
+        }
+    }
+
+    fn correction(&mut self, ctx: &mut dyn Ctx) {
+        let max_d = (self.cfg.f + 1).min(self.cfg.n - 1);
+        for d in 1..=max_d {
+            let succ = self.ring.successor(self.rank, d);
+            self.send_value(ctx, succ, MsgKind::BcastCorrection);
+        }
+    }
+}
+
+impl Protocol for Gossip {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.rank = ctx.rank();
+        // per-rank deterministic stream
+        self.rng = Pcg::new(self.cfg.seed ^ (self.rank as u64).wrapping_mul(0x9E37_79B9));
+        if self.rank == self.cfg.root {
+            let v = self.value.take().expect("root needs input");
+            self.acquire(v, ctx);
+        }
+    }
+
+    fn on_message(&mut self, _from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if msg.op != self.cfg.op_id {
+            return;
+        }
+        match msg.kind {
+            MsgKind::BcastTree | MsgKind::BcastCorrection => self.acquire(msg.payload, ctx),
+            _ => {}
+        }
+    }
+
+    fn on_peer_failed(&mut self, _peer: Rank, _ctx: &mut dyn Ctx) {}
+
+    fn on_timer(&mut self, _token: u64, ctx: &mut dyn Ctx) {
+        if self.value.is_none() || self.cfg.n < 2 {
+            return;
+        }
+        let peer = self.random_peer();
+        self.send_value(ctx, peer, MsgKind::BcastTree);
+        self.rounds_done += 1;
+        self.schedule_round(ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+
+    fn value(v: f64) -> Value {
+        Value::F64(vec![v])
+    }
+
+    #[test]
+    fn root_gossips_for_configured_rounds() {
+        let mut ctx = TestCtx::new(0, 8);
+        let mut cfg = GossipConfig::new(8, 1);
+        cfg.rounds = 3;
+        cfg.correct = false;
+        let mut g = Gossip::new(cfg, Some(value(7.0)));
+        g.on_start(&mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        assert_eq!(ctx.timers.len(), 1);
+        for round in 0..3 {
+            g.on_timer(round, &mut ctx);
+        }
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 3);
+        for (to, m) in &sent {
+            assert_ne!(*to, 0, "never gossips to itself");
+            assert_eq!(m.payload.as_f64_scalar(), 7.0);
+        }
+        // rounds exhausted, correction off → exactly one timer per round
+        assert_eq!(ctx.timers.len(), 3);
+    }
+
+    #[test]
+    fn correction_fires_after_rounds() {
+        let mut ctx = TestCtx::new(2, 8);
+        let mut cfg = GossipConfig::new(8, 1);
+        cfg.rounds = 1;
+        let mut g = Gossip::new(cfg, None);
+        g.on_start(&mut ctx);
+        g.on_message(0, TestCtx::msg(MsgKind::BcastTree, 7.0), &mut ctx);
+        g.on_timer(0, &mut ctx);
+        let corr: Vec<Rank> = ctx
+            .take_sent()
+            .iter()
+            .filter(|(_, m)| m.kind == MsgKind::BcastCorrection)
+            .map(|(t, _)| *t)
+            .collect();
+        assert_eq!(corr, vec![3, 4]); // f+1 = 2 ring successors
+    }
+
+    #[test]
+    fn uninformed_process_stays_silent() {
+        let mut ctx = TestCtx::new(3, 8);
+        let mut g = Gossip::new(GossipConfig::new(8, 1), None);
+        g.on_start(&mut ctx);
+        g.on_timer(0, &mut ctx); // spurious timer
+        assert!(ctx.take_sent().is_empty());
+        assert!(ctx.delivered.is_empty());
+    }
+}

@@ -1,0 +1,22 @@
+//! Baseline algorithms for the evaluation (E6-E8):
+//!
+//! * [`tree_reduce`] — the fault-agnostic binomial-tree reduce of
+//!   Figure 1 ("a 'common' tree implementation"),
+//! * [`flat_gather`] — every process sends directly to the root;
+//!   trivially fault-tolerant but O(n) serialization at the root,
+//! * [`ring_allreduce`] — the bandwidth-optimal ring allreduce
+//!   [Patarasuk & Yuan 2007], latency-bound at 2(n-1) hops for small
+//!   messages, fault-agnostic,
+//! * [`gossip`] — gossip broadcast with optional ring correction
+//!   (Corrected Gossip, Hoefler et al. IPDPS'17 — the related work the
+//!   paper's correction idea descends from).
+
+pub mod flat_gather;
+pub mod gossip;
+pub mod ring_allreduce;
+pub mod tree_reduce;
+
+pub use flat_gather::FlatGather;
+pub use gossip::{Gossip, GossipConfig};
+pub use ring_allreduce::RingAllreduce;
+pub use tree_reduce::TreeReduce;

@@ -1,0 +1,196 @@
+//! Ring allreduce baseline [Patarasuk & Yuan 2007].
+//!
+//! Accumulation pass: position 0 sends its value around the ring; each
+//! position folds in its own value and forwards. Position n-1 obtains the
+//! full result and starts the distribution pass, forwarding the result
+//! back around. 2(n-1) strictly sequential hops — bandwidth-optimal for
+//! large payloads, but latency-bound for the small messages this paper
+//! targets, and with *no* fault tolerance: any failure stalls the ring
+//! (we surface that as processes timing out on their predecessor and
+//! delivering nothing).
+//!
+//! Phase is encoded in `Msg::epoch` (0 = accumulate, 1 = distribute);
+//! the baseline owns that field (no root rotation here).
+
+use crate::collectives::failure_info::FailureInfo;
+use crate::collectives::{Ctx, Outcome, Protocol};
+use crate::topology::Ring;
+use crate::types::{Msg, MsgKind, Rank, Value};
+
+const PHASE_ACC: u32 = 0;
+const PHASE_DIST: u32 = 1;
+
+pub struct RingAllreduce {
+    n: u32,
+    op_id: u64,
+    ring: Ring,
+    rank: Rank,
+    data: Option<Value>,
+    delivered: bool,
+    /// predecessor we expect a message from (watched for DES liveness)
+    expecting: Option<Rank>,
+}
+
+impl RingAllreduce {
+    pub fn new(n: u32, op_id: u64, input: Value) -> Self {
+        RingAllreduce {
+            n,
+            op_id,
+            ring: Ring::new(n, 0),
+            rank: 0,
+            data: Some(input),
+            delivered: false,
+            expecting: None,
+        }
+    }
+
+    fn send_phase(&self, ctx: &mut dyn Ctx, to: Rank, phase: u32, value: Value) {
+        ctx.send(
+            to,
+            Msg {
+                op: self.op_id,
+                epoch: phase,
+                kind: MsgKind::Baseline,
+                payload: value,
+                finfo: FailureInfo::Bit(false),
+            },
+        );
+    }
+
+    fn deliver_once(&mut self, value: Value, ctx: &mut dyn Ctx) {
+        if !self.delivered {
+            self.delivered = true;
+            ctx.deliver(Outcome::Allreduce { value, attempts: 1 });
+        }
+    }
+}
+
+impl Protocol for RingAllreduce {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.rank = ctx.rank();
+        if self.n == 1 {
+            let v = self.data.take().unwrap();
+            self.deliver_once(v, ctx);
+            return;
+        }
+        if self.ring.position(self.rank) == 0 {
+            let v = self.data.clone().unwrap();
+            self.send_phase(ctx, self.ring.successor(self.rank, 1), PHASE_ACC, v);
+        }
+        // everyone expects something from the predecessor
+        let pred = self.ring.predecessor(self.rank, 1);
+        self.expecting = Some(pred);
+        ctx.watch(pred);
+    }
+
+    fn on_message(&mut self, _from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if msg.op != self.op_id || msg.kind != MsgKind::Baseline {
+            return;
+        }
+        let pos = self.ring.position(self.rank);
+        match msg.epoch {
+            PHASE_ACC => {
+                let mut acc = msg.payload;
+                let own = self.data.clone().expect("own value");
+                ctx.combine(&mut acc, &own);
+                if pos == self.n - 1 {
+                    // full result: start distribution
+                    self.deliver_once(acc.clone(), ctx);
+                    self.send_phase(ctx, self.ring.successor(self.rank, 1), PHASE_DIST, acc);
+                } else {
+                    self.send_phase(ctx, self.ring.successor(self.rank, 1), PHASE_ACC, acc);
+                    // the predecessor watch from on_start stays armed for
+                    // the distribution pass
+                }
+            }
+            PHASE_DIST => {
+                // forward unless our successor originated the distribution
+                if pos != self.n - 1 && self.ring.position(self.ring.successor(self.rank, 1)) != self.n - 1
+                {
+                    self.send_phase(
+                        ctx,
+                        self.ring.successor(self.rank, 1),
+                        PHASE_DIST,
+                        msg.payload.clone(),
+                    );
+                }
+                self.deliver_once(msg.payload, ctx);
+            }
+            _ => {}
+        }
+    }
+
+    fn on_peer_failed(&mut self, _peer: Rank, _ctx: &mut dyn Ctx) {
+        // fault-agnostic: the ring stalls; nothing to do (the DES run
+        // simply ends with non-delivered processes, which is the point)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+
+    fn scalar(v: f64) -> Value {
+        Value::F64(vec![v])
+    }
+
+    fn msg(phase: u32, v: f64) -> Msg {
+        let mut m = TestCtx::msg(MsgKind::Baseline, v);
+        m.epoch = phase;
+        m
+    }
+
+    #[test]
+    fn position0_starts_accumulation() {
+        let mut ctx = TestCtx::new(0, 4);
+        let mut r = RingAllreduce::new(4, 1, scalar(10.0));
+        r.on_start(&mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 1);
+        assert_eq!(sent[0].1.epoch, PHASE_ACC);
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 10.0);
+    }
+
+    #[test]
+    fn middle_folds_and_forwards() {
+        let mut ctx = TestCtx::new(1, 4);
+        let mut r = RingAllreduce::new(4, 1, scalar(1.0));
+        r.on_start(&mut ctx);
+        ctx.take_sent();
+        r.on_message(0, msg(PHASE_ACC, 10.0), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent[0].0, 2);
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 11.0);
+        assert!(ctx.delivered.is_empty());
+        // distribution comes back
+        r.on_message(3, msg(PHASE_DIST, 16.0), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1, "forwards distribution");
+        assert!(matches!(&ctx.delivered[0], Outcome::Allreduce { value, .. }
+            if value.as_f64_scalar() == 16.0));
+    }
+
+    #[test]
+    fn last_position_delivers_and_distributes() {
+        let mut ctx = TestCtx::new(3, 4);
+        let mut r = RingAllreduce::new(4, 1, scalar(3.0));
+        r.on_start(&mut ctx);
+        r.on_message(2, msg(PHASE_ACC, 13.0), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent[0].0, 0);
+        assert_eq!(sent[0].1.epoch, PHASE_DIST);
+        assert!(matches!(&ctx.delivered[0], Outcome::Allreduce { value, .. }
+            if value.as_f64_scalar() == 16.0));
+    }
+
+    #[test]
+    fn single_process_delivers_immediately() {
+        let mut ctx = TestCtx::new(0, 1);
+        let mut r = RingAllreduce::new(1, 1, scalar(5.0));
+        r.on_start(&mut ctx);
+        assert!(matches!(&ctx.delivered[0], Outcome::Allreduce { value, .. }
+            if value.as_f64_scalar() == 5.0));
+    }
+}

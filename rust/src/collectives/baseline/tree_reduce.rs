@@ -1,0 +1,157 @@
+//! Fault-agnostic binomial-tree reduce — the Figure 1 baseline.
+//!
+//! Every process waits for its binomial-tree children and sends the
+//! combined value to its parent. There is no up-correction and no failure
+//! information: when a child fails, its whole subtree's contribution is
+//! lost (Figure 1: the root receives 15 instead of 20). A pure MPI
+//! implementation would hang on the dead child; like the paper we assume
+//! an orthogonal failure monitor ("timeouts are used here") so the run
+//! terminates — the *value loss* is the point being demonstrated.
+//!
+//! The root delivers [`Outcome::ReduceRoot`] with `known_failed` listing
+//! the children it timed out on (its only, incomplete, knowledge).
+
+use crate::collectives::failure_info::FailureInfo;
+use crate::collectives::{Ctx, Outcome, Protocol};
+use crate::topology::{BinomialTree, RankMap};
+use crate::types::{Msg, MsgKind, Rank, Value};
+use std::collections::HashSet;
+
+pub struct TreeReduce {
+    op_id: u64,
+    map: RankMap,
+    tree: BinomialTree,
+    vrank: Rank,
+    acc: Option<Value>,
+    pending: HashSet<Rank>,
+    /// Children we timed out on (their subtrees' values are lost).
+    lost: Vec<Rank>,
+    delivered: bool,
+}
+
+impl TreeReduce {
+    pub fn new(n: u32, root: Rank, op_id: u64, input: Value) -> Self {
+        assert!(root < n);
+        TreeReduce {
+            op_id,
+            map: RankMap::new(root),
+            tree: BinomialTree::new(n),
+            vrank: 0,
+            acc: Some(input),
+            pending: HashSet::new(),
+            lost: Vec::new(),
+            delivered: false,
+        }
+    }
+
+    fn finish_if_ready(&mut self, ctx: &mut dyn Ctx) {
+        if !self.pending.is_empty() || self.delivered {
+            return;
+        }
+        self.delivered = true;
+        let value = self.acc.take().expect("accumulator");
+        if self.vrank == 0 {
+            let mut known_failed = std::mem::take(&mut self.lost);
+            known_failed.sort_unstable();
+            ctx.deliver(Outcome::ReduceRoot { value, known_failed });
+        } else {
+            let parent = self.map.to_real(self.tree.parent(self.vrank).expect("non-root"));
+            ctx.send(
+                parent,
+                Msg {
+                    op: self.op_id,
+                    epoch: 0,
+                    kind: MsgKind::Baseline,
+                    payload: value,
+                    finfo: FailureInfo::Bit(false),
+                },
+            );
+            ctx.deliver(Outcome::ReduceDone);
+        }
+    }
+}
+
+impl Protocol for TreeReduce {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.vrank = self.map.to_virtual(ctx.rank());
+        let children: Vec<Rank> =
+            self.tree.children(self.vrank).into_iter().map(|v| self.map.to_real(v)).collect();
+        self.pending = children.iter().copied().collect();
+        for &c in &children {
+            ctx.watch(c);
+        }
+        self.finish_if_ready(ctx);
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if msg.op != self.op_id || msg.kind != MsgKind::Baseline {
+            return;
+        }
+        if self.pending.remove(&from) {
+            ctx.unwatch(from);
+            let mut acc = self.acc.take().expect("accumulator");
+            ctx.combine(&mut acc, &msg.payload);
+            self.acc = Some(acc);
+            self.finish_if_ready(ctx);
+        }
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        if self.pending.remove(&peer) {
+            self.lost.push(peer);
+            self.finish_if_ready(ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+
+    fn scalar(v: f64) -> Value {
+        Value::F64(vec![v])
+    }
+
+    #[test]
+    fn leaf_sends_immediately() {
+        let mut ctx = TestCtx::new(7, 8);
+        let mut t = TreeReduce::new(8, 0, 1, scalar(7.0));
+        t.on_start(&mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 6); // binomial parent of 7
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 7.0);
+    }
+
+    #[test]
+    fn failed_child_loses_subtree() {
+        // root 0, n=4: children 1,2; child 2 (subtree {2,3}) fails
+        let mut ctx = TestCtx::new(0, 4);
+        let mut t = TreeReduce::new(4, 0, 1, scalar(0.0));
+        t.on_start(&mut ctx);
+        t.on_message(1, TestCtx::msg(MsgKind::Baseline, 1.0), &mut ctx);
+        t.on_peer_failed(2, &mut ctx);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, known_failed } => {
+                assert_eq!(value.as_f64_scalar(), 1.0); // 2+3 lost
+                assert_eq!(known_failed, &vec![2]);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    #[test]
+    fn interior_node_combines_children() {
+        // n=8: node 4 has children 5,6
+        let mut ctx = TestCtx::new(4, 8);
+        let mut t = TreeReduce::new(8, 0, 1, scalar(4.0));
+        t.on_start(&mut ctx);
+        t.on_message(5, TestCtx::msg(MsgKind::Baseline, 5.0), &mut ctx);
+        t.on_message(6, TestCtx::msg(MsgKind::Baseline, 11.0), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent[0].0, 0);
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 20.0);
+        assert!(matches!(ctx.delivered[0], Outcome::ReduceDone));
+    }
+}

@@ -1,0 +1,303 @@
+//! Fault-tolerant broadcast — the corrected-tree substrate required by
+//! allreduce (§5; published as "Corrected trees for reliable group
+//! communication", Küttler et al., PPoPP'19; reimplemented here from its
+//! stated semantics, see DESIGN.md §2).
+//!
+//! Construction: a binomial tree over the ring order rooted at the
+//! broadcast root disseminates the value in logarithmic depth; in
+//! addition, every process that has the value sends *correction* messages
+//! to its `f+1` ring successors. The tree gives speed, the corrections
+//! give the fault-tolerance guarantee:
+//!
+//! **Delivery claim.** With at most `f` failures (pre- or in-operational)
+//! and a root that does not fail, every never-failing process eventually
+//! delivers. *Proof sketch:* order never-failing processes along the
+//! ring; between consecutive ones lie at most `f` failed processes, so
+//! each is within correction distance `f+1` of its nearest never-failing
+//! predecessor; induct from the root (corrections from a never-failing
+//! process are always completed — it never dies mid-loop).
+//!
+//! [`CorrectionMode::Always`] sends all `f+1` corrections immediately —
+//! sound under any in-operational timing. [`CorrectionMode::None`]
+//! disables correction (the fault-agnostic baseline for E8).
+//!
+//! Semantics provided (used by Theorem 6's proof): delivered-at-most-
+//! once; any delivered value is the root's value; eventual delivery under
+//! ≤ f failures; delivery at the root itself on start.
+
+use super::failure_info::FailureInfo;
+use super::{Ctx, Outcome, Protocol};
+use crate::topology::{BinomialTree, Ring};
+use crate::types::{Msg, MsgKind, Rank, Value};
+
+/// Ring-correction policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CorrectionMode {
+    /// Send corrections to all `f+1` ring successors upon first obtaining
+    /// the value. Sound under arbitrary in-operational failure timing.
+    Always,
+    /// Tree dissemination only (no fault tolerance) — baseline.
+    None,
+}
+
+/// Static configuration of one broadcast.
+#[derive(Clone, Debug)]
+pub struct BcastConfig {
+    pub n: u32,
+    pub f: u32,
+    pub root: Rank,
+    pub mode: CorrectionMode,
+    /// Ring-correction distance; `None` → `f+1` (the provably
+    /// sufficient choice — see the module docs; the ablation experiment
+    /// `experiments --exp ablation` shows distance `f` losing processes
+    /// under a contiguous gap of `f` failures).
+    pub distance: Option<u32>,
+    pub op_id: u64,
+    pub epoch: u32,
+}
+
+impl BcastConfig {
+    pub fn new(n: u32, f: u32) -> Self {
+        BcastConfig {
+            n,
+            f,
+            root: 0,
+            mode: CorrectionMode::Always,
+            distance: None,
+            op_id: 1,
+            epoch: 0,
+        }
+    }
+
+    pub fn root(mut self, root: Rank) -> Self {
+        self.root = root;
+        self
+    }
+
+    pub fn mode(mut self, mode: CorrectionMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn distance(mut self, d: u32) -> Self {
+        self.distance = Some(d);
+        self
+    }
+}
+
+/// Per-process state machine for corrected-tree broadcast.
+pub struct Broadcast {
+    cfg: BcastConfig,
+    ring: Ring,
+    tree: BinomialTree,
+    /// The value, once obtained. `Some` from the start at the root.
+    value: Option<Value>,
+    /// Our input if we are the root (taken on start).
+    root_input: Option<Value>,
+    rank: Rank,
+    delivered: bool,
+}
+
+impl Broadcast {
+    /// `input` is the broadcast value at the root, ignored elsewhere.
+    pub fn new(cfg: BcastConfig, input: Option<Value>) -> Self {
+        assert!(cfg.root < cfg.n);
+        let ring = Ring::new(cfg.n, cfg.root);
+        let tree = BinomialTree::new(cfg.n);
+        Broadcast { ring, tree, value: None, root_input: input, rank: 0, delivered: false, cfg }
+    }
+
+    fn position(&self) -> u32 {
+        self.ring.position(self.rank)
+    }
+
+    /// First acquisition of the value: deliver locally, forward along the
+    /// tree, then correct the ring successors.
+    fn acquire(&mut self, value: Value, ctx: &mut dyn Ctx) {
+        if self.value.is_some() {
+            return; // duplicates are expected (tree + corrections)
+        }
+        self.value = Some(value.clone());
+        if !self.delivered {
+            self.delivered = true;
+            ctx.deliver(Outcome::Broadcast(value));
+        }
+        self.disseminate(ctx);
+    }
+
+    fn disseminate(&mut self, ctx: &mut dyn Ctx) {
+        let v = self.value.clone().expect("value acquired");
+        let pos = self.position();
+        // tree children (binomial over ring positions)
+        for cpos in self.tree.children(pos) {
+            let child = self.ring.rank_at(cpos);
+            ctx.send(
+                child,
+                Msg {
+                    op: self.cfg.op_id,
+                    epoch: self.cfg.epoch,
+                    kind: MsgKind::BcastTree,
+                    payload: v.clone(),
+                    finfo: FailureInfo::Bit(false),
+                },
+            );
+        }
+        // ring corrections
+        if self.cfg.mode == CorrectionMode::Always {
+            let max_d = self.cfg.distance.unwrap_or(self.cfg.f + 1).min(self.cfg.n - 1);
+            for d in 1..=max_d {
+                let succ = self.ring.successor(self.rank, d);
+                ctx.send(
+                    succ,
+                    Msg {
+                        op: self.cfg.op_id,
+                        epoch: self.cfg.epoch,
+                        kind: MsgKind::BcastCorrection,
+                        payload: v.clone(),
+                        finfo: FailureInfo::Bit(false),
+                    },
+                );
+            }
+        }
+    }
+
+    pub fn has_value(&self) -> bool {
+        self.value.is_some()
+    }
+}
+
+impl Protocol for Broadcast {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.rank = ctx.rank();
+        if self.rank == self.cfg.root {
+            let input = self.root_input.take().expect("root needs an input value");
+            self.acquire(input, ctx);
+        }
+        // non-roots are passive until a message arrives; liveness under a
+        // failed root is the *caller's* concern (allreduce watches the
+        // root and rotates — §5.2)
+    }
+
+    fn on_message(&mut self, _from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if msg.op != self.cfg.op_id || msg.epoch != self.cfg.epoch {
+            return;
+        }
+        match msg.kind {
+            MsgKind::BcastTree | MsgKind::BcastCorrection => self.acquire(msg.payload, ctx),
+            _ => {}
+        }
+    }
+
+    fn on_peer_failed(&mut self, _peer: Rank, _ctx: &mut dyn Ctx) {
+        // broadcast never watches anyone
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+
+    fn value(v: f64) -> Value {
+        Value::F64(vec![v])
+    }
+
+    fn bmsg(kind: MsgKind, v: f64) -> Msg {
+        TestCtx::msg(kind, v)
+    }
+
+    #[test]
+    fn root_delivers_and_sends_tree_plus_corrections() {
+        let mut ctx = TestCtx::new(0, 8);
+        let mut b = Broadcast::new(BcastConfig::new(8, 1), Some(value(9.0)));
+        b.on_start(&mut ctx);
+        assert!(matches!(&ctx.delivered[0], Outcome::Broadcast(v) if v.as_f64_scalar() == 9.0));
+        let sent = ctx.take_sent();
+        // binomial children of position 0 for n=8: 1,2,4 + corrections to
+        // successors 1,2 (f+1 = 2)
+        let tree: Vec<Rank> = sent
+            .iter()
+            .filter(|(_, m)| m.kind == MsgKind::BcastTree)
+            .map(|(t, _)| *t)
+            .collect();
+        let corr: Vec<Rank> = sent
+            .iter()
+            .filter(|(_, m)| m.kind == MsgKind::BcastCorrection)
+            .map(|(t, _)| *t)
+            .collect();
+        assert_eq!(tree, vec![1, 2, 4]);
+        assert_eq!(corr, vec![1, 2]);
+    }
+
+    #[test]
+    fn receiver_forwards_once_and_ignores_duplicates() {
+        let mut ctx = TestCtx::new(3, 8);
+        let mut b = Broadcast::new(BcastConfig::new(8, 1), None);
+        b.on_start(&mut ctx);
+        assert!(ctx.take_sent().is_empty());
+
+        b.on_message(1, bmsg(MsgKind::BcastTree, 9.0), &mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        let first = ctx.take_sent();
+        assert!(!first.is_empty());
+
+        // a correction for the same value arrives later: no re-send, no
+        // re-deliver (§5.1 item 2)
+        b.on_message(2, bmsg(MsgKind::BcastCorrection, 9.0), &mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        assert!(ctx.take_sent().is_empty());
+    }
+
+    #[test]
+    fn correction_distance_capped_by_n() {
+        // n=3, f=5: corrections must not wrap past the whole ring
+        let mut ctx = TestCtx::new(0, 3);
+        let mut b = Broadcast::new(BcastConfig::new(3, 5), Some(value(1.0)));
+        b.on_start(&mut ctx);
+        let corr: Vec<Rank> = ctx
+            .take_sent()
+            .iter()
+            .filter(|(_, m)| m.kind == MsgKind::BcastCorrection)
+            .map(|(t, _)| *t)
+            .collect();
+        assert_eq!(corr, vec![1, 2]); // never to self
+    }
+
+    #[test]
+    fn mode_none_sends_tree_only() {
+        let mut ctx = TestCtx::new(0, 8);
+        let mut b = Broadcast::new(
+            BcastConfig::new(8, 3).mode(CorrectionMode::None),
+            Some(value(2.0)),
+        );
+        b.on_start(&mut ctx);
+        assert!(ctx.take_sent().iter().all(|(_, m)| m.kind == MsgKind::BcastTree));
+    }
+
+    #[test]
+    fn nonzero_root_uses_ring_positions() {
+        // root=5, n=8: position(5)=0; its binomial children are positions
+        // 1,2,4 → ranks 6,7,1; corrections to ranks 6,7 (f=1)
+        let mut ctx = TestCtx::new(5, 8);
+        let mut b = Broadcast::new(BcastConfig::new(8, 1).root(5), Some(value(3.0)));
+        b.on_start(&mut ctx);
+        let sent = ctx.take_sent();
+        let tree: Vec<Rank> = sent
+            .iter()
+            .filter(|(_, m)| m.kind == MsgKind::BcastTree)
+            .map(|(t, _)| *t)
+            .collect();
+        assert_eq!(tree, vec![6, 7, 1]);
+    }
+
+    #[test]
+    fn stale_epoch_ignored() {
+        let mut ctx = TestCtx::new(3, 8);
+        let mut b = Broadcast::new(BcastConfig::new(8, 1), None);
+        b.on_start(&mut ctx);
+        let mut m = bmsg(MsgKind::BcastTree, 9.0);
+        m.epoch = 7;
+        b.on_message(1, m, &mut ctx);
+        assert!(ctx.delivered.is_empty());
+    }
+}

@@ -1,0 +1,235 @@
+//! Failure-information schemes (§4.4).
+//!
+//! A failure description accumulates in each subtree and travels with the
+//! reduction value so the root can select a failure-free subtree. Three
+//! schemes trade information for message size:
+//!
+//! 1. [`FailureInfo::List`] — the full list of known-failed process ids.
+//!    Appended to in *both* phases (up-correction and tree). Lists being
+//!    concatenated always come from disjoint sets (§4.4), so no dedup is
+//!    needed on the hot path.
+//! 2. [`FailureInfo::CountBit`] — only the list's size, plus one bit that
+//!    is set when a process fails *in the tree phase* of this subtree.
+//! 3. [`FailureInfo::Bit`] — the tree-phase bit alone ("the bit is equal
+//!    to the 'local' bit in the second scheme"); not modified in the
+//!    up-correction phase.
+//!
+//! Validity at the root: for `CountBit`/`Bit`, a subtree is selectable iff
+//! its bit is clear. For `List`, the root checks that no listed process
+//! belongs to the subtree in question (an up-correction detection of a
+//! process in *another* subtree does not invalidate this one — see the
+//! Figure 2 walk-through, where process 2 lists the failed process 1 yet
+//! still reports a complete subtree).
+
+use crate::types::Rank;
+
+/// Scheme selector (configuration).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    List,
+    CountBit,
+    Bit,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 3] = [Scheme::List, Scheme::CountBit, Scheme::Bit];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::List => "list",
+            Scheme::CountBit => "count+bit",
+            Scheme::Bit => "bit",
+        }
+    }
+}
+
+/// Accumulated failure information travelling with a reduction value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FailureInfo {
+    List(Vec<Rank>),
+    CountBit { count: u32, bit: bool },
+    Bit(bool),
+}
+
+impl FailureInfo {
+    pub fn empty(scheme: Scheme) -> Self {
+        match scheme {
+            Scheme::List => FailureInfo::List(Vec::new()),
+            Scheme::CountBit => FailureInfo::CountBit { count: 0, bit: false },
+            Scheme::Bit => FailureInfo::Bit(false),
+        }
+    }
+
+    pub fn scheme(&self) -> Scheme {
+        match self {
+            FailureInfo::List(_) => Scheme::List,
+            FailureInfo::CountBit { .. } => Scheme::CountBit,
+            FailureInfo::Bit(_) => Scheme::Bit,
+        }
+    }
+
+    /// Record a failure detected in the **up-correction phase** (a group
+    /// peer did not send). Scheme 1 appends the id; scheme 2 counts it;
+    /// scheme 3 is "not modified in the up-correction phase".
+    pub fn record_upcorr_failure(&mut self, peer: Rank) {
+        match self {
+            FailureInfo::List(l) => l.push(peer),
+            FailureInfo::CountBit { count, .. } => *count += 1,
+            FailureInfo::Bit(_) => {}
+        }
+    }
+
+    /// Record a failure detected in the **tree phase** (a tree child did
+    /// not send). Sets the subtree-failure bit in schemes 2-3.
+    pub fn record_tree_failure(&mut self, peer: Rank) {
+        match self {
+            FailureInfo::List(l) => l.push(peer),
+            FailureInfo::CountBit { count, bit } => {
+                *count += 1;
+                *bit = true;
+            }
+            FailureInfo::Bit(b) => *b = true,
+        }
+    }
+
+    /// Merge the description received from a tree child into this one
+    /// ("the parent adds the lists of its children to its own").
+    pub fn merge_child(&mut self, child: &FailureInfo) {
+        match (self, child) {
+            (FailureInfo::List(l), FailureInfo::List(cl)) => l.extend_from_slice(cl),
+            (
+                FailureInfo::CountBit { count, bit },
+                FailureInfo::CountBit { count: cc, bit: cb },
+            ) => {
+                *count += cc;
+                *bit |= cb;
+            }
+            (FailureInfo::Bit(b), FailureInfo::Bit(cb)) => *b |= cb,
+            (a, b) => panic!("cannot merge mixed failure-info schemes {a:?} / {b:?}"),
+        }
+    }
+
+    /// Root-side validity check: can the subtree that sent this
+    /// description be selected? `in_subtree` tests membership of a rank
+    /// in that subtree (only consulted for the `List` scheme).
+    pub fn subtree_valid(&self, in_subtree: impl Fn(Rank) -> bool) -> bool {
+        match self {
+            FailureInfo::List(l) => !l.iter().any(|&r| in_subtree(r)),
+            FailureInfo::CountBit { bit, .. } => !bit,
+            FailureInfo::Bit(b) => !b,
+        }
+    }
+
+    /// Known-failed ids (List scheme only; empty otherwise). "One
+    /// potential use of the list … is to make that information available
+    /// to all processes, to exclude failed processes in future
+    /// operations."
+    pub fn known_failed(&self) -> &[Rank] {
+        match self {
+            FailureInfo::List(l) => l,
+            _ => &[],
+        }
+    }
+
+    /// Number of recorded failures, if the scheme tracks it.
+    pub fn count(&self) -> Option<u32> {
+        match self {
+            FailureInfo::List(l) => Some(l.len() as u32),
+            FailureInfo::CountBit { count, .. } => Some(*count),
+            FailureInfo::Bit(_) => None,
+        }
+    }
+
+    /// Wire encoding size in bytes: List = 2-byte length + 4 bytes/id;
+    /// CountBit = 4+1; Bit = 1.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            FailureInfo::List(l) => 2 + 4 * l.len(),
+            FailureInfo::CountBit { .. } => 5,
+            FailureInfo::Bit(_) => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upcorr_detection_does_not_set_bit() {
+        // a group peer is always in a *different* subtree, so the List
+        // scheme's membership test must not fire either
+        for scheme in Scheme::ALL {
+            let mut fi = FailureInfo::empty(scheme);
+            fi.record_upcorr_failure(7);
+            assert!(
+                fi.subtree_valid(|r| r != 7),
+                "{scheme:?}: up-correction detection must not invalidate"
+            );
+        }
+    }
+
+    #[test]
+    fn tree_detection_sets_bit_everywhere() {
+        for scheme in Scheme::ALL {
+            let mut fi = FailureInfo::empty(scheme);
+            fi.record_tree_failure(7);
+            assert!(!fi.subtree_valid(|r| r == 7), "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn list_validity_is_membership_based() {
+        let mut fi = FailureInfo::empty(Scheme::List);
+        fi.record_upcorr_failure(1); // failure in another subtree
+        // subtree {2,4,6}: 1 is not a member → still valid (Figure 2)
+        assert!(fi.subtree_valid(|r| [2, 4, 6].contains(&r)));
+        // subtree {1,3,5}: 1 is a member → invalid
+        assert!(!fi.subtree_valid(|r| [1, 3, 5].contains(&r)));
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = FailureInfo::empty(Scheme::List);
+        a.record_tree_failure(3);
+        let mut b = FailureInfo::empty(Scheme::List);
+        b.record_upcorr_failure(9);
+        a.merge_child(&b);
+        assert_eq!(a.known_failed(), &[3, 9]);
+        assert_eq!(a.count(), Some(2));
+
+        let mut c = FailureInfo::empty(Scheme::CountBit);
+        c.record_upcorr_failure(1);
+        let mut d = FailureInfo::empty(Scheme::CountBit);
+        d.record_tree_failure(2);
+        c.merge_child(&d);
+        assert_eq!(c, FailureInfo::CountBit { count: 2, bit: true });
+
+        let mut e = FailureInfo::empty(Scheme::Bit);
+        e.merge_child(&FailureInfo::Bit(true));
+        assert_eq!(e, FailureInfo::Bit(true));
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed failure-info schemes")]
+    fn merge_rejects_mixed_schemes() {
+        FailureInfo::empty(Scheme::Bit).merge_child(&FailureInfo::empty(Scheme::List));
+    }
+
+    #[test]
+    fn wire_sizes() {
+        assert_eq!(FailureInfo::empty(Scheme::Bit).wire_bytes(), 1);
+        assert_eq!(FailureInfo::empty(Scheme::CountBit).wire_bytes(), 5);
+        assert_eq!(FailureInfo::empty(Scheme::List).wire_bytes(), 2);
+        let mut l = FailureInfo::empty(Scheme::List);
+        l.record_tree_failure(1);
+        l.record_tree_failure(2);
+        assert_eq!(l.wire_bytes(), 10);
+    }
+
+    #[test]
+    fn count_accessor() {
+        assert_eq!(FailureInfo::Bit(true).count(), None);
+        assert_eq!(FailureInfo::CountBit { count: 3, bit: false }.count(), Some(3));
+    }
+}

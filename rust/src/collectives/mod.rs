@@ -1,0 +1,231 @@
+//! The paper's collective algorithms as executor-agnostic, event-driven
+//! state machines.
+//!
+//! Each protocol implements [`Protocol`]: it is *driven* — started once,
+//! then fed messages and failure-monitor confirmations — and *acts*
+//! through a [`Ctx`] (send, watch/unwatch a peer on the failure monitor,
+//! set timers, combine payloads, deliver results). Protocols never touch
+//! clocks, sockets or threads, which is what lets the deterministic
+//! simulator ([`crate::sim`]) and the live threaded engine
+//! ([`crate::coordinator`]) drive the *same* code.
+//!
+//! Modules:
+//! * [`up_correction`] — Algorithm 1 (§4.2),
+//! * [`reduce`] — Algorithms 2-4 (§4.3) over the I(f)-tree,
+//! * [`failure_info`] — the three §4.4 schemes,
+//! * [`broadcast`] — the corrected-tree broadcast substrate (PPoPP'19),
+//! * [`allreduce`] — Algorithm 5 (§5.2), reduce + broadcast with root
+//!   rotation,
+//! * [`baseline`] — comparison algorithms for the evaluation.
+
+pub mod allreduce;
+pub mod baseline;
+pub mod broadcast;
+pub mod failure_info;
+pub mod reduce;
+#[cfg(test)]
+pub(crate) mod testutil;
+pub mod up_correction;
+
+use crate::types::{Msg, ProtoError, Rank, TimeNs, Value};
+
+/// Which collective a run executes (used by configs and the CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    Reduce,
+    Allreduce,
+    Broadcast,
+    /// Fault-agnostic binomial-tree reduce (Figure 1 baseline).
+    BaselineTreeReduce,
+    /// Flat gather-to-root reduce (trivially FT, O(n) at the root).
+    BaselineFlatGather,
+    /// Ring allreduce (bandwidth-optimal, fault-agnostic).
+    BaselineRingAllreduce,
+    /// (Corrected) gossip broadcast.
+    BaselineGossip,
+}
+
+/// The basic reduction function (§4: associative, assumed commutative).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+    Prod,
+}
+
+impl ReduceOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Max => "max",
+            ReduceOp::Min => "min",
+            ReduceOp::Prod => "prod",
+        }
+    }
+}
+
+/// Applies the basic reduction function to payloads. The DES uses
+/// [`NativeReducer`]; the live engine can substitute a PJRT-backed
+/// reducer that executes the AOT-compiled combine artifact
+/// ([`crate::runtime::PjrtReducer`]).
+pub trait Reducer: Send + Sync {
+    fn combine(&self, acc: &mut Value, other: &Value);
+}
+
+/// Element-wise reduction implemented natively; the correctness oracle
+/// for the PJRT-backed reducer and the default for simulations.
+#[derive(Clone, Copy, Debug)]
+pub struct NativeReducer(pub ReduceOp);
+
+impl Reducer for NativeReducer {
+    fn combine(&self, acc: &mut Value, other: &Value) {
+        fn zip<T: Copy, F: Fn(T, T) -> T>(a: &mut [T], b: &[T], f: F) {
+            assert_eq!(a.len(), b.len(), "payload length mismatch");
+            for (x, y) in a.iter_mut().zip(b) {
+                *x = f(*x, *y);
+            }
+        }
+        match (acc, other, self.0) {
+            (Value::F32(a), Value::F32(b), ReduceOp::Sum) => zip(a, b, |x, y| x + y),
+            (Value::F32(a), Value::F32(b), ReduceOp::Max) => zip(a, b, f32::max),
+            (Value::F32(a), Value::F32(b), ReduceOp::Min) => zip(a, b, f32::min),
+            (Value::F32(a), Value::F32(b), ReduceOp::Prod) => zip(a, b, |x, y| x * y),
+            (Value::F64(a), Value::F64(b), ReduceOp::Sum) => zip(a, b, |x, y| x + y),
+            (Value::F64(a), Value::F64(b), ReduceOp::Max) => zip(a, b, f64::max),
+            (Value::F64(a), Value::F64(b), ReduceOp::Min) => zip(a, b, f64::min),
+            (Value::F64(a), Value::F64(b), ReduceOp::Prod) => zip(a, b, |x, y| x * y),
+            (Value::I64(a), Value::I64(b), ReduceOp::Sum) => zip(a, b, |x, y| x + y),
+            (Value::I64(a), Value::I64(b), ReduceOp::Max) => zip(a, b, std::cmp::max),
+            (Value::I64(a), Value::I64(b), ReduceOp::Min) => zip(a, b, std::cmp::min),
+            (Value::I64(a), Value::I64(b), ReduceOp::Prod) => zip(a, b, |x, y| x * y),
+            (a, b, op) => panic!("mismatched payload types for {op:?}: {a:?} vs {b:?}"),
+        }
+    }
+}
+
+/// What a protocol delivers to its caller.
+#[derive(Clone, Debug)]
+pub enum Outcome {
+    /// `deliver_reduce(m)` at the root: the combined value plus the
+    /// failure report the root accumulated (§4.4 — complete under the
+    /// `List` scheme, best-effort otherwise).
+    ReduceRoot { value: Value, known_failed: Vec<Rank> },
+    /// `deliver_reduce(m)` at a non-root (all information sent upward).
+    ReduceDone,
+    /// `deliver_broadcast(m)`: the broadcast value arrived.
+    Broadcast(Value),
+    /// `deliver_allreduce(m)`: the combined value; `attempts` counts the
+    /// root rotations of Algorithm 5 (1 = first root survived).
+    Allreduce { value: Value, attempts: u32 },
+    /// The operation failed out of contract (more than `f` failures).
+    Error(ProtoError),
+}
+
+impl Outcome {
+    pub fn value(&self) -> Option<&Value> {
+        match self {
+            Outcome::ReduceRoot { value, .. }
+            | Outcome::Broadcast(value)
+            | Outcome::Allreduce { value, .. } => Some(value),
+            _ => None,
+        }
+    }
+}
+
+/// The executor-facing half: everything a protocol may do.
+pub trait Ctx {
+    /// This process's rank.
+    fn rank(&self) -> Rank;
+    /// Number of participating processes.
+    fn n(&self) -> u32;
+    /// Current (virtual or wall-clock) time in ns.
+    fn now(&self) -> TimeNs;
+    /// Send `msg` to `to`. Completes like a normal send even if `to` has
+    /// failed (§3).
+    fn send(&mut self, to: Rank, msg: Msg);
+    /// Arm the failure monitor: if `peer` is (or becomes) dead, the
+    /// executor eventually calls `on_peer_failed(peer)`. Subscriptions
+    /// are counted; one notification clears all of a watcher's
+    /// subscriptions on that peer (a dead peer never recovers).
+    fn watch(&mut self, peer: Rank);
+    /// Retract one `watch` subscription (typically after the expected
+    /// message arrived).
+    fn unwatch(&mut self, peer: Rank);
+    /// Request `on_timer(token)` after `delay` ns.
+    fn set_timer(&mut self, delay: TimeNs, token: u64);
+    /// Apply the basic reduction function.
+    fn combine(&mut self, acc: &mut Value, other: &Value);
+    /// Report a result to the local caller (`deliver_*` in the paper).
+    fn deliver(&mut self, out: Outcome);
+}
+
+/// An event-driven collective protocol instance (one per process).
+pub trait Protocol: Send {
+    /// The process calls `init_*(m)` and sends its first messages.
+    fn on_start(&mut self, ctx: &mut dyn Ctx);
+    /// A message arrived (network is reliable and unmodified, §3).
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx);
+    /// The failure monitor confirmed `peer` has failed.
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx);
+    /// A timer armed via [`Ctx::set_timer`] fired.
+    fn on_timer(&mut self, _token: u64, _ctx: &mut dyn Ctx) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_reducer_sum_f64() {
+        let r = NativeReducer(ReduceOp::Sum);
+        let mut a = Value::F64(vec![1.0, 2.0]);
+        r.combine(&mut a, &Value::F64(vec![10.0, 20.0]));
+        assert_eq!(a, Value::F64(vec![11.0, 22.0]));
+    }
+
+    #[test]
+    fn native_reducer_all_ops_f32() {
+        for (op, expect) in [
+            (ReduceOp::Sum, 7.0f32),
+            (ReduceOp::Max, 4.0),
+            (ReduceOp::Min, 3.0),
+            (ReduceOp::Prod, 12.0),
+        ] {
+            let r = NativeReducer(op);
+            let mut a = Value::F32(vec![3.0]);
+            r.combine(&mut a, &Value::F32(vec![4.0]));
+            assert_eq!(a, Value::F32(vec![expect]), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn native_reducer_i64_masks() {
+        let r = NativeReducer(ReduceOp::Sum);
+        let mut a = Value::one_hot(4, 1);
+        r.combine(&mut a, &Value::one_hot(4, 3));
+        r.combine(&mut a, &Value::one_hot(4, 3));
+        assert_eq!(a.inclusion_counts(), &[0, 1, 0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn native_reducer_rejects_length_mismatch() {
+        NativeReducer(ReduceOp::Sum)
+            .combine(&mut Value::F32(vec![1.0]), &Value::F32(vec![1.0, 2.0]));
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched payload")]
+    fn native_reducer_rejects_type_mismatch() {
+        NativeReducer(ReduceOp::Sum)
+            .combine(&mut Value::F32(vec![1.0]), &Value::I64(vec![1]));
+    }
+
+    #[test]
+    fn outcome_value_accessor() {
+        assert!(Outcome::ReduceDone.value().is_none());
+        let o = Outcome::Broadcast(Value::F64(vec![5.0]));
+        assert_eq!(o.value().unwrap().as_f64_scalar(), 5.0);
+    }
+}

@@ -1,0 +1,594 @@
+//! Fault-tolerant reduce (Algorithms 2-4, §4.3).
+//!
+//! Structure: an up-correction phase (Algorithm 1) followed by a tree
+//! phase over the I(f)-tree. Phases are *local* properties — each process
+//! proceeds independently of other processes' progress (§2, the
+//! difference from Corrected Gossip's global phases); tree-phase messages
+//! arriving at a process still in its up-correction phase are buffered.
+//!
+//! Tree phase: every process except the root waits for the values of all
+//! its tree children (or the failure monitor's confirmation), reduces
+//! them into its up-corrected value ν, and sends the result plus
+//! accumulated failure information to its parent. The root receives one
+//! result per subtree and selects the first one whose failure information
+//! proves the subtree failure-free (Theorem 2); it completes the result
+//! as follows (§4.3):
+//!
+//! * the root is grouped with the last (short) group and the selected
+//!   subtree `k ≤ a-1` contains a member of that group → the result is
+//!   already complete;
+//! * otherwise the result misses exactly the root's group value (or just
+//!   the root's own input when the root is groupless) → combine with the
+//!   root's ν.
+//!
+//! The root assumed not to fail (§4.3: the operation is a no-op
+//! otherwise).
+
+use super::failure_info::{FailureInfo, Scheme};
+use super::up_correction::UpCorrection;
+use super::{Ctx, Outcome, Protocol};
+use crate::topology::{IfTree, RankMap, UpCorrectionGroups};
+use crate::types::{Msg, MsgKind, ProtoError, Rank, Value};
+use std::collections::HashSet;
+
+/// Static configuration of one reduce operation.
+#[derive(Clone, Debug)]
+pub struct ReduceConfig {
+    /// Number of participating processes.
+    pub n: u32,
+    /// Maximum number of tolerated failures.
+    pub f: u32,
+    /// The recipient ("Without loss of generality … process 0"; other
+    /// roots are handled by the §4 rank swap).
+    pub root: Rank,
+    /// Failure-information scheme (§4.4).
+    pub scheme: Scheme,
+    /// Unique id of the operation (the reduce message's id).
+    pub op_id: u64,
+    /// Allreduce attempt number; 0 for standalone reduce.
+    pub epoch: u32,
+}
+
+impl ReduceConfig {
+    pub fn new(n: u32, f: u32) -> Self {
+        ReduceConfig { n, f, root: 0, scheme: Scheme::List, op_id: 1, epoch: 0 }
+    }
+
+    pub fn root(mut self, root: Rank) -> Self {
+        self.root = root;
+        self
+    }
+
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    UpCorr,
+    Tree,
+    Done,
+}
+
+/// Per-process state machine for fault-tolerant reduce.
+pub struct Reduce {
+    cfg: ReduceConfig,
+    map: RankMap,
+    tree: IfTree,
+    groups: UpCorrectionGroups,
+    /// This process's virtual rank (root ↦ 0).
+    vrank: Rank,
+    phase: Phase,
+    uc: UpCorrection,
+    /// Tree-phase accumulator (ν combined with received child values).
+    acc: Option<Value>,
+    /// Outstanding tree children (real ranks).
+    pending_children: HashSet<Rank>,
+    /// Accumulated failure information for the subtree below us.
+    finfo: FailureInfo,
+    /// Tree-phase messages that arrived before our up-correction phase
+    /// finished (phases are local — fast children are legitimate).
+    stashed: Vec<(Rank, Msg)>,
+    /// Root only: delivered yet? (deliver_reduce at most once, §4.1.)
+    delivered: bool,
+    /// Root only: aggregated known-failed ids for the outcome report.
+    report: Vec<Rank>,
+}
+
+impl Reduce {
+    pub fn new(cfg: ReduceConfig, input: Value) -> Self {
+        assert!(cfg.root < cfg.n, "root out of range");
+        let map = RankMap::new(cfg.root);
+        let tree = IfTree::new(cfg.n, cfg.f);
+        let groups = UpCorrectionGroups::new(cfg.n, cfg.f);
+        let scheme = cfg.scheme;
+        Reduce {
+            map,
+            tree,
+            groups,
+            vrank: 0, // fixed in bind()
+            phase: Phase::UpCorr,
+            uc: UpCorrection::new(Vec::new(), input, cfg.op_id, cfg.epoch),
+            acc: None,
+            pending_children: HashSet::new(),
+            finfo: FailureInfo::empty(scheme),
+            stashed: Vec::new(),
+            delivered: false,
+            report: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// Late-bind the process rank (known only when the executor starts
+    /// the protocol). Computes the up-correction peer set.
+    fn bind(&mut self, rank: Rank) {
+        self.vrank = self.map.to_virtual(rank);
+        let peers: Vec<Rank> = self
+            .groups
+            .peers_of(self.vrank)
+            .into_iter()
+            .map(|v| self.map.to_real(v))
+            .collect();
+        let input = self.uc.value().clone();
+        self.uc = UpCorrection::new(peers, input, self.cfg.op_id, self.cfg.epoch);
+    }
+
+    fn is_root(&self) -> bool {
+        self.vrank == 0
+    }
+
+    /// Real ranks of this process's tree children.
+    fn children_real(&self) -> Vec<Rank> {
+        self.tree.children(self.vrank).into_iter().map(|v| self.map.to_real(v)).collect()
+    }
+
+    /// Enter the tree phase: arm the monitor for every child and, for
+    /// leaves, immediately send upward.
+    fn enter_tree_phase(&mut self, ctx: &mut dyn Ctx) {
+        debug_assert!(self.uc.is_done());
+        self.phase = Phase::Tree;
+        // record group-phase detections (scheme 1 appends them; the
+        // subtree bit is NOT set by these, §4.4)
+        for &d in self.uc.detected() {
+            self.finfo.record_upcorr_failure(d);
+        }
+        if self.is_root() {
+            self.report.extend_from_slice(self.uc.detected());
+        }
+        self.acc = Some(self.uc.value().clone());
+        let children = self.children_real();
+        self.pending_children = children.iter().copied().collect();
+        for &c in &children {
+            ctx.watch(c);
+        }
+        // replay tree messages that raced ahead of our up-correction
+        for (from, msg) in std::mem::take(&mut self.stashed) {
+            self.on_tree_message(from, msg, ctx);
+        }
+        self.maybe_finish_tree(ctx);
+    }
+
+    /// All children resolved → non-root sends to parent; the root checks
+    /// whether it must declare the operation failed.
+    fn maybe_finish_tree(&mut self, ctx: &mut dyn Ctx) {
+        if self.phase != Phase::Tree || !self.pending_children.is_empty() {
+            return;
+        }
+        if self.is_root() {
+            if !self.delivered {
+                if self.tree.num_subtrees() == 0 {
+                    // n == 1: the root's own value is the result
+                    self.delivered = true;
+                    let value = self.uc.value().clone();
+                    ctx.deliver(Outcome::ReduceRoot { value, known_failed: Vec::new() });
+                } else {
+                    // all subtrees resolved, none selectable: the
+                    // tolerance contract was violated (Algorithm 2's
+                    // error)
+                    self.delivered = true;
+                    ctx.deliver(Outcome::Error(ProtoError::NoFailureFreeSubtree));
+                }
+            }
+            self.phase = Phase::Done;
+            return;
+        }
+        let parent = self.map.to_real(self.tree.parent(self.vrank).expect("non-root"));
+        let payload = self.acc.take().expect("tree accumulator");
+        ctx.send(
+            parent,
+            Msg {
+                op: self.cfg.op_id,
+                epoch: self.cfg.epoch,
+                kind: MsgKind::TreeUp,
+                payload,
+                finfo: self.finfo.clone(),
+            },
+        );
+        self.phase = Phase::Done;
+        ctx.deliver(Outcome::ReduceDone);
+    }
+
+    /// Handle a tree-phase message once we are in the tree phase.
+    fn on_tree_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if !self.pending_children.remove(&from) {
+            return; // stray/duplicate
+        }
+        ctx.unwatch(from);
+        if self.is_root() {
+            self.root_child_result(from, msg, ctx);
+        } else {
+            let mut acc = self.acc.take().expect("tree accumulator");
+            ctx.combine(&mut acc, &msg.payload);
+            self.acc = Some(acc);
+            self.finfo.merge_child(&msg.finfo);
+        }
+        self.maybe_finish_tree(ctx);
+    }
+
+    /// Root: one subtree delivered its result. Select the first valid
+    /// one (Theorem 3) and complete it.
+    fn root_child_result(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        self.report.extend_from_slice(msg.finfo.known_failed());
+        if self.delivered {
+            return; // already selected; keep consuming (§4.1 item 2)
+        }
+        let k = self.tree.subtree_of(self.map.to_virtual(from));
+        let f1 = self.cfg.f + 1;
+        let map = self.map;
+        // membership test in *real* ranks for the List scheme
+        let in_subtree = |r: Rank| {
+            let v = map.to_virtual(r);
+            v >= 1 && (v - 1) % f1 == k - 1
+        };
+        if !msg.finfo.subtree_valid(in_subtree) {
+            return; // failure in this subtree; wait for another
+        }
+        // §4.3: the received value is complete iff the subtree contains a
+        // member of the root's group (which carries the root's value);
+        // otherwise combine with the root's ν.
+        let complete = self.groups.root_in_group() && k <= self.groups.a() - 1;
+        let mut value = msg.payload;
+        if !complete {
+            let nu = self.uc.value().clone();
+            ctx.combine(&mut value, &nu);
+        }
+        self.delivered = true;
+        let mut known_failed = std::mem::take(&mut self.report);
+        known_failed.sort_unstable();
+        known_failed.dedup();
+        ctx.deliver(Outcome::ReduceRoot { value, known_failed });
+    }
+}
+
+impl Protocol for Reduce {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.bind(ctx.rank());
+        self.uc.start(ctx);
+        if self.uc.is_done() {
+            // groupless (e.g. the root when all groups are full) or
+            // singleton group: straight to the tree phase
+            self.enter_tree_phase(ctx);
+        }
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if msg.op != self.cfg.op_id || msg.epoch != self.cfg.epoch {
+            return; // different operation
+        }
+        match msg.kind {
+            MsgKind::UpCorrection => {
+                if self.uc.handle_message(from, &msg, ctx) && self.uc.is_done() {
+                    if self.phase == Phase::UpCorr {
+                        self.enter_tree_phase(ctx);
+                    }
+                }
+            }
+            MsgKind::TreeUp => match self.phase {
+                Phase::UpCorr => self.stashed.push((from, msg)),
+                Phase::Tree => self.on_tree_message(from, msg, ctx),
+                Phase::Done => {
+                    // the root keeps consuming results after delivering
+                    if self.is_root() {
+                        self.pending_children.remove(&from);
+                    }
+                }
+            },
+            _ => {}
+        }
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        // a peer may be pending in the up-correction phase AND as a tree
+        // child (possible for the root when n-1 < f+1: singleton
+        // subtrees whose member shares the root's group) — resolve both.
+        if self.uc.handle_peer_failed(peer) && self.phase == Phase::UpCorr && self.uc.is_done()
+        {
+            self.enter_tree_phase(ctx);
+        }
+        if self.phase == Phase::Tree && self.pending_children.remove(&peer) {
+            self.finfo.record_tree_failure(peer);
+            if self.is_root() {
+                self.report.push(peer);
+            }
+            self.maybe_finish_tree(ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+
+    fn scalar(v: f64) -> Value {
+        Value::F64(vec![v])
+    }
+
+    fn treeup(v: f64, finfo: FailureInfo) -> Msg {
+        Msg { op: 1, epoch: 0, kind: MsgKind::TreeUp, payload: scalar(v), finfo }
+    }
+
+    fn upcorr(v: f64) -> Msg {
+        TestCtx::msg(MsgKind::UpCorrection, v)
+    }
+
+    /// n=7, f=1 (Figure 2): process 3 is grouped with 4; it is a leaf of
+    /// subtree 1 ([1,3,5] binomial), parent 1.
+    #[test]
+    fn non_root_full_flow() {
+        let mut ctx = TestCtx::new(3, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(3.0));
+        r.on_start(&mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 4); // group peer
+        assert_eq!(sent[0].1.kind, MsgKind::UpCorrection);
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 3.0);
+        assert!(ctx.delivered.is_empty());
+
+        // group answer completes up-correction; as a leaf it immediately
+        // sends ν = 3+4 to its parent (rank 1)
+        r.on_message(4, upcorr(4.0), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 1);
+        assert_eq!(sent[0].1.kind, MsgKind::TreeUp);
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 3.0 + 4.0);
+        assert!(matches!(ctx.delivered[0], Outcome::ReduceDone));
+    }
+
+    /// n=7, f=1: process 1 is an interior node (children 3 and 5).
+    #[test]
+    fn interior_node_waits_for_children() {
+        let mut ctx = TestCtx::new(1, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(1.0));
+        r.on_start(&mut ctx);
+        ctx.take_sent(); // up-corr to 2
+        r.on_message(2, upcorr(2.0), &mut ctx);
+        // tree phase: children 3 and 5 watched, nothing sent yet
+        assert!(ctx.watched.contains(&3) && ctx.watched.contains(&5));
+        assert!(ctx.take_sent().is_empty());
+        r.on_message(3, treeup(7.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        assert!(ctx.take_sent().is_empty());
+        r.on_message(5, treeup(11.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 0); // subtree root sends to the global root
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 1.0 + 2.0 + 7.0 + 11.0);
+    }
+
+    /// Figure 2 at the root: child 1 failed, child 2 reports 20 with no
+    /// failure in its subtree; root (groupless, ν = own 0) completes it.
+    #[test]
+    fn root_selects_failure_free_subtree_and_adds_own_value() {
+        let mut ctx = TestCtx::new(0, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(0.0));
+        r.on_start(&mut ctx);
+        assert!(ctx.take_sent().is_empty()); // root groupless here
+        assert_eq!(ctx.watched, vec![1, 2]); // both subtree roots watched
+
+        r.on_peer_failed(1, &mut ctx); // subtree 1's root is dead
+        assert!(ctx.delivered.is_empty());
+
+        let mut fi = FailureInfo::empty(Scheme::List);
+        fi.record_upcorr_failure(1); // process 2 detected 1 in up-corr
+        r.on_message(2, treeup(20.0, fi), &mut ctx);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, known_failed } => {
+                assert_eq!(value.as_f64_scalar(), 20.0); // 20 + own 0
+                assert_eq!(known_failed, &vec![1]);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    /// The root must skip a subtree whose failure info shows a failure
+    /// *inside that subtree* and take the next valid one.
+    #[test]
+    fn root_skips_invalid_subtree() {
+        let mut ctx = TestCtx::new(0, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(0.0));
+        r.on_start(&mut ctx);
+
+        let mut bad = FailureInfo::empty(Scheme::List);
+        bad.record_tree_failure(3); // 3 is in subtree 1
+        r.on_message(1, treeup(9.0, bad), &mut ctx);
+        assert!(ctx.delivered.is_empty());
+
+        r.on_message(2, treeup(18.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, .. } => assert_eq!(value.as_f64_scalar(), 18.0),
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    /// With the Bit scheme the same selection works on the single bit.
+    #[test]
+    fn root_bit_scheme_selection() {
+        let mut ctx = TestCtx::new(0, 7);
+        let mut r =
+            Reduce::new(ReduceConfig::new(7, 1).scheme(Scheme::Bit), scalar(0.0));
+        r.on_start(&mut ctx);
+        r.on_message(1, treeup(9.0, FailureInfo::Bit(true)), &mut ctx);
+        assert!(ctx.delivered.is_empty());
+        r.on_message(2, treeup(20.0, FailureInfo::Bit(false)), &mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+    }
+
+    /// All subtrees invalid → Algorithm 2's error.
+    #[test]
+    fn root_errors_without_failure_free_subtree() {
+        let mut ctx = TestCtx::new(0, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(0.0));
+        r.on_start(&mut ctx);
+        r.on_peer_failed(1, &mut ctx);
+        let mut bad = FailureInfo::empty(Scheme::List);
+        bad.record_tree_failure(4);
+        r.on_message(2, treeup(9.0, bad), &mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        assert!(matches!(
+            ctx.delivered[0],
+            Outcome::Error(ProtoError::NoFailureFreeSubtree)
+        ));
+    }
+
+    /// n=8, f=1: the root is grouped with rank 7 (short group). A result
+    /// from subtree 1 (contains 7) is complete; from subtree 2 it lacks
+    /// the group value and the root combines its ν.
+    #[test]
+    fn root_in_short_group_completion_rules() {
+        // case 1: subtree 1 result is complete as-is
+        let mut ctx = TestCtx::new(0, 8);
+        let mut r = Reduce::new(ReduceConfig::new(8, 1), scalar(100.0));
+        r.on_start(&mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 7); // exchanges with its group peer
+        r.on_message(7, upcorr(7.0), &mut ctx); // ν = 107
+        // subtree 1 = {1,3,5,7}: contains short-group member 7 → complete
+        r.on_message(1, treeup(116.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, .. } => assert_eq!(value.as_f64_scalar(), 116.0),
+            o => panic!("unexpected {o:?}"),
+        }
+
+        // case 2: subtree 2 = {2,4,6} has no short-group member → +ν
+        let mut ctx = TestCtx::new(0, 8);
+        let mut r = Reduce::new(ReduceConfig::new(8, 1), scalar(100.0));
+        r.on_start(&mut ctx);
+        ctx.take_sent();
+        r.on_message(7, upcorr(7.0), &mut ctx); // ν = 107
+        r.on_message(2, treeup(12.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, .. } => {
+                assert_eq!(value.as_f64_scalar(), 12.0 + 107.0)
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    /// Tree messages arriving during our up-correction phase are stashed
+    /// and replayed (phases are local, §2).
+    #[test]
+    fn early_tree_message_is_stashed() {
+        let mut ctx = TestCtx::new(1, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(1.0));
+        r.on_start(&mut ctx);
+        ctx.take_sent(); // up-corr to 2
+        // children 3,5 send before our group peer 2 answers
+        r.on_message(3, treeup(7.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        r.on_message(5, treeup(11.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        assert!(ctx.take_sent().is_empty());
+        r.on_message(2, upcorr(2.0), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 0);
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 1.0 + 2.0 + 7.0 + 11.0);
+    }
+
+    /// Failed group peer: proceed with own value; the tree-phase bit
+    /// stays clear but the List scheme records the id.
+    #[test]
+    fn group_peer_failure_recorded_without_bit() {
+        let mut ctx = TestCtx::new(2, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(2.0));
+        r.on_start(&mut ctx);
+        ctx.take_sent();
+        r.on_peer_failed(1, &mut ctx); // group peer 1 dead
+        // children 4,6 answer
+        r.on_message(4, treeup(7.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        r.on_message(6, treeup(11.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        let msg = &sent[0].1;
+        assert_eq!(msg.payload.as_f64_scalar(), 20.0);
+        assert_eq!(msg.finfo.known_failed(), &[1]);
+        // 1 is not in subtree 2 → root would still accept this subtree
+        assert!(msg.finfo.subtree_valid(|r| [2, 4, 6].contains(&r)));
+    }
+
+    /// Failed tree child: bit set, id listed, value excluded.
+    #[test]
+    fn tree_child_failure_sets_bit() {
+        let mut ctx = TestCtx::new(1, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(1.0));
+        r.on_start(&mut ctx);
+        ctx.take_sent();
+        r.on_message(2, upcorr(2.0), &mut ctx);
+        r.on_peer_failed(3, &mut ctx);
+        r.on_message(5, treeup(11.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        let sent = ctx.take_sent();
+        let msg = &sent[0].1;
+        assert_eq!(msg.payload.as_f64_scalar(), 1.0 + 2.0 + 11.0);
+        assert!(!msg.finfo.subtree_valid(|r| [1, 3, 5].contains(&r)));
+    }
+
+    /// Non-root with arbitrary real root: rank swap must route to the
+    /// right peers.
+    #[test]
+    fn rank_swap_routes_to_real_ranks() {
+        // root=3, n=7, f=1. Real rank 0 takes virtual rank 3: group peer
+        // virtual 4 (real 4), parent virtual 1 (real 1).
+        let mut ctx = TestCtx::new(0, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1).root(3), scalar(0.0));
+        r.on_start(&mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent[0].0, 4);
+        // virtual 3 has no children (subtree 1 = [1,3,5] binomial →
+        // index 1 is a leaf); parent is virtual 1 (real 1), so the group
+        // answer completes the whole flow.
+        r.on_message(4, upcorr(4.0), &mut ctx);
+        let sent = ctx.take_sent();
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 1);
+        assert_eq!(sent[0].1.payload.as_f64_scalar(), 4.0);
+    }
+
+    /// n=1: the root delivers its own value immediately.
+    #[test]
+    fn single_process_delivers_immediately() {
+        let mut ctx = TestCtx::new(0, 1);
+        let mut r = Reduce::new(ReduceConfig::new(1, 2), scalar(42.0));
+        r.on_start(&mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, .. } => assert_eq!(value.as_f64_scalar(), 42.0),
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    /// deliver_reduce at most once (§4.1 item 2): a second valid subtree
+    /// result must not deliver again.
+    #[test]
+    fn root_delivers_at_most_once() {
+        let mut ctx = TestCtx::new(0, 7);
+        let mut r = Reduce::new(ReduceConfig::new(7, 1), scalar(0.0));
+        r.on_start(&mut ctx);
+        r.on_message(1, treeup(9.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        r.on_message(2, treeup(20.0, FailureInfo::empty(Scheme::List)), &mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+    }
+}

@@ -1,0 +1,81 @@
+//! Recording [`Ctx`] used by the collectives' unit tests: captures sends,
+//! watches and deliveries so state machines can be single-stepped without
+//! an executor.
+
+use super::{Ctx, NativeReducer, Outcome, ReduceOp, Reducer};
+use crate::collectives::failure_info::FailureInfo;
+use crate::types::{Msg, MsgKind, Rank, TimeNs, Value};
+
+pub(crate) struct TestCtx {
+    pub rank: Rank,
+    pub n: u32,
+    pub now: TimeNs,
+    pub sent: Vec<(Rank, Msg)>,
+    pub watched: Vec<Rank>,
+    pub unwatched: Vec<Rank>,
+    pub timers: Vec<(TimeNs, u64)>,
+    pub delivered: Vec<Outcome>,
+    pub reducer: NativeReducer,
+}
+
+impl TestCtx {
+    pub fn new(rank: Rank, n: u32) -> Self {
+        TestCtx {
+            rank,
+            n,
+            now: 0,
+            sent: Vec::new(),
+            watched: Vec::new(),
+            unwatched: Vec::new(),
+            timers: Vec::new(),
+            delivered: Vec::new(),
+            reducer: NativeReducer(ReduceOp::Sum),
+        }
+    }
+
+    /// Drain and return sends accumulated since the last call.
+    pub fn take_sent(&mut self) -> Vec<(Rank, Msg)> {
+        std::mem::take(&mut self.sent)
+    }
+
+    /// Convenience: a scalar-f64 message.
+    pub fn msg(kind: MsgKind, v: f64) -> Msg {
+        Msg {
+            op: 1,
+            epoch: 0,
+            kind,
+            payload: Value::F64(vec![v]),
+            finfo: FailureInfo::Bit(false),
+        }
+    }
+}
+
+impl Ctx for TestCtx {
+    fn rank(&self) -> Rank {
+        self.rank
+    }
+    fn n(&self) -> u32 {
+        self.n
+    }
+    fn now(&self) -> TimeNs {
+        self.now
+    }
+    fn send(&mut self, to: Rank, msg: Msg) {
+        self.sent.push((to, msg));
+    }
+    fn watch(&mut self, peer: Rank) {
+        self.watched.push(peer);
+    }
+    fn unwatch(&mut self, peer: Rank) {
+        self.unwatched.push(peer);
+    }
+    fn set_timer(&mut self, delay: TimeNs, token: u64) {
+        self.timers.push((self.now + delay, token));
+    }
+    fn combine(&mut self, acc: &mut Value, other: &Value) {
+        self.reducer.combine(acc, other);
+    }
+    fn deliver(&mut self, out: Outcome) {
+        self.delivered.push(out);
+    }
+}

@@ -1,0 +1,206 @@
+//! Up-correction (Algorithm 1, §4.2).
+//!
+//! Before the tree phase, each grouped process exchanges its *original*
+//! input value ("Note: no failure information is sent here" — and
+//! `senddata` is fixed before the loop, so group messages carry the
+//! uncombined input) with every other member of its up-correction group
+//! and reduces received values into its local accumulator. After the
+//! phase, all live members of a group hold the same combined value —
+//! exactly once per subtree of the I(f)-tree root, which is what Theorem
+//! 1 needs.
+//!
+//! This is an embeddable sub-machine: [`super::reduce::Reduce`] drives it
+//! and proceeds to the tree phase once [`UpCorrection::is_done`].
+
+use super::failure_info::FailureInfo;
+use super::Ctx;
+use crate::types::{Msg, MsgKind, Rank, Value};
+use std::collections::HashSet;
+
+#[derive(Debug)]
+pub struct UpCorrection {
+    /// Group peers (real ranks) we exchange with.
+    peers: Vec<Rank>,
+    /// Peers we have not yet received from (nor confirmed failed).
+    pending: HashSet<Rank>,
+    /// Local accumulator: starts at the input value, absorbs received
+    /// group values. This becomes the ν used in the tree phase.
+    data: Value,
+    /// The unmodified input (what we send — Algorithm 1's `senddata`).
+    senddata: Value,
+    /// Group peers confirmed failed during this phase.
+    detected: Vec<Rank>,
+    op: u64,
+    epoch: u32,
+    started: bool,
+}
+
+impl UpCorrection {
+    /// `peers` = the other members of this process's group (empty for
+    /// groupless processes — the phase is then a no-op).
+    pub fn new(peers: Vec<Rank>, input: Value, op: u64, epoch: u32) -> Self {
+        UpCorrection {
+            pending: peers.iter().copied().collect(),
+            peers,
+            senddata: input.clone(),
+            data: input,
+            detected: Vec::new(),
+            op,
+            epoch,
+            started: false,
+        }
+    }
+
+    /// Send our input to every group peer and arm the failure monitor for
+    /// each expected inbound value.
+    pub fn start(&mut self, ctx: &mut dyn Ctx) {
+        assert!(!self.started, "up-correction started twice");
+        self.started = true;
+        for &p in &self.peers {
+            ctx.send(
+                p,
+                Msg {
+                    op: self.op,
+                    epoch: self.epoch,
+                    kind: MsgKind::UpCorrection,
+                    payload: self.senddata.clone(),
+                    // no failure information in up-correction messages
+                    finfo: FailureInfo::Bit(false),
+                },
+            );
+            ctx.watch(p);
+        }
+    }
+
+    /// Feed a message; returns `true` if it was consumed (an expected
+    /// `UpCorrection` from a pending peer).
+    pub fn handle_message(&mut self, from: Rank, msg: &Msg, ctx: &mut dyn Ctx) -> bool {
+        if msg.kind != MsgKind::UpCorrection {
+            return false;
+        }
+        if self.pending.remove(&from) {
+            ctx.unwatch(from);
+            let mut acc = std::mem::replace(&mut self.data, Value::F64(Vec::new()));
+            ctx.combine(&mut acc, &msg.payload);
+            self.data = acc;
+            true
+        } else {
+            // duplicate or stray — the network does not duplicate (§3),
+            // but a stale epoch replay may surface one; ignore.
+            false
+        }
+    }
+
+    /// Feed a failure confirmation; returns `true` if the peer was
+    /// pending in this phase (its value is then never included here).
+    pub fn handle_peer_failed(&mut self, peer: Rank) -> bool {
+        if self.pending.remove(&peer) {
+            self.detected.push(peer);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.started && self.pending.is_empty()
+    }
+
+    pub fn is_started(&self) -> bool {
+        self.started
+    }
+
+    /// The combined group value ν (valid once done; callers may also read
+    /// it before completion for diagnostics).
+    pub fn value(&self) -> &Value {
+        &self.data
+    }
+
+    pub fn into_value(self) -> Value {
+        self.data
+    }
+
+    /// Group peers confirmed failed during the phase.
+    pub fn detected(&self) -> &[Rank] {
+        &self.detected
+    }
+
+    pub fn peers(&self) -> &[Rank] {
+        &self.peers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+
+    fn msg(kind: MsgKind, v: f64) -> Msg {
+        Msg {
+            op: 1,
+            epoch: 0,
+            kind,
+            payload: Value::F64(vec![v]),
+            finfo: FailureInfo::Bit(false),
+        }
+    }
+
+    #[test]
+    fn exchanges_original_value_with_all_peers() {
+        let mut ctx = TestCtx::new(3, 8);
+        let mut uc = UpCorrection::new(vec![4, 5], Value::F64(vec![3.0]), 1, 0);
+        uc.start(&mut ctx);
+        assert_eq!(ctx.sent.len(), 2);
+        assert_eq!(ctx.watched, vec![4, 5]);
+        for (_, m) in &ctx.sent {
+            assert_eq!(m.kind, MsgKind::UpCorrection);
+            assert_eq!(m.payload.as_f64_scalar(), 3.0); // senddata, not accumulated
+        }
+        assert!(!uc.is_done());
+
+        assert!(uc.handle_message(4, &msg(MsgKind::UpCorrection, 4.0), &mut ctx));
+        // after absorbing 4, the *sent* data would still have been 3
+        assert_eq!(uc.value().as_f64_scalar(), 7.0);
+        assert!(!uc.is_done());
+        assert!(uc.handle_message(5, &msg(MsgKind::UpCorrection, 5.0), &mut ctx));
+        assert!(uc.is_done());
+        assert_eq!(uc.value().as_f64_scalar(), 12.0);
+        assert_eq!(ctx.unwatched, vec![4, 5]);
+    }
+
+    #[test]
+    fn groupless_process_is_immediately_done() {
+        let mut ctx = TestCtx::new(0, 7);
+        let mut uc = UpCorrection::new(vec![], Value::F64(vec![0.0]), 1, 0);
+        uc.start(&mut ctx);
+        assert!(uc.is_done());
+        assert!(ctx.sent.is_empty());
+    }
+
+    #[test]
+    fn failed_peer_resolves_pending() {
+        let mut ctx = TestCtx::new(2, 7);
+        let mut uc = UpCorrection::new(vec![1], Value::F64(vec![2.0]), 1, 0);
+        uc.start(&mut ctx);
+        assert!(uc.handle_peer_failed(1));
+        assert!(uc.is_done());
+        assert_eq!(uc.value().as_f64_scalar(), 2.0); // value not included
+        assert_eq!(uc.detected(), &[1]);
+        // second confirmation is a no-op
+        assert!(!uc.handle_peer_failed(1));
+    }
+
+    #[test]
+    fn ignores_wrong_kind_and_strays() {
+        let mut ctx = TestCtx::new(2, 7);
+        let mut uc = UpCorrection::new(vec![1], Value::F64(vec![2.0]), 1, 0);
+        uc.start(&mut ctx);
+        assert!(!uc.handle_message(1, &msg(MsgKind::TreeUp, 9.0), &mut ctx));
+        assert!(!uc.handle_message(6, &msg(MsgKind::UpCorrection, 9.0), &mut ctx));
+        assert_eq!(uc.value().as_f64_scalar(), 2.0);
+        // duplicate from the same peer after consumption
+        assert!(uc.handle_message(1, &msg(MsgKind::UpCorrection, 1.0), &mut ctx));
+        assert!(!uc.handle_message(1, &msg(MsgKind::UpCorrection, 1.0), &mut ctx));
+        assert_eq!(uc.value().as_f64_scalar(), 3.0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Run configuration shared by the CLI, the simulator and the live
+//! engine. Hand-rolled TOML-subset parsing (`key = value` lines, `#`
+//! comments) because the offline image carries no serde/toml crates.
+
+use crate::collectives::failure_info::Scheme;
+use crate::collectives::ReduceOp;
+use crate::failure::FailureSpec;
+use crate::types::{Rank, Value};
+
+/// What each rank contributes to the collective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// Scalar f64 equal to the rank number — the paper's §4.3 worked
+    /// example ("seven processes that want to compute the sum of their
+    /// process numbers").
+    RankValue,
+    /// Exact one-hot inclusion mask (i64, length n) — semantics tests.
+    OneHot,
+    /// Dense f32 vector of the given length, deterministically seeded by
+    /// rank — production-shaped payloads (gradient buffers).
+    VectorF32 { len: u32 },
+}
+
+impl PayloadKind {
+    /// The input value rank `r` contributes.
+    pub fn initial(&self, r: Rank, n: u32) -> Value {
+        match *self {
+            PayloadKind::RankValue => Value::F64(vec![r as f64]),
+            PayloadKind::OneHot => Value::one_hot(n as usize, r),
+            PayloadKind::VectorF32 { len } => {
+                let mut rng = crate::prng::Pcg::new(0xDA7A ^ r as u64);
+                Value::F32((0..len).map(|_| rng.f32() - 0.5).collect())
+            }
+        }
+    }
+
+    /// Wire size of one payload of this kind.
+    pub fn wire_bytes(&self, n: u32) -> usize {
+        match *self {
+            PayloadKind::RankValue => 8,
+            PayloadKind::OneHot => 8 * n as usize,
+            PayloadKind::VectorF32 { len } => 4 * len as usize,
+        }
+    }
+}
+
+/// Top-level configuration for a single collective run (CLI/TOML-facing;
+/// the simulator's [`crate::sim::SimConfig`] builds on this).
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub n: u32,
+    pub f: u32,
+    pub root: Rank,
+    pub scheme: Scheme,
+    pub op: ReduceOp,
+    pub payload: PayloadKind,
+    pub failures: Vec<FailureSpec>,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            n: 8,
+            f: 1,
+            root: 0,
+            scheme: Scheme::List,
+            op: ReduceOp::Sum,
+            payload: PayloadKind::RankValue,
+            failures: Vec::new(),
+            seed: 1,
+        }
+    }
+}
+
+impl Config {
+    /// Parse a `key = value` config file body. Recognized keys:
+    /// `n`, `f`, `root`, `scheme` (list|count+bit|bit), `op`
+    /// (sum|max|min|prod), `payload` (rank|onehot|vec:<len>), `seed`,
+    /// `fail` (repeatable: `pre:<rank>` | `sends:<rank>:<k>` |
+    /// `time:<rank>:<ns>`).
+    pub fn parse(body: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        for (lineno, raw) in body.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            cfg.set(key.trim(), value.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one key/value pair (also used for CLI `--key value`
+    /// overrides).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn num<T: std::str::FromStr>(v: &str) -> Result<T, String> {
+            v.parse().map_err(|_| format!("bad number `{v}`"))
+        }
+        match key {
+            "n" => self.n = num(value)?,
+            "f" => self.f = num(value)?,
+            "root" => self.root = num(value)?,
+            "seed" => self.seed = num(value)?,
+            "scheme" => {
+                self.scheme = match value {
+                    "list" => Scheme::List,
+                    "count+bit" | "countbit" => Scheme::CountBit,
+                    "bit" => Scheme::Bit,
+                    other => return Err(format!("unknown scheme `{other}`")),
+                }
+            }
+            "op" => {
+                self.op = match value {
+                    "sum" => ReduceOp::Sum,
+                    "max" => ReduceOp::Max,
+                    "min" => ReduceOp::Min,
+                    "prod" => ReduceOp::Prod,
+                    other => return Err(format!("unknown op `{other}`")),
+                }
+            }
+            "payload" => {
+                self.payload = if value == "rank" {
+                    PayloadKind::RankValue
+                } else if value == "onehot" {
+                    PayloadKind::OneHot
+                } else if let Some(len) = value.strip_prefix("vec:") {
+                    PayloadKind::VectorF32 { len: num(len)? }
+                } else {
+                    return Err(format!("unknown payload `{value}`"));
+                }
+            }
+            "fail" => {
+                let parts: Vec<&str> = value.split(':').collect();
+                let spec = match parts.as_slice() {
+                    ["pre", r] => FailureSpec::Pre { rank: num(r)? },
+                    ["sends", r, k] => {
+                        FailureSpec::AfterSends { rank: num(r)?, sends: num(k)? }
+                    }
+                    ["time", r, t] => FailureSpec::AtTime { rank: num(r)?, at: num(t)? },
+                    _ => return Err(format!("bad failure spec `{value}`")),
+                };
+                self.failures.push(spec);
+            }
+            other => return Err(format!("unknown key `{other}`")),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n == 0 {
+            return Err("n must be >= 1".into());
+        }
+        if self.root >= self.n {
+            return Err(format!("root {} out of range (n={})", self.root, self.n));
+        }
+        crate::failure::validate_plan(self.n, &self.failures)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = Config::parse(
+            "# experiment E2\n\
+             n = 7\n\
+             f = 1\n\
+             scheme = bit\n\
+             op = sum\n\
+             payload = rank\n\
+             fail = pre:1\n\
+             seed = 42\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.n, 7);
+        assert_eq!(cfg.f, 1);
+        assert_eq!(cfg.scheme, Scheme::Bit);
+        assert_eq!(cfg.failures, vec![FailureSpec::Pre { rank: 1 }]);
+        assert_eq!(cfg.seed, 42);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn parse_failure_variants() {
+        let cfg = Config::parse("fail = sends:3:2\nfail = time:4:1000\n").unwrap();
+        assert_eq!(
+            cfg.failures,
+            vec![
+                FailureSpec::AfterSends { rank: 3, sends: 2 },
+                FailureSpec::AtTime { rank: 4, at: 1000 }
+            ]
+        );
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(Config::parse("nonsense").is_err());
+        assert!(Config::parse("scheme = wat").is_err());
+        assert!(Config::parse("fail = pre").is_err());
+        assert!(Config::parse("whoami = 1").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_root() {
+        let mut cfg = Config::default();
+        cfg.root = 99;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn payload_initials() {
+        assert_eq!(PayloadKind::RankValue.initial(3, 8).as_f64_scalar(), 3.0);
+        assert_eq!(
+            PayloadKind::OneHot.initial(2, 4).inclusion_counts(),
+            &[0, 0, 1, 0]
+        );
+        let v = PayloadKind::VectorF32 { len: 16 }.initial(1, 4);
+        assert_eq!(v.len(), 16);
+        // deterministic
+        assert_eq!(v, PayloadKind::VectorF32 { len: 16 }.initial(1, 4));
+        assert_ne!(v, PayloadKind::VectorF32 { len: 16 }.initial(2, 4));
+    }
+
+    #[test]
+    fn payload_wire_bytes() {
+        assert_eq!(PayloadKind::RankValue.wire_bytes(8), 8);
+        assert_eq!(PayloadKind::OneHot.wire_bytes(8), 64);
+        assert_eq!(PayloadKind::VectorF32 { len: 256 }.wire_bytes(8), 1024);
+    }
+}

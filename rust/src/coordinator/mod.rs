@@ -1,0 +1,308 @@
+//! Live execution engine: one OS thread per rank, mpsc transport, shared
+//! failure monitor — the deployment-shaped counterpart of the DES (the
+//! image carries no tokio, so the runtime is std-threads; the paper's
+//! algorithms are latency-bound on small messages, for which blocking
+//! channel workers are a faithful execution model).
+//!
+//! The engine runs the *same* [`Protocol`] state machines as
+//! [`crate::sim`]; reduction can be native or PJRT-backed
+//! ([`crate::runtime::PjrtReducer`]), which is how the paper's collectives
+//! sit on the request path of the dp_train example with zero Python.
+
+pub mod monitor;
+pub mod transport;
+pub mod worker;
+
+use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
+use crate::collectives::broadcast::CorrectionMode;
+use crate::collectives::failure_info::Scheme;
+use crate::collectives::reduce::{Reduce, ReduceConfig};
+use crate::collectives::{NativeReducer, Outcome, Protocol, ReduceOp, Reducer};
+use crate::config::PayloadKind;
+use crate::failure::FailureSpec;
+use crate::metrics::Metrics;
+use crate::runtime::ComputeHandle;
+use crate::types::{Rank, TimeNs, Value};
+use monitor::Monitor;
+use transport::{Envelope, Router};
+use worker::{run_worker, WorkerConfig, WorkerEvent};
+
+/// How workers combine payloads.
+pub enum ReducerKind {
+    Native(ReduceOp),
+    /// PJRT-backed combine through the compute service.
+    Pjrt { handle: ComputeHandle, op: ReduceOp },
+}
+
+impl ReducerKind {
+    fn instantiate(&self) -> Box<dyn Reducer> {
+        match self {
+            ReducerKind::Native(op) => Box::new(NativeReducer(*op)),
+            ReducerKind::Pjrt { handle, op } => {
+                Box::new(crate::runtime::PjrtReducer::new(handle.clone(), *op))
+            }
+        }
+    }
+}
+
+/// Configuration of a live collective run.
+pub struct EngineConfig {
+    pub n: u32,
+    pub f: u32,
+    pub scheme: Scheme,
+    pub correction: CorrectionMode,
+    pub payload: PayloadKind,
+    pub failures: Vec<FailureSpec>,
+    pub reducer: ReducerKind,
+    pub candidates: Option<Vec<Rank>>,
+    /// Monitor confirmation delay (ns).
+    pub detect_delay: TimeNs,
+}
+
+impl EngineConfig {
+    pub fn new(n: u32, f: u32) -> Self {
+        EngineConfig {
+            n,
+            f,
+            scheme: Scheme::List,
+            correction: CorrectionMode::Always,
+            payload: PayloadKind::RankValue,
+            failures: Vec::new(),
+            reducer: ReducerKind::Native(ReduceOp::Sum),
+            candidates: None,
+            detect_delay: 0,
+        }
+    }
+}
+
+/// Result of a live run.
+#[derive(Debug)]
+pub struct LiveReport {
+    pub n: u32,
+    /// First delivery per rank (`None` for failed / undelivered ranks).
+    pub outcomes: Vec<Option<Outcome>>,
+    /// Delivery timestamps (ns since engine start).
+    pub delivered_at: Vec<Option<TimeNs>>,
+    /// Aggregated worker metrics.
+    pub metrics: Metrics,
+    /// Wall-clock of the whole run.
+    pub elapsed: std::time::Duration,
+}
+
+impl LiveReport {
+    pub fn value_at(&self, rank: Rank) -> Option<&Value> {
+        self.outcomes[rank as usize].as_ref().and_then(|o| o.value())
+    }
+}
+
+/// Run a collective where `make_proto(rank, input)` builds each rank's
+/// state machine. Blocks until every live rank delivered (or every
+/// worker exited) and all workers terminated.
+pub fn run_live<F>(cfg: &EngineConfig, make_proto: F) -> LiveReport
+where
+    F: Fn(Rank, Value) -> Box<dyn Protocol>,
+{
+    let t0 = std::time::Instant::now();
+    let (router, receivers) = Router::new(cfg.n);
+    let monitor = Monitor::new(router.clone(), cfg.detect_delay);
+    let (ev_tx, ev_rx) = std::sync::mpsc::channel::<WorkerEvent>();
+
+    // failure plan
+    let mut pre_dead = vec![false; cfg.n as usize];
+    let mut send_limit = vec![None; cfg.n as usize];
+    let mut kill_at = vec![None; cfg.n as usize];
+    for spec in &cfg.failures {
+        match *spec {
+            FailureSpec::Pre { rank } => pre_dead[rank as usize] = true,
+            FailureSpec::AfterSends { rank, sends } => {
+                send_limit[rank as usize] = Some(sends)
+            }
+            FailureSpec::AtTime { rank, at } => kill_at[rank as usize] = Some(at),
+        }
+    }
+
+    let mut handles = Vec::new();
+    let mut live = 0u32;
+    for (rank, mailbox) in receivers.into_iter().enumerate() {
+        let rank = rank as Rank;
+        if pre_dead[rank as usize] {
+            // pre-operational failure: the process never runs; dropping
+            // the mailbox makes sends to it vanish
+            monitor.kill(rank);
+            continue;
+        }
+        live += 1;
+        let proto = make_proto(rank, cfg.payload.initial(rank, cfg.n));
+        let wcfg = WorkerConfig {
+            rank,
+            n: cfg.n,
+            send_limit: send_limit[rank as usize],
+            kill_at: kill_at[rank as usize],
+        };
+        let router = router.clone();
+        let monitor = monitor.clone();
+        let reducer = cfg.reducer.instantiate();
+        let ev_tx = ev_tx.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("ftcoll-w{rank}"))
+                .spawn(move || run_worker(wcfg, proto, mailbox, router, monitor, reducer, ev_tx))
+                .expect("spawn worker"),
+        );
+    }
+    drop(ev_tx);
+
+    // workers start their protocols themselves (before reading their
+    // mailbox) — no Start envelope, so no message/start race
+
+    // collect: first delivery per live rank, then stop the world
+    let mut outcomes: Vec<Option<Outcome>> = (0..cfg.n).map(|_| None).collect();
+    let mut delivered_at: Vec<Option<TimeNs>> = vec![None; cfg.n as usize];
+    let mut metrics = Metrics::new();
+    let mut delivered = 0u32;
+    let mut exited = 0u32;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    // ranks that died *in-operation* never deliver; count them so the
+    // collection loop terminates (pre-dead ranks were never in `live`)
+    let inop_dead = |outcomes: &[Option<Outcome>]| {
+        monitor
+            .dead_ranks()
+            .into_iter()
+            .filter(|&r| !pre_dead[r as usize] && outcomes[r as usize].is_none())
+            .count() as u32
+    };
+    while delivered + inop_dead(&outcomes) < live && exited < live {
+        let timeout = deadline.saturating_duration_since(std::time::Instant::now());
+        if timeout.is_zero() {
+            // engine-level watchdog; undelivered ranks stay None
+            eprintln!(
+                "ftcoll engine watchdog: {}/{} live ranks delivered after 120s — aborting collection",
+                delivered, live
+            );
+            break;
+        }
+        match ev_rx.recv_timeout(timeout.min(std::time::Duration::from_millis(100))) {
+            Ok(WorkerEvent::Delivered { rank, outcome, at }) => {
+                if outcomes[rank as usize].is_none() {
+                    outcomes[rank as usize] = Some(outcome);
+                    delivered_at[rank as usize] = Some(at);
+                    delivered += 1;
+                }
+            }
+            Ok(WorkerEvent::Exited { metrics: m, .. }) => {
+                metrics.absorb(&m);
+                exited += 1;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    // shut down
+    for r in 0..cfg.n {
+        router.send(r, Envelope::Stop);
+    }
+    for ev in ev_rx.iter() {
+        if let WorkerEvent::Exited { metrics: m, .. } = ev {
+            metrics.absorb(&m);
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    LiveReport { n: cfg.n, outcomes, delivered_at, metrics, elapsed: t0.elapsed() }
+}
+
+/// Live fault-tolerant reduce.
+pub fn live_reduce(cfg: &EngineConfig, root: Rank) -> LiveReport {
+    let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
+    run_live(cfg, |_, input| {
+        Box::new(Reduce::new(
+            ReduceConfig { n, f, root, scheme, op_id: 1, epoch: 0 },
+            input,
+        ))
+    })
+}
+
+/// Live fault-tolerant allreduce.
+pub fn live_allreduce(cfg: &EngineConfig) -> LiveReport {
+    let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
+    let correction = cfg.correction;
+    let candidates = cfg.candidates.clone();
+    run_live(cfg, move |_, input| {
+        let mut acfg = AllreduceConfig::new(n, f).scheme(scheme);
+        acfg.correction = correction;
+        if let Some(c) = &candidates {
+            acfg = acfg.candidates(c.clone());
+        }
+        Box::new(Allreduce::new(acfg, input))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_reduce_failure_free() {
+        let cfg = EngineConfig::new(8, 1);
+        let rep = live_reduce(&cfg, 0);
+        let expect: f64 = (0..8).map(|r| r as f64).sum();
+        match rep.outcomes[0].as_ref().unwrap() {
+            Outcome::ReduceRoot { value, .. } => assert_eq!(value.as_f64_scalar(), expect),
+            o => panic!("unexpected {o:?}"),
+        }
+        for r in 1..8 {
+            assert!(matches!(rep.outcomes[r as usize], Some(Outcome::ReduceDone)));
+        }
+    }
+
+    #[test]
+    fn live_reduce_with_pre_failure() {
+        let mut cfg = EngineConfig::new(7, 1);
+        cfg.failures = vec![FailureSpec::Pre { rank: 1 }];
+        let rep = live_reduce(&cfg, 0);
+        match rep.outcomes[0].as_ref().unwrap() {
+            Outcome::ReduceRoot { value, .. } => assert_eq!(value.as_f64_scalar(), 20.0),
+            o => panic!("unexpected {o:?}"),
+        }
+        assert!(rep.outcomes[1].is_none());
+    }
+
+    #[test]
+    fn live_allreduce_rotation() {
+        let mut cfg = EngineConfig::new(6, 1);
+        cfg.failures = vec![FailureSpec::Pre { rank: 0 }];
+        let rep = live_allreduce(&cfg);
+        let expect: f64 = (1..6).map(|r| r as f64).sum();
+        for r in 1..6 {
+            match rep.outcomes[r as usize].as_ref() {
+                Some(Outcome::Allreduce { value, attempts }) => {
+                    assert_eq!(value.as_f64_scalar(), expect, "rank {r}");
+                    assert_eq!(*attempts, 2, "rank {r}");
+                }
+                o => panic!("rank {r}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn live_inop_failure_all_or_nothing() {
+        let mut cfg = EngineConfig::new(9, 2);
+        cfg.payload = PayloadKind::OneHot;
+        cfg.failures = vec![FailureSpec::AfterSends { rank: 4, sends: 1 }];
+        let rep = live_reduce(&cfg, 0);
+        match rep.outcomes[0].as_ref().unwrap() {
+            Outcome::ReduceRoot { value, .. } => {
+                let counts = value.inclusion_counts();
+                for r in 0..9 {
+                    if r == 4 {
+                        assert!(counts[r] <= 1, "failed rank included {}x", counts[r]);
+                    } else {
+                        assert_eq!(counts[r], 1, "rank {r}");
+                    }
+                }
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+}

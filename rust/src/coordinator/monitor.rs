@@ -1,0 +1,161 @@
+//! Live failure monitor: the shared registry realizing §4.2's "confirm
+//! the sender to have failed with the respective failure monitor".
+//!
+//! The injector (or a worker killing itself at its send-count limit)
+//! reports deaths here; watchers receive [`Envelope::PeerFailed`] in
+//! their mailbox. Under fail-stop this is a perfect detector —
+//! `detect_delay` adds the configurable confirmation latency the DES
+//! models, keeping the two executors' timing assumptions aligned.
+
+use super::transport::{Envelope, Router};
+use crate::failure::monitor::{DeadSet, WatchTable};
+use crate::types::{Rank, TimeNs};
+use std::sync::{Arc, Mutex};
+
+struct MonState {
+    dead: DeadSet,
+    watches: WatchTable,
+}
+
+/// Cloneable shared monitor.
+#[derive(Clone)]
+pub struct Monitor {
+    state: Arc<Mutex<MonState>>,
+    router: Router,
+    detect_delay: TimeNs,
+}
+
+impl Monitor {
+    pub fn new(router: Router, detect_delay: TimeNs) -> Monitor {
+        Monitor {
+            state: Arc::new(Mutex::new(MonState {
+                dead: DeadSet::new(),
+                watches: WatchTable::new(),
+            })),
+            router,
+            detect_delay,
+        }
+    }
+
+    fn notify(&self, watcher: Rank, peer: Rank) {
+        let router = self.router.clone();
+        if self.detect_delay == 0 {
+            router.send(watcher, Envelope::PeerFailed { peer });
+        } else {
+            let delay = std::time::Duration::from_nanos(self.detect_delay);
+            std::thread::spawn(move || {
+                std::thread::sleep(delay);
+                router.send(watcher, Envelope::PeerFailed { peer });
+            });
+        }
+    }
+
+    /// Arm a watch; an already-dead peer is confirmed immediately (after
+    /// the detection delay).
+    pub fn watch(&self, watcher: Rank, peer: Rank) {
+        let is_dead = {
+            let mut st = self.state.lock().unwrap();
+            st.watches.watch(watcher, peer);
+            st.dead.is_dead(peer)
+        };
+        if is_dead {
+            // the watcher-side dedup (one notification clears all
+            // subscriptions) makes duplicate notifications harmless
+            self.notify(watcher, peer);
+        }
+    }
+
+    pub fn unwatch(&self, watcher: Rank, peer: Rank) {
+        self.state.lock().unwrap().watches.unwatch(watcher, peer);
+    }
+
+    /// Report a death; notifies all current watchers.
+    pub fn kill(&self, rank: Rank) {
+        let watchers = {
+            let mut st = self.state.lock().unwrap();
+            if !st.dead.mark_dead(rank) {
+                return; // already dead
+            }
+            st.watches.watchers_of(rank)
+        };
+        for w in watchers {
+            self.notify(w, rank);
+        }
+    }
+
+    /// Clear all subscriptions of `watcher` on `peer` — called by the
+    /// worker when it consumes a notification.
+    pub fn acknowledge(&self, watcher: Rank, peer: Rank) {
+        self.state.lock().unwrap().watches.clear(watcher, peer);
+    }
+
+    pub fn is_dead(&self, rank: Rank) -> bool {
+        self.state.lock().unwrap().dead.is_dead(rank)
+    }
+
+    pub fn dead_ranks(&self) -> Vec<Rank> {
+        self.state.lock().unwrap().dead.dead_ranks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watch_then_kill_notifies() {
+        let (router, rxs) = Router::new(2);
+        let mon = Monitor::new(router, 0);
+        mon.watch(0, 1);
+        mon.kill(1);
+        match rxs[0].recv_timeout(std::time::Duration::from_secs(1)).unwrap() {
+            Envelope::PeerFailed { peer } => assert_eq!(peer, 1),
+            e => panic!("unexpected {e:?}"),
+        }
+    }
+
+    #[test]
+    fn watch_on_already_dead_notifies() {
+        let (router, rxs) = Router::new(2);
+        let mon = Monitor::new(router, 0);
+        mon.kill(1);
+        mon.watch(0, 1);
+        assert!(matches!(
+            rxs[0].recv_timeout(std::time::Duration::from_secs(1)).unwrap(),
+            Envelope::PeerFailed { peer: 1 }
+        ));
+    }
+
+    #[test]
+    fn kill_is_idempotent() {
+        let (router, rxs) = Router::new(2);
+        let mon = Monitor::new(router, 0);
+        mon.watch(0, 1);
+        mon.kill(1);
+        mon.kill(1);
+        let _ = rxs[0].recv_timeout(std::time::Duration::from_secs(1)).unwrap();
+        // second kill produced no extra notification
+        assert!(rxs[0].try_recv().is_err());
+    }
+
+    #[test]
+    fn unwatched_peers_do_not_notify() {
+        let (router, rxs) = Router::new(2);
+        let mon = Monitor::new(router, 0);
+        mon.watch(0, 1);
+        mon.unwatch(0, 1);
+        mon.kill(1);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(rxs[0].try_recv().is_err());
+    }
+
+    #[test]
+    fn dead_set_queries() {
+        let (router, _rxs) = Router::new(3);
+        let mon = Monitor::new(router, 0);
+        mon.kill(2);
+        assert!(mon.is_dead(2));
+        assert!(!mon.is_dead(1));
+        assert_eq!(mon.dead_ranks(), vec![2]);
+    }
+}

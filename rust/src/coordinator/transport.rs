@@ -1,0 +1,79 @@
+//! In-process transport for the live engine: one mpsc mailbox per rank,
+//! a cloneable [`Router`] to address them.
+//!
+//! Fail-stop semantics fall out naturally: a dead worker's receiver is
+//! dropped, so sends to it complete and vanish (§3: "the send operation
+//! completes like a send operation to a live process").
+
+use crate::types::{Msg, Rank};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// Everything a worker can find in its mailbox.
+#[derive(Debug)]
+pub enum Envelope {
+    /// Protocol message from a peer.
+    Msg { from: Rank, msg: Msg },
+    /// Failure-monitor confirmation.
+    PeerFailed { peer: Rank },
+    /// Begin the collective (the `init_*` moment).
+    Start,
+    /// In-operational kill command (time-based injection).
+    Kill,
+    /// Engine shutdown after the collective completed.
+    Stop,
+}
+
+/// Shared, cloneable sender table.
+#[derive(Clone)]
+pub struct Router {
+    senders: Arc<Vec<Sender<Envelope>>>,
+}
+
+impl Router {
+    /// Build mailboxes for `n` ranks; returns the router and the per-rank
+    /// receivers (to be moved into the workers).
+    pub fn new(n: u32) -> (Router, Vec<Receiver<Envelope>>) {
+        let mut senders = Vec::with_capacity(n as usize);
+        let mut receivers = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        (Router { senders: Arc::new(senders) }, receivers)
+    }
+
+    pub fn n(&self) -> u32 {
+        self.senders.len() as u32
+    }
+
+    /// Send an envelope; silently absorbed if the destination is gone
+    /// (fail-stop: senders get no failure indication).
+    pub fn send(&self, to: Rank, env: Envelope) {
+        let _ = self.senders[to as usize].send(env);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_to_the_right_mailbox() {
+        let (router, rxs) = Router::new(3);
+        router.send(1, Envelope::Start);
+        router.send(2, Envelope::PeerFailed { peer: 0 });
+        assert!(matches!(rxs[1].try_recv().unwrap(), Envelope::Start));
+        assert!(matches!(rxs[2].try_recv().unwrap(), Envelope::PeerFailed { peer: 0 }));
+        assert!(rxs[0].try_recv().is_err());
+    }
+
+    #[test]
+    fn send_to_dropped_receiver_is_absorbed() {
+        let (router, rxs) = Router::new(2);
+        drop(rxs); // both workers "failed"
+        router.send(0, Envelope::Start); // must not panic
+        router.send(1, Envelope::Stop);
+    }
+}

@@ -1,0 +1,206 @@
+//! Worker: one OS thread per rank running a protocol state machine over
+//! the live transport. The same [`Protocol`] implementations the DES
+//! drives — only the [`Ctx`] differs.
+
+use super::monitor::Monitor;
+use super::transport::{Envelope, Router};
+use crate::collectives::{Ctx, Outcome, Protocol, Reducer};
+use crate::metrics::Metrics;
+use crate::types::{Msg, Rank, TimeNs, Value};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+/// What a worker reports upward.
+#[derive(Debug)]
+pub enum WorkerEvent {
+    /// A protocol delivery (`deliver_*`).
+    Delivered { rank: Rank, outcome: Outcome, at: TimeNs },
+    /// The worker exited (Stop, self-kill, or mailbox closed); carries
+    /// its local metrics for aggregation.
+    Exited { rank: Rank, metrics: Metrics },
+}
+
+pub struct WorkerConfig {
+    pub rank: Rank,
+    pub n: u32,
+    /// Kill after this many successful sends (in-op injection).
+    pub send_limit: Option<u32>,
+    /// Kill at this elapsed time (in-op injection).
+    pub kill_at: Option<TimeNs>,
+}
+
+struct WorkerCtx<'a> {
+    rank: Rank,
+    n: u32,
+    router: &'a Router,
+    monitor: &'a Monitor,
+    reducer: &'a dyn Reducer,
+    metrics: &'a mut Metrics,
+    events: &'a Sender<WorkerEvent>,
+    epoch_start: Instant,
+    timers: &'a mut Vec<(Instant, u64)>,
+    send_count: &'a mut u32,
+    send_limit: Option<u32>,
+    dying: &'a mut bool,
+}
+
+impl<'a> WorkerCtx<'a> {
+    fn now_ns(&self) -> TimeNs {
+        self.epoch_start.elapsed().as_nanos() as TimeNs
+    }
+}
+
+impl<'a> Ctx for WorkerCtx<'a> {
+    fn rank(&self) -> Rank {
+        self.rank
+    }
+    fn n(&self) -> u32 {
+        self.n
+    }
+    fn now(&self) -> TimeNs {
+        self.now_ns()
+    }
+    fn send(&mut self, to: Rank, msg: Msg) {
+        if *self.dying {
+            return;
+        }
+        if let Some(limit) = self.send_limit {
+            if *self.send_count >= limit {
+                // in-operational failure at the send boundary (§3)
+                *self.dying = true;
+                self.monitor.kill(self.rank);
+                return;
+            }
+        }
+        *self.send_count += 1;
+        self.metrics.on_send(msg.kind, msg.wire_bytes(), msg.finfo.wire_bytes());
+        self.router.send(to, Envelope::Msg { from: self.rank, msg });
+    }
+    fn watch(&mut self, peer: Rank) {
+        if !*self.dying {
+            self.monitor.watch(self.rank, peer);
+        }
+    }
+    fn unwatch(&mut self, peer: Rank) {
+        self.monitor.unwatch(self.rank, peer);
+    }
+    fn set_timer(&mut self, delay: TimeNs, token: u64) {
+        self.timers.push((Instant::now() + Duration::from_nanos(delay), token));
+    }
+    fn combine(&mut self, acc: &mut Value, other: &Value) {
+        self.reducer.combine(acc, other);
+    }
+    fn deliver(&mut self, out: Outcome) {
+        if *self.dying {
+            return;
+        }
+        let at = self.now_ns();
+        self.metrics.on_complete(self.rank, at);
+        let _ = self.events.send(WorkerEvent::Delivered { rank: self.rank, outcome: out, at });
+    }
+}
+
+/// Run one worker to completion. Designed to be spawned on its own
+/// thread by the engine; also callable inline from tests.
+pub fn run_worker(
+    cfg: WorkerConfig,
+    mut proto: Box<dyn Protocol>,
+    mailbox: Receiver<Envelope>,
+    router: Router,
+    monitor: Monitor,
+    reducer: Box<dyn Reducer>,
+    events: Sender<WorkerEvent>,
+) {
+    let epoch_start = Instant::now();
+    let mut metrics = Metrics::new();
+    let mut timers: Vec<(Instant, u64)> = Vec::new();
+    let mut send_count: u32 = 0;
+    let mut dying = false;
+    let kill_deadline = cfg.kill_at.map(|ns| epoch_start + Duration::from_nanos(ns));
+
+    macro_rules! ctx {
+        () => {
+            WorkerCtx {
+                rank: cfg.rank,
+                n: cfg.n,
+                router: &router,
+                monitor: &monitor,
+                reducer: reducer.as_ref(),
+                metrics: &mut metrics,
+                events: &events,
+                epoch_start,
+                timers: &mut timers,
+                send_count: &mut send_count,
+                send_limit: cfg.send_limit,
+                dying: &mut dying,
+            }
+        };
+    }
+
+    // start the protocol before touching the mailbox: peers may already
+    // have sent to us (all mailboxes exist before any worker spawns, so
+    // nothing can be lost — but an envelope must never arrive before
+    // on_start)
+    proto.on_start(&mut ctx!());
+
+    'main: loop {
+        if dying {
+            break;
+        }
+        // next wakeup: earliest timer or kill deadline
+        let mut deadline: Option<Instant> = timers.iter().map(|(d, _)| *d).min();
+        if let Some(k) = kill_deadline {
+            deadline = Some(deadline.map_or(k, |d| d.min(k)));
+        }
+        let timeout = deadline
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_millis(200));
+
+        match mailbox.recv_timeout(timeout) {
+            // legacy no-op: the worker starts its own protocol above
+            Ok(Envelope::Start) => {}
+            Ok(Envelope::Msg { from, msg }) => {
+                metrics.on_event();
+                proto.on_message(from, msg, &mut ctx!());
+            }
+            Ok(Envelope::PeerFailed { peer }) => {
+                metrics.on_event();
+                monitor.acknowledge(cfg.rank, peer);
+                proto.on_peer_failed(peer, &mut ctx!());
+            }
+            Ok(Envelope::Kill) => {
+                monitor.kill(cfg.rank);
+                break 'main;
+            }
+            Ok(Envelope::Stop) => break 'main,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => break 'main,
+        }
+
+        // injected time-based death
+        if let Some(k) = kill_deadline {
+            if Instant::now() >= k && !dying {
+                monitor.kill(cfg.rank);
+                break 'main;
+            }
+        }
+        // fire due timers
+        let now = Instant::now();
+        let mut due: Vec<u64> = Vec::new();
+        timers.retain(|(d, tok)| {
+            if *d <= now {
+                due.push(*tok);
+                false
+            } else {
+                true
+            }
+        });
+        for tok in due {
+            if !dying {
+                metrics.on_event();
+                proto.on_timer(tok, &mut ctx!());
+            }
+        }
+    }
+    let _ = events.send(WorkerEvent::Exited { rank: cfg.rank, metrics });
+}

@@ -1,0 +1,117 @@
+//! Failure-plan generation for experiments and property tests.
+//!
+//! Experiments sweep over *where* and *when* processes die; this module
+//! turns a seed + policy into a concrete `Vec<FailureSpec>`.
+
+use super::FailureSpec;
+use crate::prng::Pcg;
+use crate::types::Rank;
+
+/// How in-/pre-operational failures are mixed in a random plan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FailureMix {
+    /// All failures pre-operational.
+    AllPre,
+    /// All failures in-operational with a random send-count kill point in
+    /// `0..=max_sends`.
+    AllInOp { max_sends: u32 },
+    /// Each failure independently pre-operational with probability
+    /// `p_pre`, otherwise in-operational.
+    Mixed { p_pre: f64, max_sends: u32 },
+}
+
+/// Draw `k` distinct victims from `candidates` and assign kill points
+/// according to `mix`.
+pub fn random_plan(
+    rng: &mut Pcg,
+    candidates: &[Rank],
+    k: usize,
+    mix: FailureMix,
+) -> Vec<FailureSpec> {
+    assert!(k <= candidates.len(), "cannot fail {k} of {} candidates", candidates.len());
+    let idx = rng.choose_distinct(candidates.len() as u64, k);
+    idx.into_iter()
+        .map(|i| {
+            let rank = candidates[i as usize];
+            match mix {
+                FailureMix::AllPre => FailureSpec::Pre { rank },
+                FailureMix::AllInOp { max_sends } => {
+                    FailureSpec::AfterSends { rank, sends: rng.range(0, max_sends as u64) as u32 }
+                }
+                FailureMix::Mixed { p_pre, max_sends } => {
+                    if rng.bool(p_pre) {
+                        FailureSpec::Pre { rank }
+                    } else {
+                        FailureSpec::AfterSends {
+                            rank,
+                            sends: rng.range(0, max_sends as u64) as u32,
+                        }
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+/// All non-root ranks — the usual victim pool for reduce experiments
+/// (§4.3 assumes the reduce root does not fail).
+pub fn non_root_candidates(n: u32, root: Rank) -> Vec<Rank> {
+    (0..n).filter(|&r| r != root).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::failure::validate_plan;
+
+    #[test]
+    fn plans_are_valid_and_sized() {
+        let mut rng = Pcg::new(1);
+        for k in 0..5 {
+            let plan = random_plan(&mut rng, &non_root_candidates(16, 0), k, FailureMix::AllPre);
+            assert_eq!(plan.len(), k);
+            validate_plan(16, &plan).unwrap();
+            assert!(plan.iter().all(|s| s.rank() != 0));
+        }
+    }
+
+    #[test]
+    fn mixed_plans_contain_both_kinds_eventually() {
+        let mut rng = Pcg::new(2);
+        let mut pre = 0;
+        let mut inop = 0;
+        for _ in 0..100 {
+            for s in random_plan(
+                &mut rng,
+                &non_root_candidates(32, 0),
+                4,
+                FailureMix::Mixed { p_pre: 0.5, max_sends: 6 },
+            ) {
+                if s.is_pre_operational() {
+                    pre += 1;
+                } else {
+                    inop += 1;
+                }
+            }
+        }
+        assert!(pre > 50 && inop > 50, "pre={pre} inop={inop}");
+    }
+
+    #[test]
+    fn inop_kill_points_within_bound() {
+        let mut rng = Pcg::new(3);
+        for _ in 0..50 {
+            for s in random_plan(
+                &mut rng,
+                &non_root_candidates(8, 0),
+                3,
+                FailureMix::AllInOp { max_sends: 5 },
+            ) {
+                match s {
+                    FailureSpec::AfterSends { sends, .. } => assert!(sends <= 5),
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        }
+    }
+}

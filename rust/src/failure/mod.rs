@@ -1,0 +1,89 @@
+//! The fail-stop failure model of §3.
+//!
+//! Processes that fail stop sending messages; sends *to* a failed process
+//! complete normally (no error indication); the network itself is
+//! reliable (no loss, reordering, or corruption).
+//!
+//! A failure is either **pre-operational** (before the collective starts;
+//! the process never sends anything) or **in-operational** (during the
+//! operation). For in-operational failures the paper reasons about the
+//! exact message boundary a process reaches before dying ("If p fails
+//! before sending that message …", Thm 4 proof), so the injector supports
+//! *send-count* kill points in addition to virtual-time kill points.
+
+pub mod injector;
+pub mod monitor;
+
+use crate::types::{Rank, TimeNs};
+
+/// A single injected failure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureSpec {
+    /// Fail before the operation: the process never calls `init_reduce`
+    /// and sends nothing.
+    Pre { rank: Rank },
+    /// Fail in-operation after successfully sending `sends` messages;
+    /// the `sends+1`-th send is suppressed and the process is dead from
+    /// that point on.
+    AfterSends { rank: Rank, sends: u32 },
+    /// Fail in-operation at virtual time `at` (DES) / after `at` ns of
+    /// wall-clock (live engine).
+    AtTime { rank: Rank, at: TimeNs },
+}
+
+impl FailureSpec {
+    pub fn rank(&self) -> Rank {
+        match *self {
+            FailureSpec::Pre { rank }
+            | FailureSpec::AfterSends { rank, .. }
+            | FailureSpec::AtTime { rank, .. } => rank,
+        }
+    }
+
+    pub fn is_pre_operational(&self) -> bool {
+        matches!(self, FailureSpec::Pre { .. })
+    }
+}
+
+/// Validate a failure plan against an `(n, f)` configuration: at most one
+/// spec per rank; the theorems additionally assume at most `f` failures
+/// (callers exceeding `f` deliberately exercise the out-of-contract
+/// behaviour and skip this check).
+pub fn validate_plan(n: u32, specs: &[FailureSpec]) -> Result<(), String> {
+    let mut seen = vec![false; n as usize];
+    for s in specs {
+        let r = s.rank();
+        if r >= n {
+            return Err(format!("failure spec for rank {r} out of range (n={n})"));
+        }
+        if seen[r as usize] {
+            return Err(format!("duplicate failure spec for rank {r}"));
+        }
+        seen[r as usize] = true;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_validation_catches_duplicates_and_range() {
+        assert!(validate_plan(4, &[FailureSpec::Pre { rank: 1 }]).is_ok());
+        assert!(validate_plan(
+            4,
+            &[FailureSpec::Pre { rank: 1 }, FailureSpec::AfterSends { rank: 1, sends: 2 }]
+        )
+        .is_err());
+        assert!(validate_plan(4, &[FailureSpec::Pre { rank: 4 }]).is_err());
+    }
+
+    #[test]
+    fn spec_accessors() {
+        assert_eq!(FailureSpec::Pre { rank: 3 }.rank(), 3);
+        assert!(FailureSpec::Pre { rank: 3 }.is_pre_operational());
+        assert!(!FailureSpec::AfterSends { rank: 2, sends: 1 }.is_pre_operational());
+        assert_eq!(FailureSpec::AtTime { rank: 5, at: 100 }.rank(), 5);
+    }
+}

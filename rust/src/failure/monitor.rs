@@ -1,0 +1,170 @@
+//! Failure-monitor abstraction.
+//!
+//! §4.2: "all live processes will time out on the respective receive
+//! operations and will confirm the sender to have failed with the
+//! respective failure monitor. … How this is done is independent of the
+//! communication algorithm. Timeouts are used here."
+//!
+//! Protocols therefore never see raw timeouts; they *watch* a peer they
+//! expect a message from and are told `on_peer_failed(peer)` once the
+//! monitor confirms the peer is dead. Under fail-stop with a reliable
+//! network this yields a perfect failure detector: no live process is
+//! ever falsely confirmed dead, and every dead peer being watched is
+//! eventually confirmed.
+//!
+//! The DES realizes the monitor with an oracle + configurable detection
+//! latency (standing in for a timeout that always fires after the real
+//! failure); the live engine realizes it with a shared registry updated
+//! by the failure injector plus an optional timeout fallback
+//! ([`crate::coordinator::monitor`]).
+
+use crate::types::Rank;
+use std::collections::{HashMap, HashSet};
+
+/// Watch bookkeeping shared by both executors: who is watching whom, with
+/// counted subscriptions (a protocol may watch the same peer once per
+/// expected message).
+#[derive(Clone, Debug, Default)]
+pub struct WatchTable {
+    /// watched peer -> (watcher -> subscription count)
+    watchers: HashMap<Rank, HashMap<Rank, u32>>,
+}
+
+impl WatchTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `watcher` watching `peer`. Returns the new count.
+    pub fn watch(&mut self, watcher: Rank, peer: Rank) -> u32 {
+        let c = self.watchers.entry(peer).or_default().entry(watcher).or_insert(0);
+        *c += 1;
+        *c
+    }
+
+    /// Drop one subscription of `watcher` on `peer`. Returns true if a
+    /// subscription existed.
+    pub fn unwatch(&mut self, watcher: Rank, peer: Rank) -> bool {
+        if let Some(m) = self.watchers.get_mut(&peer) {
+            if let Some(c) = m.get_mut(&watcher) {
+                *c -= 1;
+                if *c == 0 {
+                    m.remove(&watcher);
+                }
+                if m.is_empty() {
+                    self.watchers.remove(&peer);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Is `watcher` currently watching `peer`?
+    pub fn is_watching(&self, watcher: Rank, peer: Rank) -> bool {
+        self.watchers.get(&peer).is_some_and(|m| m.contains_key(&watcher))
+    }
+
+    /// All current watchers of `peer` (used when `peer` dies).
+    pub fn watchers_of(&self, peer: Rank) -> Vec<Rank> {
+        self.watchers
+            .get(&peer)
+            .map(|m| {
+                let mut v: Vec<Rank> = m.keys().copied().collect();
+                v.sort_unstable();
+                v
+            })
+            .unwrap_or_default()
+    }
+
+    /// Remove *all* subscriptions of `watcher` on `peer` (used when the
+    /// notification is delivered: one notification resolves every pending
+    /// expectation, as the peer will never send again).
+    pub fn clear(&mut self, watcher: Rank, peer: Rank) {
+        if let Some(m) = self.watchers.get_mut(&peer) {
+            m.remove(&watcher);
+            if m.is_empty() {
+                self.watchers.remove(&peer);
+            }
+        }
+    }
+}
+
+/// Dead-set oracle shared by executors.
+#[derive(Clone, Debug, Default)]
+pub struct DeadSet {
+    dead: HashSet<Rank>,
+}
+
+impl DeadSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn mark_dead(&mut self, r: Rank) -> bool {
+        self.dead.insert(r)
+    }
+
+    pub fn is_dead(&self, r: Rank) -> bool {
+        self.dead.contains(&r)
+    }
+
+    pub fn dead_ranks(&self) -> Vec<Rank> {
+        let mut v: Vec<Rank> = self.dead.iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn count(&self) -> usize {
+        self.dead.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counted_subscriptions() {
+        let mut w = WatchTable::new();
+        assert_eq!(w.watch(1, 2), 1);
+        assert_eq!(w.watch(1, 2), 2);
+        assert!(w.is_watching(1, 2));
+        assert!(w.unwatch(1, 2));
+        assert!(w.is_watching(1, 2)); // one subscription left
+        assert!(w.unwatch(1, 2));
+        assert!(!w.is_watching(1, 2));
+        assert!(!w.unwatch(1, 2));
+    }
+
+    #[test]
+    fn watchers_of_lists_all() {
+        let mut w = WatchTable::new();
+        w.watch(1, 9);
+        w.watch(5, 9);
+        w.watch(3, 9);
+        assert_eq!(w.watchers_of(9), vec![1, 3, 5]);
+        w.clear(5, 9);
+        assert_eq!(w.watchers_of(9), vec![1, 3]);
+    }
+
+    #[test]
+    fn clear_removes_all_subscriptions() {
+        let mut w = WatchTable::new();
+        w.watch(1, 2);
+        w.watch(1, 2);
+        w.clear(1, 2);
+        assert!(!w.is_watching(1, 2));
+    }
+
+    #[test]
+    fn dead_set_idempotent() {
+        let mut d = DeadSet::new();
+        assert!(d.mark_dead(3));
+        assert!(!d.mark_dead(3));
+        assert!(d.is_dead(3));
+        assert!(!d.is_dead(4));
+        assert_eq!(d.dead_ranks(), vec![3]);
+        assert_eq!(d.count(), 1);
+    }
+}

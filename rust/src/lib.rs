@@ -1,0 +1,70 @@
+//! # ftcoll — fault-tolerant Reduce and Allreduce based on correction
+//!
+//! A reproduction of *"Fault-tolerant Reduce and Allreduce operations based
+//! on correction"* (Martin Küttler, Hermann Härtig, TU Dresden, CS.DC 2026)
+//! as a production-shaped three-layer stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   up-correction phase ([`collectives::up_correction`]), the I(f)-tree
+//!   fault-tolerant reduce ([`collectives::reduce`]), the corrected-tree
+//!   broadcast substrate ([`collectives::broadcast`]) and the root-rotating
+//!   allreduce ([`collectives::allreduce`]), written as executor-agnostic
+//!   event-driven state machines. Two executors drive them: a deterministic
+//!   discrete-event simulator ([`sim`]) and a live multi-threaded
+//!   message-passing engine ([`coordinator`]).
+//! * **Layer 2 (python/compile/model.py)** — the JAX compute graphs (k-way
+//!   combine, data-parallel transformer train step) lowered once, AOT, to
+//!   HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas combine kernels that
+//!   the L2 graphs call; interpret=True on CPU, correctness pinned against
+//!   a pure-jnp oracle.
+//!
+//! At run time the rust binary loads the artifacts through the PJRT C API
+//! ([`runtime`]); Python never executes on the request path.
+//!
+//! ## Quick start
+//!
+//! (`no_run`: rustdoc test binaries don't inherit the cargo-config
+//! rpath for libxla_extension; the same scenario runs for real in
+//! rust/tests/paper_examples.rs and examples/quickstart.rs.)
+//!
+//! ```no_run
+//! use ftcoll::prelude::*;
+//!
+//! // 7 processes, tolerate 1 failure, rank 1 failed before the operation
+//! // (the exact scenario of Figures 1-2 of the paper).
+//! let cfg = SimConfig::new(7, 1)
+//!     .payload(PayloadKind::RankValue)
+//!     .failure(FailureSpec::Pre { rank: 1 });
+//! let report = run_reduce(&cfg);
+//! let v = report.root_value().expect("root delivered");
+//! assert_eq!(v.as_f64_scalar(), 0.0 + 2.0 + 3.0 + 4.0 + 5.0 + 6.0);
+//! ```
+
+pub mod benchlib;
+pub mod cli;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod failure;
+pub mod metrics;
+pub mod prng;
+pub mod proptest_lite;
+pub mod runtime;
+pub mod sim;
+pub mod topology;
+pub mod trace;
+pub mod types;
+
+pub mod prelude {
+    //! Convenience re-exports for examples and tests.
+    pub use crate::collectives::allreduce::AllreduceConfig;
+    pub use crate::collectives::failure_info::{FailureInfo, Scheme};
+    pub use crate::collectives::reduce::ReduceConfig;
+    pub use crate::collectives::{CollectiveKind, Outcome, ReduceOp};
+    pub use crate::config::{Config, PayloadKind};
+    pub use crate::failure::FailureSpec;
+    pub use crate::sim::net::NetModel;
+    pub use crate::sim::{run_allreduce, run_broadcast, run_reduce, RunReport, Sim, SimConfig};
+    pub use crate::types::{Rank, Value};
+}

@@ -1,0 +1,281 @@
+//! `ftcoll` — CLI for the fault-tolerant collectives stack.
+//!
+//! Subcommands:
+//!   reduce|allreduce|broadcast   simulate one collective (DES)
+//!   baseline                     simulate a baseline algorithm
+//!   live                         run on the live threaded engine
+//!   topology                     inspect groups/I(f)-tree for (n, f)
+//!   artifacts                    list + warm the AOT artifacts
+//!   help
+//!
+//! Common options: --n --f --root --scheme list|countbit|bit
+//!   --payload rank|onehot|vec:<len> --fail pre:R|sends:R:K|time:R:NS
+//!   (repeatable via comma list) --trace --seed S
+
+use ftcoll::cli::Args;
+use ftcoll::collectives::Outcome;
+use ftcoll::config::Config;
+use ftcoll::coordinator::{live_allreduce, live_reduce, EngineConfig};
+use ftcoll::prelude::*;
+use ftcoll::sim;
+use ftcoll::topology::{IfTree, UpCorrectionGroups};
+use ftcoll::types::MsgKind;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_str() {
+        "reduce" | "allreduce" | "broadcast" => run_sim(&args),
+        "baseline" => run_baseline(&args),
+        "live" => run_live_cmd(&args),
+        "topology" => run_topology(&args),
+        "artifacts" => run_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand `{other}`; try `ftcoll help`")),
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e}");
+            1
+        },
+        |()| 0,
+    );
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+ftcoll — fault-tolerant reduce/allreduce based on correction
+
+USAGE: ftcoll <subcommand> [options]
+
+  reduce     --n 16 --f 2 [--root 0] [--scheme list|countbit|bit]
+             [--payload rank|onehot|vec:256] [--fail pre:1,sends:3:2]
+             [--trace] — simulate fault-tolerant reduce
+  allreduce  same options — simulate fault-tolerant allreduce
+  broadcast  same options — simulate corrected-tree broadcast
+  baseline   --algo tree|flat|ring|gossip + same options
+  live       --algo reduce|allreduce [--pjrt] — threaded engine run
+  topology   --n 16 --f 2 — print up-correction groups and I(f)-tree
+  artifacts  [--dir artifacts] — list and compile the AOT artifacts
+";
+
+fn build_config(args: &Args) -> Result<Config, String> {
+    let mut cfg = Config::default();
+    if let Some(path) = args.get("config") {
+        let body = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        cfg = Config::parse(&body)?;
+    }
+    for key in ["n", "f", "root", "scheme", "op", "payload", "seed"] {
+        if let Some(v) = args.get(key) {
+            cfg.set(key, v)?;
+        }
+    }
+    if let Some(v) = args.get("fail") {
+        for part in v.split(',') {
+            cfg.set("fail", part)?;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn to_sim(cfg: &Config, trace: bool) -> SimConfig {
+    let mut s = SimConfig::new(cfg.n, cfg.f)
+        .root(cfg.root)
+        .scheme(cfg.scheme)
+        .op(cfg.op)
+        .payload(cfg.payload)
+        .failures(cfg.failures.clone())
+        .tracing(trace);
+    s.seed = cfg.seed;
+    s
+}
+
+fn print_report(rep: &sim::RunReport) {
+    if rep.trace.is_enabled() {
+        for line in rep.trace.to_json().lines() {
+            println!("{line}");
+        }
+    }
+    for (kind, label) in MsgKind::ALL.iter().map(|k| (k, k.name())) {
+        let m = rep.metrics.msgs(*kind);
+        if m > 0 {
+            println!("{label:<18} {m:>8} msgs  {:>10} bytes", rep.metrics.bytes(*kind));
+        }
+    }
+    println!("total              {:>8} msgs  {:>10} bytes", rep.metrics.total_msgs(), rep.metrics.total_bytes());
+    println!("simulated time     {:>8} ns", rep.final_time);
+    println!("dead ranks         {:?}", rep.dead);
+    for r in 0..rep.n {
+        for o in &rep.outcomes[r as usize] {
+            match o {
+                Outcome::ReduceRoot { value, known_failed } => println!(
+                    "rank {r}: reduce value (len {}) {:?}; known failed {known_failed:?}",
+                    value.len(),
+                    preview(value)
+                ),
+                Outcome::Allreduce { value, attempts } if r == 0 || r < 3 => println!(
+                    "rank {r}: allreduce value {:?} after {attempts} attempt(s)",
+                    preview(value)
+                ),
+                Outcome::Error(e) => println!("rank {r}: ERROR {e}"),
+                _ => {}
+            }
+        }
+    }
+}
+
+fn preview(v: &ftcoll::types::Value) -> String {
+    match v {
+        v if v.len() == 1 => format!("{}", v.as_f64_scalar()),
+        ftcoll::types::Value::F32(x) => format!("[{}, {}, ...]", x[0], x[1]),
+        ftcoll::types::Value::F64(x) => format!("[{}, {}, ...]", x[0], x[1]),
+        ftcoll::types::Value::I64(x) => format!("[{}, {}, ...]", x[0], x[1]),
+    }
+}
+
+fn run_sim(args: &Args) -> Result<(), String> {
+    let trace = args.flag("trace");
+    let cfg = build_config(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+    let sc = to_sim(&cfg, trace);
+    let rep = match args.subcommand.as_str() {
+        "reduce" => sim::run_reduce(&sc),
+        "allreduce" => sim::run_allreduce(&sc),
+        "broadcast" => sim::run_broadcast(&sc),
+        _ => unreachable!(),
+    };
+    print_report(&rep);
+    Ok(())
+}
+
+fn run_baseline(args: &Args) -> Result<(), String> {
+    let algo = args.get("algo").unwrap_or("tree").to_string();
+    let trace = args.flag("trace");
+    let cfg = build_config(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+    let sc = to_sim(&cfg, trace);
+    let rep = match algo.as_str() {
+        "tree" => sim::run_baseline_tree_reduce(&sc),
+        "flat" => sim::run_baseline_flat_gather(&sc),
+        "ring" => sim::run_baseline_ring_allreduce(&sc),
+        "gossip" => sim::run_baseline_gossip(
+            &sc,
+            ftcoll::collectives::baseline::GossipConfig::new(cfg.n, cfg.f),
+        ),
+        other => return Err(format!("unknown baseline `{other}`")),
+    };
+    print_report(&rep);
+    Ok(())
+}
+
+fn run_live_cmd(args: &Args) -> Result<(), String> {
+    let algo = args.get("algo").unwrap_or("reduce").to_string();
+    let pjrt = args.flag("pjrt");
+    let cfg = build_config(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+    let mut ecfg = EngineConfig::new(cfg.n, cfg.f);
+    ecfg.scheme = cfg.scheme;
+    ecfg.payload = cfg.payload;
+    ecfg.failures = cfg.failures.clone();
+    if pjrt {
+        let svc = ftcoll::runtime::ComputeService::start(ftcoll::runtime::default_artifact_dir())?;
+        ecfg.reducer = ftcoll::coordinator::ReducerKind::Pjrt {
+            handle: svc.handle(),
+            op: cfg.op,
+        };
+        let rep = match algo.as_str() {
+            "reduce" => live_reduce(&ecfg, cfg.root),
+            "allreduce" => live_allreduce(&ecfg),
+            other => return Err(format!("unknown live algo `{other}`")),
+        };
+        print_live(&rep);
+        return Ok(());
+    }
+    let rep = match algo.as_str() {
+        "reduce" => live_reduce(&ecfg, cfg.root),
+        "allreduce" => live_allreduce(&ecfg),
+        other => return Err(format!("unknown live algo `{other}`")),
+    };
+    print_live(&rep);
+    Ok(())
+}
+
+fn print_live(rep: &ftcoll::coordinator::LiveReport) {
+    println!(
+        "live run: {} ranks, {} msgs, {:?} elapsed",
+        rep.n,
+        rep.metrics.total_msgs(),
+        rep.elapsed
+    );
+    for r in 0..rep.n {
+        if let Some(o) = &rep.outcomes[r as usize] {
+            match o {
+                Outcome::ReduceRoot { value, .. } => {
+                    println!("rank {r}: root value {}", preview(value))
+                }
+                Outcome::Allreduce { value, attempts } => {
+                    println!("rank {r}: allreduce {} (attempts {attempts})", preview(value))
+                }
+                Outcome::Error(e) => println!("rank {r}: ERROR {e}"),
+                _ => {}
+            }
+        }
+    }
+}
+
+fn run_topology(args: &Args) -> Result<(), String> {
+    let cfg = build_config(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+    let (n, f) = (cfg.n, cfg.f);
+    let groups = UpCorrectionGroups::new(n, f);
+    let tree = IfTree::new(n, f);
+    println!("n={n} f={f}: {} up-correction groups (a={}), root {} grouped",
+        groups.num_groups(),
+        groups.a(),
+        if groups.root_in_group() { "IS" } else { "is NOT" });
+    for g in 0..groups.num_groups() {
+        println!("  group {g}: {:?}", groups.members(g));
+    }
+    println!("I({f})-tree: {} subtrees, depth {}", tree.num_subtrees(), tree.depth());
+    for k in 1..=tree.num_subtrees() {
+        println!("  subtree {k}: {:?}", tree.subtree_members(k));
+    }
+    println!("Theorem 5 failure-free messages: up-correction {} + tree {}",
+        groups.failure_free_messages(), n - 1);
+    Ok(())
+}
+
+fn run_artifacts(args: &Args) -> Result<(), String> {
+    let dir = args
+        .get("dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(ftcoll::runtime::default_artifact_dir);
+    args.finish().map_err(|e| e.to_string())?;
+    let mut exec = ftcoll::runtime::Executor::new(&dir).map_err(|e| format!("{e:#}"))?;
+    println!("platform: {}", exec.platform());
+    let names: Vec<String> = exec.registry().names().map(String::from).collect();
+    for name in names {
+        let spec = exec.registry().get(&name).unwrap();
+        let sig = format!(
+            "({}) -> ({})",
+            spec.inputs.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", "),
+            spec.outputs.iter().map(|s| s.to_string()).collect::<Vec<_>>().join(", ")
+        );
+        match exec.warmup(&name) {
+            Ok(Some(ns)) => println!("{name:<28} {sig:<60} compiled {:.2}s", ns as f64 / 1e9),
+            Ok(None) => println!("{name:<28} {sig:<60} cached"),
+            Err(e) => println!("{name:<28} FAILED: {e:#}"),
+        }
+    }
+    Ok(())
+}

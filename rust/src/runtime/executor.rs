@@ -1,0 +1,241 @@
+//! PJRT executor: compiles HLO-text artifacts once and executes them
+//! with typed host inputs. Adapted from /opt/xla-example/load_hlo.rs —
+//! HLO *text* is the interchange format (the 0.5.1 text parser reassigns
+//! the 64-bit instruction ids jax ≥ 0.5 emits, which the proto path
+//! rejects).
+
+use super::registry::Registry;
+use super::spec::{DType, TensorSpec};
+use crate::collectives::ReduceOp;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A typed host-side input for an artifact call.
+#[derive(Clone, Debug)]
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl<'a> Input<'a> {
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        match self {
+            Input::F32(v) => spec.dtype == DType::F32 && v.len() == spec.elements(),
+            Input::I32(v) => spec.dtype == DType::I32 && v.len() == spec.elements(),
+            Input::ScalarF32(_) => spec.dtype == DType::F32 && spec.is_scalar(),
+            Input::ScalarI32(_) => spec.dtype == DType::I32 && spec.is_scalar(),
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Input::F32(v) => xla::Literal::vec1(v),
+            Input::I32(v) => xla::Literal::vec1(v),
+            Input::ScalarF32(x) => return Ok(xla::Literal::scalar(*x)),
+            Input::ScalarI32(x) => return Ok(xla::Literal::scalar(*x)),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+}
+
+/// One typed output.
+#[derive(Clone, Debug)]
+pub enum Output {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Output {
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Output::F32(v) => v,
+            other => panic!("expected f32 output, got {other:?}"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        let v = self.as_f32();
+        assert_eq!(v.len(), 1, "expected scalar output");
+        v[0]
+    }
+}
+
+/// Compile-once / execute-many PJRT wrapper around the artifact registry.
+pub struct Executor {
+    registry: Registry,
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    /// Create a CPU PJRT client over `dir`'s manifest. Artifacts are
+    /// compiled lazily on first call (tr_* take ~seconds each).
+    pub fn new(dir: &Path) -> Result<Executor> {
+        let registry = Registry::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Executor { registry, client, compiled: HashMap::new() })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Ensure `name` is compiled; returns compile time in ns when a
+    /// compilation actually happened.
+    pub fn warmup(&mut self, name: &str) -> Result<Option<u64>> {
+        if self.compiled.contains_key(name) {
+            return Ok(None);
+        }
+        let spec =
+            self.registry.get(name).ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).with_context(|| format!("compiling `{name}`"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(Some(t0.elapsed().as_nanos() as u64))
+    }
+
+    /// Execute artifact `name` with `inputs`, validating the signature.
+    pub fn execute(&mut self, name: &str, inputs: &[Input]) -> Result<Vec<Output>> {
+        self.warmup(name)?;
+        let spec = self.registry.get(name).unwrap().clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("`{name}` takes {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (input, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !input.matches(ispec) {
+                bail!("`{name}` input {i} mismatch: expected {ispec}, got {input:?}");
+            }
+            literals.push(input.to_literal(ispec)?);
+        }
+        let exe = self.compiled.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        // aot.py lowers with return_tuple=True: one tuple result
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!("`{name}` returned {} outputs, expected {}", parts.len(), spec.outputs.len());
+        }
+        parts
+            .into_iter()
+            .zip(&spec.outputs)
+            .map(|(lit, ospec)| match ospec.dtype {
+                DType::F32 => Ok(Output::F32(lit.to_vec::<f32>()?)),
+                DType::I32 => Ok(Output::I32(lit.to_vec::<i32>()?)),
+                other => bail!("unsupported output dtype {other:?}"),
+            })
+            .collect()
+    }
+
+    /// 2-way combine of f32 payloads through the best covering artifact,
+    /// padding with the op's identity element. `acc ⊕= other`.
+    pub fn combine2_f32(&mut self, op: ReduceOp, acc: &mut Vec<f32>, other: &[f32]) -> Result<()> {
+        assert_eq!(acc.len(), other.len(), "payload length mismatch");
+        let len = acc.len();
+        let spec = self
+            .registry
+            .combine2_for(op, len)
+            .ok_or_else(|| anyhow!("no combine2_{} artifact covers length {len}", op.name()))?;
+        let d = spec.inputs[0].elements();
+        let name = spec.name.clone();
+        let ident = identity(op);
+        let mut a = std::mem::take(acc);
+        a.resize(d, ident);
+        let mut b = other.to_vec();
+        b.resize(d, ident);
+        let out = self.execute(&name, &[Input::F32(&a), Input::F32(&b)])?;
+        let mut v = match out.into_iter().next().unwrap() {
+            Output::F32(v) => v,
+            other => bail!("combine returned {other:?}"),
+        };
+        v.truncate(len);
+        *acc = v;
+        Ok(())
+    }
+
+    /// k-way combine: folds `rows` (each length `len`) down to one
+    /// vector using the combinek artifact where possible, falling back
+    /// to chained 2-way combines.
+    pub fn combinek_f32(&mut self, op: ReduceOp, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
+        assert!(!rows.is_empty());
+        let len = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == len));
+        if rows.len() == 1 {
+            return Ok(rows[0].clone());
+        }
+        if let Some((k, spec)) = self.registry.combinek_for(op, len) {
+            if rows.len() <= k {
+                let d = spec.inputs[0].dims[1];
+                let name = spec.name.clone();
+                let ident = identity(op);
+                // pack [k, d]: real rows then identity rows
+                let mut stack = vec![ident; k * d];
+                for (i, row) in rows.iter().enumerate() {
+                    stack[i * d..i * d + len].copy_from_slice(row);
+                }
+                let out = self.execute(&name, &[Input::F32(&stack)])?;
+                let mut v = match out.into_iter().next().unwrap() {
+                    Output::F32(v) => v,
+                    other => bail!("combinek returned {other:?}"),
+                };
+                v.truncate(len);
+                return Ok(v);
+            }
+        }
+        // fallback: chained 2-way
+        let mut acc = rows[0].clone();
+        for row in &rows[1..] {
+            self.combine2_f32(op, &mut acc, row)?;
+        }
+        Ok(acc)
+    }
+}
+
+/// Identity element of an op (used for padding).
+pub fn identity(op: ReduceOp) -> f32 {
+    match op {
+        ReduceOp::Sum => 0.0,
+        ReduceOp::Max => f32::NEG_INFINITY,
+        ReduceOp::Min => f32::INFINITY,
+        ReduceOp::Prod => 1.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identities() {
+        assert_eq!(identity(ReduceOp::Sum), 0.0);
+        assert_eq!(identity(ReduceOp::Prod), 1.0);
+        assert!(identity(ReduceOp::Max).is_infinite());
+        assert!(identity(ReduceOp::Min).is_infinite());
+    }
+
+    #[test]
+    fn input_spec_matching() {
+        let f1024 = TensorSpec::parse("f32[1024]").unwrap();
+        let i_scalar = TensorSpec::parse("i32[]").unwrap();
+        assert!(Input::F32(&vec![0.0; 1024]).matches(&f1024));
+        assert!(!Input::F32(&vec![0.0; 4]).matches(&f1024));
+        assert!(Input::ScalarI32(3).matches(&i_scalar));
+        assert!(!Input::ScalarF32(3.0).matches(&i_scalar));
+    }
+
+    // execution against real artifacts lives in rust/tests/runtime_pjrt.rs
+}

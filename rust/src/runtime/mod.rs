@@ -1,0 +1,28 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the rust hot path.
+//! Python never runs at request time — the manifest + HLO text files are
+//! the entire interface between the layers.
+//!
+//! * [`spec`] — tensor/artifact signature types (manifest grammar),
+//! * [`registry`] — manifest.tsv parsing and artifact lookup,
+//! * [`executor`] — PJRT client wrapper: compile once, execute many,
+//! * [`service`] — a dedicated compute thread owning the executor, plus
+//!   [`service::PjrtReducer`], the drop-in [`crate::collectives::Reducer`]
+//!   backed by the combine artifacts.
+
+pub mod executor;
+pub mod registry;
+pub mod service;
+pub mod spec;
+
+pub use executor::Executor;
+pub use registry::Registry;
+pub use service::{ComputeHandle, ComputeService, PjrtReducer};
+pub use spec::{ArtifactSpec, DType, TensorSpec};
+
+/// Default artifact directory, overridable with `FTCOLL_ARTIFACTS`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("FTCOLL_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,182 @@
+//! Artifact registry: parses `artifacts/manifest.tsv` and answers
+//! "which artifact serves this (op, payload-length) pair".
+//!
+//! Combine artifacts are built for a fixed set of payload lengths
+//! (`COMBINE_DIMS` in aot.py, plus the training gradient length); the
+//! registry picks the smallest artifact whose dimension covers a request
+//! and the executor pads with the op's identity element — exactly the
+//! padding scheme the kernels themselves use for ragged lengths.
+
+use super::spec::ArtifactSpec;
+use crate::collectives::ReduceOp;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug)]
+pub struct Registry {
+    dir: PathBuf,
+    by_name: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Registry, String> {
+        let manifest = dir.join("manifest.tsv");
+        let body = std::fs::read_to_string(&manifest)
+            .map_err(|e| format!("cannot read {}: {e} — run `make artifacts`", manifest.display()))?;
+        let mut by_name = BTreeMap::new();
+        for (i, row) in body.lines().enumerate() {
+            if row.trim().is_empty() {
+                continue;
+            }
+            let spec = ArtifactSpec::parse_row(dir, row)
+                .map_err(|e| format!("{} line {}: {e}", manifest.display(), i + 1))?;
+            if by_name.insert(spec.name.clone(), spec).is_some() {
+                return Err(format!("duplicate artifact name at line {}", i + 1));
+            }
+        }
+        if by_name.is_empty() {
+            return Err(format!("{} declares no artifacts", manifest.display()));
+        }
+        Ok(Registry { dir: dir.to_path_buf(), by_name })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// The 2-way combine artifact for `op` covering payload length
+    /// `len`: smallest `combine2_<op>_f32_<d>` with `d >= len`.
+    pub fn combine2_for(&self, op: ReduceOp, len: usize) -> Option<&ArtifactSpec> {
+        let prefix = format!("combine2_{}_f32_", op.name());
+        self.by_name
+            .iter()
+            .filter_map(|(name, spec)| {
+                let d: usize = name.strip_prefix(&prefix)?.parse().ok()?;
+                (d >= len).then_some((d, spec))
+            })
+            .min_by_key(|(d, _)| *d)
+            .map(|(_, spec)| spec)
+    }
+
+    /// The k-way combine artifact (`combinek<k>_<op>_f32_<d>`) covering
+    /// `len`, together with its k.
+    pub fn combinek_for(&self, op: ReduceOp, len: usize) -> Option<(usize, &ArtifactSpec)> {
+        let prefix = format!("combinek");
+        self.by_name
+            .iter()
+            .filter_map(|(name, spec)| {
+                let rest = name.strip_prefix(&prefix)?;
+                let (k_str, rest) = rest.split_once('_')?;
+                let k: usize = k_str.parse().ok()?;
+                let rest = rest.strip_prefix(op.name())?.strip_prefix("_f32_")?;
+                let d: usize = rest.parse().ok()?;
+                (d >= len).then_some((k, d, spec))
+            })
+            .min_by_key(|(_, d, _)| *d)
+            .map(|(k, _, spec)| (k, spec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_registry() -> (tempdir::TempDirGuard, Registry) {
+        let dir = tempdir::tmp("ftcoll-registry-test");
+        let mut f = std::fs::File::create(dir.path().join("manifest.tsv")).unwrap();
+        writeln!(f, "combine2_sum_f32_1024\ta.hlo.txt\tin:f32[1024];f32[1024]\tout:f32[1024]")
+            .unwrap();
+        writeln!(
+            f,
+            "combine2_sum_f32_16384\tb.hlo.txt\tin:f32[16384];f32[16384]\tout:f32[16384]"
+        )
+        .unwrap();
+        writeln!(f, "combinek8_sum_f32_1024\tc.hlo.txt\tin:f32[8,1024]\tout:f32[1024]").unwrap();
+        let reg = Registry::load(dir.path()).unwrap();
+        (dir, reg)
+    }
+
+    /// minimal self-cleaning tempdir (no tempfile crate offline)
+    mod tempdir {
+        pub struct TempDirGuard(std::path::PathBuf);
+        impl TempDirGuard {
+            pub fn path(&self) -> &std::path::Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDirGuard {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+        pub fn tmp(prefix: &str) -> TempDirGuard {
+            let p = std::env::temp_dir().join(format!(
+                "{prefix}-{}-{:?}",
+                std::process::id(),
+                std::thread::current().id()
+            ));
+            std::fs::create_dir_all(&p).unwrap();
+            TempDirGuard(p)
+        }
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let (_g, reg) = fake_registry();
+        assert_eq!(reg.len(), 3);
+        assert!(reg.get("combine2_sum_f32_1024").is_some());
+        assert!(reg.get("nope").is_none());
+    }
+
+    #[test]
+    fn combine2_picks_smallest_covering_dim() {
+        let (_g, reg) = fake_registry();
+        assert_eq!(
+            reg.combine2_for(ReduceOp::Sum, 100).unwrap().name,
+            "combine2_sum_f32_1024"
+        );
+        assert_eq!(
+            reg.combine2_for(ReduceOp::Sum, 1024).unwrap().name,
+            "combine2_sum_f32_1024"
+        );
+        assert_eq!(
+            reg.combine2_for(ReduceOp::Sum, 1025).unwrap().name,
+            "combine2_sum_f32_16384"
+        );
+        assert!(reg.combine2_for(ReduceOp::Sum, 1 << 20).is_none());
+        assert!(reg.combine2_for(ReduceOp::Max, 10).is_none());
+    }
+
+    #[test]
+    fn combinek_lookup_parses_k() {
+        let (_g, reg) = fake_registry();
+        let (k, spec) = reg.combinek_for(ReduceOp::Sum, 512).unwrap();
+        assert_eq!(k, 8);
+        assert_eq!(spec.name, "combinek8_sum_f32_1024");
+        assert!(reg.combinek_for(ReduceOp::Sum, 4096).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = Registry::load(std::path::Path::new("/nonexistent-xyz")).unwrap_err();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Compute service: a dedicated thread owning the PJRT [`Executor`],
+//! serving combine/execute requests over channels.
+//!
+//! Rationale: the xla crate's client wraps C++ state with no documented
+//! thread-safety, and a real deployment serializes device access anyway.
+//! Workers of the live engine talk to the device through cloneable
+//! [`ComputeHandle`]s; [`PjrtReducer`] adapts a handle to the
+//! [`Reducer`] trait so the *same* protocol state machines run unchanged
+//! with native or PJRT-backed reduction.
+
+use super::executor::{Executor, Input, Output};
+use crate::collectives::{Reducer, ReduceOp};
+use crate::types::Value;
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// A host-owned input (the channel boundary cannot borrow).
+#[derive(Clone, Debug)]
+pub enum OwnedInput {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+impl OwnedInput {
+    fn as_input(&self) -> Input<'_> {
+        match self {
+            OwnedInput::F32(v) => Input::F32(v),
+            OwnedInput::I32(v) => Input::I32(v),
+            OwnedInput::ScalarF32(x) => Input::ScalarF32(*x),
+            OwnedInput::ScalarI32(x) => Input::ScalarI32(*x),
+        }
+    }
+}
+
+enum Req {
+    Combine2 {
+        op: ReduceOp,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        resp: Sender<Result<Vec<f32>, String>>,
+    },
+    Combinek {
+        op: ReduceOp,
+        rows: Vec<Vec<f32>>,
+        resp: Sender<Result<Vec<f32>, String>>,
+    },
+    Execute {
+        name: String,
+        inputs: Vec<OwnedInput>,
+        resp: Sender<Result<Vec<Output>, String>>,
+    },
+    Warmup {
+        name: String,
+        resp: Sender<Result<Option<u64>, String>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the compute thread.
+pub struct ComputeHandle {
+    tx: Mutex<Sender<Req>>,
+}
+
+impl Clone for ComputeHandle {
+    fn clone(&self) -> Self {
+        ComputeHandle { tx: Mutex::new(self.tx.lock().unwrap().clone()) }
+    }
+}
+
+impl ComputeHandle {
+    fn request<T>(&self, mk: impl FnOnce(Sender<Result<T, String>>) -> Req) -> Result<T, String> {
+        let (resp_tx, resp_rx) = channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(mk(resp_tx))
+            .map_err(|_| "compute service is down".to_string())?;
+        resp_rx.recv().map_err(|_| "compute service dropped the request".to_string())?
+    }
+
+    pub fn combine2(&self, op: ReduceOp, a: Vec<f32>, b: Vec<f32>) -> Result<Vec<f32>, String> {
+        self.request(|resp| Req::Combine2 { op, a, b, resp })
+    }
+
+    pub fn combinek(&self, op: ReduceOp, rows: Vec<Vec<f32>>) -> Result<Vec<f32>, String> {
+        self.request(|resp| Req::Combinek { op, rows, resp })
+    }
+
+    pub fn execute(&self, name: &str, inputs: Vec<OwnedInput>) -> Result<Vec<Output>, String> {
+        self.request(|resp| Req::Execute { name: name.to_string(), inputs, resp })
+    }
+
+    /// Compile an artifact ahead of the hot path; returns compile ns if
+    /// a compilation happened.
+    pub fn warmup(&self, name: &str) -> Result<Option<u64>, String> {
+        self.request(|resp| Req::Warmup { name: name.to_string(), resp })
+    }
+}
+
+/// The service: owns the compute thread; dropping shuts it down.
+pub struct ComputeService {
+    tx: Sender<Req>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ComputeService {
+    /// Start the compute thread over the artifact directory. Blocks
+    /// until the PJRT client + registry initialized (reporting errors).
+    pub fn start(dir: PathBuf) -> Result<ComputeService, String> {
+        let (tx, rx) = channel::<Req>();
+        let (init_tx, init_rx) = channel::<Result<(), String>>();
+        let join = std::thread::Builder::new()
+            .name("ftcoll-compute".into())
+            .spawn(move || {
+                // the Executor is constructed *inside* the thread: the
+                // xla wrappers never cross a thread boundary
+                let mut exec = match Executor::new(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(format!("{e:#}")));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Req::Combine2 { op, mut a, b, resp } => {
+                            let r = exec
+                                .combine2_f32(op, &mut a, &b)
+                                .map(|()| a)
+                                .map_err(|e| format!("{e:#}"));
+                            let _ = resp.send(r);
+                        }
+                        Req::Combinek { op, rows, resp } => {
+                            let r = exec.combinek_f32(op, &rows).map_err(|e| format!("{e:#}"));
+                            let _ = resp.send(r);
+                        }
+                        Req::Execute { name, inputs, resp } => {
+                            let ins: Vec<Input> = inputs.iter().map(|i| i.as_input()).collect();
+                            let r = exec.execute(&name, &ins).map_err(|e| format!("{e:#}"));
+                            let _ = resp.send(r);
+                        }
+                        Req::Warmup { name, resp } => {
+                            let r = exec.warmup(&name).map_err(|e| format!("{e:#}"));
+                            let _ = resp.send(r);
+                        }
+                        Req::Shutdown => break,
+                    }
+                }
+            })
+            .map_err(|e| format!("cannot spawn compute thread: {e}"))?;
+        init_rx
+            .recv()
+            .map_err(|_| "compute thread died during init".to_string())??;
+        Ok(ComputeService { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> ComputeHandle {
+        ComputeHandle { tx: Mutex::new(self.tx.clone()) }
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Req::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// [`Reducer`] backed by the AOT-compiled combine artifacts: the basic
+/// reduction function of §4 executes on the XLA side, not in rust.
+pub struct PjrtReducer {
+    handle: ComputeHandle,
+    op: ReduceOp,
+}
+
+impl PjrtReducer {
+    pub fn new(handle: ComputeHandle, op: ReduceOp) -> Self {
+        PjrtReducer { handle, op }
+    }
+}
+
+impl Reducer for PjrtReducer {
+    fn combine(&self, acc: &mut Value, other: &Value) {
+        match (&mut *acc, other) {
+            (Value::F32(a), Value::F32(b)) => {
+                let combined = self
+                    .handle
+                    .combine2(self.op, std::mem::take(a), b.clone())
+                    .expect("PJRT combine failed");
+                *a = combined;
+            }
+            (a, b) => panic!("PjrtReducer supports F32 payloads only, got {a:?} / {b:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owned_input_views() {
+        assert!(matches!(OwnedInput::F32(vec![1.0]).as_input(), Input::F32(_)));
+        assert!(matches!(OwnedInput::ScalarI32(5).as_input(), Input::ScalarI32(5)));
+    }
+
+    #[test]
+    fn service_start_fails_cleanly_without_artifacts() {
+        let err = match ComputeService::start(PathBuf::from("/definitely/not/here")) {
+            Err(e) => e,
+            Ok(_) => panic!("service started without artifacts"),
+        };
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    // live PJRT round-trips are covered by rust/tests/runtime_pjrt.rs
+}

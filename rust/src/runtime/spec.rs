@@ -1,0 +1,190 @@
+//! Artifact signature types and the manifest grammar.
+//!
+//! `aot.py` declares each artifact's signature as
+//! `dtype[dim,dim,...]` specs (e.g. `f32[8,1024]`, `i32[]`); the runtime
+//! parses them here and validates inputs at execute time, so a mismatch
+//! between the python and rust sides fails loudly instead of feeding
+//! garbage to XLA.
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    I64,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            "i64" => Ok(DType::I64),
+            "u32" => Ok(DType::U32),
+            other => Err(format!("unknown dtype `{other}`")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::I64 => "i64",
+            DType::U32 => "u32",
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::I64 => 8,
+        }
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse `f32[8,1024]` / `i32[]`.
+    pub fn parse(s: &str) -> Result<TensorSpec, String> {
+        let open = s.find('[').ok_or_else(|| format!("bad tensor spec `{s}`"))?;
+        if !s.ends_with(']') {
+            return Err(format!("bad tensor spec `{s}`"));
+        }
+        let dtype = DType::parse(&s[..open])?;
+        let inner = &s[open + 1..s.len() - 1];
+        let dims = if inner.is_empty() {
+            Vec::new()
+        } else {
+            inner
+                .split(',')
+                .map(|d| d.parse().map_err(|_| format!("bad dim `{d}` in `{s}`")))
+                .collect::<Result<_, _>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+
+    /// Total element count.
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.elements() * self.dtype.bytes()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.dims.is_empty()
+    }
+}
+
+impl fmt::Display for TensorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}]",
+            self.dtype.name(),
+            self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(",")
+        )
+    }
+}
+
+/// One artifact: name, HLO file, and its signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: std::path::PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactSpec {
+    /// Parse one manifest.tsv row:
+    /// `name\tfile\tin:<spec>;...\tout:<spec>;...`.
+    pub fn parse_row(dir: &std::path::Path, row: &str) -> Result<ArtifactSpec, String> {
+        let cols: Vec<&str> = row.split('\t').collect();
+        if cols.len() != 4 {
+            return Err(format!("manifest row needs 4 columns, got {}: `{row}`", cols.len()));
+        }
+        let parse_specs = |s: &str, prefix: &str| -> Result<Vec<TensorSpec>, String> {
+            let body = s
+                .strip_prefix(prefix)
+                .ok_or_else(|| format!("expected `{prefix}...` in `{s}`"))?;
+            if body.is_empty() {
+                return Ok(Vec::new());
+            }
+            body.split(';').map(TensorSpec::parse).collect()
+        };
+        Ok(ArtifactSpec {
+            name: cols[0].to_string(),
+            file: dir.join(cols[1]),
+            inputs: parse_specs(cols[2], "in:")?,
+            outputs: parse_specs(cols[3], "out:")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tensor_specs() {
+        assert_eq!(
+            TensorSpec::parse("f32[8,1024]").unwrap(),
+            TensorSpec { dtype: DType::F32, dims: vec![8, 1024] }
+        );
+        assert_eq!(
+            TensorSpec::parse("i32[]").unwrap(),
+            TensorSpec { dtype: DType::I32, dims: vec![] }
+        );
+        assert!(TensorSpec::parse("f32[8,1024").is_err());
+        assert!(TensorSpec::parse("f99[8]").is_err());
+        assert!(TensorSpec::parse("f32[x]").is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for s in ["f32[8,1024]", "i32[]", "i64[3]"] {
+            assert_eq!(TensorSpec::parse(s).unwrap().to_string(), s);
+        }
+    }
+
+    #[test]
+    fn elements_and_bytes() {
+        let t = TensorSpec::parse("f32[8,1024]").unwrap();
+        assert_eq!(t.elements(), 8192);
+        assert_eq!(t.byte_size(), 32768);
+        let s = TensorSpec::parse("i64[]").unwrap();
+        assert_eq!(s.elements(), 1);
+        assert!(s.is_scalar());
+        assert_eq!(s.byte_size(), 8);
+    }
+
+    #[test]
+    fn parse_manifest_row() {
+        let a = ArtifactSpec::parse_row(
+            std::path::Path::new("arts"),
+            "combine2_sum_f32_1024\tcombine2_sum_f32_1024.hlo.txt\tin:f32[1024];f32[1024]\tout:f32[1024]",
+        )
+        .unwrap();
+        assert_eq!(a.name, "combine2_sum_f32_1024");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.outputs.len(), 1);
+        assert!(a.file.ends_with("combine2_sum_f32_1024.hlo.txt"));
+    }
+
+    #[test]
+    fn parse_row_rejects_malformed() {
+        let d = std::path::Path::new(".");
+        assert!(ArtifactSpec::parse_row(d, "a\tb\tc").is_err());
+        assert!(ArtifactSpec::parse_row(d, "a\tb\tX:f32[1]\tout:f32[1]").is_err());
+    }
+}

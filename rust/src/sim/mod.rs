@@ -1,0 +1,845 @@
+//! Deterministic discrete-event simulator: the testbed substrate
+//! (DESIGN.md §2 — standing in for the HPC cluster the paper assumes).
+//!
+//! The simulator drives the *same* protocol state machines as the live
+//! engine, under virtual time with a LogGP-style cost model ([`net`]),
+//! fail-stop failure injection ([`crate::failure::FailureSpec`]) and a
+//! perfect failure monitor with configurable detection latency (the
+//! timeout of §4.2).
+//!
+//! Determinism: events are ordered by `(time, sequence-number)` with
+//! sequence numbers assigned at push; payload combination follows event
+//! order, so any run with the same configuration is bit-identical.
+
+pub mod net;
+
+use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
+use crate::collectives::baseline::{
+    FlatGather, Gossip, GossipConfig, RingAllreduce, TreeReduce,
+};
+use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
+use crate::collectives::failure_info::Scheme;
+use crate::collectives::reduce::{Reduce, ReduceConfig};
+use crate::collectives::{Ctx, NativeReducer, Outcome, Protocol, ReduceOp, Reducer};
+use crate::config::PayloadKind;
+use crate::failure::FailureSpec;
+use crate::metrics::Metrics;
+use crate::trace::{Trace, TraceEvent};
+use crate::types::{Msg, Rank, TimeNs, Value};
+use net::NetModel;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+/// Everything a simulated collective run needs.
+#[derive(Clone)]
+pub struct SimConfig {
+    pub n: u32,
+    pub f: u32,
+    pub root: Rank,
+    pub scheme: Scheme,
+    pub op: ReduceOp,
+    pub payload: PayloadKind,
+    pub net: NetModel,
+    /// Failure-monitor confirmation latency (the §4.2 timeout).
+    pub detect_latency: TimeNs,
+    pub failures: Vec<FailureSpec>,
+    pub correction: CorrectionMode,
+    /// Broadcast ring-correction distance override (`None` → f+1);
+    /// exposed for the design-choice ablation (E12).
+    pub bcast_distance: Option<u32>,
+    /// Allreduce candidate roots (`None` → `0..=f`).
+    pub candidates: Option<Vec<Rank>>,
+    pub trace: bool,
+    pub seed: u64,
+    pub max_events: u64,
+}
+
+impl SimConfig {
+    pub fn new(n: u32, f: u32) -> Self {
+        SimConfig {
+            n,
+            f,
+            root: 0,
+            scheme: Scheme::List,
+            op: ReduceOp::Sum,
+            payload: PayloadKind::RankValue,
+            net: NetModel::hpc(),
+            detect_latency: 10_000, // 10 µs timeout
+            failures: Vec::new(),
+            correction: CorrectionMode::Always,
+            bcast_distance: None,
+            candidates: None,
+            trace: false,
+            seed: 1,
+            max_events: 200_000_000,
+        }
+    }
+
+    pub fn root(mut self, root: Rank) -> Self {
+        self.root = root;
+        self
+    }
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+    pub fn op(mut self, op: ReduceOp) -> Self {
+        self.op = op;
+        self
+    }
+    pub fn payload(mut self, payload: PayloadKind) -> Self {
+        self.payload = payload;
+        self
+    }
+    pub fn net(mut self, net: NetModel) -> Self {
+        self.net = net;
+        self
+    }
+    pub fn failure(mut self, spec: FailureSpec) -> Self {
+        self.failures.push(spec);
+        self
+    }
+    pub fn failures(mut self, specs: Vec<FailureSpec>) -> Self {
+        self.failures = specs;
+        self
+    }
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+    pub fn candidates(mut self, c: Vec<Rank>) -> Self {
+        self.candidates = Some(c);
+        self
+    }
+    pub fn detect_latency(mut self, d: TimeNs) -> Self {
+        self.detect_latency = d;
+        self
+    }
+}
+
+/// Flat watch bookkeeping for the DES hot path: per watched peer, a
+/// small vector of (watcher, subscription-count). Protocols watch a
+/// handful of peers at a time, so linear scans beat hashing by a wide
+/// margin (the HashMap-of-HashMaps version cost ~25% of DES time —
+/// EXPERIMENTS.md §Perf). Same counted-subscription semantics as
+/// [`crate::failure::monitor::WatchTable`], which the live engine keeps
+/// using (cross-thread, contention-friendly).
+struct SimWatch {
+    per_peer: Vec<Vec<(Rank, u32)>>,
+}
+
+impl SimWatch {
+    fn new(n: u32) -> Self {
+        SimWatch { per_peer: vec![Vec::new(); n as usize] }
+    }
+
+    #[inline]
+    fn watch(&mut self, watcher: Rank, peer: Rank) {
+        let v = &mut self.per_peer[peer as usize];
+        if let Some(e) = v.iter_mut().find(|(w, _)| *w == watcher) {
+            e.1 += 1;
+        } else {
+            v.push((watcher, 1));
+        }
+    }
+
+    #[inline]
+    fn unwatch(&mut self, watcher: Rank, peer: Rank) {
+        let v = &mut self.per_peer[peer as usize];
+        if let Some(i) = v.iter().position(|(w, _)| *w == watcher) {
+            v[i].1 -= 1;
+            if v[i].1 == 0 {
+                v.swap_remove(i);
+            }
+        }
+    }
+
+    #[inline]
+    fn is_watching(&self, watcher: Rank, peer: Rank) -> bool {
+        self.per_peer[peer as usize].iter().any(|(w, _)| *w == watcher)
+    }
+
+    /// Remove all subscriptions of `watcher` on `peer`.
+    #[inline]
+    fn clear(&mut self, watcher: Rank, peer: Rank) {
+        let v = &mut self.per_peer[peer as usize];
+        if let Some(i) = v.iter().position(|(w, _)| *w == watcher) {
+            v.swap_remove(i);
+        }
+    }
+
+    fn watchers_of(&self, peer: Rank) -> Vec<Rank> {
+        let mut v: Vec<Rank> = self.per_peer[peer as usize].iter().map(|(w, _)| *w).collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[derive(Debug)]
+enum EvKind {
+    Start,
+    // boxed: keeps heap entries small (sift-down memcpy is the
+    // DES's hottest loop — §Perf)
+    Deliver { from: Rank, msg: Box<Msg> },
+    Detect { peer: Rank },
+    Kill,
+    Timer { token: u64 },
+}
+
+struct Entry {
+    t: TimeNs,
+    seq: u64,
+    rank: Rank,
+    kind: EvKind,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.t, self.seq).cmp(&(other.t, other.seq))
+    }
+}
+
+/// The discrete-event engine.
+pub struct Sim {
+    n: u32,
+    net: NetModel,
+    detect_latency: TimeNs,
+    heap: BinaryHeap<Reverse<Entry>>,
+    procs: Vec<Option<Box<dyn Protocol>>>,
+    dead: Vec<bool>,
+    send_count: Vec<u32>,
+    send_limit: Vec<Option<u32>>,
+    sender_free: Vec<TimeNs>,
+    recv_free: Vec<TimeNs>,
+    watch: SimWatch,
+    reducer: Arc<dyn Reducer>,
+    pub metrics: Metrics,
+    pub trace: Trace,
+    outcomes: Vec<Vec<Outcome>>,
+    seq: u64,
+    max_events: u64,
+    now: TimeNs,
+}
+
+impl Sim {
+    pub fn new(n: u32, net: NetModel, detect_latency: TimeNs, reducer: Arc<dyn Reducer>) -> Self {
+        Sim {
+            n,
+            net,
+            detect_latency,
+            heap: BinaryHeap::new(),
+            procs: (0..n).map(|_| None).collect(),
+            dead: vec![false; n as usize],
+            send_count: vec![0; n as usize],
+            send_limit: vec![None; n as usize],
+            sender_free: vec![0; n as usize],
+            recv_free: vec![0; n as usize],
+            watch: SimWatch::new(n),
+            reducer,
+            metrics: Metrics::new(),
+            trace: Trace::disabled(),
+            outcomes: (0..n).map(|_| Vec::new()).collect(),
+            seq: 0,
+            max_events: 200_000_000,
+            now: 0,
+        }
+    }
+
+    pub fn enable_trace(&mut self) {
+        self.trace = Trace::enabled();
+    }
+
+    pub fn set_max_events(&mut self, max: u64) {
+        self.max_events = max;
+    }
+
+    /// Install the protocol instance for `rank`.
+    pub fn add_proc(&mut self, rank: Rank, proto: Box<dyn Protocol>) {
+        self.procs[rank as usize] = Some(proto);
+    }
+
+    /// Apply a failure plan before starting.
+    pub fn apply_failures(&mut self, specs: &[FailureSpec]) {
+        for spec in specs {
+            match *spec {
+                FailureSpec::Pre { rank } => {
+                    self.dead[rank as usize] = true;
+                    self.trace.push(TraceEvent::Kill { t: 0, rank, pre_operational: true });
+                }
+                FailureSpec::AfterSends { rank, sends } => {
+                    self.send_limit[rank as usize] = Some(sends);
+                }
+                FailureSpec::AtTime { rank, at } => {
+                    self.push(at, rank, EvKind::Kill);
+                }
+            }
+        }
+    }
+
+    fn push(&mut self, t: TimeNs, rank: Rank, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Entry { t, seq: self.seq, rank, kind }));
+    }
+
+    /// Queue `Start` for all live processes at t=0.
+    pub fn start_all(&mut self) {
+        for r in 0..self.n {
+            if !self.dead[r as usize] {
+                self.push(0, r, EvKind::Start);
+            }
+        }
+    }
+
+    fn kill(&mut self, rank: Rank, t: TimeNs) {
+        if self.dead[rank as usize] {
+            return;
+        }
+        self.dead[rank as usize] = true;
+        self.trace.push(TraceEvent::Kill { t, rank, pre_operational: false });
+        for w in self.watch.watchers_of(rank) {
+            self.push(t + self.detect_latency, w, EvKind::Detect { peer: rank });
+        }
+    }
+
+    fn do_send(&mut self, from: Rank, now: TimeNs, to: Rank, msg: Msg) {
+        if self.dead[from as usize] {
+            return; // died earlier in this callback
+        }
+        if let Some(limit) = self.send_limit[from as usize] {
+            if self.send_count[from as usize] >= limit {
+                // in-operational failure: dies attempting this send;
+                // the message is never injected (§3 fail-stop)
+                self.kill(from, now);
+                return;
+            }
+        }
+        self.send_count[from as usize] += 1;
+        let bytes = msg.wire_bytes();
+        self.metrics.on_send(msg.kind, bytes, msg.finfo.wire_bytes());
+        if self.trace.is_enabled() {
+            let includes = match &msg.payload {
+                Value::I64(mask) => mask
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| c > 0)
+                    .map(|(i, _)| i as Rank)
+                    .collect(),
+                _ => Vec::new(),
+            };
+            self.trace.push(TraceEvent::Send {
+                t: now,
+                from,
+                to,
+                kind: msg.kind,
+                includes,
+                bytes,
+            });
+        }
+        let depart = now.max(self.sender_free[from as usize]) + self.net.send_ovh;
+        self.sender_free[from as usize] = depart;
+        if self.dead[to as usize] {
+            // completes like a normal send; the dead peer absorbs it
+            self.metrics.on_send_to_dead();
+            return;
+        }
+        let arrival = depart + self.net.wire_time(bytes);
+        self.push(arrival, to, EvKind::Deliver { from, msg: Box::new(msg) });
+    }
+
+    fn do_watch(&mut self, watcher: Rank, now: TimeNs, peer: Rank) {
+        self.watch.watch(watcher, peer);
+        if self.dead[peer as usize] {
+            self.push(now + self.detect_latency, watcher, EvKind::Detect { peer });
+        }
+    }
+
+    /// Run to quiescence (or the event cap). Returns the final virtual
+    /// time.
+    pub fn run(&mut self) -> TimeNs {
+        let mut events: u64 = 0;
+        while let Some(Reverse(entry)) = self.heap.pop() {
+            events += 1;
+            assert!(
+                events <= self.max_events,
+                "event cap exceeded ({events}) — livelock in protocol?"
+            );
+            self.metrics.on_event();
+            let Entry { t, rank, kind, .. } = entry;
+            // `now` tracks the latest *handled* time: receiver-side
+            // serialization can push handling past later-popped events'
+            // arrival times, so take the max
+            self.now = self.now.max(t);
+            match kind {
+                EvKind::Kill => {
+                    self.kill(rank, t);
+                    continue;
+                }
+                _ => {}
+            }
+            if self.dead[rank as usize] {
+                continue; // events for the dead are dropped
+            }
+            // take the protocol out to avoid aliasing the engine
+            let mut proto = match self.procs[rank as usize].take() {
+                Some(p) => p,
+                None => continue,
+            };
+            let handle_t = match &kind {
+                EvKind::Deliver { .. } => {
+                    let ht = t.max(self.recv_free[rank as usize]) + self.net.recv_ovh;
+                    self.recv_free[rank as usize] = ht;
+                    ht
+                }
+                _ => t,
+            };
+            self.now = self.now.max(handle_t);
+            {
+                let mut ctx = SimCtx { sim: self, rank, now: handle_t };
+                match kind {
+                    EvKind::Start => proto.on_start(&mut ctx),
+                    EvKind::Deliver { from, msg } => proto.on_message(from, *msg, &mut ctx),
+                    EvKind::Detect { peer } => {
+                        if ctx.sim.watch.is_watching(rank, peer) {
+                            ctx.sim.watch.clear(rank, peer);
+                            ctx.sim.trace.push(TraceEvent::Detect {
+                                t: handle_t,
+                                at: rank,
+                                peer,
+                            });
+                            proto.on_peer_failed(peer, &mut ctx);
+                        }
+                    }
+                    EvKind::Timer { token } => proto.on_timer(token, &mut ctx),
+                    EvKind::Kill => unreachable!(),
+                }
+            }
+            self.procs[rank as usize] = Some(proto);
+        }
+        self.now
+    }
+
+    pub fn outcomes(&self) -> &[Vec<Outcome>] {
+        &self.outcomes
+    }
+
+    pub fn is_dead(&self, rank: Rank) -> bool {
+        self.dead[rank as usize]
+    }
+}
+
+struct SimCtx<'a> {
+    sim: &'a mut Sim,
+    rank: Rank,
+    now: TimeNs,
+}
+
+impl<'a> Ctx for SimCtx<'a> {
+    fn rank(&self) -> Rank {
+        self.rank
+    }
+    fn n(&self) -> u32 {
+        self.sim.n
+    }
+    fn now(&self) -> TimeNs {
+        self.now
+    }
+    fn send(&mut self, to: Rank, msg: Msg) {
+        self.sim.do_send(self.rank, self.now, to, msg);
+    }
+    fn watch(&mut self, peer: Rank) {
+        if !self.sim.dead[self.rank as usize] {
+            self.sim.do_watch(self.rank, self.now, peer);
+        }
+    }
+    fn unwatch(&mut self, peer: Rank) {
+        self.sim.watch.unwatch(self.rank, peer);
+    }
+    fn set_timer(&mut self, delay: TimeNs, token: u64) {
+        if !self.sim.dead[self.rank as usize] {
+            self.sim.push(self.now + delay, self.rank, EvKind::Timer { token });
+        }
+    }
+    fn combine(&mut self, acc: &mut Value, other: &Value) {
+        let reducer = Arc::clone(&self.sim.reducer);
+        reducer.combine(acc, other);
+    }
+    fn deliver(&mut self, out: Outcome) {
+        if self.sim.dead[self.rank as usize] {
+            return; // a process that died mid-callback delivers nothing
+        }
+        self.sim.metrics.on_complete(self.rank, self.now);
+        if self.sim.trace.is_enabled() {
+            let what = match &out {
+                Outcome::ReduceRoot { .. } => "reduce_root".to_string(),
+                Outcome::ReduceDone => "reduce_done".to_string(),
+                Outcome::Broadcast(_) => "broadcast".to_string(),
+                Outcome::Allreduce { attempts, .. } => format!("allreduce(attempt {attempts})"),
+                Outcome::Error(e) => format!("error: {e}"),
+            };
+            self.sim.trace.push(TraceEvent::Deliver { t: self.now, rank: self.rank, what });
+        }
+        self.sim.outcomes[self.rank as usize].push(out);
+    }
+}
+
+/// Result of one simulated collective run.
+pub struct RunReport {
+    pub n: u32,
+    pub outcomes: Vec<Vec<Outcome>>,
+    pub metrics: Metrics,
+    pub trace: Trace,
+    /// Virtual time when the event queue drained.
+    pub final_time: TimeNs,
+    /// Ranks dead by the end of the run.
+    pub dead: Vec<Rank>,
+}
+
+impl RunReport {
+    /// The value delivered at `rank` (first value-bearing outcome).
+    pub fn value_at(&self, rank: Rank) -> Option<&Value> {
+        self.outcomes[rank as usize].iter().find_map(|o| o.value())
+    }
+
+    /// Number of deliveries at `rank` (must be ≤ 1 per §4.1/§5.1).
+    pub fn deliveries_at(&self, rank: Rank) -> usize {
+        self.outcomes[rank as usize].len()
+    }
+
+    /// The root's reduce outcome, if delivered.
+    pub fn root_outcome(&self) -> Option<&Outcome> {
+        self.outcomes
+            .iter()
+            .flatten()
+            .find(|o| matches!(o, Outcome::ReduceRoot { .. } | Outcome::Error(_)))
+    }
+
+    /// The root's reduce value (panics on Error outcomes, None if the
+    /// root never delivered).
+    pub fn root_value(&self) -> Option<&Value> {
+        self.outcomes.iter().flatten().find_map(|o| match o {
+            Outcome::ReduceRoot { value, .. } => Some(value),
+            _ => None,
+        })
+    }
+
+    /// Ranks that delivered at least one outcome.
+    pub fn delivered_ranks(&self) -> Vec<Rank> {
+        (0..self.n).filter(|&r| !self.outcomes[r as usize].is_empty()).collect()
+    }
+
+    /// Completion (makespan) of the run at the root, or the overall
+    /// makespan for rootless collectives.
+    pub fn makespan(&self) -> Option<TimeNs> {
+        self.metrics.makespan()
+    }
+}
+
+fn build_sim(cfg: &SimConfig) -> Sim {
+    let reducer: Arc<dyn Reducer> = Arc::new(NativeReducer(cfg.op));
+    let mut sim = Sim::new(cfg.n, cfg.net, cfg.detect_latency, reducer);
+    if cfg.trace {
+        sim.enable_trace();
+    }
+    sim.set_max_events(cfg.max_events);
+    sim
+}
+
+fn finish(mut sim: Sim) -> RunReport {
+    let final_time = sim.run();
+    let dead = (0..sim.n).filter(|&r| sim.is_dead(r)).collect();
+    RunReport {
+        n: sim.n,
+        outcomes: std::mem::take(&mut sim.outcomes),
+        metrics: sim.metrics,
+        trace: sim.trace,
+        final_time,
+        dead,
+    }
+}
+
+/// Simulate fault-tolerant reduce (Algorithms 1-4).
+pub fn run_reduce(cfg: &SimConfig) -> RunReport {
+    let mut sim = build_sim(cfg);
+    for r in 0..cfg.n {
+        let rcfg = ReduceConfig {
+            n: cfg.n,
+            f: cfg.f,
+            root: cfg.root,
+            scheme: cfg.scheme,
+            op_id: 1,
+            epoch: 0,
+        };
+        sim.add_proc(r, Box::new(Reduce::new(rcfg, cfg.payload.initial(r, cfg.n))));
+    }
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    finish(sim)
+}
+
+/// Simulate fault-tolerant allreduce (Algorithm 5).
+pub fn run_allreduce(cfg: &SimConfig) -> RunReport {
+    let mut sim = build_sim(cfg);
+    for r in 0..cfg.n {
+        let mut acfg = AllreduceConfig::new(cfg.n, cfg.f).scheme(cfg.scheme);
+        acfg.correction = cfg.correction;
+        if let Some(c) = &cfg.candidates {
+            acfg = acfg.candidates(c.clone());
+        }
+        sim.add_proc(r, Box::new(Allreduce::new(acfg, cfg.payload.initial(r, cfg.n))));
+    }
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    finish(sim)
+}
+
+/// Simulate the corrected-tree broadcast alone (value = root's payload).
+pub fn run_broadcast(cfg: &SimConfig) -> RunReport {
+    let mut sim = build_sim(cfg);
+    for r in 0..cfg.n {
+        let bcfg = BcastConfig {
+            n: cfg.n,
+            f: cfg.f,
+            root: cfg.root,
+            mode: cfg.correction,
+            distance: cfg.bcast_distance,
+            op_id: 1,
+            epoch: 0,
+        };
+        let input =
+            if r == cfg.root { Some(cfg.payload.initial(cfg.root, cfg.n)) } else { None };
+        sim.add_proc(r, Box::new(Broadcast::new(bcfg, input)));
+    }
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    finish(sim)
+}
+
+/// Simulate the fault-agnostic binomial-tree reduce baseline (Figure 1).
+pub fn run_baseline_tree_reduce(cfg: &SimConfig) -> RunReport {
+    let mut sim = build_sim(cfg);
+    for r in 0..cfg.n {
+        sim.add_proc(
+            r,
+            Box::new(TreeReduce::new(cfg.n, cfg.root, 1, cfg.payload.initial(r, cfg.n))),
+        );
+    }
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    finish(sim)
+}
+
+/// Simulate the flat gather baseline.
+pub fn run_baseline_flat_gather(cfg: &SimConfig) -> RunReport {
+    let mut sim = build_sim(cfg);
+    for r in 0..cfg.n {
+        sim.add_proc(
+            r,
+            Box::new(FlatGather::new(cfg.n, cfg.root, 1, cfg.payload.initial(r, cfg.n))),
+        );
+    }
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    finish(sim)
+}
+
+/// Simulate the ring-allreduce baseline.
+pub fn run_baseline_ring_allreduce(cfg: &SimConfig) -> RunReport {
+    let mut sim = build_sim(cfg);
+    for r in 0..cfg.n {
+        sim.add_proc(r, Box::new(RingAllreduce::new(cfg.n, 1, cfg.payload.initial(r, cfg.n))));
+    }
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    finish(sim)
+}
+
+/// Simulate the (corrected) gossip broadcast baseline.
+pub fn run_baseline_gossip(cfg: &SimConfig, gossip: GossipConfig) -> RunReport {
+    let mut sim = build_sim(cfg);
+    for r in 0..cfg.n {
+        let input =
+            if r == gossip.root { Some(cfg.payload.initial(gossip.root, cfg.n)) } else { None };
+        sim.add_proc(r, Box::new(Gossip::new(gossip.clone(), input)));
+    }
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    finish(sim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_free_reduce_sums_ranks() {
+        for n in [1u32, 2, 3, 7, 8, 16, 33] {
+            for f in [0u32, 1, 2, 3] {
+                let cfg = SimConfig::new(n, f);
+                let rep = run_reduce(&cfg);
+                let expect: f64 = (0..n).map(|r| r as f64).sum();
+                let got = rep.root_value().unwrap_or_else(|| panic!("no root value n={n} f={f}"));
+                assert_eq!(got.as_f64_scalar(), expect, "n={n} f={f}");
+                // every process delivers exactly once
+                for r in 0..n {
+                    assert_eq!(rep.deliveries_at(r), 1, "rank {r} n={n} f={f}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn figure2_scenario() {
+        let cfg = SimConfig::new(7, 1).failure(FailureSpec::Pre { rank: 1 });
+        let rep = run_reduce(&cfg);
+        assert_eq!(rep.root_value().unwrap().as_f64_scalar(), 20.0);
+    }
+
+    #[test]
+    fn figure1_baseline_loses_subtree() {
+        // depth-first numbering in Fig. 1 differs from our binomial
+        // layout, but the phenomenon is identical: a failed interior
+        // child loses its whole subtree. With binomial n=7, rank 1 is a
+        // leaf; use rank 2 (children 3) or rank 4 (children 5,6).
+        let cfg = SimConfig::new(7, 1).failure(FailureSpec::Pre { rank: 4 });
+        let rep = run_baseline_tree_reduce(&cfg);
+        // subtree {4,5,6} lost: 21 - 15 = 6
+        assert_eq!(rep.root_value().unwrap().as_f64_scalar(), 6.0);
+    }
+
+    #[test]
+    fn broadcast_reaches_all_despite_failures() {
+        let cfg = SimConfig::new(16, 2)
+            .failures(vec![
+                FailureSpec::Pre { rank: 3 },
+                FailureSpec::Pre { rank: 4 },
+            ]);
+        let rep = run_broadcast(&cfg);
+        for r in 0..16 {
+            if r == 3 || r == 4 {
+                assert_eq!(rep.deliveries_at(r), 0);
+            } else {
+                assert_eq!(rep.deliveries_at(r), 1, "rank {r}");
+                assert_eq!(rep.value_at(r).unwrap().as_f64_scalar(), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_all_agree() {
+        let cfg = SimConfig::new(12, 2).failure(FailureSpec::Pre { rank: 5 });
+        let rep = run_allreduce(&cfg);
+        let expect: f64 = (0..12).filter(|&r| r != 5).map(|r| r as f64).sum();
+        for r in 0..12 {
+            if r == 5 {
+                continue;
+            }
+            let v = rep.value_at(r).unwrap_or_else(|| panic!("rank {r} missing"));
+            assert_eq!(v.as_f64_scalar(), expect, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn allreduce_rotates_past_dead_roots() {
+        let cfg = SimConfig::new(8, 2).failures(vec![
+            FailureSpec::Pre { rank: 0 },
+            FailureSpec::Pre { rank: 1 },
+        ]);
+        let rep = run_allreduce(&cfg);
+        let expect: f64 = (2..8).map(|r| r as f64).sum();
+        for r in 2..8 {
+            match rep.outcomes[r as usize].first() {
+                Some(Outcome::Allreduce { value, attempts }) => {
+                    assert_eq!(value.as_f64_scalar(), expect, "rank {r}");
+                    assert_eq!(*attempts, 3, "rank {r}: roots 0,1 dead → third attempt");
+                }
+                o => panic!("rank {r}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_repeat() {
+        let cfg = SimConfig::new(32, 3)
+            .failures(vec![
+                FailureSpec::Pre { rank: 7 },
+                FailureSpec::AfterSends { rank: 11, sends: 2 },
+            ]);
+        let a = run_reduce(&cfg);
+        let b = run_reduce(&cfg);
+        assert_eq!(a.final_time, b.final_time);
+        assert_eq!(a.metrics.total_msgs(), b.metrics.total_msgs());
+        assert_eq!(
+            a.root_value().map(|v| v.as_f64_scalar()),
+            b.root_value().map(|v| v.as_f64_scalar())
+        );
+    }
+
+    #[test]
+    fn in_operational_failure_mid_upcorrection() {
+        // rank 3 dies after 1 send: its group peer may or may not see
+        // its value; the root's result must still include all live ranks
+        // and include 3's value 0 or 1 times.
+        let cfg = SimConfig::new(9, 2)
+            .payload(PayloadKind::OneHot)
+            .failure(FailureSpec::AfterSends { rank: 3, sends: 1 });
+        let rep = run_reduce(&cfg);
+        let counts = rep.root_value().expect("root delivers").inclusion_counts();
+        for r in 0..9 {
+            if r == 3 {
+                assert!(counts[r] == 0 || counts[r] == 1, "failed rank included {}x", counts[r]);
+            } else {
+                assert_eq!(counts[r], 1, "live rank {r} included {}x", counts[r]);
+            }
+        }
+    }
+
+    #[test]
+    fn gossip_with_correction_reaches_all() {
+        let cfg = SimConfig::new(24, 2).failures(vec![
+            FailureSpec::Pre { rank: 9 },
+            FailureSpec::Pre { rank: 10 },
+        ]);
+        let rep = run_baseline_gossip(&cfg, GossipConfig::new(24, 2));
+        for r in 0..24 {
+            if r == 9 || r == 10 {
+                continue;
+            }
+            assert_eq!(rep.deliveries_at(r), 1, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_failure_free() {
+        let cfg = SimConfig::new(9, 0);
+        let rep = run_baseline_ring_allreduce(&cfg);
+        let expect: f64 = (0..9).map(|r| r as f64).sum();
+        for r in 0..9 {
+            assert_eq!(rep.value_at(r).unwrap().as_f64_scalar(), expect, "rank {r}");
+        }
+        // exactly 2(n-1) messages
+        assert_eq!(rep.metrics.total_msgs(), 16);
+    }
+
+    #[test]
+    fn flat_gather_tolerates_failures() {
+        let cfg = SimConfig::new(10, 3).failures(vec![
+            FailureSpec::Pre { rank: 1 },
+            FailureSpec::AfterSends { rank: 2, sends: 0 },
+        ]);
+        let rep = run_baseline_flat_gather(&cfg);
+        let expect: f64 = (0..10).filter(|&r| r != 1 && r != 2).map(|r| r as f64).sum();
+        assert_eq!(rep.root_value().unwrap().as_f64_scalar(), expect);
+    }
+}

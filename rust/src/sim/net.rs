@@ -1,0 +1,75 @@
+//! LogGP-style network cost model for the discrete-event simulator.
+//!
+//! A message of `b` bytes sent by `p` at local time `t`:
+//!
+//! * departs at `depart = max(t, sender_free(p)) + o_send` — the sender
+//!   serializes its own injections (the LogP `o`/`g` effect; this is what
+//!   makes flat gather O(n) and why Theorem 5's message *counts* turn
+//!   into latency),
+//! * arrives at `depart + L + G·b`,
+//! * is *processed* at `max(arrival, recv_free(dst)) + o_recv` — the
+//!   receiver also serializes.
+//!
+//! Presets approximate the paper's setting (latency-critical small
+//! messages on an HPC interconnect).
+
+use crate::types::TimeNs;
+
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// Wire latency L (ns).
+    pub latency: TimeNs,
+    /// Sender-side per-message overhead o_send (ns).
+    pub send_ovh: TimeNs,
+    /// Receiver-side per-message overhead o_recv (ns).
+    pub recv_ovh: TimeNs,
+    /// Per-byte gap G (ns/byte).
+    pub byte_ns: f64,
+}
+
+impl NetModel {
+    /// HPC interconnect: ~1 µs latency, ~100 ns overheads, ~10 GB/s.
+    pub fn hpc() -> Self {
+        NetModel { latency: 1_000, send_ovh: 100, recv_ovh: 100, byte_ns: 0.1 }
+    }
+
+    /// Commodity LAN: ~20 µs latency, ~1 µs overheads, ~1 GB/s.
+    pub fn lan() -> Self {
+        NetModel { latency: 20_000, send_ovh: 1_000, recv_ovh: 1_000, byte_ns: 1.0 }
+    }
+
+    /// Degenerate unit model: every message takes exactly 1 ns and
+    /// overheads are zero — useful for step-counting tests.
+    pub fn unit() -> Self {
+        NetModel { latency: 1, send_ovh: 0, recv_ovh: 0, byte_ns: 0.0 }
+    }
+
+    /// Transfer time of `bytes` once on the wire.
+    pub fn wire_time(&self, bytes: usize) -> TimeNs {
+        self.latency + (self.byte_ns * bytes as f64) as TimeNs
+    }
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel::hpc()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_time_scales_with_bytes() {
+        let m = NetModel { latency: 1_000, send_ovh: 0, recv_ovh: 0, byte_ns: 0.5 };
+        assert_eq!(m.wire_time(0), 1_000);
+        assert_eq!(m.wire_time(100), 1_050);
+    }
+
+    #[test]
+    fn presets_are_ordered() {
+        assert!(NetModel::hpc().latency < NetModel::lan().latency);
+        assert_eq!(NetModel::unit().wire_time(1 << 20), 1);
+    }
+}

@@ -1,0 +1,165 @@
+//! Binomial trees over index ranges `0..size`, rooted at index 0.
+//!
+//! Used (a) inside each I(f)-subtree to aggregate the subtree's members in
+//! logarithmic depth, (b) by the non-fault-tolerant baseline reduce
+//! (Figure 1's "common tree implementation"), and (c) as the dissemination
+//! tree of the corrected-tree broadcast.
+//!
+//! Standard construction: the parent of index `i > 0` is `i` with its
+//! lowest set bit cleared; the children of `i` are `i | (1 << j)` for all
+//! `j` above `i`'s lowest set bit (or any `j` for the root) that stay
+//! below `size`.
+
+use crate::types::Rank;
+
+/// A binomial tree over `0..size` (indices, not ranks; callers map
+/// indices to ranks).
+#[derive(Clone, Copy, Debug)]
+pub struct BinomialTree {
+    size: u32,
+}
+
+impl BinomialTree {
+    pub fn new(size: u32) -> Self {
+        assert!(size >= 1);
+        BinomialTree { size }
+    }
+
+    pub fn size(&self) -> u32 {
+        self.size
+    }
+
+    /// Parent index of `i`, `None` for the root (index 0).
+    pub fn parent(&self, i: u32) -> Option<u32> {
+        assert!(i < self.size);
+        if i == 0 {
+            None
+        } else {
+            Some(i & (i - 1))
+        }
+    }
+
+    /// Children of `i` in increasing order.
+    pub fn children(&self, i: u32) -> Vec<u32> {
+        assert!(i < self.size);
+        let mut out = Vec::new();
+        let low = if i == 0 { 32 } else { i.trailing_zeros() };
+        for j in 0..32 {
+            if j >= low {
+                break;
+            }
+            let c = i | (1u32 << j);
+            if c != i && c < self.size {
+                out.push(c);
+            }
+        }
+        out
+    }
+
+    /// Tree depth (longest root-to-leaf path, edges): `⌈log2(size)⌉`.
+    pub fn depth(&self) -> u32 {
+        32 - (self.size - 1).leading_zeros().min(32)
+    }
+}
+
+/// Convenience: map a binomial tree over an explicit member list (index 0
+/// = first member is the subtree root).
+#[derive(Clone, Debug)]
+pub struct MappedBinomial {
+    tree: BinomialTree,
+    members: Vec<Rank>,
+}
+
+impl MappedBinomial {
+    pub fn new(members: Vec<Rank>) -> Self {
+        assert!(!members.is_empty());
+        MappedBinomial { tree: BinomialTree::new(members.len() as u32), members }
+    }
+
+    pub fn members(&self) -> &[Rank] {
+        &self.members
+    }
+
+    pub fn index_of(&self, r: Rank) -> Option<u32> {
+        self.members.iter().position(|&m| m == r).map(|i| i as u32)
+    }
+
+    pub fn root(&self) -> Rank {
+        self.members[0]
+    }
+
+    pub fn parent(&self, r: Rank) -> Option<Rank> {
+        let i = self.index_of(r).expect("rank not in tree");
+        self.tree.parent(i).map(|p| self.members[p as usize])
+    }
+
+    pub fn children(&self, r: Rank) -> Vec<Rank> {
+        let i = self.index_of(r).expect("rank not in tree");
+        self.tree.children(i).into_iter().map(|c| self.members[c as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn root_children_powers_of_two() {
+        let t = BinomialTree::new(8);
+        assert_eq!(t.children(0), vec![1, 2, 4]);
+        assert_eq!(t.children(2), vec![3]);
+        assert_eq!(t.children(4), vec![5, 6]);
+        assert_eq!(t.children(6), vec![7]);
+        assert_eq!(t.children(7), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn parent_clears_lowest_bit() {
+        let t = BinomialTree::new(16);
+        assert_eq!(t.parent(0), None);
+        assert_eq!(t.parent(1), Some(0));
+        assert_eq!(t.parent(6), Some(4));
+        assert_eq!(t.parent(12), Some(8));
+        assert_eq!(t.parent(13), Some(12));
+    }
+
+    #[test]
+    fn parent_child_consistency_and_connectivity() {
+        for size in 1..70u32 {
+            let t = BinomialTree::new(size);
+            let mut seen_as_child = vec![false; size as usize];
+            for i in 0..size {
+                for c in t.children(i) {
+                    assert_eq!(t.parent(c), Some(i), "size={size} i={i} c={c}");
+                    assert!(!seen_as_child[c as usize], "duplicate child {c}");
+                    seen_as_child[c as usize] = true;
+                }
+            }
+            // every non-root is someone's child exactly once → the edge
+            // set is a spanning tree with size-1 edges
+            assert!(!seen_as_child[0]);
+            assert!(seen_as_child[1..].iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn depth_is_log2_ceil() {
+        assert_eq!(BinomialTree::new(1).depth(), 0);
+        assert_eq!(BinomialTree::new(2).depth(), 1);
+        assert_eq!(BinomialTree::new(3).depth(), 2);
+        assert_eq!(BinomialTree::new(4).depth(), 2);
+        assert_eq!(BinomialTree::new(5).depth(), 3);
+        assert_eq!(BinomialTree::new(8).depth(), 3);
+        assert_eq!(BinomialTree::new(9).depth(), 4);
+    }
+
+    #[test]
+    fn mapped_tree_relabels() {
+        let m = MappedBinomial::new(vec![2, 4, 6]);
+        assert_eq!(m.root(), 2);
+        assert_eq!(m.children(2), vec![4, 6]);
+        assert_eq!(m.parent(6), Some(2));
+        assert_eq!(m.parent(4), Some(2));
+        assert_eq!(m.children(4), Vec::<Rank>::new());
+    }
+}

@@ -1,0 +1,214 @@
+//! Up-correction groups (§4.2).
+//!
+//! All processes `p > 0` that share the group number `⌊(p-1)/(f+1)⌋` form
+//! one up-correction group. If the last group (highest number) has fewer
+//! than `f+1` members, the root (process 0) is also part of it; otherwise
+//! the root belongs to no group.
+//!
+//! Key property (used by Theorem 1): the members of a *full* group
+//! `{g(f+1)+1, …, g(f+1)+f+1}` have pairwise distinct residues
+//! `(p-1) mod (f+1)`, i.e. exactly one member in each of the `f+1`
+//! subtrees of the I(f)-tree root.
+
+use crate::types::Rank;
+
+/// The up-correction group structure for `n` processes tolerating `f`
+/// failures. Ranks are *virtual* (root already normalized to 0).
+#[derive(Clone, Debug)]
+pub struct UpCorrectionGroups {
+    n: u32,
+    f: u32,
+}
+
+impl UpCorrectionGroups {
+    pub fn new(n: u32, f: u32) -> Self {
+        assert!(n >= 1, "need at least one process");
+        UpCorrectionGroups { n, f }
+    }
+
+    #[inline]
+    pub fn group_size(&self) -> u32 {
+        self.f + 1
+    }
+
+    /// Number of *full* groups, `⌊(n-1)/(f+1)⌋`.
+    pub fn full_groups(&self) -> u32 {
+        (self.n - 1) / (self.f + 1)
+    }
+
+    /// The paper's `a = ((n-1) mod (f+1)) + 1` (Theorem 5): if `a > 1` it
+    /// is the size of the last (short) group *including* the root; if
+    /// `a == 1` there is no short group and the root is groupless.
+    pub fn a(&self) -> u32 {
+        ((self.n - 1) % (self.f + 1)) + 1
+    }
+
+    /// Whether the root is a member of (the short) group.
+    pub fn root_in_group(&self) -> bool {
+        self.a() > 1
+    }
+
+    /// Group id of `p`, or `None` when `p` has no group (the root when all
+    /// groups are full, or any rank when f+1 groups degenerate to
+    /// singletons with f == 0 — a singleton group exchanges no messages
+    /// but formally still exists; we return its id).
+    pub fn group_of(&self, p: Rank) -> Option<u32> {
+        assert!(p < self.n);
+        if p == 0 {
+            if self.root_in_group() {
+                Some(self.full_groups())
+            } else {
+                None
+            }
+        } else {
+            Some((p - 1) / (self.f + 1))
+        }
+    }
+
+    /// Members of group `g`, ascending by rank; for the short group the
+    /// root (rank 0) is listed first.
+    pub fn members(&self, g: u32) -> Vec<Rank> {
+        let full = self.full_groups();
+        assert!(g <= full, "group {g} out of range");
+        if g < full {
+            (g * (self.f + 1) + 1..=g * (self.f + 1) + self.f + 1).collect()
+        } else {
+            assert!(self.root_in_group(), "no short group for n={} f={}", self.n, self.f);
+            let mut m: Vec<Rank> = vec![0];
+            m.extend(full * (self.f + 1) + 1..self.n);
+            m
+        }
+    }
+
+    /// The peers `p` exchanges values with in the up-correction phase
+    /// (its group minus itself); empty when `p` is groupless or its group
+    /// is a singleton.
+    pub fn peers_of(&self, p: Rank) -> Vec<Rank> {
+        match self.group_of(p) {
+            None => Vec::new(),
+            Some(g) => self.members(g).into_iter().filter(|&q| q != p).collect(),
+        }
+    }
+
+    /// Total number of groups (full + the optional short one).
+    pub fn num_groups(&self) -> u32 {
+        self.full_groups() + if self.root_in_group() { 1 } else { 0 }
+    }
+
+    /// Messages sent in a failure-free up-correction phase — the first
+    /// bullet of Theorem 5: `f(f+1)·⌊(n-1)/(f+1)⌋ + a(a-1)`.
+    pub fn failure_free_messages(&self) -> u64 {
+        let f = self.f as u64;
+        let a = self.a() as u64;
+        f * (f + 1) * self.full_groups() as u64 + a * (a - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_n7_f1() {
+        // §4.3 example: n=7, f=1 → groups {1,2},{3,4},{5,6}; 6 = (n-1)
+        // divisible by f+1=2, so the root is groupless.
+        let g = UpCorrectionGroups::new(7, 1);
+        assert_eq!(g.full_groups(), 3);
+        assert_eq!(g.a(), 1);
+        assert!(!g.root_in_group());
+        assert_eq!(g.group_of(0), None);
+        assert_eq!(g.members(0), vec![1, 2]);
+        assert_eq!(g.members(1), vec![3, 4]);
+        assert_eq!(g.members(2), vec![5, 6]);
+        assert_eq!(g.peers_of(3), vec![4]);
+        assert_eq!(g.num_groups(), 3);
+    }
+
+    #[test]
+    fn root_joins_short_group() {
+        // n=8, f=1: ranks 1..7, groups {1,2},{3,4},{5,6},{7,root}.
+        let g = UpCorrectionGroups::new(8, 1);
+        assert_eq!(g.full_groups(), 3);
+        assert_eq!(g.a(), 2);
+        assert!(g.root_in_group());
+        assert_eq!(g.group_of(0), Some(3));
+        assert_eq!(g.group_of(7), Some(3));
+        assert_eq!(g.members(3), vec![0, 7]);
+        assert_eq!(g.peers_of(0), vec![7]);
+        assert_eq!(g.peers_of(7), vec![0]);
+    }
+
+    #[test]
+    fn f0_degenerates_to_singletons() {
+        let g = UpCorrectionGroups::new(5, 0);
+        assert_eq!(g.group_size(), 1);
+        assert_eq!(g.a(), 1);
+        assert!(!g.root_in_group());
+        for p in 1..5 {
+            assert_eq!(g.peers_of(p), Vec::<Rank>::new());
+        }
+        assert_eq!(g.failure_free_messages(), 0);
+    }
+
+    #[test]
+    fn tiny_n_all_grouped_with_root() {
+        // n=3, f=3: n-1=2 < f+1=4 → a=3, single short group {0,1,2}.
+        let g = UpCorrectionGroups::new(3, 3);
+        assert_eq!(g.full_groups(), 0);
+        assert_eq!(g.a(), 3);
+        assert!(g.root_in_group());
+        assert_eq!(g.members(0), vec![0, 1, 2]);
+        assert_eq!(g.peers_of(0), vec![1, 2]);
+        // a(a-1) = 6 messages.
+        assert_eq!(g.failure_free_messages(), 6);
+    }
+
+    #[test]
+    fn groups_partition_nonroot_ranks() {
+        for n in 1..60u32 {
+            for f in 0..8u32 {
+                let g = UpCorrectionGroups::new(n, f);
+                let mut seen = vec![0u32; n as usize];
+                for gid in 0..g.num_groups() {
+                    let members = g.members(gid);
+                    // all groups ≤ f+1 members, full groups exactly f+1
+                    assert!(members.len() as u32 <= f + 1);
+                    if gid < g.full_groups() {
+                        assert_eq!(members.len() as u32, f + 1);
+                    }
+                    for m in members {
+                        seen[m as usize] += 1;
+                    }
+                }
+                for p in 1..n {
+                    assert_eq!(seen[p as usize], 1, "rank {p} n={n} f={f}");
+                }
+                assert_eq!(seen[0], u32::from(g.root_in_group()));
+            }
+        }
+    }
+
+    #[test]
+    fn full_group_members_cover_all_subtree_residues() {
+        // The property Theorem 1's proof relies on: a full group has one
+        // member with each residue (p-1) mod (f+1) = 0..f.
+        for f in 0..8u32 {
+            let n = 10 * (f + 1) + 3;
+            let g = UpCorrectionGroups::new(n, f);
+            for gid in 0..g.full_groups() {
+                let mut residues: Vec<u32> =
+                    g.members(gid).iter().map(|&p| (p - 1) % (f + 1)).collect();
+                residues.sort_unstable();
+                assert_eq!(residues, (0..=f).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn message_formula_spot_checks() {
+        // n=7,f=1: 1*2*3 + 1*0 = 6 (three pair exchanges).
+        assert_eq!(UpCorrectionGroups::new(7, 1).failure_free_messages(), 6);
+        // n=8,f=1: 6 full-group msgs + short group {0,7}: a=2 → 2 more.
+        assert_eq!(UpCorrectionGroups::new(8, 1).failure_free_messages(), 8);
+    }
+}

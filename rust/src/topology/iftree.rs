@@ -1,0 +1,213 @@
+//! The I(f)-tree of §4.5.
+//!
+//! Definition (paper): a tree whose root has `f+1` children, where the
+//! subtree sizes of any two children differ by at most one.
+//!
+//! We use the numbering scheme Theorem 1's proof fixes: the `k`-th
+//! subtree (k = 1..=f+1) contains exactly the ranks `p ≥ 1` with
+//! `(p-1) mod (f+1) == k-1`, i.e. subtree membership is round-robin.
+//! This makes each *full* up-correction group place exactly one member in
+//! every subtree. Within a subtree, members (ascending) form a binomial
+//! tree for logarithmic depth (the paper does not mandate the internal
+//! shape).
+//!
+//! Degenerate cases: when `n-1 < f+1` the root has only `n-1` children
+//! (singleton subtrees); `f = 0` yields a single subtree containing all
+//! non-root ranks.
+
+use super::binomial::BinomialTree;
+use crate::types::Rank;
+
+/// An I(f)-tree over virtual ranks `0..n` rooted at 0.
+#[derive(Clone, Debug)]
+pub struct IfTree {
+    n: u32,
+    f: u32,
+}
+
+impl IfTree {
+    pub fn new(n: u32, f: u32) -> Self {
+        assert!(n >= 1);
+        IfTree { n, f }
+    }
+
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    pub fn f(&self) -> u32 {
+        self.f
+    }
+
+    /// Number of subtrees of the root: `min(f+1, n-1)`.
+    pub fn num_subtrees(&self) -> u32 {
+        (self.f + 1).min(self.n.saturating_sub(1))
+    }
+
+    /// Subtree number (1-based, as in the paper) containing rank `p ≥ 1`.
+    pub fn subtree_of(&self, p: Rank) -> u32 {
+        assert!(p >= 1 && p < self.n);
+        ((p - 1) % (self.f + 1)) + 1
+    }
+
+    /// Ranks of subtree `k` (1-based), ascending: `k, k+(f+1), k+2(f+1)…`.
+    pub fn subtree_members(&self, k: u32) -> Vec<Rank> {
+        assert!(k >= 1 && k <= self.num_subtrees());
+        (0..)
+            .map(|i| k + i * (self.f + 1))
+            .take_while(|&p| p < self.n)
+            .collect()
+    }
+
+    pub fn subtree_size(&self, k: u32) -> u32 {
+        assert!(k >= 1 && k <= self.num_subtrees());
+        if self.n <= k {
+            return 0;
+        }
+        (self.n - 1 - k) / (self.f + 1) + 1
+    }
+
+    /// The index of `p` within its subtree's member list.
+    fn subtree_index(&self, p: Rank) -> u32 {
+        (p - 1) / (self.f + 1)
+    }
+
+    fn subtree_tree(&self, k: u32) -> BinomialTree {
+        BinomialTree::new(self.subtree_size(k))
+    }
+
+    /// Parent of `p` in the I(f)-tree (`None` for the root).
+    pub fn parent(&self, p: Rank) -> Option<Rank> {
+        assert!(p < self.n);
+        if p == 0 {
+            return None;
+        }
+        let k = self.subtree_of(p);
+        let idx = self.subtree_index(p);
+        match self.subtree_tree(k).parent(idx) {
+            None => Some(0), // subtree root's parent is the global root
+            Some(pi) => Some(k + pi * (self.f + 1)),
+        }
+    }
+
+    /// Children of `p` in the I(f)-tree. For the root these are the
+    /// subtree roots `1..=num_subtrees()`.
+    pub fn children(&self, p: Rank) -> Vec<Rank> {
+        assert!(p < self.n);
+        if p == 0 {
+            return (1..=self.num_subtrees()).collect();
+        }
+        let k = self.subtree_of(p);
+        let idx = self.subtree_index(p);
+        self.subtree_tree(k)
+            .children(idx)
+            .into_iter()
+            .map(|ci| k + ci * (self.f + 1))
+            .collect()
+    }
+
+    /// Longest root-to-leaf path in edges.
+    pub fn depth(&self) -> u32 {
+        if self.n == 1 {
+            return 0;
+        }
+        1 + self.subtree_tree(1).depth()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_figure2_tree() {
+        // n=7, f=1: subtrees {1,3,5} and {2,4,6}; Figure 2 shows 3,5 under
+        // 1 and 4,6 under 2 (internal shape unspecified in the paper; our
+        // binomial over [1,3,5] gives children(1) = {3,5}).
+        let t = IfTree::new(7, 1);
+        assert_eq!(t.num_subtrees(), 2);
+        assert_eq!(t.subtree_members(1), vec![1, 3, 5]);
+        assert_eq!(t.subtree_members(2), vec![2, 4, 6]);
+        assert_eq!(t.children(0), vec![1, 2]);
+        assert_eq!(t.children(1), vec![3, 5]);
+        assert_eq!(t.children(2), vec![4, 6]);
+        assert_eq!(t.parent(5), Some(1));
+        assert_eq!(t.parent(2), Some(0));
+    }
+
+    #[test]
+    fn subtree_sizes_differ_by_at_most_one() {
+        // The defining property of an I(f)-tree.
+        for n in 2..200u32 {
+            for f in 0..10u32 {
+                let t = IfTree::new(n, f);
+                let sizes: Vec<u32> =
+                    (1..=t.num_subtrees()).map(|k| t.subtree_size(k)).collect();
+                let mn = *sizes.iter().min().unwrap();
+                let mx = *sizes.iter().max().unwrap();
+                assert!(mx - mn <= 1, "n={n} f={f} sizes={sizes:?}");
+                assert_eq!(sizes.iter().sum::<u32>(), n - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn parent_child_consistency() {
+        for n in 1..120u32 {
+            for f in [0, 1, 2, 3, 7] {
+                let t = IfTree::new(n, f);
+                let mut child_count = vec![0u32; n as usize];
+                for p in 0..n {
+                    for c in t.children(p) {
+                        assert_eq!(t.parent(c), Some(p), "n={n} f={f} p={p} c={c}");
+                        child_count[c as usize] += 1;
+                    }
+                }
+                assert_eq!(child_count[0], 0);
+                for p in 1..n {
+                    assert_eq!(child_count[p as usize], 1, "n={n} f={f} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn subtree_membership_matches_residue() {
+        let t = IfTree::new(100, 3);
+        for p in 1..100 {
+            let k = t.subtree_of(p);
+            assert!(t.subtree_members(k).contains(&p));
+            assert_eq!((p - 1) % 4, k - 1);
+        }
+    }
+
+    #[test]
+    fn degenerate_small_n() {
+        // n=3, f=3: two singleton subtrees.
+        let t = IfTree::new(3, 3);
+        assert_eq!(t.num_subtrees(), 2);
+        assert_eq!(t.children(0), vec![1, 2]);
+        assert_eq!(t.children(1), Vec::<Rank>::new());
+        assert_eq!(t.subtree_size(1), 1);
+        // n=1: root only.
+        let t1 = IfTree::new(1, 2);
+        assert_eq!(t1.num_subtrees(), 0);
+        assert_eq!(t1.children(0), Vec::<Rank>::new());
+        assert_eq!(t1.depth(), 0);
+    }
+
+    #[test]
+    fn f0_is_single_binomial_subtree() {
+        let t = IfTree::new(9, 0);
+        assert_eq!(t.num_subtrees(), 1);
+        assert_eq!(t.children(0), vec![1]);
+        assert_eq!(t.subtree_members(1), (1..9).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn depth_logarithmic() {
+        let t = IfTree::new(1025, 3);
+        // subtree size 256 → binomial depth 8 → +1 for the root edge
+        assert_eq!(t.depth(), 9);
+    }
+}

@@ -1,0 +1,133 @@
+//! Membership management: acting on the failed-process list.
+//!
+//! §4.4: "One potential use of the list of failed processes is to make
+//! that information available to all processes, to exclude failed
+//! processes in future operations." The paper leaves this open ("not
+//! described here further"); this module supplies the missing piece the
+//! way MPI groups do (§1's footnote): a dense relabeling of the
+//! surviving ranks, so subsequent collectives run on a smaller `n` with
+//! a smaller `f` — paying the Theorem 5 cost of the *survivor* count
+//! instead of timing out on known-dead peers ever again.
+
+use crate::types::Rank;
+
+/// A communicator-like view: world ranks ↔ dense live ranks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Membership {
+    /// Sorted world ranks that are members.
+    world: Vec<Rank>,
+}
+
+impl Membership {
+    /// The full world of `n` processes.
+    pub fn world(n: u32) -> Membership {
+        Membership { world: (0..n).collect() }
+    }
+
+    /// Construct from an explicit (unsorted, possibly duplicated)
+    /// member list.
+    pub fn from_members(mut members: Vec<Rank>) -> Membership {
+        members.sort_unstable();
+        members.dedup();
+        assert!(!members.is_empty(), "membership cannot be empty");
+        Membership { world: members }
+    }
+
+    /// Exclude `failed` (e.g. a reduce outcome's `known_failed` list);
+    /// returns the shrunk membership.
+    pub fn exclude(&self, failed: &[Rank]) -> Membership {
+        let world: Vec<Rank> =
+            self.world.iter().copied().filter(|r| !failed.contains(r)).collect();
+        assert!(!world.is_empty(), "excluding everyone leaves no communicator");
+        Membership { world }
+    }
+
+    /// Number of live members (the `n` for the next collective).
+    pub fn len(&self) -> u32 {
+        self.world.len() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.world.is_empty()
+    }
+
+    /// Dense rank of a world rank, if a member.
+    pub fn dense_of(&self, world: Rank) -> Option<Rank> {
+        self.world.binary_search(&world).ok().map(|i| i as Rank)
+    }
+
+    /// World rank of a dense rank.
+    pub fn world_of(&self, dense: Rank) -> Rank {
+        self.world[dense as usize]
+    }
+
+    pub fn members(&self) -> &[Rank] {
+        &self.world
+    }
+
+    /// Is `world` a member?
+    pub fn contains(&self, world: Rank) -> bool {
+        self.dense_of(world).is_some()
+    }
+
+    /// The largest tolerance the shrunk group can still promise if the
+    /// original promise was `f` and `already_failed` of those failures
+    /// have been observed and excluded.
+    pub fn remaining_f(&self, f: u32, already_failed: u32) -> u32 {
+        f.saturating_sub(already_failed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_identity() {
+        let m = Membership::world(5);
+        assert_eq!(m.len(), 5);
+        for r in 0..5 {
+            assert_eq!(m.dense_of(r), Some(r));
+            assert_eq!(m.world_of(r), r);
+        }
+    }
+
+    #[test]
+    fn exclusion_relabels_densely() {
+        let m = Membership::world(7).exclude(&[1, 4]);
+        assert_eq!(m.len(), 5);
+        assert_eq!(m.members(), &[0, 2, 3, 5, 6]);
+        assert_eq!(m.dense_of(0), Some(0));
+        assert_eq!(m.dense_of(2), Some(1));
+        assert_eq!(m.dense_of(6), Some(4));
+        assert_eq!(m.dense_of(1), None);
+        assert_eq!(m.world_of(3), 5);
+        assert!(!m.contains(4));
+    }
+
+    #[test]
+    fn exclusion_composes() {
+        let m = Membership::world(8).exclude(&[7]).exclude(&[0, 3]);
+        assert_eq!(m.members(), &[1, 2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn from_members_sorts_and_dedups() {
+        let m = Membership::from_members(vec![5, 1, 5, 3]);
+        assert_eq!(m.members(), &[1, 3, 5]);
+    }
+
+    #[test]
+    fn remaining_tolerance() {
+        let m = Membership::world(8).exclude(&[2, 5]);
+        assert_eq!(m.remaining_f(3, 2), 1);
+        assert_eq!(m.remaining_f(2, 2), 0);
+        assert_eq!(m.remaining_f(1, 2), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no communicator")]
+    fn cannot_exclude_everyone() {
+        Membership::from_members(vec![0]).exclude(&[0]);
+    }
+}

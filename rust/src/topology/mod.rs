@@ -1,0 +1,23 @@
+//! Communication topologies used by the collectives.
+//!
+//! * [`groups`] — the up-correction groups of §4.2,
+//! * [`iftree`] — the I(f)-tree of §4.5 (Definition before Theorem 1),
+//! * [`binomial`] — binomial trees, used inside each I(f)-subtree and by
+//!   the non-fault-tolerant baseline reduce/broadcast,
+//! * [`ring`] — the ring order used by corrected-tree broadcast and the
+//!   ring-allreduce baseline,
+//! * [`rankmap`] — the "swap with process 0" root normalization of §4.
+
+pub mod binomial;
+pub mod groups;
+pub mod iftree;
+pub mod membership;
+pub mod rankmap;
+pub mod ring;
+
+pub use binomial::BinomialTree;
+pub use groups::UpCorrectionGroups;
+pub use iftree::IfTree;
+pub use membership::Membership;
+pub use rankmap::RankMap;
+pub use ring::Ring;

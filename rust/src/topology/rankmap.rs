@@ -1,0 +1,68 @@
+//! Root normalization (§4): "Without loss of generality it is assumed
+//! that the recipient of the reduce (i.e., the root) is process 0. If
+//! this is not the case, its number can be swapped with that of
+//! process 0."
+//!
+//! All topology math (groups, I(f)-tree) operates on *virtual* ranks
+//! where the root is 0; `RankMap` performs the swap in both directions.
+
+use crate::types::Rank;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RankMap {
+    root: Rank,
+}
+
+impl RankMap {
+    pub fn new(root: Rank) -> Self {
+        RankMap { root }
+    }
+
+    pub fn root(&self) -> Rank {
+        self.root
+    }
+
+    /// Real rank → virtual rank (root becomes 0, 0 becomes root).
+    #[inline]
+    pub fn to_virtual(&self, real: Rank) -> Rank {
+        if real == self.root {
+            0
+        } else if real == 0 {
+            self.root
+        } else {
+            real
+        }
+    }
+
+    /// Virtual rank → real rank (the swap is an involution).
+    #[inline]
+    pub fn to_real(&self, virt: Rank) -> Rank {
+        self.to_virtual(virt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_is_involution() {
+        for root in 0..10 {
+            let m = RankMap::new(root);
+            for r in 0..10 {
+                assert_eq!(m.to_real(m.to_virtual(r)), r);
+                assert_eq!(m.to_virtual(m.to_real(r)), r);
+            }
+            assert_eq!(m.to_virtual(root), 0);
+            assert_eq!(m.to_real(0), root);
+        }
+    }
+
+    #[test]
+    fn identity_when_root_is_zero() {
+        let m = RankMap::new(0);
+        for r in 0..16 {
+            assert_eq!(m.to_virtual(r), r);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Ring order over `n` ranks, rooted at an arbitrary rank.
+//!
+//! The corrected-tree broadcast (the substrate required by §5, published
+//! as [Küttler et al., PPoPP'19]) sends correction messages to ring
+//! successors; the ring-allreduce baseline also uses this module.
+//!
+//! `Ring::new(n, root)` places `root` at virtual position 0; virtual
+//! position `i` is real rank `(root + i) mod n`.
+
+use crate::types::Rank;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Ring {
+    n: u32,
+    root: Rank,
+}
+
+impl Ring {
+    pub fn new(n: u32, root: Rank) -> Self {
+        assert!(n >= 1 && root < n);
+        Ring { n, root }
+    }
+
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    /// Virtual position of real rank `r` (root ↦ 0).
+    pub fn position(&self, r: Rank) -> u32 {
+        assert!(r < self.n);
+        (r + self.n - self.root) % self.n
+    }
+
+    /// Real rank at virtual position `i`.
+    pub fn rank_at(&self, i: u32) -> Rank {
+        (self.root + i % self.n) % self.n
+    }
+
+    /// The real rank `d` positions after `r` on the ring.
+    pub fn successor(&self, r: Rank, d: u32) -> Rank {
+        assert!(r < self.n);
+        (r + d % self.n) % self.n
+    }
+
+    /// The real rank `d` positions before `r` on the ring.
+    pub fn predecessor(&self, r: Rank, d: u32) -> Rank {
+        assert!(r < self.n);
+        (r + self.n - d % self.n) % self.n
+    }
+
+    /// Ring distance from `a` forward to `b`.
+    pub fn distance(&self, a: Rank, b: Rank) -> u32 {
+        (b + self.n - a) % self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positions_round_trip() {
+        let r = Ring::new(7, 3);
+        for i in 0..7 {
+            assert_eq!(r.position(r.rank_at(i)), i);
+        }
+        assert_eq!(r.position(3), 0);
+        assert_eq!(r.rank_at(0), 3);
+        assert_eq!(r.rank_at(6), 2);
+    }
+
+    #[test]
+    fn successors_wrap() {
+        let r = Ring::new(5, 0);
+        assert_eq!(r.successor(4, 1), 0);
+        assert_eq!(r.successor(3, 4), 2);
+        assert_eq!(r.predecessor(0, 1), 4);
+        assert_eq!(r.predecessor(2, 4), 3);
+    }
+
+    #[test]
+    fn distance_consistent_with_successor() {
+        let r = Ring::new(9, 4);
+        for a in 0..9 {
+            for d in 0..9 {
+                let b = r.successor(a, d);
+                assert_eq!(r.distance(a, b), d);
+            }
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Structured event traces.
+//!
+//! The paper's Figures 1-2 are message diagrams annotated with "the
+//! values of which processes are included in the respective message".
+//! The tracer records exactly that: every send with its inclusion set
+//! (when the payload is an inclusion mask) so `examples/paper_figures.rs`
+//! can re-print the figures, and a JSON dump for offline inspection
+//! (hand-rolled writer — no serde in the offline image).
+
+use crate::types::{MsgKind, Rank, TimeNs};
+
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    Send {
+        t: TimeNs,
+        from: Rank,
+        to: Rank,
+        kind: MsgKind,
+        /// Ranks whose contribution the payload includes (only when the
+        /// payload is an `I64` inclusion mask, else empty).
+        includes: Vec<Rank>,
+        bytes: usize,
+    },
+    Detect {
+        t: TimeNs,
+        at: Rank,
+        peer: Rank,
+    },
+    Deliver {
+        t: TimeNs,
+        rank: Rank,
+        what: String,
+    },
+    Kill {
+        t: TimeNs,
+        rank: Rank,
+        pre_operational: bool,
+    },
+}
+
+impl TraceEvent {
+    pub fn t(&self) -> TimeNs {
+        match self {
+            TraceEvent::Send { t, .. }
+            | TraceEvent::Detect { t, .. }
+            | TraceEvent::Deliver { t, .. }
+            | TraceEvent::Kill { t, .. } => *t,
+        }
+    }
+}
+
+/// An append-only trace. Disabled (all pushes no-ops) unless constructed
+/// with `Trace::enabled()` — the hot path checks one bool.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    enabled: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn disabled() -> Self {
+        Trace { enabled: false, events: Vec::new() }
+    }
+
+    pub fn enabled() -> Self {
+        Trace { enabled: true, events: Vec::new() }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.enabled {
+            self.events.push(ev);
+        }
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn sends(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter().filter(|e| matches!(e, TraceEvent::Send { .. }))
+    }
+
+    /// Render as a JSON array (hand-rolled; stable field order).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                s.push_str(",\n");
+            }
+            match e {
+                TraceEvent::Send { t, from, to, kind, includes, bytes } => {
+                    s.push_str(&format!(
+                        "  {{\"ev\":\"send\",\"t\":{t},\"from\":{from},\"to\":{to},\
+                         \"kind\":\"{}\",\"includes\":{:?},\"bytes\":{bytes}}}",
+                        kind.name(),
+                        includes
+                    ));
+                }
+                TraceEvent::Detect { t, at, peer } => {
+                    s.push_str(&format!(
+                        "  {{\"ev\":\"detect\",\"t\":{t},\"at\":{at},\"peer\":{peer}}}"
+                    ));
+                }
+                TraceEvent::Deliver { t, rank, what } => {
+                    s.push_str(&format!(
+                        "  {{\"ev\":\"deliver\",\"t\":{t},\"rank\":{rank},\"what\":\"{what}\"}}"
+                    ));
+                }
+                TraceEvent::Kill { t, rank, pre_operational } => {
+                    s.push_str(&format!(
+                        "  {{\"ev\":\"kill\",\"t\":{t},\"rank\":{rank},\"pre\":{pre_operational}}}"
+                    ));
+                }
+            }
+        }
+        s.push_str("\n]\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::disabled();
+        t.push(TraceEvent::Kill { t: 0, rank: 1, pre_operational: true });
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn enabled_trace_records_in_order() {
+        let mut t = Trace::enabled();
+        t.push(TraceEvent::Kill { t: 0, rank: 1, pre_operational: true });
+        t.push(TraceEvent::Send {
+            t: 5,
+            from: 3,
+            to: 4,
+            kind: MsgKind::UpCorrection,
+            includes: vec![3],
+            bytes: 24,
+        });
+        assert_eq!(t.events().len(), 2);
+        assert_eq!(t.events()[1].t(), 5);
+        assert_eq!(t.sends().count(), 1);
+    }
+
+    #[test]
+    fn json_is_wellformed_array() {
+        let mut t = Trace::enabled();
+        t.push(TraceEvent::Deliver { t: 9, rank: 0, what: "reduce".into() });
+        let j = t.to_json();
+        assert!(j.starts_with("[\n"));
+        assert!(j.trim_end().ends_with(']'));
+        assert!(j.contains("\"ev\":\"deliver\""));
+    }
+}

@@ -1,0 +1,227 @@
+//! Core value and message types shared by all collectives and executors.
+//!
+//! The paper treats payloads abstractly ("the data contributed by this
+//! process", §4). We support three concrete carriers:
+//!
+//! * [`Value::F32`] — the production payload (what the PJRT-compiled
+//!   combine artifacts operate on),
+//! * [`Value::F64`] — a high-precision carrier used by simulations and
+//!   latency models,
+//! * [`Value::I64`] — an exact integer carrier used by the test suite to
+//!   encode *inclusion masks* (one-hot per rank), so that the "included
+//!   exactly once / all-or-nothing" semantics of §4.1 and §5.1 are checked
+//!   exactly, with duplicate inclusions detectable.
+
+use crate::collectives::failure_info::FailureInfo;
+
+/// Process identifier, 0-based; the paper calls these "process numbers"
+/// (MPI would say ranks). The reduce root is normalized to rank 0
+/// internally (§4: "Without loss of generality ... the root is process 0").
+pub type Rank = u32;
+
+/// Virtual time in nanoseconds (discrete-event simulator) or elapsed
+/// nanoseconds (live engine metrics).
+pub type TimeNs = u64;
+
+/// A reduction payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// f32 vector — the production payload type; combined either natively
+    /// or through an AOT-compiled XLA artifact.
+    F32(Vec<f32>),
+    /// f64 vector — used by the DES experiments.
+    F64(Vec<f64>),
+    /// i64 vector — exact carrier for semantics tests (inclusion masks).
+    I64(Vec<i64>),
+}
+
+impl Value {
+    /// Payload size on the wire in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        match self {
+            Value::F32(v) => 4 * v.len(),
+            Value::F64(v) => 8 * v.len(),
+            Value::I64(v) => 8 * v.len(),
+        }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            Value::F32(v) => v.len(),
+            Value::F64(v) => v.len(),
+            Value::I64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One-hot inclusion mask over `n` ranks with a 1 at `rank`.
+    /// Summing these under the `Sum` op yields, per index `i`, the exact
+    /// number of times rank `i`'s contribution is included in the result —
+    /// the quantity Theorems 1-4 reason about.
+    pub fn one_hot(n: usize, rank: Rank) -> Value {
+        let mut v = vec![0i64; n];
+        v[rank as usize] = 1;
+        Value::I64(v)
+    }
+
+    /// Scalar f64 view of a length-1 value (panics otherwise); convenience
+    /// for the paper's rank-sum worked example.
+    pub fn as_f64_scalar(&self) -> f64 {
+        match self {
+            Value::F64(v) if v.len() == 1 => v[0],
+            Value::F32(v) if v.len() == 1 => v[0] as f64,
+            Value::I64(v) if v.len() == 1 => v[0] as f64,
+            other => panic!("as_f64_scalar on non-scalar value {other:?}"),
+        }
+    }
+
+    /// Inclusion counts for the `I64` mask carrier.
+    pub fn inclusion_counts(&self) -> &[i64] {
+        match self {
+            Value::I64(v) => v,
+            other => panic!("inclusion_counts on non-I64 value {other:?}"),
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            Value::F32(v) => v,
+            other => panic!("as_f32 on {other:?}"),
+        }
+    }
+}
+
+/// The kind of a protocol message; determines which phase the message
+/// belongs to and is used for per-phase accounting (Theorem 5 counts
+/// up-correction and tree-phase messages separately).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MsgKind {
+    /// Up-correction exchange (Algorithm 1).
+    UpCorrection,
+    /// Tree-phase contribution sent towards the parent (Algorithms 2-3).
+    TreeUp,
+    /// Broadcast dissemination along the tree.
+    BcastTree,
+    /// Broadcast ring-correction message.
+    BcastCorrection,
+    /// Baseline traffic (flat gather, ring allreduce, gossip, ...).
+    Baseline,
+}
+
+impl MsgKind {
+    pub const ALL: [MsgKind; 5] = [
+        MsgKind::UpCorrection,
+        MsgKind::TreeUp,
+        MsgKind::BcastTree,
+        MsgKind::BcastCorrection,
+        MsgKind::Baseline,
+    ];
+
+    /// Dense index for array-backed per-kind counters (hot path).
+    #[inline]
+    pub fn index(&self) -> usize {
+        match self {
+            MsgKind::UpCorrection => 0,
+            MsgKind::TreeUp => 1,
+            MsgKind::BcastTree => 2,
+            MsgKind::BcastCorrection => 3,
+            MsgKind::Baseline => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MsgKind::UpCorrection => "up_correction",
+            MsgKind::TreeUp => "tree_up",
+            MsgKind::BcastTree => "bcast_tree",
+            MsgKind::BcastCorrection => "bcast_correction",
+            MsgKind::Baseline => "baseline",
+        }
+    }
+}
+
+/// A network message. The paper's reduce message carries "(a descriptor
+/// of) the set of participating processes" and "a unique id" (§4); we
+/// carry the id in `op`, the attempt number of allreduce's root rotation
+/// in `epoch`, and the data + failure information of §4.4 inline.
+#[derive(Clone, Debug)]
+pub struct Msg {
+    /// Unique id of the collective operation this message belongs to.
+    pub op: u64,
+    /// Allreduce root-rotation attempt (0 for plain reduce/broadcast).
+    pub epoch: u32,
+    pub kind: MsgKind,
+    pub payload: Value,
+    /// Accumulated failure information (§4.4). Empty for broadcasts.
+    pub finfo: FailureInfo,
+}
+
+impl Msg {
+    /// Total bytes on the wire: 16-byte header (op id, epoch, kind, len)
+    /// + payload + failure-information encoding.
+    pub fn wire_bytes(&self) -> usize {
+        16 + self.payload.wire_bytes() + self.finfo.wire_bytes()
+    }
+}
+
+/// Errors a collective can deliver instead of a value.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ProtoError {
+    /// More than `f` failures: every subtree of the root reported a
+    /// failure (the `raise Error("No failure-free subtree")` of Alg. 2).
+    #[error("no failure-free subtree at the root (more than f failures?)")]
+    NoFailureFreeSubtree,
+    /// Allreduce ran out of root candidates (more than f candidate roots
+    /// failed, violating the §5.1 assumption).
+    #[error("all {0} allreduce root candidates failed")]
+    RootCandidatesExhausted(u32),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hot_mask_shape() {
+        let v = Value::one_hot(5, 3);
+        assert_eq!(v.inclusion_counts(), &[0, 0, 0, 1, 0]);
+        assert_eq!(v.wire_bytes(), 40);
+        assert_eq!(v.len(), 5);
+    }
+
+    #[test]
+    fn scalar_views() {
+        assert_eq!(Value::F64(vec![4.25]).as_f64_scalar(), 4.25);
+        assert_eq!(Value::F32(vec![2.0]).as_f64_scalar(), 2.0);
+        assert_eq!(Value::I64(vec![7]).as_f64_scalar(), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn scalar_view_rejects_vectors() {
+        Value::F64(vec![1.0, 2.0]).as_f64_scalar();
+    }
+
+    #[test]
+    fn msg_wire_bytes_includes_header_payload_finfo() {
+        let m = Msg {
+            op: 1,
+            epoch: 0,
+            kind: MsgKind::TreeUp,
+            payload: Value::F32(vec![0.0; 8]),
+            finfo: FailureInfo::Bit(false),
+        };
+        assert_eq!(m.wire_bytes(), 16 + 32 + 1);
+    }
+
+    #[test]
+    fn kind_names_unique() {
+        let names: std::collections::HashSet<_> =
+            MsgKind::ALL.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), MsgKind::ALL.len());
+    }
+}

@@ -1,0 +1,164 @@
+//! Property tests for the §5.1 allreduce semantics.
+
+use ftcoll::failure::injector::{random_plan, FailureMix};
+use ftcoll::failure::FailureSpec;
+use ftcoll::prelude::*;
+use ftcoll::proptest_lite::{run_cases, PropConfig};
+use ftcoll::sim;
+use ftcoll::{prop_assert, prop_assert_eq};
+
+/// Checks clauses 2-5 of §5.1 on one run. The candidate set is `0..=f`
+/// (the default); `plan` must leave at least one candidate alive.
+fn check_allreduce(n: u32, f: u32, plan: Vec<FailureSpec>) -> Result<(), String> {
+    let failed: Vec<u32> = plan.iter().map(|s| s.rank()).collect();
+    let cfg = SimConfig::new(n, f).payload(PayloadKind::OneHot).failures(plan);
+    let rep = sim::run_allreduce(&cfg);
+
+    let mut agreed: Option<Vec<i64>> = None;
+    for r in 0..n {
+        if failed.contains(&r) {
+            continue;
+        }
+        // clause 3: eventual delivery; clause 2: at most once
+        prop_assert_eq!(rep.deliveries_at(r), 1, "rank {r} n={n} f={f} failed={failed:?}");
+        match rep.outcomes[r as usize].first() {
+            Some(Outcome::Allreduce { value, .. }) => {
+                let counts = value.inclusion_counts().to_vec();
+                // clause 4: all non-failed included (exactly once)
+                for q in 0..n as usize {
+                    if failed.contains(&(q as u32)) {
+                        prop_assert!(
+                            counts[q] <= 1,
+                            "failed {q} included {}x at rank {r}",
+                            counts[q]
+                        );
+                    } else {
+                        prop_assert_eq!(counts[q], 1, "rank {q} at rank {r} (n={n} f={f})");
+                    }
+                }
+                // clause 5: all-or-nothing across processes = agreement
+                match &agreed {
+                    None => agreed = Some(counts),
+                    Some(prev) => {
+                        prop_assert_eq!(prev, &counts, "rank {r} disagrees (n={n} f={f})")
+                    }
+                }
+            }
+            other => return Err(format!("rank {r}: {other:?} (n={n} f={f})")),
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn semantics_failure_free() {
+    run_cases("allreduce/clean", PropConfig { iters: 32, ..Default::default() }, |rng| {
+        let n = rng.range(1, 80) as u32;
+        let f = rng.range(0, 4.min(n as u64 - 1).max(0)) as u32;
+        check_allreduce(n, f, Vec::new())
+    });
+}
+
+#[test]
+fn semantics_with_non_candidate_failures() {
+    run_cases("allreduce/non-candidate", PropConfig::default(), |rng| {
+        let n = rng.range(8, 80) as u32;
+        let f = rng.range(1, 4) as u32;
+        let k = rng.range(0, f as u64) as usize;
+        // victims outside the candidate set 0..=f
+        let pool: Vec<u32> = (f + 1..n).collect();
+        let plan = random_plan(
+            rng,
+            &pool,
+            k,
+            FailureMix::Mixed { p_pre: 0.5, max_sends: 2 * f + 3 },
+        );
+        check_allreduce(n, f, plan)
+    });
+}
+
+#[test]
+fn semantics_with_dead_candidate_roots() {
+    run_cases("allreduce/dead-roots", PropConfig::default(), |rng| {
+        let n = rng.range(8, 64) as u32;
+        let f = rng.range(1, 4) as u32;
+        // kill a prefix of the candidate set pre-operationally (the
+        // §5.1 contract: candidates fail only pre-operationally)
+        let dead_roots = rng.range(1, f as u64) as u32;
+        let plan: Vec<FailureSpec> =
+            (0..dead_roots).map(|rank| FailureSpec::Pre { rank }).collect();
+        let failed: Vec<u32> = (0..dead_roots).collect();
+        let cfg =
+            SimConfig::new(n, f).payload(PayloadKind::OneHot).failures(plan);
+        let rep = sim::run_allreduce(&cfg);
+        for r in 0..n {
+            if failed.contains(&r) {
+                continue;
+            }
+            match rep.outcomes[r as usize].first() {
+                Some(Outcome::Allreduce { attempts, .. }) => {
+                    prop_assert_eq!(
+                        *attempts,
+                        dead_roots + 1,
+                        "rank {r}: wrong attempt count (n={n} f={f})"
+                    );
+                }
+                other => return Err(format!("rank {r}: {other:?}")),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn all_candidates_dead_is_an_explicit_error() {
+    let n = 12u32;
+    let f = 2u32;
+    let plan: Vec<FailureSpec> = (0..=f).map(|rank| FailureSpec::Pre { rank }).collect();
+    let cfg = SimConfig::new(n, f).failures(plan);
+    let rep = sim::run_allreduce(&cfg);
+    for r in f + 1..n {
+        match rep.outcomes[r as usize].first() {
+            Some(Outcome::Error(ftcoll::types::ProtoError::RootCandidatesExhausted(3))) => {}
+            other => panic!("rank {r}: expected exhaustion error, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn custom_candidate_sets_are_honored() {
+    // candidates {5, 9}: rank 5 dead → one rotation, root 9 serves
+    let cfg = SimConfig::new(16, 1)
+        .payload(PayloadKind::RankValue)
+        .failure(FailureSpec::Pre { rank: 5 })
+        .candidates(vec![5, 9]);
+    let rep = sim::run_allreduce(&cfg);
+    let expect: f64 = (0..16).filter(|&r| r != 5).map(|r| r as f64).sum();
+    for r in 0..16u32 {
+        if r == 5 {
+            continue;
+        }
+        match rep.outcomes[r as usize].first() {
+            Some(Outcome::Allreduce { value, attempts }) => {
+                assert_eq!(value.as_f64_scalar(), expect, "rank {r}");
+                assert_eq!(*attempts, 2, "rank {r}");
+            }
+            o => panic!("rank {r}: {o:?}"),
+        }
+    }
+}
+
+#[test]
+fn allreduce_deterministic() {
+    run_cases("allreduce/deterministic", PropConfig { iters: 12, ..Default::default() }, |rng| {
+        let n = rng.range(4, 64) as u32;
+        let f = rng.range(1, 3) as u32;
+        let plan = vec![FailureSpec::Pre { rank: rng.range(f as u64 + 1, n as u64 - 1) as u32 }];
+        let cfg = SimConfig::new(n, f).payload(PayloadKind::OneHot).failures(plan);
+        let a = sim::run_allreduce(&cfg);
+        let b = sim::run_allreduce(&cfg);
+        prop_assert_eq!(a.final_time, b.final_time, "n={n} f={f}");
+        prop_assert_eq!(a.metrics.total_msgs(), b.metrics.total_msgs(), "n={n} f={f}");
+        Ok(())
+    });
+}

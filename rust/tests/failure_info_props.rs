@@ -1,0 +1,135 @@
+//! Properties of the three §4.4 failure-information schemes, end to end:
+//! equivalence of the root's selection decision, byte-overhead ordering,
+//! and the diagnostic value of the full list.
+
+use ftcoll::collectives::failure_info::{FailureInfo, Scheme};
+use ftcoll::failure::injector::{non_root_candidates, random_plan, FailureMix};
+use ftcoll::prelude::*;
+use ftcoll::prng::Pcg;
+use ftcoll::proptest_lite::{run_cases, PropConfig};
+use ftcoll::sim;
+use ftcoll::{prop_assert, prop_assert_eq};
+
+/// All three schemes lead the root to an equally-correct value on the
+/// same failure plan (§4.4: they differ in information, not validity).
+#[test]
+fn schemes_select_equivalent_results() {
+    run_cases("finfo/equivalent", PropConfig::default(), |rng| {
+        let n = rng.range(4, 96) as u32;
+        let f = rng.range(1, 5) as u32;
+        let k = rng.range(0, f.min(n - 1) as u64) as usize;
+        let plan = random_plan(rng, &non_root_candidates(n, 0), k, FailureMix::AllPre);
+        let failed: Vec<u32> = plan.iter().map(|s| s.rank()).collect();
+        let mut values = Vec::new();
+        for scheme in Scheme::ALL {
+            let cfg = SimConfig::new(n, f)
+                .scheme(scheme)
+                .payload(PayloadKind::OneHot)
+                .failures(plan.clone());
+            let rep = sim::run_reduce(&cfg);
+            let counts = rep
+                .root_value()
+                .ok_or_else(|| format!("{scheme:?}: no root value (n={n} f={f})"))?
+                .inclusion_counts()
+                .to_vec();
+            // pre-operational failures admit exactly one correct answer
+            let expect: Vec<i64> = (0..n)
+                .map(|r| i64::from(!failed.contains(&r)))
+                .collect();
+            prop_assert_eq!(&counts, &expect, "{scheme:?} n={n} f={f} failed={failed:?}");
+            values.push(counts);
+        }
+        Ok(())
+    });
+}
+
+/// Wire-byte ordering: bit ≤ count+bit ≤ list, strictly once failures
+/// are present and n is non-trivial.
+#[test]
+fn scheme_overhead_ordering() {
+    run_cases("finfo/ordering", PropConfig { iters: 48, ..Default::default() }, |rng| {
+        let n = rng.range(8, 256) as u32;
+        let f = rng.range(1, 5) as u32;
+        let k = rng.range(0, f.min(n - 1) as u64) as usize;
+        let plan = random_plan(rng, &non_root_candidates(n, 0), k, FailureMix::AllPre);
+        let mut bytes = Vec::new();
+        for scheme in Scheme::ALL {
+            let cfg = SimConfig::new(n, f).scheme(scheme).failures(plan.clone());
+            bytes.push(sim::run_reduce(&cfg).metrics.finfo_bytes());
+        }
+        let (list, countbit, bit) = (bytes[0], bytes[1], bytes[2]);
+        prop_assert!(bit <= countbit, "bit {bit} > count+bit {countbit} (n={n})");
+        prop_assert!(countbit <= list + 4 * n as u64, "count+bit way over list (n={n})");
+        prop_assert!(bit < list, "bit {bit} >= list {list} (n={n} — list has 2-byte floor)");
+        Ok(())
+    });
+}
+
+/// The List scheme's extra value: the root learns the full failed set
+/// ("to exclude failed processes in future operations").
+#[test]
+fn list_scheme_reports_all_preop_failures() {
+    run_cases("finfo/list-report", PropConfig::default(), |rng| {
+        let n = rng.range(6, 128) as u32;
+        let f = rng.range(1, 5) as u32;
+        let k = rng.range(1, f.min(n - 1).max(1) as u64) as usize;
+        let plan = random_plan(rng, &non_root_candidates(n, 0), k, FailureMix::AllPre);
+        let mut failed: Vec<u32> = plan.iter().map(|s| s.rank()).collect();
+        failed.sort_unstable();
+        let cfg = SimConfig::new(n, f)
+            .scheme(Scheme::List)
+            .payload(PayloadKind::RankValue)
+            .failures(plan);
+        let rep = sim::run_reduce(&cfg);
+        match rep.root_outcome() {
+            Some(Outcome::ReduceRoot { known_failed, .. }) => {
+                prop_assert_eq!(known_failed, &failed, "n={n} f={f}");
+            }
+            other => return Err(format!("{other:?}")),
+        }
+        Ok(())
+    });
+}
+
+/// Merging is associative and order-insensitive for the aggregate
+/// quantities the root consumes (count, bit, membership test).
+#[test]
+fn merge_order_insensitive() {
+    let mut rng = Pcg::new(4242);
+    for _ in 0..200 {
+        for scheme in Scheme::ALL {
+            let mut parts: Vec<FailureInfo> = (0..4)
+                .map(|_| {
+                    let mut fi = FailureInfo::empty(scheme);
+                    for _ in 0..rng.below(3) {
+                        let r = rng.below(64) as u32;
+                        if rng.bool(0.5) {
+                            fi.record_tree_failure(r);
+                        } else {
+                            fi.record_upcorr_failure(r);
+                        }
+                    }
+                    fi
+                })
+                .collect();
+
+            let mut forward = FailureInfo::empty(scheme);
+            for p in &parts {
+                forward.merge_child(p);
+            }
+            rng.shuffle(&mut parts);
+            let mut shuffled = FailureInfo::empty(scheme);
+            for p in &parts {
+                shuffled.merge_child(p);
+            }
+            assert_eq!(forward.count(), shuffled.count(), "{scheme:?}");
+            for probe in 0..64u32 {
+                assert_eq!(
+                    forward.subtree_valid(|r| r == probe),
+                    shuffled.subtree_valid(|r| r == probe),
+                    "{scheme:?} probe {probe}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! Live threaded-engine integration: the same protocols the DES checks,
+//! now across real OS threads, channels and the shared failure monitor —
+//! including repeated back-to-back collectives (the dp_train usage
+//! pattern that exposed the start/message race).
+
+use ftcoll::collectives::Outcome;
+use ftcoll::coordinator::{live_allreduce, live_reduce, EngineConfig};
+use ftcoll::failure::FailureSpec;
+use ftcoll::prelude::*;
+
+#[test]
+fn reduce_matches_des_result() {
+    for n in [1u32, 2, 7, 16, 33] {
+        for f in [0u32, 1, 3] {
+            let mut ecfg = EngineConfig::new(n, f);
+            ecfg.payload = PayloadKind::RankValue;
+            let live = live_reduce(&ecfg, 0);
+            let des = ftcoll::sim::run_reduce(&SimConfig::new(n, f));
+            match live.outcomes[0].as_ref() {
+                Some(Outcome::ReduceRoot { value, .. }) => assert_eq!(
+                    value.as_f64_scalar(),
+                    des.root_value().unwrap().as_f64_scalar(),
+                    "n={n} f={f}"
+                ),
+                o => panic!("n={n} f={f}: {o:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn figure2_on_real_threads() {
+    let mut ecfg = EngineConfig::new(7, 1);
+    ecfg.payload = PayloadKind::RankValue;
+    ecfg.failures = vec![FailureSpec::Pre { rank: 1 }];
+    let rep = live_reduce(&ecfg, 0);
+    match rep.outcomes[0].as_ref().unwrap() {
+        Outcome::ReduceRoot { value, known_failed } => {
+            assert_eq!(value.as_f64_scalar(), 20.0);
+            assert_eq!(known_failed, &vec![1]);
+        }
+        o => panic!("unexpected {o:?}"),
+    }
+}
+
+#[test]
+fn allreduce_agreement_across_threads() {
+    let mut ecfg = EngineConfig::new(12, 2);
+    ecfg.payload = PayloadKind::OneHot;
+    ecfg.failures = vec![FailureSpec::Pre { rank: 7 }];
+    let rep = live_allreduce(&ecfg);
+    let mut agreed: Option<Vec<i64>> = None;
+    for r in 0..12u32 {
+        if r == 7 {
+            assert!(rep.outcomes[7].is_none());
+            continue;
+        }
+        match rep.outcomes[r as usize].as_ref() {
+            Some(Outcome::Allreduce { value, .. }) => {
+                let c = value.inclusion_counts().to_vec();
+                match &agreed {
+                    None => agreed = Some(c),
+                    Some(prev) => assert_eq!(prev, &c, "rank {r}"),
+                }
+            }
+            o => panic!("rank {r}: {o:?}"),
+        }
+    }
+    let counts = agreed.unwrap();
+    for r in 0..12usize {
+        assert_eq!(counts[r], i64::from(r != 7), "rank {r}");
+    }
+}
+
+/// In-operational kill via send-count on real threads: all-or-nothing
+/// inclusion must hold whatever the thread interleaving was.
+#[test]
+fn inop_send_limit_all_or_nothing() {
+    for sends in [0u32, 1, 2, 4] {
+        let mut ecfg = EngineConfig::new(9, 2);
+        ecfg.payload = PayloadKind::OneHot;
+        ecfg.failures = vec![FailureSpec::AfterSends { rank: 3, sends }];
+        let rep = live_reduce(&ecfg, 0);
+        match rep.outcomes[0].as_ref() {
+            Some(Outcome::ReduceRoot { value, .. }) => {
+                let counts = value.inclusion_counts();
+                for r in 0..9usize {
+                    if r == 3 {
+                        assert!(counts[r] <= 1, "sends={sends}: {}x", counts[r]);
+                    } else {
+                        assert_eq!(counts[r], 1, "sends={sends} rank {r}");
+                    }
+                }
+            }
+            o => panic!("sends={sends}: {o:?}"),
+        }
+    }
+}
+
+/// Time-based in-operational kill: the worker dies mid-protocol.
+#[test]
+fn inop_timed_kill() {
+    let mut ecfg = EngineConfig::new(9, 2);
+    ecfg.payload = PayloadKind::OneHot;
+    // 2ms in: likely mid-collective given channel latencies
+    ecfg.failures = vec![FailureSpec::AtTime { rank: 5, at: 2_000_000 }];
+    let rep = live_reduce(&ecfg, 0);
+    match rep.outcomes[0].as_ref() {
+        Some(Outcome::ReduceRoot { value, .. }) => {
+            let counts = value.inclusion_counts();
+            for r in 0..9usize {
+                if r == 5 {
+                    assert!(counts[r] <= 1);
+                } else {
+                    assert_eq!(counts[r], 1, "rank {r}");
+                }
+            }
+        }
+        o => panic!("{o:?}"),
+    }
+}
+
+/// Back-to-back engines (the dp_train pattern): 20 consecutive
+/// allreduces must each complete — regression test for the
+/// start/message race.
+#[test]
+fn repeated_back_to_back_allreduces() {
+    for round in 0..20u32 {
+        let mut ecfg = EngineConfig::new(4, 1);
+        ecfg.payload = PayloadKind::RankValue;
+        let rep = live_allreduce(&ecfg);
+        for r in 0..4u32 {
+            match rep.outcomes[r as usize].as_ref() {
+                Some(Outcome::Allreduce { value, .. }) => {
+                    assert_eq!(value.as_f64_scalar(), 6.0, "round {round} rank {r}")
+                }
+                o => panic!("round {round} rank {r}: {o:?}"),
+            }
+        }
+    }
+}
+
+/// Non-zero detection delay still converges.
+#[test]
+fn nonzero_detect_delay() {
+    let mut ecfg = EngineConfig::new(7, 1);
+    ecfg.payload = PayloadKind::RankValue;
+    ecfg.detect_delay = 5_000_000; // 5 ms
+    ecfg.failures = vec![FailureSpec::Pre { rank: 1 }];
+    let rep = live_reduce(&ecfg, 0);
+    match rep.outcomes[0].as_ref().unwrap() {
+        Outcome::ReduceRoot { value, .. } => assert_eq!(value.as_f64_scalar(), 20.0),
+        o => panic!("{o:?}"),
+    }
+}
+
+/// Metrics aggregate across workers: the Theorem 5 counts appear in the
+/// live engine too (failure-free).
+#[test]
+fn live_metrics_match_thm5() {
+    use ftcoll::topology::UpCorrectionGroups;
+    use ftcoll::types::MsgKind;
+    let ecfg = EngineConfig::new(16, 2);
+    let rep = live_reduce(&ecfg, 0);
+    assert_eq!(
+        rep.metrics.msgs(MsgKind::UpCorrection),
+        UpCorrectionGroups::new(16, 2).failure_free_messages()
+    );
+    assert_eq!(rep.metrics.msgs(MsgKind::TreeUp), 15);
+}

@@ -1,0 +1,106 @@
+//! Theorems 5 and 7 as properties: measured message counts equal (Thm 5)
+//! / are bounded by (Thm 7) the closed formulas, across randomized
+//! configurations.
+
+use ftcoll::failure::injector::{non_root_candidates, random_plan, FailureMix};
+use ftcoll::prelude::*;
+use ftcoll::proptest_lite::{run_cases, PropConfig};
+use ftcoll::sim;
+use ftcoll::topology::UpCorrectionGroups;
+use ftcoll::types::MsgKind;
+use ftcoll::{prop_assert, prop_assert_eq};
+
+/// Theorem 5, failure-free: up-correction sends exactly
+/// `f(f+1)·⌊(n-1)/(f+1)⌋ + a(a-1)` messages and the tree phase `n-1`.
+#[test]
+fn thm5_exact_counts_failure_free() {
+    run_cases("thm5/clean", PropConfig { iters: 64, ..Default::default() }, |rng| {
+        let n = rng.range(1, 600) as u32;
+        let f = rng.range(0, 10) as u32;
+        let rep = sim::run_reduce(&SimConfig::new(n, f));
+        let groups = UpCorrectionGroups::new(n, f);
+        prop_assert_eq!(
+            rep.metrics.msgs(MsgKind::UpCorrection),
+            groups.failure_free_messages(),
+            "up-correction n={n} f={f}"
+        );
+        prop_assert_eq!(
+            rep.metrics.msgs(MsgKind::TreeUp),
+            (n - 1) as u64,
+            "tree n={n} f={f}"
+        );
+        Ok(())
+    });
+}
+
+/// Theorem 5, with failures: "When processes fail, less messages are
+/// being sent." (Never more.)
+#[test]
+fn thm5_failures_never_add_messages() {
+    run_cases("thm5/failures", PropConfig::default(), |rng| {
+        let n = rng.range(2, 256) as u32;
+        let f = rng.range(1, 6) as u32;
+        let k = rng.range(1, f.min(n - 1).max(1) as u64) as usize;
+        let plan = random_plan(
+            rng,
+            &non_root_candidates(n, 0),
+            k,
+            FailureMix::Mixed { p_pre: 0.5, max_sends: f + 2 },
+        );
+        let clean = sim::run_reduce(&SimConfig::new(n, f));
+        let faulty = sim::run_reduce(&SimConfig::new(n, f).failures(plan));
+        prop_assert!(
+            faulty.metrics.total_msgs() <= clean.metrics.total_msgs(),
+            "n={n} f={f}: {} > {}",
+            faulty.metrics.total_msgs(),
+            clean.metrics.total_msgs()
+        );
+        Ok(())
+    });
+}
+
+/// Theorem 7: failure-free allreduce costs exactly reduce + broadcast;
+/// with failed roots at most the (f+1)-fold.
+#[test]
+fn thm7_allreduce_bound() {
+    run_cases("thm7/bound", PropConfig { iters: 48, ..Default::default() }, |rng| {
+        let n = rng.range(4, 200) as u32;
+        let f = rng.range(1, 5) as u32;
+        let reduce = sim::run_reduce(&SimConfig::new(n, f)).metrics.total_msgs();
+        let bcast = sim::run_broadcast(&SimConfig::new(n, f)).metrics.total_msgs();
+
+        // equality when the first root survives
+        let clean = sim::run_allreduce(&SimConfig::new(n, f)).metrics.total_msgs();
+        prop_assert_eq!(clean, reduce + bcast, "failure-free equality n={n} f={f}");
+
+        // bound under dead candidate prefixes
+        let dead = rng.range(1, f as u64) as u32;
+        let plan: Vec<FailureSpec> = (0..dead).map(|rank| FailureSpec::Pre { rank }).collect();
+        let msgs =
+            sim::run_allreduce(&SimConfig::new(n, f).failures(plan)).metrics.total_msgs();
+        prop_assert!(
+            msgs <= (f as u64 + 1) * (reduce + bcast),
+            "n={n} f={f} dead={dead}: {msgs} > bound"
+        );
+        Ok(())
+    });
+}
+
+/// The Theorem 5 terms themselves (closed-form consistency): the group
+/// structure accounts for every non-root rank exactly once.
+#[test]
+fn thm5_formula_internal_consistency() {
+    run_cases("thm5/formula", PropConfig { iters: 64, ..Default::default() }, |rng| {
+        let n = rng.range(1, 5000) as u32;
+        let f = rng.range(0, 12) as u32;
+        let g = UpCorrectionGroups::new(n, f);
+        // sum over groups of s_g(s_g - 1) equals the formula
+        let mut total = 0u64;
+        for gid in 0..g.num_groups() {
+            let s = g.members(gid).len() as u64;
+            total += s * (s - 1);
+        }
+        prop_assert_eq!(total, g.failure_free_messages(), "n={n} f={f}");
+        Ok(())
+    });
+}

@@ -1,0 +1,183 @@
+//! The paper's §4.3 worked example, executed end-to-end on the DES —
+//! Figures 1 and 2, message by message.
+
+use ftcoll::prelude::*;
+use ftcoll::sim;
+use ftcoll::trace::TraceEvent;
+use ftcoll::types::MsgKind;
+
+/// Figure 2: n=7, f=1, process 1 failed pre-operationally, sum of rank
+/// numbers. The root must obtain 0+2+3+4+5+6 = 20.
+#[test]
+fn figure2_root_gets_20() {
+    let cfg = SimConfig::new(7, 1)
+        .payload(PayloadKind::RankValue)
+        .failure(FailureSpec::Pre { rank: 1 });
+    let rep = sim::run_reduce(&cfg);
+    assert_eq!(rep.root_value().unwrap().as_f64_scalar(), 20.0);
+}
+
+/// Figure 2's up-correction phase: exactly the exchanges the paper
+/// describes — 3↔4, 5↔6, 2→1 (unanswered), root silent.
+#[test]
+fn figure2_upcorrection_exchanges() {
+    let cfg = SimConfig::new(7, 1)
+        .payload(PayloadKind::OneHot)
+        .failure(FailureSpec::Pre { rank: 1 })
+        .tracing(true);
+    let rep = sim::run_reduce(&cfg);
+    let mut uc_sends: Vec<(u32, u32)> = rep
+        .trace
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Send { from, to, kind: MsgKind::UpCorrection, .. } => {
+                Some((*from, *to))
+            }
+            _ => None,
+        })
+        .collect();
+    uc_sends.sort_unstable();
+    // process 0 sends nothing ("process 0 is not a member of any
+    // up-correction group"); 1 is dead; everyone else pairs up
+    assert_eq!(uc_sends, vec![(2, 1), (3, 4), (4, 3), (5, 6), (6, 5)]);
+}
+
+/// Figure 2's tree phase: process 2 sends 7+11+2 = 20 to the root with
+/// no failure indicated in its subtree, and the root selects it.
+#[test]
+fn figure2_tree_phase_values() {
+    let cfg = SimConfig::new(7, 1)
+        .payload(PayloadKind::OneHot)
+        .failure(FailureSpec::Pre { rank: 1 })
+        .tracing(true);
+    let rep = sim::run_reduce(&cfg);
+    // find the TreeUp from 2 to 0 and check its inclusion set
+    let to_root: Vec<(u32, Vec<u32>)> = rep
+        .trace
+        .events()
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Send { from, to: 0, kind: MsgKind::TreeUp, includes, .. } => {
+                Some((*from, includes.clone()))
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(to_root.len(), 1, "only subtree 2 reports (1 is dead)");
+    let (from, includes) = &to_root[0];
+    assert_eq!(*from, 2);
+    assert_eq!(includes, &vec![2, 3, 4, 5, 6], "the paper's 2+3+4+5+6 = 20 message");
+
+    // the root's final value includes exactly 0,2,3,4,5,6 — each once
+    let counts = rep.root_value().unwrap().inclusion_counts();
+    assert_eq!(counts, &[1, 0, 1, 1, 1, 1, 1]);
+}
+
+/// Figure 1: the fault-agnostic tree loses the failed process's whole
+/// subtree (interior victim), while FT reduce loses only its value.
+#[test]
+fn figure1_subtree_loss_vs_ft() {
+    let cfg = SimConfig::new(7, 1)
+        .payload(PayloadKind::OneHot)
+        .failure(FailureSpec::Pre { rank: 4 });
+    let base = sim::run_baseline_tree_reduce(&cfg);
+    let counts = base.root_value().unwrap().inclusion_counts();
+    assert_eq!(counts, &[1, 1, 1, 1, 0, 0, 0], "subtree {{4,5,6}} lost");
+
+    let ft = sim::run_reduce(&cfg);
+    let counts = ft.root_value().unwrap().inclusion_counts();
+    assert_eq!(counts, &[1, 1, 1, 1, 0, 1, 1], "only the failed value missing");
+}
+
+/// §4.3: "the numbering is now matching the numbering scheme for
+/// reduce" — group peers land in distinct subtrees, one per subtree.
+#[test]
+fn figure2_numbering_properties() {
+    use ftcoll::topology::{IfTree, UpCorrectionGroups};
+    let tree = IfTree::new(7, 1);
+    let groups = UpCorrectionGroups::new(7, 1);
+    for g in 0..groups.num_groups() {
+        let subtrees: Vec<u32> =
+            groups.members(g).iter().map(|&p| tree.subtree_of(p)).collect();
+        let mut sorted = subtrees.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), subtrees.len(), "group {g} members share a subtree");
+    }
+}
+
+/// The same scenario with every failure-information scheme: all three
+/// give the root enough to select the valid subtree (§4.4).
+#[test]
+fn figure2_all_schemes_agree() {
+    for scheme in Scheme::ALL {
+        let cfg = SimConfig::new(7, 1)
+            .scheme(scheme)
+            .payload(PayloadKind::RankValue)
+            .failure(FailureSpec::Pre { rank: 1 });
+        let rep = sim::run_reduce(&cfg);
+        assert_eq!(
+            rep.root_value().unwrap().as_f64_scalar(),
+            20.0,
+            "scheme {scheme:?}"
+        );
+    }
+}
+
+/// §4.4's "exclude failed processes in future operations", end to end:
+/// run reduce, learn the failed set from the List scheme, shrink the
+/// membership, and rerun over the dense survivor ranks — the second
+/// operation is failure-free (no timeouts) and pays the survivor-count
+/// Theorem 5 message cost.
+#[test]
+fn exclude_failed_and_rerun() {
+    use ftcoll::topology::{Membership, UpCorrectionGroups};
+
+    let cfg = SimConfig::new(9, 2)
+        .scheme(Scheme::List)
+        .payload(PayloadKind::RankValue)
+        .failures(vec![FailureSpec::Pre { rank: 2 }, FailureSpec::Pre { rank: 6 }]);
+    let rep = sim::run_reduce(&cfg);
+    let (value, failed) = match rep.root_outcome().unwrap() {
+        Outcome::ReduceRoot { value, known_failed } => (value, known_failed.clone()),
+        o => panic!("{o:?}"),
+    };
+    assert_eq!(value.as_f64_scalar(), 36.0 - 2.0 - 6.0);
+    assert_eq!(failed, vec![2, 6]);
+    // first run paid detection timeouts
+    assert!(rep.final_time >= cfg.detect_latency);
+
+    // shrink: world {0..8} minus {2,6} → dense n=7, remaining f=0
+    let m = Membership::world(9).exclude(&failed);
+    assert_eq!(m.len(), 7);
+    let f2 = m.remaining_f(2, failed.len() as u32);
+
+    // rerun over survivors (dense ranks; payload = world rank so the
+    // sum is comparable)
+    let cfg2 = SimConfig::new(m.len(), f2).payload(PayloadKind::RankValue);
+    let rep2 = sim::run_reduce(&cfg2);
+    assert!(rep2.root_value().is_some());
+    // no failures → no detection delay: strictly faster than run 1
+    assert!(rep2.final_time < rep.final_time);
+    // and the Theorem 5 cost is the survivor count's
+    assert_eq!(
+        rep2.metrics.msgs(ftcoll::types::MsgKind::UpCorrection),
+        UpCorrectionGroups::new(7, 0).failure_free_messages()
+    );
+    assert_eq!(rep2.metrics.msgs(ftcoll::types::MsgKind::TreeUp), 6);
+}
+
+/// The List scheme additionally reports the failed ids to the caller.
+#[test]
+fn figure2_list_scheme_reports_failed() {
+    let cfg = SimConfig::new(7, 1)
+        .scheme(Scheme::List)
+        .payload(PayloadKind::RankValue)
+        .failure(FailureSpec::Pre { rank: 1 });
+    let rep = sim::run_reduce(&cfg);
+    match rep.root_outcome().unwrap() {
+        Outcome::ReduceRoot { known_failed, .. } => assert_eq!(known_failed, &vec![1]),
+        o => panic!("unexpected {o:?}"),
+    }
+}

@@ -1,0 +1,214 @@
+//! Property tests for the §4.1 reduce semantics, using exact one-hot
+//! inclusion masks so every clause is checked per run:
+//!
+//! 1. root delivery ⇒ all non-failed started (trivially true here),
+//! 2. deliver at most once per process,
+//! 3. root's value includes every non-failed input,
+//! 4. failed inputs included 0 or 1 times — never partially,
+//! 5. every non-failed process delivers eventually (= by quiescence).
+
+use ftcoll::failure::injector::{non_root_candidates, random_plan, FailureMix};
+use ftcoll::prelude::*;
+use ftcoll::proptest_lite::{run_cases, PropConfig};
+use ftcoll::sim;
+use ftcoll::{prop_assert, prop_assert_eq};
+
+fn scheme_for(x: u64) -> Scheme {
+    Scheme::ALL[(x % 3) as usize]
+}
+
+/// Shared checker for one randomized run.
+fn check_reduce(
+    n: u32,
+    f: u32,
+    scheme: Scheme,
+    plan: Vec<ftcoll::failure::FailureSpec>,
+) -> Result<(), String> {
+    let failed: Vec<u32> = plan.iter().map(|s| s.rank()).collect();
+    let cfg = SimConfig::new(n, f).scheme(scheme).payload(PayloadKind::OneHot).failures(plan);
+    let rep = sim::run_reduce(&cfg);
+
+    // clause 5: every live process delivers; clause 2: at most once
+    for r in 0..n {
+        if failed.contains(&r) {
+            continue;
+        }
+        prop_assert_eq!(
+            rep.deliveries_at(r),
+            1,
+            "rank {r} n={n} f={f} {scheme:?} failed={failed:?}"
+        );
+    }
+    // clauses 3+4 via the inclusion mask
+    let value = rep
+        .root_value()
+        .ok_or_else(|| format!("no root value; n={n} f={f} failed={failed:?}"))?;
+    let counts = value.inclusion_counts();
+    for r in 0..n as usize {
+        let c = counts[r];
+        if failed.contains(&(r as u32)) {
+            prop_assert!(
+                c == 0 || c == 1,
+                "failed rank {r} included {c} times (n={n} f={f} {scheme:?})"
+            );
+        } else {
+            prop_assert_eq!(c, 1, "live rank {r} (n={n} f={f} {scheme:?} failed={failed:?})");
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn semantics_under_pre_operational_failures() {
+    run_cases("reduce/pre-op", PropConfig::default(), |rng| {
+        let n = rng.range(2, 96) as u32;
+        let f = rng.range(0, 5) as u32;
+        let k = rng.range(0, f.min(n - 1) as u64) as usize;
+        let scheme = scheme_for(rng.next_u64());
+        let plan = random_plan(rng, &non_root_candidates(n, 0), k, FailureMix::AllPre);
+        check_reduce(n, f, scheme, plan)
+    });
+}
+
+#[test]
+fn semantics_under_in_operational_failures() {
+    run_cases("reduce/in-op", PropConfig::default(), |rng| {
+        let n = rng.range(2, 96) as u32;
+        let f = rng.range(0, 5) as u32;
+        let k = rng.range(0, f.min(n - 1) as u64) as usize;
+        let scheme = scheme_for(rng.next_u64());
+        let plan = random_plan(
+            rng,
+            &non_root_candidates(n, 0),
+            k,
+            FailureMix::AllInOp { max_sends: 2 * f + 3 },
+        );
+        check_reduce(n, f, scheme, plan)
+    });
+}
+
+#[test]
+fn semantics_under_mixed_failures_nonzero_root() {
+    run_cases("reduce/mixed+root", PropConfig::default(), |rng| {
+        let n = rng.range(2, 64) as u32;
+        let f = rng.range(0, 4) as u32;
+        let root = rng.below(n as u64) as u32;
+        let k = rng.range(0, f.min(n - 1) as u64) as usize;
+        let plan = random_plan(
+            rng,
+            &non_root_candidates(n, root),
+            k,
+            FailureMix::Mixed { p_pre: 0.5, max_sends: 2 * f + 3 },
+        );
+        let failed: Vec<u32> = plan.iter().map(|s| s.rank()).collect();
+        let cfg = SimConfig::new(n, f)
+            .root(root)
+            .payload(PayloadKind::OneHot)
+            .failures(plan);
+        let rep = sim::run_reduce(&cfg);
+        let counts = rep
+            .root_value()
+            .ok_or_else(|| format!("no root value; n={n} f={f} root={root}"))?
+            .inclusion_counts();
+        for r in 0..n as usize {
+            if failed.contains(&(r as u32)) {
+                prop_assert!(counts[r] <= 1, "failed rank {r}: {}", counts[r]);
+            } else {
+                prop_assert_eq!(
+                    counts[r],
+                    1,
+                    "rank {r} n={n} f={f} root={root} failed={failed:?}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Exceeding f *can* produce the Algorithm-2 error, but must never
+/// produce a silently wrong result: either a correct-for-live value or
+/// an explicit error.
+#[test]
+fn beyond_f_failures_error_or_correct() {
+    run_cases("reduce/beyond-f", PropConfig::default(), |rng| {
+        let n = rng.range(4, 48) as u32;
+        let f = rng.range(0, 3) as u32;
+        let k = rng.range(f as u64 + 1, (f + 3).min(n - 1) as u64) as usize;
+        let plan = random_plan(rng, &non_root_candidates(n, 0), k, FailureMix::AllPre);
+        let failed: Vec<u32> = plan.iter().map(|s| s.rank()).collect();
+        let cfg = SimConfig::new(n, f).payload(PayloadKind::OneHot).failures(plan);
+        let rep = sim::run_reduce(&cfg);
+        match rep.root_outcome() {
+            Some(Outcome::ReduceRoot { value, .. }) => {
+                let counts = value.inclusion_counts();
+                for r in 0..n as usize {
+                    if failed.contains(&(r as u32)) {
+                        prop_assert!(counts[r] <= 1, "failed rank {r}: {}", counts[r]);
+                    } else {
+                        prop_assert_eq!(counts[r], 1, "rank {r} (k={k} > f={f})");
+                    }
+                }
+            }
+            Some(Outcome::Error(_)) => {} // allowed out of contract
+            other => return Err(format!("root outcome {other:?}")),
+        }
+        Ok(())
+    });
+}
+
+/// Determinism: identical configs produce identical runs.
+#[test]
+fn runs_are_deterministic() {
+    run_cases("reduce/deterministic", PropConfig { iters: 16, ..Default::default() }, |rng| {
+        let n = rng.range(2, 128) as u32;
+        let f = rng.range(0, 6) as u32;
+        let k = rng.range(0, f.min(n - 1) as u64) as usize;
+        let plan = random_plan(
+            rng,
+            &non_root_candidates(n, 0),
+            k,
+            FailureMix::Mixed { p_pre: 0.3, max_sends: 8 },
+        );
+        let cfg = SimConfig::new(n, f).payload(PayloadKind::OneHot).failures(plan);
+        let a = sim::run_reduce(&cfg);
+        let b = sim::run_reduce(&cfg);
+        prop_assert_eq!(a.final_time, b.final_time, "time");
+        prop_assert_eq!(a.metrics.total_msgs(), b.metrics.total_msgs(), "msgs");
+        prop_assert_eq!(
+            a.root_value().map(|v| v.inclusion_counts().to_vec()),
+            b.root_value().map(|v| v.inclusion_counts().to_vec()),
+            "value"
+        );
+        Ok(())
+    });
+}
+
+/// All four reduce ops agree with a serial oracle in the failure-free
+/// case (vector payloads exercise the element-wise path).
+#[test]
+fn ops_match_serial_oracle() {
+    use ftcoll::collectives::{ReduceOp, Reducer};
+    for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min, ReduceOp::Prod] {
+        let n = 17u32;
+        let cfg = SimConfig::new(n, 2).op(op).payload(PayloadKind::VectorF32 { len: 33 });
+        let rep = sim::run_reduce(&cfg);
+        let got = rep.root_value().unwrap().as_f32();
+
+        // serial oracle over the same deterministic inputs
+        let mut expect = PayloadKind::VectorF32 { len: 33 }.initial(0, n);
+        for r in 1..n {
+            let v = PayloadKind::VectorF32 { len: 33 }.initial(r, n);
+            ftcoll::collectives::NativeReducer(op)
+                .combine(&mut expect, &v);
+        }
+        let expect = expect.as_f32();
+        for i in 0..33 {
+            assert!(
+                (got[i] - expect[i]).abs() <= 1e-5 * (1.0 + expect[i].abs()),
+                "{op:?} elem {i}: {} vs {}",
+                got[i],
+                expect[i]
+            );
+        }
+    }
+}

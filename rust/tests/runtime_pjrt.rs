@@ -1,0 +1,194 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! pin the numerics against native-rust oracles. This is the rust half
+//! of the L1 correctness story (python/tests/test_kernel.py pins the
+//! kernels against the jnp oracle; here we pin the *artifacts* against
+//! the same math).
+//!
+//! Skipped (with a loud message) when `artifacts/manifest.tsv` is absent
+//! — run `make artifacts` first.
+
+use ftcoll::collectives::{NativeReducer, ReduceOp, Reducer};
+use ftcoll::prng::Pcg;
+use ftcoll::runtime::executor::Input;
+use ftcoll::runtime::{default_artifact_dir, ComputeService, Executor, PjrtReducer};
+use ftcoll::types::Value;
+
+fn artifacts_available() -> bool {
+    let ok = default_artifact_dir().join("manifest.tsv").exists();
+    if !ok {
+        eprintln!("SKIP: no artifacts/manifest.tsv — run `make artifacts`");
+    }
+    ok
+}
+
+fn rand_vec(seed: u64, len: usize) -> Vec<f32> {
+    let mut rng = Pcg::new(seed);
+    (0..len).map(|_| rng.f32() * 8.0 - 4.0).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= tol * (1.0 + y.abs()), "elem {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn combine2_artifacts_match_native_all_ops() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut exec = Executor::new(&default_artifact_dir()).unwrap();
+    for op in [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min] {
+        for len in [1usize, 100, 1024, 1025, 16384] {
+            let a = rand_vec(1 + len as u64, len);
+            let b = rand_vec(2 + len as u64, len);
+            let mut got = a.clone();
+            exec.combine2_f32(op, &mut got, &b).unwrap();
+
+            let mut expect = Value::F32(a.clone());
+            NativeReducer(op).combine(&mut expect, &Value::F32(b.clone()));
+            assert_close(&got, expect.as_f32(), 1e-6);
+        }
+    }
+}
+
+#[test]
+fn combinek_artifact_matches_chained_native() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut exec = Executor::new(&default_artifact_dir()).unwrap();
+    for k in [2usize, 3, 8] {
+        let rows: Vec<Vec<f32>> = (0..k).map(|i| rand_vec(10 + i as u64, 777)).collect();
+        let got = exec.combinek_f32(ReduceOp::Sum, &rows).unwrap();
+        let mut expect = Value::F32(rows[0].clone());
+        for r in &rows[1..] {
+            NativeReducer(ReduceOp::Sum).combine(&mut expect, &Value::F32(r.clone()));
+        }
+        assert_close(&got, expect.as_f32(), 1e-5);
+    }
+}
+
+#[test]
+fn combinek_beyond_k_falls_back_to_chaining() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut exec = Executor::new(&default_artifact_dir()).unwrap();
+    let rows: Vec<Vec<f32>> = (0..11).map(|i| rand_vec(50 + i as u64, 64)).collect();
+    let got = exec.combinek_f32(ReduceOp::Sum, &rows).unwrap();
+    let mut expect = vec![0.0f32; 64];
+    for r in &rows {
+        for (e, x) in expect.iter_mut().zip(r) {
+            *e += x;
+        }
+    }
+    assert_close(&got, &expect, 1e-5);
+}
+
+#[test]
+fn executor_validates_signatures() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut exec = Executor::new(&default_artifact_dir()).unwrap();
+    // wrong arity
+    assert!(exec.execute("combine2_sum_f32_1024", &[Input::F32(&vec![0.0; 1024])]).is_err());
+    // wrong length
+    assert!(exec
+        .execute(
+            "combine2_sum_f32_1024",
+            &[Input::F32(&vec![0.0; 4]), Input::F32(&vec![0.0; 1024])]
+        )
+        .is_err());
+    // unknown artifact
+    assert!(exec.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn compute_service_round_trip_multi_thread() {
+    if !artifacts_available() {
+        return;
+    }
+    let svc = ComputeService::start(default_artifact_dir()).unwrap();
+    let mut joins = Vec::new();
+    for t in 0..4u64 {
+        let h = svc.handle();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..5u64 {
+                let a = rand_vec(t * 100 + i, 300);
+                let b = rand_vec(t * 100 + i + 50, 300);
+                let got = h.combine2(ReduceOp::Sum, a.clone(), b.clone()).unwrap();
+                for j in 0..300 {
+                    assert!((got[j] - (a[j] + b[j])).abs() < 1e-6);
+                }
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+}
+
+#[test]
+fn pjrt_reducer_is_a_drop_in_reducer() {
+    if !artifacts_available() {
+        return;
+    }
+    let svc = ComputeService::start(default_artifact_dir()).unwrap();
+    let reducer = PjrtReducer::new(svc.handle(), ReduceOp::Sum);
+    let mut acc = Value::F32(rand_vec(7, 2000));
+    let other = Value::F32(rand_vec(8, 2000));
+    let mut expect = acc.clone();
+    NativeReducer(ReduceOp::Sum).combine(&mut expect, &other);
+    reducer.combine(&mut acc, &other);
+    assert_close(acc.as_f32(), expect.as_f32(), 1e-6);
+}
+
+#[test]
+fn training_artifacts_init_grad_update_cycle() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut exec = Executor::new(&default_artifact_dir()).unwrap();
+    let p = exec
+        .registry()
+        .get("tr_init_params")
+        .expect("tr_init_params in manifest")
+        .outputs[0]
+        .elements();
+
+    // init is deterministic per seed
+    let w0 = exec.execute("tr_init_params", &[Input::ScalarI32(0)]).unwrap();
+    let w0b = exec.execute("tr_init_params", &[Input::ScalarI32(0)]).unwrap();
+    assert_eq!(w0[0].as_f32(), w0b[0].as_f32());
+    let params = w0[0].as_f32().to_vec();
+    assert_eq!(params.len(), p);
+
+    // one grad step on a repetitive batch
+    let spec = exec.registry().get("tr_grad_step").unwrap().clone();
+    let (b, t1) = (spec.inputs[1].dims[0], spec.inputs[1].dims[1]);
+    let batch: Vec<i32> = (0..b * t1).map(|i| (i % 17) as i32).collect();
+    let out = exec
+        .execute("tr_grad_step", &[Input::F32(&params), Input::I32(&batch)])
+        .unwrap();
+    let grads = out[0].as_f32().to_vec();
+    let loss0 = out[1].scalar_f32();
+    assert!(loss0.is_finite() && loss0 > 0.0, "loss0={loss0}");
+    assert!(grads.iter().all(|g| g.is_finite()));
+
+    // apply the update and check the loss drops
+    let upd = exec
+        .execute(
+            "tr_sgd_update",
+            &[Input::F32(&params), Input::F32(&grads), Input::ScalarF32(0.2)],
+        )
+        .unwrap();
+    let new_params = upd[0].as_f32().to_vec();
+    let out2 = exec
+        .execute("tr_grad_step", &[Input::F32(&new_params), Input::I32(&batch)])
+        .unwrap();
+    let loss1 = out2[1].scalar_f32();
+    assert!(loss1 < loss0, "loss did not drop: {loss0} -> {loss1}");
+}

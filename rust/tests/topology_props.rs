@@ -1,0 +1,158 @@
+//! Randomized structural properties of the topology substrate — the
+//! preconditions Theorems 1-3 rest on.
+
+use ftcoll::prng::Pcg;
+use ftcoll::proptest_lite::{run_cases, PropConfig};
+use ftcoll::topology::{BinomialTree, IfTree, RankMap, Ring, UpCorrectionGroups};
+use ftcoll::{prop_assert, prop_assert_eq};
+
+/// Every rank reaches the root: walking `parent` terminates at 0 in at
+/// most `depth` steps.
+#[test]
+fn iftree_paths_reach_root() {
+    run_cases("iftree/paths", PropConfig::default(), |rng| {
+        let n = rng.range(1, 3000) as u32;
+        let f = rng.range(0, 9) as u32;
+        let t = IfTree::new(n, f);
+        let depth = t.depth();
+        for _ in 0..20 {
+            let mut p = rng.below(n as u64) as u32;
+            let mut steps = 0;
+            while let Some(parent) = t.parent(p) {
+                p = parent;
+                steps += 1;
+                prop_assert!(steps <= depth, "n={n} f={f}: path longer than depth {depth}");
+            }
+            prop_assert_eq!(p, 0, "n={n} f={f}");
+        }
+        Ok(())
+    });
+}
+
+/// The I(f)-tree property itself: the root has min(f+1, n-1) children
+/// and subtree sizes differ by at most 1.
+#[test]
+fn iftree_definition_holds() {
+    run_cases("iftree/definition", PropConfig::default(), |rng| {
+        let n = rng.range(2, 4000) as u32;
+        let f = rng.range(0, 12) as u32;
+        let t = IfTree::new(n, f);
+        prop_assert_eq!(t.children(0).len() as u32, (f + 1).min(n - 1), "n={n} f={f}");
+        let sizes: Vec<u32> = (1..=t.num_subtrees()).map(|k| t.subtree_size(k)).collect();
+        let (mn, mx) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+        prop_assert!(mx - mn <= 1, "n={n} f={f} sizes={sizes:?}");
+        prop_assert_eq!(sizes.iter().sum::<u32>(), n - 1, "n={n} f={f}");
+        Ok(())
+    });
+}
+
+/// Theorem 1's pillar: each *full* up-correction group has exactly one
+/// member in every subtree of the root.
+#[test]
+fn full_groups_hit_every_subtree_once() {
+    run_cases("groups/subtree-cover", PropConfig::default(), |rng| {
+        let n = rng.range(2, 2000) as u32;
+        let f = rng.range(0, 9) as u32;
+        let g = UpCorrectionGroups::new(n, f);
+        let t = IfTree::new(n, f);
+        for gid in 0..g.full_groups() {
+            let mut seen = vec![false; (f + 2) as usize];
+            for p in g.members(gid) {
+                let k = t.subtree_of(p) as usize;
+                prop_assert!(!seen[k], "n={n} f={f} group {gid}: two members in subtree {k}");
+                seen[k] = true;
+            }
+            prop_assert_eq!(
+                seen.iter().filter(|&&b| b).count() as u32,
+                f + 1,
+                "n={n} f={f} group {gid}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Short-group members (incl. the root's completion rule): members of
+/// the short group land in subtrees 1..a-1, one each.
+#[test]
+fn short_group_occupies_prefix_subtrees() {
+    run_cases("groups/short-prefix", PropConfig::default(), |rng| {
+        let n = rng.range(2, 2000) as u32;
+        let f = rng.range(0, 9) as u32;
+        let g = UpCorrectionGroups::new(n, f);
+        if !g.root_in_group() {
+            return Ok(());
+        }
+        let t = IfTree::new(n, f);
+        let a = g.a();
+        let mut subtrees: Vec<u32> = g
+            .members(g.full_groups())
+            .into_iter()
+            .filter(|&p| p != 0)
+            .map(|p| t.subtree_of(p))
+            .collect();
+        subtrees.sort_unstable();
+        prop_assert_eq!(
+            subtrees,
+            (1..a).collect::<Vec<u32>>(),
+            "n={n} f={f} a={a}"
+        );
+        Ok(())
+    });
+}
+
+/// Binomial-tree sanity at random sizes: parent/children inverse.
+#[test]
+fn binomial_parent_child_inverse() {
+    run_cases("binomial/inverse", PropConfig::default(), |rng| {
+        let size = rng.range(1, 5000) as u32;
+        let t = BinomialTree::new(size);
+        for _ in 0..30 {
+            let i = rng.below(size as u64) as u32;
+            for c in t.children(i) {
+                prop_assert_eq!(t.parent(c), Some(i), "size={size}");
+            }
+            if let Some(p) = t.parent(i) {
+                prop_assert!(t.children(p).contains(&i), "size={size} i={i}");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Ring positions are a bijection and successor/distance are inverse.
+#[test]
+fn ring_bijection() {
+    run_cases("ring/bijection", PropConfig::default(), |rng| {
+        let n = rng.range(1, 1000) as u32;
+        let root = rng.below(n as u64) as u32;
+        let ring = Ring::new(n, root);
+        let mut seen = vec![false; n as usize];
+        for i in 0..n {
+            let r = ring.rank_at(i);
+            prop_assert!(!seen[r as usize], "duplicate rank {r}");
+            seen[r as usize] = true;
+            prop_assert_eq!(ring.position(r), i, "n={n} root={root}");
+        }
+        let a = rng.below(n as u64) as u32;
+        let d = rng.below(n as u64) as u32;
+        prop_assert_eq!(ring.distance(a, ring.successor(a, d)), d, "n={n}");
+        Ok(())
+    });
+}
+
+/// Rank maps: involution, and topology-through-the-map consistency
+/// (what Reduce relies on for arbitrary roots).
+#[test]
+fn rankmap_involution_random() {
+    let mut rng = Pcg::new(99);
+    for _ in 0..200 {
+        let n = rng.range(1, 500) as u32;
+        let root = rng.below(n as u64) as u32;
+        let m = RankMap::new(root);
+        let r = rng.below(n as u64) as u32;
+        assert_eq!(m.to_real(m.to_virtual(r)), r);
+        assert_eq!(m.to_virtual(root), 0);
+        assert_eq!(m.to_real(0), root);
+    }
+}
