@@ -87,8 +87,10 @@ def test_short_training_loop_reduces_loss():
     pattern = jnp.arange(ModelConfig.seq_len + 1, dtype=jnp.int32) % 17
     data = jnp.tile(pattern, (4, 1))
     losses = []
+    # lr 0.1: 0.2 sits past the stability edge for this model (the loss
+    # oscillates around the unigram entropy ln 17 instead of collapsing)
     for _ in range(60):
         grads, loss = fn_grad(flat, data)
         losses.append(float(loss))
-        flat = flat - 0.2 * grads
+        flat = flat - 0.1 * grads
     assert losses[-1] < 0.1 * losses[0], losses[:: max(1, len(losses) // 6)]

@@ -1,0 +1,44 @@
+//! Campaign-engine throughput (scenarios/second): the baseline later
+//! engine optimisations regress against. Sweeps thread counts and one
+//! larger grid; FTCOLL_BENCH_FAST=1 trims it for CI smoke runs.
+
+use ftcoll::benchlib::Bencher;
+use ftcoll::campaign::{run_campaign, CampaignConfig, GridConfig};
+
+fn main() {
+    let mut b = Bencher::new("bench_campaign");
+
+    for threads in [1usize, 2, 0] {
+        let count = 64u32;
+        let label = if threads == 0 { "auto".to_string() } else { threads.to_string() };
+        let r = b.bench(&format!("campaign/c{count}_t{label}"), || {
+            let res = run_campaign(&CampaignConfig {
+                grid: GridConfig { count, seed: 11, max_n: 64 },
+                threads,
+            });
+            assert_eq!(res.failed_count(), 0, "bench campaign must pass oracles");
+            std::hint::black_box(res.scenarios.len());
+        });
+        println!(
+            "  -> {:.1} scenarios/s (median, {} threads)",
+            count as f64 / (r.median_ns as f64 / 1e9),
+            label
+        );
+    }
+
+    // one larger grid at full parallelism (the shape CI's smoke run uses)
+    let count = if std::env::var("FTCOLL_BENCH_FAST").is_ok() { 100u32 } else { 400 };
+    let r = b.bench(&format!("campaign/c{count}_tauto_n128"), || {
+        let res = run_campaign(&CampaignConfig {
+            grid: GridConfig { count, seed: 13, max_n: 128 },
+            threads: 0,
+        });
+        std::hint::black_box(res.total_checks());
+    });
+    println!(
+        "  -> {:.1} scenarios/s (median)",
+        count as f64 / (r.median_ns as f64 / 1e9)
+    );
+
+    b.write_csv();
+}

@@ -1,0 +1,41 @@
+//! Deterministic scenario-campaign engine (FoundationDB-style
+//! simulation testing for the paper's collectives).
+//!
+//! A campaign expands a declarative grid ([`spec::GridConfig`]) into
+//! thousands of concrete scenarios — every combination axis the paper's
+//! theorems quantify over: collective × n × f × root × failure-info
+//! scheme × op × payload × network model × detection latency × failure
+//! pattern (including storms, cascades, root kills and correction-
+//! phase-targeted timings). Each scenario runs on the deterministic DES
+//! ([`crate::sim`]) with a seed derived from `(grid seed, index)`, and
+//! is judged by *oracle predicates* derived from the paper's semantics
+//! ([`oracle`]) rather than golden values.
+//!
+//! Workflow:
+//!
+//! ```text
+//! ftcoll campaign --count 1000 --seed 1            # sweep + JSON artifact
+//! ftcoll campaign --check-oracles ...              # CI: violations are fatal
+//! ftcoll campaign --replay s00042-... --trace      # re-run one scenario
+//! ```
+//!
+//! Any failing scenario is replayable in isolation: its id encodes its
+//! grid index and its seed is derived independently of every other
+//! scenario, so `--replay <id>` (with the same `--seed`/`--max-n`)
+//! reconstructs exactly the failing run — in O(1), independent of the
+//! campaign's `--count` — with tracing. See docs/CAMPAIGN.md.
+
+pub mod oracle;
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use oracle::{Baseline, OracleReport};
+pub use report::{summary_table, to_json};
+pub use runner::{
+    baseline_of, execute, find_scenario, run_campaign, run_scenario, CampaignConfig,
+    CampaignResult, ScenarioResult,
+};
+pub use spec::{
+    generate, scenario_at, Collective, FailurePattern, GridConfig, NetKind, ScenarioSpec,
+};

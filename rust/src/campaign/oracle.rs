@@ -1,0 +1,324 @@
+//! Oracle predicates: each scenario run is checked against the paper's
+//! semantics instead of golden values, so the campaign scales to
+//! thousands of generated scenarios without any expected-output files.
+//!
+//! Encoded clauses (all scenarios are generated in-contract — at most
+//! `f` failures, live root, pre-operational-only candidate failures):
+//!
+//! * **Delivery (§4.1 / §5.1)** — deliver-at-most-once everywhere;
+//!   every never-failed process delivers exactly once; pre-operational
+//!   victims deliver nothing; no out-of-contract `Error` outcome.
+//! * **Value (§4.1 item 3, Thms 1-4)** — with the `OneHot` inclusion-
+//!   mask payload, every never-failed contributor is included exactly
+//!   once and every in-operational victim zero or one times
+//!   (all-or-nothing); with pre-operational-only plans the result is
+//!   the exact fold over the surviving contributors. Allreduce
+//!   additionally requires bit-identical agreement across deliverers
+//!   (§5.1 item 5); broadcast requires the root's exact value.
+//! * **Failure reports (§4.4)** — `List`-scheme reports contain only
+//!   genuinely injected victims (no false positives, sorted, deduped).
+//!   The completeness half ("superset of the failures the root
+//!   confirmed before delivering") is trace-based and lives in
+//!   rust/tests/correction_props.rs.
+//! * **Message counts (Thm 5 / Thm 7, §4.3)** — failures never add
+//!   messages: per-phase counts stay at or below the failure-free
+//!   baseline of the same configuration; clean scenarios must match it
+//!   exactly; allreduce stays within the (f+1)-fold Thm 7 bound and
+//!   its attempt counter never exceeds f+1 (exactly k+1 under
+//!   `RootKill{k}`).
+
+use super::spec::{Collective, FailurePattern, ScenarioSpec};
+use crate::collectives::{Outcome, ReduceOp};
+use crate::config::PayloadKind;
+use crate::failure::FailureSpec;
+use crate::sim::RunReport;
+use crate::types::{MsgKind, Rank, Value};
+use std::collections::HashSet;
+
+/// Failure-free message counts of the scenario's configuration.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Baseline {
+    pub total_msgs: u64,
+    pub upcorr_msgs: u64,
+    pub tree_msgs: u64,
+}
+
+impl Baseline {
+    pub fn of(rep: &RunReport) -> Baseline {
+        Baseline {
+            total_msgs: rep.metrics.total_msgs(),
+            upcorr_msgs: rep.metrics.msgs(MsgKind::UpCorrection),
+            tree_msgs: rep.metrics.msgs(MsgKind::TreeUp),
+        }
+    }
+}
+
+/// Result of checking one run: how many predicates were evaluated and
+/// every violation found (empty = scenario passed).
+#[derive(Clone, Debug, Default)]
+pub struct OracleReport {
+    pub checks: u32,
+    pub violations: Vec<String>,
+}
+
+impl OracleReport {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    fn check(&mut self, ok: bool, msg: impl FnOnce() -> String) {
+        self.checks += 1;
+        if !ok {
+            self.violations.push(msg());
+        }
+    }
+}
+
+/// Check one scenario run against every applicable predicate.
+pub fn check(spec: &ScenarioSpec, rep: &RunReport, base: &Baseline) -> OracleReport {
+    let mut o = OracleReport::default();
+    let dead: HashSet<Rank> = rep.dead.iter().copied().collect();
+    let pre: HashSet<Rank> = spec
+        .failures
+        .iter()
+        .filter(|s| s.is_pre_operational())
+        .map(|s| s.rank())
+        .collect();
+    let injected: HashSet<Rank> = spec.failures.iter().map(|s| s.rank()).collect();
+
+    // the simulator must only kill injected victims, and every
+    // pre-operational victim must end up dead (messages render sorted
+    // Vecs, never HashSets — violation text must be deterministic too)
+    let mut injected_sorted: Vec<Rank> = injected.iter().copied().collect();
+    injected_sorted.sort_unstable();
+    let mut pre_sorted: Vec<Rank> = pre.iter().copied().collect();
+    pre_sorted.sort_unstable();
+    o.check(dead.is_subset(&injected), || {
+        format!("dead set {:?} not a subset of injected {injected_sorted:?}", rep.dead)
+    });
+    o.check(pre.is_subset(&dead), || {
+        format!("pre-operational victims {pre_sorted:?} not all dead ({:?})", rep.dead)
+    });
+
+    // ---- delivery clauses -------------------------------------------------
+    for r in 0..spec.n {
+        let k = rep.deliveries_at(r);
+        o.check(k <= 1, || format!("rank {r} delivered {k} times (at-most-once)"));
+        if pre.contains(&r) {
+            o.check(k == 0, || format!("pre-dead rank {r} delivered"));
+        } else if !dead.contains(&r) {
+            o.check(k == 1, || format!("live rank {r} delivered {k} times (want 1)"));
+        }
+    }
+    for outs in rep.outcomes.iter() {
+        for out in outs {
+            if let Outcome::Error(e) = out {
+                o.check(false, || format!("in-contract scenario delivered error: {e}"));
+            }
+        }
+    }
+
+    match spec.collective {
+        Collective::Reduce => check_reduce(spec, rep, &dead, &pre, &injected, &mut o),
+        Collective::Allreduce => check_allreduce(spec, rep, &dead, &pre, &mut o),
+        Collective::Broadcast => check_broadcast(spec, rep, &dead, &mut o),
+    }
+
+    // ---- message-count bounds (Thm 5 / Thm 7) -----------------------------
+    let total = rep.metrics.total_msgs();
+    let upcorr = rep.metrics.msgs(MsgKind::UpCorrection);
+    let tree = rep.metrics.msgs(MsgKind::TreeUp);
+    match spec.collective {
+        Collective::Reduce | Collective::Broadcast => {
+            o.check(total <= base.total_msgs, || {
+                format!("total msgs {total} exceed failure-free {}", base.total_msgs)
+            });
+            o.check(upcorr <= base.upcorr_msgs, || {
+                format!("up-correction msgs {upcorr} exceed failure-free {}", base.upcorr_msgs)
+            });
+            o.check(tree <= base.tree_msgs, || {
+                format!("tree msgs {tree} exceed failure-free {}", base.tree_msgs)
+            });
+        }
+        Collective::Allreduce => {
+            let bound = (spec.f as u64 + 1) * base.total_msgs;
+            o.check(total <= bound, || {
+                format!("allreduce msgs {total} exceed the Thm 7 bound {bound}")
+            });
+        }
+    }
+    if spec.pattern == FailurePattern::None {
+        o.check(total == base.total_msgs, || {
+            format!("clean scenario msgs {total} != failure-free {}", base.total_msgs)
+        });
+    }
+
+    o
+}
+
+fn check_reduce(
+    spec: &ScenarioSpec,
+    rep: &RunReport,
+    dead: &HashSet<Rank>,
+    pre: &HashSet<Rank>,
+    injected: &HashSet<Rank>,
+    o: &mut OracleReport,
+) {
+    // the root never fails in generated scenarios; it must deliver the
+    // combined value exactly once
+    let root_outs = &rep.outcomes[spec.root as usize];
+    let root_value = match root_outs.first() {
+        Some(Outcome::ReduceRoot { value, known_failed }) => {
+            o.check(root_outs.len() == 1, || "root delivered more than once".to_string());
+            // failure-report soundness: only genuinely injected victims,
+            // sorted and deduplicated
+            o.check(known_failed.iter().all(|r| injected.contains(r)), || {
+                format!("report {known_failed:?} lists non-injected ranks")
+            });
+            o.check(known_failed.windows(2).all(|w| w[0] < w[1]), || {
+                format!("report {known_failed:?} not sorted/deduped")
+            });
+            Some(value)
+        }
+        other => {
+            o.check(false, || format!("root outcome {other:?}, want ReduceRoot"));
+            None
+        }
+    };
+    // non-roots deliver ReduceDone only
+    for r in 0..spec.n {
+        if r == spec.root {
+            continue;
+        }
+        for out in &rep.outcomes[r as usize] {
+            o.check(matches!(out, Outcome::ReduceDone), || {
+                format!("non-root rank {r} delivered {out:?}")
+            });
+        }
+    }
+    if let Some(value) = root_value {
+        check_combined_value(spec, value, dead, pre, o);
+    }
+}
+
+fn check_allreduce(
+    spec: &ScenarioSpec,
+    rep: &RunReport,
+    dead: &HashSet<Rank>,
+    pre: &HashSet<Rank>,
+    o: &mut OracleReport,
+) {
+    let mut first: Option<(&Value, u32)> = None;
+    for r in 0..spec.n {
+        for out in &rep.outcomes[r as usize] {
+            match out {
+                Outcome::Allreduce { value, attempts } => {
+                    o.check(*attempts <= spec.f + 1, || {
+                        format!("rank {r}: {attempts} attempts exceed f+1={}", spec.f + 1)
+                    });
+                    if let FailurePattern::RootKill { k } = spec.pattern {
+                        o.check(*attempts == k + 1, || {
+                            format!("rank {r}: {attempts} attempts, want {} (RootKill)", k + 1)
+                        });
+                    } else {
+                        o.check(*attempts == 1, || {
+                            format!("rank {r}: {attempts} attempts without a candidate death")
+                        });
+                    }
+                    match first {
+                        None => first = Some((value, *attempts)),
+                        Some((v0, a0)) => {
+                            o.check(value == v0, || {
+                                format!("rank {r} disagrees on the allreduce value (§5.1 item 5)")
+                            });
+                            o.check(*attempts == a0, || {
+                                format!("rank {r} disagrees on the attempt count")
+                            });
+                        }
+                    }
+                }
+                other => o.check(false, || format!("rank {r} delivered {other:?}")),
+            }
+        }
+    }
+    if let Some((value, _)) = first {
+        check_combined_value(spec, value, dead, pre, o);
+    }
+}
+
+fn check_broadcast(
+    spec: &ScenarioSpec,
+    rep: &RunReport,
+    _dead: &HashSet<Rank>,
+    o: &mut OracleReport,
+) {
+    let expect = spec.payload.initial(spec.root, spec.n);
+    for r in 0..spec.n {
+        for out in &rep.outcomes[r as usize] {
+            match out {
+                Outcome::Broadcast(value) => {
+                    o.check(*value == expect, || {
+                        format!("rank {r} delivered a value that is not the root's")
+                    });
+                }
+                other => o.check(false, || format!("rank {r} delivered {other:?}")),
+            }
+        }
+    }
+}
+
+/// Value predicates for a combined (reduce/allreduce) result.
+fn check_combined_value(
+    spec: &ScenarioSpec,
+    value: &Value,
+    dead: &HashSet<Rank>,
+    pre: &HashSet<Rank>,
+    o: &mut OracleReport,
+) {
+    match spec.payload {
+        PayloadKind::OneHot => {
+            // inclusion-mask semantics: Thms 1-4 exactly
+            let counts = value.inclusion_counts();
+            o.check(counts.len() == spec.n as usize, || {
+                format!("mask length {} != n {}", counts.len(), spec.n)
+            });
+            for r in 0..spec.n as usize {
+                let c = counts[r];
+                if pre.contains(&(r as Rank)) {
+                    o.check(c == 0, || format!("pre-dead rank {r} included {c}x"));
+                } else if dead.contains(&(r as Rank)) {
+                    o.check(c == 0 || c == 1, || {
+                        format!("in-op-failed rank {r} included {c}x (want 0 or 1)")
+                    });
+                } else {
+                    o.check(c == 1, || format!("live rank {r} included {c}x (want 1)"));
+                }
+            }
+        }
+        PayloadKind::RankValue => {
+            // exact fold over survivors — only predictable when every
+            // failure is pre-operational (in-op inclusion is 0-or-1)
+            let all_pre = spec.failures.iter().all(FailureSpec::is_pre_operational);
+            if all_pre && spec.op != ReduceOp::Prod {
+                let live = (0..spec.n).filter(|r| !pre.contains(r)).map(f64::from);
+                let expect = match spec.op {
+                    ReduceOp::Sum => live.sum::<f64>(),
+                    ReduceOp::Max => live.fold(f64::NEG_INFINITY, f64::max),
+                    ReduceOp::Min => live.fold(f64::INFINITY, f64::min),
+                    ReduceOp::Prod => unreachable!(),
+                };
+                let got = value.as_f64_scalar();
+                o.check(got == expect, || {
+                    format!("{} over survivors: got {got}, want {expect}", spec.op.name())
+                });
+            }
+        }
+        PayloadKind::VectorF32 { len } => {
+            // float summation order varies with failure timing; assert
+            // shape and finiteness only
+            o.check(value.len() == len as usize, || {
+                format!("payload length {} != {len}", value.len())
+            });
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Machine-readable campaign artifacts: a hand-rolled JSON writer (no
+//! serde in the offline image) and a per-collective/pattern summary
+//! table.
+//!
+//! The JSON contains only deterministic fields (virtual times, counts,
+//! ids — never wall-clock), so re-running the same grid produces a
+//! bit-identical `campaign_result.json`; the determinism test in
+//! rust/tests/campaign_engine.rs pins exactly that.
+
+use super::runner::{CampaignResult, ScenarioResult};
+use super::spec::{generate, GridConfig};
+use std::fmt::Write as _;
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
+    // re-derive the declarative half from the grid so the artifact is
+    // self-contained (id + config + plan + outcome + oracle verdict)
+    let spec = super::spec::scenario_at(grid, s.index);
+    let dead: Vec<String> = s.dead.iter().map(|r| r.to_string()).collect();
+    let violations: Vec<String> =
+        s.violations.iter().map(|v| format!("\"{}\"", json_escape(v))).collect();
+    format!(
+        "    {{\"index\":{},\"id\":\"{}\",\"seed\":{},\
+         \"collective\":\"{}\",\"n\":{},\"f\":{},\"root\":{},\
+         \"scheme\":\"{}\",\"op\":\"{}\",\"payload\":\"{}\",\"net\":\"{}\",\
+         \"detect_ns\":{},\"pattern\":\"{}\",\"failures\":\"{}\",\
+         \"delivered\":{},\"dead\":[{}],\
+         \"msgs\":{},\"upcorr\":{},\"tree\":{},\"bytes\":{},\
+         \"final_time_ns\":{},\"makespan_ns\":{},\"attempts\":{},\
+         \"checks\":{},\"violations\":[{}]}}",
+        s.index,
+        json_escape(&s.id),
+        s.seed,
+        spec.collective.name(),
+        spec.n,
+        spec.f,
+        spec.root,
+        super::spec::scheme_label(spec.scheme),
+        spec.op.name(),
+        super::spec::payload_label(spec.payload),
+        spec.net.name(),
+        spec.detect_latency,
+        spec.pattern.label(),
+        json_escape(&spec.failures_str()),
+        s.delivered,
+        dead.join(","),
+        s.msgs_total,
+        s.msgs_upcorr,
+        s.msgs_tree,
+        s.bytes_total,
+        s.final_time,
+        s.makespan.map(|t| t.to_string()).unwrap_or_else(|| "null".to_string()),
+        s.attempts,
+        s.oracle_checks,
+        violations.join(","),
+    )
+}
+
+/// Render the whole campaign result as a JSON document.
+pub fn to_json(result: &CampaignResult) -> String {
+    let grid = GridConfig {
+        count: result.scenarios.len() as u32,
+        seed: result.seed,
+        max_n: result.max_n,
+    };
+    let mut s = String::new();
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"seed\": {},", result.seed);
+    let _ = writeln!(s, "  \"max_n\": {},", result.max_n);
+    let _ = writeln!(s, "  \"scenario_count\": {},", result.scenarios.len());
+    let _ = writeln!(s, "  \"passed\": {},", result.passed_count());
+    let _ = writeln!(s, "  \"failed\": {},", result.failed_count());
+    let _ = writeln!(s, "  \"oracle_checks\": {},", result.total_checks());
+    s.push_str("  \"scenarios\": [\n");
+    for (i, sc) in result.scenarios.iter().enumerate() {
+        s.push_str(&scenario_json(sc, &grid));
+        if i + 1 < result.scenarios.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Aggregate pass/fail counts per (collective, pattern family), plus a
+/// totals row — the human-readable half of the artifact.
+pub fn summary_table(result: &CampaignResult) -> String {
+    let grid = GridConfig {
+        count: result.scenarios.len() as u32,
+        seed: result.seed,
+        max_n: result.max_n,
+    };
+    let specs = generate(&grid);
+    // BTreeMap for deterministic row order
+    let mut rows: std::collections::BTreeMap<(String, String), (u64, u64, u64)> =
+        std::collections::BTreeMap::new();
+    for (spec, sc) in specs.iter().zip(&result.scenarios) {
+        let key = (spec.collective.name().to_string(), spec.pattern.family().to_string());
+        let e = rows.entry(key).or_insert((0, 0, 0));
+        e.0 += 1;
+        if sc.passed() {
+            e.1 += 1;
+        }
+        e.2 += sc.oracle_checks as u64;
+    }
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<12} {:<10} {:>9} {:>9} {:>9} {:>9}",
+        "collective", "pattern", "scenarios", "passed", "failed", "checks"
+    );
+    for ((coll, fam), (count, passed, checks)) in &rows {
+        let _ = writeln!(
+            out,
+            "{:<12} {:<10} {:>9} {:>9} {:>9} {:>9}",
+            coll,
+            fam,
+            count,
+            passed,
+            count - passed,
+            checks
+        );
+    }
+    let _ = writeln!(
+        out,
+        "{:<12} {:<10} {:>9} {:>9} {:>9} {:>9}",
+        "total",
+        "",
+        result.scenarios.len(),
+        result.passed_count(),
+        result.failed_count(),
+        result.total_checks()
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::campaign::runner::{run_campaign, CampaignConfig};
+
+    #[test]
+    fn json_is_deterministic_and_shaped() {
+        let cfg = CampaignConfig {
+            grid: GridConfig { count: 12, seed: 4, max_n: 32 },
+            threads: 2,
+        };
+        let a = to_json(&run_campaign(&cfg));
+        let b = to_json(&run_campaign(&cfg));
+        assert_eq!(a, b, "same grid must render bit-identical JSON");
+        assert!(a.starts_with("{\n"));
+        assert!(a.trim_end().ends_with('}'));
+        assert!(a.contains("\"scenario_count\": 12"));
+        assert!(a.contains("\"scenarios\": ["));
+    }
+
+    #[test]
+    fn summary_counts_add_up() {
+        let cfg = CampaignConfig {
+            grid: GridConfig { count: 20, seed: 6, max_n: 32 },
+            threads: 2,
+        };
+        let result = run_campaign(&cfg);
+        let table = summary_table(&result);
+        assert!(table.contains("total"));
+        assert!(table.contains("20"));
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,0 +1,246 @@
+//! Campaign runner: executes every scenario of a grid on the
+//! deterministic DES, fanned out over worker threads, and checks each
+//! run against the oracle predicates.
+//!
+//! Determinism: each scenario is an independent pure function of its
+//! spec (the DES has no shared state and the per-scenario seed is
+//! derived from the grid seed), and results are written into
+//! index-addressed slots — so the campaign result, and the JSON
+//! rendered from it, are bit-identical across runs and across thread
+//! counts. The failure-free baseline cache is a pure memoization and
+//! cannot affect outcomes.
+
+use super::oracle::{self, Baseline};
+use super::spec::{generate, Collective, GridConfig, ScenarioSpec};
+use crate::sim::{self, RunReport};
+use crate::types::TimeNs;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Campaign execution configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CampaignConfig {
+    pub grid: GridConfig,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+}
+
+impl Default for CampaignConfig {
+    fn default() -> Self {
+        CampaignConfig { grid: GridConfig::default(), threads: 0 }
+    }
+}
+
+/// Deterministic record of one executed scenario (everything that goes
+/// into `campaign_result.json`; no wall-clock fields).
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub index: u32,
+    pub id: String,
+    pub seed: u64,
+    /// Ranks that delivered at least one outcome.
+    pub delivered: u32,
+    /// Ranks dead at the end of the run.
+    pub dead: Vec<u32>,
+    pub msgs_total: u64,
+    pub msgs_upcorr: u64,
+    pub msgs_tree: u64,
+    pub bytes_total: u64,
+    /// Virtual time when the event queue drained.
+    pub final_time: TimeNs,
+    /// Latest delivery time (virtual), if anyone delivered.
+    pub makespan: Option<TimeNs>,
+    /// Allreduce attempt count (0 for reduce/broadcast).
+    pub attempts: u32,
+    pub oracle_checks: u32,
+    pub violations: Vec<String>,
+}
+
+impl ScenarioResult {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// The whole campaign's outcome.
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub seed: u64,
+    pub max_n: u32,
+    pub scenarios: Vec<ScenarioResult>,
+}
+
+impl CampaignResult {
+    pub fn passed_count(&self) -> usize {
+        self.scenarios.iter().filter(|s| s.passed()).count()
+    }
+
+    pub fn failed_count(&self) -> usize {
+        self.scenarios.len() - self.passed_count()
+    }
+
+    pub fn total_checks(&self) -> u64 {
+        self.scenarios.iter().map(|s| s.oracle_checks as u64).sum()
+    }
+}
+
+/// Execute one scenario and evaluate the oracles against `base`.
+pub fn run_scenario(spec: &ScenarioSpec, base: &Baseline) -> (ScenarioResult, RunReport) {
+    let rep = execute(spec, false);
+    let o = oracle::check(spec, &rep, base);
+    let attempts = rep
+        .outcomes
+        .iter()
+        .flatten()
+        .find_map(|out| match out {
+            crate::collectives::Outcome::Allreduce { attempts, .. } => Some(*attempts),
+            _ => None,
+        })
+        .unwrap_or(0);
+    let result = ScenarioResult {
+        index: spec.index,
+        id: spec.id.clone(),
+        seed: spec.seed,
+        delivered: rep.delivered_ranks().len() as u32,
+        dead: rep.dead.clone(),
+        msgs_total: rep.metrics.total_msgs(),
+        msgs_upcorr: rep.metrics.msgs(crate::types::MsgKind::UpCorrection),
+        msgs_tree: rep.metrics.msgs(crate::types::MsgKind::TreeUp),
+        bytes_total: rep.metrics.total_bytes(),
+        final_time: rep.final_time,
+        makespan: rep.makespan(),
+        attempts,
+        oracle_checks: o.checks,
+        violations: o.violations,
+    };
+    (result, rep)
+}
+
+/// Run the scenario's collective on the DES (optionally traced).
+pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
+    let mut cfg = spec.sim_config();
+    cfg.trace = trace;
+    match spec.collective {
+        Collective::Reduce => sim::run_reduce(&cfg),
+        Collective::Allreduce => sim::run_allreduce(&cfg),
+        Collective::Broadcast => sim::run_broadcast(&cfg),
+    }
+}
+
+/// The failure-free baseline counts for a scenario's configuration.
+pub fn baseline_of(spec: &ScenarioSpec) -> Baseline {
+    let cfg = spec.baseline_sim_config();
+    let rep = match spec.collective {
+        Collective::Reduce => sim::run_reduce(&cfg),
+        Collective::Allreduce => sim::run_allreduce(&cfg),
+        Collective::Broadcast => sim::run_broadcast(&cfg),
+    };
+    Baseline::of(&rep)
+}
+
+fn cached_baseline(
+    cache: &Mutex<HashMap<String, Baseline>>,
+    spec: &ScenarioSpec,
+) -> Baseline {
+    let key = spec.baseline_key();
+    if let Some(b) = cache.lock().unwrap().get(&key) {
+        return *b;
+    }
+    // computed outside the lock: duplicated work on a race is harmless
+    // and deterministic
+    let b = baseline_of(spec);
+    cache.lock().unwrap().insert(key, b);
+    b
+}
+
+/// Run the whole campaign across worker threads.
+pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
+    let specs = generate(&cfg.grid);
+    let threads = if cfg.threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.threads.max(1)
+    };
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ScenarioResult>>> =
+        (0..specs.len()).map(|_| Mutex::new(None)).collect();
+    let cache: Mutex<HashMap<String, Baseline>> = Mutex::new(HashMap::new());
+
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= specs.len() {
+                    break;
+                }
+                let base = cached_baseline(&cache, &specs[i]);
+                let (result, _rep) = run_scenario(&specs[i], &base);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+
+    let scenarios: Vec<ScenarioResult> = slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("scenario slot filled"))
+        .collect();
+    CampaignResult { seed: cfg.grid.seed, max_n: cfg.grid.max_n, scenarios }
+}
+
+/// Look up a scenario of the grid by id (for `--replay`). Ids start
+/// with `s<index>-` and a scenario is fully determined by
+/// `(seed, max_n, index)`, so the lookup is O(1) and independent of
+/// the campaign's count.
+pub fn find_scenario(grid: &GridConfig, id: &str) -> Option<ScenarioSpec> {
+    let rest = id.strip_prefix('s')?;
+    let index: u32 = rest[..rest.find('-')?].parse().ok()?;
+    let spec = super::spec::scenario_at(grid, index);
+    (spec.id == id).then_some(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_scenario_roundtrip() {
+        let grid = GridConfig { count: 8, seed: 5, max_n: 32 };
+        let specs = generate(&grid);
+        for spec in &specs {
+            let base = baseline_of(spec);
+            let (result, _rep) = run_scenario(spec, &base);
+            assert_eq!(result.id, spec.id);
+            assert!(
+                result.passed(),
+                "{}: {:?}",
+                spec.id,
+                result.violations
+            );
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let grid = GridConfig { count: 40, seed: 9, max_n: 48 };
+        let a = run_campaign(&CampaignConfig { grid, threads: 1 });
+        let b = run_campaign(&CampaignConfig { grid, threads: 4 });
+        assert_eq!(a.scenarios.len(), b.scenarios.len());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.msgs_total, y.msgs_total);
+            assert_eq!(x.final_time, y.final_time);
+            assert_eq!(x.violations, y.violations);
+        }
+    }
+
+    #[test]
+    fn find_scenario_by_id() {
+        let grid = GridConfig { count: 16, seed: 2, max_n: 32 };
+        let specs = generate(&grid);
+        let found = find_scenario(&grid, &specs[7].id).expect("id resolves");
+        assert_eq!(found.index, 7);
+        assert!(find_scenario(&grid, "s99999-nope").is_none());
+    }
+}

@@ -1,0 +1,570 @@
+//! Scenario manifest: a declarative description of one simulated
+//! collective run, plus the deterministic grid sweep that expands a
+//! `(count, seed, max_n)` triple into that many fully concrete
+//! scenarios.
+//!
+//! Determinism contract: scenario `i` of a grid depends only on
+//! `(grid.seed, i)` — a per-scenario PRNG is seeded with a splitmix64
+//! mix of the two, so any single scenario can be regenerated (and
+//! replayed) in isolation from its id, without generating the rest of
+//! the campaign. See docs/CAMPAIGN.md for the schema.
+
+use crate::collectives::broadcast::CorrectionMode;
+use crate::collectives::failure_info::Scheme;
+use crate::collectives::ReduceOp;
+use crate::config::PayloadKind;
+use crate::failure::FailureSpec;
+use crate::prng::Pcg;
+use crate::sim::net::NetModel;
+use crate::sim::SimConfig;
+use crate::types::{Rank, TimeNs};
+
+/// Which collective a scenario exercises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collective {
+    Reduce,
+    Allreduce,
+    Broadcast,
+}
+
+impl Collective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::Reduce => "reduce",
+            Collective::Allreduce => "allreduce",
+            Collective::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// Network-model preset selector (keeps the manifest declarative; the
+/// concrete [`NetModel`] is derived).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetKind {
+    Hpc,
+    Lan,
+    Unit,
+}
+
+impl NetKind {
+    pub const ALL: [NetKind; 3] = [NetKind::Hpc, NetKind::Lan, NetKind::Unit];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetKind::Hpc => "hpc",
+            NetKind::Lan => "lan",
+            NetKind::Unit => "unit",
+        }
+    }
+
+    pub fn model(&self) -> NetModel {
+        match self {
+            NetKind::Hpc => NetModel::hpc(),
+            NetKind::Lan => NetModel::lan(),
+            NetKind::Unit => NetModel::unit(),
+        }
+    }
+}
+
+/// A failure *pattern*: the declarative shape of a failure plan. The
+/// concrete [`FailureSpec`]s are instantiated from the pattern and the
+/// scenario seed. All patterns stay inside the paper's contract:
+/// at most `f` failures, the (reduce/broadcast) root never fails, and
+/// allreduce candidate roots fail only pre-operationally (§5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailurePattern {
+    /// No failures — the Theorem 5 equality case.
+    None,
+    /// `k` distinct pre-operational failures.
+    Pre { k: u32 },
+    /// `k` in-operational failures with send-count kill points drawn
+    /// from `0..=max_sends` (the Thm 4 "fails before sending that
+    /// message" boundary sweep).
+    InOp { k: u32, max_sends: u32 },
+    /// Failure storm: `k` processes all die inside one short virtual-
+    /// time window (correlated failures, e.g. a rack power event).
+    Storm { k: u32 },
+    /// Cascade: `k` processes die one after another, spaced apart by a
+    /// network-scaled gap (rolling failures racing the protocol).
+    Cascade { k: u32 },
+    /// Allreduce only: kill the first `k` candidate roots
+    /// pre-operationally, forcing `k` rotations (Algorithm 5).
+    RootKill { k: u32 },
+    /// In-operational failures timed at the correction phase: victims
+    /// die attempting their first or second send, i.e. mid way through
+    /// their up-correction group exchange.
+    CorrectionPhase { k: u32 },
+}
+
+impl FailurePattern {
+    /// Short label used in scenario ids and the summary table.
+    pub fn label(&self) -> String {
+        match self {
+            FailurePattern::None => "clean".to_string(),
+            FailurePattern::Pre { k } => format!("pre{k}"),
+            FailurePattern::InOp { k, .. } => format!("inop{k}"),
+            FailurePattern::Storm { k } => format!("storm{k}"),
+            FailurePattern::Cascade { k } => format!("cascade{k}"),
+            FailurePattern::RootKill { k } => format!("rootkill{k}"),
+            FailurePattern::CorrectionPhase { k } => format!("corr{k}"),
+        }
+    }
+
+    /// Family name (aggregation key for the summary table).
+    pub fn family(&self) -> &'static str {
+        match self {
+            FailurePattern::None => "clean",
+            FailurePattern::Pre { .. } => "pre",
+            FailurePattern::InOp { .. } => "inop",
+            FailurePattern::Storm { .. } => "storm",
+            FailurePattern::Cascade { .. } => "cascade",
+            FailurePattern::RootKill { .. } => "rootkill",
+            FailurePattern::CorrectionPhase { .. } => "corr",
+        }
+    }
+
+    /// Number of injected failures.
+    pub fn k(&self) -> u32 {
+        match *self {
+            FailurePattern::None => 0,
+            FailurePattern::Pre { k }
+            | FailurePattern::InOp { k, .. }
+            | FailurePattern::Storm { k }
+            | FailurePattern::Cascade { k }
+            | FailurePattern::RootKill { k }
+            | FailurePattern::CorrectionPhase { k } => k,
+        }
+    }
+}
+
+/// One fully concrete scenario.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    /// Position in the campaign (also the JSON order).
+    pub index: u32,
+    /// Stable human-readable id, usable with `campaign --replay <id>`.
+    pub id: String,
+    /// Per-scenario derived seed (splitmix of grid seed and index).
+    pub seed: u64,
+    pub collective: Collective,
+    pub n: u32,
+    pub f: u32,
+    pub root: Rank,
+    pub scheme: Scheme,
+    pub op: ReduceOp,
+    pub payload: PayloadKind,
+    pub net: NetKind,
+    pub correction: CorrectionMode,
+    pub detect_latency: TimeNs,
+    pub pattern: FailurePattern,
+    /// Concrete failure plan instantiated from `pattern` and `seed`.
+    pub failures: Vec<FailureSpec>,
+}
+
+impl ScenarioSpec {
+    /// The simulator configuration for this scenario.
+    pub fn sim_config(&self) -> SimConfig {
+        let mut cfg = SimConfig::new(self.n, self.f)
+            .root(self.root)
+            .scheme(self.scheme)
+            .op(self.op)
+            .payload(self.payload)
+            .net(self.net.model())
+            .failures(self.failures.clone())
+            .detect_latency(self.detect_latency);
+        cfg.correction = self.correction;
+        cfg.seed = self.seed;
+        cfg
+    }
+
+    /// The same configuration with the failure plan removed — the
+    /// clean baseline the oracle's message bounds compare against.
+    pub fn baseline_sim_config(&self) -> SimConfig {
+        let mut cfg = self.sim_config();
+        cfg.failures = Vec::new();
+        cfg
+    }
+
+    /// Cache key shared by every scenario with the same failure-free
+    /// configuration (so the campaign computes each baseline once).
+    pub fn baseline_key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}",
+            self.collective.name(),
+            self.n,
+            self.f,
+            self.root,
+            scheme_label(self.scheme),
+            self.op.name(),
+            payload_label(self.payload),
+            self.net.name(),
+            self.detect_latency,
+            self.correction,
+        )
+    }
+
+    /// The failure plan in the config-file grammar (`pre:R`,
+    /// `sends:R:K`, `time:R:NS`), comma-joined — copy-pasteable into
+    /// `ftcoll reduce --fail ...`.
+    pub fn failures_str(&self) -> String {
+        self.failures
+            .iter()
+            .map(|s| match *s {
+                FailureSpec::Pre { rank } => format!("pre:{rank}"),
+                FailureSpec::AfterSends { rank, sends } => format!("sends:{rank}:{sends}"),
+                FailureSpec::AtTime { rank, at } => format!("time:{rank}:{at}"),
+            })
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+pub fn scheme_label(s: Scheme) -> &'static str {
+    match s {
+        Scheme::List => "list",
+        Scheme::CountBit => "countbit",
+        Scheme::Bit => "bit",
+    }
+}
+
+pub fn payload_label(p: PayloadKind) -> String {
+    match p {
+        PayloadKind::RankValue => "rank".to_string(),
+        PayloadKind::OneHot => "onehot".to_string(),
+        PayloadKind::VectorF32 { len } => format!("vec{len}"),
+    }
+}
+
+/// The declarative grid: how many scenarios, from which seed, capped at
+/// which process count.
+#[derive(Clone, Copy, Debug)]
+pub struct GridConfig {
+    pub count: u32,
+    pub seed: u64,
+    pub max_n: u32,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig { count: 1000, seed: 1, max_n: 128 }
+    }
+}
+
+/// splitmix64 mix of the grid seed and a scenario index.
+pub fn derive_seed(base: u64, index: u32) -> u64 {
+    let mut z = base ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(index as u64 + 1);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Expand the grid into `count` concrete scenarios. Pure function of
+/// the grid config; scenario `i` depends only on `(seed, i)`.
+pub fn generate(grid: &GridConfig) -> Vec<ScenarioSpec> {
+    (0..grid.count).map(|i| scenario_at(grid, i)).collect()
+}
+
+/// Generate scenario `index` of the grid in isolation.
+pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
+    let seed = derive_seed(grid.seed, index);
+    let mut rng = Pcg::new(seed);
+
+    // collective: 40% reduce / 40% allreduce / 20% broadcast
+    let collective = match rng.below(10) {
+        0..=3 => Collective::Reduce,
+        4..=7 => Collective::Allreduce,
+        _ => Collective::Broadcast,
+    };
+
+    // n: mix of tiny edge cases, powers of two, and off-by-one sizes
+    const NS: [u32; 22] =
+        [1, 2, 3, 4, 5, 6, 7, 8, 9, 12, 15, 16, 17, 24, 31, 32, 33, 48, 64, 65, 96, 128];
+    let max_n = grid.max_n.max(2);
+    let pool: Vec<u32> = NS.iter().copied().filter(|&n| n <= max_n).collect();
+    let n = pool[rng.below(pool.len() as u64) as usize];
+
+    // f: 0..=min(6, n-1); for n == 1 allow nonzero f (degenerate trees)
+    let f = if n == 1 {
+        rng.below(3) as u32
+    } else {
+        rng.range(0, 6.min(n - 1) as u64) as u32
+    };
+
+    // root: allreduce derives its candidate roots 0..=f itself
+    let root: Rank = match collective {
+        Collective::Allreduce => 0,
+        _ => rng.below(n as u64) as Rank,
+    };
+
+    let scheme = [Scheme::List, Scheme::CountBit, Scheme::Bit][rng.below(3) as usize];
+
+    // payload/op pairs: OneHot masks require Sum (inclusion counting)
+    let (payload, op) = match rng.below(5) {
+        0 | 1 => (PayloadKind::OneHot, ReduceOp::Sum),
+        2 => (PayloadKind::RankValue, ReduceOp::Sum),
+        3 => {
+            let op = [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min][rng.below(3) as usize];
+            (PayloadKind::RankValue, op)
+        }
+        _ => {
+            let len = [8u32, 64, 256][rng.below(3) as usize];
+            (PayloadKind::VectorF32 { len }, ReduceOp::Sum)
+        }
+    };
+
+    let net = NetKind::ALL[rng.below(3) as usize];
+    let detect_latency: TimeNs = [1_000, 10_000, 100_000][rng.below(3) as usize];
+    let correction = CorrectionMode::Always;
+
+    let pattern = pick_pattern(&mut rng, collective, n, f, root);
+    let failures = instantiate_pattern(&mut rng, pattern, collective, n, f, root, net);
+    debug_assert!(crate::failure::validate_plan(n, &failures).is_ok());
+    debug_assert!(failures.len() as u32 <= f);
+
+    let id = format!(
+        "s{:05}-{}-n{}-f{}-r{}-{}-{}-{}-{}-{}",
+        index,
+        collective.name(),
+        n,
+        f,
+        root,
+        scheme_label(scheme),
+        op.name(),
+        payload_label(payload),
+        net.name(),
+        pattern.label(),
+    );
+
+    ScenarioSpec {
+        index,
+        id,
+        seed,
+        collective,
+        n,
+        f,
+        root,
+        scheme,
+        op,
+        payload,
+        net,
+        correction,
+        detect_latency,
+        pattern,
+        failures,
+    }
+}
+
+/// Victims available to non-RootKill patterns: never the reduce/
+/// broadcast root; never an allreduce candidate root (§5.1 — those may
+/// only fail pre-operationally, which RootKill models explicitly).
+fn victim_pool(collective: Collective, n: u32, f: u32, root: Rank) -> Vec<Rank> {
+    match collective {
+        Collective::Allreduce => (f.saturating_add(1)..n).collect(),
+        _ => (0..n).filter(|&r| r != root).collect(),
+    }
+}
+
+fn pick_pattern(
+    rng: &mut Pcg,
+    collective: Collective,
+    n: u32,
+    f: u32,
+    root: Rank,
+) -> FailurePattern {
+    let pool_len = victim_pool(collective, n, f, root).len() as u32;
+    // Reduce (and allreduce's reduce half) finds a failure-free subtree
+    // by pigeonhole only while failures < subtree count. The I(f)-tree
+    // has min(f+1, n-1) subtrees — f+1 in the paper's regime n ≥ f+2,
+    // fewer in the degenerate n ≤ f+1 corner, where k = n-1 failures
+    // can legitimately kill EVERY subtree and the algorithm must error
+    // (out of contract). The campaign generates in-contract scenarios,
+    // so cap k strictly below the subtree count for the reducing
+    // collectives; broadcast's ring correction has no such corner.
+    let subtrees = (f + 1).min(n.saturating_sub(1));
+    let kmax = match collective {
+        Collective::Broadcast => f.min(pool_len),
+        _ => f.min(pool_len).min(subtrees.saturating_sub(1)),
+    };
+    // allreduce candidates are 0..=min(f, n-1): keep one candidate
+    // alive AND keep the k pre-dead candidates below the subtree count
+    // of the rotated-to root's reduce
+    let rootkill_max = if collective == Collective::Allreduce {
+        f.min(n.saturating_sub(1)).min(subtrees.saturating_sub(1))
+    } else {
+        0
+    };
+
+    let mut options: Vec<FailurePattern> = vec![FailurePattern::None];
+    if kmax >= 1 {
+        let k = rng.range(1, kmax as u64) as u32;
+        options.push(FailurePattern::Pre { k });
+        let k = rng.range(1, kmax as u64) as u32;
+        let max_sends = rng.range(0, (f + 2) as u64) as u32;
+        options.push(FailurePattern::InOp { k, max_sends });
+        options.push(FailurePattern::Storm { k: kmax });
+        let k = rng.range(1, kmax as u64) as u32;
+        options.push(FailurePattern::Cascade { k });
+        let k = rng.range(1, kmax as u64) as u32;
+        options.push(FailurePattern::CorrectionPhase { k });
+    }
+    if rootkill_max >= 1 {
+        let k = rng.range(1, rootkill_max as u64) as u32;
+        options.push(FailurePattern::RootKill { k });
+    }
+    // weight away from the clean case when failures are possible
+    if options.len() > 1 && rng.below(8) != 0 {
+        let i = rng.range(1, options.len() as u64 - 1) as usize;
+        options[i]
+    } else {
+        options[0]
+    }
+}
+
+fn instantiate_pattern(
+    rng: &mut Pcg,
+    pattern: FailurePattern,
+    collective: Collective,
+    n: u32,
+    f: u32,
+    root: Rank,
+    net: NetKind,
+) -> Vec<FailureSpec> {
+    let pool = victim_pool(collective, n, f, root);
+    let pick_victims = |rng: &mut Pcg, k: u32| -> Vec<Rank> {
+        rng.choose_distinct(pool.len() as u64, k as usize)
+            .into_iter()
+            .map(|i| pool[i as usize])
+            .collect()
+    };
+    // base virtual time scaled to the net preset so timed kills land
+    // while the protocol is in flight
+    let lat = net.model().latency.max(1);
+    match pattern {
+        FailurePattern::None => Vec::new(),
+        FailurePattern::Pre { k } => pick_victims(rng, k)
+            .into_iter()
+            .map(|rank| FailureSpec::Pre { rank })
+            .collect(),
+        FailurePattern::InOp { k, max_sends } => pick_victims(rng, k)
+            .into_iter()
+            .map(|rank| FailureSpec::AfterSends {
+                rank,
+                sends: rng.range(0, max_sends as u64) as u32,
+            })
+            .collect(),
+        FailurePattern::Storm { k } => {
+            let at = lat * rng.range(1, 30);
+            pick_victims(rng, k)
+                .into_iter()
+                .map(|rank| FailureSpec::AtTime { rank, at: at + rng.below(lat) })
+                .collect()
+        }
+        FailurePattern::Cascade { k } => {
+            let start = lat * rng.range(1, 10);
+            let gap = lat * rng.range(1, 20);
+            pick_victims(rng, k)
+                .into_iter()
+                .enumerate()
+                .map(|(j, rank)| FailureSpec::AtTime { rank, at: start + gap * j as u64 })
+                .collect()
+        }
+        FailurePattern::RootKill { k } => {
+            // candidates are 0..=min(f, n-1), tried in order: killing the
+            // first k forces exactly k rotations
+            (0..k).map(|rank| FailureSpec::Pre { rank }).collect()
+        }
+        FailurePattern::CorrectionPhase { k } => pick_victims(rng, k)
+            .into_iter()
+            .map(|rank| FailureSpec::AfterSends { rank, sends: rng.below(2) as u32 })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_deterministic_and_isolated() {
+        let grid = GridConfig { count: 64, seed: 42, max_n: 64 };
+        let a = generate(&grid);
+        let b = generate(&grid);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.failures, y.failures);
+        }
+        // scenario_at regenerates any index without the rest
+        for i in [0u32, 17, 63] {
+            let s = scenario_at(&grid, i);
+            assert_eq!(s.id, a[i as usize].id);
+            assert_eq!(s.failures, a[i as usize].failures);
+        }
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let specs = generate(&GridConfig { count: 256, seed: 7, max_n: 128 });
+        let ids: std::collections::HashSet<_> = specs.iter().map(|s| s.id.clone()).collect();
+        assert_eq!(ids.len(), specs.len());
+    }
+
+    #[test]
+    fn plans_stay_inside_the_contract() {
+        for spec in generate(&GridConfig { count: 512, seed: 3, max_n: 128 }) {
+            assert!(spec.failures.len() as u32 <= spec.f, "{}", spec.id);
+            crate::failure::validate_plan(spec.n, &spec.failures).unwrap();
+            // reducing collectives: failures stay strictly below the
+            // I(f)-tree subtree count, so a failure-free subtree always
+            // exists (pigeonhole — see pick_pattern)
+            if spec.collective != Collective::Broadcast {
+                let subtrees = (spec.f + 1).min(spec.n.saturating_sub(1));
+                assert!(
+                    (spec.failures.len() as u32) < subtrees.max(1),
+                    "{}: {} failures vs {} subtrees",
+                    spec.id,
+                    spec.failures.len(),
+                    subtrees
+                );
+            }
+            for s in &spec.failures {
+                match spec.collective {
+                    Collective::Allreduce => {
+                        // candidate roots fail only pre-operationally
+                        let candidates_end = spec.f.min(spec.n - 1);
+                        if s.rank() <= candidates_end {
+                            assert!(
+                                s.is_pre_operational(),
+                                "{}: candidate {} fails in-operation",
+                                spec.id,
+                                s.rank()
+                            );
+                        }
+                    }
+                    _ => assert_ne!(s.rank(), spec.root, "{}: root killed", spec.id),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_grid_seeds_differ() {
+        let a = generate(&GridConfig { count: 32, seed: 1, max_n: 64 });
+        let b = generate(&GridConfig { count: 32, seed: 2, max_n: 64 });
+        assert!(a.iter().zip(&b).any(|(x, y)| x.id != y.id));
+    }
+
+    #[test]
+    fn grid_covers_every_collective_and_pattern_family() {
+        let specs = generate(&GridConfig { count: 1000, seed: 1, max_n: 128 });
+        for c in [Collective::Reduce, Collective::Allreduce, Collective::Broadcast] {
+            assert!(specs.iter().any(|s| s.collective == c), "{c:?} missing");
+        }
+        for fam in ["clean", "pre", "inop", "storm", "cascade", "rootkill", "corr"] {
+            assert!(
+                specs.iter().any(|s| s.pattern.family() == fam),
+                "pattern family {fam} missing from 1000-scenario grid"
+            );
+        }
+    }
+}

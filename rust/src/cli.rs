@@ -14,17 +14,31 @@ pub struct Args {
     consumed: std::cell::RefCell<Vec<String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+/// CLI errors (Display/Error by hand — no thiserror crate offline).
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing subcommand; try `ftcoll help`")]
     MissingSubcommand,
-    #[error("option `--{0}` expects a value")]
     MissingValue(String),
-    #[error("invalid value `{1}` for `--{0}`: {2}")]
     BadValue(String, String, String),
-    #[error("unknown option(s): {0}")]
     UnknownOptions(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingSubcommand => {
+                write!(f, "missing subcommand; try `ftcoll help`")
+            }
+            CliError::MissingValue(k) => write!(f, "option `--{k}` expects a value"),
+            CliError::BadValue(k, v, e) => {
+                write!(f, "invalid value `{v}` for `--{k}`: {e}")
+            }
+            CliError::UnknownOptions(o) => write!(f, "unknown option(s): {o}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args, CliError> {

@@ -11,7 +11,10 @@
 //!   allreduce ([`collectives::allreduce`]), written as executor-agnostic
 //!   event-driven state machines. Two executors drive them: a deterministic
 //!   discrete-event simulator ([`sim`]) and a live multi-threaded
-//!   message-passing engine ([`coordinator`]).
+//!   message-passing engine ([`coordinator`]). The [`campaign`] subsystem
+//!   sweeps thousands of generated (n, f, scheme, failure-pattern, net)
+//!   scenarios over the DES and checks each against oracle predicates
+//!   derived from the paper's theorems (docs/CAMPAIGN.md).
 //! * **Layer 2 (python/compile/model.py)** — the JAX compute graphs (k-way
 //!   combine, data-parallel transformer train step) lowered once, AOT, to
 //!   HLO text artifacts.
@@ -42,6 +45,7 @@
 //! ```
 
 pub mod benchlib;
+pub mod campaign;
 pub mod cli;
 pub mod collectives;
 pub mod config;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   reduce|allreduce|broadcast   simulate one collective (DES)
 //!   baseline                     simulate a baseline algorithm
+//!   campaign                     deterministic scenario campaign + oracles
 //!   live                         run on the live threaded engine
 //!   topology                     inspect groups/I(f)-tree for (n, f)
 //!   artifacts                    list + warm the AOT artifacts
@@ -33,6 +34,7 @@ fn main() {
     let code = match args.subcommand.as_str() {
         "reduce" | "allreduce" | "broadcast" => run_sim(&args),
         "baseline" => run_baseline(&args),
+        "campaign" => run_campaign_cmd(&args),
         "live" => run_live_cmd(&args),
         "topology" => run_topology(&args),
         "artifacts" => run_artifacts(&args),
@@ -63,6 +65,11 @@ USAGE: ftcoll <subcommand> [options]
   allreduce  same options — simulate fault-tolerant allreduce
   broadcast  same options — simulate corrected-tree broadcast
   baseline   --algo tree|flat|ring|gossip + same options
+  campaign   [--count 1000] [--seed 1] [--max-n 128] [--threads 0]
+             [--out campaign_result.json] [--check-oracles]
+             [--replay <scenario-id> [--trace]]
+             — deterministic scenario sweep checked by paper-semantics
+             oracles; any failing scenario is replayable by id
   live       --algo reduce|allreduce [--pjrt] — threaded engine run
   topology   --n 16 --f 2 — print up-correction groups and I(f)-tree
   artifacts  [--dir artifacts] — list and compile the AOT artifacts
@@ -178,6 +185,99 @@ fn run_baseline(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn run_campaign_cmd(args: &Args) -> Result<(), String> {
+    use ftcoll::campaign::{self, CampaignConfig, GridConfig};
+
+    let count: u32 = args.get_parsed("count", 1000).map_err(|e| e.to_string())?;
+    let seed: u64 = args.get_parsed("seed", 1).map_err(|e| e.to_string())?;
+    let threads: usize = args.get_parsed("threads", 0).map_err(|e| e.to_string())?;
+    let max_n: u32 = args.get_parsed("max-n", 128).map_err(|e| e.to_string())?;
+    let out = args.get("out").unwrap_or("campaign_result.json").to_string();
+    let replay = args.get("replay").map(String::from);
+    let trace = args.flag("trace");
+    let strict = args.flag("check-oracles");
+    args.finish().map_err(|e| e.to_string())?;
+
+    let grid = GridConfig { count, seed, max_n };
+
+    if let Some(id) = replay {
+        return replay_scenario(&grid, &id, trace);
+    }
+
+    let t0 = std::time::Instant::now();
+    let result = campaign::run_campaign(&CampaignConfig { grid, threads });
+    let elapsed = t0.elapsed();
+    print!("{}", campaign::summary_table(&result));
+    println!(
+        "{} scenarios in {:.2}s ({:.0}/s), {} oracle checks, {} violation(s)",
+        result.scenarios.len(),
+        elapsed.as_secs_f64(),
+        result.scenarios.len() as f64 / elapsed.as_secs_f64().max(1e-9),
+        result.total_checks(),
+        result.failed_count(),
+    );
+    for s in result.scenarios.iter().filter(|s| !s.passed()).take(10) {
+        println!("FAILED {}:", s.id);
+        for v in &s.violations {
+            println!("    {v}");
+        }
+        println!(
+            "    replay: ftcoll campaign --seed {seed} --max-n {max_n} --replay {} --trace",
+            s.id
+        );
+    }
+    if out != "-" {
+        std::fs::write(&out, campaign::to_json(&result)).map_err(|e| format!("{out}: {e}"))?;
+        println!("wrote {out}");
+    }
+    if strict && result.failed_count() > 0 {
+        return Err(format!("{} scenario(s) failed oracle checks", result.failed_count()));
+    }
+    Ok(())
+}
+
+fn replay_scenario(
+    grid: &ftcoll::campaign::GridConfig,
+    id: &str,
+    trace: bool,
+) -> Result<(), String> {
+    use ftcoll::campaign;
+
+    let spec = campaign::find_scenario(grid, id).ok_or_else(|| {
+        format!(
+            "scenario `{id}` does not belong to this grid (seed {}, max-n {}) — \
+             pass the campaign's --seed/--max-n alongside --replay",
+            grid.seed, grid.max_n
+        )
+    })?;
+    println!(
+        "replaying {} (seed {:#x}): {} n={} f={} root={} fail=[{}]",
+        spec.id,
+        spec.seed,
+        spec.collective.name(),
+        spec.n,
+        spec.f,
+        spec.root,
+        spec.failures_str()
+    );
+    // one execution: the oracle judges exactly the run that was printed
+    let rep = campaign::execute(&spec, trace);
+    print_report(&rep);
+    let base = campaign::baseline_of(&spec);
+    let o = campaign::oracle::check(&spec, &rep, &base);
+    if o.passed() {
+        println!("oracle: PASS ({} checks)", o.checks);
+        Ok(())
+    } else {
+        println!("oracle: FAIL ({} checks)", o.checks);
+        for v in &o.violations {
+            println!("    {v}");
+        }
+        // a failing replay exits nonzero, like the sweep under --check-oracles
+        Err(format!("{} oracle violation(s) in {}", o.violations.len(), spec.id))
+    }
+}
+
 fn run_live_cmd(args: &Args) -> Result<(), String> {
     let algo = args.get("algo").unwrap_or("reduce").to_string();
     let pjrt = args.flag("pjrt");
@@ -188,6 +288,15 @@ fn run_live_cmd(args: &Args) -> Result<(), String> {
     ecfg.payload = cfg.payload;
     ecfg.failures = cfg.failures.clone();
     if pjrt {
+        // fail fast: with the offline stub, workers would otherwise
+        // panic mid-run on the first combine
+        if !ftcoll::runtime::HAS_PJRT {
+            return Err(
+                "this build has no PJRT backend (offline stub, runtime::HAS_PJRT = false); \
+                 run without --pjrt to use the native reducer"
+                    .to_string(),
+            );
+        }
         let svc = ftcoll::runtime::ComputeService::start(ftcoll::runtime::default_artifact_dir())?;
         ecfg.reducer = ftcoll::coordinator::ReducerKind::Pjrt {
             handle: svc.handle(),

@@ -1,15 +1,50 @@
-//! PJRT executor: compiles HLO-text artifacts once and executes them
-//! with typed host inputs. Adapted from /opt/xla-example/load_hlo.rs —
-//! HLO *text* is the interchange format (the 0.5.1 text parser reassigns
-//! the 64-bit instruction ids jax ≥ 0.5 emits, which the proto path
-//! rejects).
+//! Artifact executor: validates typed host inputs against the registry
+//! signatures and (when a PJRT backend is available) executes the
+//! AOT-compiled HLO-text artifacts.
+//!
+//! **Offline stub.** The original backend drove the artifacts through
+//! the `xla` crate's PJRT C-API bindings (compile once with
+//! `HloModuleProto::from_text_file`, execute many). That crate — like
+//! every other external dependency — is not present in the offline
+//! build image, so this build ships a *stub* backend: registry loading,
+//! signature parsing and input validation are fully functional (they
+//! are what the rest of the stack links against), while `warmup`/
+//! `execute`/`combine*` report [`RtError`] with an actionable message.
+//! The live engine and all collectives default to [`NativeReducer`]
+//! (`crate::collectives::NativeReducer`) and are unaffected; only the
+//! `--pjrt` CLI path and the dp_train artifact cycle require a real
+//! backend. `crate::runtime::HAS_PJRT` tells callers (and tests) which
+//! backend was built.
 
 use super::registry::Registry;
 use super::spec::{DType, TensorSpec};
 use crate::collectives::ReduceOp;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
 use std::path::Path;
+
+/// Runtime error. String-backed (no anyhow crate offline); the `{e:#}`
+/// alternate format callers use renders the same as `{e}`.
+#[derive(Clone, Debug)]
+pub struct RtError(pub String);
+
+impl std::fmt::Display for RtError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RtError {}
+
+impl From<String> for RtError {
+    fn from(s: String) -> Self {
+        RtError(s)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RtError>;
+
+const NO_BACKEND: &str = "built without a PJRT backend (offline image has no `xla` \
+                          crate); artifact execution is unavailable — use the native \
+                          reducer path";
 
 /// A typed host-side input for an artifact call.
 #[derive(Clone, Debug)]
@@ -28,17 +63,6 @@ impl<'a> Input<'a> {
             Input::ScalarF32(_) => spec.dtype == DType::F32 && spec.is_scalar(),
             Input::ScalarI32(_) => spec.dtype == DType::I32 && spec.is_scalar(),
         }
-    }
-
-    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
-        let dims: Vec<i64> = spec.dims.iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Input::F32(v) => xla::Literal::vec1(v),
-            Input::I32(v) => xla::Literal::vec1(v),
-            Input::ScalarF32(x) => return Ok(xla::Literal::scalar(*x)),
-            Input::ScalarI32(x) => return Ok(xla::Literal::scalar(*x)),
-        };
-        Ok(lit.reshape(&dims)?)
     }
 }
 
@@ -64,20 +88,20 @@ impl Output {
     }
 }
 
-/// Compile-once / execute-many PJRT wrapper around the artifact registry.
+/// Execute-many wrapper around the artifact registry. This offline
+/// build never compiles anything: name and signature validation work,
+/// execution reports [`RtError`].
+#[derive(Debug)]
 pub struct Executor {
     registry: Registry,
-    client: xla::PjRtClient,
-    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Executor {
-    /// Create a CPU PJRT client over `dir`'s manifest. Artifacts are
-    /// compiled lazily on first call (tr_* take ~seconds each).
+    /// Load `dir`'s manifest. Fails with the registry's actionable error
+    /// (`run \`make artifacts\``) when the manifest is absent.
     pub fn new(dir: &Path) -> Result<Executor> {
-        let registry = Registry::load(dir).map_err(|e| anyhow!(e))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Executor { registry, client, compiled: HashMap::new() })
+        let registry = Registry::load(dir).map_err(RtError)?;
+        Ok(Executor { registry })
     }
 
     pub fn registry(&self) -> &Registry {
@@ -85,91 +109,62 @@ impl Executor {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "stub (no PJRT backend in this build)".to_string()
     }
 
-    /// Ensure `name` is compiled; returns compile time in ns when a
-    /// compilation actually happened.
+    /// Ensure `name` is compiled. The stub validates the name and then
+    /// reports that no backend is available.
     pub fn warmup(&mut self, name: &str) -> Result<Option<u64>> {
-        if self.compiled.contains_key(name) {
-            return Ok(None);
-        }
-        let spec =
-            self.registry.get(name).ok_or_else(|| anyhow!("unknown artifact `{name}`"))?;
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.file.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing {}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe =
-            self.client.compile(&comp).with_context(|| format!("compiling `{name}`"))?;
-        self.compiled.insert(name.to_string(), exe);
-        Ok(Some(t0.elapsed().as_nanos() as u64))
+        self.registry
+            .get(name)
+            .ok_or_else(|| RtError(format!("unknown artifact `{name}`")))?;
+        Err(RtError(format!("cannot compile `{name}`: {NO_BACKEND}")))
     }
 
-    /// Execute artifact `name` with `inputs`, validating the signature.
+    /// Execute artifact `name` with `inputs`. Signature validation runs
+    /// first so python/rust manifest mismatches still fail loudly and
+    /// specifically; execution itself then reports the missing backend.
     pub fn execute(&mut self, name: &str, inputs: &[Input]) -> Result<Vec<Output>> {
-        self.warmup(name)?;
-        let spec = self.registry.get(name).unwrap().clone();
-        if inputs.len() != spec.inputs.len() {
-            bail!("`{name}` takes {} inputs, got {}", spec.inputs.len(), inputs.len());
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (input, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            if !input.matches(ispec) {
-                bail!("`{name}` input {i} mismatch: expected {ispec}, got {input:?}");
-            }
-            literals.push(input.to_literal(ispec)?);
-        }
-        let exe = self.compiled.get(name).unwrap();
-        let result = exe.execute::<xla::Literal>(&literals)?;
-        // aot.py lowers with return_tuple=True: one tuple result
-        let tuple = result[0][0].to_literal_sync()?;
-        let parts = tuple.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
-            bail!("`{name}` returned {} outputs, expected {}", parts.len(), spec.outputs.len());
-        }
-        parts
-            .into_iter()
-            .zip(&spec.outputs)
-            .map(|(lit, ospec)| match ospec.dtype {
-                DType::F32 => Ok(Output::F32(lit.to_vec::<f32>()?)),
-                DType::I32 => Ok(Output::I32(lit.to_vec::<i32>()?)),
-                other => bail!("unsupported output dtype {other:?}"),
-            })
-            .collect()
-    }
-
-    /// 2-way combine of f32 payloads through the best covering artifact,
-    /// padding with the op's identity element. `acc ⊕= other`.
-    pub fn combine2_f32(&mut self, op: ReduceOp, acc: &mut Vec<f32>, other: &[f32]) -> Result<()> {
-        assert_eq!(acc.len(), other.len(), "payload length mismatch");
-        let len = acc.len();
         let spec = self
             .registry
-            .combine2_for(op, len)
-            .ok_or_else(|| anyhow!("no combine2_{} artifact covers length {len}", op.name()))?;
-        let d = spec.inputs[0].elements();
-        let name = spec.name.clone();
-        let ident = identity(op);
-        let mut a = std::mem::take(acc);
-        a.resize(d, ident);
-        let mut b = other.to_vec();
-        b.resize(d, ident);
-        let out = self.execute(&name, &[Input::F32(&a), Input::F32(&b)])?;
-        let mut v = match out.into_iter().next().unwrap() {
-            Output::F32(v) => v,
-            other => bail!("combine returned {other:?}"),
-        };
-        v.truncate(len);
-        *acc = v;
-        Ok(())
+            .get(name)
+            .ok_or_else(|| RtError(format!("unknown artifact `{name}`")))?
+            .clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(RtError(format!(
+                "`{name}` takes {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (input, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if !input.matches(ispec) {
+                return Err(RtError(format!(
+                    "`{name}` input {i} mismatch: expected {ispec}, got {input:?}"
+                )));
+            }
+        }
+        Err(RtError(format!("cannot execute `{name}`: {NO_BACKEND}")))
     }
 
-    /// k-way combine: folds `rows` (each length `len`) down to one
-    /// vector using the combinek artifact where possible, falling back
-    /// to chained 2-way combines.
+    /// 2-way combine of f32 payloads through the best covering artifact.
+    pub fn combine2_f32(
+        &mut self,
+        op: ReduceOp,
+        acc: &mut Vec<f32>,
+        other: &[f32],
+    ) -> Result<()> {
+        assert_eq!(acc.len(), other.len(), "payload length mismatch");
+        let len = acc.len();
+        self.registry
+            .combine2_for(op, len)
+            .ok_or_else(|| {
+                RtError(format!("no combine2_{} artifact covers length {len}", op.name()))
+            })?;
+        Err(RtError(format!("cannot combine2_{}: {NO_BACKEND}", op.name())))
+    }
+
+    /// k-way combine: folds `rows` (each length `len`) down to one vector.
     pub fn combinek_f32(&mut self, op: ReduceOp, rows: &[Vec<f32>]) -> Result<Vec<f32>> {
         assert!(!rows.is_empty());
         let len = rows[0].len();
@@ -177,31 +172,7 @@ impl Executor {
         if rows.len() == 1 {
             return Ok(rows[0].clone());
         }
-        if let Some((k, spec)) = self.registry.combinek_for(op, len) {
-            if rows.len() <= k {
-                let d = spec.inputs[0].dims[1];
-                let name = spec.name.clone();
-                let ident = identity(op);
-                // pack [k, d]: real rows then identity rows
-                let mut stack = vec![ident; k * d];
-                for (i, row) in rows.iter().enumerate() {
-                    stack[i * d..i * d + len].copy_from_slice(row);
-                }
-                let out = self.execute(&name, &[Input::F32(&stack)])?;
-                let mut v = match out.into_iter().next().unwrap() {
-                    Output::F32(v) => v,
-                    other => bail!("combinek returned {other:?}"),
-                };
-                v.truncate(len);
-                return Ok(v);
-            }
-        }
-        // fallback: chained 2-way
-        let mut acc = rows[0].clone();
-        for row in &rows[1..] {
-            self.combine2_f32(op, &mut acc, row)?;
-        }
-        Ok(acc)
+        Err(RtError(format!("cannot combinek_{}: {NO_BACKEND}", op.name())))
     }
 }
 
@@ -237,5 +208,12 @@ mod tests {
         assert!(!Input::ScalarF32(3.0).matches(&i_scalar));
     }
 
+    #[test]
+    fn missing_artifact_dir_error_is_actionable() {
+        let err = Executor::new(Path::new("/nonexistent-ftcoll-xyz")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
     // execution against real artifacts lives in rust/tests/runtime_pjrt.rs
+    // (skipped unless a PJRT backend and artifacts are both present)
 }

@@ -15,10 +15,16 @@ pub mod registry;
 pub mod service;
 pub mod spec;
 
-pub use executor::Executor;
+pub use executor::{Executor, RtError};
 pub use registry::Registry;
 pub use service::{ComputeHandle, ComputeService, PjrtReducer};
 pub use spec::{ArtifactSpec, DType, TensorSpec};
+
+/// Whether this build carries a real PJRT backend. The offline image
+/// has no `xla` crate, so [`executor`] ships a registry-only stub and
+/// this is `false`; artifact-execution tests and the `--pjrt` CLI path
+/// key off it.
+pub const HAS_PJRT: bool = false;
 
 /// Default artifact directory, overridable with `FTCOLL_ARTIFACTS`.
 pub fn default_artifact_dir() -> std::path::PathBuf {

@@ -169,17 +169,32 @@ impl Msg {
 }
 
 /// Errors a collective can deliver instead of a value.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+/// (Display/Error implemented by hand — the offline image carries no
+/// thiserror crate.)
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum ProtoError {
     /// More than `f` failures: every subtree of the root reported a
     /// failure (the `raise Error("No failure-free subtree")` of Alg. 2).
-    #[error("no failure-free subtree at the root (more than f failures?)")]
     NoFailureFreeSubtree,
     /// Allreduce ran out of root candidates (more than f candidate roots
     /// failed, violating the §5.1 assumption).
-    #[error("all {0} allreduce root candidates failed")]
     RootCandidatesExhausted(u32),
 }
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::NoFailureFreeSubtree => {
+                write!(f, "no failure-free subtree at the root (more than f failures?)")
+            }
+            ProtoError::RootCandidatesExhausted(n) => {
+                write!(f, "all {n} allreduce root candidates failed")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
 
 #[cfg(test)]
 mod tests {

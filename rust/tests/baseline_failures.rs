@@ -1,0 +1,142 @@
+//! Baseline collectives under failure injection: demonstrate *why* the
+//! paper's correction phase is needed. The fault-agnostic binomial
+//! tree silently loses whole subtrees (Figure 1), the ring allreduce
+//! stalls outright, while flat gather — trivially fault-tolerant —
+//! survives up to n-2 failures at O(n) cost. The fault-tolerant
+//! algorithms handle the *same* failure plans correctly.
+
+use ftcoll::prelude::*;
+use ftcoll::sim;
+
+/// Figure 1's phenomenon at n=8: the binomial-tree baseline drops the
+/// failed interior node's entire subtree {4,5,6,7}, silently reporting
+/// 28 - 22 = 6. The paper's reduce on the identical plan reports the
+/// true survivor sum 24.
+#[test]
+fn tree_baseline_loses_subtree_where_ft_reduce_does_not() {
+    let cfg = SimConfig::new(8, 1).failure(FailureSpec::Pre { rank: 4 });
+
+    let baseline = sim::run_baseline_tree_reduce(&cfg);
+    assert_eq!(baseline.root_value().unwrap().as_f64_scalar(), 6.0);
+
+    let ft = sim::run_reduce(&cfg);
+    assert_eq!(ft.root_value().unwrap().as_f64_scalar(), 24.0);
+}
+
+/// The lost value is *silent*: the baseline delivers normally — nothing
+/// tells the caller a subtree is missing (no failure information
+/// travels with the result, unlike §4.4).
+#[test]
+fn tree_baseline_loss_is_silent() {
+    let cfg = SimConfig::new(8, 1)
+        .payload(PayloadKind::OneHot)
+        .failure(FailureSpec::Pre { rank: 4 });
+    let rep = sim::run_baseline_tree_reduce(&cfg);
+    let counts = rep.root_value().expect("baseline still delivers").inclusion_counts();
+    // ranks 5,6,7 are alive yet excluded — data loss without an error
+    for r in [5usize, 6, 7] {
+        assert_eq!(counts[r], 0, "live rank {r} silently dropped");
+    }
+    for r in [0usize, 1, 2, 3] {
+        assert_eq!(counts[r], 1);
+    }
+}
+
+/// An in-operational failure mid-tree hurts the baseline the same way:
+/// the victim's subtree contribution never reaches the root.
+#[test]
+fn tree_baseline_inop_failure_also_loses_data() {
+    let cfg = SimConfig::new(16, 1)
+        .payload(PayloadKind::OneHot)
+        .failure(FailureSpec::AfterSends { rank: 8, sends: 0 });
+    let rep = sim::run_baseline_tree_reduce(&cfg);
+    let counts = rep.root_value().expect("delivers").inclusion_counts();
+    let included: i64 = counts.iter().sum();
+    assert!(
+        included < 16,
+        "baseline should have lost contributions, got all {included}"
+    );
+    // the FT reduce includes every live rank on the same plan
+    let ft = sim::run_reduce(&cfg);
+    let ft_counts = ft.root_value().unwrap().inclusion_counts();
+    for r in 0..16usize {
+        if r != 8 {
+            assert_eq!(ft_counts[r], 1, "FT reduce lost live rank {r}");
+        }
+    }
+}
+
+/// Ring allreduce: a single dead process stalls the whole ring — no
+/// process delivers at all (fault-agnosticism as total unavailability,
+/// vs the FT allreduce which completes for every survivor).
+#[test]
+fn ring_allreduce_stalls_on_any_failure() {
+    let cfg = SimConfig::new(9, 1).failure(FailureSpec::Pre { rank: 4 });
+
+    let ring = sim::run_baseline_ring_allreduce(&cfg);
+    for r in 0..9 {
+        assert_eq!(ring.deliveries_at(r), 0, "rank {r} delivered on a broken ring");
+    }
+
+    let ft = sim::run_allreduce(&cfg);
+    let expect: f64 = (0..9).filter(|&r| r != 4).map(f64::from).sum();
+    for r in 0..9 {
+        if r == 4 {
+            continue;
+        }
+        let v = ft.value_at(r).unwrap_or_else(|| panic!("FT rank {r} missing"));
+        assert_eq!(v.as_f64_scalar(), expect, "rank {r}");
+    }
+}
+
+/// An in-operational ring failure downstream of position 0 stalls the
+/// accumulation pass just the same.
+#[test]
+fn ring_allreduce_stalls_on_inop_failure() {
+    let cfg = SimConfig::new(6, 1).failure(FailureSpec::AfterSends { rank: 2, sends: 0 });
+    let rep = sim::run_baseline_ring_allreduce(&cfg);
+    for r in 0..6 {
+        assert_eq!(rep.deliveries_at(r), 0, "rank {r}");
+    }
+}
+
+/// Flat gather tolerates any f < n-1 failures (every surviving sender's
+/// value arrives independently); here the extreme case n=10 with 8
+/// dead: the root still reports the exact survivor sum and the full
+/// failure list.
+#[test]
+fn flat_gather_tolerates_up_to_n_minus_2_failures() {
+    let n = 10u32;
+    let failures: Vec<FailureSpec> =
+        (1..n - 1).map(|rank| FailureSpec::Pre { rank }).collect();
+    let cfg = SimConfig::new(n, n - 2).failures(failures);
+    let rep = sim::run_baseline_flat_gather(&cfg);
+    match rep.root_outcome().expect("root delivers") {
+        Outcome::ReduceRoot { value, known_failed } => {
+            assert_eq!(value.as_f64_scalar(), 0.0 + (n - 1) as f64);
+            assert_eq!(known_failed, &(1..n - 1).collect::<Vec<Rank>>());
+        }
+        o => panic!("unexpected {o:?}"),
+    }
+}
+
+/// Flat gather with mixed pre/in-op failures: all-or-nothing inclusion
+/// for the in-op victim, exact inclusion for everyone alive.
+#[test]
+fn flat_gather_mixed_failures_all_or_nothing() {
+    let cfg = SimConfig::new(12, 3)
+        .payload(PayloadKind::OneHot)
+        .failures(vec![
+            FailureSpec::Pre { rank: 2 },
+            FailureSpec::AfterSends { rank: 5, sends: 0 },
+            FailureSpec::AtTime { rank: 7, at: 500 },
+        ]);
+    let rep = sim::run_baseline_flat_gather(&cfg);
+    let counts = rep.root_value().expect("root delivers").inclusion_counts();
+    assert_eq!(counts[2], 0, "pre-dead rank included");
+    assert!(counts[5] <= 1);
+    assert!(counts[7] <= 1);
+    for r in [0usize, 1, 3, 4, 6, 8, 9, 10, 11] {
+        assert_eq!(counts[r], 1, "live rank {r}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Property tests for the up-correction phase and the `List`
+//! failure-information scheme, driven through the public DES + trace
+//! API across randomized configurations.
+//!
+//! * Algorithm 1 (§4.2): in the correction phase every grouped process
+//!   sends its input to exactly the other members of its group — at
+//!   most `f` peers, exactly `f` for a full group — and to no one else.
+//! * §4.4 `List` scheme: the root's failure report contains every
+//!   injected failure the root itself confirmed before delivering, and
+//!   nothing that was not injected.
+
+use ftcoll::failure::injector::{non_root_candidates, random_plan, FailureMix};
+use ftcoll::prelude::*;
+use ftcoll::proptest_lite::{run_cases, PropConfig};
+use ftcoll::sim;
+use ftcoll::topology::UpCorrectionGroups;
+use ftcoll::trace::TraceEvent;
+use ftcoll::types::MsgKind;
+use ftcoll::{prop_assert, prop_assert_eq};
+
+/// Correction-phase sends target exactly the group peers (Algorithm 1):
+/// per rank, the traced UpCorrection destinations equal `peers_of`, and
+/// full-group members target exactly `f` peers.
+#[test]
+fn upcorrection_targets_exactly_the_group_peers() {
+    run_cases("upcorr/targets", PropConfig { iters: 64, ..Default::default() }, |rng| {
+        let n = rng.range(1, 200) as u32;
+        let f = rng.range(0, 8) as u32;
+        let rep = sim::run_reduce(&SimConfig::new(n, f).tracing(true));
+        let groups = UpCorrectionGroups::new(n, f);
+
+        // collect per-rank up-correction destinations from the trace
+        let mut sent: Vec<Vec<Rank>> = vec![Vec::new(); n as usize];
+        for ev in rep.trace.events() {
+            if let TraceEvent::Send { from, to, kind: MsgKind::UpCorrection, .. } = ev {
+                sent[*from as usize].push(*to);
+            }
+        }
+        for p in 0..n {
+            let mut got = sent[p as usize].clone();
+            got.sort_unstable();
+            let mut want = groups.peers_of(p);
+            want.sort_unstable();
+            prop_assert_eq!(got, want, "rank {p} n={n} f={f}");
+            // a full-group member corrects exactly f peers
+            if let Some(g) = groups.group_of(p) {
+                if g < groups.full_groups() {
+                    prop_assert_eq!(
+                        sent[p as usize].len(),
+                        f as usize,
+                        "full-group rank {p} n={n} f={f}"
+                    );
+                }
+            }
+        }
+        // and the failure-free total matches Theorem 5's first term
+        prop_assert_eq!(
+            rep.metrics.msgs(MsgKind::UpCorrection),
+            groups.failure_free_messages(),
+            "n={n} f={f}"
+        );
+        Ok(())
+    });
+}
+
+/// `List` reports: a superset of the injected failures the root itself
+/// confirmed before delivering, and a subset of the injected ranks.
+#[test]
+fn list_report_bounds() {
+    run_cases("list/report-bounds", PropConfig { iters: 96, ..Default::default() }, |rng| {
+        let n = rng.range(3, 160) as u32;
+        let f = rng.range(1, 6) as u32;
+        let k = rng.range(0, f.min(n - 1) as u64) as usize;
+        let plan = random_plan(
+            rng,
+            &non_root_candidates(n, 0),
+            k,
+            FailureMix::Mixed { p_pre: 0.6, max_sends: f + 2 },
+        );
+        let injected: Vec<Rank> = plan.iter().map(|s| s.rank()).collect();
+        let cfg = SimConfig::new(n, f).failures(plan).tracing(true);
+        let rep = sim::run_reduce(&cfg);
+
+        let mut report: Option<Vec<Rank>> = None;
+        for o in &rep.outcomes[0] {
+            if let Outcome::ReduceRoot { known_failed, .. } = o {
+                report = Some(known_failed.clone());
+            }
+        }
+        let report = report.ok_or_else(|| format!("root never delivered (n={n} f={f})"))?;
+
+        // subset: nothing reported that was not injected
+        for r in &report {
+            prop_assert!(
+                injected.contains(r),
+                "report lists {r} which never failed (n={n} f={f})"
+            );
+        }
+        // superset: every failure the ROOT confirmed before it delivered
+        // must appear in the report (§4.4 — scheme 1 makes the root's
+        // knowledge available to the caller). "Before" is *processing*
+        // order, which is exactly the trace append order — virtual
+        // timestamps are unsound here because receiver-side
+        // serialization can push the delivery's handle time past a
+        // later-processed detection's queue time.
+        for ev in rep.trace.events() {
+            match ev {
+                TraceEvent::Deliver { rank: 0, what, .. } if what.as_str() == "reduce_root" => {
+                    break; // detections processed after delivery may miss it
+                }
+                TraceEvent::Detect { at: 0, peer, .. } => {
+                    prop_assert!(
+                        report.contains(peer),
+                        "root confirmed {peer} before delivering but report \
+                         {report:?} misses it (n={n} f={f})"
+                    );
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The up-correction phase sends *uncombined* inputs (Algorithm 1's
+/// fixed `senddata`): with the OneHot payload every correction message
+/// carries exactly its sender's own mask.
+#[test]
+fn upcorrection_sends_original_input() {
+    run_cases("upcorr/senddata", PropConfig { iters: 48, ..Default::default() }, |rng| {
+        let n = rng.range(2, 120) as u32;
+        let f = rng.range(0, 6) as u32;
+        let cfg = SimConfig::new(n, f).payload(PayloadKind::OneHot).tracing(true);
+        let rep = sim::run_reduce(&cfg);
+        for ev in rep.trace.events() {
+            if let TraceEvent::Send { from, kind: MsgKind::UpCorrection, includes, .. } = ev {
+                prop_assert_eq!(
+                    includes.as_slice(),
+                    &[*from][..],
+                    "correction message from {from} must carry only its own input (n={n} f={f})"
+                );
+            }
+        }
+        Ok(())
+    });
+}

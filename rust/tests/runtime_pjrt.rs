@@ -14,6 +14,10 @@ use ftcoll::runtime::{default_artifact_dir, ComputeService, Executor, PjrtReduce
 use ftcoll::types::Value;
 
 fn artifacts_available() -> bool {
+    if !ftcoll::runtime::HAS_PJRT {
+        eprintln!("SKIP: built without a PJRT backend (offline stub)");
+        return false;
+    }
     let ok = default_artifact_dir().join("manifest.tsv").exists();
     if !ok {
         eprintln!("SKIP: no artifacts/manifest.tsv — run `make artifacts`");
