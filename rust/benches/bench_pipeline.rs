@@ -1,0 +1,90 @@
+//! Segmented vs monolithic Reduce/Allreduce under the LogGP net models:
+//! the virtual-time makespans that motivate the pipelined driver
+//! (docs/PIPELINE.md), plus DES wall-clock throughput for the segmented
+//! path so the pipeline cannot silently regress the simulator.
+//!
+//! The 1 MiB / `lan` row is the ISSUE 2 acceptance gate: segmented
+//! allreduce must beat monolithic by ≥ 2×. The assert runs in every
+//! mode (including FTCOLL_BENCH_FAST CI smoke) — virtual time is
+//! deterministic, so this is a semantics pin, not a flaky perf test.
+
+use ftcoll::benchlib::{fmt_ns, write_table, Bencher};
+use ftcoll::prelude::*;
+
+const MIB: u32 = 262_144; // 1 MiB of f32
+
+fn base_cfg(len: u32, net: NetModel) -> SimConfig {
+    SimConfig::new(16, 1).payload(PayloadKind::VectorF32 { len }).net(net)
+}
+
+fn makespan(cfg: &SimConfig) -> u64 {
+    let rep = run_allreduce(cfg);
+    rep.makespan().expect("allreduce completes")
+}
+
+fn main() {
+    let fast = std::env::var("FTCOLL_BENCH_FAST").is_ok();
+    let lens: &[(u32, &str)] = if fast {
+        &[(MIB, "1MiB")]
+    } else {
+        &[(65_536, "256KiB"), (MIB, "1MiB")]
+    };
+
+    // virtual-time comparison table (deterministic; no timing loops)
+    let mut rows: Vec<String> = Vec::new();
+    let mut lan_1mib_speedup: Option<f64> = None;
+    for (net_name, net) in [("hpc", NetModel::hpc()), ("lan", NetModel::lan())] {
+        for &(len, len_label) in lens {
+            let mono = makespan(&base_cfg(len, net));
+            for seg_bytes in [16 * 1024usize, 64 * 1024, 256 * 1024] {
+                let seg = makespan(&base_cfg(len, net).segment_bytes(seg_bytes));
+                let speedup = mono as f64 / seg as f64;
+                println!(
+                    "allreduce/{net_name}/{len_label}: mono {} vs seg{}K {} ({speedup:.2}x)",
+                    fmt_ns(mono),
+                    seg_bytes / 1024,
+                    fmt_ns(seg),
+                );
+                rows.push(format!(
+                    "{net_name},{len_label},{seg_bytes},{mono},{seg},{speedup:.3}"
+                ));
+                if net_name == "lan" && len == MIB && seg_bytes == 64 * 1024 {
+                    lan_1mib_speedup = Some(speedup);
+                }
+            }
+        }
+    }
+    write_table(
+        "bench_pipeline_makespan",
+        "net,payload,segment_bytes,mono_ns,seg_ns,speedup",
+        &rows,
+    );
+
+    // acceptance gate: ≥ 2× on 1 MiB under lan
+    let speedup = lan_1mib_speedup.expect("lan/1MiB row present");
+    assert!(
+        speedup >= 2.0,
+        "segmented allreduce only {speedup:.2}x faster than monolithic \
+         (1 MiB, lan, 64 KiB segments) — pipeline regressed below the 2x gate"
+    );
+    println!("acceptance: lan/1MiB segmented speedup {speedup:.2}x (gate: 2.0x)");
+
+    // DES wall-clock cost of driving the pipeline (scenario throughput)
+    let mut b = Bencher::new("bench_pipeline");
+    let len = if fast { 16_384 } else { 65_536 };
+    b.bench(&format!("pipeline/allreduce_seg16K_len{len}"), || {
+        let cfg = base_cfg(len, NetModel::hpc()).segment_bytes(16 * 1024);
+        std::hint::black_box(run_allreduce(&cfg).final_time);
+    });
+    b.bench(&format!("pipeline/allreduce_mono_len{len}"), || {
+        let cfg = base_cfg(len, NetModel::hpc());
+        std::hint::black_box(run_allreduce(&cfg).final_time);
+    });
+    b.bench("pipeline/reduce_segmask8_n32", || {
+        let cfg = SimConfig::new(32, 2)
+            .payload(PayloadKind::SegMask { segments: 8 })
+            .segment_bytes(8 * 32);
+        std::hint::black_box(run_reduce(&cfg).final_time);
+    });
+    b.write_csv();
+}

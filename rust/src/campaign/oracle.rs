@@ -15,6 +15,13 @@
 //!   the exact fold over the surviving contributors. Allreduce
 //!   additionally requires bit-identical agreement across deliverers
 //!   (§5.1 item 5); broadcast requires the root's exact value.
+//! * **Per-segment value (docs/PIPELINE.md)** — with the `SegMask`
+//!   payload on a segmented run, the same inclusion predicates hold
+//!   *independently per segment block*: live ranks exactly once per
+//!   segment, in-operational victims all-or-nothing per segment (a
+//!   mid-pipeline death may land in earlier segments and not later
+//!   ones, but never partially within one), pre-operational victims in
+//!   none.
 //! * **Failure reports (§4.4)** — `List`-scheme reports contain only
 //!   genuinely injected victims (no false positives, sorted, deduped).
 //!   The completeness half ("superset of the failures the root
@@ -315,10 +322,48 @@ fn check_combined_value(
         }
         PayloadKind::VectorF32 { len } => {
             // float summation order varies with failure timing; assert
-            // shape and finiteness only
+            // shape and finiteness only (segmented runs must reassemble
+            // to the full length)
             o.check(value.len() == len as usize, || {
                 format!("payload length {} != {len}", value.len())
             });
+        }
+        PayloadKind::SegMask { segments } => {
+            // per-segment inclusion semantics: every segment block is an
+            // independent instance of the Thm 1-4 counting argument
+            let counts = value.inclusion_counts();
+            let n = spec.n as usize;
+            o.check(counts.len() == segments as usize * n, || {
+                format!(
+                    "mask length {} != segments*n = {}",
+                    counts.len(),
+                    segments as usize * n
+                )
+            });
+            if counts.len() != segments as usize * n {
+                return; // block indexing below would be meaningless
+            }
+            for s in 0..segments as usize {
+                for r in 0..n {
+                    let c = counts[s * n + r];
+                    if pre.contains(&(r as Rank)) {
+                        o.check(c == 0, || {
+                            format!("segment {s}: pre-dead rank {r} included {c}x")
+                        });
+                    } else if dead.contains(&(r as Rank)) {
+                        o.check(c == 0 || c == 1, || {
+                            format!(
+                                "segment {s}: in-op-failed rank {r} included {c}x \
+                                 (want all-or-nothing per segment)"
+                            )
+                        });
+                    } else {
+                        o.check(c == 1, || {
+                            format!("segment {s}: live rank {r} included {c}x (want 1)")
+                        });
+                    }
+                }
+            }
         }
     }
 }

@@ -39,7 +39,8 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         "    {{\"index\":{},\"id\":\"{}\",\"seed\":{},\
          \"collective\":\"{}\",\"n\":{},\"f\":{},\"root\":{},\
          \"scheme\":\"{}\",\"op\":\"{}\",\"payload\":\"{}\",\"net\":\"{}\",\
-         \"detect_ns\":{},\"pattern\":\"{}\",\"failures\":\"{}\",\
+         \"detect_ns\":{},\"segment_bytes\":{},\"segments\":{},\
+         \"pattern\":\"{}\",\"failures\":\"{}\",\
          \"delivered\":{},\"dead\":[{}],\
          \"msgs\":{},\"upcorr\":{},\"tree\":{},\"bytes\":{},\
          \"final_time_ns\":{},\"makespan_ns\":{},\"attempts\":{},\
@@ -56,6 +57,8 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         super::spec::payload_label(spec.payload),
         spec.net.name(),
         spec.detect_latency,
+        spec.segment_bytes.map(|b| b.to_string()).unwrap_or_else(|| "null".to_string()),
+        spec.num_segments(),
         spec.pattern.label(),
         json_escape(&spec.failures_str()),
         s.delivered,
@@ -148,6 +151,21 @@ pub fn summary_table(result: &CampaignResult) -> String {
         result.failed_count(),
         result.total_checks()
     );
+    // segmented/monolithic split: makes grid drift visible in CI logs
+    let (mut seg, mut seg_pass, mut mono, mut mono_pass) = (0u64, 0u64, 0u64, 0u64);
+    for (spec, sc) in specs.iter().zip(&result.scenarios) {
+        if spec.segment_bytes.is_some() {
+            seg += 1;
+            seg_pass += sc.passed() as u64;
+        } else {
+            mono += 1;
+            mono_pass += sc.passed() as u64;
+        }
+    }
+    let _ = writeln!(
+        out,
+        "split: {seg} segmented ({seg_pass} passed) / {mono} monolithic ({mono_pass} passed)"
+    );
     out
 }
 
@@ -181,6 +199,16 @@ mod tests {
         let table = summary_table(&result);
         assert!(table.contains("total"));
         assert!(table.contains("20"));
+        // the segmented/monolithic split line is always present and its
+        // two halves add up to the scenario count
+        assert!(table.contains("split: "), "{table}");
+        let line = table.lines().find(|l| l.starts_with("split: ")).unwrap();
+        let nums: Vec<u64> = line
+            .split(|c: char| !c.is_ascii_digit())
+            .filter(|s| !s.is_empty())
+            .map(|s| s.parse().unwrap())
+            .collect();
+        assert_eq!(nums[0] + nums[2], 20, "{line}");
     }
 
     #[test]

@@ -94,6 +94,11 @@ pub enum FailurePattern {
     /// die attempting their first or second send, i.e. mid way through
     /// their up-correction group exchange.
     CorrectionPhase { k: u32 },
+    /// Segmented runs only: victims die at a send boundary drawn from
+    /// the whole pipeline's send range, so the kill lands *between*
+    /// segments — some segments already delivered their contribution,
+    /// later ones are still in correction (all-or-nothing per segment).
+    MidPipeline { k: u32 },
 }
 
 impl FailurePattern {
@@ -107,6 +112,7 @@ impl FailurePattern {
             FailurePattern::Cascade { k } => format!("cascade{k}"),
             FailurePattern::RootKill { k } => format!("rootkill{k}"),
             FailurePattern::CorrectionPhase { k } => format!("corr{k}"),
+            FailurePattern::MidPipeline { k } => format!("midpipe{k}"),
         }
     }
 
@@ -120,6 +126,7 @@ impl FailurePattern {
             FailurePattern::Cascade { .. } => "cascade",
             FailurePattern::RootKill { .. } => "rootkill",
             FailurePattern::CorrectionPhase { .. } => "corr",
+            FailurePattern::MidPipeline { .. } => "midpipe",
         }
     }
 
@@ -132,7 +139,8 @@ impl FailurePattern {
             | FailurePattern::Storm { k }
             | FailurePattern::Cascade { k }
             | FailurePattern::RootKill { k }
-            | FailurePattern::CorrectionPhase { k } => k,
+            | FailurePattern::CorrectionPhase { k }
+            | FailurePattern::MidPipeline { k } => k,
         }
     }
 }
@@ -156,6 +164,9 @@ pub struct ScenarioSpec {
     pub net: NetKind,
     pub correction: CorrectionMode,
     pub detect_latency: TimeNs,
+    /// Segment size for the pipelined reduce/allreduce (`None` =
+    /// monolithic).
+    pub segment_bytes: Option<u32>,
     pub pattern: FailurePattern,
     /// Concrete failure plan instantiated from `pattern` and `seed`.
     pub failures: Vec<FailureSpec>,
@@ -172,9 +183,15 @@ impl ScenarioSpec {
             .net(self.net.model())
             .failures(self.failures.clone())
             .detect_latency(self.detect_latency);
+        cfg.segment_bytes = self.segment_bytes.map(|b| b as usize);
         cfg.correction = self.correction;
         cfg.seed = self.seed;
         cfg
+    }
+
+    /// Number of segments the payload splits into (1 = monolithic).
+    pub fn num_segments(&self) -> u32 {
+        segment_count(self.payload, self.n, self.segment_bytes)
     }
 
     /// The same configuration with the failure plan removed — the
@@ -189,7 +206,7 @@ impl ScenarioSpec {
     /// configuration (so the campaign computes each baseline once).
     pub fn baseline_key(&self) -> String {
         format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}",
             self.collective.name(),
             self.n,
             self.f,
@@ -200,6 +217,7 @@ impl ScenarioSpec {
             self.net.name(),
             self.detect_latency,
             self.correction,
+            self.segment_bytes.map_or("mono".to_string(), |b| format!("seg{b}")),
         )
     }
 
@@ -227,11 +245,30 @@ pub fn scheme_label(s: Scheme) -> &'static str {
     }
 }
 
+/// Segments a payload splits into (1 = monolithic) — pure arithmetic
+/// mirror of [`crate::types::Value::split_segments`]'s chunking (≥ 1
+/// whole element per segment; an empty payload yields one segment).
+fn segment_count(payload: PayloadKind, n: u32, segment_bytes: Option<u32>) -> u32 {
+    match segment_bytes {
+        None => 1,
+        Some(bytes) => {
+            let per = (bytes as usize / payload.elem_bytes()).max(1);
+            let len = payload.elems(n);
+            if len == 0 {
+                1
+            } else {
+                ((len + per - 1) / per) as u32
+            }
+        }
+    }
+}
+
 pub fn payload_label(p: PayloadKind) -> String {
     match p {
         PayloadKind::RankValue => "rank".to_string(),
         PayloadKind::OneHot => "onehot".to_string(),
         PayloadKind::VectorF32 { len } => format!("vec{len}"),
+        PayloadKind::SegMask { segments } => format!("segmask{segments}"),
     }
 }
 
@@ -298,31 +335,60 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
 
     let scheme = [Scheme::List, Scheme::CountBit, Scheme::Bit][rng.below(3) as usize];
 
-    // payload/op pairs: OneHot masks require Sum (inclusion counting)
-    let (payload, op) = match rng.below(5) {
-        0 | 1 => (PayloadKind::OneHot, ReduceOp::Sum),
-        2 => (PayloadKind::RankValue, ReduceOp::Sum),
-        3 => {
-            let op = [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min][rng.below(3) as usize];
-            (PayloadKind::RankValue, op)
+    // segmentation axis: ~1 in 3 reduce/allreduce scenarios run the
+    // pipelined driver (broadcast has no segmented variant)
+    let segmented = collective != Collective::Broadcast && rng.below(3) == 0;
+
+    // payload/op pairs: OneHot masks require Sum (inclusion counting);
+    // segmented scenarios use either the per-segment mask payload (one
+    // one-hot block per segment, exact semantics checks) or a dense
+    // vector (bandwidth-shaped)
+    let (payload, op, segment_bytes) = if segmented {
+        if rng.below(2) == 0 {
+            let segments = [2u32, 3, 4, 8][rng.below(4) as usize];
+            // one block of n i64 elements per segment
+            (PayloadKind::SegMask { segments }, ReduceOp::Sum, Some(8 * n))
+        } else {
+            let len = [256u32, 1024, 4096][rng.below(3) as usize];
+            let seg = [256u32, 1024][rng.below(2) as usize];
+            (PayloadKind::VectorF32 { len }, ReduceOp::Sum, Some(seg))
         }
-        _ => {
-            let len = [8u32, 64, 256][rng.below(3) as usize];
-            (PayloadKind::VectorF32 { len }, ReduceOp::Sum)
-        }
+    } else {
+        let (payload, op) = match rng.below(5) {
+            0 | 1 => (PayloadKind::OneHot, ReduceOp::Sum),
+            2 => (PayloadKind::RankValue, ReduceOp::Sum),
+            3 => {
+                let op =
+                    [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min][rng.below(3) as usize];
+                (PayloadKind::RankValue, op)
+            }
+            _ => {
+                let len = [8u32, 64, 256][rng.below(3) as usize];
+                (PayloadKind::VectorF32 { len }, ReduceOp::Sum)
+            }
+        };
+        (payload, op, None)
     };
 
     let net = NetKind::ALL[rng.below(3) as usize];
     let detect_latency: TimeNs = [1_000, 10_000, 100_000][rng.below(3) as usize];
     let correction = CorrectionMode::Always;
 
-    let pattern = pick_pattern(&mut rng, collective, n, f, root);
-    let failures = instantiate_pattern(&mut rng, pattern, collective, n, f, root, net);
+    // segment count drives the mid-pipeline kill-point range
+    let segments = segment_count(payload, n, segment_bytes);
+
+    let pattern = pick_pattern(&mut rng, collective, n, f, root, segments);
+    let failures =
+        instantiate_pattern(&mut rng, pattern, collective, n, f, root, net, segments);
     debug_assert!(crate::failure::validate_plan(n, &failures).is_ok());
     debug_assert!(failures.len() as u32 <= f);
 
+    let seg_label = match segment_bytes {
+        None => String::new(),
+        Some(_) => format!("-seg{segments}"),
+    };
     let id = format!(
-        "s{:05}-{}-n{}-f{}-r{}-{}-{}-{}-{}-{}",
+        "s{:05}-{}-n{}-f{}-r{}-{}-{}-{}-{}-{}{}",
         index,
         collective.name(),
         n,
@@ -333,6 +399,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         payload_label(payload),
         net.name(),
         pattern.label(),
+        seg_label,
     );
 
     ScenarioSpec {
@@ -349,6 +416,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         net,
         correction,
         detect_latency,
+        segment_bytes,
         pattern,
         failures,
     }
@@ -370,6 +438,7 @@ fn pick_pattern(
     n: u32,
     f: u32,
     root: Rank,
+    segments: u32,
 ) -> FailurePattern {
     let pool_len = victim_pool(collective, n, f, root).len() as u32;
     // Reduce (and allreduce's reduce half) finds a failure-free subtree
@@ -406,6 +475,11 @@ fn pick_pattern(
         options.push(FailurePattern::Cascade { k });
         let k = rng.range(1, kmax as u64) as u32;
         options.push(FailurePattern::CorrectionPhase { k });
+        if segments > 1 {
+            // mid-pipeline kills are only meaningful with ≥ 2 segments
+            let k = rng.range(1, kmax as u64) as u32;
+            options.push(FailurePattern::MidPipeline { k });
+        }
     }
     if rootkill_max >= 1 {
         let k = rng.range(1, rootkill_max as u64) as u32;
@@ -420,6 +494,7 @@ fn pick_pattern(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn instantiate_pattern(
     rng: &mut Pcg,
     pattern: FailurePattern,
@@ -428,6 +503,7 @@ fn instantiate_pattern(
     f: u32,
     root: Rank,
     net: NetKind,
+    segments: u32,
 ) -> Vec<FailureSpec> {
     let pool = victim_pool(collective, n, f, root);
     let pick_victims = |rng: &mut Pcg, k: u32| -> Vec<Rank> {
@@ -477,6 +553,20 @@ fn instantiate_pattern(
             .into_iter()
             .map(|rank| FailureSpec::AfterSends { rank, sends: rng.below(2) as u32 })
             .collect(),
+        FailurePattern::MidPipeline { k } => {
+            // a rank sends ~1 up-correction + ~1 tree message per
+            // segment (plus broadcast fan-out for allreduce): draw the
+            // kill point across the whole pipeline's send range so the
+            // death lands between segments s and s+1 for a varied s
+            let span = (3 * segments).max(2) as u64;
+            pick_victims(rng, k)
+                .into_iter()
+                .map(|rank| FailureSpec::AfterSends {
+                    rank,
+                    sends: rng.range(1, span) as u32,
+                })
+                .collect()
+        }
     }
 }
 
@@ -560,11 +650,51 @@ mod tests {
         for c in [Collective::Reduce, Collective::Allreduce, Collective::Broadcast] {
             assert!(specs.iter().any(|s| s.collective == c), "{c:?} missing");
         }
-        for fam in ["clean", "pre", "inop", "storm", "cascade", "rootkill", "corr"] {
+        for fam in
+            ["clean", "pre", "inop", "storm", "cascade", "rootkill", "corr", "midpipe"]
+        {
             assert!(
                 specs.iter().any(|s| s.pattern.family() == fam),
                 "pattern family {fam} missing from 1000-scenario grid"
             );
+        }
+    }
+
+    #[test]
+    fn grid_covers_segmented_scenarios() {
+        let specs = generate(&GridConfig { count: 200, seed: 7, max_n: 128 });
+        let seg: Vec<_> = specs.iter().filter(|s| s.segment_bytes.is_some()).collect();
+        assert!(
+            seg.len() >= 20,
+            "only {} of 200 scenarios segmented — grid drifted",
+            seg.len()
+        );
+        // segmented scenarios never target broadcast and are labelled
+        for s in &seg {
+            assert_ne!(s.collective, Collective::Broadcast, "{}", s.id);
+            assert!(s.id.contains("-seg"), "{} lacks segment label", s.id);
+            assert!(s.num_segments() >= 1);
+        }
+        // mid-pipeline kills only appear on multi-segment scenarios
+        for s in &specs {
+            if s.pattern.family() == "midpipe" {
+                assert!(s.num_segments() > 1, "{}", s.id);
+            }
+        }
+        // SegMask payloads split into exactly one block per segment
+        for s in &seg {
+            if let crate::config::PayloadKind::SegMask { segments } = s.payload {
+                assert_eq!(s.num_segments(), segments, "{}", s.id);
+            }
+        }
+        // the arithmetic mirror must agree with the real split
+        for s in &seg {
+            let actual = s
+                .payload
+                .initial(0, s.n)
+                .split_segments(s.segment_bytes.unwrap() as usize)
+                .len() as u32;
+            assert_eq!(s.num_segments(), actual, "{}: segment_count drifted", s.id);
         }
     }
 }

@@ -147,6 +147,15 @@ impl Allreduce {
         self.cfg.candidates[self.epoch as usize]
     }
 
+    /// True once the current attempt's reduce half has left its
+    /// up-correction phase (or the operation already terminated) — the
+    /// pipelined driver's segment-advance boundary.
+    pub fn upcorr_done(&self) -> bool {
+        self.delivered
+            || self.errored
+            || self.reduce.as_ref().map_or(false, |r| r.upcorr_done())
+    }
+
     fn start_attempt(&mut self, ctx: &mut dyn Ctx) {
         let root = self.current_root();
         // watch the candidate root so its (pre-operational) failure is

@@ -16,12 +16,15 @@
 //! * [`broadcast`] — the corrected-tree broadcast substrate (PPoPP'19),
 //! * [`allreduce`] — Algorithm 5 (§5.2), reduce + broadcast with root
 //!   rotation,
+//! * [`pipeline`] — segmented/pipelined driver running one per-segment
+//!   Reduce/Allreduce instance per payload segment (docs/PIPELINE.md),
 //! * [`baseline`] — comparison algorithms for the evaluation.
 
 pub mod allreduce;
 pub mod baseline;
 pub mod broadcast;
 pub mod failure_info;
+pub mod pipeline;
 pub mod reduce;
 #[cfg(test)]
 pub(crate) mod testutil;

@@ -1,0 +1,582 @@
+//! Segmented, pipelined execution of Reduce and Allreduce.
+//!
+//! The paper's algorithms are latency-optimal for small messages, but a
+//! monolithic large payload pays the LogGP `G·b` term on every tree edge
+//! in sequence. This driver splits the payload into fixed-size segments
+//! ([`crate::types::Value::split_segments`]) and runs one full
+//! per-segment protocol instance per segment — the same `Reduce` /
+//! `Allreduce` state machines, multiplexed over the shared message
+//! stream by op id ([`crate::types::segment`]).
+//!
+//! Overlap schedule (cf. Träff's doubly-pipelined reduction-to-all):
+//! segment `s+1` starts locally as soon as segment `s` leaves its
+//! up-correction phase, so segment `s+1`'s group exchange overlaps
+//! segment `s`'s tree phase and later segments stream down the tree
+//! behind earlier ones. Messages for segments this process has not
+//! started yet (a faster peer may already be several segments ahead)
+//! are buffered and replayed at segment start.
+//!
+//! Semantics are preserved *per segment*: each segment is a complete
+//! instance of the paper's protocol, so each segment's result includes
+//! each surviving contribution exactly once (Thms 1-4 apply segment-
+//! wise), and failure information is accumulated per segment. The
+//! aggregate delivery concatenates the per-segment results in order:
+//!
+//! * Reduce root: one `ReduceRoot` with the concatenated value and the
+//!   union of the per-segment failure reports (sorted, deduped);
+//! * Reduce non-root: one `ReduceDone` once every segment completed;
+//! * Allreduce: one `Allreduce` with the concatenated value and the
+//!   maximum per-segment attempt count (segments rotate independently;
+//!   a mid-pipeline root death makes later segments rotate while
+//!   earlier ones already delivered under the old root).
+//!
+//! A process killed between segment `s` and `s+1` is included
+//! all-or-nothing *per segment*: earlier segments may carry its
+//! contribution, later ones exclude it — never a partial segment
+//! (rust/tests/pipeline_semantics.rs pins this).
+
+use super::allreduce::{Allreduce, AllreduceConfig};
+use super::reduce::{Reduce, ReduceConfig};
+use super::{Ctx, Outcome, Protocol};
+use crate::types::{segment, Msg, Rank, TimeNs, Value};
+
+/// Which collective the pipeline wraps (with its base configuration;
+/// `op_id` therein is the *base* op — per-segment instances derive
+/// theirs via [`segment::seg_op`]).
+pub enum PipelineSpec {
+    Reduce(ReduceConfig),
+    Allreduce(AllreduceConfig),
+}
+
+/// One per-segment protocol instance.
+enum SegInst {
+    R(Reduce),
+    A(Allreduce),
+}
+
+impl SegInst {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        match self {
+            SegInst::R(p) => p.on_start(ctx),
+            SegInst::A(p) => p.on_start(ctx),
+        }
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        match self {
+            SegInst::R(p) => p.on_message(from, msg, ctx),
+            SegInst::A(p) => p.on_message(from, msg, ctx),
+        }
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        match self {
+            SegInst::R(p) => p.on_peer_failed(peer, ctx),
+            SegInst::A(p) => p.on_peer_failed(peer, ctx),
+        }
+    }
+
+    fn upcorr_done(&self) -> bool {
+        match self {
+            SegInst::R(p) => p.upcorr_done(),
+            SegInst::A(p) => p.upcorr_done(),
+        }
+    }
+}
+
+/// Pass-through context that captures inner deliveries for aggregation
+/// instead of handing them to the executor.
+struct CaptureCtx<'a> {
+    inner: &'a mut dyn Ctx,
+    captured: Vec<Outcome>,
+}
+
+impl<'a> Ctx for CaptureCtx<'a> {
+    fn rank(&self) -> Rank {
+        self.inner.rank()
+    }
+    fn n(&self) -> u32 {
+        self.inner.n()
+    }
+    fn now(&self) -> TimeNs {
+        self.inner.now()
+    }
+    fn send(&mut self, to: Rank, msg: Msg) {
+        self.inner.send(to, msg);
+    }
+    fn watch(&mut self, peer: Rank) {
+        self.inner.watch(peer);
+    }
+    fn unwatch(&mut self, peer: Rank) {
+        self.inner.unwatch(peer);
+    }
+    fn set_timer(&mut self, delay: TimeNs, token: u64) {
+        self.inner.set_timer(delay, token);
+    }
+    fn combine(&mut self, acc: &mut Value, other: &Value) {
+        self.inner.combine(acc, other);
+    }
+    fn deliver(&mut self, out: Outcome) {
+        self.captured.push(out);
+    }
+}
+
+/// Per-process pipelined driver: a [`Protocol`] wrapping one per-segment
+/// `Reduce`/`Allreduce` instance per payload segment.
+pub struct Pipelined {
+    spec: PipelineSpec,
+    base_op: u64,
+    /// The input payload, split in order (never empty — an empty value
+    /// becomes one empty segment).
+    segments: Vec<Value>,
+    /// Started instances (index < `started`); `None` only transiently
+    /// while an instance is being driven.
+    insts: Vec<Option<SegInst>>,
+    started: usize,
+    /// Messages for segments not yet started locally.
+    buffered: Vec<Vec<(Rank, Msg)>>,
+    /// Per-segment delivered values (root / allreduce).
+    seg_values: Vec<Option<Value>>,
+    /// Per-segment `ReduceDone` markers (non-root reduce).
+    seg_done: Vec<bool>,
+    /// Union of per-segment failure reports (root only).
+    report: Vec<Rank>,
+    /// Maximum per-segment allreduce attempt count.
+    attempts: u32,
+    /// Reduce only: are we the root? (bound at start)
+    is_root: bool,
+    delivered: bool,
+    errored: bool,
+}
+
+impl Pipelined {
+    /// Pipelined fault-tolerant reduce over `segment_bytes`-sized
+    /// segments of `input`.
+    pub fn reduce(cfg: ReduceConfig, input: Value, segment_bytes: usize) -> Self {
+        let base_op = cfg.op_id;
+        Pipelined::new(PipelineSpec::Reduce(cfg), base_op, input, segment_bytes)
+    }
+
+    /// Pipelined fault-tolerant allreduce.
+    pub fn allreduce(cfg: AllreduceConfig, input: Value, segment_bytes: usize) -> Self {
+        let base_op = cfg.op_id;
+        Pipelined::new(PipelineSpec::Allreduce(cfg), base_op, input, segment_bytes)
+    }
+
+    fn new(spec: PipelineSpec, base_op: u64, input: Value, segment_bytes: usize) -> Self {
+        // base 0 would make seg_op(0, 0) == 1 collide with the default
+        // monolithic op id — the base_op routing check needs base ≥ 1
+        assert!(base_op >= 1, "pipelined base op must be >= 1");
+        let segments = input.split_segments(segment_bytes);
+        let s = segments.len();
+        Pipelined {
+            spec,
+            base_op,
+            segments,
+            insts: (0..s).map(|_| None).collect(),
+            started: 0,
+            buffered: (0..s).map(|_| Vec::new()).collect(),
+            seg_values: (0..s).map(|_| None).collect(),
+            seg_done: vec![false; s],
+            report: Vec::new(),
+            attempts: 0,
+            is_root: false,
+            delivered: false,
+            errored: false,
+        }
+    }
+
+    /// Number of segments this payload was split into.
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    fn make_inst(&self, s: usize) -> SegInst {
+        let input = self.segments[s].clone();
+        match &self.spec {
+            PipelineSpec::Reduce(base) => {
+                let mut cfg = base.clone();
+                cfg.op_id = segment::seg_op(self.base_op, s as u32);
+                SegInst::R(Reduce::new(cfg, input))
+            }
+            PipelineSpec::Allreduce(base) => {
+                let mut cfg = base.clone();
+                cfg.op_id = segment::seg_op(self.base_op, s as u32);
+                SegInst::A(Allreduce::new(cfg, input))
+            }
+        }
+    }
+
+    /// Start every segment whose predecessor has left its up-correction
+    /// phase (segment 0 starts unconditionally), replaying any buffered
+    /// messages that raced ahead of the local start.
+    fn pump(&mut self, ctx: &mut dyn Ctx) {
+        while self.started < self.insts.len() {
+            let ready = self.started == 0
+                || self.insts[self.started - 1]
+                    .as_ref()
+                    .map_or(true, |i| i.upcorr_done());
+            if !ready {
+                break;
+            }
+            let s = self.started;
+            self.started += 1;
+            let mut inst = self.make_inst(s);
+            let mut cap = CaptureCtx { inner: ctx, captured: Vec::new() };
+            inst.on_start(&mut cap);
+            let mut captured = cap.captured;
+            for (from, msg) in std::mem::take(&mut self.buffered[s]) {
+                let mut cap = CaptureCtx { inner: ctx, captured: Vec::new() };
+                inst.on_message(from, msg, &mut cap);
+                captured.extend(cap.captured);
+            }
+            self.insts[s] = Some(inst);
+            self.absorb(s, captured, ctx);
+        }
+    }
+
+    /// Fold a segment's captured deliveries into the aggregate state.
+    fn absorb(&mut self, s: usize, outs: Vec<Outcome>, ctx: &mut dyn Ctx) {
+        for out in outs {
+            match out {
+                Outcome::ReduceDone => {
+                    self.seg_done[s] = true;
+                }
+                Outcome::ReduceRoot { value, known_failed } => {
+                    self.report.extend_from_slice(&known_failed);
+                    self.seg_values[s] = Some(value);
+                }
+                Outcome::Allreduce { value, attempts } => {
+                    self.attempts = self.attempts.max(attempts);
+                    self.seg_values[s] = Some(value);
+                }
+                Outcome::Error(e) => {
+                    // a segment ran out of contract: surface once; other
+                    // segments keep serving their subtrees
+                    if !self.delivered && !self.errored {
+                        self.errored = true;
+                        ctx.deliver(Outcome::Error(e));
+                    }
+                }
+                Outcome::Broadcast(_) => {
+                    unreachable!("pipeline wraps reduce/allreduce only")
+                }
+            }
+        }
+        self.maybe_deliver(ctx);
+    }
+
+    /// Deliver the aggregate outcome once every segment resolved.
+    fn maybe_deliver(&mut self, ctx: &mut dyn Ctx) {
+        if self.delivered || self.errored || self.started < self.insts.len() {
+            return;
+        }
+        match &self.spec {
+            PipelineSpec::Reduce(_) => {
+                if self.is_root {
+                    if self.seg_values.iter().all(|v| v.is_some()) {
+                        let vals: Vec<Value> =
+                            self.seg_values.iter_mut().map(|v| v.take().unwrap()).collect();
+                        let value = Value::concat_segments(&vals);
+                        let mut known_failed = std::mem::take(&mut self.report);
+                        known_failed.sort_unstable();
+                        known_failed.dedup();
+                        self.delivered = true;
+                        ctx.deliver(Outcome::ReduceRoot { value, known_failed });
+                    }
+                } else if self.seg_done.iter().all(|&d| d) {
+                    self.delivered = true;
+                    ctx.deliver(Outcome::ReduceDone);
+                }
+            }
+            PipelineSpec::Allreduce(_) => {
+                if self.seg_values.iter().all(|v| v.is_some()) {
+                    let vals: Vec<Value> =
+                        self.seg_values.iter_mut().map(|v| v.take().unwrap()).collect();
+                    let value = Value::concat_segments(&vals);
+                    self.delivered = true;
+                    ctx.deliver(Outcome::Allreduce { value, attempts: self.attempts });
+                }
+            }
+        }
+    }
+}
+
+impl Protocol for Pipelined {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        if let PipelineSpec::Reduce(cfg) = &self.spec {
+            self.is_root = ctx.rank() == cfg.root;
+        }
+        self.pump(ctx);
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        let Some(s) = segment::seg_index(msg.op) else {
+            return; // not segment-framed: another operation's traffic
+        };
+        if segment::base_op(msg.op) != self.base_op {
+            return;
+        }
+        let s = s as usize;
+        if s >= self.insts.len() {
+            return;
+        }
+        if s >= self.started {
+            // the sender is segments ahead of us; hold until we start s
+            self.buffered[s].push((from, msg));
+            return;
+        }
+        let mut inst = self.insts[s].take().expect("segment instance present");
+        let mut cap = CaptureCtx { inner: ctx, captured: Vec::new() };
+        inst.on_message(from, msg, &mut cap);
+        let captured = cap.captured;
+        self.insts[s] = Some(inst);
+        self.absorb(s, captured, ctx);
+        self.pump(ctx);
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        // counted watch subscriptions collapse into one notification per
+        // peer: fan it out to every started segment (each decides whether
+        // the peer was pending for it)
+        for s in 0..self.started {
+            let mut inst = match self.insts[s].take() {
+                Some(i) => i,
+                None => continue,
+            };
+            let mut cap = CaptureCtx { inner: ctx, captured: Vec::new() };
+            inst.on_peer_failed(peer, &mut cap);
+            let captured = cap.captured;
+            self.insts[s] = Some(inst);
+            self.absorb(s, captured, ctx);
+        }
+        self.pump(ctx);
+    }
+
+    fn on_timer(&mut self, token: u64, ctx: &mut dyn Ctx) {
+        // timers armed by inner instances fire on the wrapper: fan the
+        // token out like on_peer_failed (Reduce/Allreduce currently arm
+        // none, but dropping a token here would silently stall the first
+        // timer-using protocol change). A protocol adding timers should
+        // namespace tokens per segment if cross-segment collisions matter.
+        for s in 0..self.started {
+            let mut inst = match self.insts[s].take() {
+                Some(i) => i,
+                None => continue,
+            };
+            let mut cap = CaptureCtx { inner: ctx, captured: Vec::new() };
+            match &mut inst {
+                SegInst::R(p) => p.on_timer(token, &mut cap),
+                SegInst::A(p) => p.on_timer(token, &mut cap),
+            }
+            let captured = cap.captured;
+            self.insts[s] = Some(inst);
+            self.absorb(s, captured, ctx);
+        }
+        self.pump(ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::failure_info::{FailureInfo, Scheme};
+    use crate::collectives::testutil::TestCtx;
+    use crate::types::MsgKind;
+
+    fn masks(n: usize, rank: Rank, blocks: usize) -> Value {
+        Value::one_hot_blocks(n, rank, blocks)
+    }
+
+    /// n=2, f=0: ranks 0 and 1 are each other's only tree relation (rank
+    /// 1 is the root's single child; groups need f ≥ 1 so both are
+    /// groupless). Two segments pipeline the exchange.
+    #[test]
+    fn two_process_pipelined_reduce() {
+        let input0 = masks(2, 0, 2);
+        let input1 = masks(2, 1, 2);
+        // 8 bytes * 2 elements per block → one block per segment
+        let mut p0 = Pipelined::reduce(ReduceConfig::new(2, 0), input0, 16);
+        let mut p1 = Pipelined::reduce(ReduceConfig::new(2, 0), input1, 16);
+        assert_eq!(p0.num_segments(), 2);
+        let mut c0 = TestCtx::new(0, 2);
+        let mut c1 = TestCtx::new(1, 2);
+        p0.on_start(&mut c0);
+        p1.on_start(&mut c1);
+        // pump messages until quiescent
+        for _ in 0..8 {
+            let s0 = c0.take_sent();
+            let s1 = c1.take_sent();
+            if s0.is_empty() && s1.is_empty() {
+                break;
+            }
+            for (to, m) in s0 {
+                assert_eq!(to, 1);
+                p1.on_message(0, m, &mut c1);
+            }
+            for (to, m) in s1 {
+                assert_eq!(to, 0);
+                p0.on_message(1, m, &mut c0);
+            }
+        }
+        assert_eq!(c0.delivered.len(), 1);
+        match &c0.delivered[0] {
+            Outcome::ReduceRoot { value, known_failed } => {
+                assert_eq!(value.inclusion_counts(), &[1, 1, 1, 1]);
+                assert!(known_failed.is_empty());
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+        assert_eq!(c1.delivered.len(), 1);
+        assert!(matches!(c1.delivered[0], Outcome::ReduceDone));
+    }
+
+    /// The overlap schedule: segment 1 must not start before segment 0
+    /// finished its up-correction, and must start right after.
+    #[test]
+    fn segment_advance_waits_for_upcorrection() {
+        // n=7, f=1: rank 3 is grouped with 4, leaf of subtree 1.
+        let mut ctx = TestCtx::new(3, 7);
+        let mut p = Pipelined::reduce(ReduceConfig::new(7, 1), masks(7, 3, 2), 7 * 8);
+        assert_eq!(p.num_segments(), 2);
+        p.on_start(&mut ctx);
+        let sent = ctx.take_sent();
+        // only segment 0's up-correction message so far
+        assert_eq!(sent.len(), 1);
+        assert_eq!(sent[0].0, 4);
+        assert_eq!(sent[0].1.kind, MsgKind::UpCorrection);
+        assert_eq!(segment::seg_index(sent[0].1.op), Some(0));
+
+        // peer answers segment 0 → leaf sends seg-0 TreeUp AND starts
+        // segment 1 (its up-correction message goes out)
+        let mut m = TestCtx::msg(MsgKind::UpCorrection, 0.0);
+        m.op = segment::seg_op(1, 0);
+        m.payload = masks(7, 4, 2).split_segments(7 * 8)[0].clone();
+        p.on_message(4, m, &mut ctx);
+        let sent = ctx.take_sent();
+        let kinds: Vec<(MsgKind, Option<u32>)> =
+            sent.iter().map(|(_, m)| (m.kind, segment::seg_index(m.op))).collect();
+        assert!(kinds.contains(&(MsgKind::TreeUp, Some(0))), "{kinds:?}");
+        assert!(kinds.contains(&(MsgKind::UpCorrection, Some(1))), "{kinds:?}");
+    }
+
+    /// Messages for a segment we have not started yet are buffered and
+    /// replayed at start, not dropped.
+    #[test]
+    fn future_segment_messages_are_buffered() {
+        let mut ctx = TestCtx::new(3, 7);
+        let mut p = Pipelined::reduce(ReduceConfig::new(7, 1), masks(7, 3, 2), 7 * 8);
+        p.on_start(&mut ctx);
+        ctx.take_sent();
+
+        // peer 4 is a segment ahead: its seg-1 up-correction arrives first
+        let mut early = TestCtx::msg(MsgKind::UpCorrection, 0.0);
+        early.op = segment::seg_op(1, 1);
+        early.payload = masks(7, 4, 2).split_segments(7 * 8)[1].clone();
+        p.on_message(4, early, &mut ctx);
+        assert!(ctx.take_sent().is_empty(), "future segment must not act early");
+
+        // seg-0 answer arrives → seg 0 completes, seg 1 starts and its
+        // buffered peer value completes it immediately (leaf: TreeUp out)
+        let mut m0 = TestCtx::msg(MsgKind::UpCorrection, 0.0);
+        m0.op = segment::seg_op(1, 0);
+        m0.payload = masks(7, 4, 2).split_segments(7 * 8)[0].clone();
+        p.on_message(4, m0, &mut ctx);
+        let sent = ctx.take_sent();
+        let treeups: Vec<Option<u32>> = sent
+            .iter()
+            .filter(|(_, m)| m.kind == MsgKind::TreeUp)
+            .map(|(_, m)| segment::seg_index(m.op))
+            .collect();
+        assert_eq!(treeups, vec![Some(0), Some(1)]);
+        assert_eq!(ctx.delivered.len(), 1); // aggregate ReduceDone
+        assert!(matches!(ctx.delivered[0], Outcome::ReduceDone));
+    }
+
+    /// Aggregate root delivery: per-segment reports union, values
+    /// concatenate in segment order.
+    #[test]
+    fn root_aggregates_segments_in_order() {
+        // n=7, f=1, root 0 is groupless: two subtree children 1, 2
+        let mut ctx = TestCtx::new(0, 7);
+        let mut p = Pipelined::reduce(ReduceConfig::new(7, 1), masks(7, 0, 2), 7 * 8);
+        p.on_start(&mut ctx);
+        assert!(ctx.delivered.is_empty());
+
+        let fi = |failed: &[Rank]| {
+            let mut f = FailureInfo::empty(Scheme::List);
+            for &r in failed {
+                f.record_upcorr_failure(r);
+            }
+            f
+        };
+        let treeup = |seg: u32, from_mask: &[i64], finfo: FailureInfo| Msg {
+            op: segment::seg_op(1, seg),
+            epoch: 0,
+            kind: MsgKind::TreeUp,
+            payload: Value::I64(from_mask.to_vec()),
+            finfo,
+        };
+        // segment 1 resolves before segment 0 (out of order): subtree 1
+        // carries ranks {1,3,5}, subtree 2 carries {2,4,6}
+        p.on_message(1, treeup(1, &[0, 1, 1, 1, 1, 1, 1], fi(&[])), &mut ctx);
+        assert!(ctx.delivered.is_empty(), "segment 0 still outstanding");
+        p.on_message(1, treeup(0, &[0, 1, 1, 1, 1, 1, 1], fi(&[6])), &mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, known_failed } => {
+                // root's own one-hot completes each segment
+                assert_eq!(
+                    value.inclusion_counts(),
+                    &[1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1, 1]
+                );
+                assert_eq!(known_failed, &vec![6]);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    /// Pipelined allreduce reports the maximum per-segment attempt count.
+    #[test]
+    fn allreduce_attempts_is_max_over_segments() {
+        let mut ctx = TestCtx::new(2, 3);
+        let mut p =
+            Pipelined::allreduce(AllreduceConfig::new(3, 1), masks(3, 2, 2), 3 * 8);
+        p.on_start(&mut ctx);
+        ctx.take_sent();
+        // both segments' broadcasts arrive (root 0 alive, attempt 1)...
+        let bc = |seg: u32| Msg {
+            op: segment::seg_op(1, seg),
+            epoch: 0,
+            kind: MsgKind::BcastTree,
+            payload: Value::I64(vec![1, 1, 1]),
+            finfo: FailureInfo::Bit(false),
+        };
+        p.on_message(0, bc(0), &mut ctx);
+        p.on_message(0, bc(1), &mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        match &ctx.delivered[0] {
+            Outcome::Allreduce { value, attempts } => {
+                assert_eq!(*attempts, 1);
+                assert_eq!(value.inclusion_counts(), &[1, 1, 1, 1, 1, 1]);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    /// A payload smaller than one segment degenerates to a single
+    /// wrapped instance.
+    #[test]
+    fn single_segment_degenerate() {
+        let mut ctx = TestCtx::new(0, 1);
+        let mut p =
+            Pipelined::reduce(ReduceConfig::new(1, 1), Value::F64(vec![42.0]), 1 << 20);
+        assert_eq!(p.num_segments(), 1);
+        p.on_start(&mut ctx);
+        assert_eq!(ctx.delivered.len(), 1);
+        match &ctx.delivered[0] {
+            Outcome::ReduceRoot { value, .. } => assert_eq!(value.as_f64_scalar(), 42.0),
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+}

@@ -139,6 +139,14 @@ impl Reduce {
         self.vrank == 0
     }
 
+    /// True once this process has left its up-correction phase. The
+    /// pipelined driver ([`super::pipeline`]) starts segment `s+1` at
+    /// exactly this boundary, overlapping its up-correction with segment
+    /// `s`'s tree phase.
+    pub fn upcorr_done(&self) -> bool {
+        self.phase != Phase::UpCorr
+    }
+
     /// Real ranks of this process's tree children.
     fn children_real(&self) -> Vec<Rank> {
         self.tree.children(self.vrank).into_iter().map(|v| self.map.to_real(v)).collect()

@@ -19,6 +19,11 @@ pub enum PayloadKind {
     /// Dense f32 vector of the given length, deterministically seeded by
     /// rank — production-shaped payloads (gradient buffers).
     VectorF32 { len: u32 },
+    /// Per-segment inclusion mask for the pipelined collectives: `segments`
+    /// consecutive one-hot blocks of length n (i64). With
+    /// `segment_bytes = 8 * n` each segment carries exactly one block, so
+    /// "included exactly once *per segment*" is checkable by counting.
+    SegMask { segments: u32 },
 }
 
 impl PayloadKind {
@@ -31,6 +36,9 @@ impl PayloadKind {
                 let mut rng = crate::prng::Pcg::new(0xDA7A ^ r as u64);
                 Value::F32((0..len).map(|_| rng.f32() - 0.5).collect())
             }
+            PayloadKind::SegMask { segments } => {
+                Value::one_hot_blocks(n as usize, r, segments as usize)
+            }
         }
     }
 
@@ -40,7 +48,22 @@ impl PayloadKind {
             PayloadKind::RankValue => 8,
             PayloadKind::OneHot => 8 * n as usize,
             PayloadKind::VectorF32 { len } => 4 * len as usize,
+            PayloadKind::SegMask { segments } => 8 * segments as usize * n as usize,
         }
+    }
+
+    /// Bytes per element of this payload's carrier (matches
+    /// [`Value::elem_bytes`] of the value [`Self::initial`] builds).
+    pub fn elem_bytes(&self) -> usize {
+        match *self {
+            PayloadKind::VectorF32 { .. } => 4,
+            PayloadKind::RankValue | PayloadKind::OneHot | PayloadKind::SegMask { .. } => 8,
+        }
+    }
+
+    /// Element count of one payload of this kind.
+    pub fn elems(&self, n: u32) -> usize {
+        self.wire_bytes(n) / self.elem_bytes()
     }
 }
 
@@ -56,6 +79,9 @@ pub struct Config {
     pub payload: PayloadKind,
     pub failures: Vec<FailureSpec>,
     pub seed: u64,
+    /// Segment size for the pipelined reduce/allreduce (`None` =
+    /// monolithic). Broadcast and the baselines ignore it.
+    pub segment_bytes: Option<u32>,
 }
 
 impl Default for Config {
@@ -69,6 +95,7 @@ impl Default for Config {
             payload: PayloadKind::RankValue,
             failures: Vec::new(),
             seed: 1,
+            segment_bytes: None,
         }
     }
 }
@@ -76,7 +103,8 @@ impl Default for Config {
 impl Config {
     /// Parse a `key = value` config file body. Recognized keys:
     /// `n`, `f`, `root`, `scheme` (list|count+bit|bit), `op`
-    /// (sum|max|min|prod), `payload` (rank|onehot|vec:<len>), `seed`,
+    /// (sum|max|min|prod), `payload` (rank|onehot|vec:<len>|segmask:<s>),
+    /// `seed`, `segment_bytes` (pipelined reduce/allreduce segment size),
     /// `fail` (repeatable: `pre:<rank>` | `sends:<rank>:<k>` |
     /// `time:<rank>:<ns>`).
     pub fn parse(body: &str) -> Result<Config, String> {
@@ -130,9 +158,14 @@ impl Config {
                     PayloadKind::OneHot
                 } else if let Some(len) = value.strip_prefix("vec:") {
                     PayloadKind::VectorF32 { len: num(len)? }
+                } else if let Some(segs) = value.strip_prefix("segmask:") {
+                    PayloadKind::SegMask { segments: num(segs)? }
                 } else {
                     return Err(format!("unknown payload `{value}`"));
                 }
+            }
+            "segment_bytes" | "segment-bytes" => {
+                self.segment_bytes = Some(num(value)?);
             }
             "fail" => {
                 let parts: Vec<&str> = value.split(':').collect();
@@ -157,6 +190,14 @@ impl Config {
         }
         if self.root >= self.n {
             return Err(format!("root {} out of range (n={})", self.root, self.n));
+        }
+        if self.segment_bytes == Some(0) {
+            return Err("segment_bytes must be >= 1".into());
+        }
+        if let PayloadKind::SegMask { segments } = self.payload {
+            if segments == 0 {
+                return Err("segmask payload needs >= 1 segment".into());
+            }
         }
         crate::failure::validate_plan(self.n, &self.failures)
     }
@@ -233,5 +274,22 @@ mod tests {
         assert_eq!(PayloadKind::RankValue.wire_bytes(8), 8);
         assert_eq!(PayloadKind::OneHot.wire_bytes(8), 64);
         assert_eq!(PayloadKind::VectorF32 { len: 256 }.wire_bytes(8), 1024);
+        assert_eq!(PayloadKind::SegMask { segments: 4 }.wire_bytes(8), 256);
+    }
+
+    #[test]
+    fn parse_segmented_keys() {
+        let cfg = Config::parse("payload = segmask:4\nsegment_bytes = 64\n").unwrap();
+        assert_eq!(cfg.payload, PayloadKind::SegMask { segments: 4 });
+        assert_eq!(cfg.segment_bytes, Some(64));
+        cfg.validate().unwrap();
+        assert!(Config::parse("segment_bytes = 0").unwrap().validate().is_err());
+        assert!(Config::parse("payload = segmask:0").unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn segmask_payload_shape() {
+        let v = PayloadKind::SegMask { segments: 3 }.initial(1, 4);
+        assert_eq!(v.inclusion_counts(), &[0, 1, 0, 0, 0, 1, 0, 0, 0, 1, 0, 0]);
     }
 }

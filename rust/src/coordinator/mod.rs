@@ -16,6 +16,7 @@ pub mod worker;
 use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
 use crate::collectives::broadcast::CorrectionMode;
 use crate::collectives::failure_info::Scheme;
+use crate::collectives::pipeline::Pipelined;
 use crate::collectives::reduce::{Reduce, ReduceConfig};
 use crate::collectives::{NativeReducer, Outcome, Protocol, ReduceOp, Reducer};
 use crate::config::PayloadKind;
@@ -57,6 +58,9 @@ pub struct EngineConfig {
     pub candidates: Option<Vec<Rank>>,
     /// Monitor confirmation delay (ns).
     pub detect_delay: TimeNs,
+    /// Segment size for the pipelined reduce/allreduce (`None` =
+    /// monolithic) — same semantics as [`crate::sim::SimConfig`].
+    pub segment_bytes: Option<usize>,
 }
 
 impl EngineConfig {
@@ -71,6 +75,7 @@ impl EngineConfig {
             reducer: ReducerKind::Native(ReduceOp::Sum),
             candidates: None,
             detect_delay: 0,
+            segment_bytes: None,
         }
     }
 }
@@ -212,29 +217,40 @@ where
     LiveReport { n: cfg.n, outcomes, delivered_at, metrics, elapsed: t0.elapsed() }
 }
 
-/// Live fault-tolerant reduce.
+/// Live fault-tolerant reduce (segmented/pipelined when
+/// `cfg.segment_bytes` is set — the same [`Pipelined`] driver the DES
+/// runs).
 pub fn live_reduce(cfg: &EngineConfig, root: Rank) -> LiveReport {
     let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
-    run_live(cfg, |_, input| {
-        Box::new(Reduce::new(
-            ReduceConfig { n, f, root, scheme, op_id: 1, epoch: 0 },
-            input,
-        ))
+    let seg = cfg.segment_bytes;
+    run_live(cfg, move |_, input| {
+        let rcfg = ReduceConfig { n, f, root, scheme, op_id: 1, epoch: 0 };
+        match seg {
+            Some(bytes) => Box::new(Pipelined::reduce(rcfg, input, bytes)) as Box<dyn Protocol>,
+            None => Box::new(Reduce::new(rcfg, input)),
+        }
     })
 }
 
-/// Live fault-tolerant allreduce.
+/// Live fault-tolerant allreduce (segmented/pipelined when
+/// `cfg.segment_bytes` is set).
 pub fn live_allreduce(cfg: &EngineConfig) -> LiveReport {
     let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
     let correction = cfg.correction;
     let candidates = cfg.candidates.clone();
+    let seg = cfg.segment_bytes;
     run_live(cfg, move |_, input| {
         let mut acfg = AllreduceConfig::new(n, f).scheme(scheme);
         acfg.correction = correction;
         if let Some(c) = &candidates {
             acfg = acfg.candidates(c.clone());
         }
-        Box::new(Allreduce::new(acfg, input))
+        match seg {
+            Some(bytes) => {
+                Box::new(Pipelined::allreduce(acfg, input, bytes)) as Box<dyn Protocol>
+            }
+            None => Box::new(Allreduce::new(acfg, input)),
+        }
     })
 }
 
@@ -281,6 +297,33 @@ mod tests {
                     assert_eq!(*attempts, 2, "rank {r}");
                 }
                 o => panic!("rank {r}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn live_segmented_reduce_masks() {
+        let mut cfg = EngineConfig::new(8, 1);
+        cfg.payload = PayloadKind::SegMask { segments: 3 };
+        cfg.segment_bytes = Some(8 * 8);
+        cfg.failures = vec![FailureSpec::Pre { rank: 5 }];
+        let rep = live_reduce(&cfg, 0);
+        match rep.outcomes[0].as_ref().unwrap() {
+            Outcome::ReduceRoot { value, .. } => {
+                let counts = value.inclusion_counts();
+                assert_eq!(counts.len(), 24);
+                for b in 0..3 {
+                    for r in 0..8usize {
+                        let want = if r == 5 { 0 } else { 1 };
+                        assert_eq!(counts[b * 8 + r], want, "block {b} rank {r}");
+                    }
+                }
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+        for r in 1..8 {
+            if r != 5 {
+                assert!(matches!(rep.outcomes[r as usize], Some(Outcome::ReduceDone)));
             }
         }
     }

@@ -60,17 +60,21 @@ ftcoll — fault-tolerant reduce/allreduce based on correction
 USAGE: ftcoll <subcommand> [options]
 
   reduce     --n 16 --f 2 [--root 0] [--scheme list|countbit|bit]
-             [--payload rank|onehot|vec:256] [--fail pre:1,sends:3:2]
-             [--trace] — simulate fault-tolerant reduce
+             [--payload rank|onehot|vec:256|segmask:4]
+             [--segment-bytes 65536 — segmented/pipelined execution]
+             [--fail pre:1,sends:3:2] [--trace]
+             — simulate fault-tolerant reduce
   allreduce  same options — simulate fault-tolerant allreduce
-  broadcast  same options — simulate corrected-tree broadcast
+  broadcast  same options (segment-bytes ignored) — corrected-tree bcast
   baseline   --algo tree|flat|ring|gossip + same options
   campaign   [--count 1000] [--seed 1] [--max-n 128] [--threads 0]
              [--out campaign_result.json] [--check-oracles]
              [--replay <scenario-id> [--trace]]
-             — deterministic scenario sweep checked by paper-semantics
-             oracles; any failing scenario is replayable by id
-  live       --algo reduce|allreduce [--pjrt] — threaded engine run
+             — deterministic scenario sweep (incl. segmented/pipelined
+             and mid-pipeline-failure scenarios) checked by paper-
+             semantics oracles; any failing scenario is replayable by id
+  live       --algo reduce|allreduce [--segment-bytes N] [--pjrt]
+             — threaded engine run
   topology   --n 16 --f 2 — print up-correction groups and I(f)-tree
   artifacts  [--dir artifacts] — list and compile the AOT artifacts
 ";
@@ -81,7 +85,7 @@ fn build_config(args: &Args) -> Result<Config, String> {
         let body = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         cfg = Config::parse(&body)?;
     }
-    for key in ["n", "f", "root", "scheme", "op", "payload", "seed"] {
+    for key in ["n", "f", "root", "scheme", "op", "payload", "seed", "segment-bytes"] {
         if let Some(v) = args.get(key) {
             cfg.set(key, v)?;
         }
@@ -103,6 +107,7 @@ fn to_sim(cfg: &Config, trace: bool) -> SimConfig {
         .payload(cfg.payload)
         .failures(cfg.failures.clone())
         .tracing(trace);
+    s.segment_bytes = cfg.segment_bytes.map(|b| b as usize);
     s.seed = cfg.seed;
     s
 }
@@ -287,6 +292,7 @@ fn run_live_cmd(args: &Args) -> Result<(), String> {
     ecfg.scheme = cfg.scheme;
     ecfg.payload = cfg.payload;
     ecfg.failures = cfg.failures.clone();
+    ecfg.segment_bytes = cfg.segment_bytes.map(|b| b as usize);
     if pjrt {
         // fail fast: with the offline stub, workers would otherwise
         // panic mid-run on the first combine

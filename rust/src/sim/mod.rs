@@ -19,6 +19,7 @@ use crate::collectives::baseline::{
 };
 use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
 use crate::collectives::failure_info::Scheme;
+use crate::collectives::pipeline::Pipelined;
 use crate::collectives::reduce::{Reduce, ReduceConfig};
 use crate::collectives::{Ctx, NativeReducer, Outcome, Protocol, ReduceOp, Reducer};
 use crate::config::PayloadKind;
@@ -50,6 +51,9 @@ pub struct SimConfig {
     pub bcast_distance: Option<u32>,
     /// Allreduce candidate roots (`None` → `0..=f`).
     pub candidates: Option<Vec<Rank>>,
+    /// Segment size for the pipelined reduce/allreduce (`None` =
+    /// monolithic). Broadcast and the baselines ignore it.
+    pub segment_bytes: Option<usize>,
     pub trace: bool,
     pub seed: u64,
     pub max_events: u64,
@@ -70,6 +74,7 @@ impl SimConfig {
             correction: CorrectionMode::Always,
             bcast_distance: None,
             candidates: None,
+            segment_bytes: None,
             trace: false,
             seed: 1,
             max_events: 200_000_000,
@@ -114,6 +119,10 @@ impl SimConfig {
     }
     pub fn detect_latency(mut self, d: TimeNs) -> Self {
         self.detect_latency = d;
+        self
+    }
+    pub fn segment_bytes(mut self, bytes: usize) -> Self {
+        self.segment_bytes = Some(bytes);
         self
     }
 }
@@ -569,7 +578,9 @@ fn finish(mut sim: Sim) -> RunReport {
     }
 }
 
-/// Simulate fault-tolerant reduce (Algorithms 1-4).
+/// Simulate fault-tolerant reduce (Algorithms 1-4); with
+/// `segment_bytes` set, the segmented/pipelined variant
+/// ([`crate::collectives::pipeline`]).
 pub fn run_reduce(cfg: &SimConfig) -> RunReport {
     let mut sim = build_sim(cfg);
     for r in 0..cfg.n {
@@ -581,14 +592,20 @@ pub fn run_reduce(cfg: &SimConfig) -> RunReport {
             op_id: 1,
             epoch: 0,
         };
-        sim.add_proc(r, Box::new(Reduce::new(rcfg, cfg.payload.initial(r, cfg.n))));
+        let input = cfg.payload.initial(r, cfg.n);
+        let proto: Box<dyn Protocol> = match cfg.segment_bytes {
+            Some(bytes) => Box::new(Pipelined::reduce(rcfg, input, bytes)),
+            None => Box::new(Reduce::new(rcfg, input)),
+        };
+        sim.add_proc(r, proto);
     }
     sim.apply_failures(&cfg.failures);
     sim.start_all();
     finish(sim)
 }
 
-/// Simulate fault-tolerant allreduce (Algorithm 5).
+/// Simulate fault-tolerant allreduce (Algorithm 5); with
+/// `segment_bytes` set, the segmented/pipelined variant.
 pub fn run_allreduce(cfg: &SimConfig) -> RunReport {
     let mut sim = build_sim(cfg);
     for r in 0..cfg.n {
@@ -597,7 +614,12 @@ pub fn run_allreduce(cfg: &SimConfig) -> RunReport {
         if let Some(c) = &cfg.candidates {
             acfg = acfg.candidates(c.clone());
         }
-        sim.add_proc(r, Box::new(Allreduce::new(acfg, cfg.payload.initial(r, cfg.n))));
+        let input = cfg.payload.initial(r, cfg.n);
+        let proto: Box<dyn Protocol> = match cfg.segment_bytes {
+            Some(bytes) => Box::new(Pipelined::allreduce(acfg, input, bytes)),
+            None => Box::new(Allreduce::new(acfg, input)),
+        };
+        sim.add_proc(r, proto);
     }
     sim.apply_failures(&cfg.failures);
     sim.start_all();
@@ -803,6 +825,66 @@ mod tests {
                 assert_eq!(counts[r], 1, "live rank {r} included {}x", counts[r]);
             }
         }
+    }
+
+    #[test]
+    fn segmented_reduce_matches_monolithic_masks() {
+        for (n, f) in [(2u32, 1u32), (7, 1), (9, 2), (16, 3)] {
+            let mono = SimConfig::new(n, f).payload(PayloadKind::SegMask { segments: 4 });
+            let seg = mono.clone().segment_bytes(8 * n as usize);
+            let a = run_reduce(&mono);
+            let b = run_reduce(&seg);
+            assert_eq!(
+                a.root_value().unwrap(),
+                b.root_value().unwrap(),
+                "n={n} f={f}"
+            );
+            for r in 0..n {
+                assert_eq!(b.deliveries_at(r), 1, "rank {r} n={n} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_allreduce_agrees_and_rotates() {
+        let cfg = SimConfig::new(8, 2)
+            .payload(PayloadKind::SegMask { segments: 3 })
+            .segment_bytes(8 * 8)
+            .failure(FailureSpec::Pre { rank: 0 });
+        let rep = run_allreduce(&cfg);
+        let first = rep.value_at(1).expect("rank 1 delivers").clone();
+        for r in 1..8 {
+            match rep.outcomes[r as usize].first() {
+                Some(Outcome::Allreduce { value, attempts }) => {
+                    assert_eq!(*value, first, "rank {r}");
+                    assert_eq!(*attempts, 2, "rank {r}: root 0 dead → second attempt");
+                }
+                o => panic!("rank {r}: unexpected {o:?}"),
+            }
+        }
+        // every live rank included once in every segment block
+        let counts = first.inclusion_counts();
+        for b in 0..3 {
+            for r in 0..8usize {
+                let want = if r == 0 { 0 } else { 1 };
+                assert_eq!(counts[b * 8 + r], want, "block {b} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_pipeline_beats_monolithic_on_large_payloads() {
+        let mono = SimConfig::new(16, 1)
+            .payload(PayloadKind::VectorF32 { len: 65_536 }) // 256 KiB
+            .net(NetModel::lan());
+        let seg = mono.clone().segment_bytes(32 * 1024);
+        let a = run_allreduce(&mono);
+        let b = run_allreduce(&seg);
+        let (ta, tb) = (a.makespan().unwrap(), b.makespan().unwrap());
+        assert!(
+            tb * 2 <= ta,
+            "segmented {tb} ns not ≥2x faster than monolithic {ta} ns"
+        );
     }
 
     #[test]

@@ -93,6 +93,114 @@ impl Value {
             other => panic!("as_f32 on {other:?}"),
         }
     }
+
+    /// Bytes per element of this carrier on the wire.
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            Value::F32(_) => 4,
+            Value::F64(_) | Value::I64(_) => 8,
+        }
+    }
+
+    /// Per-segment inclusion mask: `blocks` consecutive one-hot blocks of
+    /// length `n`, each with a 1 at `rank`. Splitting this value at
+    /// `8 * n` bytes yields exactly one one-hot mask per segment, so the
+    /// pipelined collectives' "included exactly once *per segment*"
+    /// semantics are checkable with the same counting argument as
+    /// [`Value::one_hot`].
+    pub fn one_hot_blocks(n: usize, rank: Rank, blocks: usize) -> Value {
+        let mut v = vec![0i64; n * blocks];
+        for b in 0..blocks {
+            v[b * n + rank as usize] = 1;
+        }
+        Value::I64(v)
+    }
+
+    /// Split into segments of at most `max_bytes` (whole elements only;
+    /// at least one element per segment). Empty values yield a single
+    /// empty segment so protocols still run exactly one instance.
+    /// Lossless: [`Value::concat_segments`] restores the original.
+    pub fn split_segments(&self, max_bytes: usize) -> Vec<Value> {
+        let per = (max_bytes / self.elem_bytes()).max(1);
+        if self.is_empty() {
+            return vec![self.clone()];
+        }
+        match self {
+            Value::F32(v) => v.chunks(per).map(|c| Value::F32(c.to_vec())).collect(),
+            Value::F64(v) => v.chunks(per).map(|c| Value::F64(c.to_vec())).collect(),
+            Value::I64(v) => v.chunks(per).map(|c| Value::I64(c.to_vec())).collect(),
+        }
+    }
+
+    /// Reassemble segments produced by [`Value::split_segments`] (in
+    /// order). Panics on an empty slice or mixed carriers.
+    pub fn concat_segments(segs: &[Value]) -> Value {
+        assert!(!segs.is_empty(), "concat_segments on empty slice");
+        match &segs[0] {
+            Value::F32(_) => Value::F32(
+                segs.iter()
+                    .flat_map(|s| match s {
+                        Value::F32(v) => v.iter().copied(),
+                        other => panic!("mixed carriers: {other:?}"),
+                    })
+                    .collect(),
+            ),
+            Value::F64(_) => Value::F64(
+                segs.iter()
+                    .flat_map(|s| match s {
+                        Value::F64(v) => v.iter().copied(),
+                        other => panic!("mixed carriers: {other:?}"),
+                    })
+                    .collect(),
+            ),
+            Value::I64(_) => Value::I64(
+                segs.iter()
+                    .flat_map(|s| match s {
+                        Value::I64(v) => v.iter().copied(),
+                        other => panic!("mixed carriers: {other:?}"),
+                    })
+                    .collect(),
+            ),
+        }
+    }
+}
+
+/// Segment framing for the pipelined collectives
+/// ([`crate::collectives::pipeline`]): one collective over a large
+/// payload runs as many per-segment protocol instances, multiplexed over
+/// the shared message stream by *op id* — segment `s` of base operation
+/// `b` uses op id `(b << SEG_BITS) | (s + 1)`. The `+1` only guarantees
+/// a *framed* op has nonzero low bits (so [`seg_index`] rejects ids
+/// whose low bits are zero); a small monolithic op id like `1` still
+/// parses as `Some(0)`, so routers must ALSO check [`base_op`] against
+/// their own base — which is why the pipelined driver requires a base
+/// op ≥ 1 (a base of 0 would collide with monolithic ids).
+pub mod segment {
+    /// Low bits reserved for the segment index (max ~1M segments).
+    pub const SEG_BITS: u32 = 20;
+    const LOW_MASK: u64 = (1 << SEG_BITS) - 1;
+
+    /// Op id of segment `seg` of base operation `base`.
+    pub fn seg_op(base: u64, seg: u32) -> u64 {
+        debug_assert!((seg as u64) < LOW_MASK, "segment index {seg} overflows framing");
+        (base << SEG_BITS) | (seg as u64 + 1)
+    }
+
+    /// The segment index encoded in `op`, or `None` for op ids that do
+    /// not carry segment framing (low bits zero).
+    pub fn seg_index(op: u64) -> Option<u32> {
+        let low = op & LOW_MASK;
+        if low == 0 {
+            None
+        } else {
+            Some(low as u32 - 1)
+        }
+    }
+
+    /// The base operation id encoded in `op`.
+    pub fn base_op(op: u64) -> u64 {
+        op >> SEG_BITS
+    }
 }
 
 /// The kind of a protocol message; determines which phase the message
@@ -238,5 +346,56 @@ mod tests {
         let names: std::collections::HashSet<_> =
             MsgKind::ALL.iter().map(|k| k.name()).collect();
         assert_eq!(names.len(), MsgKind::ALL.len());
+    }
+
+    #[test]
+    fn split_roundtrips_and_conserves_bytes() {
+        let v = Value::I64((0..10).collect());
+        let segs = v.split_segments(24); // 3 elements per segment
+        assert_eq!(segs.len(), 4); // 3+3+3+1
+        assert_eq!(segs.iter().map(Value::wire_bytes).sum::<usize>(), v.wire_bytes());
+        assert_eq!(Value::concat_segments(&segs), v);
+    }
+
+    #[test]
+    fn split_edge_cases() {
+        // empty: one empty segment, identity round trip
+        let empty = Value::F32(Vec::new());
+        let segs = empty.split_segments(64);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(Value::concat_segments(&segs), empty);
+        // length 1: one segment even when max_bytes < elem size
+        let one = Value::F64(vec![3.5]);
+        let segs = one.split_segments(1);
+        assert_eq!(segs.len(), 1);
+        assert_eq!(Value::concat_segments(&segs), one);
+    }
+
+    #[test]
+    fn one_hot_blocks_splits_into_one_hot_masks() {
+        let v = Value::one_hot_blocks(5, 2, 3);
+        assert_eq!(v.len(), 15);
+        let segs = v.split_segments(8 * 5);
+        assert_eq!(segs.len(), 3);
+        for s in &segs {
+            assert_eq!(s.inclusion_counts(), Value::one_hot(5, 2).inclusion_counts());
+        }
+    }
+
+    #[test]
+    fn segment_op_multiplexing_roundtrips() {
+        for base in [1u64, 7, 1000] {
+            for seg in [0u32, 1, 63, 4095] {
+                let op = segment::seg_op(base, seg);
+                assert_eq!(segment::seg_index(op), Some(seg));
+                assert_eq!(segment::base_op(op), base);
+            }
+        }
+        // zero low bits = unframed; note a small monolithic id like 1
+        // still parses as Some(0) — routing additionally matches base_op
+        // (and the pipelined driver requires base >= 1)
+        assert_eq!(segment::seg_index(1 << segment::SEG_BITS), None);
+        assert_eq!(segment::seg_index(1), Some(0));
+        assert_eq!(segment::base_op(1), 0); // never a valid pipeline base
     }
 }

@@ -1,0 +1,179 @@
+//! Mid-pipeline failure semantics of the segmented collectives
+//! (docs/PIPELINE.md): a process killed between segment `s` and `s+1`
+//! must be included **all-or-nothing per segment** — earlier segments
+//! may carry its contribution, later ones must exclude it, and no
+//! segment may ever count it twice. Checked exactly with the `SegMask`
+//! payload (one one-hot block per segment) on the deterministic DES.
+
+use ftcoll::collectives::Outcome;
+use ftcoll::prelude::*;
+use ftcoll::sim;
+
+const SEGS: u32 = 4;
+
+fn seg_cfg(n: u32, f: u32) -> SimConfig {
+    SimConfig::new(n, f)
+        .payload(PayloadKind::SegMask { segments: SEGS })
+        .segment_bytes(8 * n as usize)
+}
+
+/// Block `b` of the root mask (counts per rank for segment `b`).
+fn block(counts: &[i64], n: u32, b: usize) -> &[i64] {
+    &counts[b * n as usize..(b + 1) * n as usize]
+}
+
+/// Assert the per-segment inclusion predicates for one run, returning
+/// per-block inclusion of the victim (for the mixed-split check).
+fn check_blocks(counts: &[i64], n: u32, victim: u32, label: &str) -> Vec<i64> {
+    assert_eq!(counts.len(), (SEGS * n) as usize, "{label}: mask length");
+    let mut victim_per_block = Vec::new();
+    for b in 0..SEGS as usize {
+        let blk = block(counts, n, b);
+        for r in 0..n as usize {
+            let c = blk[r];
+            if r as u32 == victim {
+                assert!(
+                    c == 0 || c == 1,
+                    "{label}: segment {b} counts victim {victim} {c}x (all-or-nothing)"
+                );
+            } else {
+                assert_eq!(c, 1, "{label}: segment {b} live rank {r} counted {c}x");
+            }
+        }
+        victim_per_block.push(blk[victim as usize]);
+    }
+    victim_per_block
+}
+
+/// Send-count kills swept across the whole pipeline: every kill point
+/// must satisfy all-or-nothing per segment, and at least one kill point
+/// must land *between* segments (victim in some earlier segment, absent
+/// from some later one) — the scenario family this PR opens.
+#[test]
+fn reduce_kill_between_segments_all_or_nothing() {
+    let (n, f, victim) = (9u32, 2u32, 5u32);
+    let mut saw_mixed = false;
+    for sends in 0..=3 * SEGS {
+        let cfg = seg_cfg(n, f).failure(FailureSpec::AfterSends { rank: victim, sends });
+        let rep = sim::run_reduce(&cfg);
+        let value = rep.root_value().unwrap_or_else(|| panic!("sends={sends}: no root value"));
+        let per_block =
+            check_blocks(value.inclusion_counts(), n, victim, &format!("sends={sends}"));
+        let included = per_block.iter().filter(|&&c| c == 1).count();
+        if included > 0 && included < SEGS as usize {
+            saw_mixed = true;
+        }
+        // every live rank delivers exactly once, pre/in-op victim at most once
+        for r in 0..n {
+            let k = rep.deliveries_at(r);
+            if rep.dead.contains(&r) {
+                assert!(k <= 1, "sends={sends} rank {r}");
+            } else {
+                assert_eq!(k, 1, "sends={sends} rank {r}");
+            }
+        }
+    }
+    assert!(
+        saw_mixed,
+        "no kill point ever landed mid-pipeline — the sweep lost its purpose"
+    );
+}
+
+/// The same sweep through the allreduce pipeline: every deliverer must
+/// additionally agree bit-identically on the (concatenated) result.
+#[test]
+fn allreduce_kill_between_segments_agreement() {
+    let (n, f, victim) = (8u32, 2u32, 5u32); // victim > f: not a candidate root
+    let mut saw_mixed = false;
+    for sends in 0..=3 * SEGS {
+        let cfg = seg_cfg(n, f).failure(FailureSpec::AfterSends { rank: victim, sends });
+        let rep = sim::run_allreduce(&cfg);
+        let mut first: Option<&Value> = None;
+        for r in 0..n {
+            if rep.dead.contains(&r) {
+                continue;
+            }
+            match rep.outcomes[r as usize].first() {
+                Some(Outcome::Allreduce { value, attempts }) => {
+                    assert_eq!(*attempts, 1, "sends={sends} rank {r}: no candidate died");
+                    match first {
+                        None => first = Some(value),
+                        Some(v) => assert_eq!(v, value, "sends={sends} rank {r} disagrees"),
+                    }
+                }
+                o => panic!("sends={sends} rank {r}: {o:?}"),
+            }
+        }
+        let value = first.expect("some rank delivered");
+        let per_block =
+            check_blocks(value.inclusion_counts(), n, victim, &format!("sends={sends}"));
+        let included = per_block.iter().filter(|&&c| c == 1).count();
+        if included > 0 && included < SEGS as usize {
+            saw_mixed = true;
+        }
+    }
+    assert!(saw_mixed, "no allreduce kill point landed mid-pipeline");
+}
+
+/// Timed kills (virtual-time sweep) must obey the same per-segment
+/// predicates — the kill lands wherever the pipeline happens to be.
+#[test]
+fn timed_mid_pipeline_kills() {
+    let (n, f, victim) = (9u32, 2u32, 7u32);
+    for at in [1_000u64, 5_000, 10_000, 20_000, 50_000, 100_000] {
+        let cfg = seg_cfg(n, f).failure(FailureSpec::AtTime { rank: victim, at });
+        let rep = sim::run_reduce(&cfg);
+        let value = rep.root_value().unwrap_or_else(|| panic!("at={at}: no root value"));
+        check_blocks(value.inclusion_counts(), n, victim, &format!("at={at}"));
+    }
+}
+
+/// Pre-operational victims appear in *no* segment; the remaining ranks
+/// appear in every segment — and the segmented result equals the
+/// monolithic result bit for bit (same in-contract scenario).
+#[test]
+fn pre_kill_excluded_from_every_segment_and_matches_monolithic() {
+    let (n, f, victim) = (12u32, 2u32, 4u32);
+    let seg = seg_cfg(n, f).failure(FailureSpec::Pre { rank: victim });
+    let mono = SimConfig::new(n, f)
+        .payload(PayloadKind::SegMask { segments: SEGS })
+        .failure(FailureSpec::Pre { rank: victim });
+    let a = sim::run_reduce(&seg);
+    let b = sim::run_reduce(&mono);
+    let va = a.root_value().unwrap();
+    assert_eq!(va, b.root_value().unwrap(), "segmented != monolithic");
+    for bix in 0..SEGS as usize {
+        let blk = block(va.inclusion_counts(), n, bix);
+        for r in 0..n as usize {
+            let want = i64::from(r as u32 != victim);
+            assert_eq!(blk[r], want, "segment {bix} rank {r}");
+        }
+    }
+}
+
+/// Mid-pipeline *root* death (allreduce): candidate roots may only fail
+/// pre-operationally (§5.1) — killing the first two candidates forces
+/// every segment through two rotations and the aggregate attempt count
+/// reports the maximum.
+#[test]
+fn segmented_rootkill_rotates_every_segment() {
+    let n = 8u32;
+    let cfg = seg_cfg(n, 2)
+        .failures(vec![FailureSpec::Pre { rank: 0 }, FailureSpec::Pre { rank: 1 }]);
+    let rep = sim::run_allreduce(&cfg);
+    for r in 2..n {
+        match rep.outcomes[r as usize].first() {
+            Some(Outcome::Allreduce { value, attempts }) => {
+                assert_eq!(*attempts, 3, "rank {r}");
+                for b in 0..SEGS as usize {
+                    let blk = block(value.inclusion_counts(), n, b);
+                    for q in 0..n as usize {
+                        let want = i64::from(q >= 2);
+                        assert_eq!(blk[q], want, "rank {r} segment {b} rank {q}");
+                    }
+                }
+            }
+            o => panic!("rank {r}: {o:?}"),
+        }
+    }
+}

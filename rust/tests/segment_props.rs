@@ -1,0 +1,110 @@
+//! Property tests (proptest_lite) for the segment framing of the
+//! pipelined collectives: split/reassembly round-trip identity over all
+//! three `Value` carriers (including lengths not divisible by the
+//! segment size, and the length-0/length-1 edge cases), `wire_bytes`
+//! conservation across a split, and the `op_id × segment_idx`
+//! multiplexing round trip.
+
+use ftcoll::prng::Pcg;
+use ftcoll::proptest_lite::{run_cases, PropConfig};
+use ftcoll::types::{segment, Value};
+use ftcoll::{prop_assert, prop_assert_eq};
+
+/// A random value of a random carrier; lengths deliberately include 0
+/// and 1 (the edge cases) and odd lengths not divisible by anything.
+fn random_value(rng: &mut Pcg) -> Value {
+    let len = match rng.below(10) {
+        0 => 0usize,
+        1 => 1,
+        _ => rng.range(2, 65) as usize,
+    };
+    match rng.below(3) {
+        0 => Value::F32((0..len).map(|_| rng.f32() - 0.5).collect()),
+        1 => Value::F64((0..len).map(|_| rng.f64() - 0.5).collect()),
+        _ => Value::I64((0..len).map(|_| rng.below(1_000_000) as i64 - 500_000).collect()),
+    }
+}
+
+#[test]
+fn split_concat_roundtrip_identity() {
+    run_cases("segment/roundtrip", PropConfig::default(), |rng| {
+        let v = random_value(rng);
+        let seg_bytes = rng.range(1, 64) as usize;
+        let segs = v.split_segments(seg_bytes);
+        prop_assert!(!segs.is_empty(), "split produced no segments for len {}", v.len());
+        prop_assert_eq!(
+            Value::concat_segments(&segs),
+            v,
+            "round trip lost data (seg_bytes={seg_bytes})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn split_conserves_wire_bytes_and_bounds_segments() {
+    run_cases("segment/wire_bytes", PropConfig::default(), |rng| {
+        let v = random_value(rng);
+        let seg_bytes = rng.range(1, 256) as usize;
+        let segs = v.split_segments(seg_bytes);
+        let sum: usize = segs.iter().map(Value::wire_bytes).sum();
+        prop_assert_eq!(sum, v.wire_bytes(), "wire bytes not conserved");
+        // every segment fits the cap (modulo the ≥1-element minimum)
+        let cap = seg_bytes.max(v.elem_bytes());
+        for (i, s) in segs.iter().enumerate() {
+            prop_assert!(
+                s.wire_bytes() <= cap,
+                "segment {i} has {} bytes > cap {cap}",
+                s.wire_bytes()
+            );
+        }
+        // segment count is exactly ceil(len / elems_per_segment)
+        let per = (seg_bytes / v.elem_bytes()).max(1);
+        let want = if v.is_empty() { 1 } else { (v.len() + per - 1) / per };
+        prop_assert_eq!(segs.len(), want, "segment count");
+        // only the last segment may be short
+        for (i, s) in segs.iter().enumerate() {
+            if i + 1 < segs.len() {
+                prop_assert_eq!(s.len(), per, "interior segment {i} short");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn segmask_splits_into_one_hot_blocks() {
+    run_cases("segment/segmask", PropConfig::default(), |rng| {
+        let n = rng.range(1, 32) as usize;
+        let blocks = rng.range(1, 8) as usize;
+        let rank = rng.below(n as u64) as u32;
+        let v = Value::one_hot_blocks(n, rank, blocks);
+        let segs = v.split_segments(8 * n);
+        prop_assert_eq!(segs.len(), blocks, "one block per segment");
+        for (i, s) in segs.iter().enumerate() {
+            prop_assert_eq!(
+                s.inclusion_counts(),
+                Value::one_hot(n, rank).inclusion_counts(),
+                "block {i} not one-hot"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn seg_op_multiplexing_roundtrip() {
+    run_cases("segment/op_mux", PropConfig::default(), |rng| {
+        let base = rng.range(1, 1 << 40);
+        let seg = rng.below((1 << segment::SEG_BITS) - 1) as u32;
+        let op = segment::seg_op(base, seg);
+        prop_assert_eq!(segment::seg_index(op), Some(seg), "segment index lost");
+        prop_assert_eq!(segment::base_op(op), base, "base op lost");
+        // distinct segments of the same base never collide
+        let other = (seg + 1) % ((1 << segment::SEG_BITS) - 1);
+        if other != seg {
+            prop_assert!(segment::seg_op(base, other) != op, "op collision");
+        }
+        Ok(())
+    });
+}
