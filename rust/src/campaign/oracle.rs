@@ -35,6 +35,7 @@
 //!   `RootKill{k}`).
 
 use super::spec::{Collective, FailurePattern, ScenarioSpec};
+use crate::collectives::failure_info::Scheme;
 use crate::collectives::{Outcome, ReduceOp};
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
@@ -106,6 +107,12 @@ pub fn check(spec: &ScenarioSpec, rep: &RunReport, base: &Baseline) -> OracleRep
     o.check(pre.is_subset(&dead), || {
         format!("pre-operational victims {pre_sorted:?} not all dead ({:?})", rep.dead)
     });
+
+    if spec.is_session() {
+        check_session(spec, rep, &dead, &pre, &injected, &mut o);
+        check_session_msg_bounds(spec, rep, base, &mut o);
+        return o;
+    }
 
     // ---- delivery clauses -------------------------------------------------
     for r in 0..spec.n {
@@ -271,6 +278,228 @@ fn check_broadcast(
                 other => o.check(false, || format!("rank {r} delivered {other:?}")),
             }
         }
+    }
+}
+
+/// Session clauses (docs/SESSIONS.md): one delivery per epoch at every
+/// never-failed rank; per-epoch inclusion semantics on the OneHot
+/// carrier; monotone membership (a rank's inclusion never comes back
+/// after it dropped out); allreduce per-epoch agreement; and — the
+/// self-healing claim — after a `RootKill{k}` under the List scheme,
+/// epoch 0 pays k rotations and every later epoch completes in one
+/// attempt because the dead candidates were excluded.
+fn check_session(
+    spec: &ScenarioSpec,
+    rep: &RunReport,
+    dead: &HashSet<Rank>,
+    pre: &HashSet<Rank>,
+    injected: &HashSet<Rank>,
+    o: &mut OracleReport,
+) {
+    let k = spec.session_ops as usize;
+    for r in 0..spec.n {
+        let d = rep.deliveries_at(r);
+        o.check(d <= k, || format!("rank {r} delivered {d} epochs (session has {k})"));
+        if pre.contains(&r) {
+            o.check(d == 0, || format!("pre-dead rank {r} delivered"));
+        } else if !dead.contains(&r) {
+            o.check(d == k, || {
+                format!("live rank {r} delivered {d} of {k} session epochs")
+            });
+        }
+    }
+    for outs in rep.outcomes.iter() {
+        for out in outs {
+            if let Outcome::Error(e) = out {
+                o.check(false, || format!("in-contract session delivered error: {e}"));
+            }
+        }
+    }
+
+    // per-epoch root values, collected for the monotonicity check
+    let mut epoch_values: Vec<Option<&Value>> = vec![None; k];
+    match spec.collective {
+        Collective::Reduce => {
+            for (e, out) in rep.outcomes[spec.root as usize].iter().enumerate() {
+                match out {
+                    Outcome::ReduceRoot { value, known_failed } => {
+                        o.check(known_failed.iter().all(|x| injected.contains(x)), || {
+                            format!("epoch {e}: report {known_failed:?} lists non-injected")
+                        });
+                        o.check(known_failed.windows(2).all(|w| w[0] < w[1]), || {
+                            format!("epoch {e}: report {known_failed:?} not sorted/deduped")
+                        });
+                        if e < k {
+                            epoch_values[e] = Some(value);
+                        }
+                    }
+                    other => {
+                        o.check(false, || format!("epoch {e}: root delivered {other:?}"))
+                    }
+                }
+            }
+            for r in 0..spec.n {
+                if r == spec.root {
+                    continue;
+                }
+                for out in &rep.outcomes[r as usize] {
+                    o.check(matches!(out, Outcome::ReduceDone), || {
+                        format!("session non-root rank {r} delivered {out:?}")
+                    });
+                }
+            }
+        }
+        Collective::Allreduce => {
+            let mut per_epoch: Vec<Option<(&Value, u32)>> = vec![None; k];
+            for r in 0..spec.n {
+                for (e, out) in rep.outcomes[r as usize].iter().enumerate() {
+                    match out {
+                        Outcome::Allreduce { value, attempts } => {
+                            o.check(*attempts <= spec.f + 1, || {
+                                format!(
+                                    "epoch {e} rank {r}: {attempts} attempts exceed f+1={}",
+                                    spec.f + 1
+                                )
+                            });
+                            if e >= k {
+                                continue;
+                            }
+                            match per_epoch[e] {
+                                None => per_epoch[e] = Some((value, *attempts)),
+                                Some((v0, a0)) => {
+                                    o.check(*value == *v0, || {
+                                        format!(
+                                            "epoch {e} rank {r} disagrees on the value \
+                                             (§5.1 item 5)"
+                                        )
+                                    });
+                                    o.check(*attempts == a0, || {
+                                        format!(
+                                            "epoch {e} rank {r} disagrees on attempts"
+                                        )
+                                    });
+                                }
+                            }
+                        }
+                        other => {
+                            o.check(false, || format!("epoch {e} rank {r}: {other:?}"))
+                        }
+                    }
+                }
+            }
+            // the self-healing claim: exclusion of the dead candidates
+            // makes every post-RootKill epoch a single-attempt run
+            if let FailurePattern::RootKill { k: killed } = spec.pattern {
+                if let Some((_, a0)) = per_epoch[0] {
+                    o.check(a0 == killed + 1, || {
+                        format!("epoch 0: {a0} attempts, want {} (RootKill)", killed + 1)
+                    });
+                }
+                if spec.scheme == Scheme::List {
+                    for (e, slot) in per_epoch.iter().enumerate().skip(1) {
+                        if let Some((_, a)) = slot {
+                            o.check(*a == 1, || {
+                                format!(
+                                    "epoch {e}: {a} attempts — dead candidates were \
+                                     reported in epoch 0 and must be excluded"
+                                )
+                            });
+                        }
+                    }
+                }
+            }
+            for (e, slot) in per_epoch.iter().enumerate() {
+                if let Some((v, _)) = *slot {
+                    epoch_values[e] = Some(v);
+                }
+            }
+        }
+        Collective::Broadcast => {
+            // broadcast sessions carry no failure information; only the
+            // generic delivery clauses above apply
+        }
+    }
+
+    // per-epoch inclusion + monotone membership on the OneHot carrier
+    if spec.payload != PayloadKind::OneHot {
+        return;
+    }
+    let n = spec.n as usize;
+    let mut prev: Option<Vec<i64>> = None;
+    for (e, slot) in epoch_values.iter().enumerate() {
+        let Some(value) = slot else { continue };
+        let counts = value.inclusion_counts();
+        o.check(counts.len() == n, || {
+            format!("epoch {e}: mask length {} != n {}", counts.len(), n)
+        });
+        if counts.len() != n {
+            return;
+        }
+        for r in 0..n {
+            let c = counts[r];
+            if pre.contains(&(r as Rank)) {
+                o.check(c == 0, || format!("epoch {e}: pre-dead rank {r} included {c}x"));
+            } else if dead.contains(&(r as Rank)) {
+                o.check(c == 0 || c == 1, || {
+                    format!("epoch {e}: failed rank {r} included {c}x (want 0 or 1)")
+                });
+            } else {
+                o.check(c == 1, || {
+                    format!("epoch {e}: live rank {r} included {c}x (want 1)")
+                });
+            }
+        }
+        if let Some(p) = &prev {
+            for r in 0..n {
+                o.check(counts[r] <= p[r], || {
+                    format!(
+                        "epoch {e}: rank {r} inclusion rose from {} to {} — membership \
+                         must shrink monotonically",
+                        p[r], counts[r]
+                    )
+                });
+            }
+        }
+        prev = Some(counts.to_vec());
+    }
+}
+
+/// Message bounds for session runs: failures (and the exclusion they
+/// trigger) never *add* messages over the failure-free session of the
+/// same configuration — shrunk epochs can only send less (Thm 5 per
+/// epoch; smaller n', f' afterwards). Allreduce keeps the Thm 7 style
+/// (f+1)-fold allowance for rotation.
+fn check_session_msg_bounds(
+    spec: &ScenarioSpec,
+    rep: &RunReport,
+    base: &Baseline,
+    o: &mut OracleReport,
+) {
+    let total = rep.metrics.total_msgs();
+    match spec.collective {
+        Collective::Allreduce => {
+            let bound = (spec.f as u64 + 1) * base.total_msgs;
+            o.check(total <= bound, || {
+                format!("session msgs {total} exceed the (f+1)-fold bound {bound}")
+            });
+        }
+        _ => {
+            o.check(total <= base.total_msgs, || {
+                format!("session msgs {total} exceed failure-free {}", base.total_msgs)
+            });
+            let upcorr = rep.metrics.msgs(MsgKind::UpCorrection);
+            o.check(upcorr <= base.upcorr_msgs, || {
+                format!(
+                    "session up-correction msgs {upcorr} exceed failure-free {}",
+                    base.upcorr_msgs
+                )
+            });
+        }
+    }
+    if spec.pattern == FailurePattern::None {
+        o.check(total == base.total_msgs, || {
+            format!("clean session msgs {total} != failure-free {}", base.total_msgs)
+        });
     }
 }
 

@@ -40,7 +40,7 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
          \"collective\":\"{}\",\"n\":{},\"f\":{},\"root\":{},\
          \"scheme\":\"{}\",\"op\":\"{}\",\"payload\":\"{}\",\"net\":\"{}\",\
          \"detect_ns\":{},\"segment_bytes\":{},\"segments\":{},\
-         \"pattern\":\"{}\",\"failures\":\"{}\",\
+         \"session_ops\":{},\"pattern\":\"{}\",\"failures\":\"{}\",\
          \"delivered\":{},\"dead\":[{}],\
          \"msgs\":{},\"upcorr\":{},\"tree\":{},\"bytes\":{},\
          \"final_time_ns\":{},\"makespan_ns\":{},\"attempts\":{},\
@@ -59,6 +59,7 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         spec.detect_latency,
         spec.segment_bytes.map(|b| b.to_string()).unwrap_or_else(|| "null".to_string()),
         spec.num_segments(),
+        spec.session_ops,
         spec.pattern.label(),
         json_escape(&spec.failures_str()),
         s.delivered,
@@ -166,6 +167,21 @@ pub fn summary_table(result: &CampaignResult) -> String {
         out,
         "split: {seg} segmented ({seg_pass} passed) / {mono} monolithic ({mono_pass} passed)"
     );
+    // session split: multi-epoch scenario count, pass count and total
+    // epochs executed — CI greps this line to catch the axis drifting
+    // out of the grid
+    let (mut sess, mut sess_pass, mut epochs) = (0u64, 0u64, 0u64);
+    for (spec, sc) in specs.iter().zip(&result.scenarios) {
+        if spec.is_session() {
+            sess += 1;
+            sess_pass += sc.passed() as u64;
+            epochs += spec.session_ops as u64;
+        }
+    }
+    let _ = writeln!(
+        out,
+        "sessions: {sess} multi-epoch ({sess_pass} passed) / {epochs} epochs total"
+    );
     out
 }
 
@@ -202,6 +218,7 @@ mod tests {
         // the segmented/monolithic split line is always present and its
         // two halves add up to the scenario count
         assert!(table.contains("split: "), "{table}");
+        assert!(table.contains("sessions: "), "{table}");
         let line = table.lines().find(|l| l.starts_with("split: ")).unwrap();
         let nums: Vec<u64> = line
             .split(|c: char| !c.is_ascii_digit())

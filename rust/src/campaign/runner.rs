@@ -118,9 +118,14 @@ pub fn run_scenario(spec: &ScenarioSpec, base: &Baseline) -> (ScenarioResult, Ru
 }
 
 /// Run the scenario's collective on the DES (optionally traced).
+/// Session scenarios (`session_ops > 1`) run the self-healing session
+/// driver; the per-epoch outcomes land in the report in epoch order.
 pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
     let mut cfg = spec.sim_config();
     cfg.trace = trace;
+    if spec.is_session() {
+        return sim::run_session(&cfg, session_kind(spec.collective)).run;
+    }
     match spec.collective {
         Collective::Reduce => sim::run_reduce(&cfg),
         Collective::Allreduce => sim::run_allreduce(&cfg),
@@ -128,9 +133,20 @@ pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
     }
 }
 
+fn session_kind(c: Collective) -> crate::session::OpKind {
+    match c {
+        Collective::Reduce => crate::session::OpKind::Reduce,
+        Collective::Allreduce => crate::session::OpKind::Allreduce,
+        Collective::Broadcast => crate::session::OpKind::Broadcast,
+    }
+}
+
 /// The failure-free baseline counts for a scenario's configuration.
 pub fn baseline_of(spec: &ScenarioSpec) -> Baseline {
     let cfg = spec.baseline_sim_config();
+    if spec.is_session() {
+        return Baseline::of(&sim::run_session(&cfg, session_kind(spec.collective)).run);
+    }
     let rep = match spec.collective {
         Collective::Reduce => sim::run_reduce(&cfg),
         Collective::Allreduce => sim::run_allreduce(&cfg),

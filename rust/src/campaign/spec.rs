@@ -99,6 +99,11 @@ pub enum FailurePattern {
     /// segments — some segments already delivered their contribution,
     /// later ones are still in correction (all-or-nothing per segment).
     MidPipeline { k: u32 },
+    /// Session runs only: timed kills spread over a wide virtual-time
+    /// horizon, so deaths land *between* and *during* different session
+    /// epochs — exercising detection, reporting and exclusion across
+    /// the epoch boundary (docs/SESSIONS.md).
+    EpochSpread { k: u32 },
 }
 
 impl FailurePattern {
@@ -113,6 +118,7 @@ impl FailurePattern {
             FailurePattern::RootKill { k } => format!("rootkill{k}"),
             FailurePattern::CorrectionPhase { k } => format!("corr{k}"),
             FailurePattern::MidPipeline { k } => format!("midpipe{k}"),
+            FailurePattern::EpochSpread { k } => format!("spread{k}"),
         }
     }
 
@@ -127,6 +133,7 @@ impl FailurePattern {
             FailurePattern::RootKill { .. } => "rootkill",
             FailurePattern::CorrectionPhase { .. } => "corr",
             FailurePattern::MidPipeline { .. } => "midpipe",
+            FailurePattern::EpochSpread { .. } => "spread",
         }
     }
 
@@ -140,7 +147,8 @@ impl FailurePattern {
             | FailurePattern::Cascade { k }
             | FailurePattern::RootKill { k }
             | FailurePattern::CorrectionPhase { k }
-            | FailurePattern::MidPipeline { k } => k,
+            | FailurePattern::MidPipeline { k }
+            | FailurePattern::EpochSpread { k } => k,
         }
     }
 }
@@ -167,6 +175,10 @@ pub struct ScenarioSpec {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic).
     pub segment_bytes: Option<u32>,
+    /// Operations per session: 1 = a single stand-alone collective,
+    /// K ≥ 2 = a self-healing session of K operations of `collective`
+    /// over an evolving membership ([`crate::session`]).
+    pub session_ops: u32,
     pub pattern: FailurePattern,
     /// Concrete failure plan instantiated from `pattern` and `seed`.
     pub failures: Vec<FailureSpec>,
@@ -184,6 +196,7 @@ impl ScenarioSpec {
             .failures(self.failures.clone())
             .detect_latency(self.detect_latency);
         cfg.segment_bytes = self.segment_bytes.map(|b| b as usize);
+        cfg.session_ops = self.session_ops;
         cfg.correction = self.correction;
         cfg.seed = self.seed;
         cfg
@@ -192,6 +205,11 @@ impl ScenarioSpec {
     /// Number of segments the payload splits into (1 = monolithic).
     pub fn num_segments(&self) -> u32 {
         segment_count(self.payload, self.n, self.segment_bytes)
+    }
+
+    /// Is this a multi-epoch session scenario?
+    pub fn is_session(&self) -> bool {
+        self.session_ops > 1
     }
 
     /// The same configuration with the failure plan removed — the
@@ -206,7 +224,7 @@ impl ScenarioSpec {
     /// configuration (so the campaign computes each baseline once).
     pub fn baseline_key(&self) -> String {
         format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|sess{}",
             self.collective.name(),
             self.n,
             self.f,
@@ -218,6 +236,7 @@ impl ScenarioSpec {
             self.detect_latency,
             self.correction,
             self.segment_bytes.map_or("mono".to_string(), |b| format!("seg{b}")),
+            self.session_ops,
         )
     }
 
@@ -245,22 +264,11 @@ pub fn scheme_label(s: Scheme) -> &'static str {
     }
 }
 
-/// Segments a payload splits into (1 = monolithic) — pure arithmetic
-/// mirror of [`crate::types::Value::split_segments`]'s chunking (≥ 1
-/// whole element per segment; an empty payload yields one segment).
+/// Segments a payload splits into (1 = monolithic) — delegates to the
+/// shared arithmetic mirror of [`crate::types::Value::split_segments`]
+/// ([`PayloadKind::segment_count`], also used by config validation).
 fn segment_count(payload: PayloadKind, n: u32, segment_bytes: Option<u32>) -> u32 {
-    match segment_bytes {
-        None => 1,
-        Some(bytes) => {
-            let per = (bytes as usize / payload.elem_bytes()).max(1);
-            let len = payload.elems(n);
-            if len == 0 {
-                1
-            } else {
-                ((len + per - 1) / per) as u32
-            }
-        }
-    }
+    payload.segment_count(n, segment_bytes.map(|b| b as usize)) as u32
 }
 
 pub fn payload_label(p: PayloadKind) -> String {
@@ -327,9 +335,23 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         rng.range(0, 6.min(n - 1) as u64) as u32
     };
 
-    // root: allreduce derives its candidate roots 0..=f itself
+    // session axis: ~1 in 5 reduce/allreduce scenarios chain K
+    // operations into a self-healing session over an evolving
+    // membership (docs/SESSIONS.md); grid sessions stay monolithic
+    // (segmented sessions are pinned by unit tests) and use the exact
+    // OneHot/Sum carrier so per-epoch semantics are checkable
+    let session_ops: u32 = if collective != Collective::Broadcast && rng.below(5) == 0 {
+        [2u32, 3, 4][rng.below(3) as usize]
+    } else {
+        1
+    };
+
+    // root: allreduce derives its candidate roots 0..=f itself;
+    // sessions pin the root to 0 (each epoch's root is the smallest
+    // survivor, which stays world rank 0 while the root never fails)
     let root: Rank = match collective {
         Collective::Allreduce => 0,
+        _ if session_ops > 1 => 0,
         _ => rng.below(n as u64) as Rank,
     };
 
@@ -337,13 +359,16 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
 
     // segmentation axis: ~1 in 3 reduce/allreduce scenarios run the
     // pipelined driver (broadcast has no segmented variant)
-    let segmented = collective != Collective::Broadcast && rng.below(3) == 0;
+    let segmented =
+        collective != Collective::Broadcast && session_ops == 1 && rng.below(3) == 0;
 
     // payload/op pairs: OneHot masks require Sum (inclusion counting);
     // segmented scenarios use either the per-segment mask payload (one
     // one-hot block per segment, exact semantics checks) or a dense
     // vector (bandwidth-shaped)
-    let (payload, op, segment_bytes) = if segmented {
+    let (payload, op, segment_bytes) = if session_ops > 1 {
+        (PayloadKind::OneHot, ReduceOp::Sum, None)
+    } else if segmented {
         if rng.below(2) == 0 {
             let segments = [2u32, 3, 4, 8][rng.below(4) as usize];
             // one block of n i64 elements per segment
@@ -377,9 +402,19 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
     // segment count drives the mid-pipeline kill-point range
     let segments = segment_count(payload, n, segment_bytes);
 
-    let pattern = pick_pattern(&mut rng, collective, n, f, root, segments);
-    let failures =
-        instantiate_pattern(&mut rng, pattern, collective, n, f, root, net, segments);
+    let pattern =
+        pick_pattern(&mut rng, collective, n, f, root, segments, session_ops > 1);
+    let failures = instantiate_pattern(
+        &mut rng,
+        pattern,
+        collective,
+        n,
+        f,
+        root,
+        net,
+        segments,
+        detect_latency,
+    );
     debug_assert!(crate::failure::validate_plan(n, &failures).is_ok());
     debug_assert!(failures.len() as u32 <= f);
 
@@ -387,8 +422,13 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         None => String::new(),
         Some(_) => format!("-seg{segments}"),
     };
+    let sess_label = if session_ops > 1 {
+        format!("-sess{session_ops}")
+    } else {
+        String::new()
+    };
     let id = format!(
-        "s{:05}-{}-n{}-f{}-r{}-{}-{}-{}-{}-{}{}",
+        "s{:05}-{}-n{}-f{}-r{}-{}-{}-{}-{}-{}{}{}",
         index,
         collective.name(),
         n,
@@ -400,6 +440,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         net.name(),
         pattern.label(),
         seg_label,
+        sess_label,
     );
 
     ScenarioSpec {
@@ -417,6 +458,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         correction,
         detect_latency,
         segment_bytes,
+        session_ops,
         pattern,
         failures,
     }
@@ -432,6 +474,7 @@ fn victim_pool(collective: Collective, n: u32, f: u32, root: Rank) -> Vec<Rank> 
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn pick_pattern(
     rng: &mut Pcg,
     collective: Collective,
@@ -439,6 +482,7 @@ fn pick_pattern(
     f: u32,
     root: Rank,
     segments: u32,
+    session: bool,
 ) -> FailurePattern {
     let pool_len = victim_pool(collective, n, f, root).len() as u32;
     // Reduce (and allreduce's reduce half) finds a failure-free subtree
@@ -480,6 +524,11 @@ fn pick_pattern(
             let k = rng.range(1, kmax as u64) as u32;
             options.push(FailurePattern::MidPipeline { k });
         }
+        if session {
+            // epoch-spread kills land between and during session epochs
+            let k = rng.range(1, kmax as u64) as u32;
+            options.push(FailurePattern::EpochSpread { k });
+        }
     }
     if rootkill_max >= 1 {
         let k = rng.range(1, rootkill_max as u64) as u32;
@@ -504,6 +553,7 @@ fn instantiate_pattern(
     root: Rank,
     net: NetKind,
     segments: u32,
+    detect_latency: TimeNs,
 ) -> Vec<FailureSpec> {
     let pool = victim_pool(collective, n, f, root);
     let pick_victims = |rng: &mut Pcg, k: u32| -> Vec<Rank> {
@@ -564,6 +614,22 @@ fn instantiate_pattern(
                 .map(|rank| FailureSpec::AfterSends {
                     rank,
                     sends: rng.range(1, span) as u32,
+                })
+                .collect()
+        }
+        FailurePattern::EpochSpread { k } => {
+            // one session epoch costs a few tree depths of latency plus
+            // (under failures) a detection timeout; stepping the kills
+            // by a few such units spreads them across epoch boundaries —
+            // some land mid-epoch, some between epochs, some after the
+            // whole session (a no-op kill the oracles must also absorb)
+            let step = detect_latency.max(1) + lat * rng.range(4, 40);
+            pick_victims(rng, k)
+                .into_iter()
+                .enumerate()
+                .map(|(j, rank)| FailureSpec::AtTime {
+                    rank,
+                    at: step * (j as u64 + 1) + rng.below(lat),
                 })
                 .collect()
         }
@@ -650,14 +716,56 @@ mod tests {
         for c in [Collective::Reduce, Collective::Allreduce, Collective::Broadcast] {
             assert!(specs.iter().any(|s| s.collective == c), "{c:?} missing");
         }
-        for fam in
-            ["clean", "pre", "inop", "storm", "cascade", "rootkill", "corr", "midpipe"]
-        {
+        for fam in [
+            "clean", "pre", "inop", "storm", "cascade", "rootkill", "corr", "midpipe",
+            "spread",
+        ] {
             assert!(
                 specs.iter().any(|s| s.pattern.family() == fam),
                 "pattern family {fam} missing from 1000-scenario grid"
             );
         }
+    }
+
+    #[test]
+    fn grid_covers_session_scenarios() {
+        let specs = generate(&GridConfig { count: 200, seed: 7, max_n: 128 });
+        let sessions: Vec<_> = specs.iter().filter(|s| s.is_session()).collect();
+        assert!(
+            sessions.len() >= 15,
+            "only {} of 200 scenarios are sessions — grid drifted",
+            sessions.len()
+        );
+        assert!(
+            sessions.iter().any(|s| s.session_ops >= 3),
+            "no session with K >= 3 operations"
+        );
+        for s in &sessions {
+            assert_ne!(s.collective, Collective::Broadcast, "{}", s.id);
+            assert_eq!(s.root, 0, "{}: session root must be 0", s.id);
+            assert_eq!(s.payload, PayloadKind::OneHot, "{}", s.id);
+            assert!(s.segment_bytes.is_none(), "{}: grid sessions are monolithic", s.id);
+            assert!(s.id.contains("-sess"), "{} lacks session label", s.id);
+            assert!((2..=4).contains(&s.session_ops), "{}", s.id);
+        }
+        // epoch-spread kills only ever appear on sessions; presence at
+        // scale is asserted on a 1000-scenario grid (generation is pure
+        // and cheap — no simulation runs here)
+        let big = generate(&GridConfig { count: 1000, seed: 7, max_n: 128 });
+        for s in specs.iter().chain(&big) {
+            if s.pattern.family() == "spread" {
+                assert!(s.is_session(), "{}: spread pattern outside a session", s.id);
+            }
+        }
+        assert!(
+            big.iter().any(|s| s.pattern.family() == "spread"),
+            "no epoch-spread scenario in 1000"
+        );
+        // failures both pre/at-start and timed-across-epochs exist
+        assert!(
+            sessions.iter().any(|s| !s.failures.is_empty()),
+            "every session scenario is failure-free"
+        );
     }
 
     #[test]

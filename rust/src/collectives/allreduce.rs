@@ -42,6 +42,14 @@ pub struct AllreduceConfig {
     /// least `f+1` ranks from the set known not to fail in-operationally.
     pub candidates: Vec<Rank>,
     pub op_id: u64,
+    /// First wire epoch of this operation. Attempt `t` is tagged
+    /// `base_epoch + t`, so the operation owns the epoch band
+    /// `[base_epoch, base_epoch + candidates.len())`. Standalone
+    /// allreduce uses 0; the session layer ([`crate::session`]) hands
+    /// each operation of a session its own band so late messages from a
+    /// finished operation can never be mistaken for a later one even
+    /// when op ids are reused.
+    pub base_epoch: u32,
 }
 
 impl AllreduceConfig {
@@ -56,6 +64,7 @@ impl AllreduceConfig {
             correction: CorrectionMode::Always,
             candidates,
             op_id: 1,
+            base_epoch: 0,
         }
     }
 
@@ -115,36 +124,58 @@ pub struct Allreduce {
     cfg: AllreduceConfig,
     /// This process's contribution (cloned into each attempt's reduce).
     data: Value,
-    /// Current attempt index into `cfg.candidates`.
+    /// Current wire epoch (`base_epoch + attempt index`).
     epoch: u32,
     reduce: Option<Reduce>,
     bcast: Option<Broadcast>,
-    /// Messages from future epochs, replayed on catch-up.
+    /// Messages from future in-band epochs, replayed on catch-up.
     buffered: Vec<(Rank, Msg)>,
     rank: Rank,
     delivered: bool,
     /// Terminal error delivered (candidates exhausted).
     errored: bool,
+    /// Failure report of the winning attempt's reduce (root only) — the
+    /// §4.4 list the session layer folds into its membership.
+    report: Vec<Rank>,
 }
 
 impl Allreduce {
     pub fn new(cfg: AllreduceConfig, data: Value) -> Self {
         assert!(!cfg.candidates.is_empty(), "need at least one candidate root");
+        let epoch = cfg.base_epoch;
         Allreduce {
             cfg,
             data,
-            epoch: 0,
+            epoch,
             reduce: None,
             bcast: None,
             buffered: Vec::new(),
             rank: 0,
             delivered: false,
             errored: false,
+            report: Vec::new(),
         }
     }
 
+    /// Current attempt index into `cfg.candidates`.
+    fn attempt(&self) -> u32 {
+        self.epoch - self.cfg.base_epoch
+    }
+
+    /// First epoch past this operation's band.
+    fn band_end(&self) -> u32 {
+        self.cfg.base_epoch + self.cfg.candidates.len() as u32
+    }
+
     fn current_root(&self) -> Rank {
-        self.cfg.candidates[self.epoch as usize]
+        self.cfg.candidates[self.attempt() as usize]
+    }
+
+    /// The `known_failed` report the winning attempt's reduce delivered
+    /// at this process (non-empty only at the winning root, and only
+    /// under an id-carrying failure-information scheme).
+    pub fn known_failed(&self) -> &[Rank] {
+        &self.report
     }
 
     /// True once the current attempt's reduce half has left its
@@ -237,9 +268,10 @@ impl Allreduce {
                     // our subtree duties for this attempt are complete;
                     // nothing to do — the broadcast half is already live
                 }
-                Outcome::ReduceRoot { value, .. } => {
+                Outcome::ReduceRoot { value, known_failed } => {
                     // we are the attempt's root: broadcast the result
                     debug_assert_eq!(self.rank, self.current_root());
+                    self.report = known_failed;
                     let bcfg = BcastConfig {
                         n: self.cfg.n,
                         f: self.cfg.f,
@@ -262,7 +294,10 @@ impl Allreduce {
                         if self.rank != self.current_root() {
                             ctx.unwatch(self.current_root());
                         }
-                        ctx.deliver(Outcome::Allreduce { value, attempts: self.epoch + 1 });
+                        ctx.deliver(Outcome::Allreduce {
+                            value,
+                            attempts: self.attempt() + 1,
+                        });
                     }
                 }
                 Outcome::Error(e) => {
@@ -280,7 +315,7 @@ impl Allreduce {
 
     fn rotate(&mut self, ctx: &mut dyn Ctx) {
         self.epoch += 1;
-        if (self.epoch as usize) >= self.cfg.candidates.len() {
+        if (self.attempt() as usize) >= self.cfg.candidates.len() {
             if !self.delivered && !self.errored {
                 self.errored = true;
                 ctx.deliver(Outcome::Error(ProtoError::RootCandidatesExhausted(
@@ -301,6 +336,13 @@ impl Protocol for Allreduce {
 
     fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
         if msg.op != self.cfg.op_id || self.errored {
+            return;
+        }
+        if msg.epoch < self.cfg.base_epoch || msg.epoch >= self.band_end() {
+            // outside this operation's epoch band: traffic of a
+            // different operation generation reusing the op id — drop.
+            // (Buffering it would hold it forever: rotation can never
+            // reach an out-of-band epoch.)
             return;
         }
         if msg.epoch < self.epoch {
@@ -466,6 +508,49 @@ mod tests {
         // further notifications are swallowed
         a2.on_peer_failed(1, &mut c2);
         assert_eq!(c2.delivered.len(), 1);
+    }
+
+    /// Regression (epoch-band guard): traffic beyond this operation's
+    /// epoch band — a later operation generation reusing the op id —
+    /// must be dropped, not buffered for replay.
+    #[test]
+    fn out_of_band_epochs_are_dropped_not_buffered() {
+        let mut c2 = TestCtx::new(2, 3);
+        let mut a2 = Allreduce::new(AllreduceConfig::new(3, 1), scalar(2.0));
+        a2.on_start(&mut c2);
+        c2.take_sent();
+        // candidates [0,1] → band [0,2); epoch 5 is another generation
+        a2.on_message(1, m(MsgKind::BcastTree, 5, 99.0), &mut c2);
+        a2.on_peer_failed(0, &mut c2); // catch up to the last in-band epoch
+        assert!(c2.delivered.is_empty(), "out-of-band value must never deliver");
+    }
+
+    /// Regression (session epochs): with a nonzero `base_epoch` the
+    /// operation tags the band `[base, base+candidates)`, drops stale
+    /// pre-band traffic, and still counts attempts from 1.
+    #[test]
+    fn base_epoch_shifts_the_band() {
+        let mut c2 = TestCtx::new(2, 3);
+        let mut cfg = AllreduceConfig::new(3, 1);
+        cfg.base_epoch = 10; // band [10, 12)
+        let mut a2 = Allreduce::new(cfg, scalar(2.0));
+        a2.on_start(&mut c2);
+        let sent = c2.take_sent();
+        assert!(!sent.is_empty());
+        assert!(sent.iter().all(|(_, m)| m.epoch == 10));
+        // stale traffic from the previous operation generation (epoch 0,
+        // same op id) must be dropped — this is exactly the cross-epoch
+        // confusion a session with reused op ids would otherwise hit
+        a2.on_message(0, m(MsgKind::BcastTree, 0, 77.0), &mut c2);
+        assert!(c2.delivered.is_empty());
+        a2.on_message(0, m(MsgKind::BcastTree, 10, 50.0), &mut c2);
+        match &c2.delivered[0] {
+            Outcome::Allreduce { value, attempts } => {
+                assert_eq!(value.as_f64_scalar(), 50.0);
+                assert_eq!(*attempts, 1, "attempts count from the band start");
+            }
+            o => panic!("unexpected {o:?}"),
+        }
     }
 
     /// Delivery happens at most once even if duplicate broadcast values

@@ -173,6 +173,12 @@ pub trait Protocol: Send {
     fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx);
     /// A timer armed via [`Ctx::set_timer`] fired.
     fn on_timer(&mut self, _token: u64, _ctx: &mut dyn Ctx) {}
+    /// Downcast hook for executors that inspect protocol state after a
+    /// run (the session layer exposes per-process membership views this
+    /// way). Protocols without post-run state keep the `None` default.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 }
 
 #[cfg(test)]

@@ -169,6 +169,13 @@ impl Pipelined {
         assert!(base_op >= 1, "pipelined base op must be >= 1");
         let segments = input.split_segments(segment_bytes);
         let s = segments.len();
+        // backstop for the seg_op framing bound; configs that can hit it
+        // are rejected earlier by SimConfig/EngineConfig/Config validation
+        assert!(
+            (s as u64) <= segment::MAX_SEGMENTS,
+            "payload splits into {s} segments, over the {} framing limit",
+            segment::MAX_SEGMENTS
+        );
         Pipelined {
             spec,
             base_op,
@@ -189,6 +196,25 @@ impl Pipelined {
     /// Number of segments this payload was split into.
     pub fn num_segments(&self) -> usize {
         self.segments.len()
+    }
+
+    /// Union of the per-segment allreduce failure reports captured at
+    /// this process (sorted, deduped). Non-empty only at ranks that
+    /// rooted some segment's winning attempt — best-effort by design:
+    /// segments may elect different winning roots, and each root only
+    /// holds its own segments' reports. The session layer folds
+    /// whatever the sync root has (§4.4 exclusion is an optimization,
+    /// never a correctness requirement).
+    pub fn allreduce_report(&self) -> Vec<Rank> {
+        let mut out = Vec::new();
+        for inst in self.insts.iter().flatten() {
+            if let SegInst::A(a) = inst {
+                out.extend_from_slice(a.known_failed());
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
     }
 
     fn make_inst(&self, s: usize) -> SegInst {
@@ -315,6 +341,21 @@ impl Protocol for Pipelined {
             return; // not segment-framed: another operation's traffic
         };
         if segment::base_op(msg.op) != self.base_op {
+            return;
+        }
+        // epoch-band guard: with op ids reused across session epochs, a
+        // late message from a finished epoch must not sit in the future-
+        // segment buffer of the next epoch's pipeline (the inner state
+        // machines would reject it on replay, but only after it was
+        // held — and an out-of-band message must never be held at all)
+        let in_band = match &self.spec {
+            PipelineSpec::Reduce(cfg) => msg.epoch == cfg.epoch,
+            PipelineSpec::Allreduce(cfg) => {
+                msg.epoch >= cfg.base_epoch
+                    && msg.epoch < cfg.base_epoch + cfg.candidates.len() as u32
+            }
+        };
+        if !in_band {
             return;
         }
         let s = s as usize;
@@ -491,6 +532,50 @@ mod tests {
         assert_eq!(treeups, vec![Some(0), Some(1)]);
         assert_eq!(ctx.delivered.len(), 1); // aggregate ReduceDone
         assert!(matches!(ctx.delivered[0], Outcome::ReduceDone));
+    }
+
+    /// Regression (cross-epoch stale messages): with op ids reused
+    /// across session epochs, a stale-epoch message must never act on a
+    /// later epoch's pipeline — neither on a started segment (inner
+    /// guard) nor via the future-segment buffer (band guard here).
+    #[test]
+    fn stale_epoch_segment_messages_never_act() {
+        let mut ctx = TestCtx::new(3, 7);
+        let mut cfg = ReduceConfig::new(7, 1);
+        cfg.epoch = 4; // session epoch 4, base op id 1 reused
+        let mut p = Pipelined::reduce(cfg, masks(7, 3, 2), 7 * 8);
+        p.on_start(&mut ctx);
+        ctx.take_sent();
+
+        // stale epoch-0 answer for the not-yet-started segment 1
+        let mut stale = TestCtx::msg(MsgKind::UpCorrection, 0.0);
+        stale.op = segment::seg_op(1, 1);
+        stale.payload = masks(7, 4, 2).split_segments(7 * 8)[1].clone();
+        p.on_message(4, stale, &mut ctx);
+        // and a stale answer for the started segment 0
+        let mut stale0 = TestCtx::msg(MsgKind::UpCorrection, 0.0);
+        stale0.op = segment::seg_op(1, 0);
+        stale0.payload = masks(7, 4, 2).split_segments(7 * 8)[0].clone();
+        p.on_message(4, stale0, &mut ctx);
+        assert!(ctx.take_sent().is_empty(), "stale epoch must not advance anything");
+
+        // the current-epoch seg-0 answer completes segment 0 and starts
+        // segment 1 — which must NOT have been completed by the stale
+        // seg-1 message (no seg-1 TreeUp), only send its own up-corr
+        let mut m0 = TestCtx::msg(MsgKind::UpCorrection, 0.0);
+        m0.epoch = 4;
+        m0.op = segment::seg_op(1, 0);
+        m0.payload = masks(7, 4, 2).split_segments(7 * 8)[0].clone();
+        p.on_message(4, m0, &mut ctx);
+        let kinds: Vec<(MsgKind, Option<u32>)> = ctx
+            .take_sent()
+            .iter()
+            .map(|(_, m)| (m.kind, segment::seg_index(m.op)))
+            .collect();
+        assert!(kinds.contains(&(MsgKind::TreeUp, Some(0))), "{kinds:?}");
+        assert!(kinds.contains(&(MsgKind::UpCorrection, Some(1))), "{kinds:?}");
+        assert!(!kinds.contains(&(MsgKind::TreeUp, Some(1))), "{kinds:?}");
+        assert!(ctx.delivered.is_empty());
     }
 
     /// Aggregate root delivery: per-segment reports union, values

@@ -65,6 +65,27 @@ impl PayloadKind {
     pub fn elems(&self, n: u32) -> usize {
         self.wire_bytes(n) / self.elem_bytes()
     }
+
+    /// Segments one payload of this kind splits into under
+    /// `segment_bytes` (1 = monolithic) — the arithmetic mirror of
+    /// [`Value::split_segments`]'s chunking (≥ 1 whole element per
+    /// segment; an empty payload yields one segment). Used at config-
+    /// validation time to reject segment counts that would overflow the
+    /// op-id framing ([`crate::types::segment::MAX_SEGMENTS`]).
+    pub fn segment_count(&self, n: u32, segment_bytes: Option<usize>) -> u64 {
+        match segment_bytes {
+            None => 1,
+            Some(bytes) => {
+                let per = (bytes / self.elem_bytes()).max(1);
+                let len = self.elems(n);
+                if len == 0 {
+                    1
+                } else {
+                    ((len + per - 1) / per) as u64
+                }
+            }
+        }
+    }
 }
 
 /// Top-level configuration for a single collective run (CLI/TOML-facing;
@@ -82,6 +103,9 @@ pub struct Config {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic). Broadcast and the baselines ignore it.
     pub segment_bytes: Option<u32>,
+    /// Operations per session (`ftcoll session --ops K`); 1 = a single
+    /// stand-alone collective. See [`crate::session`].
+    pub session_ops: u32,
 }
 
 impl Default for Config {
@@ -96,6 +120,7 @@ impl Default for Config {
             failures: Vec::new(),
             seed: 1,
             segment_bytes: None,
+            session_ops: 1,
         }
     }
 }
@@ -167,6 +192,9 @@ impl Config {
             "segment_bytes" | "segment-bytes" => {
                 self.segment_bytes = Some(num(value)?);
             }
+            "session_ops" | "ops" => {
+                self.session_ops = num(value)?;
+            }
             "fail" => {
                 let parts: Vec<&str> = value.split(':').collect();
                 let spec = match parts.as_slice() {
@@ -198,6 +226,20 @@ impl Config {
             if segments == 0 {
                 return Err("segmask payload needs >= 1 segment".into());
             }
+        }
+        if self.session_ops == 0 {
+            return Err("session needs >= 1 operation (--ops)".into());
+        }
+        // cap the derived segment count at the op-id framing limit: past
+        // it, seg_op would abort (and in a release build without the
+        // hard assert it used to silently alias another operation)
+        let segs = self.payload.segment_count(self.n, self.segment_bytes.map(|b| b as usize));
+        if segs > crate::types::segment::MAX_SEGMENTS {
+            return Err(format!(
+                "payload splits into {segs} segments, over the op-id framing limit of {} — \
+                 raise segment_bytes",
+                crate::types::segment::MAX_SEGMENTS
+            ));
         }
         crate::failure::validate_plan(self.n, &self.failures)
     }
@@ -285,6 +327,47 @@ mod tests {
         cfg.validate().unwrap();
         assert!(Config::parse("segment_bytes = 0").unwrap().validate().is_err());
         assert!(Config::parse("payload = segmask:0").unwrap().validate().is_err());
+    }
+
+    /// Regression (release-mode op-id aliasing): a segment_bytes that
+    /// would split the payload into more segments than the op-id framing
+    /// can address must be rejected at validation time, before any
+    /// protocol is built.
+    #[test]
+    fn validate_caps_segment_count_at_framing_limit() {
+        let mut cfg = Config::default();
+        cfg.payload = PayloadKind::VectorF32 { len: 8_000_000 }; // 8M elems
+        cfg.segment_bytes = Some(4); // 1 element per segment → 8M segments
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("framing limit"), "{err}");
+        // a sane segment size for the same payload passes
+        cfg.segment_bytes = Some(64 * 1024);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn segment_count_mirrors_split() {
+        for (payload, n, bytes) in [
+            (PayloadKind::RankValue, 8u32, Some(4usize)),
+            (PayloadKind::OneHot, 7, Some(24)),
+            (PayloadKind::VectorF32 { len: 1000 }, 4, Some(256)),
+            (PayloadKind::SegMask { segments: 5 }, 6, Some(48)),
+            (PayloadKind::OneHot, 9, None),
+        ] {
+            let actual = payload.initial(0, n).split_segments(bytes.unwrap_or(usize::MAX)).len();
+            assert_eq!(
+                payload.segment_count(n, bytes),
+                actual as u64,
+                "{payload:?} n={n} bytes={bytes:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_session_ops() {
+        let cfg = Config::parse("ops = 4\n").unwrap();
+        assert_eq!(cfg.session_ops, 4);
+        assert!(Config::parse("session_ops = 0").unwrap().validate().is_err());
     }
 
     #[test]

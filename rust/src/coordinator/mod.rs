@@ -61,6 +61,11 @@ pub struct EngineConfig {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic) — same semantics as [`crate::sim::SimConfig`].
     pub segment_bytes: Option<usize>,
+    /// First wire epoch of a single-collective run (sessions manage
+    /// their own epoch bands). 0 for stand-alone operations.
+    pub base_epoch: u32,
+    /// Operations per session ([`live_session`]); 1 elsewhere.
+    pub session_ops: u32,
 }
 
 impl EngineConfig {
@@ -76,7 +81,25 @@ impl EngineConfig {
             candidates: None,
             detect_delay: 0,
             segment_bytes: None,
+            base_epoch: 0,
+            session_ops: 1,
         }
+    }
+
+    /// Mirror of [`crate::sim::SimConfig::validate`]: reject segment
+    /// counts past the op-id framing limit before any worker spawns.
+    pub fn validate(&self) -> Result<(), String> {
+        let segs = self.payload.segment_count(self.n, self.segment_bytes);
+        if segs > crate::types::segment::MAX_SEGMENTS {
+            return Err(format!(
+                "payload splits into {segs} segments, over the op-id framing limit of {}",
+                crate::types::segment::MAX_SEGMENTS
+            ));
+        }
+        if self.session_ops == 0 {
+            return Err("session_ops must be >= 1".into());
+        }
+        Ok(())
     }
 }
 
@@ -86,7 +109,10 @@ pub struct LiveReport {
     pub n: u32,
     /// First delivery per rank (`None` for failed / undelivered ranks).
     pub outcomes: Vec<Option<Outcome>>,
-    /// Delivery timestamps (ns since engine start).
+    /// Every delivery per rank, in delivery order — one per session
+    /// epoch for session runs, at most one elsewhere.
+    pub deliveries: Vec<Vec<Outcome>>,
+    /// First-delivery timestamps (ns since engine start).
     pub delivered_at: Vec<Option<TimeNs>>,
     /// Aggregated worker metrics.
     pub metrics: Metrics,
@@ -107,6 +133,24 @@ pub fn run_live<F>(cfg: &EngineConfig, make_proto: F) -> LiveReport
 where
     F: Fn(Rank, Value) -> Box<dyn Protocol>,
 {
+    run_live_n(cfg, 1, make_proto)
+}
+
+/// [`run_live`] generalized to protocols that deliver more than once per
+/// rank (session epochs): collection finishes when every live rank has
+/// delivered `deliveries_per_rank` outcomes, delivered a terminal
+/// [`Outcome::Error`], or died. Out-of-contract runs where a *peer's*
+/// error silently starves a rank (e.g. a session root halting before
+/// its membership sync) fall back to the 120 s watchdog — the paper
+/// makes no liveness promise past `f` failures.
+pub fn run_live_n<F>(cfg: &EngineConfig, deliveries_per_rank: u32, make_proto: F) -> LiveReport
+where
+    F: Fn(Rank, Value) -> Box<dyn Protocol>,
+{
+    if let Err(e) = cfg.validate() {
+        panic!("invalid EngineConfig: {e}");
+    }
+    let expected = deliveries_per_rank.max(1);
     let t0 = std::time::Instant::now();
     let (router, receivers) = Router::new(cfg.n);
     let monitor = Monitor::new(router.clone(), cfg.detect_delay);
@@ -160,38 +204,49 @@ where
     // workers start their protocols themselves (before reading their
     // mailbox) — no Start envelope, so no message/start race
 
-    // collect: first delivery per live rank, then stop the world
-    let mut outcomes: Vec<Option<Outcome>> = (0..cfg.n).map(|_| None).collect();
+    // collect: `expected` deliveries per live rank (or a terminal
+    // error — a session halts after delivering one), then stop the world
+    let mut deliveries: Vec<Vec<Outcome>> = (0..cfg.n).map(|_| Vec::new()).collect();
     let mut delivered_at: Vec<Option<TimeNs>> = vec![None; cfg.n as usize];
     let mut metrics = Metrics::new();
-    let mut delivered = 0u32;
+    let mut rank_done = vec![false; cfg.n as usize];
+    let mut finished = 0u32; // ranks with all `expected` deliveries (or an error)
     let mut exited = 0u32;
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
-    // ranks that died *in-operation* never deliver; count them so the
+    // ranks that died *in-operation* never finish; count them so the
     // collection loop terminates (pre-dead ranks were never in `live`)
-    let inop_dead = |outcomes: &[Option<Outcome>]| {
+    let inop_dead = |rank_done: &[bool]| {
         monitor
             .dead_ranks()
             .into_iter()
-            .filter(|&r| !pre_dead[r as usize] && outcomes[r as usize].is_none())
+            .filter(|&r| !pre_dead[r as usize] && !rank_done[r as usize])
             .count() as u32
     };
-    while delivered + inop_dead(&outcomes) < live && exited < live {
+    while finished + inop_dead(&rank_done) < live && exited < live {
         let timeout = deadline.saturating_duration_since(std::time::Instant::now());
         if timeout.is_zero() {
-            // engine-level watchdog; undelivered ranks stay None
+            // engine-level watchdog; unfinished ranks keep partial results
             eprintln!(
-                "ftcoll engine watchdog: {}/{} live ranks delivered after 120s — aborting collection",
-                delivered, live
+                "ftcoll engine watchdog: {}/{} live ranks finished after 120s — aborting collection",
+                finished, live
             );
             break;
         }
         match ev_rx.recv_timeout(timeout.min(std::time::Duration::from_millis(100))) {
             Ok(WorkerEvent::Delivered { rank, outcome, at }) => {
-                if outcomes[rank as usize].is_none() {
-                    outcomes[rank as usize] = Some(outcome);
-                    delivered_at[rank as usize] = Some(at);
-                    delivered += 1;
+                let r = rank as usize;
+                if !rank_done[r] {
+                    // a terminal error ends the rank's session early —
+                    // no further deliveries will come
+                    let terminal = matches!(outcome, Outcome::Error(_));
+                    deliveries[r].push(outcome);
+                    if delivered_at[r].is_none() {
+                        delivered_at[r] = Some(at);
+                    }
+                    if terminal || deliveries[r].len() as u32 == expected {
+                        rank_done[r] = true;
+                        finished += 1;
+                    }
                 }
             }
             Ok(WorkerEvent::Exited { metrics: m, .. }) => {
@@ -214,7 +269,9 @@ where
     for h in handles {
         let _ = h.join();
     }
-    LiveReport { n: cfg.n, outcomes, delivered_at, metrics, elapsed: t0.elapsed() }
+    let outcomes: Vec<Option<Outcome>> =
+        deliveries.iter().map(|v| v.first().cloned()).collect();
+    LiveReport { n: cfg.n, outcomes, deliveries, delivered_at, metrics, elapsed: t0.elapsed() }
 }
 
 /// Live fault-tolerant reduce (segmented/pipelined when
@@ -223,8 +280,9 @@ where
 pub fn live_reduce(cfg: &EngineConfig, root: Rank) -> LiveReport {
     let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
     let seg = cfg.segment_bytes;
+    let epoch = cfg.base_epoch;
     run_live(cfg, move |_, input| {
-        let rcfg = ReduceConfig { n, f, root, scheme, op_id: 1, epoch: 0 };
+        let rcfg = ReduceConfig { n, f, root, scheme, op_id: 1, epoch };
         match seg {
             Some(bytes) => Box::new(Pipelined::reduce(rcfg, input, bytes)) as Box<dyn Protocol>,
             None => Box::new(Reduce::new(rcfg, input)),
@@ -239,9 +297,11 @@ pub fn live_allreduce(cfg: &EngineConfig) -> LiveReport {
     let correction = cfg.correction;
     let candidates = cfg.candidates.clone();
     let seg = cfg.segment_bytes;
+    let base_epoch = cfg.base_epoch;
     run_live(cfg, move |_, input| {
         let mut acfg = AllreduceConfig::new(n, f).scheme(scheme);
         acfg.correction = correction;
+        acfg.base_epoch = base_epoch;
         if let Some(c) = &candidates {
             acfg = acfg.candidates(c.clone());
         }
@@ -251,6 +311,32 @@ pub fn live_allreduce(cfg: &EngineConfig) -> LiveReport {
             }
             None => Box::new(Allreduce::new(acfg, input)),
         }
+    })
+}
+
+/// Live self-healing session: `cfg.session_ops` operations of `kind`
+/// over an evolving membership — the same [`Session`] state machine the
+/// DES runs ([`crate::sim::run_session`]), driven by the threaded
+/// engine. The report carries one delivery per completed epoch in
+/// `deliveries`.
+pub fn live_session(cfg: &EngineConfig, kind: crate::session::OpKind) -> LiveReport {
+    let ops: Vec<crate::session::OpKind> =
+        vec![kind; cfg.session_ops.max(1) as usize];
+    let k = ops.len() as u32;
+    let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
+    let correction = cfg.correction;
+    let seg = cfg.segment_bytes;
+    run_live_n(cfg, k, move |_, input| {
+        let scfg = crate::session::SessionConfig {
+            n,
+            f,
+            scheme,
+            correction,
+            ops: ops.clone(),
+            base_op: 1,
+            segment_bytes: seg,
+        };
+        Box::new(crate::session::Session::new(scfg, input)) as Box<dyn Protocol>
     })
 }
 
@@ -324,6 +410,34 @@ mod tests {
         for r in 1..8 {
             if r != 5 {
                 assert!(matches!(rep.outcomes[r as usize], Some(Outcome::ReduceDone)));
+            }
+        }
+    }
+
+    #[test]
+    fn live_session_excludes_and_completes_all_epochs() {
+        let mut cfg = EngineConfig::new(8, 2);
+        cfg.payload = PayloadKind::OneHot;
+        cfg.failures = vec![FailureSpec::Pre { rank: 3 }, FailureSpec::Pre { rank: 6 }];
+        cfg.session_ops = 3;
+        let rep = live_session(&cfg, crate::session::OpKind::Reduce);
+        for r in 0..8u32 {
+            if r == 3 || r == 6 {
+                assert!(rep.deliveries[r as usize].is_empty(), "dead rank {r} delivered");
+                continue;
+            }
+            assert_eq!(rep.deliveries[r as usize].len(), 3, "rank {r}");
+        }
+        for (e, out) in rep.deliveries[0].iter().enumerate() {
+            match out {
+                Outcome::ReduceRoot { value, .. } => {
+                    let counts = value.inclusion_counts();
+                    for r in 0..8usize {
+                        let want = if r == 3 || r == 6 { 0 } else { 1 };
+                        assert_eq!(counts[r], want, "epoch {e} rank {r}");
+                    }
+                }
+                o => panic!("epoch {e}: unexpected {o:?}"),
             }
         }
     }

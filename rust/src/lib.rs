@@ -9,7 +9,9 @@
 //!   fault-tolerant reduce ([`collectives::reduce`]), the corrected-tree
 //!   broadcast substrate ([`collectives::broadcast`]) and the root-rotating
 //!   allreduce ([`collectives::allreduce`]), written as executor-agnostic
-//!   event-driven state machines. Two executors drive them: a deterministic
+//!   event-driven state machines. The [`session`] layer chains K such
+//!   operations over an evolving membership, excluding reported failures
+//!   between epochs (§4.4; docs/SESSIONS.md). Two executors drive them: a deterministic
 //!   discrete-event simulator ([`sim`]) and a live multi-threaded
 //!   message-passing engine ([`coordinator`]). The [`campaign`] subsystem
 //!   sweeps thousands of generated (n, f, scheme, failure-pattern, net)
@@ -55,6 +57,7 @@ pub mod metrics;
 pub mod prng;
 pub mod proptest_lite;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod topology;
 pub mod trace;
@@ -68,7 +71,11 @@ pub mod prelude {
     pub use crate::collectives::{CollectiveKind, Outcome, ReduceOp};
     pub use crate::config::{Config, PayloadKind};
     pub use crate::failure::FailureSpec;
+    pub use crate::session::{OpKind, Session, SessionConfig, SessionView};
     pub use crate::sim::net::NetModel;
-    pub use crate::sim::{run_allreduce, run_broadcast, run_reduce, RunReport, Sim, SimConfig};
+    pub use crate::sim::{
+        run_allreduce, run_broadcast, run_reduce, run_session, RunReport, SessionReport, Sim,
+        SimConfig,
+    };
     pub use crate::types::{Rank, Value};
 }

@@ -35,6 +35,7 @@ fn main() {
         "reduce" | "allreduce" | "broadcast" => run_sim(&args),
         "baseline" => run_baseline(&args),
         "campaign" => run_campaign_cmd(&args),
+        "session" => run_session_cmd(&args),
         "live" => run_live_cmd(&args),
         "topology" => run_topology(&args),
         "artifacts" => run_artifacts(&args),
@@ -73,6 +74,12 @@ USAGE: ftcoll <subcommand> [options]
              — deterministic scenario sweep (incl. segmented/pipelined
              and mid-pipeline-failure scenarios) checked by paper-
              semantics oracles; any failing scenario is replayable by id
+  session    --ops 3 [--algo reduce|allreduce|broadcast] [--live]
+             + the reduce options except --root (epochs always root at
+             the smallest survivor) — run K operations as a self-healing
+             session: failures reported by operation k are excluded
+             from operation k+1, which runs on the dense survivors
+             (docs/SESSIONS.md)
   live       --algo reduce|allreduce [--segment-bytes N] [--pjrt]
              — threaded engine run
   topology   --n 16 --f 2 — print up-correction groups and I(f)-tree
@@ -281,6 +288,95 @@ fn replay_scenario(
         // a failing replay exits nonzero, like the sweep under --check-oracles
         Err(format!("{} oracle violation(s) in {}", o.violations.len(), spec.id))
     }
+}
+
+fn run_session_cmd(args: &Args) -> Result<(), String> {
+    let algo = args.get("algo").unwrap_or("reduce").to_string();
+    let live = args.flag("live");
+    let trace = args.flag("trace");
+    let cfg = build_config(args)?;
+    let ops: u32 = match args.get("ops") {
+        Some(v) => v.parse().map_err(|_| format!("bad value `{v}` for --ops"))?,
+        None => {
+            if cfg.session_ops > 1 {
+                cfg.session_ops
+            } else {
+                3
+            }
+        }
+    };
+    args.finish().map_err(|e| e.to_string())?;
+    if ops == 0 {
+        return Err("--ops must be >= 1".into());
+    }
+    if cfg.root != 0 {
+        // sessions always root each epoch at the smallest survivor
+        // (world rank 0 while it lives) — a requested root would be
+        // silently ignored, so reject it instead
+        return Err(format!(
+            "`session` roots every epoch at rank 0 (the smallest survivor); \
+             --root {} is not supported here",
+            cfg.root
+        ));
+    }
+    let kind = match algo.as_str() {
+        "reduce" => ftcoll::session::OpKind::Reduce,
+        "allreduce" => ftcoll::session::OpKind::Allreduce,
+        "broadcast" => ftcoll::session::OpKind::Broadcast,
+        other => return Err(format!("unknown session algo `{other}`")),
+    };
+
+    if live {
+        let mut ecfg = EngineConfig::new(cfg.n, cfg.f);
+        ecfg.scheme = cfg.scheme;
+        ecfg.payload = cfg.payload;
+        ecfg.failures = cfg.failures.clone();
+        ecfg.segment_bytes = cfg.segment_bytes.map(|b| b as usize);
+        ecfg.session_ops = ops;
+        let rep = ftcoll::coordinator::live_session(&ecfg, kind);
+        println!(
+            "live session: {} ranks x {} ops, {} msgs, {:?} elapsed",
+            rep.n,
+            ops,
+            rep.metrics.total_msgs(),
+            rep.elapsed
+        );
+        for r in 0..rep.n {
+            let epochs = rep.deliveries[r as usize].len();
+            if epochs > 0 {
+                println!("rank {r}: {epochs}/{ops} epochs delivered");
+            }
+        }
+        return Ok(());
+    }
+
+    let mut sc = to_sim(&cfg, trace);
+    sc.session_ops = ops;
+    let rep = ftcoll::sim::run_session(&sc, kind);
+    print_report(&rep.run);
+    // per-epoch line (CI greps "epoch k/K") + the membership agreement
+    // the session layer guarantees
+    let survivors: Vec<u32> =
+        (0..rep.run.n).filter(|r| !rep.run.dead.contains(r)).collect();
+    if let Some(&s0) = survivors.first() {
+        let v0 = &rep.views[s0 as usize];
+        for e in 0..v0.epochs_completed {
+            let delivered = survivors
+                .iter()
+                .filter(|&&r| rep.run.outcomes[r as usize].len() > e as usize)
+                .count();
+            println!("epoch {}/{}: {delivered}/{} survivors delivered", e + 1, ops, survivors.len());
+        }
+        let agree = survivors.iter().all(|&r| rep.views[r as usize] == *v0);
+        println!(
+            "membership: {} members, excluded {:?}, survivor views {}",
+            v0.members.len(),
+            v0.excluded,
+            if agree { "IDENTICAL" } else { "DIVERGED" }
+        );
+        println!("epochs completed: {}/{ops}", v0.epochs_completed);
+    }
+    Ok(())
 }
 
 fn run_live_cmd(args: &Args) -> Result<(), String> {

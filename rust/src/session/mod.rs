@@ -1,0 +1,1012 @@
+//! Self-healing multi-operation sessions: §4.4's failed-process list put
+//! to work.
+//!
+//! The paper says the List scheme exists "to exclude failed processes in
+//! future operations" but leaves the mechanism open. This layer supplies
+//! it: a [`Session`] runs a *sequence* of K Reduce/Allreduce/Broadcast
+//! operations over an evolving [`Membership`]. After each operation,
+//! every surviving process folds the operation's `known_failed` report
+//! into its view, excludes the dead, bumps the session epoch, and
+//! rebuilds its I(f)-tree and up-correction groups over the dense
+//! survivor ranks — so operation k+1 pays the Theorem 5 cost of the
+//! *survivor* count and never arms a watch (or eats a detection timeout)
+//! on a known-dead peer again.
+//!
+//! ## Epoch state machine (one per process)
+//!
+//! ```text
+//!         ┌────────────────────── epoch k ──────────────────────┐
+//!  start ─► data op (Reduce/Allreduce/Broadcast over dense      │
+//!         │ survivor ranks; delivers the epoch's outcome)       │
+//!         │        │ local delivery                             │
+//!         │        ▼                                            │
+//!         │ membership sync: the sync root broadcasts the       │
+//!         │ *full updated* excluded list (old ∪ op report)      │
+//!         │ over the epoch-k membership                         │
+//!         └────────┼─────────────────────────────────────────── ┘
+//!                  ▼ fold: membership ← world ∖ excluded, epoch k+1
+//! ```
+//!
+//! The sync root is the operation's effective root: the reduce root
+//! (dense rank 0), the data-broadcast root, or — for allreduce — the
+//! winning attempt's candidate, which every survivor identifies
+//! consistently from its delivered `attempts` counter (§5.1's consistent
+//! detection). Because the sync broadcast carries the *authoritative
+//! full* list (not a delta), every survivor's membership view is
+//! identical by construction after each fold.
+//!
+//! ## Epoch bands on the wire
+//!
+//! All K operations reuse the same base op id (the realistic tag-reuse
+//! regime), so wire epochs alone tell operations apart. Session epoch
+//! `k` owns the band `[k·stride, (k+1)·stride)` with
+//! `stride = f + 2`: allreduce attempts `t` use `k·stride + t`
+//! (at most `f+1` candidates fit below the band top), and the
+//! membership-sync broadcast uses `(k+1)·stride - 1`. Messages from a
+//! finished band are dropped, messages from a future band are buffered
+//! until this process catches up — the stale-epoch guards in
+//! reduce/broadcast/allreduce/pipeline (`msg.op != op || msg.epoch !=
+//! epoch`, and the allreduce/pipeline band checks) make reused op ids
+//! safe across epochs.
+//!
+//! Failure reports only carry process ids under [`Scheme::List`]; under
+//! `CountBit`/`Bit` the session still runs correctly but never shrinks
+//! (it re-pays detection timeouts every epoch) — exclusion is an
+//! optimization, not a correctness requirement. See docs/SESSIONS.md.
+
+use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
+use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
+use crate::collectives::failure_info::Scheme;
+use crate::collectives::pipeline::Pipelined;
+use crate::collectives::reduce::{Reduce, ReduceConfig};
+use crate::collectives::{Ctx, Outcome, Protocol};
+use crate::topology::Membership;
+use crate::types::{segment, Msg, Rank, TimeNs, Value};
+
+/// Which collective one session operation runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Reduce,
+    Allreduce,
+    Broadcast,
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Reduce => "reduce",
+            OpKind::Allreduce => "allreduce",
+            OpKind::Broadcast => "broadcast",
+        }
+    }
+}
+
+/// Static configuration of one session (identical on every process).
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// World size at session start.
+    pub n: u32,
+    /// Failure tolerance promised for the whole session. Epoch k runs
+    /// its operation with the *remaining* tolerance
+    /// `f - |excluded so far|`.
+    pub f: u32,
+    pub scheme: Scheme,
+    /// Correction mode of data broadcasts / allreduce broadcast halves.
+    /// The membership-sync broadcast always corrects (it must survive
+    /// the same failures the data op did).
+    pub correction: CorrectionMode,
+    /// The operation sequence — one entry per session epoch.
+    pub ops: Vec<OpKind>,
+    /// Base op id shared by *every* epoch of the session (epochs are
+    /// told apart by the wire epoch alone). Must be ≥ 1 so segmented
+    /// epochs keep valid pipeline framing.
+    pub base_op: u64,
+    /// Segmented/pipelined execution of reduce/allreduce epochs
+    /// (`None` = monolithic). Broadcast epochs ignore it.
+    pub segment_bytes: Option<usize>,
+}
+
+impl SessionConfig {
+    pub fn new(n: u32, f: u32, ops: Vec<OpKind>) -> Self {
+        SessionConfig {
+            n,
+            f,
+            scheme: Scheme::List,
+            correction: CorrectionMode::Always,
+            ops,
+            base_op: 1,
+            segment_bytes: None,
+        }
+    }
+
+    /// Wire epochs per session epoch: allreduce attempts occupy sub-
+    /// epochs `0..=f` (at most `f+1` candidates), the membership-sync
+    /// broadcast takes the band's last sub-epoch.
+    pub fn epoch_stride(&self) -> u32 {
+        self.f + 2
+    }
+}
+
+/// A process's final (or in-flight) session state, for post-run
+/// inspection by tests and executors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionView {
+    /// Session epochs fully completed (data op + membership fold).
+    pub epochs_completed: u32,
+    /// Current members, ascending world ranks.
+    pub members: Vec<Rank>,
+    /// World ranks excluded so far, ascending.
+    pub excluded: Vec<Rank>,
+    /// All K epochs completed.
+    pub done: bool,
+    /// Terminal error (out-of-contract op) or self-exclusion.
+    pub halted: bool,
+}
+
+/// One epoch's data-op instance.
+enum DataInst {
+    R(Reduce),
+    A(Allreduce),
+    P(Pipelined),
+    B(Broadcast),
+}
+
+impl DataInst {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        match self {
+            DataInst::R(p) => p.on_start(ctx),
+            DataInst::A(p) => p.on_start(ctx),
+            DataInst::P(p) => p.on_start(ctx),
+            DataInst::B(p) => p.on_start(ctx),
+        }
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        match self {
+            DataInst::R(p) => p.on_message(from, msg, ctx),
+            DataInst::A(p) => p.on_message(from, msg, ctx),
+            DataInst::P(p) => p.on_message(from, msg, ctx),
+            DataInst::B(p) => p.on_message(from, msg, ctx),
+        }
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        match self {
+            DataInst::R(p) => p.on_peer_failed(peer, ctx),
+            DataInst::A(p) => p.on_peer_failed(peer, ctx),
+            DataInst::P(p) => p.on_peer_failed(peer, ctx),
+            DataInst::B(p) => p.on_peer_failed(peer, ctx),
+        }
+    }
+
+    fn on_timer(&mut self, token: u64, ctx: &mut dyn Ctx) {
+        match self {
+            DataInst::R(p) => p.on_timer(token, ctx),
+            DataInst::A(p) => p.on_timer(token, ctx),
+            DataInst::P(p) => p.on_timer(token, ctx),
+            DataInst::B(p) => p.on_timer(token, ctx),
+        }
+    }
+}
+
+/// Translating context: the inner protocols live in the *dense survivor
+/// rank space* of the current membership; the executor lives in world
+/// ranks. Every send/watch/unwatch crosses the boundary here — which is
+/// exactly why an epoch-k protocol *cannot* arm a watch or address a
+/// message to an excluded rank: excluded ranks have no dense name.
+struct DenseCtx<'a> {
+    inner: &'a mut dyn Ctx,
+    membership: &'a Membership,
+    captured: Vec<Outcome>,
+}
+
+impl<'a> Ctx for DenseCtx<'a> {
+    fn rank(&self) -> Rank {
+        self.membership
+            .dense_of(self.inner.rank())
+            .expect("session rank is a member of its own view")
+    }
+    fn n(&self) -> u32 {
+        self.membership.len()
+    }
+    fn now(&self) -> TimeNs {
+        self.inner.now()
+    }
+    fn send(&mut self, to: Rank, msg: Msg) {
+        if let Some(world) = self.membership.world_of(to) {
+            self.inner.send(world, msg);
+        }
+    }
+    fn watch(&mut self, peer: Rank) {
+        if let Some(world) = self.membership.world_of(peer) {
+            self.inner.watch(world);
+        }
+    }
+    fn unwatch(&mut self, peer: Rank) {
+        if let Some(world) = self.membership.world_of(peer) {
+            self.inner.unwatch(world);
+        }
+    }
+    fn set_timer(&mut self, delay: TimeNs, token: u64) {
+        self.inner.set_timer(delay, token);
+    }
+    fn combine(&mut self, acc: &mut Value, other: &Value) {
+        self.inner.combine(acc, other);
+    }
+    fn deliver(&mut self, out: Outcome) {
+        self.captured.push(out);
+    }
+}
+
+/// Drive one protocol callback through a fresh [`DenseCtx`] over
+/// `membership` and return the outcomes it captured.
+fn with_dense_ctx<F>(membership: &Membership, ctx: &mut dyn Ctx, f: F) -> Vec<Outcome>
+where
+    F: FnOnce(&mut dyn Ctx),
+{
+    let mut cap = DenseCtx { inner: ctx, membership, captured: Vec::new() };
+    f(&mut cap);
+    cap.captured
+}
+
+/// Per-process session state machine (a [`Protocol`] like any other —
+/// both executors drive it unchanged).
+pub struct Session {
+    cfg: SessionConfig,
+    stride: u32,
+    /// This process's world rank (bound on start).
+    rank: Rank,
+    /// This process's per-epoch contribution (cloned into each epoch).
+    input: Value,
+    membership: Membership,
+    /// World ranks excluded so far (sorted). Identical on every
+    /// survivor after each fold — the sync broadcast carries the full
+    /// list, not a delta.
+    excluded: Vec<Rank>,
+    /// Current session epoch (index into `cfg.ops`).
+    epoch: u32,
+    data: Option<DataInst>,
+    data_delivered: bool,
+    sync: Option<Broadcast>,
+    /// Sync-band messages that arrived before our data op delivered.
+    pending_sync: Vec<(Rank, Msg)>,
+    /// Messages from future epoch bands (peers ahead of us).
+    future: Vec<(Rank, Msg)>,
+    done: bool,
+    halted: bool,
+    started: bool,
+}
+
+impl Session {
+    pub fn new(cfg: SessionConfig, input: Value) -> Self {
+        assert!(cfg.n >= 1, "session needs at least one process");
+        assert!(!cfg.ops.is_empty(), "session needs at least one operation");
+        assert!(cfg.base_op >= 1, "session base op must be >= 1 (pipeline framing)");
+        let stride = cfg.epoch_stride();
+        let membership = Membership::world(cfg.n);
+        Session {
+            stride,
+            rank: 0,
+            input,
+            membership,
+            excluded: Vec::new(),
+            epoch: 0,
+            data: None,
+            data_delivered: false,
+            sync: None,
+            pending_sync: Vec::new(),
+            future: Vec::new(),
+            done: false,
+            halted: false,
+            started: false,
+            cfg,
+        }
+    }
+
+    /// Number of operations in the session.
+    pub fn num_ops(&self) -> u32 {
+        self.cfg.ops.len() as u32
+    }
+
+    /// Post-run (or in-flight) inspection.
+    pub fn view(&self) -> SessionView {
+        SessionView {
+            epochs_completed: self.epoch.min(self.cfg.ops.len() as u32),
+            members: self.membership.members().to_vec(),
+            excluded: self.excluded.clone(),
+            done: self.done,
+            halted: self.halted,
+        }
+    }
+
+    /// Tolerance left for the current epoch's operation.
+    fn remaining_f(&self) -> u32 {
+        self.membership.remaining_f(self.cfg.f, self.excluded.len() as u32)
+    }
+
+    fn band_of(&self, wire_epoch: u32) -> u32 {
+        wire_epoch / self.stride
+    }
+
+    fn sub_of(&self, wire_epoch: u32) -> u32 {
+        wire_epoch % self.stride
+    }
+
+    fn data_epoch(&self, k: u32) -> u32 {
+        k * self.stride
+    }
+
+    fn sync_epoch(&self, k: u32) -> u32 {
+        k * self.stride + self.stride - 1
+    }
+
+    /// Map an inner (dense) failure report to sorted world ranks.
+    fn to_world(&self, dense: &[Rank]) -> Vec<Rank> {
+        let mut v: Vec<Rank> =
+            dense.iter().filter_map(|&d| self.membership.world_of(d)).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Build the current epoch's data-op instance over the dense
+    /// survivor ranks.
+    fn build_data(&self) -> DataInst {
+        let n = self.membership.len();
+        let f = self.remaining_f();
+        let e = self.data_epoch(self.epoch);
+        match self.cfg.ops[self.epoch as usize] {
+            OpKind::Reduce => {
+                let rcfg = ReduceConfig {
+                    n,
+                    f,
+                    root: 0,
+                    scheme: self.cfg.scheme,
+                    op_id: self.cfg.base_op,
+                    epoch: e,
+                };
+                match self.cfg.segment_bytes {
+                    Some(b) => DataInst::P(Pipelined::reduce(rcfg, self.input.clone(), b)),
+                    None => DataInst::R(Reduce::new(rcfg, self.input.clone())),
+                }
+            }
+            OpKind::Allreduce => {
+                let mut acfg = AllreduceConfig::new(n, f);
+                acfg.scheme = self.cfg.scheme;
+                acfg.correction = self.cfg.correction;
+                acfg.op_id = self.cfg.base_op;
+                acfg.base_epoch = e;
+                match self.cfg.segment_bytes {
+                    Some(b) => {
+                        DataInst::P(Pipelined::allreduce(acfg, self.input.clone(), b))
+                    }
+                    None => DataInst::A(Allreduce::new(acfg, self.input.clone())),
+                }
+            }
+            OpKind::Broadcast => {
+                let bcfg = BcastConfig {
+                    n,
+                    f,
+                    root: 0,
+                    mode: self.cfg.correction,
+                    distance: None,
+                    op_id: self.cfg.base_op,
+                    epoch: e,
+                };
+                let me =
+                    self.membership.dense_of(self.rank).expect("session rank is a member");
+                let input = if me == 0 { Some(self.input.clone()) } else { None };
+                DataInst::B(Broadcast::new(bcfg, input))
+            }
+        }
+    }
+
+    /// Start the current epoch's data op and replay any buffered
+    /// messages that raced ahead into this band.
+    fn start_epoch(&mut self, ctx: &mut dyn Ctx) {
+        self.data_delivered = false;
+        self.sync = None;
+        let mut inst = self.build_data();
+        let captured = with_dense_ctx(&self.membership, ctx, |cap| inst.on_start(cap));
+        self.data = Some(inst);
+        self.process_data_outcomes(captured, ctx);
+        // replay messages buffered for this band (the transition below
+        // may have advanced the epoch further — route_current re-checks)
+        let band = self.epoch;
+        let taken = std::mem::take(&mut self.future);
+        let (now, later): (Vec<_>, Vec<_>) =
+            taken.into_iter().partition(|(_, m)| self.band_of(m.epoch) <= band);
+        self.future = later;
+        for (from, msg) in now {
+            self.route_current(from, msg, ctx);
+        }
+    }
+
+    /// Route a message that belongs to this session (op-id checked by
+    /// the caller) according to its epoch band.
+    fn route_current(&mut self, from_world: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if self.done || self.halted {
+            return;
+        }
+        let band = self.band_of(msg.epoch);
+        if band < self.epoch {
+            return; // finished epoch: stale traffic
+        }
+        if band > self.epoch {
+            self.future.push((from_world, msg));
+            return;
+        }
+        // current band: the sender must be a member of this epoch's view
+        // (an excluded rank's late in-flight traffic dies here)
+        let Some(from) = self.membership.dense_of(from_world) else {
+            return;
+        };
+        if self.sub_of(msg.epoch) == self.stride - 1 {
+            // membership-sync broadcast
+            if self.sync.is_some() {
+                self.drive_sync_message(from, msg, ctx);
+            } else {
+                self.pending_sync.push((from_world, msg));
+            }
+        } else {
+            self.drive_data_message(from, msg, ctx);
+        }
+    }
+
+    fn drive_data_message(&mut self, from_dense: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        let Some(mut inst) = self.data.take() else {
+            return;
+        };
+        let captured = with_dense_ctx(&self.membership, ctx, |cap| {
+            inst.on_message(from_dense, msg, cap)
+        });
+        self.data = Some(inst);
+        self.process_data_outcomes(captured, ctx);
+    }
+
+    fn drive_sync_message(&mut self, from_dense: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        let Some(mut b) = self.sync.take() else {
+            return;
+        };
+        let captured = with_dense_ctx(&self.membership, ctx, |cap| {
+            b.on_message(from_dense, msg, cap)
+        });
+        self.sync = Some(b);
+        self.process_sync_outcomes(captured, ctx);
+    }
+
+    /// Fold one epoch's captured data-op deliveries into session state:
+    /// surface the outcome to the caller and enter the sync phase.
+    fn process_data_outcomes(&mut self, outs: Vec<Outcome>, ctx: &mut dyn Ctx) {
+        for out in outs {
+            if self.done || self.halted {
+                return;
+            }
+            match out {
+                Outcome::Error(e) => {
+                    // out of contract: surface once and halt the session
+                    self.halted = true;
+                    ctx.deliver(Outcome::Error(e));
+                }
+                _ if self.data_delivered => {
+                    // the inner op delivers its aggregate exactly once;
+                    // anything further would double-count an epoch
+                    debug_assert!(false, "duplicate data-op delivery in one epoch");
+                }
+                Outcome::ReduceDone => {
+                    ctx.deliver(Outcome::ReduceDone);
+                    self.enter_sync(0, None, ctx);
+                }
+                Outcome::ReduceRoot { value, known_failed } => {
+                    let world_failed = self.to_world(&known_failed);
+                    ctx.deliver(Outcome::ReduceRoot {
+                        value,
+                        known_failed: world_failed.clone(),
+                    });
+                    self.enter_sync(0, Some(world_failed), ctx);
+                }
+                Outcome::Allreduce { value, attempts } => {
+                    // the winning attempt's candidate is the sync root;
+                    // every survivor derives the same index from its own
+                    // `attempts` (consistent detection, §5.2) — and the
+                    // session's candidate lists are dense 0..=f', so the
+                    // dense sync root is simply attempts-1
+                    let sync_root = attempts.saturating_sub(1);
+                    let me = self
+                        .membership
+                        .dense_of(self.rank)
+                        .expect("session rank is a member");
+                    let report = if me == sync_root {
+                        let dense_report = match self.data.as_ref() {
+                            Some(DataInst::A(a)) => a.known_failed().to_vec(),
+                            Some(DataInst::P(p)) => p.allreduce_report(),
+                            _ => Vec::new(),
+                        };
+                        Some(self.to_world(&dense_report))
+                    } else {
+                        None
+                    };
+                    ctx.deliver(Outcome::Allreduce { value, attempts });
+                    self.enter_sync(sync_root, report, ctx);
+                }
+                Outcome::Broadcast(value) => {
+                    let me = self
+                        .membership
+                        .dense_of(self.rank)
+                        .expect("session rank is a member");
+                    let report = if me == 0 { Some(Vec::new()) } else { None };
+                    ctx.deliver(Outcome::Broadcast(value));
+                    self.enter_sync(0, report, ctx);
+                }
+            }
+        }
+    }
+
+    /// Enter the membership-sync phase: the sync root broadcasts the
+    /// full updated exclusion list; everyone else joins passively. The
+    /// epoch's data op stays alive underneath (the reduce root keeps
+    /// consuming late subtree results, §4.1 item 2).
+    fn enter_sync(
+        &mut self,
+        sync_root_dense: Rank,
+        report_world: Option<Vec<Rank>>,
+        ctx: &mut dyn Ctx,
+    ) {
+        if self.sync.is_some() {
+            return;
+        }
+        self.data_delivered = true;
+        let bcfg = BcastConfig {
+            n: self.membership.len(),
+            f: self.remaining_f(),
+            root: sync_root_dense,
+            // the sync must tolerate the same failures the data op did,
+            // regardless of the data correction mode under ablation
+            mode: CorrectionMode::Always,
+            distance: None,
+            op_id: self.cfg.base_op,
+            epoch: self.sync_epoch(self.epoch),
+        };
+        let input = report_world.map(|rep| {
+            let mut all = self.excluded.clone();
+            all.extend(rep);
+            all.sort_unstable();
+            all.dedup();
+            Value::I64(all.into_iter().map(|r| r as i64).collect())
+        });
+        let mut b = Broadcast::new(bcfg, input);
+        let captured = with_dense_ctx(&self.membership, ctx, |cap| b.on_start(cap));
+        self.sync = Some(b);
+        self.process_sync_outcomes(captured, ctx);
+        // replay sync messages that raced ahead of our data completion
+        let pending = std::mem::take(&mut self.pending_sync);
+        for (from_world, msg) in pending {
+            if self.done || self.halted || self.sync.is_none() {
+                break;
+            }
+            if let Some(fd) = self.membership.dense_of(from_world) {
+                self.drive_sync_message(fd, msg, ctx);
+            }
+        }
+    }
+
+    fn process_sync_outcomes(&mut self, outs: Vec<Outcome>, ctx: &mut dyn Ctx) {
+        for out in outs {
+            if self.done || self.halted {
+                return;
+            }
+            if let Outcome::Broadcast(v) = out {
+                let Value::I64(list) = v else {
+                    continue; // malformed sync payload: ignore
+                };
+                let excluded: Vec<Rank> = list.iter().map(|&x| x as Rank).collect();
+                self.fold_and_advance(excluded, ctx);
+            }
+        }
+    }
+
+    /// Adopt the authoritative exclusion list, rebuild the membership,
+    /// and advance to the next epoch (or finish).
+    fn fold_and_advance(&mut self, mut excluded: Vec<Rank>, ctx: &mut dyn Ctx) {
+        excluded.sort_unstable();
+        excluded.dedup();
+        if excluded.binary_search(&self.rank).is_ok()
+            || excluded.len() as u32 >= self.cfg.n
+        {
+            // a sound report can never name us (we are alive) nor
+            // everyone; a malformed one halts instead of panicking
+            self.halted = true;
+            return;
+        }
+        self.excluded = excluded;
+        self.membership = Membership::world(self.cfg.n).exclude(&self.excluded);
+        self.data = None;
+        self.sync = None;
+        self.data_delivered = false;
+        self.pending_sync.clear(); // leftovers belong to the closed epoch
+        self.epoch += 1;
+        if self.epoch as usize >= self.cfg.ops.len() {
+            self.done = true;
+            self.future.clear();
+            return;
+        }
+        self.start_epoch(ctx);
+    }
+}
+
+impl Protocol for Session {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        self.rank = ctx.rank();
+        self.started = true;
+        self.start_epoch(ctx);
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if !self.started || self.done || self.halted {
+            return;
+        }
+        // ours? monolithic epochs and the sync broadcast use the base op
+        // id itself; segmented epochs frame it (base << SEG_BITS | s+1,
+        // always ≥ 2^20 for base ≥ 1, so the two never collide)
+        let ours =
+            msg.op == self.cfg.base_op || segment::base_op(msg.op) == self.cfg.base_op;
+        if !ours {
+            return;
+        }
+        self.route_current(from, msg, ctx);
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        if !self.started || self.done || self.halted {
+            return;
+        }
+        // excluded peers have no dense name: a late notification about
+        // an already-excluded rank is dropped here
+        let Some(pd) = self.membership.dense_of(peer) else {
+            return;
+        };
+        let Some(mut inst) = self.data.take() else {
+            return;
+        };
+        let captured =
+            with_dense_ctx(&self.membership, ctx, |cap| inst.on_peer_failed(pd, cap));
+        self.data = Some(inst);
+        self.process_data_outcomes(captured, ctx);
+        // the sync broadcast watches no one — nothing to route there
+    }
+
+    fn on_timer(&mut self, token: u64, ctx: &mut dyn Ctx) {
+        if !self.started || self.done || self.halted {
+            return;
+        }
+        let Some(mut inst) = self.data.take() else {
+            return;
+        };
+        let captured =
+            with_dense_ctx(&self.membership, ctx, |cap| inst.on_timer(token, cap));
+        self.data = Some(inst);
+        self.process_data_outcomes(captured, ctx);
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+    use crate::types::MsgKind;
+
+    /// Drive `n` sessions to quiescence through TestCtxs, simulating a
+    /// perfect failure monitor: a watch on a dead rank confirms on the
+    /// next pump round. Watch logs are never drained, so tests can
+    /// inspect the full watch history afterwards.
+    fn pump(sessions: &mut [Session], ctxs: &mut [TestCtx], dead: &[Rank]) {
+        let n = sessions.len();
+        let mut wseen = vec![0usize; n];
+        for _round in 0..100_000 {
+            let mut acted = false;
+            for i in 0..n {
+                if dead.contains(&(i as Rank)) {
+                    ctxs[i].sent.clear();
+                    continue;
+                }
+                // newly armed watches on dead peers confirm
+                let upto = ctxs[i].watched.len();
+                let newly: Vec<Rank> = ctxs[i].watched[wseen[i]..upto].to_vec();
+                wseen[i] = upto;
+                for p in newly {
+                    if dead.contains(&p) {
+                        acted = true;
+                        sessions[i].on_peer_failed(p, &mut ctxs[i]);
+                    }
+                }
+                let sent = ctxs[i].take_sent();
+                for (to, msg) in sent {
+                    acted = true;
+                    if dead.contains(&to) {
+                        continue; // absorbed by the dead peer (§3)
+                    }
+                    sessions[to as usize].on_message(i as Rank, msg, &mut ctxs[to as usize]);
+                }
+            }
+            if !acted {
+                return;
+            }
+        }
+        panic!("pump did not quiesce");
+    }
+
+    fn reduce_session(n: u32, f: u32, k: usize) -> (Vec<Session>, Vec<TestCtx>) {
+        let sessions: Vec<Session> = (0..n)
+            .map(|r| {
+                Session::new(
+                    SessionConfig::new(n, f, vec![OpKind::Reduce; k]),
+                    Value::one_hot(n as usize, r),
+                )
+            })
+            .collect();
+        let ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+        (sessions, ctxs)
+    }
+
+    fn start_all(sessions: &mut [Session], ctxs: &mut [TestCtx], dead: &[Rank]) {
+        for i in 0..sessions.len() {
+            if !dead.contains(&(i as Rank)) {
+                sessions[i].on_start(&mut ctxs[i]);
+            }
+        }
+    }
+
+    /// Failure-free session: K epochs, every epoch's root mask is
+    /// all-ones, every survivor's view stays the full world.
+    #[test]
+    fn clean_session_runs_all_epochs() {
+        let (mut s, mut c) = reduce_session(7, 1, 3);
+        start_all(&mut s, &mut c, &[]);
+        pump(&mut s, &mut c, &[]);
+        for i in 0..7 {
+            let v = s[i].view();
+            assert!(v.done, "rank {i} not done: {v:?}");
+            assert_eq!(v.members, (0..7).collect::<Vec<_>>());
+            assert!(v.excluded.is_empty());
+            assert_eq!(v.epochs_completed, 3);
+            assert_eq!(c[i].delivered.len(), 3, "rank {i}");
+        }
+        for (e, out) in c[0].delivered.iter().enumerate() {
+            match out {
+                Outcome::ReduceRoot { value, known_failed } => {
+                    assert_eq!(value.inclusion_counts(), &[1; 7], "epoch {e}");
+                    assert!(known_failed.is_empty());
+                }
+                o => panic!("epoch {e}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    /// The acceptance scenario: f processes die before epoch 0. Epoch 0
+    /// detects and reports them; every later epoch runs on the n-f
+    /// dense survivors and never watches or messages an excluded rank
+    /// again.
+    #[test]
+    fn session_excludes_dead_and_never_watches_them_again() {
+        let n = 7u32;
+        let dead = [5u32];
+        // reference run: one epoch only
+        let (mut s1, mut c1) = reduce_session(n, 1, 1);
+        start_all(&mut s1, &mut c1, &dead);
+        pump(&mut s1, &mut c1, &dead);
+        // full run: four epochs
+        let (mut s4, mut c4) = reduce_session(n, 1, 4);
+        start_all(&mut s4, &mut c4, &dead);
+        pump(&mut s4, &mut c4, &dead);
+
+        for i in 0..n as usize {
+            if dead.contains(&(i as u32)) {
+                continue;
+            }
+            let v = s4[i].view();
+            assert!(v.done, "rank {i}: {v:?}");
+            assert_eq!(v.excluded, vec![5], "rank {i}");
+            assert_eq!(v.members, vec![0, 1, 2, 3, 4, 6], "rank {i}");
+            // identical views on every survivor
+            assert_eq!(v, s4[0].view(), "rank {i} view diverged");
+            // epochs 1..4 never armed a watch on the excluded rank and
+            // never addressed it: all contact with 5 happened in epoch 0,
+            // so the 4-epoch run contacted it exactly as often as the
+            // 1-epoch run
+            let w1 = c1[i].watched.iter().filter(|&&p| p == 5).count();
+            let w4 = c4[i].watched.iter().filter(|&&p| p == 5).count();
+            assert_eq!(w1, w4, "rank {i} watched the excluded rank after epoch 0");
+            assert_eq!(c4[i].delivered.len(), 4, "rank {i}");
+        }
+        // per-epoch root masks: epoch 0 misses 5 (pre-dead), later
+        // epochs run on survivors only — 5 stays excluded
+        for (e, out) in c4[0].delivered.iter().enumerate() {
+            match out {
+                Outcome::ReduceRoot { value, known_failed } => {
+                    let counts = value.inclusion_counts();
+                    for r in 0..7usize {
+                        let want = if r == 5 { 0 } else { 1 };
+                        assert_eq!(counts[r], want, "epoch {e} rank {r}");
+                    }
+                    if e == 0 {
+                        assert_eq!(known_failed, &vec![5], "epoch 0 reports the death");
+                    } else {
+                        assert!(known_failed.is_empty(), "epoch {e} re-reports");
+                    }
+                }
+                o => panic!("epoch {e}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    /// Allreduce session with the first candidate dead: epoch 0 pays one
+    /// rotation, folds the exclusion, and epoch 1 completes on the
+    /// survivors in a single attempt.
+    #[test]
+    fn allreduce_session_stops_rotating_once_excluded() {
+        let n = 6u32;
+        let dead = [0u32];
+        let mut sessions: Vec<Session> = (0..n)
+            .map(|r| {
+                Session::new(
+                    SessionConfig::new(n, 1, vec![OpKind::Allreduce; 2]),
+                    Value::one_hot(n as usize, r),
+                )
+            })
+            .collect();
+        let mut ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+        start_all(&mut sessions, &mut ctxs, &dead);
+        pump(&mut sessions, &mut ctxs, &dead);
+
+        for i in 1..n as usize {
+            let v = sessions[i].view();
+            assert!(v.done, "rank {i}: {v:?}");
+            assert_eq!(v.excluded, vec![0], "rank {i}");
+            assert_eq!(ctxs[i].delivered.len(), 2, "rank {i}");
+            match (&ctxs[i].delivered[0], &ctxs[i].delivered[1]) {
+                (
+                    Outcome::Allreduce { value: v0, attempts: a0 },
+                    Outcome::Allreduce { value: v1, attempts: a1 },
+                ) => {
+                    assert_eq!(*a0, 2, "rank {i}: epoch 0 rotates past the dead root");
+                    assert_eq!(*a1, 1, "rank {i}: epoch 1 must not rotate again");
+                    let c0 = v0.inclusion_counts();
+                    let c1 = v1.inclusion_counts();
+                    assert_eq!(c0, c1, "rank {i}");
+                    assert_eq!(c0[0], 0, "rank {i}: dead rank included");
+                    for r in 1..n as usize {
+                        assert_eq!(c0[r], 1, "rank {i}: rank {r}");
+                    }
+                }
+                o => panic!("rank {i}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    /// A session of broadcasts: no failure information flows, the
+    /// membership never shrinks, and every epoch delivers the root's
+    /// value to everyone.
+    #[test]
+    fn broadcast_session_delivers_every_epoch() {
+        let n = 5u32;
+        let mut sessions: Vec<Session> = (0..n)
+            .map(|r| {
+                Session::new(
+                    SessionConfig::new(n, 1, vec![OpKind::Broadcast; 3]),
+                    Value::F64(vec![r as f64]),
+                )
+            })
+            .collect();
+        let mut ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+        start_all(&mut sessions, &mut ctxs, &[]);
+        pump(&mut sessions, &mut ctxs, &[]);
+        for i in 0..n as usize {
+            assert!(sessions[i].view().done, "rank {i}");
+            assert_eq!(ctxs[i].delivered.len(), 3, "rank {i}");
+            for out in &ctxs[i].delivered {
+                match out {
+                    Outcome::Broadcast(v) => assert_eq!(v.as_f64_scalar(), 0.0),
+                    o => panic!("rank {i}: unexpected {o:?}"),
+                }
+            }
+        }
+    }
+
+    /// Cross-epoch stale injection straight at the session router: a
+    /// stale-band message must be dropped, a future-band message must be
+    /// buffered, and neither may disturb the current epoch.
+    #[test]
+    fn session_drops_stale_bands_and_buffers_future_bands() {
+        let n = 7u32;
+        let (mut s, mut c) = reduce_session(n, 1, 2); // stride = 3
+        start_all(&mut s, &mut c, &[]);
+        // rank 3 (grouped with 4) sits in epoch 0 (band [0,3)); inject
+        // an epoch-1 data message (wire epoch 3) early — it must be
+        // buffered, not act
+        let before = c[3].sent.len();
+        let mut early = TestCtx::msg(MsgKind::UpCorrection, 0.0);
+        early.payload = Value::one_hot(7, 4);
+        early.epoch = 3;
+        s[3].on_message(4, early, &mut c[3]);
+        assert_eq!(
+            c[3].sent.len(),
+            before,
+            "future-band message must not advance the session"
+        );
+        // run everything to completion: the buffered message is consumed
+        // when rank 3 reaches epoch 1 (its group peer 4 will not resend —
+        // the pump delivers 4's real epoch-1 message, the early copy is a
+        // duplicate the up-correction machine ignores)
+        pump(&mut s, &mut c, &[]);
+        for i in 0..n as usize {
+            assert!(s[i].view().done, "rank {i}");
+            assert_eq!(c[i].delivered.len(), 2, "rank {i}");
+        }
+        // a stale band-0 message after the session moved on: dropped
+        let mut old = TestCtx::msg(MsgKind::TreeUp, 9.0);
+        old.epoch = 0;
+        let delivered_before = c[0].delivered.len();
+        s[0].on_message(1, old, &mut c[0]);
+        assert_eq!(c[0].delivered.len(), delivered_before);
+        assert!(c[0].take_sent().is_empty());
+    }
+
+    /// Segmented session epochs: the pipelined driver runs under the
+    /// session with reused base ops, and per-epoch masks stay exact.
+    #[test]
+    fn segmented_session_epochs() {
+        let n = 7u32;
+        let mut sessions: Vec<Session> = (0..n)
+            .map(|r| {
+                let mut cfg = SessionConfig::new(n, 1, vec![OpKind::Reduce; 2]);
+                cfg.segment_bytes = Some(8 * n as usize); // one block per segment
+                Session::new(cfg, Value::one_hot_blocks(n as usize, r, 3))
+            })
+            .collect();
+        let mut ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+        let dead = [6u32];
+        start_all(&mut sessions, &mut ctxs, &dead);
+        pump(&mut sessions, &mut ctxs, &dead);
+        for i in 0..n as usize {
+            if dead.contains(&(i as u32)) {
+                continue;
+            }
+            let v = sessions[i].view();
+            assert!(v.done, "rank {i}: {v:?}");
+            assert_eq!(v.excluded, vec![6], "rank {i}");
+            assert_eq!(ctxs[i].delivered.len(), 2, "rank {i}");
+        }
+        for (e, out) in ctxs[0].delivered.iter().enumerate() {
+            match out {
+                Outcome::ReduceRoot { value, .. } => {
+                    let counts = value.inclusion_counts();
+                    assert_eq!(counts.len(), 21, "epoch {e}");
+                    for b in 0..3 {
+                        for r in 0..7usize {
+                            let want = if r == 6 { 0 } else { 1 };
+                            assert_eq!(counts[b * 7 + r], want, "epoch {e} block {b} rank {r}");
+                        }
+                    }
+                }
+                o => panic!("epoch {e}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    /// n=1 degenerate session: every epoch completes instantly at start.
+    #[test]
+    fn single_process_session() {
+        let mut s = Session::new(
+            SessionConfig::new(1, 2, vec![OpKind::Reduce, OpKind::Allreduce]),
+            Value::F64(vec![7.0]),
+        );
+        let mut c = TestCtx::new(0, 1);
+        s.on_start(&mut c);
+        assert!(s.view().done);
+        assert_eq!(c.delivered.len(), 2);
+    }
+}

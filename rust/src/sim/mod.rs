@@ -25,8 +25,9 @@ use crate::collectives::{Ctx, NativeReducer, Outcome, Protocol, ReduceOp, Reduce
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
 use crate::metrics::Metrics;
+use crate::session::{OpKind, Session, SessionConfig, SessionView};
 use crate::trace::{Trace, TraceEvent};
-use crate::types::{Msg, Rank, TimeNs, Value};
+use crate::types::{segment, Msg, Rank, TimeNs, Value};
 use net::NetModel;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -54,6 +55,11 @@ pub struct SimConfig {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic). Broadcast and the baselines ignore it.
     pub segment_bytes: Option<usize>,
+    /// First wire epoch of a single-collective run (sessions manage
+    /// their own epoch bands). 0 for stand-alone operations.
+    pub base_epoch: u32,
+    /// Operations per session ([`run_session`]); 1 elsewhere.
+    pub session_ops: u32,
     pub trace: bool,
     pub seed: u64,
     pub max_events: u64,
@@ -75,10 +81,30 @@ impl SimConfig {
             bcast_distance: None,
             candidates: None,
             segment_bytes: None,
+            base_epoch: 0,
+            session_ops: 1,
             trace: false,
             seed: 1,
             max_events: 200_000_000,
         }
+    }
+
+    /// Reject configurations no protocol should ever be built from —
+    /// notably segment counts past the op-id framing limit, where
+    /// `segment::seg_op` would abort (and, before the hard assert, a
+    /// release build silently aliased another operation's op ids).
+    pub fn validate(&self) -> Result<(), String> {
+        let segs = self.payload.segment_count(self.n, self.segment_bytes);
+        if segs > segment::MAX_SEGMENTS {
+            return Err(format!(
+                "payload splits into {segs} segments, over the op-id framing limit of {}",
+                segment::MAX_SEGMENTS
+            ));
+        }
+        if self.session_ops == 0 {
+            return Err("session_ops must be >= 1".into());
+        }
+        Ok(())
     }
 
     pub fn root(mut self, root: Rank) -> Self {
@@ -123,6 +149,14 @@ impl SimConfig {
     }
     pub fn segment_bytes(mut self, bytes: usize) -> Self {
         self.segment_bytes = Some(bytes);
+        self
+    }
+    pub fn session_ops(mut self, ops: u32) -> Self {
+        self.session_ops = ops;
+        self
+    }
+    pub fn base_epoch(mut self, epoch: u32) -> Self {
+        self.base_epoch = epoch;
         self
     }
 }
@@ -446,6 +480,12 @@ impl Sim {
     pub fn is_dead(&self, rank: Rank) -> bool {
         self.dead[rank as usize]
     }
+
+    /// The installed protocol instance of `rank` (post-run inspection —
+    /// e.g. downcasting a [`Session`] to read its membership view).
+    pub fn proc(&self, rank: Rank) -> Option<&dyn Protocol> {
+        self.procs[rank as usize].as_deref()
+    }
 }
 
 struct SimCtx<'a> {
@@ -556,6 +596,9 @@ impl RunReport {
 }
 
 fn build_sim(cfg: &SimConfig) -> Sim {
+    if let Err(e) = cfg.validate() {
+        panic!("invalid SimConfig: {e}");
+    }
     let reducer: Arc<dyn Reducer> = Arc::new(NativeReducer(cfg.op));
     let mut sim = Sim::new(cfg.n, cfg.net, cfg.detect_latency, reducer);
     if cfg.trace {
@@ -590,7 +633,7 @@ pub fn run_reduce(cfg: &SimConfig) -> RunReport {
             root: cfg.root,
             scheme: cfg.scheme,
             op_id: 1,
-            epoch: 0,
+            epoch: cfg.base_epoch,
         };
         let input = cfg.payload.initial(r, cfg.n);
         let proto: Box<dyn Protocol> = match cfg.segment_bytes {
@@ -611,6 +654,7 @@ pub fn run_allreduce(cfg: &SimConfig) -> RunReport {
     for r in 0..cfg.n {
         let mut acfg = AllreduceConfig::new(cfg.n, cfg.f).scheme(cfg.scheme);
         acfg.correction = cfg.correction;
+        acfg.base_epoch = cfg.base_epoch;
         if let Some(c) = &cfg.candidates {
             acfg = acfg.candidates(c.clone());
         }
@@ -637,7 +681,7 @@ pub fn run_broadcast(cfg: &SimConfig) -> RunReport {
             mode: cfg.correction,
             distance: cfg.bcast_distance,
             op_id: 1,
-            epoch: 0,
+            epoch: cfg.base_epoch,
         };
         let input =
             if r == cfg.root { Some(cfg.payload.initial(cfg.root, cfg.n)) } else { None };
@@ -646,6 +690,68 @@ pub fn run_broadcast(cfg: &SimConfig) -> RunReport {
     sim.apply_failures(&cfg.failures);
     sim.start_all();
     finish(sim)
+}
+
+/// Result of a simulated multi-operation session: the usual run report
+/// (every rank's outcomes, in epoch order) plus each rank's final
+/// membership view.
+pub struct SessionReport {
+    pub run: RunReport,
+    /// Per-rank final session state. Pre-dead ranks never start, so
+    /// their view is the initial one (full world, 0 epochs).
+    pub views: Vec<SessionView>,
+}
+
+impl SessionReport {
+    /// Outcome of session epoch `e` at `rank`, if delivered.
+    pub fn outcome_at(&self, rank: Rank, e: usize) -> Option<&Outcome> {
+        self.run.outcomes[rank as usize].get(e)
+    }
+}
+
+/// Simulate a self-healing session of `cfg.session_ops` operations of
+/// `kind` over an evolving membership ([`crate::session`]): each epoch
+/// excludes the previous epoch's reported failures and runs on the
+/// dense survivors. `cfg.segment_bytes` makes every reduce/allreduce
+/// epoch pipelined.
+pub fn run_session(cfg: &SimConfig, kind: OpKind) -> SessionReport {
+    let ops = vec![kind; cfg.session_ops.max(1) as usize];
+    let mut sim = build_sim(cfg);
+    for r in 0..cfg.n {
+        let scfg = SessionConfig {
+            n: cfg.n,
+            f: cfg.f,
+            scheme: cfg.scheme,
+            correction: cfg.correction,
+            ops: ops.clone(),
+            base_op: 1,
+            segment_bytes: cfg.segment_bytes,
+        };
+        sim.add_proc(r, Box::new(Session::new(scfg, cfg.payload.initial(r, cfg.n))));
+    }
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    let final_time = sim.run();
+    let views: Vec<SessionView> = (0..cfg.n)
+        .map(|r| {
+            sim.proc(r)
+                .and_then(|p| p.as_any())
+                .and_then(|a| a.downcast_ref::<Session>())
+                .map(|s| s.view())
+                .expect("session protocol installed for every rank")
+        })
+        .collect();
+    let n = sim.n;
+    let dead = (0..n).filter(|&r| sim.is_dead(r)).collect();
+    let run = RunReport {
+        n,
+        outcomes: std::mem::take(&mut sim.outcomes),
+        metrics: sim.metrics,
+        trace: sim.trace,
+        final_time,
+        dead,
+    };
+    SessionReport { run, views }
 }
 
 /// Simulate the fault-agnostic binomial-tree reduce baseline (Figure 1).

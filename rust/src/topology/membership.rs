@@ -8,6 +8,12 @@
 //! surviving ranks, so subsequent collectives run on a smaller `n` with
 //! a smaller `f` — paying the Theorem 5 cost of the *survivor* count
 //! instead of timing out on known-dead peers ever again.
+//!
+//! The session layer ([`crate::session`]) folds each operation's
+//! `known_failed` report through [`Membership::exclude`] between
+//! operations; exclusion is a sorted merge (O(|world| + |failed| log
+//! |failed|)), not a per-member `contains` scan, so a session loop at
+//! large `n` stays linear per epoch.
 
 use crate::types::Rank;
 
@@ -34,10 +40,25 @@ impl Membership {
     }
 
     /// Exclude `failed` (e.g. a reduce outcome's `known_failed` list);
-    /// returns the shrunk membership.
+    /// returns the shrunk membership. Sorted-merge exclusion: the input
+    /// is sorted once and both lists are walked in lockstep, so a large
+    /// failed set costs O(|world| + |failed| log |failed|) instead of
+    /// the quadratic `contains`-per-member scan.
     pub fn exclude(&self, failed: &[Rank]) -> Membership {
-        let world: Vec<Rank> =
-            self.world.iter().copied().filter(|r| !failed.contains(r)).collect();
+        let mut failed: Vec<Rank> = failed.to_vec();
+        failed.sort_unstable();
+        failed.dedup();
+        let mut world = Vec::with_capacity(self.world.len());
+        let mut fi = 0usize;
+        for &r in &self.world {
+            while fi < failed.len() && failed[fi] < r {
+                fi += 1;
+            }
+            if fi < failed.len() && failed[fi] == r {
+                continue; // excluded
+            }
+            world.push(r);
+        }
         assert!(!world.is_empty(), "excluding everyone leaves no communicator");
         Membership { world }
     }
@@ -56,9 +77,10 @@ impl Membership {
         self.world.binary_search(&world).ok().map(|i| i as Rank)
     }
 
-    /// World rank of a dense rank.
-    pub fn world_of(&self, dense: Rank) -> Rank {
-        self.world[dense as usize]
+    /// World rank of a dense rank, or `None` for an out-of-range dense
+    /// rank (e.g. from a malformed replay id) — never a panic path.
+    pub fn world_of(&self, dense: Rank) -> Option<Rank> {
+        self.world.get(dense as usize).copied()
     }
 
     pub fn members(&self) -> &[Rank] {
@@ -88,7 +110,7 @@ mod tests {
         assert_eq!(m.len(), 5);
         for r in 0..5 {
             assert_eq!(m.dense_of(r), Some(r));
-            assert_eq!(m.world_of(r), r);
+            assert_eq!(m.world_of(r), Some(r));
         }
     }
 
@@ -101,7 +123,7 @@ mod tests {
         assert_eq!(m.dense_of(2), Some(1));
         assert_eq!(m.dense_of(6), Some(4));
         assert_eq!(m.dense_of(1), None);
-        assert_eq!(m.world_of(3), 5);
+        assert_eq!(m.world_of(3), Some(5));
         assert!(!m.contains(4));
     }
 
@@ -109,6 +131,44 @@ mod tests {
     fn exclusion_composes() {
         let m = Membership::world(8).exclude(&[7]).exclude(&[0, 3]);
         assert_eq!(m.members(), &[1, 2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn exclusion_handles_unsorted_duplicated_and_unknown_ranks() {
+        // the failed list may be unsorted, contain duplicates, and name
+        // ranks that already left the membership — all must be absorbed
+        let m = Membership::world(10).exclude(&[7, 2, 7, 99, 2]);
+        assert_eq!(m.members(), &[0, 1, 3, 4, 5, 6, 8, 9]);
+        let m2 = m.exclude(&[2, 7]); // already gone: no-op
+        assert_eq!(m2.members(), m.members());
+    }
+
+    /// Regression (quadratic exclusion): a large failed set against a
+    /// large world must match the naive filter exactly — and the merge
+    /// keeps it linear, which the session loop relies on at scale.
+    #[test]
+    fn large_exclusion_matches_naive_filter() {
+        let n: u32 = 50_000;
+        // every third rank fails, listed in reverse order with repeats
+        let mut failed: Vec<Rank> = (0..n).filter(|r| r % 3 == 1).rev().collect();
+        failed.extend_from_slice(&[1, 4, 7]);
+        let m = Membership::world(n).exclude(&failed);
+        let expect: Vec<Rank> = (0..n).filter(|r| r % 3 != 1).collect();
+        assert_eq!(m.members(), expect.as_slice());
+        for (dense, &world) in expect.iter().enumerate() {
+            assert_eq!(m.dense_of(world), Some(dense as Rank));
+            assert_eq!(m.world_of(dense as Rank), Some(world));
+        }
+    }
+
+    /// Regression (panic path): an out-of-range dense rank — e.g. from a
+    /// malformed replay id — returns `None` instead of panicking.
+    #[test]
+    fn out_of_range_dense_rank_is_none() {
+        let m = Membership::world(4).exclude(&[2]);
+        assert_eq!(m.world_of(2), Some(3));
+        assert_eq!(m.world_of(3), None);
+        assert_eq!(m.world_of(u32::MAX), None);
     }
 
     #[test]

@@ -180,9 +180,21 @@ pub mod segment {
     pub const SEG_BITS: u32 = 20;
     const LOW_MASK: u64 = (1 << SEG_BITS) - 1;
 
+    /// Largest number of segments one base operation can frame
+    /// (`seg + 1` must fit the low bits). Configs that would split a
+    /// payload into more segments are rejected at validation time
+    /// ([`crate::config::Config::validate`], [`crate::sim::SimConfig`],
+    /// [`crate::coordinator::EngineConfig`]).
+    pub const MAX_SEGMENTS: u64 = LOW_MASK;
+
     /// Op id of segment `seg` of base operation `base`.
+    ///
+    /// Hard assert (not `debug_assert!`): in a release build a segment
+    /// index ≥ 2^20 - 1 would silently alias another operation's op id —
+    /// the low bits wrap into the base — so out-of-range indices must
+    /// abort in every profile.
     pub fn seg_op(base: u64, seg: u32) -> u64 {
-        debug_assert!((seg as u64) < LOW_MASK, "segment index {seg} overflows framing");
+        assert!((seg as u64) < LOW_MASK, "segment index {seg} overflows framing");
         (base << SEG_BITS) | (seg as u64 + 1)
     }
 
@@ -397,5 +409,23 @@ mod tests {
         assert_eq!(segment::seg_index(1 << segment::SEG_BITS), None);
         assert_eq!(segment::seg_index(1), Some(0));
         assert_eq!(segment::base_op(1), 0); // never a valid pipeline base
+    }
+
+    /// Regression (release-mode op-id aliasing): an overflowing segment
+    /// index must abort in every build profile, never alias another
+    /// operation's op id. The bound is a hard `assert!`, so this panics
+    /// with or without debug assertions.
+    #[test]
+    #[should_panic(expected = "overflows framing")]
+    fn segment_index_overflow_is_a_hard_error() {
+        segment::seg_op(1, segment::MAX_SEGMENTS as u32);
+    }
+
+    #[test]
+    fn segment_index_at_max_roundtrips() {
+        let seg = segment::MAX_SEGMENTS as u32 - 1;
+        let op = segment::seg_op(3, seg);
+        assert_eq!(segment::seg_index(op), Some(seg));
+        assert_eq!(segment::base_op(op), 3);
     }
 }

@@ -89,4 +89,12 @@ fn campaign_exercises_the_whole_grid() {
     assert!(count(|s| matches!(s.pattern, FailurePattern::InOp { .. })) > 10);
     assert!(count(|s| s.n == 1) > 0, "n=1 edge case missing");
     assert!(count(|s| s.f == 0) > 0, "f=0 edge case missing");
+    // self-healing sessions: present at scale, with K >= 3 and failures
+    // landing between/during epochs (the ISSUE 3 acceptance scenario)
+    assert!(count(|s| s.is_session()) > 50, "session scenarios missing");
+    assert!(count(|s| matches!(s.pattern, FailurePattern::EpochSpread { .. })) > 5);
+    assert!(
+        count(|s| s.is_session() && s.session_ops >= 3 && !s.failures.is_empty()) > 10,
+        "no K>=3 sessions with failures"
+    );
 }

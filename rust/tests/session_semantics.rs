@@ -1,0 +1,330 @@
+//! Self-healing session semantics on the deterministic DES — the
+//! ISSUE 3 acceptance criteria:
+//!
+//! * after killing f processes in epoch 0, epochs 1..K complete with
+//!   ZERO additional timeout (Detect) events and zero additional sends
+//!   to dead ranks — epoch k+1 runs on the n-f dense survivors and
+//!   never arms a watch on an excluded rank,
+//! * every survivor's membership view is identical after every fold,
+//! * per-epoch inclusion semantics hold (live exactly once, dead
+//!   all-or-nothing in their death epoch, excluded never again),
+//! * a campaign slice of session<K> scenarios (K ≥ 3, failures between
+//!   and during epochs) passes every oracle.
+
+use ftcoll::campaign;
+use ftcoll::prelude::*;
+use ftcoll::session::OpKind;
+use ftcoll::sim::{run_session, SessionReport};
+use ftcoll::trace::TraceEvent;
+
+fn detect_events(rep: &SessionReport) -> usize {
+    rep.run
+        .trace
+        .events()
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::Detect { .. }))
+        .count()
+}
+
+fn session_cfg(n: u32, f: u32, ops: u32) -> SimConfig {
+    SimConfig::new(n, f)
+        .payload(PayloadKind::OneHot)
+        .session_ops(ops)
+        .tracing(true)
+}
+
+/// Acceptance: f pre-operational kills. Epoch 0 pays the detection
+/// timeouts exactly once; epochs 1..K run on the n-f dense survivors
+/// with zero further Detects and zero further sends to the dead —
+/// proven by comparing against a one-epoch run of the same seed, which
+/// contains ALL the dead-rank traffic the K-epoch run ever produces.
+#[test]
+fn epochs_after_exclusion_never_touch_dead_ranks() {
+    let n = 16u32;
+    let f = 3u32;
+    let dead = [4u32, 9, 13];
+    let fails: Vec<FailureSpec> =
+        dead.iter().map(|&rank| FailureSpec::Pre { rank }).collect();
+
+    let one = run_session(&session_cfg(n, f, 1).failures(fails.clone()), OpKind::Reduce);
+    let four = run_session(&session_cfg(n, f, 4).failures(fails), OpKind::Reduce);
+
+    // epochs 1..4 add no timeouts and no traffic to dead ranks
+    assert_eq!(
+        detect_events(&one),
+        detect_events(&four),
+        "epochs 1..K fired detection timeouts on excluded ranks"
+    );
+    assert_eq!(
+        one.run.metrics.sends_to_dead(),
+        four.run.metrics.sends_to_dead(),
+        "epochs 1..K sent messages to excluded ranks"
+    );
+
+    // every survivor: 4 deliveries, identical n-f member view
+    let v0 = &four.views[0];
+    assert_eq!(v0.members.len() as u32, n - f);
+    assert_eq!(v0.excluded, dead.to_vec());
+    for r in 0..n {
+        if dead.contains(&r) {
+            assert_eq!(four.run.deliveries_at(r), 0, "dead rank {r} delivered");
+            continue;
+        }
+        assert_eq!(four.run.deliveries_at(r), 4, "rank {r}");
+        let v = &four.views[r as usize];
+        assert!(v.done, "rank {r}: {v:?}");
+        assert_eq!(v, v0, "rank {r}: membership view diverged");
+    }
+
+    // per-epoch root masks: dead excluded in every epoch, live once
+    for (e, out) in four.run.outcomes[0].iter().enumerate() {
+        match out {
+            Outcome::ReduceRoot { value, known_failed } => {
+                let counts = value.inclusion_counts();
+                for r in 0..n as usize {
+                    let want = if dead.contains(&(r as u32)) { 0 } else { 1 };
+                    assert_eq!(counts[r], want, "epoch {e} rank {r}");
+                }
+                if e == 0 {
+                    assert_eq!(known_failed, &dead.to_vec());
+                } else {
+                    assert!(known_failed.is_empty(), "epoch {e} re-reported old deaths");
+                }
+            }
+            o => panic!("epoch {e}: unexpected {o:?}"),
+        }
+    }
+}
+
+/// An in-operational death (victim dies attempting its first send) is
+/// detected, reported, and excluded: the victim contributes to no epoch
+/// and the membership shrinks after epoch 0.
+#[test]
+fn in_op_death_is_excluded_for_later_epochs() {
+    let cfg = session_cfg(9, 2, 3)
+        .failure(FailureSpec::AfterSends { rank: 3, sends: 0 });
+    let rep = run_session(&cfg, OpKind::Reduce);
+    for r in 0..9u32 {
+        if r == 3 {
+            continue;
+        }
+        assert_eq!(rep.run.deliveries_at(r), 3, "rank {r}");
+        assert_eq!(rep.views[r as usize].excluded, vec![3], "rank {r}");
+        assert_eq!(rep.views[r as usize].members.len(), 8, "rank {r}");
+    }
+    for (e, out) in rep.run.outcomes[0].iter().enumerate() {
+        match out {
+            Outcome::ReduceRoot { value, .. } => {
+                let counts = value.inclusion_counts();
+                assert_eq!(counts[3], 0, "epoch {e}: victim died before sending");
+                for r in 0..9usize {
+                    if r != 3 {
+                        assert_eq!(counts[r], 1, "epoch {e} rank {r}");
+                    }
+                }
+            }
+            o => panic!("epoch {e}: unexpected {o:?}"),
+        }
+    }
+}
+
+/// Allreduce session with dead candidate roots: epoch 0 rotates past
+/// them (attempts = k+1), reports them, and every later epoch runs in a
+/// single attempt on the survivors — the self-healing claim.
+#[test]
+fn allreduce_session_rootkill_heals() {
+    let cfg = session_cfg(12, 2, 3)
+        .failures(vec![FailureSpec::Pre { rank: 0 }, FailureSpec::Pre { rank: 1 }]);
+    let rep = run_session(&cfg, OpKind::Allreduce);
+    for r in 2..12u32 {
+        let outs = &rep.run.outcomes[r as usize];
+        assert_eq!(outs.len(), 3, "rank {r}");
+        for (e, out) in outs.iter().enumerate() {
+            match out {
+                Outcome::Allreduce { value, attempts } => {
+                    if e == 0 {
+                        assert_eq!(*attempts, 3, "rank {r}: epoch 0 rotates twice");
+                    } else {
+                        assert_eq!(
+                            *attempts, 1,
+                            "rank {r} epoch {e}: rotation despite exclusion"
+                        );
+                    }
+                    let counts = value.inclusion_counts();
+                    assert_eq!(counts[0], 0);
+                    assert_eq!(counts[1], 0);
+                    for q in 2..12usize {
+                        assert_eq!(counts[q], 1, "epoch {e} rank {q}");
+                    }
+                }
+                o => panic!("rank {r} epoch {e}: unexpected {o:?}"),
+            }
+        }
+        assert_eq!(rep.views[r as usize].excluded, vec![0, 1], "rank {r}");
+        assert_eq!(rep.views[r as usize], rep.views[2], "rank {r} view diverged");
+    }
+}
+
+/// Timed kills landing across epoch boundaries: all survivors still
+/// complete every epoch, inclusion is monotone per rank (once out,
+/// never back), and the survivor views agree.
+#[test]
+fn timed_kills_across_epochs() {
+    let cfg = session_cfg(10, 2, 4).failures(vec![
+        FailureSpec::AtTime { rank: 7, at: 5_000 },
+        FailureSpec::AtTime { rank: 2, at: 400_000 },
+    ]);
+    let rep = run_session(&cfg, OpKind::Reduce);
+    let survivors: Vec<u32> = (0..10).filter(|r| ![2u32, 7].contains(r)).collect();
+    let v0 = &rep.views[survivors[0] as usize];
+    for &r in &survivors {
+        assert_eq!(rep.run.deliveries_at(r), 4, "rank {r}");
+        assert_eq!(&rep.views[r as usize], v0, "rank {r} view diverged");
+    }
+    // monotone inclusion at the root across epochs
+    let mut prev: Option<Vec<i64>> = None;
+    for (e, out) in rep.run.outcomes[0].iter().enumerate() {
+        match out {
+            Outcome::ReduceRoot { value, .. } => {
+                let counts = value.inclusion_counts().to_vec();
+                for r in 0..10usize {
+                    if survivors.contains(&(r as u32)) {
+                        assert_eq!(counts[r], 1, "epoch {e} rank {r}");
+                    } else {
+                        assert!(counts[r] <= 1, "epoch {e} rank {r}");
+                    }
+                    if let Some(p) = &prev {
+                        assert!(
+                            counts[r] <= p[r],
+                            "epoch {e} rank {r}: inclusion came back after dropping out"
+                        );
+                    }
+                }
+                prev = Some(counts);
+            }
+            o => panic!("epoch {e}: unexpected {o:?}"),
+        }
+    }
+    // exclusion only ever names genuinely dead ranks
+    for &r in &survivors {
+        for x in &rep.views[r as usize].excluded {
+            assert!([2u32, 7].contains(x), "live rank {x} excluded");
+        }
+    }
+}
+
+/// Segmented session epochs on the DES: the pipelined driver under the
+/// session, per-segment masks exact in every epoch.
+#[test]
+fn segmented_session_epochs_on_des() {
+    let n = 8u32;
+    let cfg = SimConfig::new(n, 2)
+        .payload(PayloadKind::SegMask { segments: 3 })
+        .segment_bytes(8 * n as usize)
+        .session_ops(2)
+        .failure(FailureSpec::Pre { rank: 5 });
+    let rep = run_session(&cfg, OpKind::Reduce);
+    for r in 0..n {
+        if r == 5 {
+            continue;
+        }
+        assert_eq!(rep.run.deliveries_at(r), 2, "rank {r}");
+        assert_eq!(rep.views[r as usize].excluded, vec![5], "rank {r}");
+    }
+    for (e, out) in rep.run.outcomes[0].iter().enumerate() {
+        match out {
+            Outcome::ReduceRoot { value, known_failed } => {
+                let counts = value.inclusion_counts();
+                assert_eq!(counts.len(), 3 * n as usize, "epoch {e}");
+                for b in 0..3 {
+                    for r in 0..n as usize {
+                        let want = if r == 5 { 0 } else { 1 };
+                        assert_eq!(
+                            counts[b * n as usize + r],
+                            want,
+                            "epoch {e} block {b} rank {r}"
+                        );
+                    }
+                }
+                if e == 0 {
+                    assert_eq!(known_failed, &vec![5]);
+                }
+            }
+            o => panic!("epoch {e}: unexpected {o:?}"),
+        }
+    }
+}
+
+/// Under the Bit scheme no ids flow, so nothing can be excluded — the
+/// session must still complete every epoch correctly (it just re-pays
+/// the detection timeout each time). Exclusion is an optimization,
+/// never a correctness requirement.
+#[test]
+fn bit_scheme_session_completes_without_shrinking() {
+    let cfg = session_cfg(8, 1, 3)
+        .scheme(Scheme::Bit)
+        .failure(FailureSpec::Pre { rank: 6 });
+    let rep = run_session(&cfg, OpKind::Reduce);
+    for r in 0..8u32 {
+        if r == 6 {
+            continue;
+        }
+        assert_eq!(rep.run.deliveries_at(r), 3, "rank {r}");
+        assert!(rep.views[r as usize].excluded.is_empty(), "Bit scheme excluded ids");
+        assert_eq!(rep.views[r as usize].members.len(), 8);
+    }
+    for (e, out) in rep.run.outcomes[0].iter().enumerate() {
+        match out {
+            Outcome::ReduceRoot { value, .. } => {
+                let counts = value.inclusion_counts();
+                assert_eq!(counts[6], 0, "epoch {e}");
+                for r in 0..8usize {
+                    if r != 6 {
+                        assert_eq!(counts[r], 1, "epoch {e} rank {r}");
+                    }
+                }
+            }
+            o => panic!("epoch {e}: unexpected {o:?}"),
+        }
+    }
+}
+
+/// Sessions are bit-deterministic like everything else on the DES.
+#[test]
+fn session_runs_are_deterministic() {
+    let cfg = session_cfg(12, 2, 3).failures(vec![
+        FailureSpec::Pre { rank: 8 },
+        FailureSpec::AfterSends { rank: 10, sends: 2 },
+    ]);
+    let a = run_session(&cfg, OpKind::Allreduce);
+    let b = run_session(&cfg, OpKind::Allreduce);
+    assert_eq!(a.run.final_time, b.run.final_time);
+    assert_eq!(a.run.metrics.total_msgs(), b.run.metrics.total_msgs());
+    assert_eq!(a.views.len(), b.views.len());
+    for (x, y) in a.views.iter().zip(&b.views) {
+        assert_eq!(x, y);
+    }
+}
+
+/// Campaign acceptance: every session<K> scenario of a 400-scenario
+/// grid slice (K >= 2, including epoch-spread failure plans) passes
+/// every oracle.
+#[test]
+fn campaign_session_scenarios_pass_all_oracles() {
+    let grid = campaign::GridConfig { count: 400, seed: 21, max_n: 96 };
+    let specs = campaign::generate(&grid);
+    let sessions: Vec<_> = specs.iter().filter(|s| s.is_session()).collect();
+    assert!(sessions.len() >= 30, "only {} session scenarios in 400", sessions.len());
+    assert!(
+        sessions.iter().any(|s| s.session_ops >= 3 && !s.failures.is_empty()),
+        "no K>=3 session with failures"
+    );
+    let mut checks = 0u64;
+    for spec in &sessions {
+        let base = campaign::baseline_of(spec);
+        let (result, _rep) = campaign::run_scenario(spec, &base);
+        assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
+        checks += result.oracle_checks as u64;
+    }
+    assert!(checks > 1000, "session oracles barely ran ({checks})");
+}
