@@ -119,7 +119,7 @@ fn main() {
         let t_ar = std::time::Instant::now();
         let rep = run_live(&ecfg, move |rank, _| {
             let g = grads_ref[rank as usize].clone().unwrap_or_else(|| vec![0.0; p]);
-            Box::new(Allreduce::new(AllreduceConfig::new(n, ff), Value::F32(g)))
+            Box::new(Allreduce::new(AllreduceConfig::new(n, ff), Value::f32(g)))
         });
         let allreduce_ms = t_ar.elapsed().as_secs_f64() * 1e3;
 

@@ -282,12 +282,15 @@ fn check_broadcast(
 }
 
 /// Session clauses (docs/SESSIONS.md): one delivery per epoch at every
-/// never-failed rank; per-epoch inclusion semantics on the OneHot
-/// carrier; monotone membership (a rank's inclusion never comes back
-/// after it dropped out); allreduce per-epoch agreement; and — the
-/// self-healing claim — after a `RootKill{k}` under the List scheme,
-/// epoch 0 pays k rotations and every later epoch completes in one
-/// attempt because the dead candidates were excluded.
+/// never-failed rank; every epoch's outcome matches that epoch's *op
+/// kind* (uniform `collective` repetitions, or the explicit `-mix`
+/// sequence — [`ScenarioSpec::session_kinds`]); per-epoch inclusion
+/// semantics on the OneHot carrier for reduce/allreduce epochs;
+/// monotone membership (a rank's inclusion never comes back after it
+/// dropped out); allreduce per-epoch agreement; and — the self-healing
+/// claim — after a `RootKill{k}` under the List scheme, epoch 0 pays k
+/// rotations and every later epoch completes in one attempt because
+/// the dead candidates were excluded.
 fn check_session(
     spec: &ScenarioSpec,
     rep: &RunReport,
@@ -296,7 +299,11 @@ fn check_session(
     injected: &HashSet<Rank>,
     o: &mut OracleReport,
 ) {
+    use crate::session::OpKind;
+
     let k = spec.session_ops as usize;
+    let kinds = spec.session_kinds();
+    debug_assert_eq!(kinds.len(), k);
     for r in 0..spec.n {
         let d = rep.deliveries_at(r);
         o.check(d <= k, || format!("rank {r} delivered {d} epochs (session has {k})"));
@@ -316,107 +323,88 @@ fn check_session(
         }
     }
 
-    // per-epoch root values, collected for the monotonicity check
+    // per-epoch outcome kinds + value collection, applied per op kind
+    // (deliveries are in epoch order at every rank)
     let mut epoch_values: Vec<Option<&Value>> = vec![None; k];
-    match spec.collective {
-        Collective::Reduce => {
-            for (e, out) in rep.outcomes[spec.root as usize].iter().enumerate() {
-                match out {
-                    Outcome::ReduceRoot { value, known_failed } => {
-                        o.check(known_failed.iter().all(|x| injected.contains(x)), || {
-                            format!("epoch {e}: report {known_failed:?} lists non-injected")
-                        });
-                        o.check(known_failed.windows(2).all(|w| w[0] < w[1]), || {
-                            format!("epoch {e}: report {known_failed:?} not sorted/deduped")
-                        });
-                        if e < k {
-                            epoch_values[e] = Some(value);
-                        }
-                    }
-                    other => {
-                        o.check(false, || format!("epoch {e}: root delivered {other:?}"))
-                    }
-                }
+    let mut per_epoch_ar: Vec<Option<(&Value, u32)>> = vec![None; k];
+    for r in 0..spec.n {
+        for (e, out) in rep.outcomes[r as usize].iter().enumerate() {
+            if e >= k {
+                continue; // flagged by the d <= k clause above
             }
-            for r in 0..spec.n {
-                if r == spec.root {
-                    continue;
-                }
-                for out in &rep.outcomes[r as usize] {
-                    o.check(matches!(out, Outcome::ReduceDone), || {
-                        format!("session non-root rank {r} delivered {out:?}")
+            match (kinds[e], out) {
+                (OpKind::Reduce, Outcome::ReduceRoot { value, known_failed })
+                    if r == spec.root =>
+                {
+                    o.check(known_failed.iter().all(|x| injected.contains(x)), || {
+                        format!("epoch {e}: report {known_failed:?} lists non-injected")
                     });
+                    o.check(known_failed.windows(2).all(|w| w[0] < w[1]), || {
+                        format!("epoch {e}: report {known_failed:?} not sorted/deduped")
+                    });
+                    epoch_values[e] = Some(value);
                 }
-            }
-        }
-        Collective::Allreduce => {
-            let mut per_epoch: Vec<Option<(&Value, u32)>> = vec![None; k];
-            for r in 0..spec.n {
-                for (e, out) in rep.outcomes[r as usize].iter().enumerate() {
-                    match out {
-                        Outcome::Allreduce { value, attempts } => {
-                            o.check(*attempts <= spec.f + 1, || {
+                (OpKind::Reduce, Outcome::ReduceDone) if r != spec.root => {}
+                (OpKind::Allreduce, Outcome::Allreduce { value, attempts }) => {
+                    o.check(*attempts <= spec.f + 1, || {
+                        format!(
+                            "epoch {e} rank {r}: {attempts} attempts exceed f+1={}",
+                            spec.f + 1
+                        )
+                    });
+                    match per_epoch_ar[e] {
+                        None => per_epoch_ar[e] = Some((value, *attempts)),
+                        Some((v0, a0)) => {
+                            o.check(*value == *v0, || {
                                 format!(
-                                    "epoch {e} rank {r}: {attempts} attempts exceed f+1={}",
-                                    spec.f + 1
+                                    "epoch {e} rank {r} disagrees on the value \
+                                     (§5.1 item 5)"
                                 )
                             });
-                            if e >= k {
-                                continue;
-                            }
-                            match per_epoch[e] {
-                                None => per_epoch[e] = Some((value, *attempts)),
-                                Some((v0, a0)) => {
-                                    o.check(*value == *v0, || {
-                                        format!(
-                                            "epoch {e} rank {r} disagrees on the value \
-                                             (§5.1 item 5)"
-                                        )
-                                    });
-                                    o.check(*attempts == a0, || {
-                                        format!(
-                                            "epoch {e} rank {r} disagrees on attempts"
-                                        )
-                                    });
-                                }
-                            }
-                        }
-                        other => {
-                            o.check(false, || format!("epoch {e} rank {r}: {other:?}"))
-                        }
-                    }
-                }
-            }
-            // the self-healing claim: exclusion of the dead candidates
-            // makes every post-RootKill epoch a single-attempt run
-            if let FailurePattern::RootKill { k: killed } = spec.pattern {
-                if let Some((_, a0)) = per_epoch[0] {
-                    o.check(a0 == killed + 1, || {
-                        format!("epoch 0: {a0} attempts, want {} (RootKill)", killed + 1)
-                    });
-                }
-                if spec.scheme == Scheme::List {
-                    for (e, slot) in per_epoch.iter().enumerate().skip(1) {
-                        if let Some((_, a)) = slot {
-                            o.check(*a == 1, || {
-                                format!(
-                                    "epoch {e}: {a} attempts — dead candidates were \
-                                     reported in epoch 0 and must be excluded"
-                                )
+                            o.check(*attempts == a0, || {
+                                format!("epoch {e} rank {r} disagrees on attempts")
                             });
                         }
                     }
                 }
+                (OpKind::Broadcast, Outcome::Broadcast(_)) => {
+                    // broadcast epochs carry no failure information;
+                    // the generic delivery clauses cover them
+                }
+                (kind, other) => o.check(false, || {
+                    format!("epoch {e} rank {r}: delivered {other:?} in a {kind:?} epoch")
+                }),
             }
-            for (e, slot) in per_epoch.iter().enumerate() {
-                if let Some((v, _)) = *slot {
-                    epoch_values[e] = Some(v);
+        }
+    }
+
+    // the self-healing claim: exclusion of the dead candidates makes
+    // every post-RootKill epoch a single-attempt run (uniform
+    // allreduce sessions only — RootKill is never generated for -mix)
+    if spec.ops_list.is_none() && spec.collective == Collective::Allreduce {
+        if let FailurePattern::RootKill { k: killed } = spec.pattern {
+            if let Some((_, a0)) = per_epoch_ar[0] {
+                o.check(a0 == killed + 1, || {
+                    format!("epoch 0: {a0} attempts, want {} (RootKill)", killed + 1)
+                });
+            }
+            if spec.scheme == Scheme::List {
+                for (e, slot) in per_epoch_ar.iter().enumerate().skip(1) {
+                    if let Some((_, a)) = slot {
+                        o.check(*a == 1, || {
+                            format!(
+                                "epoch {e}: {a} attempts — dead candidates were \
+                                 reported in epoch 0 and must be excluded"
+                            )
+                        });
+                    }
                 }
             }
         }
-        Collective::Broadcast => {
-            // broadcast sessions carry no failure information; only the
-            // generic delivery clauses above apply
+    }
+    for (e, slot) in per_epoch_ar.iter().enumerate() {
+        if let Some((v, _)) = *slot {
+            epoch_values[e] = Some(v);
         }
     }
 

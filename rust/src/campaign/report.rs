@@ -35,12 +35,21 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
     let dead: Vec<String> = s.dead.iter().map(|r| r.to_string()).collect();
     let violations: Vec<String> =
         s.violations.iter().map(|v| format!("\"{}\"", json_escape(v))).collect();
+    // mixed sessions additionally carry their epoch sequence; the field
+    // is absent elsewhere so non-mixed rows render exactly as before
+    let ops_field = match &spec.ops_list {
+        Some(ops) => format!(
+            "\"ops\":\"{}\",",
+            ops.iter().map(|k| k.name()).collect::<Vec<_>>().join(",")
+        ),
+        None => String::new(),
+    };
     format!(
         "    {{\"index\":{},\"id\":\"{}\",\"seed\":{},\
          \"collective\":\"{}\",\"n\":{},\"f\":{},\"root\":{},\
          \"scheme\":\"{}\",\"op\":\"{}\",\"payload\":\"{}\",\"net\":\"{}\",\
          \"detect_ns\":{},\"segment_bytes\":{},\"segments\":{},\
-         \"session_ops\":{},\"pattern\":\"{}\",\"failures\":\"{}\",\
+         \"session_ops\":{},{}\"pattern\":\"{}\",\"failures\":\"{}\",\
          \"delivered\":{},\"dead\":[{}],\
          \"msgs\":{},\"upcorr\":{},\"tree\":{},\"bytes\":{},\
          \"final_time_ns\":{},\"makespan_ns\":{},\"attempts\":{},\
@@ -60,6 +69,7 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         spec.segment_bytes.map(|b| b.to_string()).unwrap_or_else(|| "null".to_string()),
         spec.num_segments(),
         spec.session_ops,
+        ops_field,
         spec.pattern.label(),
         json_escape(&spec.failures_str()),
         s.delivered,
@@ -170,17 +180,19 @@ pub fn summary_table(result: &CampaignResult) -> String {
     // session split: multi-epoch scenario count, pass count and total
     // epochs executed — CI greps this line to catch the axis drifting
     // out of the grid
-    let (mut sess, mut sess_pass, mut epochs) = (0u64, 0u64, 0u64);
+    let (mut sess, mut sess_pass, mut epochs, mut mixed) = (0u64, 0u64, 0u64, 0u64);
     for (spec, sc) in specs.iter().zip(&result.scenarios) {
         if spec.is_session() {
             sess += 1;
             sess_pass += sc.passed() as u64;
             epochs += spec.session_ops as u64;
+            mixed += spec.ops_list.is_some() as u64;
         }
     }
     let _ = writeln!(
         out,
-        "sessions: {sess} multi-epoch ({sess_pass} passed) / {epochs} epochs total"
+        "sessions: {sess} multi-epoch ({sess_pass} passed) / {epochs} epochs total / \
+         {mixed} mixed-kind"
     );
     out
 }

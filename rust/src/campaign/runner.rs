@@ -86,6 +86,9 @@ impl CampaignResult {
 }
 
 /// Execute one scenario and evaluate the oracles against `base`.
+/// Borrows the spec throughout — the only per-scenario allocations are
+/// the id string and dead list the result record owns (the run's
+/// payload traffic itself moves by refcount, [`crate::types`]).
 pub fn run_scenario(spec: &ScenarioSpec, base: &Baseline) -> (ScenarioResult, RunReport) {
     let rep = execute(spec, false);
     let o = oracle::check(spec, &rep, base);
@@ -124,7 +127,7 @@ pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
     let mut cfg = spec.sim_config();
     cfg.trace = trace;
     if spec.is_session() {
-        return sim::run_session(&cfg, session_kind(spec.collective)).run;
+        return sim::run_session(&cfg, spec.collective.op_kind()).run;
     }
     match spec.collective {
         Collective::Reduce => sim::run_reduce(&cfg),
@@ -133,19 +136,11 @@ pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
     }
 }
 
-fn session_kind(c: Collective) -> crate::session::OpKind {
-    match c {
-        Collective::Reduce => crate::session::OpKind::Reduce,
-        Collective::Allreduce => crate::session::OpKind::Allreduce,
-        Collective::Broadcast => crate::session::OpKind::Broadcast,
-    }
-}
-
 /// The failure-free baseline counts for a scenario's configuration.
 pub fn baseline_of(spec: &ScenarioSpec) -> Baseline {
     let cfg = spec.baseline_sim_config();
     if spec.is_session() {
-        return Baseline::of(&sim::run_session(&cfg, session_kind(spec.collective)).run);
+        return Baseline::of(&sim::run_session(&cfg, spec.collective.op_kind()).run);
     }
     let rep = match spec.collective {
         Collective::Reduce => sim::run_reduce(&cfg),
@@ -235,6 +230,22 @@ mod tests {
                 result.violations
             );
         }
+    }
+
+    /// Mixed-kind sessions (`-mix`) execute end-to-end and satisfy the
+    /// per-epoch per-op-kind oracles.
+    #[test]
+    fn mixed_session_scenarios_pass_oracles() {
+        let grid = GridConfig { count: 400, seed: 7, max_n: 64 };
+        let specs = generate(&grid);
+        let mut seen = 0;
+        for spec in specs.iter().filter(|s| s.ops_list.is_some()).take(5) {
+            seen += 1;
+            let base = baseline_of(spec);
+            let (result, _rep) = run_scenario(spec, &base);
+            assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
+        }
+        assert!(seen >= 1, "no mixed session in a 400-scenario grid");
     }
 
     #[test]

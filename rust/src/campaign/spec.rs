@@ -15,6 +15,7 @@ use crate::collectives::ReduceOp;
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
 use crate::prng::Pcg;
+use crate::session::OpKind;
 use crate::sim::net::NetModel;
 use crate::sim::SimConfig;
 use crate::types::{Rank, TimeNs};
@@ -33,6 +34,16 @@ impl Collective {
             Collective::Reduce => "reduce",
             Collective::Allreduce => "allreduce",
             Collective::Broadcast => "broadcast",
+        }
+    }
+
+    /// The session [`OpKind`] this collective runs per epoch — the one
+    /// place the Collective → OpKind mapping lives.
+    pub fn op_kind(&self) -> OpKind {
+        match self {
+            Collective::Reduce => OpKind::Reduce,
+            Collective::Allreduce => OpKind::Allreduce,
+            Collective::Broadcast => OpKind::Broadcast,
         }
     }
 }
@@ -179,6 +190,10 @@ pub struct ScenarioSpec {
     /// K ≥ 2 = a self-healing session of K operations of `collective`
     /// over an evolving membership ([`crate::session`]).
     pub session_ops: u32,
+    /// Mixed-kind sessions (`-mix` id suffix): the explicit per-epoch
+    /// operation sequence, overriding the uniform `collective` kind.
+    /// Always `session_ops` entries with ≥ 2 distinct kinds.
+    pub ops_list: Option<Vec<OpKind>>,
     pub pattern: FailurePattern,
     /// Concrete failure plan instantiated from `pattern` and `seed`.
     pub failures: Vec<FailureSpec>,
@@ -197,9 +212,20 @@ impl ScenarioSpec {
             .detect_latency(self.detect_latency);
         cfg.segment_bytes = self.segment_bytes.map(|b| b as usize);
         cfg.session_ops = self.session_ops;
+        cfg.ops_list = self.ops_list.clone();
         cfg.correction = self.correction;
         cfg.seed = self.seed;
         cfg
+    }
+
+    /// The per-epoch operation kinds of a session scenario (uniform
+    /// `collective` repetitions unless the `-mix` axis set an explicit
+    /// sequence). Delegates to [`crate::runtime::RunSpec::session_kinds`]
+    /// so the expansion rule has exactly one source of truth — what the
+    /// oracle checks is what the driver runs. Meaningless for
+    /// `session_ops == 1` scenarios.
+    pub fn session_kinds(&self) -> Vec<OpKind> {
+        self.sim_config().session_kinds(self.collective.op_kind())
     }
 
     /// Number of segments the payload splits into (1 = monolithic).
@@ -236,7 +262,15 @@ impl ScenarioSpec {
             self.detect_latency,
             self.correction,
             self.segment_bytes.map_or("mono".to_string(), |b| format!("seg{b}")),
-            self.session_ops,
+            match &self.ops_list {
+                // mixed sessions key on the exact epoch sequence
+                Some(ops) => format!(
+                    "{}-{}",
+                    self.session_ops,
+                    ops.iter().map(|k| k.name()).collect::<Vec<_>>().join(",")
+                ),
+                None => self.session_ops.to_string(),
+            },
         )
     }
 
@@ -346,6 +380,30 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         1
     };
 
+    // mixed-kind axis (`-mix`): ~1/3 of allreduce sessions run an
+    // explicit reduce/allreduce/broadcast epoch sequence instead of K
+    // uniform operations. Allreduce sessions only: their victim pool
+    // already spares ranks 0..=f, so every epoch's (dense-0) root and
+    // candidate set stay alive for the reduce/broadcast epochs too.
+    // Draws happen only inside this branch, so non-session scenarios
+    // are generated bit-identically to the pre-mix grid.
+    let ops_list: Option<Vec<OpKind>> = if session_ops > 1
+        && collective == Collective::Allreduce
+        && rng.below(3) == 0
+    {
+        let pool = [OpKind::Reduce, OpKind::Allreduce, OpKind::Broadcast];
+        let mut ops: Vec<OpKind> =
+            (0..session_ops).map(|_| pool[rng.below(3) as usize]).collect();
+        if ops.iter().all(|k| *k == ops[0]) {
+            // a uniform draw is not "mixed": pin the first two epochs
+            ops[0] = OpKind::Allreduce;
+            ops[1] = OpKind::Reduce;
+        }
+        Some(ops)
+    } else {
+        None
+    };
+
     // root: allreduce derives its candidate roots 0..=f itself;
     // sessions pin the root to 0 (each epoch's root is the smallest
     // survivor, which stays world rank 0 while the root never fails)
@@ -402,8 +460,16 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
     // segment count drives the mid-pipeline kill-point range
     let segments = segment_count(payload, n, segment_bytes);
 
-    let pattern =
-        pick_pattern(&mut rng, collective, n, f, root, segments, session_ops > 1);
+    let pattern = pick_pattern(
+        &mut rng,
+        collective,
+        n,
+        f,
+        root,
+        segments,
+        session_ops > 1,
+        ops_list.is_some(),
+    );
     let failures = instantiate_pattern(
         &mut rng,
         pattern,
@@ -422,10 +488,10 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         None => String::new(),
         Some(_) => format!("-seg{segments}"),
     };
-    let sess_label = if session_ops > 1 {
-        format!("-sess{session_ops}")
-    } else {
-        String::new()
+    let sess_label = match (session_ops > 1, &ops_list) {
+        (true, Some(_)) => format!("-sess{session_ops}-mix"),
+        (true, None) => format!("-sess{session_ops}"),
+        _ => String::new(),
     };
     let id = format!(
         "s{:05}-{}-n{}-f{}-r{}-{}-{}-{}-{}-{}{}{}",
@@ -459,6 +525,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         detect_latency,
         segment_bytes,
         session_ops,
+        ops_list,
         pattern,
         failures,
     }
@@ -483,6 +550,7 @@ fn pick_pattern(
     root: Rank,
     segments: u32,
     session: bool,
+    mixed: bool,
 ) -> FailurePattern {
     let pool_len = victim_pool(collective, n, f, root).len() as u32;
     // Reduce (and allreduce's reduce half) finds a failure-free subtree
@@ -532,7 +600,13 @@ fn pick_pattern(
     }
     if rootkill_max >= 1 {
         let k = rng.range(1, rootkill_max as u64) as u32;
-        options.push(FailurePattern::RootKill { k });
+        // mixed sessions contain reduce/broadcast epochs whose epoch-0
+        // root is world rank 0 — pre-killing the allreduce candidates
+        // would kill that root, so RootKill stays uniform-only (the
+        // draw still happens to keep the stream aligned)
+        if !mixed {
+            options.push(FailurePattern::RootKill { k });
+        }
     }
     // weight away from the clean case when failures are possible
     if options.len() > 1 && rng.below(8) != 0 {
@@ -766,6 +840,39 @@ mod tests {
             sessions.iter().any(|s| !s.failures.is_empty()),
             "every session scenario is failure-free"
         );
+    }
+
+    #[test]
+    fn grid_covers_mixed_sessions() {
+        let specs = generate(&GridConfig { count: 1000, seed: 7, max_n: 128 });
+        let mixed: Vec<_> = specs.iter().filter(|s| s.ops_list.is_some()).collect();
+        assert!(
+            mixed.len() >= 10,
+            "only {} of 1000 scenarios are mixed sessions — axis drifted",
+            mixed.len()
+        );
+        for s in &mixed {
+            let ops = s.ops_list.as_ref().unwrap();
+            assert_eq!(s.collective, Collective::Allreduce, "{}", s.id);
+            assert_eq!(ops.len() as u32, s.session_ops, "{}", s.id);
+            assert!(s.id.ends_with("-mix"), "{} lacks the -mix label", s.id);
+            let distinct: std::collections::HashSet<_> =
+                ops.iter().map(|k| k.name()).collect();
+            assert!(distinct.len() >= 2, "{}: uniform ops {ops:?} labelled mixed", s.id);
+            assert_eq!(s.session_kinds(), *ops, "{}", s.id);
+            // RootKill would pre-kill the reduce/broadcast epochs' root
+            assert_ne!(s.pattern.family(), "rootkill", "{}", s.id);
+            s.sim_config().validate().unwrap();
+        }
+        // every kind appears somewhere across the mixed sessions
+        for kind in ["reduce", "allreduce", "broadcast"] {
+            assert!(
+                mixed
+                    .iter()
+                    .any(|s| s.ops_list.as_ref().unwrap().iter().any(|k| k.name() == kind)),
+                "no mixed session contains a {kind} epoch"
+            );
+        }
     }
 
     #[test]

@@ -387,7 +387,7 @@ mod tests {
     use crate::types::MsgKind;
 
     fn scalar(v: f64) -> Value {
-        Value::F64(vec![v])
+        Value::f64(vec![v])
     }
 
     fn m(kind: MsgKind, epoch: u32, v: f64) -> Msg {

@@ -100,7 +100,7 @@ mod tests {
     use crate::collectives::testutil::TestCtx;
 
     fn scalar(v: f64) -> Value {
-        Value::F64(vec![v])
+        Value::f64(vec![v])
     }
 
     #[test]

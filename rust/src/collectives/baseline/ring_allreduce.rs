@@ -132,7 +132,7 @@ mod tests {
     use crate::collectives::testutil::TestCtx;
 
     fn scalar(v: f64) -> Value {
-        Value::F64(vec![v])
+        Value::f64(vec![v])
     }
 
     fn msg(phase: u32, v: f64) -> Msg {

@@ -199,7 +199,7 @@ mod tests {
     use crate::collectives::testutil::TestCtx;
 
     fn value(v: f64) -> Value {
-        Value::F64(vec![v])
+        Value::f64(vec![v])
     }
 
     fn bmsg(kind: MsgKind, v: f64) -> Msg {

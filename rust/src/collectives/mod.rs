@@ -83,6 +83,9 @@ pub struct NativeReducer(pub ReduceOp);
 
 impl Reducer for NativeReducer {
     fn combine(&self, acc: &mut Value, other: &Value) {
+        // make_mut: in place when the accumulator is the only owner of
+        // its buffer, copy-on-write when it still shares one (e.g. a
+        // segment view) — other views never observe the mutation
         fn zip<T: Copy, F: Fn(T, T) -> T>(a: &mut [T], b: &[T], f: F) {
             assert_eq!(a.len(), b.len(), "payload length mismatch");
             for (x, y) in a.iter_mut().zip(b) {
@@ -90,18 +93,34 @@ impl Reducer for NativeReducer {
             }
         }
         match (acc, other, self.0) {
-            (Value::F32(a), Value::F32(b), ReduceOp::Sum) => zip(a, b, |x, y| x + y),
-            (Value::F32(a), Value::F32(b), ReduceOp::Max) => zip(a, b, f32::max),
-            (Value::F32(a), Value::F32(b), ReduceOp::Min) => zip(a, b, f32::min),
-            (Value::F32(a), Value::F32(b), ReduceOp::Prod) => zip(a, b, |x, y| x * y),
-            (Value::F64(a), Value::F64(b), ReduceOp::Sum) => zip(a, b, |x, y| x + y),
-            (Value::F64(a), Value::F64(b), ReduceOp::Max) => zip(a, b, f64::max),
-            (Value::F64(a), Value::F64(b), ReduceOp::Min) => zip(a, b, f64::min),
-            (Value::F64(a), Value::F64(b), ReduceOp::Prod) => zip(a, b, |x, y| x * y),
-            (Value::I64(a), Value::I64(b), ReduceOp::Sum) => zip(a, b, |x, y| x + y),
-            (Value::I64(a), Value::I64(b), ReduceOp::Max) => zip(a, b, std::cmp::max),
-            (Value::I64(a), Value::I64(b), ReduceOp::Min) => zip(a, b, std::cmp::min),
-            (Value::I64(a), Value::I64(b), ReduceOp::Prod) => zip(a, b, |x, y| x * y),
+            (Value::F32(a), Value::F32(b), ReduceOp::Sum) => {
+                zip(a.make_mut(), b, |x, y| x + y)
+            }
+            (Value::F32(a), Value::F32(b), ReduceOp::Max) => zip(a.make_mut(), b, f32::max),
+            (Value::F32(a), Value::F32(b), ReduceOp::Min) => zip(a.make_mut(), b, f32::min),
+            (Value::F32(a), Value::F32(b), ReduceOp::Prod) => {
+                zip(a.make_mut(), b, |x, y| x * y)
+            }
+            (Value::F64(a), Value::F64(b), ReduceOp::Sum) => {
+                zip(a.make_mut(), b, |x, y| x + y)
+            }
+            (Value::F64(a), Value::F64(b), ReduceOp::Max) => zip(a.make_mut(), b, f64::max),
+            (Value::F64(a), Value::F64(b), ReduceOp::Min) => zip(a.make_mut(), b, f64::min),
+            (Value::F64(a), Value::F64(b), ReduceOp::Prod) => {
+                zip(a.make_mut(), b, |x, y| x * y)
+            }
+            (Value::I64(a), Value::I64(b), ReduceOp::Sum) => {
+                zip(a.make_mut(), b, |x, y| x + y)
+            }
+            (Value::I64(a), Value::I64(b), ReduceOp::Max) => {
+                zip(a.make_mut(), b, std::cmp::max)
+            }
+            (Value::I64(a), Value::I64(b), ReduceOp::Min) => {
+                zip(a.make_mut(), b, std::cmp::min)
+            }
+            (Value::I64(a), Value::I64(b), ReduceOp::Prod) => {
+                zip(a.make_mut(), b, |x, y| x * y)
+            }
             (a, b, op) => panic!("mismatched payload types for {op:?}: {a:?} vs {b:?}"),
         }
     }
@@ -188,9 +207,9 @@ mod tests {
     #[test]
     fn native_reducer_sum_f64() {
         let r = NativeReducer(ReduceOp::Sum);
-        let mut a = Value::F64(vec![1.0, 2.0]);
-        r.combine(&mut a, &Value::F64(vec![10.0, 20.0]));
-        assert_eq!(a, Value::F64(vec![11.0, 22.0]));
+        let mut a = Value::f64(vec![1.0, 2.0]);
+        r.combine(&mut a, &Value::f64(vec![10.0, 20.0]));
+        assert_eq!(a, Value::f64(vec![11.0, 22.0]));
     }
 
     #[test]
@@ -202,9 +221,9 @@ mod tests {
             (ReduceOp::Prod, 12.0),
         ] {
             let r = NativeReducer(op);
-            let mut a = Value::F32(vec![3.0]);
-            r.combine(&mut a, &Value::F32(vec![4.0]));
-            assert_eq!(a, Value::F32(vec![expect]), "{op:?}");
+            let mut a = Value::f32(vec![3.0]);
+            r.combine(&mut a, &Value::f32(vec![4.0]));
+            assert_eq!(a, Value::f32(vec![expect]), "{op:?}");
         }
     }
 
@@ -221,20 +240,20 @@ mod tests {
     #[should_panic(expected = "length mismatch")]
     fn native_reducer_rejects_length_mismatch() {
         NativeReducer(ReduceOp::Sum)
-            .combine(&mut Value::F32(vec![1.0]), &Value::F32(vec![1.0, 2.0]));
+            .combine(&mut Value::f32(vec![1.0]), &Value::f32(vec![1.0, 2.0]));
     }
 
     #[test]
     #[should_panic(expected = "mismatched payload")]
     fn native_reducer_rejects_type_mismatch() {
         NativeReducer(ReduceOp::Sum)
-            .combine(&mut Value::F32(vec![1.0]), &Value::I64(vec![1]));
+            .combine(&mut Value::f32(vec![1.0]), &Value::i64(vec![1]));
     }
 
     #[test]
     fn outcome_value_accessor() {
         assert!(Outcome::ReduceDone.value().is_none());
-        let o = Outcome::Broadcast(Value::F64(vec![5.0]));
+        let o = Outcome::Broadcast(Value::f64(vec![5.0]));
         assert_eq!(o.value().unwrap().as_f64_scalar(), 5.0);
     }
 }

@@ -599,7 +599,7 @@ mod tests {
             op: segment::seg_op(1, seg),
             epoch: 0,
             kind: MsgKind::TreeUp,
-            payload: Value::I64(from_mask.to_vec()),
+            payload: Value::i64(from_mask.to_vec()),
             finfo,
         };
         // segment 1 resolves before segment 0 (out of order): subtree 1
@@ -634,7 +634,7 @@ mod tests {
             op: segment::seg_op(1, seg),
             epoch: 0,
             kind: MsgKind::BcastTree,
-            payload: Value::I64(vec![1, 1, 1]),
+            payload: Value::i64(vec![1, 1, 1]),
             finfo: FailureInfo::Bit(false),
         };
         p.on_message(0, bc(0), &mut ctx);
@@ -655,7 +655,7 @@ mod tests {
     fn single_segment_degenerate() {
         let mut ctx = TestCtx::new(0, 1);
         let mut p =
-            Pipelined::reduce(ReduceConfig::new(1, 1), Value::F64(vec![42.0]), 1 << 20);
+            Pipelined::reduce(ReduceConfig::new(1, 1), Value::f64(vec![42.0]), 1 << 20);
         assert_eq!(p.num_segments(), 1);
         p.on_start(&mut ctx);
         assert_eq!(ctx.delivered.len(), 1);

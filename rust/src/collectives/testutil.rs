@@ -44,7 +44,7 @@ impl TestCtx {
             op: 1,
             epoch: 0,
             kind,
-            payload: Value::F64(vec![v]),
+            payload: Value::f64(vec![v]),
             finfo: FailureInfo::Bit(false),
         }
     }

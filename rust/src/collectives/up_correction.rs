@@ -80,7 +80,7 @@ impl UpCorrection {
         }
         if self.pending.remove(&from) {
             ctx.unwatch(from);
-            let mut acc = std::mem::replace(&mut self.data, Value::F64(Vec::new()));
+            let mut acc = std::mem::replace(&mut self.data, Value::f64(Vec::new()));
             ctx.combine(&mut acc, &msg.payload);
             self.data = acc;
             true
@@ -140,7 +140,7 @@ mod tests {
             op: 1,
             epoch: 0,
             kind,
-            payload: Value::F64(vec![v]),
+            payload: Value::f64(vec![v]),
             finfo: FailureInfo::Bit(false),
         }
     }
@@ -148,7 +148,7 @@ mod tests {
     #[test]
     fn exchanges_original_value_with_all_peers() {
         let mut ctx = TestCtx::new(3, 8);
-        let mut uc = UpCorrection::new(vec![4, 5], Value::F64(vec![3.0]), 1, 0);
+        let mut uc = UpCorrection::new(vec![4, 5], Value::f64(vec![3.0]), 1, 0);
         uc.start(&mut ctx);
         assert_eq!(ctx.sent.len(), 2);
         assert_eq!(ctx.watched, vec![4, 5]);
@@ -171,7 +171,7 @@ mod tests {
     #[test]
     fn groupless_process_is_immediately_done() {
         let mut ctx = TestCtx::new(0, 7);
-        let mut uc = UpCorrection::new(vec![], Value::F64(vec![0.0]), 1, 0);
+        let mut uc = UpCorrection::new(vec![], Value::f64(vec![0.0]), 1, 0);
         uc.start(&mut ctx);
         assert!(uc.is_done());
         assert!(ctx.sent.is_empty());
@@ -180,7 +180,7 @@ mod tests {
     #[test]
     fn failed_peer_resolves_pending() {
         let mut ctx = TestCtx::new(2, 7);
-        let mut uc = UpCorrection::new(vec![1], Value::F64(vec![2.0]), 1, 0);
+        let mut uc = UpCorrection::new(vec![1], Value::f64(vec![2.0]), 1, 0);
         uc.start(&mut ctx);
         assert!(uc.handle_peer_failed(1));
         assert!(uc.is_done());
@@ -193,7 +193,7 @@ mod tests {
     #[test]
     fn ignores_wrong_kind_and_strays() {
         let mut ctx = TestCtx::new(2, 7);
-        let mut uc = UpCorrection::new(vec![1], Value::F64(vec![2.0]), 1, 0);
+        let mut uc = UpCorrection::new(vec![1], Value::f64(vec![2.0]), 1, 0);
         uc.start(&mut ctx);
         assert!(!uc.handle_message(1, &msg(MsgKind::TreeUp, 9.0), &mut ctx));
         assert!(!uc.handle_message(6, &msg(MsgKind::UpCorrection, 9.0), &mut ctx));

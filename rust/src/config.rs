@@ -5,6 +5,7 @@
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::ReduceOp;
 use crate::failure::FailureSpec;
+use crate::session::OpKind;
 use crate::types::{Rank, Value};
 
 /// What each rank contributes to the collective.
@@ -30,11 +31,11 @@ impl PayloadKind {
     /// The input value rank `r` contributes.
     pub fn initial(&self, r: Rank, n: u32) -> Value {
         match *self {
-            PayloadKind::RankValue => Value::F64(vec![r as f64]),
+            PayloadKind::RankValue => Value::f64(vec![r as f64]),
             PayloadKind::OneHot => Value::one_hot(n as usize, r),
             PayloadKind::VectorF32 { len } => {
                 let mut rng = crate::prng::Pcg::new(0xDA7A ^ r as u64);
-                Value::F32((0..len).map(|_| rng.f32() - 0.5).collect())
+                Value::f32((0..len).map(|_| rng.f32() - 0.5).collect())
             }
             PayloadKind::SegMask { segments } => {
                 Value::one_hot_blocks(n as usize, r, segments as usize)
@@ -106,6 +107,10 @@ pub struct Config {
     /// Operations per session (`ftcoll session --ops K`); 1 = a single
     /// stand-alone collective. See [`crate::session`].
     pub session_ops: u32,
+    /// Explicit per-epoch op kinds for mixed-kind sessions
+    /// (`ftcoll session --ops-list reduce,allreduce,bcast`). Setting it
+    /// also sets `session_ops` to its length.
+    pub ops_list: Option<Vec<OpKind>>,
 }
 
 impl Default for Config {
@@ -121,6 +126,7 @@ impl Default for Config {
             seed: 1,
             segment_bytes: None,
             session_ops: 1,
+            ops_list: None,
         }
     }
 }
@@ -195,6 +201,22 @@ impl Config {
             "session_ops" | "ops" => {
                 self.session_ops = num(value)?;
             }
+            "ops_list" | "ops-list" => {
+                let mut ops = Vec::new();
+                for part in value.split(',') {
+                    ops.push(match part.trim() {
+                        "reduce" => OpKind::Reduce,
+                        "allreduce" => OpKind::Allreduce,
+                        "broadcast" | "bcast" => OpKind::Broadcast,
+                        other => return Err(format!("unknown session op `{other}`")),
+                    });
+                }
+                if ops.is_empty() {
+                    return Err("ops-list must name at least one operation".into());
+                }
+                self.session_ops = ops.len() as u32;
+                self.ops_list = Some(ops);
+            }
             "fail" => {
                 let parts: Vec<&str> = value.split(':').collect();
                 let spec = match parts.as_slice() {
@@ -230,6 +252,15 @@ impl Config {
         if self.session_ops == 0 {
             return Err("session needs >= 1 operation (--ops)".into());
         }
+        if let Some(ops) = &self.ops_list {
+            if ops.len() as u32 != self.session_ops {
+                return Err(format!(
+                    "--ops {} contradicts --ops-list with {} operations",
+                    self.session_ops,
+                    ops.len()
+                ));
+            }
+        }
         // cap the derived segment count at the op-id framing limit: past
         // it, seg_op would abort (and in a release build without the
         // hard assert it used to silently alias another operation)
@@ -242,6 +273,23 @@ impl Config {
             ));
         }
         crate::failure::validate_plan(self.n, &self.failures)
+    }
+
+    /// The executor-agnostic [`crate::runtime::RunSpec`] this
+    /// configuration describes — built ONCE and handed to either
+    /// executor (`SimConfig::from_spec` / `EngineConfig::from_spec`),
+    /// so new run parameters are plumbed in exactly one place.
+    pub fn to_spec(&self) -> crate::runtime::RunSpec {
+        let mut spec = crate::runtime::RunSpec::new(self.n, self.f);
+        spec.root = self.root;
+        spec.scheme = self.scheme;
+        spec.op = self.op;
+        spec.payload = self.payload;
+        spec.failures = self.failures.clone();
+        spec.segment_bytes = self.segment_bytes.map(|b| b as usize);
+        spec.session_ops = self.session_ops;
+        spec.ops_list = self.ops_list.clone();
+        spec
     }
 }
 
@@ -368,6 +416,42 @@ mod tests {
         let cfg = Config::parse("ops = 4\n").unwrap();
         assert_eq!(cfg.session_ops, 4);
         assert!(Config::parse("session_ops = 0").unwrap().validate().is_err());
+    }
+
+    #[test]
+    fn parse_ops_list_mixed_sessions() {
+        let cfg = Config::parse("ops_list = reduce, allreduce,bcast\n").unwrap();
+        assert_eq!(cfg.session_ops, 3);
+        assert_eq!(
+            cfg.ops_list,
+            Some(vec![OpKind::Reduce, OpKind::Allreduce, OpKind::Broadcast])
+        );
+        cfg.validate().unwrap();
+        let spec = cfg.to_spec();
+        assert_eq!(spec.session_kinds(OpKind::Reduce).len(), 3);
+        assert!(Config::parse("ops_list = reduce,wat").is_err());
+        // a later contradictory --ops is rejected at validation time
+        let mut cfg = Config::parse("ops_list = reduce,reduce\n").unwrap();
+        cfg.session_ops = 3;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn to_spec_mirrors_config() {
+        let cfg = Config::parse(
+            "n = 9\nf = 2\nscheme = countbit\nop = max\npayload = vec:64\n\
+             segment_bytes = 128\nfail = pre:3\n",
+        )
+        .unwrap();
+        let spec = cfg.to_spec();
+        assert_eq!(spec.n, 9);
+        assert_eq!(spec.f, 2);
+        assert_eq!(spec.scheme, Scheme::CountBit);
+        assert_eq!(spec.op, ReduceOp::Max);
+        assert_eq!(spec.payload, PayloadKind::VectorF32 { len: 64 });
+        assert_eq!(spec.segment_bytes, Some(128));
+        assert_eq!(spec.failures, vec![FailureSpec::Pre { rank: 3 }]);
+        spec.validate().unwrap();
     }
 
     #[test]

@@ -13,16 +13,10 @@ pub mod monitor;
 pub mod transport;
 pub mod worker;
 
-use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
-use crate::collectives::broadcast::CorrectionMode;
-use crate::collectives::failure_info::Scheme;
-use crate::collectives::pipeline::Pipelined;
-use crate::collectives::reduce::{Reduce, ReduceConfig};
 use crate::collectives::{NativeReducer, Outcome, Protocol, ReduceOp, Reducer};
-use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
 use crate::metrics::Metrics;
-use crate::runtime::ComputeHandle;
+use crate::runtime::{CollectiveDriver, ComputeHandle, DriveKind, Driver, RunSpec};
 use crate::types::{Rank, TimeNs, Value};
 use monitor::Monitor;
 use transport::{Envelope, Router};
@@ -46,60 +40,49 @@ impl ReducerKind {
     }
 }
 
-/// Configuration of a live collective run.
+/// Configuration of a live collective run: the executor-agnostic
+/// [`RunSpec`] (shared, field for field, with
+/// [`crate::sim::SimConfig`] — derefs through, so `cfg.n`,
+/// `cfg.failures` etc. read straight from the spec) plus the one
+/// engine-only knob, the reducer backend.
 pub struct EngineConfig {
-    pub n: u32,
-    pub f: u32,
-    pub scheme: Scheme,
-    pub correction: CorrectionMode,
-    pub payload: PayloadKind,
-    pub failures: Vec<FailureSpec>,
+    pub spec: RunSpec,
     pub reducer: ReducerKind,
-    pub candidates: Option<Vec<Rank>>,
-    /// Monitor confirmation delay (ns).
-    pub detect_delay: TimeNs,
-    /// Segment size for the pipelined reduce/allreduce (`None` =
-    /// monolithic) — same semantics as [`crate::sim::SimConfig`].
-    pub segment_bytes: Option<usize>,
-    /// First wire epoch of a single-collective run (sessions manage
-    /// their own epoch bands). 0 for stand-alone operations.
-    pub base_epoch: u32,
-    /// Operations per session ([`live_session`]); 1 elsewhere.
-    pub session_ops: u32,
+}
+
+impl std::ops::Deref for EngineConfig {
+    type Target = RunSpec;
+    fn deref(&self) -> &RunSpec {
+        &self.spec
+    }
+}
+
+impl std::ops::DerefMut for EngineConfig {
+    fn deref_mut(&mut self) -> &mut RunSpec {
+        &mut self.spec
+    }
 }
 
 impl EngineConfig {
     pub fn new(n: u32, f: u32) -> Self {
-        EngineConfig {
-            n,
-            f,
-            scheme: Scheme::List,
-            correction: CorrectionMode::Always,
-            payload: PayloadKind::RankValue,
-            failures: Vec::new(),
-            reducer: ReducerKind::Native(ReduceOp::Sum),
-            candidates: None,
-            detect_delay: 0,
-            segment_bytes: None,
-            base_epoch: 0,
-            session_ops: 1,
-        }
+        EngineConfig::from_spec(RunSpec::new(n, f))
     }
 
-    /// Mirror of [`crate::sim::SimConfig::validate`]: reject segment
-    /// counts past the op-id framing limit before any worker spawns.
+    /// Engine defaults around an existing spec: the native reducer for
+    /// the spec's op, and an immediate failure monitor — the spec's
+    /// `detect_latency` models the DES's virtual §4.2 timeout, which as
+    /// a wall-clock sleep would only slow live runs down, so it is
+    /// reset to 0 here; set `cfg.detect_latency` after construction to
+    /// deliberately model confirmation delay on the live engine.
+    pub fn from_spec(mut spec: RunSpec) -> Self {
+        spec.detect_latency = 0;
+        let op = spec.op;
+        EngineConfig { spec, reducer: ReducerKind::Native(op) }
+    }
+
+    /// See [`RunSpec::validate`].
     pub fn validate(&self) -> Result<(), String> {
-        let segs = self.payload.segment_count(self.n, self.segment_bytes);
-        if segs > crate::types::segment::MAX_SEGMENTS {
-            return Err(format!(
-                "payload splits into {segs} segments, over the op-id framing limit of {}",
-                crate::types::segment::MAX_SEGMENTS
-            ));
-        }
-        if self.session_ops == 0 {
-            return Err("session_ops must be >= 1".into());
-        }
-        Ok(())
+        self.spec.validate()
     }
 }
 
@@ -153,7 +136,7 @@ where
     let expected = deliveries_per_rank.max(1);
     let t0 = std::time::Instant::now();
     let (router, receivers) = Router::new(cfg.n);
-    let monitor = Monitor::new(router.clone(), cfg.detect_delay);
+    let monitor = Monitor::new(router.clone(), cfg.detect_latency);
     let (ev_tx, ev_rx) = std::sync::mpsc::channel::<WorkerEvent>();
 
     // failure plan
@@ -275,74 +258,39 @@ where
 }
 
 /// Live fault-tolerant reduce (segmented/pipelined when
-/// `cfg.segment_bytes` is set — the same [`Pipelined`] driver the DES
-/// runs).
+/// `cfg.segment_bytes` is set — the same protocol stack the DES runs,
+/// built by the same [`CollectiveDriver`]).
 pub fn live_reduce(cfg: &EngineConfig, root: Rank) -> LiveReport {
-    let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
-    let seg = cfg.segment_bytes;
-    let epoch = cfg.base_epoch;
-    run_live(cfg, move |_, input| {
-        let rcfg = ReduceConfig { n, f, root, scheme, op_id: 1, epoch };
-        match seg {
-            Some(bytes) => Box::new(Pipelined::reduce(rcfg, input, bytes)) as Box<dyn Protocol>,
-            None => Box::new(Reduce::new(rcfg, input)),
-        }
-    })
+    let mut spec = cfg.spec.clone();
+    spec.root = root;
+    let driver = CollectiveDriver::new(&spec, DriveKind::Reduce);
+    run_live(cfg, |rank, input| driver.make_protocol(rank, input))
 }
 
 /// Live fault-tolerant allreduce (segmented/pipelined when
 /// `cfg.segment_bytes` is set).
 pub fn live_allreduce(cfg: &EngineConfig) -> LiveReport {
-    let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
-    let correction = cfg.correction;
-    let candidates = cfg.candidates.clone();
-    let seg = cfg.segment_bytes;
-    let base_epoch = cfg.base_epoch;
-    run_live(cfg, move |_, input| {
-        let mut acfg = AllreduceConfig::new(n, f).scheme(scheme);
-        acfg.correction = correction;
-        acfg.base_epoch = base_epoch;
-        if let Some(c) = &candidates {
-            acfg = acfg.candidates(c.clone());
-        }
-        match seg {
-            Some(bytes) => {
-                Box::new(Pipelined::allreduce(acfg, input, bytes)) as Box<dyn Protocol>
-            }
-            None => Box::new(Allreduce::new(acfg, input)),
-        }
-    })
+    let driver = CollectiveDriver::new(&cfg.spec, DriveKind::Allreduce);
+    run_live(cfg, |rank, input| driver.make_protocol(rank, input))
 }
 
-/// Live self-healing session: `cfg.session_ops` operations of `kind`
-/// over an evolving membership — the same [`Session`] state machine the
-/// DES runs ([`crate::sim::run_session`]), driven by the threaded
-/// engine. The report carries one delivery per completed epoch in
-/// `deliveries`.
+/// Live self-healing session: `cfg.session_ops` operations of `kind` —
+/// or the explicit mixed sequence in `cfg.ops_list` — over an evolving
+/// membership: the same [`crate::session::Session`] state machine the
+/// DES runs ([`crate::sim::run_session`]), built by the same
+/// [`CollectiveDriver`] and driven by the threaded engine. The report
+/// carries one delivery per completed epoch in `deliveries`.
 pub fn live_session(cfg: &EngineConfig, kind: crate::session::OpKind) -> LiveReport {
-    let ops: Vec<crate::session::OpKind> =
-        vec![kind; cfg.session_ops.max(1) as usize];
-    let k = ops.len() as u32;
-    let (n, f, scheme) = (cfg.n, cfg.f, cfg.scheme);
-    let correction = cfg.correction;
-    let seg = cfg.segment_bytes;
-    run_live_n(cfg, k, move |_, input| {
-        let scfg = crate::session::SessionConfig {
-            n,
-            f,
-            scheme,
-            correction,
-            ops: ops.clone(),
-            base_op: 1,
-            segment_bytes: seg,
-        };
-        Box::new(crate::session::Session::new(scfg, input)) as Box<dyn Protocol>
+    let driver = CollectiveDriver::new(&cfg.spec, DriveKind::Session(kind));
+    run_live_n(cfg, driver.deliveries_per_rank(), |rank, input| {
+        driver.make_protocol(rank, input)
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::PayloadKind;
 
     #[test]
     fn live_reduce_failure_free() {

@@ -71,6 +71,7 @@ pub mod prelude {
     pub use crate::collectives::{CollectiveKind, Outcome, ReduceOp};
     pub use crate::config::{Config, PayloadKind};
     pub use crate::failure::FailureSpec;
+    pub use crate::runtime::{CollectiveDriver, DriveKind, Driver, RunSpec};
     pub use crate::session::{OpKind, Session, SessionConfig, SessionView};
     pub use crate::sim::net::NetModel;
     pub use crate::sim::{

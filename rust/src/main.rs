@@ -75,6 +75,9 @@ USAGE: ftcoll <subcommand> [options]
              and mid-pipeline-failure scenarios) checked by paper-
              semantics oracles; any failing scenario is replayable by id
   session    --ops 3 [--algo reduce|allreduce|broadcast] [--live]
+             [--ops-list reduce,allreduce,bcast — mixed-kind epochs]
+             [--pjrt — with --live: PJRT-backed combine; skips cleanly
+             when the build has no PJRT backend]
              + the reduce options except --root (epochs always root at
              the smallest survivor) — run K operations as a self-healing
              session: failures reported by operation k are excluded
@@ -92,7 +95,8 @@ fn build_config(args: &Args) -> Result<Config, String> {
         let body = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         cfg = Config::parse(&body)?;
     }
-    for key in ["n", "f", "root", "scheme", "op", "payload", "seed", "segment-bytes"] {
+    for key in ["n", "f", "root", "scheme", "op", "payload", "seed", "segment-bytes", "ops-list"]
+    {
         if let Some(v) = args.get(key) {
             cfg.set(key, v)?;
         }
@@ -107,16 +111,15 @@ fn build_config(args: &Args) -> Result<Config, String> {
 }
 
 fn to_sim(cfg: &Config, trace: bool) -> SimConfig {
-    let mut s = SimConfig::new(cfg.n, cfg.f)
-        .root(cfg.root)
-        .scheme(cfg.scheme)
-        .op(cfg.op)
-        .payload(cfg.payload)
-        .failures(cfg.failures.clone())
-        .tracing(trace);
-    s.segment_bytes = cfg.segment_bytes.map(|b| b as usize);
+    // one RunSpec serves both executors (to_live below): new run
+    // parameters are plumbed once, in Config::to_spec
+    let mut s = SimConfig::from_spec(cfg.to_spec()).tracing(trace);
     s.seed = cfg.seed;
     s
+}
+
+fn to_live(cfg: &Config) -> EngineConfig {
+    EngineConfig::from_spec(cfg.to_spec())
 }
 
 fn print_report(rep: &sim::RunReport) {
@@ -293,22 +296,29 @@ fn replay_scenario(
 fn run_session_cmd(args: &Args) -> Result<(), String> {
     let algo = args.get("algo").unwrap_or("reduce").to_string();
     let live = args.flag("live");
+    let pjrt = args.flag("pjrt");
     let trace = args.flag("trace");
-    let cfg = build_config(args)?;
+    let mut cfg = build_config(args)?;
     let ops: u32 = match args.get("ops") {
         Some(v) => v.parse().map_err(|_| format!("bad value `{v}` for --ops"))?,
-        None => {
-            if cfg.session_ops > 1 {
-                cfg.session_ops
-            } else {
-                3
-            }
-        }
+        None if cfg.session_ops > 1 => cfg.session_ops,
+        None => 3,
     };
     args.finish().map_err(|e| e.to_string())?;
     if ops == 0 {
         return Err("--ops must be >= 1".into());
     }
+    if let Some(list) = &cfg.ops_list {
+        if args.get("ops").is_some() && list.len() as u32 != ops {
+            return Err(format!(
+                "--ops {ops} contradicts --ops-list with {} operations",
+                list.len()
+            ));
+        }
+    } else {
+        cfg.session_ops = ops;
+    }
+    let ops = cfg.session_ops; // final epoch count (ops-list wins)
     if cfg.root != 0 {
         // sessions always root each epoch at the smallest survivor
         // (world rank 0 while it lives) — a requested root would be
@@ -319,6 +329,9 @@ fn run_session_cmd(args: &Args) -> Result<(), String> {
             cfg.root
         ));
     }
+    if pjrt && !live {
+        return Err("--pjrt needs --live (the DES always reduces natively)".into());
+    }
     let kind = match algo.as_str() {
         "reduce" => ftcoll::session::OpKind::Reduce,
         "allreduce" => ftcoll::session::OpKind::Allreduce,
@@ -327,12 +340,39 @@ fn run_session_cmd(args: &Args) -> Result<(), String> {
     };
 
     if live {
-        let mut ecfg = EngineConfig::new(cfg.n, cfg.f);
-        ecfg.scheme = cfg.scheme;
-        ecfg.payload = cfg.payload;
-        ecfg.failures = cfg.failures.clone();
-        ecfg.segment_bytes = cfg.segment_bytes.map(|b| b as usize);
-        ecfg.session_ops = ops;
+        let mut ecfg = to_live(&cfg);
+        // keep the compute service alive for the whole run
+        let _svc: Option<ftcoll::runtime::ComputeService>;
+        if pjrt {
+            if !ftcoll::runtime::HAS_PJRT {
+                // skip cleanly: a PJRT-less build (offline stub) cannot
+                // run the artifact-backed reducer, and dying mid-run in
+                // a worker would be strictly worse than not starting
+                println!(
+                    "session --pjrt skipped: this build has no PJRT backend \
+                     (runtime::HAS_PJRT = false); run without --pjrt for the \
+                     native reducer"
+                );
+                return Ok(());
+            }
+            // the artifact-backed reducer combines f32 only: reject
+            // before any worker spawns (a mid-run panic in a worker is
+            // exactly what the clean-skip above exists to avoid)
+            if !matches!(cfg.payload, ftcoll::config::PayloadKind::VectorF32 { .. }) {
+                return Err(
+                    "--pjrt combines f32 payloads only; add --payload vec:<len>".into()
+                );
+            }
+            let svc =
+                ftcoll::runtime::ComputeService::start(ftcoll::runtime::default_artifact_dir())?;
+            ecfg.reducer = ftcoll::coordinator::ReducerKind::Pjrt {
+                handle: svc.handle(),
+                op: cfg.op,
+            };
+            _svc = Some(svc);
+        } else {
+            _svc = None;
+        }
         let rep = ftcoll::coordinator::live_session(&ecfg, kind);
         println!(
             "live session: {} ranks x {} ops, {} msgs, {:?} elapsed",
@@ -350,8 +390,7 @@ fn run_session_cmd(args: &Args) -> Result<(), String> {
         return Ok(());
     }
 
-    let mut sc = to_sim(&cfg, trace);
-    sc.session_ops = ops;
+    let sc = to_sim(&cfg, trace);
     let rep = ftcoll::sim::run_session(&sc, kind);
     print_report(&rep.run);
     // per-epoch line (CI greps "epoch k/K") + the membership agreement
@@ -384,11 +423,7 @@ fn run_live_cmd(args: &Args) -> Result<(), String> {
     let pjrt = args.flag("pjrt");
     let cfg = build_config(args)?;
     args.finish().map_err(|e| e.to_string())?;
-    let mut ecfg = EngineConfig::new(cfg.n, cfg.f);
-    ecfg.scheme = cfg.scheme;
-    ecfg.payload = cfg.payload;
-    ecfg.failures = cfg.failures.clone();
-    ecfg.segment_bytes = cfg.segment_bytes.map(|b| b as usize);
+    let mut ecfg = to_live(&cfg);
     if pjrt {
         // fail fast: with the offline stub, workers would otherwise
         // panic mid-run on the first combine
@@ -398,6 +433,11 @@ fn run_live_cmd(args: &Args) -> Result<(), String> {
                  run without --pjrt to use the native reducer"
                     .to_string(),
             );
+        }
+        // same f32-only constraint as the session path: reject before
+        // any worker can hit PjrtReducer's non-F32 panic mid-run
+        if !matches!(cfg.payload, ftcoll::config::PayloadKind::VectorF32 { .. }) {
+            return Err("--pjrt combines f32 payloads only; add --payload vec:<len>".into());
         }
         let svc = ftcoll::runtime::ComputeService::start(ftcoll::runtime::default_artifact_dir())?;
         ecfg.reducer = ftcoll::coordinator::ReducerKind::Pjrt {

@@ -1,0 +1,315 @@
+//! The shared run-plane: one [`RunSpec`] describing *what* to run and
+//! one [`Driver`] owning *how* the protocol stack is constructed —
+//! protocol instantiation, segment multiplexing (the pipelined wrapper),
+//! epoch banding (`base_epoch` / session bands) and session folding all
+//! live here, behind a single seam both executors call through.
+//!
+//! Before this layer existed every run parameter was plumbed three
+//! times (SimConfig, EngineConfig, CLI `Config`) and the
+//! reduce/allreduce/session construction `match` was duplicated in
+//! `sim::run_*` and `coordinator::live_*`. Now
+//! [`crate::sim::SimConfig`] and [`crate::coordinator::EngineConfig`]
+//! both deref to a `RunSpec` (their only extra fields are
+//! executor-specific: net model / trace / seed vs reducer backend), and
+//! `sim::run_session` / `coordinator::live_session` are thin schedulers
+//! over a [`CollectiveDriver`]. See docs/ARCHITECTURE.md for the layer
+//! diagram.
+
+use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
+use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
+use crate::collectives::failure_info::Scheme;
+use crate::collectives::pipeline::Pipelined;
+use crate::collectives::reduce::{Reduce, ReduceConfig};
+use crate::collectives::{Protocol, ReduceOp};
+use crate::config::PayloadKind;
+use crate::failure::FailureSpec;
+use crate::session::{OpKind, Session, SessionConfig};
+use crate::types::{segment, Rank, TimeNs, Value};
+
+/// Everything a collective run means, independent of which executor
+/// runs it. The DES adds (net model, trace, seed, event cap); the live
+/// engine adds the reducer backend — nothing else.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub n: u32,
+    pub f: u32,
+    /// Reduce/broadcast root (allreduce derives candidates itself;
+    /// sessions root every epoch at the smallest survivor).
+    pub root: Rank,
+    pub scheme: Scheme,
+    pub op: ReduceOp,
+    pub payload: PayloadKind,
+    /// Correction mode of broadcasts / allreduce broadcast halves.
+    pub correction: CorrectionMode,
+    /// Broadcast ring-correction distance override (`None` → f+1);
+    /// exposed for the design-choice ablation (E12).
+    pub bcast_distance: Option<u32>,
+    /// Allreduce candidate roots (`None` → `0..=f`).
+    pub candidates: Option<Vec<Rank>>,
+    /// Failure-monitor confirmation latency (the §4.2 timeout): virtual
+    /// ns on the DES, wall-clock ns on the live engine.
+    pub detect_latency: TimeNs,
+    pub failures: Vec<FailureSpec>,
+    /// Segment size for the pipelined reduce/allreduce (`None` =
+    /// monolithic). Broadcast and the baselines ignore it.
+    pub segment_bytes: Option<usize>,
+    /// First wire epoch of a single-collective run (sessions manage
+    /// their own epoch bands). 0 for stand-alone operations.
+    pub base_epoch: u32,
+    /// Operations per session; 1 = a single stand-alone collective.
+    pub session_ops: u32,
+    /// Explicit per-epoch op kinds for mixed-kind sessions. When set,
+    /// overrides the uniform `session_ops × kind` sequence; its length
+    /// must equal `session_ops`.
+    pub ops_list: Option<Vec<OpKind>>,
+}
+
+impl RunSpec {
+    pub fn new(n: u32, f: u32) -> Self {
+        RunSpec {
+            n,
+            f,
+            root: 0,
+            scheme: Scheme::List,
+            op: ReduceOp::Sum,
+            payload: PayloadKind::RankValue,
+            correction: CorrectionMode::Always,
+            bcast_distance: None,
+            candidates: None,
+            detect_latency: 10_000, // 10 µs timeout
+            failures: Vec::new(),
+            segment_bytes: None,
+            base_epoch: 0,
+            session_ops: 1,
+            ops_list: None,
+        }
+    }
+
+    /// Reject configurations no protocol should ever be built from —
+    /// notably segment counts past the op-id framing limit, where
+    /// `segment::seg_op` would abort (and, before the hard assert, a
+    /// release build silently aliased another operation's op ids).
+    pub fn validate(&self) -> Result<(), String> {
+        let segs = self.payload.segment_count(self.n, self.segment_bytes);
+        if segs > segment::MAX_SEGMENTS {
+            return Err(format!(
+                "payload splits into {segs} segments, over the op-id framing limit of {}",
+                segment::MAX_SEGMENTS
+            ));
+        }
+        if self.session_ops == 0 {
+            return Err("session_ops must be >= 1".into());
+        }
+        if let Some(ops) = &self.ops_list {
+            if ops.is_empty() {
+                return Err("ops_list must not be empty".into());
+            }
+            if ops.len() as u32 != self.session_ops {
+                return Err(format!(
+                    "ops_list has {} entries but session_ops is {}",
+                    ops.len(),
+                    self.session_ops
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// The per-epoch operation kinds of a session: the explicit
+    /// [`RunSpec::ops_list`] when set, else `session_ops` repetitions
+    /// of `uniform`.
+    pub fn session_kinds(&self, uniform: OpKind) -> Vec<OpKind> {
+        match &self.ops_list {
+            Some(ops) => ops.clone(),
+            None => vec![uniform; self.session_ops.max(1) as usize],
+        }
+    }
+}
+
+/// Which protocol stack a [`CollectiveDriver`] builds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DriveKind {
+    Reduce,
+    Allreduce,
+    Broadcast,
+    /// A self-healing multi-epoch session; the [`OpKind`] is the
+    /// uniform per-epoch operation unless `RunSpec::ops_list` overrides
+    /// it ([`RunSpec::session_kinds`]).
+    Session(OpKind),
+}
+
+/// The executor-independent half of running a collective: build each
+/// rank's protocol instance (and know how many deliveries to expect).
+/// Both executors are thin schedulers over this seam — the DES adds
+/// virtual time and a cost model, the live engine adds threads and a
+/// shared failure monitor, and neither contains protocol-construction
+/// logic anymore.
+pub trait Driver {
+    /// The protocol instance rank `rank` runs, seeded with its input.
+    fn make_protocol(&self, rank: Rank, input: Value) -> Box<dyn Protocol>;
+
+    /// Deliveries a live rank produces (one per session epoch; 1 for
+    /// stand-alone collectives).
+    fn deliveries_per_rank(&self) -> u32 {
+        1
+    }
+}
+
+/// The canonical [`Driver`]: builds the paper's protocol stacks from a
+/// [`RunSpec`]. Owns the monolithic-vs-pipelined choice (segment
+/// multiplexing), the epoch-band assignment (`base_epoch`) and the
+/// session construction (epoch folding) that used to be duplicated per
+/// executor.
+pub struct CollectiveDriver<'a> {
+    spec: &'a RunSpec,
+    kind: DriveKind,
+}
+
+impl<'a> CollectiveDriver<'a> {
+    /// Panics on an invalid spec — no executor should ever get as far
+    /// as building a protocol from one.
+    pub fn new(spec: &'a RunSpec, kind: DriveKind) -> Self {
+        if let Err(e) = spec.validate() {
+            panic!("invalid RunSpec: {e}");
+        }
+        CollectiveDriver { spec, kind }
+    }
+
+    pub fn spec(&self) -> &RunSpec {
+        self.spec
+    }
+
+    fn reduce_config(&self) -> ReduceConfig {
+        ReduceConfig {
+            n: self.spec.n,
+            f: self.spec.f,
+            root: self.spec.root,
+            scheme: self.spec.scheme,
+            op_id: 1,
+            epoch: self.spec.base_epoch,
+        }
+    }
+
+    fn allreduce_config(&self) -> AllreduceConfig {
+        let mut acfg = AllreduceConfig::new(self.spec.n, self.spec.f).scheme(self.spec.scheme);
+        acfg.correction = self.spec.correction;
+        acfg.base_epoch = self.spec.base_epoch;
+        if let Some(c) = &self.spec.candidates {
+            acfg = acfg.candidates(c.clone());
+        }
+        acfg
+    }
+
+    fn bcast_config(&self) -> BcastConfig {
+        BcastConfig {
+            n: self.spec.n,
+            f: self.spec.f,
+            root: self.spec.root,
+            mode: self.spec.correction,
+            distance: self.spec.bcast_distance,
+            op_id: 1,
+            epoch: self.spec.base_epoch,
+        }
+    }
+
+    fn session_config(&self, uniform: OpKind) -> SessionConfig {
+        SessionConfig {
+            n: self.spec.n,
+            f: self.spec.f,
+            scheme: self.spec.scheme,
+            correction: self.spec.correction,
+            ops: self.spec.session_kinds(uniform),
+            base_op: 1,
+            segment_bytes: self.spec.segment_bytes,
+        }
+    }
+}
+
+impl Driver for CollectiveDriver<'_> {
+    fn make_protocol(&self, rank: Rank, input: Value) -> Box<dyn Protocol> {
+        match &self.kind {
+            DriveKind::Reduce => match self.spec.segment_bytes {
+                Some(bytes) => Box::new(Pipelined::reduce(self.reduce_config(), input, bytes)),
+                None => Box::new(Reduce::new(self.reduce_config(), input)),
+            },
+            DriveKind::Allreduce => match self.spec.segment_bytes {
+                Some(bytes) => {
+                    Box::new(Pipelined::allreduce(self.allreduce_config(), input, bytes))
+                }
+                None => Box::new(Allreduce::new(self.allreduce_config(), input)),
+            },
+            DriveKind::Broadcast => {
+                let cfg = self.bcast_config();
+                let input = if rank == cfg.root { Some(input) } else { None };
+                Box::new(Broadcast::new(cfg, input))
+            }
+            DriveKind::Session(uniform) => {
+                Box::new(Session::new(self.session_config(*uniform), input))
+            }
+        }
+    }
+
+    fn deliveries_per_rank(&self) -> u32 {
+        match &self.kind {
+            DriveKind::Session(uniform) => self.spec.session_kinds(*uniform).len() as u32,
+            _ => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_rejects_framing_overflow_and_bad_sessions() {
+        let mut spec = RunSpec::new(8, 1);
+        spec.payload = PayloadKind::VectorF32 { len: 8_000_000 };
+        spec.segment_bytes = Some(4);
+        assert!(spec.validate().unwrap_err().contains("framing limit"));
+
+        let mut spec = RunSpec::new(8, 1);
+        spec.session_ops = 0;
+        assert!(spec.validate().is_err());
+
+        let mut spec = RunSpec::new(8, 1);
+        spec.session_ops = 2;
+        spec.ops_list = Some(vec![OpKind::Reduce]);
+        assert!(spec.validate().unwrap_err().contains("ops_list"));
+        spec.ops_list = Some(vec![OpKind::Reduce, OpKind::Allreduce]);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn session_kinds_uniform_and_mixed() {
+        let mut spec = RunSpec::new(8, 1);
+        spec.session_ops = 3;
+        assert_eq!(
+            spec.session_kinds(OpKind::Reduce),
+            vec![OpKind::Reduce, OpKind::Reduce, OpKind::Reduce]
+        );
+        spec.ops_list = Some(vec![OpKind::Allreduce, OpKind::Reduce, OpKind::Broadcast]);
+        assert_eq!(
+            spec.session_kinds(OpKind::Reduce),
+            vec![OpKind::Allreduce, OpKind::Reduce, OpKind::Broadcast]
+        );
+        let driver = CollectiveDriver::new(&spec, DriveKind::Session(OpKind::Reduce));
+        assert_eq!(driver.deliveries_per_rank(), 3);
+    }
+
+    #[test]
+    fn broadcast_driver_seeds_only_the_root() {
+        let mut spec = RunSpec::new(4, 1);
+        spec.root = 2;
+        let driver = CollectiveDriver::new(&spec, DriveKind::Broadcast);
+        // non-root instances must not deliver on start; the root does
+        let mut ctx = crate::collectives::testutil::TestCtx::new(2, 4);
+        let mut proto = driver.make_protocol(2, Value::f64(vec![7.0]));
+        proto.on_start(&mut ctx);
+        assert_eq!(ctx.delivered.len(), 1, "root delivers its own value");
+        let mut ctx1 = crate::collectives::testutil::TestCtx::new(1, 4);
+        let mut p1 = driver.make_protocol(1, Value::f64(vec![9.9]));
+        p1.on_start(&mut ctx1);
+        assert!(ctx1.delivered.is_empty(), "non-root has no value yet");
+    }
+}

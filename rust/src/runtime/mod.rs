@@ -3,6 +3,10 @@
 //! Python never runs at request time — the manifest + HLO text files are
 //! the entire interface between the layers.
 //!
+//! * [`driver`] — the executor-independent run plane: [`RunSpec`] (the
+//!   single source of truth both executor configs deref to) and the
+//!   [`Driver`] trait owning protocol construction, segment
+//!   multiplexing, epoch banding and session folding,
 //! * [`spec`] — tensor/artifact signature types (manifest grammar),
 //! * [`registry`] — manifest.tsv parsing and artifact lookup,
 //! * [`executor`] — PJRT client wrapper: compile once, execute many,
@@ -10,11 +14,13 @@
 //!   [`service::PjrtReducer`], the drop-in [`crate::collectives::Reducer`]
 //!   backed by the combine artifacts.
 
+pub mod driver;
 pub mod executor;
 pub mod registry;
 pub mod service;
 pub mod spec;
 
+pub use driver::{CollectiveDriver, DriveKind, Driver, RunSpec};
 pub use executor::{Executor, RtError};
 pub use registry::Registry;
 pub use service::{ComputeHandle, ComputeService, PjrtReducer};

@@ -192,11 +192,16 @@ impl Reducer for PjrtReducer {
     fn combine(&self, acc: &mut Value, other: &Value) {
         match (&mut *acc, other) {
             (Value::F32(a), Value::F32(b)) => {
+                // the channel boundary needs owned vectors: both
+                // operands are materialized per combine — count them,
+                // or the memstats accounting would silently underreport
+                // PJRT-backed runs by two payloads per combine
+                crate::types::memstats::add_copied(4 * (a.len() + b.len()));
                 let combined = self
                     .handle
-                    .combine2(self.op, std::mem::take(a), b.clone())
+                    .combine2(self.op, a.to_vec(), b.to_vec())
                     .expect("PJRT combine failed");
-                *a = combined;
+                *a = combined.into();
             }
             (a, b) => panic!("PjrtReducer supports F32 payloads only, got {a:?} / {b:?}"),
         }

@@ -256,7 +256,9 @@ pub struct Session {
     stride: u32,
     /// This process's world rank (bound on start).
     rank: Rank,
-    /// This process's per-epoch contribution (cloned into each epoch).
+    /// This process's per-epoch contribution. Handed to each epoch's
+    /// data op by `Value` clone — a refcount bump on the shared buffer,
+    /// not a copy (the op's first combine copies-on-write).
     input: Value,
     membership: Membership,
     /// World ranks excluded so far (sorted). Identical on every
@@ -567,12 +569,15 @@ impl Session {
             op_id: self.cfg.base_op,
             epoch: self.sync_epoch(self.epoch),
         };
+        // the sync payload is built once here; the broadcast fans it
+        // out to tree children and f+1 ring successors by refcount
+        // bump (no per-send deep copy of the exclusion list)
         let input = report_world.map(|rep| {
             let mut all = self.excluded.clone();
             all.extend(rep);
             all.sort_unstable();
             all.dedup();
-            Value::I64(all.into_iter().map(|r| r as i64).collect())
+            Value::i64(all.into_iter().map(|r| r as i64).collect())
         });
         let mut b = Broadcast::new(bcfg, input);
         let captured = with_dense_ctx(&self.membership, ctx, |cap| b.on_start(cap));
@@ -897,7 +902,7 @@ mod tests {
             .map(|r| {
                 Session::new(
                     SessionConfig::new(n, 1, vec![OpKind::Broadcast; 3]),
-                    Value::F64(vec![r as f64]),
+                    Value::f64(vec![r as f64]),
                 )
             })
             .collect();
@@ -1002,7 +1007,7 @@ mod tests {
     fn single_process_session() {
         let mut s = Session::new(
             SessionConfig::new(1, 2, vec![OpKind::Reduce, OpKind::Allreduce]),
-            Value::F64(vec![7.0]),
+            Value::f64(vec![7.0]),
         );
         let mut c = TestCtx::new(0, 1);
         s.on_start(&mut c);

@@ -13,114 +13,88 @@
 
 pub mod net;
 
-use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
 use crate::collectives::baseline::{
     FlatGather, Gossip, GossipConfig, RingAllreduce, TreeReduce,
 };
-use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
 use crate::collectives::failure_info::Scheme;
-use crate::collectives::pipeline::Pipelined;
-use crate::collectives::reduce::{Reduce, ReduceConfig};
 use crate::collectives::{Ctx, NativeReducer, Outcome, Protocol, ReduceOp, Reducer};
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
 use crate::metrics::Metrics;
-use crate::session::{OpKind, Session, SessionConfig, SessionView};
+use crate::runtime::{CollectiveDriver, DriveKind, Driver, RunSpec};
+use crate::session::{OpKind, Session, SessionView};
 use crate::trace::{Trace, TraceEvent};
-use crate::types::{segment, Msg, Rank, TimeNs, Value};
+use crate::types::{Msg, Rank, TimeNs, Value};
 use net::NetModel;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
 
-/// Everything a simulated collective run needs.
+/// Everything a simulated collective run needs: the executor-agnostic
+/// [`RunSpec`] (what to run — derefs through, so `cfg.n`, `cfg.payload`
+/// etc. read straight from the spec) plus the DES-only knobs (cost
+/// model, tracing, seed, event cap). The live engine's
+/// [`crate::coordinator::EngineConfig`] shares the same spec type — the
+/// duplicated-field plumbing this type used to carry lives once in
+/// [`RunSpec`] now.
 #[derive(Clone)]
 pub struct SimConfig {
-    pub n: u32,
-    pub f: u32,
-    pub root: Rank,
-    pub scheme: Scheme,
-    pub op: ReduceOp,
-    pub payload: PayloadKind,
+    pub spec: RunSpec,
     pub net: NetModel,
-    /// Failure-monitor confirmation latency (the §4.2 timeout).
-    pub detect_latency: TimeNs,
-    pub failures: Vec<FailureSpec>,
-    pub correction: CorrectionMode,
-    /// Broadcast ring-correction distance override (`None` → f+1);
-    /// exposed for the design-choice ablation (E12).
-    pub bcast_distance: Option<u32>,
-    /// Allreduce candidate roots (`None` → `0..=f`).
-    pub candidates: Option<Vec<Rank>>,
-    /// Segment size for the pipelined reduce/allreduce (`None` =
-    /// monolithic). Broadcast and the baselines ignore it.
-    pub segment_bytes: Option<usize>,
-    /// First wire epoch of a single-collective run (sessions manage
-    /// their own epoch bands). 0 for stand-alone operations.
-    pub base_epoch: u32,
-    /// Operations per session ([`run_session`]); 1 elsewhere.
-    pub session_ops: u32,
     pub trace: bool,
     pub seed: u64,
     pub max_events: u64,
 }
 
+impl std::ops::Deref for SimConfig {
+    type Target = RunSpec;
+    fn deref(&self) -> &RunSpec {
+        &self.spec
+    }
+}
+
+impl std::ops::DerefMut for SimConfig {
+    fn deref_mut(&mut self) -> &mut RunSpec {
+        &mut self.spec
+    }
+}
+
 impl SimConfig {
     pub fn new(n: u32, f: u32) -> Self {
+        SimConfig::from_spec(RunSpec::new(n, f))
+    }
+
+    /// DES defaults around an existing spec (the CLI builds one spec
+    /// and feeds it to either executor).
+    pub fn from_spec(spec: RunSpec) -> Self {
         SimConfig {
-            n,
-            f,
-            root: 0,
-            scheme: Scheme::List,
-            op: ReduceOp::Sum,
-            payload: PayloadKind::RankValue,
+            spec,
             net: NetModel::hpc(),
-            detect_latency: 10_000, // 10 µs timeout
-            failures: Vec::new(),
-            correction: CorrectionMode::Always,
-            bcast_distance: None,
-            candidates: None,
-            segment_bytes: None,
-            base_epoch: 0,
-            session_ops: 1,
             trace: false,
             seed: 1,
             max_events: 200_000_000,
         }
     }
 
-    /// Reject configurations no protocol should ever be built from —
-    /// notably segment counts past the op-id framing limit, where
-    /// `segment::seg_op` would abort (and, before the hard assert, a
-    /// release build silently aliased another operation's op ids).
+    /// See [`RunSpec::validate`].
     pub fn validate(&self) -> Result<(), String> {
-        let segs = self.payload.segment_count(self.n, self.segment_bytes);
-        if segs > segment::MAX_SEGMENTS {
-            return Err(format!(
-                "payload splits into {segs} segments, over the op-id framing limit of {}",
-                segment::MAX_SEGMENTS
-            ));
-        }
-        if self.session_ops == 0 {
-            return Err("session_ops must be >= 1".into());
-        }
-        Ok(())
+        self.spec.validate()
     }
 
     pub fn root(mut self, root: Rank) -> Self {
-        self.root = root;
+        self.spec.root = root;
         self
     }
     pub fn scheme(mut self, scheme: Scheme) -> Self {
-        self.scheme = scheme;
+        self.spec.scheme = scheme;
         self
     }
     pub fn op(mut self, op: ReduceOp) -> Self {
-        self.op = op;
+        self.spec.op = op;
         self
     }
     pub fn payload(mut self, payload: PayloadKind) -> Self {
-        self.payload = payload;
+        self.spec.payload = payload;
         self
     }
     pub fn net(mut self, net: NetModel) -> Self {
@@ -128,11 +102,11 @@ impl SimConfig {
         self
     }
     pub fn failure(mut self, spec: FailureSpec) -> Self {
-        self.failures.push(spec);
+        self.spec.failures.push(spec);
         self
     }
     pub fn failures(mut self, specs: Vec<FailureSpec>) -> Self {
-        self.failures = specs;
+        self.spec.failures = specs;
         self
     }
     pub fn tracing(mut self, on: bool) -> Self {
@@ -140,23 +114,23 @@ impl SimConfig {
         self
     }
     pub fn candidates(mut self, c: Vec<Rank>) -> Self {
-        self.candidates = Some(c);
+        self.spec.candidates = Some(c);
         self
     }
     pub fn detect_latency(mut self, d: TimeNs) -> Self {
-        self.detect_latency = d;
+        self.spec.detect_latency = d;
         self
     }
     pub fn segment_bytes(mut self, bytes: usize) -> Self {
-        self.segment_bytes = Some(bytes);
+        self.spec.segment_bytes = Some(bytes);
         self
     }
     pub fn session_ops(mut self, ops: u32) -> Self {
-        self.session_ops = ops;
+        self.spec.session_ops = ops;
         self
     }
     pub fn base_epoch(mut self, epoch: u32) -> Self {
-        self.base_epoch = epoch;
+        self.spec.base_epoch = epoch;
         self
     }
 }
@@ -621,75 +595,36 @@ fn finish(mut sim: Sim) -> RunReport {
     }
 }
 
-/// Simulate fault-tolerant reduce (Algorithms 1-4); with
-/// `segment_bytes` set, the segmented/pipelined variant
-/// ([`crate::collectives::pipeline`]).
-pub fn run_reduce(cfg: &SimConfig) -> RunReport {
+/// Install `driver`-built protocols for every rank, inject the failure
+/// plan and run to quiescence — the one scheduling loop every
+/// non-baseline `run_*` entry point goes through (the live engine has
+/// the same shape over threads: `coordinator::run_live`).
+pub fn run_driver(cfg: &SimConfig, driver: &dyn Driver) -> RunReport {
     let mut sim = build_sim(cfg);
     for r in 0..cfg.n {
-        let rcfg = ReduceConfig {
-            n: cfg.n,
-            f: cfg.f,
-            root: cfg.root,
-            scheme: cfg.scheme,
-            op_id: 1,
-            epoch: cfg.base_epoch,
-        };
-        let input = cfg.payload.initial(r, cfg.n);
-        let proto: Box<dyn Protocol> = match cfg.segment_bytes {
-            Some(bytes) => Box::new(Pipelined::reduce(rcfg, input, bytes)),
-            None => Box::new(Reduce::new(rcfg, input)),
-        };
-        sim.add_proc(r, proto);
+        sim.add_proc(r, driver.make_protocol(r, cfg.payload.initial(r, cfg.n)));
     }
     sim.apply_failures(&cfg.failures);
     sim.start_all();
     finish(sim)
+}
+
+/// Simulate fault-tolerant reduce (Algorithms 1-4); with
+/// `segment_bytes` set, the segmented/pipelined variant
+/// ([`crate::collectives::pipeline`]).
+pub fn run_reduce(cfg: &SimConfig) -> RunReport {
+    run_driver(cfg, &CollectiveDriver::new(&cfg.spec, DriveKind::Reduce))
 }
 
 /// Simulate fault-tolerant allreduce (Algorithm 5); with
 /// `segment_bytes` set, the segmented/pipelined variant.
 pub fn run_allreduce(cfg: &SimConfig) -> RunReport {
-    let mut sim = build_sim(cfg);
-    for r in 0..cfg.n {
-        let mut acfg = AllreduceConfig::new(cfg.n, cfg.f).scheme(cfg.scheme);
-        acfg.correction = cfg.correction;
-        acfg.base_epoch = cfg.base_epoch;
-        if let Some(c) = &cfg.candidates {
-            acfg = acfg.candidates(c.clone());
-        }
-        let input = cfg.payload.initial(r, cfg.n);
-        let proto: Box<dyn Protocol> = match cfg.segment_bytes {
-            Some(bytes) => Box::new(Pipelined::allreduce(acfg, input, bytes)),
-            None => Box::new(Allreduce::new(acfg, input)),
-        };
-        sim.add_proc(r, proto);
-    }
-    sim.apply_failures(&cfg.failures);
-    sim.start_all();
-    finish(sim)
+    run_driver(cfg, &CollectiveDriver::new(&cfg.spec, DriveKind::Allreduce))
 }
 
 /// Simulate the corrected-tree broadcast alone (value = root's payload).
 pub fn run_broadcast(cfg: &SimConfig) -> RunReport {
-    let mut sim = build_sim(cfg);
-    for r in 0..cfg.n {
-        let bcfg = BcastConfig {
-            n: cfg.n,
-            f: cfg.f,
-            root: cfg.root,
-            mode: cfg.correction,
-            distance: cfg.bcast_distance,
-            op_id: 1,
-            epoch: cfg.base_epoch,
-        };
-        let input =
-            if r == cfg.root { Some(cfg.payload.initial(cfg.root, cfg.n)) } else { None };
-        sim.add_proc(r, Box::new(Broadcast::new(bcfg, input)));
-    }
-    sim.apply_failures(&cfg.failures);
-    sim.start_all();
-    finish(sim)
+    run_driver(cfg, &CollectiveDriver::new(&cfg.spec, DriveKind::Broadcast))
 }
 
 /// Result of a simulated multi-operation session: the usual run report
@@ -709,25 +644,18 @@ impl SessionReport {
     }
 }
 
-/// Simulate a self-healing session of `cfg.session_ops` operations of
-/// `kind` over an evolving membership ([`crate::session`]): each epoch
-/// excludes the previous epoch's reported failures and runs on the
-/// dense survivors. `cfg.segment_bytes` makes every reduce/allreduce
-/// epoch pipelined.
+/// Simulate a self-healing session over an evolving membership
+/// ([`crate::session`]): `cfg.session_ops` operations of `kind` — or
+/// the explicit mixed sequence in `cfg.ops_list` — each epoch excluding
+/// the previous epoch's reported failures and running on the dense
+/// survivors. `cfg.segment_bytes` makes every reduce/allreduce epoch
+/// pipelined. A thin scheduler over the same [`CollectiveDriver`] the
+/// live engine's `live_session` uses.
 pub fn run_session(cfg: &SimConfig, kind: OpKind) -> SessionReport {
-    let ops = vec![kind; cfg.session_ops.max(1) as usize];
+    let driver = CollectiveDriver::new(&cfg.spec, DriveKind::Session(kind));
     let mut sim = build_sim(cfg);
     for r in 0..cfg.n {
-        let scfg = SessionConfig {
-            n: cfg.n,
-            f: cfg.f,
-            scheme: cfg.scheme,
-            correction: cfg.correction,
-            ops: ops.clone(),
-            base_op: 1,
-            segment_bytes: cfg.segment_bytes,
-        };
-        sim.add_proc(r, Box::new(Session::new(scfg, cfg.payload.initial(r, cfg.n))));
+        sim.add_proc(r, driver.make_protocol(r, cfg.payload.initial(r, cfg.n)));
     }
     sim.apply_failures(&cfg.failures);
     sim.start_all();

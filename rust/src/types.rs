@@ -11,8 +11,24 @@
 //!   encode *inclusion masks* (one-hot per rank), so that the "included
 //!   exactly once / all-or-nothing" semantics of §4.1 and §5.1 are checked
 //!   exactly, with duplicate inclusions detectable.
+//!
+//! ## Zero-copy payload plane
+//!
+//! Each carrier is a [`ValueView`]: an offset/length window over an
+//! `Arc`-shared element buffer. Cloning a `Value` (every wire "send" in
+//! both executors, every per-segment instance the pipelined driver
+//! spawns) bumps a refcount instead of memcpy-ing the payload, and
+//! [`Value::split_segments`] returns per-segment *views* over the one
+//! input buffer instead of owned copies. Mutation ([`ValueView::
+//! make_mut`], used by the reducers) happens in place when the view is
+//! the only owner of its buffer and copies-on-write otherwise, so
+//! protocol semantics are unchanged: a combined accumulator can never be
+//! observed through another live view. [`memstats`] counts the bytes
+//! actually memcpy'd vs the bytes moved by refcount alone —
+//! `benches/bench_value.rs` gates the pipelined hot path on that ratio.
 
 use crate::collectives::failure_info::FailureInfo;
+use std::sync::Arc;
 
 /// Process identifier, 0-based; the paper calls these "process numbers"
 /// (MPI would say ranks). The reduce root is normalized to rank 0
@@ -23,26 +39,178 @@ pub type Rank = u32;
 /// nanoseconds (live engine metrics).
 pub type TimeNs = u64;
 
-/// A reduction payload.
+/// Payload memcpy accounting for the zero-copy plane.
+///
+/// `copied` counts element bytes actually memcpy'd by `Value`
+/// operations (copy-on-write in [`ValueView::make_mut`], segment
+/// reassembly in [`Value::concat_segments`], explicit
+/// materializations). `shared` counts element bytes that crossed an
+/// ownership boundary by refcount bump alone (clones, segment views) —
+/// exactly the bytes the pre-view implementation deep-copied, so
+/// `copied / (copied + shared)` is the fraction of the old memcpy
+/// traffic that survives. Counters are global relaxed atomics: cheap on
+/// the hot path, reset by single-run benchmarks before measuring.
+pub mod memstats {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static COPIED: AtomicU64 = AtomicU64::new(0);
+    static SHARED: AtomicU64 = AtomicU64::new(0);
+
+    #[inline]
+    pub(crate) fn add_copied(bytes: usize) {
+        COPIED.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub(crate) fn add_shared(bytes: usize) {
+        SHARED.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Zero both counters (single-run benchmarks call this first).
+    pub fn reset() {
+        COPIED.store(0, Ordering::Relaxed);
+        SHARED.store(0, Ordering::Relaxed);
+    }
+
+    /// Element bytes memcpy'd since the last [`reset`].
+    pub fn copied_bytes() -> u64 {
+        COPIED.load(Ordering::Relaxed)
+    }
+
+    /// Element bytes transferred by refcount bump since the last
+    /// [`reset`] (what a deep-copy payload plane would have memcpy'd).
+    pub fn shared_bytes() -> u64 {
+        SHARED.load(Ordering::Relaxed)
+    }
+}
+
+/// An offset/length view over an `Arc`-shared element buffer — the
+/// storage behind every [`Value`] carrier.
+///
+/// * `clone` is a refcount bump (no element bytes move);
+/// * [`ValueView::slice`] derives a sub-view sharing the same buffer
+///   (how [`Value::split_segments`] frames segments);
+/// * [`ValueView::make_mut`] hands out `&mut [T]`: in place when this
+///   view is the only owner of its buffer, copy-on-write otherwise —
+///   so no other live view can ever observe the mutation.
+///
+/// Derefs to `[T]` for all read access.
+pub struct ValueView<T> {
+    buf: Arc<[T]>,
+    off: usize,
+    len: usize,
+}
+
+impl<T: Copy> ValueView<T> {
+    /// A view covering the whole freshly-built buffer (a construction,
+    /// not a copy — nothing is counted).
+    pub fn new(data: Vec<T>) -> Self {
+        let len = data.len();
+        ValueView { buf: data.into(), off: 0, len }
+    }
+
+    /// Sub-view of `len` elements starting at `off` (relative to this
+    /// view). Shares the buffer; counts as `shared` bytes.
+    pub fn slice(&self, off: usize, len: usize) -> Self {
+        assert!(
+            off.checked_add(len).is_some_and(|end| end <= self.len),
+            "slice [{off}, {off}+{len}) out of view of length {}",
+            self.len
+        );
+        memstats::add_shared(len * std::mem::size_of::<T>());
+        ValueView { buf: Arc::clone(&self.buf), off: self.off + off, len }
+    }
+
+    /// The viewed elements.
+    pub fn as_slice(&self) -> &[T] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// Mutable access to the viewed elements: in place when this view
+    /// is the only owner of its buffer (no other `Value`/`ValueView`
+    /// can alias it), copy-on-write otherwise.
+    pub fn make_mut(&mut self) -> &mut [T] {
+        if Arc::get_mut(&mut self.buf).is_none() {
+            memstats::add_copied(self.len * std::mem::size_of::<T>());
+            let copy: Arc<[T]> = self.as_slice().to_vec().into();
+            self.buf = copy;
+            self.off = 0;
+        }
+        let (off, len) = (self.off, self.len);
+        &mut Arc::get_mut(&mut self.buf).expect("buffer uniquely owned")[off..off + len]
+    }
+
+    /// Would [`ValueView::make_mut`] mutate in place (no other owner)?
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.buf) == 1
+    }
+}
+
+impl<T: Copy> Clone for ValueView<T> {
+    fn clone(&self) -> Self {
+        memstats::add_shared(self.len * std::mem::size_of::<T>());
+        ValueView { buf: Arc::clone(&self.buf), off: self.off, len: self.len }
+    }
+}
+
+impl<T> std::ops::Deref for ValueView<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.buf[self.off..self.off + self.len]
+    }
+}
+
+impl<T: Copy> From<Vec<T>> for ValueView<T> {
+    fn from(v: Vec<T>) -> Self {
+        ValueView::new(v)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for ValueView<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for ValueView<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // print the window, not the whole backing buffer
+        f.debug_list().entries(self.buf[self.off..self.off + self.len].iter()).finish()
+    }
+}
+
+/// A reduction payload: one of three element carriers, each a
+/// [`ValueView`] over an `Arc`-shared buffer (clone = refcount bump).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
     /// f32 vector — the production payload type; combined either natively
     /// or through an AOT-compiled XLA artifact.
-    F32(Vec<f32>),
+    F32(ValueView<f32>),
     /// f64 vector — used by the DES experiments.
-    F64(Vec<f64>),
+    F64(ValueView<f64>),
     /// i64 vector — exact carrier for semantics tests (inclusion masks).
-    I64(Vec<i64>),
+    I64(ValueView<i64>),
 }
 
 impl Value {
+    /// Fresh f32 carrier over `v`.
+    pub fn f32(v: Vec<f32>) -> Value {
+        Value::F32(ValueView::new(v))
+    }
+
+    /// Fresh f64 carrier over `v`.
+    pub fn f64(v: Vec<f64>) -> Value {
+        Value::F64(ValueView::new(v))
+    }
+
+    /// Fresh i64 carrier over `v`.
+    pub fn i64(v: Vec<i64>) -> Value {
+        Value::I64(ValueView::new(v))
+    }
+
     /// Payload size on the wire in bytes.
     pub fn wire_bytes(&self) -> usize {
-        match self {
-            Value::F32(v) => 4 * v.len(),
-            Value::F64(v) => 8 * v.len(),
-            Value::I64(v) => 8 * v.len(),
-        }
+        self.len() * self.elem_bytes()
     }
 
     /// Number of elements.
@@ -65,7 +233,7 @@ impl Value {
     pub fn one_hot(n: usize, rank: Rank) -> Value {
         let mut v = vec![0i64; n];
         v[rank as usize] = 1;
-        Value::I64(v)
+        Value::i64(v)
     }
 
     /// Scalar f64 view of a length-1 value (panics otherwise); convenience
@@ -82,14 +250,14 @@ impl Value {
     /// Inclusion counts for the `I64` mask carrier.
     pub fn inclusion_counts(&self) -> &[i64] {
         match self {
-            Value::I64(v) => v,
+            Value::I64(v) => v.as_slice(),
             other => panic!("inclusion_counts on non-I64 value {other:?}"),
         }
     }
 
     pub fn as_f32(&self) -> &[f32] {
         match self {
-            Value::F32(v) => v,
+            Value::F32(v) => v.as_slice(),
             other => panic!("as_f32 on {other:?}"),
         }
     }
@@ -113,54 +281,71 @@ impl Value {
         for b in 0..blocks {
             v[b * n + rank as usize] = 1;
         }
-        Value::I64(v)
+        Value::i64(v)
     }
 
     /// Split into segments of at most `max_bytes` (whole elements only;
     /// at least one element per segment). Empty values yield a single
     /// empty segment so protocols still run exactly one instance.
-    /// Lossless: [`Value::concat_segments`] restores the original.
+    /// Segments are offset/length *views* sharing this value's buffer —
+    /// no element bytes are copied. Lossless:
+    /// [`Value::concat_segments`] restores the original.
     pub fn split_segments(&self, max_bytes: usize) -> Vec<Value> {
+        fn chunks<T: Copy>(v: &ValueView<T>, per: usize) -> Vec<ValueView<T>> {
+            let total = v.len();
+            let mut out = Vec::with_capacity(total.div_ceil(per));
+            let mut off = 0;
+            while off < total {
+                let len = per.min(total - off);
+                out.push(v.slice(off, len));
+                off += len;
+            }
+            out
+        }
         let per = (max_bytes / self.elem_bytes()).max(1);
         if self.is_empty() {
             return vec![self.clone()];
         }
         match self {
-            Value::F32(v) => v.chunks(per).map(|c| Value::F32(c.to_vec())).collect(),
-            Value::F64(v) => v.chunks(per).map(|c| Value::F64(c.to_vec())).collect(),
-            Value::I64(v) => v.chunks(per).map(|c| Value::I64(c.to_vec())).collect(),
+            Value::F32(v) => chunks(v, per).into_iter().map(Value::F32).collect(),
+            Value::F64(v) => chunks(v, per).into_iter().map(Value::F64).collect(),
+            Value::I64(v) => chunks(v, per).into_iter().map(Value::I64).collect(),
         }
     }
 
     /// Reassemble segments produced by [`Value::split_segments`] (in
-    /// order). Panics on an empty slice or mixed carriers.
+    /// order) into one freshly-owned value. Panics on an empty slice or
+    /// mixed carriers.
     pub fn concat_segments(segs: &[Value]) -> Value {
         assert!(!segs.is_empty(), "concat_segments on empty slice");
+        fn gather<T: Copy, F: Fn(&Value) -> Option<&ValueView<T>>>(
+            segs: &[Value],
+            pick: F,
+        ) -> Vec<T> {
+            let total: usize = segs.iter().map(Value::len).sum();
+            let mut out: Vec<T> = Vec::with_capacity(total);
+            for s in segs {
+                match pick(s) {
+                    Some(v) => out.extend_from_slice(v.as_slice()),
+                    None => panic!("mixed carriers: {s:?}"),
+                }
+            }
+            memstats::add_copied(out.len() * std::mem::size_of::<T>());
+            out
+        }
         match &segs[0] {
-            Value::F32(_) => Value::F32(
-                segs.iter()
-                    .flat_map(|s| match s {
-                        Value::F32(v) => v.iter().copied(),
-                        other => panic!("mixed carriers: {other:?}"),
-                    })
-                    .collect(),
-            ),
-            Value::F64(_) => Value::F64(
-                segs.iter()
-                    .flat_map(|s| match s {
-                        Value::F64(v) => v.iter().copied(),
-                        other => panic!("mixed carriers: {other:?}"),
-                    })
-                    .collect(),
-            ),
-            Value::I64(_) => Value::I64(
-                segs.iter()
-                    .flat_map(|s| match s {
-                        Value::I64(v) => v.iter().copied(),
-                        other => panic!("mixed carriers: {other:?}"),
-                    })
-                    .collect(),
-            ),
+            Value::F32(_) => Value::f32(gather(segs, |s| match s {
+                Value::F32(v) => Some(v),
+                _ => None,
+            })),
+            Value::F64(_) => Value::f64(gather(segs, |s| match s {
+                Value::F64(v) => Some(v),
+                _ => None,
+            })),
+            Value::I64(_) => Value::i64(gather(segs, |s| match s {
+                Value::I64(v) => Some(v),
+                _ => None,
+            })),
         }
     }
 }
@@ -183,8 +368,8 @@ pub mod segment {
     /// Largest number of segments one base operation can frame
     /// (`seg + 1` must fit the low bits). Configs that would split a
     /// payload into more segments are rejected at validation time
-    /// ([`crate::config::Config::validate`], [`crate::sim::SimConfig`],
-    /// [`crate::coordinator::EngineConfig`]).
+    /// ([`crate::config::Config::validate`],
+    /// [`crate::runtime::RunSpec::validate`]).
     pub const MAX_SEGMENTS: u64 = LOW_MASK;
 
     /// Op id of segment `seg` of base operation `base`.
@@ -268,6 +453,8 @@ impl MsgKind {
 /// of) the set of participating processes" and "a unique id" (§4); we
 /// carry the id in `op`, the attempt number of allreduce's root rotation
 /// in `epoch`, and the data + failure information of §4.4 inline.
+/// Cloning a message bumps the payload refcount — wire "sends" in both
+/// executors transfer ownership, never element bytes.
 #[derive(Clone, Debug)]
 pub struct Msg {
     /// Unique id of the collective operation this message belongs to.
@@ -282,7 +469,8 @@ pub struct Msg {
 
 impl Msg {
     /// Total bytes on the wire: 16-byte header (op id, epoch, kind, len)
-    /// + payload + failure-information encoding.
+    /// + payload + failure-information encoding. The DES cost model
+    /// charges these bytes regardless of the zero-copy transfer.
     pub fn wire_bytes(&self) -> usize {
         16 + self.payload.wire_bytes() + self.finfo.wire_bytes()
     }
@@ -330,15 +518,15 @@ mod tests {
 
     #[test]
     fn scalar_views() {
-        assert_eq!(Value::F64(vec![4.25]).as_f64_scalar(), 4.25);
-        assert_eq!(Value::F32(vec![2.0]).as_f64_scalar(), 2.0);
-        assert_eq!(Value::I64(vec![7]).as_f64_scalar(), 7.0);
+        assert_eq!(Value::f64(vec![4.25]).as_f64_scalar(), 4.25);
+        assert_eq!(Value::f32(vec![2.0]).as_f64_scalar(), 2.0);
+        assert_eq!(Value::i64(vec![7]).as_f64_scalar(), 7.0);
     }
 
     #[test]
     #[should_panic]
     fn scalar_view_rejects_vectors() {
-        Value::F64(vec![1.0, 2.0]).as_f64_scalar();
+        Value::f64(vec![1.0, 2.0]).as_f64_scalar();
     }
 
     #[test]
@@ -347,7 +535,7 @@ mod tests {
             op: 1,
             epoch: 0,
             kind: MsgKind::TreeUp,
-            payload: Value::F32(vec![0.0; 8]),
+            payload: Value::f32(vec![0.0; 8]),
             finfo: FailureInfo::Bit(false),
         };
         assert_eq!(m.wire_bytes(), 16 + 32 + 1);
@@ -362,7 +550,7 @@ mod tests {
 
     #[test]
     fn split_roundtrips_and_conserves_bytes() {
-        let v = Value::I64((0..10).collect());
+        let v = Value::i64((0..10).collect());
         let segs = v.split_segments(24); // 3 elements per segment
         assert_eq!(segs.len(), 4); // 3+3+3+1
         assert_eq!(segs.iter().map(Value::wire_bytes).sum::<usize>(), v.wire_bytes());
@@ -372,15 +560,66 @@ mod tests {
     #[test]
     fn split_edge_cases() {
         // empty: one empty segment, identity round trip
-        let empty = Value::F32(Vec::new());
+        let empty = Value::f32(Vec::new());
         let segs = empty.split_segments(64);
         assert_eq!(segs.len(), 1);
         assert_eq!(Value::concat_segments(&segs), empty);
         // length 1: one segment even when max_bytes < elem size
-        let one = Value::F64(vec![3.5]);
+        let one = Value::f64(vec![3.5]);
         let segs = one.split_segments(1);
         assert_eq!(segs.len(), 1);
         assert_eq!(Value::concat_segments(&segs), one);
+    }
+
+    /// Splitting produces views over the ORIGINAL buffer: every segment
+    /// shares the input's allocation (pointer-identical backing Arc),
+    /// so no element bytes are memcpy'd. (Checked structurally rather
+    /// than via the global [`memstats`] counters — tests run in
+    /// parallel, so the counters are not quiescent here.)
+    #[test]
+    fn split_is_zero_copy() {
+        let v = Value::i64((0..1024).collect());
+        let Value::I64(orig) = &v else { unreachable!() };
+        let segs = v.split_segments(256); // 32 elements per segment
+        assert_eq!(segs.len(), 32);
+        for (i, s) in segs.iter().enumerate() {
+            let Value::I64(view) = s else { panic!("carrier changed") };
+            assert!(
+                Arc::ptr_eq(&view.buf, &orig.buf),
+                "segment {i} does not share the input buffer"
+            );
+            assert_eq!(s.inclusion_counts()[0], (i * 32) as i64);
+        }
+    }
+
+    /// Copy-on-write: mutating a shared view must never be observable
+    /// through the other view, and mutating a unique view is in place.
+    #[test]
+    fn make_mut_cow_and_in_place() {
+        let mut a = ValueView::new(vec![1i64, 2, 3, 4]);
+        assert!(a.is_unique());
+        a.make_mut()[0] = 10; // in place
+        assert_eq!(a.as_slice(), &[10, 2, 3, 4]);
+
+        let b = a.clone();
+        assert!(!a.is_unique());
+        let mut c = a.clone();
+        c.make_mut()[1] = 99; // CoW: a and b unaffected
+        assert_eq!(c.as_slice(), &[10, 99, 3, 4]);
+        assert_eq!(a.as_slice(), &[10, 2, 3, 4]);
+        assert_eq!(b.as_slice(), &[10, 2, 3, 4]);
+    }
+
+    /// A sub-view's CoW materializes only the window, and in-place
+    /// mutation through a unique sub-view is confined to the window.
+    #[test]
+    fn subview_mutation_stays_in_window() {
+        let base = ValueView::new(vec![0i64, 1, 2, 3, 4, 5]);
+        let mut mid = base.slice(2, 2);
+        assert_eq!(mid.as_slice(), &[2, 3]);
+        mid.make_mut()[0] = 42; // base still alive → CoW
+        assert_eq!(mid.as_slice(), &[42, 3]);
+        assert_eq!(base.as_slice(), &[0, 1, 2, 3, 4, 5]);
     }
 
     #[test]

@@ -285,3 +285,150 @@ fn segmented_allreduce_differential() {
         });
     }
 }
+
+// ---- sessions: per-epoch DES↔live conformance ---------------------------
+//
+// Pre-operational failures + exact OneHot masks keep per-epoch values
+// deterministic on both executors (the victims contribute nothing and
+// exclusion folds the same authoritative list), so every epoch's
+// outcome must match value-for-value. This also pins that the
+// Driver/RunSpec refactor changed nothing: both executors build their
+// Session stacks through the same `CollectiveDriver`.
+
+fn check_session_diff(
+    name: &str,
+    n: u32,
+    f: u32,
+    ops_list: Option<Vec<ftcoll::session::OpKind>>,
+    uniform: ftcoll::session::OpKind,
+    k: u32,
+    failures: Vec<FailureSpec>,
+) {
+    use ftcoll::session::OpKind;
+
+    let dead: Vec<Rank> = failures.iter().map(|s| s.rank()).collect();
+    let mut des_cfg = SimConfig::new(n, f).payload(PayloadKind::OneHot).session_ops(k);
+    des_cfg.failures = failures.clone();
+    des_cfg.ops_list = ops_list.clone();
+    let des = sim::run_session(&des_cfg, uniform);
+
+    let mut live_cfg = EngineConfig::new(n, f);
+    live_cfg.payload = PayloadKind::OneHot;
+    live_cfg.session_ops = k;
+    live_cfg.failures = failures;
+    live_cfg.ops_list = ops_list;
+    let live = ftcoll::coordinator::live_session(&live_cfg, uniform);
+
+    let kinds = live_cfg.session_kinds(uniform);
+    for r in 0..n {
+        if dead.contains(&r) {
+            assert_eq!(des.run.deliveries_at(r), 0, "{name}: dead rank {r} (DES)");
+            assert!(
+                live.deliveries[r as usize].is_empty(),
+                "{name}: dead rank {r} (live)"
+            );
+            continue;
+        }
+        assert_eq!(
+            des.run.outcomes[r as usize].len(),
+            k as usize,
+            "{name}: rank {r} epoch count (DES)"
+        );
+        assert_eq!(
+            live.deliveries[r as usize].len(),
+            k as usize,
+            "{name}: rank {r} epoch count (live)"
+        );
+        for e in 0..k as usize {
+            let d = &des.run.outcomes[r as usize][e];
+            let l = &live.deliveries[r as usize][e];
+            match (kinds[e], d, l) {
+                (
+                    OpKind::Reduce,
+                    Outcome::ReduceRoot { value: dv, known_failed: dr },
+                    Outcome::ReduceRoot { value: lv, known_failed: lr },
+                ) => {
+                    assert_eq!(dv, lv, "{name}: epoch {e} rank {r} reduce values");
+                    // pre-kills are reported in epoch 0 and excluded
+                    // afterwards; both executors fold the same list
+                    assert_eq!(dr, lr, "{name}: epoch {e} rank {r} reports");
+                }
+                (OpKind::Reduce, Outcome::ReduceDone, Outcome::ReduceDone) => {}
+                (
+                    OpKind::Allreduce,
+                    Outcome::Allreduce { value: dv, attempts: da },
+                    Outcome::Allreduce { value: lv, attempts: la },
+                ) => {
+                    assert_eq!(dv, lv, "{name}: epoch {e} rank {r} allreduce values");
+                    assert_eq!(da, la, "{name}: epoch {e} rank {r} attempts");
+                }
+                (OpKind::Broadcast, Outcome::Broadcast(dv), Outcome::Broadcast(lv)) => {
+                    assert_eq!(dv, lv, "{name}: epoch {e} rank {r} broadcast values");
+                }
+                (kind, d, l) => panic!(
+                    "{name}: epoch {e} rank {r} ({kind:?}): DES {d:?} vs live {l:?}"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn session_differential_uniform() {
+    check_session_diff(
+        "session/reduce-clean",
+        7,
+        1,
+        None,
+        ftcoll::session::OpKind::Reduce,
+        3,
+        vec![],
+    );
+    check_session_diff(
+        "session/reduce-pre1",
+        8,
+        1,
+        None,
+        ftcoll::session::OpKind::Reduce,
+        3,
+        vec![FailureSpec::Pre { rank: 5 }],
+    );
+    // f=1 keeps the epoch-0 report in the timing-independent class
+    // (single pre-kill under List — see the module docs), so the fold
+    // and therefore epoch 1's single-attempt run are deterministic
+    check_session_diff(
+        "session/allreduce-rootkill",
+        8,
+        1,
+        None,
+        ftcoll::session::OpKind::Allreduce,
+        2,
+        vec![FailureSpec::Pre { rank: 0 }],
+    );
+}
+
+#[test]
+fn session_differential_mixed_ops() {
+    use ftcoll::session::OpKind;
+    check_session_diff(
+        "session/mixed-clean",
+        8,
+        1,
+        Some(vec![OpKind::Allreduce, OpKind::Reduce, OpKind::Broadcast]),
+        OpKind::Allreduce,
+        3,
+        vec![],
+    );
+    // f=1 single pre-kill (timing-independent report class); the
+    // victim sits above the candidate range, like the campaign's mixed
+    // axis demands
+    check_session_diff(
+        "session/mixed-pre1",
+        9,
+        1,
+        Some(vec![OpKind::Reduce, OpKind::Broadcast, OpKind::Allreduce, OpKind::Reduce]),
+        OpKind::Allreduce,
+        4,
+        vec![FailureSpec::Pre { rank: 6 }],
+    );
+}

@@ -145,7 +145,7 @@ fn repeated_back_to_back_allreduces() {
 fn nonzero_detect_delay() {
     let mut ecfg = EngineConfig::new(7, 1);
     ecfg.payload = PayloadKind::RankValue;
-    ecfg.detect_delay = 5_000_000; // 5 ms
+    ecfg.detect_latency = 5_000_000; // 5 ms
     ecfg.failures = vec![FailureSpec::Pre { rank: 1 }];
     let rep = live_reduce(&ecfg, 0);
     match rep.outcomes[0].as_ref().unwrap() {

@@ -50,8 +50,8 @@ fn combine2_artifacts_match_native_all_ops() {
             let mut got = a.clone();
             exec.combine2_f32(op, &mut got, &b).unwrap();
 
-            let mut expect = Value::F32(a.clone());
-            NativeReducer(op).combine(&mut expect, &Value::F32(b.clone()));
+            let mut expect = Value::f32(a.clone());
+            NativeReducer(op).combine(&mut expect, &Value::f32(b.clone()));
             assert_close(&got, expect.as_f32(), 1e-6);
         }
     }
@@ -66,9 +66,9 @@ fn combinek_artifact_matches_chained_native() {
     for k in [2usize, 3, 8] {
         let rows: Vec<Vec<f32>> = (0..k).map(|i| rand_vec(10 + i as u64, 777)).collect();
         let got = exec.combinek_f32(ReduceOp::Sum, &rows).unwrap();
-        let mut expect = Value::F32(rows[0].clone());
+        let mut expect = Value::f32(rows[0].clone());
         for r in &rows[1..] {
-            NativeReducer(ReduceOp::Sum).combine(&mut expect, &Value::F32(r.clone()));
+            NativeReducer(ReduceOp::Sum).combine(&mut expect, &Value::f32(r.clone()));
         }
         assert_close(&got, expect.as_f32(), 1e-5);
     }
@@ -142,8 +142,8 @@ fn pjrt_reducer_is_a_drop_in_reducer() {
     }
     let svc = ComputeService::start(default_artifact_dir()).unwrap();
     let reducer = PjrtReducer::new(svc.handle(), ReduceOp::Sum);
-    let mut acc = Value::F32(rand_vec(7, 2000));
-    let other = Value::F32(rand_vec(8, 2000));
+    let mut acc = Value::f32(rand_vec(7, 2000));
+    let other = Value::f32(rand_vec(8, 2000));
     let mut expect = acc.clone();
     NativeReducer(ReduceOp::Sum).combine(&mut expect, &other);
     reducer.combine(&mut acc, &other);

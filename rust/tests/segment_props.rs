@@ -19,9 +19,9 @@ fn random_value(rng: &mut Pcg) -> Value {
         _ => rng.range(2, 65) as usize,
     };
     match rng.below(3) {
-        0 => Value::F32((0..len).map(|_| rng.f32() - 0.5).collect()),
-        1 => Value::F64((0..len).map(|_| rng.f64() - 0.5).collect()),
-        _ => Value::I64((0..len).map(|_| rng.below(1_000_000) as i64 - 500_000).collect()),
+        0 => Value::f32((0..len).map(|_| rng.f32() - 0.5).collect()),
+        1 => Value::f64((0..len).map(|_| rng.f64() - 0.5).collect()),
+        _ => Value::i64((0..len).map(|_| rng.below(1_000_000) as i64 - 500_000).collect()),
     }
 }
 

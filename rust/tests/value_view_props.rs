@@ -1,0 +1,213 @@
+//! Property tests (proptest_lite) for the zero-copy `ValueView` payload
+//! plane: the view-based `split_segments` must be observationally
+//! identical to the old owned-segment semantics, in-place and
+//! copy-on-write `combine` must be bit-identical, wire bytes must be
+//! conserved, and — the property the whole refactor hangs on — a
+//! mutation through one view must never be observable through another.
+
+use ftcoll::collectives::{NativeReducer, ReduceOp, Reducer};
+use ftcoll::prng::Pcg;
+use ftcoll::proptest_lite::{run_cases, PropConfig};
+use ftcoll::types::{Value, ValueView};
+use ftcoll::{prop_assert, prop_assert_eq};
+
+fn random_i64s(rng: &mut Pcg, len: usize) -> Vec<i64> {
+    (0..len).map(|_| rng.below(1_000_000) as i64 - 500_000).collect()
+}
+
+fn random_value(rng: &mut Pcg) -> Value {
+    let len = match rng.below(8) {
+        0 => 0usize,
+        1 => 1,
+        _ => rng.range(2, 200) as usize,
+    };
+    match rng.below(3) {
+        0 => Value::f32((0..len).map(|_| rng.f32() - 0.5).collect()),
+        1 => Value::f64((0..len).map(|_| rng.f64() - 0.5).collect()),
+        _ => Value::i64(random_i64s(rng, len)),
+    }
+}
+
+/// The old owned-segment semantics, reimplemented on plain vectors:
+/// chunk `data` into ≥1-element pieces of at most `per` elements.
+fn owned_chunks(data: &[i64], per: usize) -> Vec<Vec<i64>> {
+    if data.is_empty() {
+        return vec![Vec::new()];
+    }
+    data.chunks(per).map(|c| c.to_vec()).collect()
+}
+
+/// View-based split equals the pre-refactor owned-copy split, segment
+/// by segment, and concat restores the original.
+#[test]
+fn views_equal_owned_segment_semantics() {
+    run_cases("value_view/owned_equiv", PropConfig::default(), |rng| {
+        let len = rng.below(300) as usize;
+        let data = random_i64s(rng, len);
+        let seg_bytes = rng.range(1, 128) as usize;
+        let v = Value::i64(data.clone());
+        let per = (seg_bytes / v.elem_bytes()).max(1);
+
+        let views = v.split_segments(seg_bytes);
+        let owned = owned_chunks(&data, per);
+        prop_assert_eq!(views.len(), owned.len(), "segment count differs from owned");
+        for (i, (view, own)) in views.iter().zip(&owned).enumerate() {
+            prop_assert_eq!(
+                view.inclusion_counts(),
+                &own[..],
+                "segment {i} differs from the owned-copy semantics"
+            );
+        }
+        prop_assert_eq!(Value::concat_segments(&views), v, "reassembly lost data");
+        Ok(())
+    });
+}
+
+/// wire_bytes is conserved across split/clone/reassembly: views carry
+/// exactly their window's bytes, and the DES cost model therefore
+/// charges the same wire traffic as the deep-copy implementation did.
+#[test]
+fn wire_bytes_conserved() {
+    run_cases("value_view/wire_bytes", PropConfig::default(), |rng| {
+        let v = random_value(rng);
+        let seg_bytes = rng.range(1, 256) as usize;
+        let segs = v.split_segments(seg_bytes);
+        let sum: usize = segs.iter().map(Value::wire_bytes).sum();
+        prop_assert_eq!(sum, v.wire_bytes(), "split changed total wire bytes");
+        for s in &segs {
+            let c = s.clone();
+            prop_assert_eq!(c.wire_bytes(), s.wire_bytes(), "clone changed wire bytes");
+            prop_assert_eq!(c.len(), s.len(), "clone changed length");
+        }
+        Ok(())
+    });
+}
+
+/// Combining into a freshly-owned accumulator (in place) and into a
+/// still-shared accumulator (copy-on-write) must produce bit-identical
+/// results, and the CoW path must leave every other view untouched.
+#[test]
+fn in_place_and_cow_combine_bit_identical() {
+    run_cases("value_view/cow_combine", PropConfig::default(), |rng| {
+        let len = rng.range(1, 100) as usize;
+        let a = random_i64s(rng, len);
+        let b = random_i64s(rng, len);
+        let op = [ReduceOp::Sum, ReduceOp::Max, ReduceOp::Min][rng.below(3) as usize];
+        let reducer = NativeReducer(op);
+        let other = Value::i64(b);
+
+        // in place: unique accumulator, no other owner
+        let mut unique = Value::i64(a.clone());
+        reducer.combine(&mut unique, &other);
+
+        // copy-on-write: the accumulator shares its buffer with `keep`
+        let original = Value::i64(a.clone());
+        let keep = original.clone();
+        let mut shared = original.clone();
+        reducer.combine(&mut shared, &other);
+
+        prop_assert_eq!(&unique, &shared, "CoW result differs from in-place ({op:?})");
+        prop_assert_eq!(
+            keep.inclusion_counts(),
+            &a[..],
+            "CoW mutated a sibling view ({op:?})"
+        );
+        prop_assert_eq!(
+            original.inclusion_counts(),
+            &a[..],
+            "CoW mutated the original ({op:?})"
+        );
+        Ok(())
+    });
+}
+
+/// Segment views: combining into one segment never bleeds into its
+/// neighbours or the parent buffer (the aliasing-safety property the
+/// pipelined per-segment instances rely on).
+#[test]
+fn segment_combine_is_isolated() {
+    run_cases("value_view/segment_isolation", PropConfig::default(), |rng| {
+        let n = rng.range(2, 16) as usize;
+        let blocks = rng.range(2, 6) as usize;
+        let rank = rng.below(n as u64) as u32;
+        let parent = Value::one_hot_blocks(n, rank, blocks);
+        let mut segs = parent.split_segments(8 * n);
+        let target = rng.below(segs.len() as u64) as usize;
+
+        let other_rank = (rank + 1) % n as u32;
+        NativeReducer(ReduceOp::Sum)
+            .combine(&mut segs[target], &Value::one_hot(n, other_rank));
+
+        for (i, s) in segs.iter().enumerate() {
+            let want = if i == target {
+                let mut w = vec![0i64; n];
+                w[rank as usize] = 1;
+                w[other_rank as usize] += 1;
+                w
+            } else {
+                let mut w = vec![0i64; n];
+                w[rank as usize] = 1;
+                w
+            };
+            prop_assert_eq!(s.inclusion_counts(), &want[..], "segment {i} corrupted");
+        }
+        // the parent value is untouched
+        prop_assert_eq!(
+            &parent,
+            &Value::one_hot_blocks(n, rank, blocks),
+            "parent buffer mutated through a segment view"
+        );
+        Ok(())
+    });
+}
+
+/// Direct `ValueView` API: sub-views window correctly, `make_mut` on a
+/// unique view is in place (same contents, mutation visible), and
+/// `is_unique` tracks sharing.
+#[test]
+fn view_api_windows_and_uniqueness() {
+    run_cases("value_view/api", PropConfig::default(), |rng| {
+        let len = rng.range(4, 200) as usize;
+        let data = random_i64s(rng, len);
+        let view = ValueView::new(data.clone());
+        prop_assert!(view.is_unique(), "fresh view must be unique");
+
+        let off = rng.below(len as u64) as usize;
+        let sub_len = rng.below((len - off) as u64 + 1) as usize;
+        let sub = view.slice(off, sub_len);
+        prop_assert_eq!(&sub[..], &data[off..off + sub_len], "window mismatch");
+        prop_assert!(!view.is_unique(), "slice must share the buffer");
+
+        // dropping the parent makes the sub-view unique again; its
+        // make_mut is then in place and confined to the window
+        drop(view);
+        let mut sub = sub;
+        prop_assert!(sub.is_unique(), "sole surviving view must be unique");
+        if sub_len > 0 {
+            sub.make_mut()[0] += 7;
+            prop_assert_eq!(sub[0], data[off] + 7, "in-place mutation lost");
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end: a segmented DES allreduce over the view plane produces
+/// the exact masks the monolithic (single-buffer) run produces — the
+/// refactor is invisible to protocol semantics.
+#[test]
+fn segmented_run_results_unchanged_by_view_plane() {
+    use ftcoll::prelude::*;
+    for (n, f, blocks) in [(7u32, 1u32, 3usize), (9, 2, 4), (16, 3, 2)] {
+        let mono = SimConfig::new(n, f).payload(PayloadKind::SegMask {
+            segments: blocks as u32,
+        });
+        let seg = mono.clone().segment_bytes(8 * n as usize);
+        let a = run_allreduce(&mono);
+        let b = run_allreduce(&seg);
+        assert_eq!(
+            a.value_at(0).unwrap(),
+            b.value_at(0).unwrap(),
+            "n={n} f={f} blocks={blocks}"
+        );
+    }
+}
