@@ -1,0 +1,101 @@
+//! Per-rank bandwidth-bottleneck comparison: reduce-scatter/allgather
+//! (`--allreduce-algo rsag`) vs the paper's corrected reduce+broadcast
+//! on the 1 MiB / lan allreduce (docs/RSAG.md).
+//!
+//! The tree decomposition moves the whole payload through the root
+//! twice, so the root's sent bytes are the run's bandwidth bottleneck;
+//! rsag spreads ownership over n per-rank blocks and no rank carries
+//! more than its share. `metrics::max_rank_sent_bytes` measures exactly
+//! that bottleneck on the deterministic DES, so this is a semantics
+//! pin, not a flaky perf test — the acceptance gate (ISSUE 5) asserts
+//! rsag's per-rank maximum is strictly lower at 1 MiB / lan, and runs
+//! in every mode including the FTCOLL_BENCH_FAST CI smoke.
+
+use ftcoll::benchlib::write_table;
+use ftcoll::prelude::*;
+
+const MIB: u32 = 262_144; // 1 MiB of f32
+
+/// Run one DES allreduce; return (max per-rank sent bytes, total bytes,
+/// total msgs, makespan ns).
+fn measure(cfg: &SimConfig) -> (u64, u64, u64, u64) {
+    let rep = run_allreduce(cfg);
+    let makespan = rep.makespan().expect("allreduce did not complete");
+    (
+        rep.metrics.max_rank_sent_bytes(),
+        rep.metrics.total_bytes(),
+        rep.metrics.total_msgs(),
+        makespan,
+    )
+}
+
+fn main() {
+    let fast = std::env::var("FTCOLL_BENCH_FAST").is_ok();
+
+    // (label, n, f, len_f32); the 1 MiB/lan n=16 f=1 row is the gate
+    let configs: &[(&str, u32, u32, u32)] = if fast {
+        &[("n16f1", 16, 1, MIB)]
+    } else {
+        &[
+            ("n16f1", 16, 1, MIB),
+            ("n16f2", 16, 2, MIB),
+            ("n32f1", 32, 1, MIB),
+            ("n16f1-256K", 16, 1, 65_536),
+        ]
+    };
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut gate: Option<(u64, u64)> = None;
+    for &(label, n, f, len) in configs {
+        let tree_cfg = SimConfig::new(n, f)
+            .payload(PayloadKind::VectorF32 { len })
+            .net(NetModel::lan());
+        let rsag_cfg = tree_cfg.clone().allreduce_algo(AllreduceAlgo::Rsag);
+        let (tree_max, tree_total, tree_msgs, tree_ns) = measure(&tree_cfg);
+        let (rsag_max, rsag_total, rsag_msgs, rsag_ns) = measure(&rsag_cfg);
+        let reduction = 100.0 * (1.0 - rsag_max as f64 / tree_max.max(1) as f64);
+        println!(
+            "allreduce/lan/{}B/{label}: per-rank max {:>8} KiB (tree) vs {:>8} KiB (rsag) \
+             — {reduction:.1}% lower bottleneck",
+            4 * len as usize,
+            tree_max / 1024,
+            rsag_max / 1024,
+        );
+        println!(
+            "    totals: tree {tree_msgs} msgs / {} KiB / {tree_ns} ns; \
+             rsag {rsag_msgs} msgs / {} KiB / {rsag_ns} ns",
+            tree_total / 1024,
+            rsag_total / 1024,
+        );
+        rows.push(format!(
+            "{label},{n},{f},{len},{tree_max},{rsag_max},{reduction:.2},{tree_ns},{rsag_ns}"
+        ));
+        if label == "n16f1" && len == MIB {
+            gate = Some((tree_max, rsag_max));
+        }
+    }
+    write_table(
+        "bench_rsag_bottleneck",
+        "config,n,f,len_f32,tree_max_rank_bytes,rsag_max_rank_bytes,reduction_pct,tree_ns,rsag_ns",
+        &rows,
+    );
+
+    // acceptance gate (ISSUE 5): lower per-rank wire bytes than the
+    // corrected reduce+broadcast on the segmentable 1 MiB / lan config
+    let (tree_max, rsag_max) = gate.expect("1 MiB gate row present");
+    assert!(
+        rsag_max < tree_max,
+        "rsag per-rank bottleneck {rsag_max} B is not below the corrected \
+         reduce+broadcast's {tree_max} B on 1 MiB/lan"
+    );
+    let reduction = 100.0 * (1.0 - rsag_max as f64 / tree_max as f64);
+    assert!(
+        reduction >= 10.0,
+        "rsag bottleneck win collapsed to {reduction:.1}% (< 10%) — block \
+         spreading regressed?"
+    );
+    println!(
+        "acceptance: rsag per-rank bottleneck {reduction:.1}% below corrected \
+         reduce+broadcast on 1 MiB/lan (gate: strictly lower, >= 10%)"
+    );
+}

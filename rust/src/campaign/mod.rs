@@ -4,11 +4,12 @@
 //! A campaign expands a declarative grid ([`spec::GridConfig`]) into
 //! thousands of concrete scenarios — every combination axis the paper's
 //! theorems quantify over: collective × n × f × root × failure-info
-//! scheme × op × payload × network model × detection latency × failure
-//! pattern (including storms, cascades, root kills, correction-
-//! phase-targeted timings, and epoch-spread kills for multi-epoch
-//! `session<K>` scenarios — docs/SESSIONS.md). Each scenario runs on
-//! the deterministic DES
+//! scheme × op × payload × network model × detection latency ×
+//! allreduce decomposition (`tree` vs `-rsag` reduce-scatter/allgather
+//! — docs/RSAG.md) × failure pattern (including storms, cascades, root
+//! kills, correction-phase-targeted timings, and epoch-spread kills
+//! for multi-epoch `session<K>` scenarios — docs/SESSIONS.md). Each
+//! scenario runs on the deterministic DES
 //! ([`crate::sim`]) with a seed derived from `(grid seed, index)`, and
 //! is judged by *oracle predicates* derived from the paper's semantics
 //! ([`oracle`]) rather than golden values.

@@ -33,9 +33,15 @@
 //!   exactly; allreduce stays within the (f+1)-fold Thm 7 bound and
 //!   its attempt counter never exceeds f+1 (exactly k+1 under
 //!   `RootKill{k}`).
+//! * **Rsag attempt law (docs/RSAG.md)** — `-rsag` scenarios replace
+//!   the attempt clause: the delivered aggregate count must equal
+//!   `1 + longest cyclic run of dead ranks` (`rsag_expected_attempts`
+//!   below), exact because the rsag axis draws pre-operational plans
+//!   only.
 
 use super::spec::{Collective, FailurePattern, ScenarioSpec};
 use crate::collectives::failure_info::Scheme;
+use crate::collectives::rsag::AllreduceAlgo;
 use crate::collectives::{Outcome, ReduceOp};
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
@@ -215,6 +221,25 @@ fn check_reduce(
     }
 }
 
+/// Expected aggregate attempt count of an rsag run under a purely
+/// pre-operational dead set: block `b` rotates past its leading dead
+/// candidates `b, b+1, …`, so the delivered maximum over blocks is one
+/// more than the longest cyclic run of dead ranks (docs/RSAG.md). The
+/// rsag campaign axis generates pre-operational plans only, so this is
+/// exact — `RootKill{k}` kills the prefix `0..k` and degenerates to the
+/// familiar `k+1`.
+fn rsag_expected_attempts(n: u32, pre: &HashSet<Rank>) -> u32 {
+    let mut longest = 0u32;
+    for b in 0..n {
+        let mut run = 0u32;
+        while run < n && pre.contains(&((b + run) % n)) {
+            run += 1;
+        }
+        longest = longest.max(run);
+    }
+    longest + 1
+}
+
 fn check_allreduce(
     spec: &ScenarioSpec,
     rep: &RunReport,
@@ -222,6 +247,8 @@ fn check_allreduce(
     pre: &HashSet<Rank>,
     o: &mut OracleReport,
 ) {
+    let rsag_expect = (spec.allreduce_algo == AllreduceAlgo::Rsag)
+        .then(|| rsag_expected_attempts(spec.n, pre));
     let mut first: Option<(&Value, u32)> = None;
     for r in 0..spec.n {
         for out in &rep.outcomes[r as usize] {
@@ -230,7 +257,14 @@ fn check_allreduce(
                     o.check(*attempts <= spec.f + 1, || {
                         format!("rank {r}: {attempts} attempts exceed f+1={}", spec.f + 1)
                     });
-                    if let FailurePattern::RootKill { k } = spec.pattern {
+                    if let Some(expect) = rsag_expect {
+                        o.check(*attempts == expect, || {
+                            format!(
+                                "rank {r}: {attempts} attempts, want {expect} \
+                                 (rsag longest dead owner run)"
+                            )
+                        });
+                    } else if let FailurePattern::RootKill { k } = spec.pattern {
                         o.check(*attempts == k + 1, || {
                             format!("rank {r}: {attempts} attempts, want {} (RootKill)", k + 1)
                         });

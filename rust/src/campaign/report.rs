@@ -44,12 +44,19 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         ),
         None => String::new(),
     };
+    // likewise, only rsag rows carry the decomposition field
+    let algo_field = match spec.allreduce_algo {
+        crate::collectives::rsag::AllreduceAlgo::Tree => String::new(),
+        crate::collectives::rsag::AllreduceAlgo::Rsag => {
+            "\"allreduce_algo\":\"rsag\",".to_string()
+        }
+    };
     format!(
         "    {{\"index\":{},\"id\":\"{}\",\"seed\":{},\
          \"collective\":\"{}\",\"n\":{},\"f\":{},\"root\":{},\
          \"scheme\":\"{}\",\"op\":\"{}\",\"payload\":\"{}\",\"net\":\"{}\",\
          \"detect_ns\":{},\"segment_bytes\":{},\"segments\":{},\
-         \"session_ops\":{},{}\"pattern\":\"{}\",\"failures\":\"{}\",\
+         \"session_ops\":{},{}{}\"pattern\":\"{}\",\"failures\":\"{}\",\
          \"delivered\":{},\"dead\":[{}],\
          \"msgs\":{},\"upcorr\":{},\"tree\":{},\"bytes\":{},\
          \"final_time_ns\":{},\"makespan_ns\":{},\"attempts\":{},\
@@ -70,6 +77,7 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         spec.num_segments(),
         spec.session_ops,
         ops_field,
+        algo_field,
         spec.pattern.label(),
         json_escape(&spec.failures_str()),
         s.delivered,
@@ -194,6 +202,22 @@ pub fn summary_table(result: &CampaignResult) -> String {
         "sessions: {sess} multi-epoch ({sess_pass} passed) / {epochs} epochs total / \
          {mixed} mixed-kind"
     );
+    // allreduce-decomposition split: the rsag axis (docs/RSAG.md) — CI
+    // greps this line to catch the axis drifting out of the grid
+    let (mut rsag, mut rsag_pass, mut rsag_sess, mut rsag_seg) = (0u64, 0u64, 0u64, 0u64);
+    for (spec, sc) in specs.iter().zip(&result.scenarios) {
+        if spec.allreduce_algo == crate::collectives::rsag::AllreduceAlgo::Rsag {
+            rsag += 1;
+            rsag_pass += sc.passed() as u64;
+            rsag_sess += spec.is_session() as u64;
+            rsag_seg += spec.segment_bytes.is_some() as u64;
+        }
+    }
+    let _ = writeln!(
+        out,
+        "rsag: {rsag} reduce-scatter/allgather ({rsag_pass} passed) / {rsag_sess} sessions / \
+         {rsag_seg} segmented"
+    );
     out
 }
 
@@ -231,6 +255,7 @@ mod tests {
         // two halves add up to the scenario count
         assert!(table.contains("split: "), "{table}");
         assert!(table.contains("sessions: "), "{table}");
+        assert!(table.contains("rsag: "), "{table}");
         let line = table.lines().find(|l| l.starts_with("split: ")).unwrap();
         let nums: Vec<u64> = line
             .split(|c: char| !c.is_ascii_digit())

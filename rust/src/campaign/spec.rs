@@ -11,6 +11,7 @@
 
 use crate::collectives::broadcast::CorrectionMode;
 use crate::collectives::failure_info::Scheme;
+use crate::collectives::rsag::AllreduceAlgo;
 use crate::collectives::ReduceOp;
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
@@ -186,6 +187,11 @@ pub struct ScenarioSpec {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic).
     pub segment_bytes: Option<u32>,
+    /// Allreduce decomposition axis (`-rsag` id suffix): the paper's
+    /// corrected reduce+broadcast, or reduce-scatter/allgather over
+    /// per-rank blocks (docs/RSAG.md). Always `Tree` for
+    /// reduce/broadcast scenarios and mixed sessions.
+    pub allreduce_algo: AllreduceAlgo,
     /// Operations per session: 1 = a single stand-alone collective,
     /// K ≥ 2 = a self-healing session of K operations of `collective`
     /// over an evolving membership ([`crate::session`]).
@@ -214,6 +220,7 @@ impl ScenarioSpec {
         cfg.session_ops = self.session_ops;
         cfg.ops_list = self.ops_list.clone();
         cfg.correction = self.correction;
+        cfg.allreduce_algo = self.allreduce_algo;
         cfg.seed = self.seed;
         cfg
     }
@@ -250,7 +257,8 @@ impl ScenarioSpec {
     /// configuration (so the campaign computes each baseline once).
     pub fn baseline_key(&self) -> String {
         format!(
-            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|sess{}",
+            "{}|{}|{}|{}|{}|{}|{}|{}|{}|{:?}|{}|{}|sess{}",
+            self.allreduce_algo.name(),
             self.collective.name(),
             self.n,
             self.f,
@@ -404,6 +412,23 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         None
     };
 
+    // allreduce-algo axis (docs/RSAG.md): ~1 in 4 allreduce scenarios —
+    // stand-alone, segmented, or uniform sessions — run the
+    // reduce-scatter/allgather decomposition instead of the corrected
+    // reduce+broadcast. Mixed sessions stay tree (their reduce/broadcast
+    // epochs are the point there). Every rank is a candidate owner of
+    // some block under rsag, so those scenarios draw pre-operational
+    // failure plans only (§5.1's candidate assumption applied to every
+    // rank — see pick_pattern).
+    let allreduce_algo = if collective == Collective::Allreduce
+        && ops_list.is_none()
+        && rng.below(4) == 0
+    {
+        AllreduceAlgo::Rsag
+    } else {
+        AllreduceAlgo::Tree
+    };
+
     // root: allreduce derives its candidate roots 0..=f itself;
     // sessions pin the root to 0 (each epoch's root is the smallest
     // survivor, which stays world rank 0 while the root never fails)
@@ -469,6 +494,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         segments,
         session_ops > 1,
         ops_list.is_some(),
+        allreduce_algo == AllreduceAlgo::Rsag,
     );
     let failures = instantiate_pattern(
         &mut rng,
@@ -484,6 +510,10 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
     debug_assert!(crate::failure::validate_plan(n, &failures).is_ok());
     debug_assert!(failures.len() as u32 <= f);
 
+    let algo_label = match allreduce_algo {
+        AllreduceAlgo::Tree => "",
+        AllreduceAlgo::Rsag => "-rsag",
+    };
     let seg_label = match segment_bytes {
         None => String::new(),
         Some(_) => format!("-seg{segments}"),
@@ -494,7 +524,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         _ => String::new(),
     };
     let id = format!(
-        "s{:05}-{}-n{}-f{}-r{}-{}-{}-{}-{}-{}{}{}",
+        "s{:05}-{}-n{}-f{}-r{}-{}-{}-{}-{}-{}{}{}{}",
         index,
         collective.name(),
         n,
@@ -505,6 +535,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         payload_label(payload),
         net.name(),
         pattern.label(),
+        algo_label,
         seg_label,
         sess_label,
     );
@@ -524,6 +555,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         correction,
         detect_latency,
         segment_bytes,
+        allreduce_algo,
         session_ops,
         ops_list,
         pattern,
@@ -551,6 +583,7 @@ fn pick_pattern(
     segments: u32,
     session: bool,
     mixed: bool,
+    rsag: bool,
 ) -> FailurePattern {
     let pool_len = victim_pool(collective, n, f, root).len() as u32;
     // Reduce (and allreduce's reduce half) finds a failure-free subtree
@@ -574,6 +607,27 @@ fn pick_pattern(
     } else {
         0
     };
+
+    if rsag {
+        // reduce-scatter/allgather: every rank is a candidate owner of
+        // f+1 blocks, so only pre-operational plans keep the per-block
+        // §5.1 agreement exact (docs/RSAG.md) — clean runs, random
+        // pre-kills, and the explicit owner-prefix RootKill
+        let mut options: Vec<FailurePattern> = vec![FailurePattern::None];
+        if kmax >= 1 {
+            let k = rng.range(1, kmax as u64) as u32;
+            options.push(FailurePattern::Pre { k });
+        }
+        if rootkill_max >= 1 {
+            let k = rng.range(1, rootkill_max as u64) as u32;
+            options.push(FailurePattern::RootKill { k });
+        }
+        if options.len() > 1 && rng.below(8) != 0 {
+            let i = rng.range(1, options.len() as u64 - 1) as usize;
+            return options[i];
+        }
+        return options[0];
+    }
 
     let mut options: Vec<FailurePattern> = vec![FailurePattern::None];
     if kmax >= 1 {
@@ -872,6 +926,54 @@ mod tests {
                     .any(|s| s.ops_list.as_ref().unwrap().iter().any(|k| k.name() == kind)),
                 "no mixed session contains a {kind} epoch"
             );
+        }
+    }
+
+    #[test]
+    fn grid_covers_rsag_scenarios() {
+        let specs = generate(&GridConfig { count: 1000, seed: 7, max_n: 128 });
+        let rsag: Vec<_> =
+            specs.iter().filter(|s| s.allreduce_algo == AllreduceAlgo::Rsag).collect();
+        assert!(
+            rsag.len() >= 30,
+            "only {} of 1000 scenarios are rsag — axis drifted",
+            rsag.len()
+        );
+        for s in &rsag {
+            assert_eq!(s.collective, Collective::Allreduce, "{}", s.id);
+            assert!(s.ops_list.is_none(), "{}: mixed sessions stay tree", s.id);
+            assert!(s.id.contains("-rsag"), "{} lacks the -rsag label", s.id);
+            // pre-operational plans only: every rank is a candidate
+            // owner under rsag, so §5.1's assumption covers all of them
+            for fspec in &s.failures {
+                assert!(
+                    fspec.is_pre_operational(),
+                    "{}: in-operational failure in an rsag plan",
+                    s.id
+                );
+            }
+            assert!(
+                matches!(
+                    s.pattern,
+                    FailurePattern::None
+                        | FailurePattern::Pre { .. }
+                        | FailurePattern::RootKill { .. }
+                ),
+                "{}: pattern {:?} not allowed for rsag",
+                s.id,
+                s.pattern
+            );
+            s.sim_config().validate().unwrap();
+        }
+        // the axis crosses failures, sessions and segmentation
+        assert!(rsag.iter().any(|s| !s.failures.is_empty()), "every rsag scenario clean");
+        assert!(rsag.iter().any(|s| s.is_session()), "no rsag session scenario");
+        assert!(rsag.iter().any(|s| s.segment_bytes.is_some()), "no segmented rsag");
+        // non-allreduce scenarios and mixed sessions never carry the axis
+        for s in &specs {
+            if s.collective != Collective::Allreduce || s.ops_list.is_some() {
+                assert_eq!(s.allreduce_algo, AllreduceAlgo::Tree, "{}", s.id);
+            }
         }
     }
 

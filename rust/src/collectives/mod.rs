@@ -16,8 +16,12 @@
 //! * [`broadcast`] — the corrected-tree broadcast substrate (PPoPP'19),
 //! * [`allreduce`] — Algorithm 5 (§5.2), reduce + broadcast with root
 //!   rotation,
+//! * [`rsag`] — reduce-scatter/allgather allreduce over strided
+//!   per-rank blocks with per-block correction and owner rotation
+//!   (docs/RSAG.md),
 //! * [`pipeline`] — segmented/pipelined driver running one per-segment
-//!   Reduce/Allreduce instance per payload segment (docs/PIPELINE.md),
+//!   Reduce/Allreduce/Rsag instance per payload segment
+//!   (docs/PIPELINE.md),
 //! * [`baseline`] — comparison algorithms for the evaluation.
 
 pub mod allreduce;
@@ -26,6 +30,7 @@ pub mod broadcast;
 pub mod failure_info;
 pub mod pipeline;
 pub mod reduce;
+pub mod rsag;
 #[cfg(test)]
 pub(crate) mod testutil;
 pub mod up_correction;
@@ -152,6 +157,47 @@ impl Outcome {
             | Outcome::Allreduce { value, .. } => Some(value),
             _ => None,
         }
+    }
+}
+
+/// Pass-through [`Ctx`] that captures inner deliveries instead of
+/// handing them to the executor — the aggregation seam shared by the
+/// wrapper drivers ([`pipeline::Pipelined`] per segment,
+/// [`rsag::ReduceScatterAllgather`] per block): the wrapper drives an
+/// inner protocol through this, then folds the captured outcomes into
+/// its own aggregate state.
+pub(crate) struct CaptureCtx<'a> {
+    pub(crate) inner: &'a mut dyn Ctx,
+    pub(crate) captured: Vec<Outcome>,
+}
+
+impl<'a> Ctx for CaptureCtx<'a> {
+    fn rank(&self) -> Rank {
+        self.inner.rank()
+    }
+    fn n(&self) -> u32 {
+        self.inner.n()
+    }
+    fn now(&self) -> TimeNs {
+        self.inner.now()
+    }
+    fn send(&mut self, to: Rank, msg: Msg) {
+        self.inner.send(to, msg);
+    }
+    fn watch(&mut self, peer: Rank) {
+        self.inner.watch(peer);
+    }
+    fn unwatch(&mut self, peer: Rank) {
+        self.inner.unwatch(peer);
+    }
+    fn set_timer(&mut self, delay: TimeNs, token: u64) {
+        self.inner.set_timer(delay, token);
+    }
+    fn combine(&mut self, acc: &mut Value, other: &Value) {
+        self.inner.combine(acc, other);
+    }
+    fn deliver(&mut self, out: Outcome) {
+        self.captured.push(out);
     }
 }
 

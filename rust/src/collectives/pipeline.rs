@@ -5,8 +5,10 @@
 //! in sequence. This driver splits the payload into fixed-size segments
 //! ([`crate::types::Value::split_segments`]) and runs one full
 //! per-segment protocol instance per segment — the same `Reduce` /
-//! `Allreduce` state machines, multiplexed over the shared message
-//! stream by op id ([`crate::types::segment`]).
+//! `Allreduce` / `ReduceScatterAllgather` state machines, multiplexed
+//! over the shared message stream by op id ([`crate::types::segment`];
+//! rsag segments frame their per-rank blocks one further level below
+//! the segment index — docs/RSAG.md).
 //!
 //! Overlap schedule (cf. Träff's doubly-pipelined reduction-to-all):
 //! segment `s+1` starts locally as soon as segment `s` leaves its
@@ -37,21 +39,27 @@
 
 use super::allreduce::{Allreduce, AllreduceConfig};
 use super::reduce::{Reduce, ReduceConfig};
-use super::{Ctx, Outcome, Protocol};
-use crate::types::{segment, Msg, Rank, TimeNs, Value};
+use super::rsag::{ReduceScatterAllgather, RsagConfig};
+use super::{CaptureCtx, Ctx, Outcome, Protocol};
+use crate::types::{segment, Msg, Rank, Value};
 
 /// Which collective the pipeline wraps (with its base configuration;
 /// `op_id` therein is the *base* op — per-segment instances derive
-/// theirs via [`segment::seg_op`]).
+/// theirs via [`segment::seg_op`]. Rsag segments frame *twice*: the
+/// pipeline allocates the segment index, the per-segment rsag instance
+/// allocates the block index below it, so a wire op id reads
+/// `((base << SEG_BITS | s+1) << SEG_BITS) | b+1`).
 pub enum PipelineSpec {
     Reduce(ReduceConfig),
     Allreduce(AllreduceConfig),
+    Rsag(RsagConfig),
 }
 
 /// One per-segment protocol instance.
 enum SegInst {
     R(Reduce),
     A(Allreduce),
+    G(ReduceScatterAllgather),
 }
 
 impl SegInst {
@@ -59,6 +67,7 @@ impl SegInst {
         match self {
             SegInst::R(p) => p.on_start(ctx),
             SegInst::A(p) => p.on_start(ctx),
+            SegInst::G(p) => p.on_start(ctx),
         }
     }
 
@@ -66,6 +75,7 @@ impl SegInst {
         match self {
             SegInst::R(p) => p.on_message(from, msg, ctx),
             SegInst::A(p) => p.on_message(from, msg, ctx),
+            SegInst::G(p) => p.on_message(from, msg, ctx),
         }
     }
 
@@ -73,6 +83,7 @@ impl SegInst {
         match self {
             SegInst::R(p) => p.on_peer_failed(peer, ctx),
             SegInst::A(p) => p.on_peer_failed(peer, ctx),
+            SegInst::G(p) => p.on_peer_failed(peer, ctx),
         }
     }
 
@@ -80,49 +91,14 @@ impl SegInst {
         match self {
             SegInst::R(p) => p.upcorr_done(),
             SegInst::A(p) => p.upcorr_done(),
+            SegInst::G(p) => p.upcorr_done(),
         }
     }
 }
 
-/// Pass-through context that captures inner deliveries for aggregation
-/// instead of handing them to the executor.
-struct CaptureCtx<'a> {
-    inner: &'a mut dyn Ctx,
-    captured: Vec<Outcome>,
-}
-
-impl<'a> Ctx for CaptureCtx<'a> {
-    fn rank(&self) -> Rank {
-        self.inner.rank()
-    }
-    fn n(&self) -> u32 {
-        self.inner.n()
-    }
-    fn now(&self) -> TimeNs {
-        self.inner.now()
-    }
-    fn send(&mut self, to: Rank, msg: Msg) {
-        self.inner.send(to, msg);
-    }
-    fn watch(&mut self, peer: Rank) {
-        self.inner.watch(peer);
-    }
-    fn unwatch(&mut self, peer: Rank) {
-        self.inner.unwatch(peer);
-    }
-    fn set_timer(&mut self, delay: TimeNs, token: u64) {
-        self.inner.set_timer(delay, token);
-    }
-    fn combine(&mut self, acc: &mut Value, other: &Value) {
-        self.inner.combine(acc, other);
-    }
-    fn deliver(&mut self, out: Outcome) {
-        self.captured.push(out);
-    }
-}
-
 /// Per-process pipelined driver: a [`Protocol`] wrapping one per-segment
-/// `Reduce`/`Allreduce` instance per payload segment.
+/// `Reduce`/`Allreduce`/`ReduceScatterAllgather` instance per payload
+/// segment.
 pub struct Pipelined {
     spec: PipelineSpec,
     base_op: u64,
@@ -161,6 +137,14 @@ impl Pipelined {
     pub fn allreduce(cfg: AllreduceConfig, input: Value, segment_bytes: usize) -> Self {
         let base_op = cfg.op_id;
         Pipelined::new(PipelineSpec::Allreduce(cfg), base_op, input, segment_bytes)
+    }
+
+    /// Pipelined reduce-scatter/allgather allreduce: each segment runs
+    /// a full per-segment [`ReduceScatterAllgather`], its per-rank
+    /// blocks framed one level below the segment index.
+    pub fn rsag(cfg: RsagConfig, input: Value, segment_bytes: usize) -> Self {
+        let base_op = cfg.op_id;
+        Pipelined::new(PipelineSpec::Rsag(cfg), base_op, input, segment_bytes)
     }
 
     fn new(spec: PipelineSpec, base_op: u64, input: Value, segment_bytes: usize) -> Self {
@@ -208,13 +192,27 @@ impl Pipelined {
     pub fn allreduce_report(&self) -> Vec<Rank> {
         let mut out = Vec::new();
         for inst in self.insts.iter().flatten() {
-            if let SegInst::A(a) = inst {
-                out.extend_from_slice(a.known_failed());
+            match inst {
+                SegInst::A(a) => out.extend_from_slice(a.known_failed()),
+                SegInst::G(g) => out.extend(g.known_failed()),
+                SegInst::R(_) => {}
             }
         }
         out.sort_unstable();
         out.dedup();
         out
+    }
+
+    /// Rsag only: segment 0's block-0 winning attempt count, once that
+    /// block delivered — the consistent value the session layer derives
+    /// its membership-sync root from (the aggregate `attempts` is a max
+    /// over segments × blocks and names no single rank). `None` for
+    /// non-rsag pipelines or before segment 0's block 0 resolves.
+    pub fn sync_attempts(&self) -> Option<u32> {
+        match self.insts.first()? {
+            Some(SegInst::G(g)) => g.sync_attempts(),
+            _ => None,
+        }
     }
 
     fn make_inst(&self, s: usize) -> SegInst {
@@ -229,6 +227,11 @@ impl Pipelined {
                 let mut cfg = base.clone();
                 cfg.op_id = segment::seg_op(self.base_op, s as u32);
                 SegInst::A(Allreduce::new(cfg, input))
+            }
+            PipelineSpec::Rsag(base) => {
+                let mut cfg = base.clone();
+                cfg.op_id = segment::seg_op(self.base_op, s as u32);
+                SegInst::G(ReduceScatterAllgather::new(cfg, input))
             }
         }
     }
@@ -315,7 +318,7 @@ impl Pipelined {
                     ctx.deliver(Outcome::ReduceDone);
                 }
             }
-            PipelineSpec::Allreduce(_) => {
+            PipelineSpec::Allreduce(_) | PipelineSpec::Rsag(_) => {
                 if self.seg_values.iter().all(|v| v.is_some()) {
                     let vals: Vec<Value> =
                         self.seg_values.iter_mut().map(|v| v.take().unwrap()).collect();
@@ -337,12 +340,31 @@ impl Protocol for Pipelined {
     }
 
     fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
-        let Some(s) = segment::seg_index(msg.op) else {
-            return; // not segment-framed: another operation's traffic
+        // segment extraction: rsag segments frame twice (blocks below
+        // segments), so their segment index sits in the SECOND framing
+        // level — the low bits carry the block and are the inner
+        // instance's business
+        let s = match &self.spec {
+            PipelineSpec::Rsag(_) => {
+                let inner = segment::base_op(msg.op);
+                let Some(s) = segment::seg_index(inner) else {
+                    return; // not double-framed: another operation
+                };
+                if segment::base_op(inner) != self.base_op {
+                    return;
+                }
+                s
+            }
+            _ => {
+                let Some(s) = segment::seg_index(msg.op) else {
+                    return; // not segment-framed: another operation's traffic
+                };
+                if segment::base_op(msg.op) != self.base_op {
+                    return;
+                }
+                s
+            }
         };
-        if segment::base_op(msg.op) != self.base_op {
-            return;
-        }
         // epoch-band guard: with op ids reused across session epochs, a
         // late message from a finished epoch must not sit in the future-
         // segment buffer of the next epoch's pipeline (the inner state
@@ -353,6 +375,9 @@ impl Protocol for Pipelined {
             PipelineSpec::Allreduce(cfg) => {
                 msg.epoch >= cfg.base_epoch
                     && msg.epoch < cfg.base_epoch + cfg.candidates.len() as u32
+            }
+            PipelineSpec::Rsag(cfg) => {
+                msg.epoch >= cfg.base_epoch && msg.epoch < cfg.base_epoch + cfg.rotations()
             }
         };
         if !in_band {
@@ -409,6 +434,7 @@ impl Protocol for Pipelined {
             match &mut inst {
                 SegInst::R(p) => p.on_timer(token, &mut cap),
                 SegInst::A(p) => p.on_timer(token, &mut cap),
+                SegInst::G(p) => p.on_timer(token, &mut cap),
             }
             let captured = cap.captured;
             self.insts[s] = Some(inst);
@@ -646,6 +672,51 @@ mod tests {
                 assert_eq!(value.inclusion_counts(), &[1, 1, 1, 1, 1, 1]);
             }
             o => panic!("unexpected {o:?}"),
+        }
+    }
+
+    /// Pipelined rsag: every segment runs a per-segment reduce-scatter/
+    /// allgather whose blocks frame one level below the segment index;
+    /// the double framing routes cleanly and the aggregate masks are
+    /// exact.
+    #[test]
+    fn two_process_pipelined_rsag() {
+        // 2 blocks of 2 i64 each; 16-byte segments → one block-pair per
+        // segment, rsag'd into 2 per-rank blocks of 1 element
+        let mut p0 = Pipelined::rsag(RsagConfig::new(2, 0), masks(2, 0, 2), 16);
+        let mut p1 = Pipelined::rsag(RsagConfig::new(2, 0), masks(2, 1, 2), 16);
+        assert_eq!(p0.num_segments(), 2);
+        let mut c0 = TestCtx::new(0, 2);
+        let mut c1 = TestCtx::new(1, 2);
+        p0.on_start(&mut c0);
+        p1.on_start(&mut c1);
+        for _ in 0..12 {
+            let s0 = c0.take_sent();
+            let s1 = c1.take_sent();
+            if s0.is_empty() && s1.is_empty() {
+                break;
+            }
+            for (to, m) in s0 {
+                assert_eq!(to, 1);
+                // double framing: block index low, segment index above it
+                assert!(segment::seg_index(m.op).is_some());
+                assert!(segment::seg_index(segment::base_op(m.op)).is_some());
+                p1.on_message(0, m, &mut c1);
+            }
+            for (to, m) in s1 {
+                assert_eq!(to, 0);
+                p0.on_message(1, m, &mut c0);
+            }
+        }
+        for (name, c) in [("rank0", &c0), ("rank1", &c1)] {
+            assert_eq!(c.delivered.len(), 1, "{name}");
+            match &c.delivered[0] {
+                Outcome::Allreduce { value, attempts } => {
+                    assert_eq!(value.inclusion_counts(), &[1, 1, 1, 1], "{name}");
+                    assert_eq!(*attempts, 1, "{name}");
+                }
+                o => panic!("{name}: unexpected {o:?}"),
+            }
         }
     }
 

@@ -1,0 +1,496 @@
+//! Reduce-scatter/allgather Allreduce on the strided view plane
+//! (docs/RSAG.md).
+//!
+//! The paper builds Allreduce as a corrected Reduce followed by a
+//! corrected Broadcast (Algorithm 5): latency-optimal, but the *whole*
+//! payload moves through the root twice, so the root is the bandwidth
+//! bottleneck. The reduce-scatter/allgather decomposition (Träff,
+//! arXiv:2410.14234; cf. the doubly-pipelined dual-root design of
+//! arXiv:2109.12626) removes it: the payload is partitioned into `n`
+//! per-rank blocks ([`crate::types::Value::stride_blocks`], zero-copy
+//! strided windows over the one input buffer), block `b` is *owned* by
+//! rank `b`, and each block is reduced toward — and re-distributed
+//! from — its owner. No single rank ever carries more than its share of
+//! the aggregate traffic (`benches/bench_rsag.rs` gates the per-rank
+//! maximum against the corrected reduce+broadcast).
+//!
+//! ## Correction and block-ownership reassignment
+//!
+//! Each block runs the *paper's own* corrected machinery, multiplexed
+//! over the shared message stream by op-id framing
+//! ([`crate::types::segment`], low bits = block index): block `b` is a
+//! complete [`Allreduce`] instance whose candidate owners are the
+//! owner's cyclic correction group `b, b+1, …, b+f (mod n)`. Every
+//! round of every block therefore starts with the up-correction pass of
+//! §4.2 over that attempt's groups, the owner selects a failure-free
+//! subtree exactly as in §4.3, and — the reassignment rule — when an
+//! owner is detected failed, responsibility for its block rotates to
+//! the next member of its correction group (Algorithm 5's consistent
+//! rotation, per block). `known_failed` reports accumulate per block
+//! (§4.4) and are folded into later session epochs through the usual
+//! [`crate::session`] sync ([`ReduceScatterAllgather::known_failed`]).
+//!
+//! ## Failure semantics
+//!
+//! Every live rank delivers the concatenation of all block results
+//! exactly once, and per element the usual inclusion bounds hold (live
+//! contributors exactly once, failed ones at most once). Because every
+//! rank is a candidate owner of `f+1` blocks, the §5.1 assumption
+//! ("candidate roots fail only pre-operationally") here covers *all*
+//! ranks: pre-operational failures of any ≤ f ranks are tolerated with
+//! consistent results, while an owner dying *mid-distribution* can
+//! leave survivors with different (each individually valid) versions of
+//! its block — the same caveat §5.1 exists to exclude, now applied to
+//! every rank. The campaign's `rsag` axis generates pre-operational
+//! plans only; docs/RSAG.md discusses the bounds against Theorems 5/7.
+
+use super::allreduce::{Allreduce, AllreduceConfig};
+use super::broadcast::CorrectionMode;
+use super::failure_info::Scheme;
+use super::{CaptureCtx, Ctx, Outcome, Protocol};
+use crate::types::{segment, Msg, Rank, Value};
+
+/// Which decomposition `--allreduce-algo` runs: the paper's corrected
+/// reduce + broadcast through one root, or the bandwidth-optimal
+/// reduce-scatter/allgather over per-rank blocks (this module).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllreduceAlgo {
+    /// Algorithm 5: corrected Reduce to a root, corrected Broadcast
+    /// back ([`crate::collectives::allreduce`]).
+    Tree,
+    /// Reduce-scatter/allgather over strided per-rank blocks
+    /// ([`ReduceScatterAllgather`]).
+    Rsag,
+}
+
+impl AllreduceAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllreduceAlgo::Tree => "tree",
+            AllreduceAlgo::Rsag => "rsag",
+        }
+    }
+}
+
+/// Static configuration of one reduce-scatter/allgather allreduce.
+#[derive(Clone, Debug)]
+pub struct RsagConfig {
+    pub n: u32,
+    pub f: u32,
+    pub scheme: Scheme,
+    /// Correction mode of each block's allgather (broadcast) half.
+    pub correction: CorrectionMode,
+    /// Base op id; block `b` runs under
+    /// [`segment::seg_op`]`(op_id, b)`. Must be ≥ 1 (a base of 0 would
+    /// collide with monolithic op ids, like the pipelined driver).
+    pub op_id: u64,
+    /// First wire epoch. Block rotations occupy
+    /// `[base_epoch, base_epoch + f.min(n-1) + 1)` — the same band an
+    /// ordinary allreduce claims, so rsag drops into session epoch
+    /// bands (stride `f+2`) unchanged.
+    pub base_epoch: u32,
+}
+
+impl RsagConfig {
+    pub fn new(n: u32, f: u32) -> Self {
+        RsagConfig {
+            n,
+            f,
+            scheme: Scheme::List,
+            correction: CorrectionMode::Always,
+            op_id: 1,
+            base_epoch: 0,
+        }
+    }
+
+    /// Candidate owners of block `b`: the owner's cyclic correction
+    /// group `b, b+1, …, b+f (mod n)` — `min(f, n-1) + 1` ranks, so a
+    /// live owner always exists under ≤ f failures.
+    pub fn candidates_of(&self, block: u32) -> Vec<Rank> {
+        (0..=self.f.min(self.n - 1)).map(|j| (block + j) % self.n).collect()
+    }
+
+    /// Wire epochs this operation's rotations can occupy (the epoch
+    /// band size, shared by every block).
+    pub fn rotations(&self) -> u32 {
+        self.f.min(self.n - 1) + 1
+    }
+}
+
+/// Per-process reduce-scatter/allgather driver: one per-block corrected
+/// [`Allreduce`] instance per rank-owned strided block, all concurrent,
+/// multiplexed by op-id framing. Delivers one aggregate
+/// [`Outcome::Allreduce`] with the blocks concatenated in order and
+/// `attempts` = the maximum per-block rotation count.
+pub struct ReduceScatterAllgather {
+    cfg: RsagConfig,
+    /// The input, partitioned into `n` per-rank strided blocks (views
+    /// over the one buffer — zero copy).
+    blocks: Vec<Value>,
+    /// One instance per block; `None` only transiently while driven.
+    insts: Vec<Option<Allreduce>>,
+    /// Per-block delivered values.
+    block_values: Vec<Option<Value>>,
+    /// Per-block winning attempt counts (consistent across ranks).
+    block_attempts: Vec<Option<u32>>,
+    /// Maximum per-block attempt count.
+    attempts: u32,
+    delivered: bool,
+    errored: bool,
+}
+
+impl ReduceScatterAllgather {
+    pub fn new(cfg: RsagConfig, input: Value) -> Self {
+        assert!(cfg.n >= 1, "rsag needs at least one process");
+        // base 0 would make seg_op(0, 0) == 1 collide with the default
+        // monolithic op id — same framing rule as the pipelined driver
+        assert!(cfg.op_id >= 1, "rsag base op must be >= 1");
+        assert!(
+            (cfg.n as u64) <= segment::MAX_SEGMENTS,
+            "{} blocks overflow the op-id framing limit",
+            cfg.n
+        );
+        let blocks = input.stride_blocks(cfg.n as usize);
+        let n = cfg.n as usize;
+        ReduceScatterAllgather {
+            cfg,
+            blocks,
+            insts: (0..n).map(|_| None).collect(),
+            block_values: (0..n).map(|_| None).collect(),
+            block_attempts: (0..n).map(|_| None).collect(),
+            attempts: 0,
+            delivered: false,
+            errored: false,
+        }
+    }
+
+    /// Number of per-rank blocks (= n).
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// True once every block's current attempt has left its
+    /// up-correction phase (or the operation terminated) — the
+    /// pipelined driver's segment-advance boundary.
+    pub fn upcorr_done(&self) -> bool {
+        self.delivered
+            || self.errored
+            || self.insts.iter().all(|i| i.as_ref().is_some_and(Allreduce::upcorr_done))
+    }
+
+    /// Block 0's winning attempt count, once delivered. Consistent
+    /// across survivors (per-block §5.1 agreement), so the session
+    /// layer derives its membership-sync root from it — the aggregate
+    /// `attempts` is a max over blocks and names no single rank.
+    pub fn sync_attempts(&self) -> Option<u32> {
+        self.block_attempts.first().copied().flatten()
+    }
+
+    /// Union of the per-block failure reports captured at this process
+    /// (sorted, deduped). Non-empty only at ranks that owned some
+    /// block's winning attempt — best-effort by design, exactly like
+    /// the pipelined driver's report (§4.4 exclusion is an
+    /// optimization, never a correctness requirement).
+    pub fn known_failed(&self) -> Vec<Rank> {
+        let mut out = Vec::new();
+        for inst in self.insts.iter().flatten() {
+            out.extend_from_slice(inst.known_failed());
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    fn make_inst(&self, b: u32) -> Allreduce {
+        let mut acfg = AllreduceConfig::new(self.cfg.n, self.cfg.f)
+            .scheme(self.cfg.scheme)
+            .candidates(self.cfg.candidates_of(b));
+        acfg.correction = self.cfg.correction;
+        acfg.op_id = segment::seg_op(self.cfg.op_id, b);
+        acfg.base_epoch = self.cfg.base_epoch;
+        Allreduce::new(acfg, self.blocks[b as usize].clone())
+    }
+
+    /// Fold one block's captured deliveries into the aggregate state.
+    fn absorb(&mut self, b: usize, outs: Vec<Outcome>, ctx: &mut dyn Ctx) {
+        for out in outs {
+            match out {
+                Outcome::Allreduce { value, attempts } => {
+                    self.attempts = self.attempts.max(attempts);
+                    self.block_attempts[b] = Some(attempts);
+                    self.block_values[b] = Some(value);
+                }
+                Outcome::Error(e) => {
+                    // one block out of contract: surface once; the other
+                    // blocks keep serving their subtrees
+                    if !self.delivered && !self.errored {
+                        self.errored = true;
+                        ctx.deliver(Outcome::Error(e));
+                    }
+                }
+                other => unreachable!("per-block allreduce delivered {other:?}"),
+            }
+        }
+        self.maybe_deliver(ctx);
+    }
+
+    /// Deliver the aggregate once every block's allgather completed.
+    fn maybe_deliver(&mut self, ctx: &mut dyn Ctx) {
+        if self.delivered || self.errored {
+            return;
+        }
+        if self.block_values.iter().all(|v| v.is_some()) {
+            let vals: Vec<Value> =
+                self.block_values.iter_mut().map(|v| v.take().unwrap()).collect();
+            let value = Value::concat_segments(&vals);
+            self.delivered = true;
+            ctx.deliver(Outcome::Allreduce { value, attempts: self.attempts });
+        }
+    }
+
+    fn drive<F>(&mut self, b: usize, ctx: &mut dyn Ctx, f: F)
+    where
+        F: FnOnce(&mut Allreduce, &mut dyn Ctx),
+    {
+        let Some(mut inst) = self.insts[b].take() else {
+            return;
+        };
+        let mut cap = CaptureCtx { inner: ctx, captured: Vec::new() };
+        f(&mut inst, &mut cap);
+        let captured = cap.captured;
+        self.insts[b] = Some(inst);
+        self.absorb(b, captured, ctx);
+    }
+}
+
+impl Protocol for ReduceScatterAllgather {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        // all blocks start concurrently — the bandwidth parallelism the
+        // decomposition exists for (no pipeline stagger: each block is
+        // a full independent instance of the paper's protocol)
+        for b in 0..self.insts.len() {
+            let mut inst = self.make_inst(b as u32);
+            let mut cap = CaptureCtx { inner: ctx, captured: Vec::new() };
+            inst.on_start(&mut cap);
+            let captured = cap.captured;
+            self.insts[b] = Some(inst);
+            self.absorb(b, captured, ctx);
+        }
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        let Some(b) = segment::seg_index(msg.op) else {
+            return; // not block-framed: another operation's traffic
+        };
+        if segment::base_op(msg.op) != self.cfg.op_id {
+            return;
+        }
+        let b = b as usize;
+        if b >= self.insts.len() {
+            return;
+        }
+        // epoch banding (stale/future attempts, session band reuse) is
+        // the inner Allreduce's own guard — its band equals ours
+        self.drive(b, ctx, |inst, cap| inst.on_message(from, msg, cap));
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        // counted watch subscriptions collapse into one notification per
+        // peer: fan it out to every block (each decides whether the peer
+        // was its current owner or a pending reduce relation)
+        for b in 0..self.insts.len() {
+            self.drive(b, ctx, |inst, cap| inst.on_peer_failed(peer, cap));
+        }
+    }
+
+    fn on_timer(&mut self, token: u64, ctx: &mut dyn Ctx) {
+        // Allreduce arms no timers today; fan out like on_peer_failed so
+        // a future timer-using change cannot silently stall (cf. the
+        // pipelined driver)
+        for b in 0..self.insts.len() {
+            self.drive(b, ctx, |inst, cap| inst.on_timer(token, cap));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::failure_info::FailureInfo;
+    use crate::collectives::testutil::TestCtx;
+    use crate::types::MsgKind;
+
+    fn mask(n: usize, rank: Rank) -> Value {
+        Value::one_hot(n, rank)
+    }
+
+    /// n=2, f=1: two blocks of one element, block 0 owned by rank 0,
+    /// block 1 by rank 1. Pumped to quiescence, both ranks deliver the
+    /// all-ones mask in one attempt.
+    #[test]
+    fn two_process_happy_path() {
+        let mut c0 = TestCtx::new(0, 2);
+        let mut g0 = ReduceScatterAllgather::new(RsagConfig::new(2, 1), mask(2, 0));
+        let mut c1 = TestCtx::new(1, 2);
+        let mut g1 = ReduceScatterAllgather::new(RsagConfig::new(2, 1), mask(2, 1));
+        assert_eq!(g0.num_blocks(), 2);
+        g0.on_start(&mut c0);
+        g1.on_start(&mut c1);
+        for _ in 0..16 {
+            let s0 = c0.take_sent();
+            let s1 = c1.take_sent();
+            if s0.is_empty() && s1.is_empty() {
+                break;
+            }
+            for (to, m) in s0 {
+                assert_eq!(to, 1);
+                g1.on_message(0, m, &mut c1);
+            }
+            for (to, m) in s1 {
+                assert_eq!(to, 0);
+                g0.on_message(1, m, &mut c0);
+            }
+        }
+        for (name, c) in [("rank0", &c0), ("rank1", &c1)] {
+            assert_eq!(c.delivered.len(), 1, "{name}");
+            match &c.delivered[0] {
+                Outcome::Allreduce { value, attempts } => {
+                    assert_eq!(value.inclusion_counts(), &[1, 1], "{name}");
+                    assert_eq!(*attempts, 1, "{name}");
+                }
+                o => panic!("{name}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    /// Candidate owners are the cyclic correction group of the block
+    /// owner, and the epoch band matches an ordinary allreduce's.
+    #[test]
+    fn candidates_rotate_cyclically() {
+        let cfg = RsagConfig::new(5, 2);
+        assert_eq!(cfg.candidates_of(0), vec![0, 1, 2]);
+        assert_eq!(cfg.candidates_of(3), vec![3, 4, 0]);
+        assert_eq!(cfg.candidates_of(4), vec![4, 0, 1]);
+        assert_eq!(cfg.rotations(), 3);
+        // degenerate: f >= n caps at n candidates
+        let small = RsagConfig::new(2, 5);
+        assert_eq!(small.candidates_of(1), vec![1, 0]);
+    }
+
+    /// A dead block owner rotates only that block: after rank 0's
+    /// failure is confirmed at rank 2, block 0 re-runs at epoch 1 while
+    /// every other block's traffic stays at epoch 0 (the death may still
+    /// advance their epoch-0 reduces — e.g. a group peer resolving —
+    /// but never their rotation).
+    #[test]
+    fn owner_death_rotates_only_its_block() {
+        let mut c2 = TestCtx::new(2, 3);
+        let mut g2 = ReduceScatterAllgather::new(RsagConfig::new(3, 1), mask(3, 2));
+        g2.on_start(&mut c2);
+        let before = c2.take_sent();
+        assert!(before.iter().all(|(_, m)| m.epoch == 0));
+        // block 0's candidates are [0,1]: rank 0 is watched as its owner
+        assert!(c2.watched.contains(&0));
+
+        g2.on_peer_failed(0, &mut c2);
+        let after = c2.take_sent();
+        let block0: Vec<_> =
+            after.iter().filter(|(_, m)| segment::seg_index(m.op) == Some(0)).collect();
+        assert!(!block0.is_empty(), "block 0 must restart under its next owner");
+        assert!(block0.iter().all(|(_, m)| m.epoch == 1), "block 0 rotation epoch");
+        for (_, m) in after.iter().filter(|(_, m)| segment::seg_index(m.op) != Some(0)) {
+            assert_eq!(m.epoch, 0, "only block 0 may rotate");
+        }
+        assert!(c2.delivered.is_empty());
+    }
+
+    /// The aggregate delivers once, after ALL blocks delivered, with
+    /// blocks concatenated in order and attempts = the max over blocks.
+    /// Driven at rank 0 of n=3: rank 0 owns block 0 (its reduce is fed
+    /// a subtree result), blocks 1 and 2 arrive as broadcasts — block 1
+    /// after one rotation past its dead owner (rank 1).
+    #[test]
+    fn aggregate_concatenates_blocks_and_takes_max_attempts() {
+        let mut c0 = TestCtx::new(0, 3);
+        let mut g0 = ReduceScatterAllgather::new(RsagConfig::new(3, 1), mask(3, 0));
+        g0.on_start(&mut c0);
+        c0.take_sent();
+        // rank 1 dies: block 1 rotates to its second candidate (rank 2);
+        // the second confirmation resolves the new attempt's pending
+        // up-correction exchange with the same dead peer
+        g0.on_peer_failed(1, &mut c0);
+        g0.on_peer_failed(1, &mut c0);
+        c0.take_sent();
+
+        // block 0 (we are its owner): subtree 2's result arrives; the
+        // List report names rank 1 (not in subtree {2}), so it is
+        // selectable and the owner completes it with its own ν = [1]
+        let treeup = Msg {
+            op: segment::seg_op(1, 0),
+            epoch: 0,
+            kind: MsgKind::TreeUp,
+            payload: Value::i64(vec![5]),
+            finfo: FailureInfo::List(vec![1]),
+        };
+        g0.on_message(2, treeup, &mut c0);
+        assert!(c0.delivered.is_empty(), "blocks 1 and 2 still outstanding");
+
+        let bc = |block: u32, epoch: u32, v: i64| Msg {
+            op: segment::seg_op(1, block),
+            epoch,
+            kind: MsgKind::BcastTree,
+            payload: Value::i64(vec![v]),
+            finfo: FailureInfo::Bit(false),
+        };
+        g0.on_message(2, bc(2, 0, 8), &mut c0); // block 2, first owner
+        g0.on_message(2, bc(1, 1, 7), &mut c0); // block 1, rotated owner
+        assert_eq!(c0.delivered.len(), 1);
+        match &c0.delivered[0] {
+            Outcome::Allreduce { value, attempts } => {
+                assert_eq!(value.inclusion_counts(), &[6, 7, 8]);
+                assert_eq!(*attempts, 2, "max over per-block attempts");
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+        assert_eq!(g0.sync_attempts(), Some(1), "block 0 never rotated");
+        assert_eq!(g0.known_failed(), vec![1], "block 0's owner report");
+    }
+
+    /// Traffic that is not block-framed for this base op is ignored.
+    #[test]
+    fn foreign_ops_are_ignored() {
+        let mut c0 = TestCtx::new(0, 2);
+        let mut g0 = ReduceScatterAllgather::new(RsagConfig::new(2, 1), mask(2, 0));
+        g0.on_start(&mut c0);
+        c0.take_sent();
+        // unframed (monolithic) op id
+        g0.on_message(1, TestCtx::msg(MsgKind::BcastTree, 9.0), &mut c0);
+        // framed under a different base
+        let mut other = TestCtx::msg(MsgKind::BcastTree, 9.0);
+        other.op = segment::seg_op(7, 0);
+        g0.on_message(1, other, &mut c0);
+        // block index out of range
+        let mut high = TestCtx::msg(MsgKind::BcastTree, 9.0);
+        high.op = segment::seg_op(1, 5);
+        g0.on_message(1, high, &mut c0);
+        assert!(c0.delivered.is_empty());
+        assert!(c0.take_sent().is_empty());
+    }
+
+    /// n=1 degenerate: one block, delivered at start.
+    #[test]
+    fn single_process_delivers_immediately() {
+        let mut c0 = TestCtx::new(0, 1);
+        let mut g0 =
+            ReduceScatterAllgather::new(RsagConfig::new(1, 2), Value::f64(vec![4.5]));
+        g0.on_start(&mut c0);
+        assert_eq!(c0.delivered.len(), 1);
+        match &c0.delivered[0] {
+            Outcome::Allreduce { value, attempts } => {
+                assert_eq!(value.as_f64_scalar(), 4.5);
+                assert_eq!(*attempts, 1);
+            }
+            o => panic!("unexpected {o:?}"),
+        }
+    }
+}

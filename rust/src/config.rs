@@ -3,6 +3,7 @@
 //! comments) because the offline image carries no serde/toml crates.
 
 use crate::collectives::failure_info::Scheme;
+use crate::collectives::rsag::AllreduceAlgo;
 use crate::collectives::ReduceOp;
 use crate::failure::FailureSpec;
 use crate::session::OpKind;
@@ -104,6 +105,11 @@ pub struct Config {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic). Broadcast and the baselines ignore it.
     pub segment_bytes: Option<u32>,
+    /// Allreduce decomposition (`--allreduce-algo tree|rsag`): the
+    /// paper's corrected reduce+broadcast, or reduce-scatter/allgather
+    /// over per-rank strided blocks (docs/RSAG.md). Applies to
+    /// allreduce runs and allreduce session epochs.
+    pub allreduce_algo: AllreduceAlgo,
     /// Operations per session (`ftcoll session --ops K`); 1 = a single
     /// stand-alone collective. See [`crate::session`].
     pub session_ops: u32,
@@ -125,6 +131,7 @@ impl Default for Config {
             failures: Vec::new(),
             seed: 1,
             segment_bytes: None,
+            allreduce_algo: AllreduceAlgo::Tree,
             session_ops: 1,
             ops_list: None,
         }
@@ -136,6 +143,7 @@ impl Config {
     /// `n`, `f`, `root`, `scheme` (list|count+bit|bit), `op`
     /// (sum|max|min|prod), `payload` (rank|onehot|vec:<len>|segmask:<s>),
     /// `seed`, `segment_bytes` (pipelined reduce/allreduce segment size),
+    /// `allreduce_algo` (tree|rsag — the allreduce decomposition),
     /// `fail` (repeatable: `pre:<rank>` | `sends:<rank>:<k>` |
     /// `time:<rank>:<ns>`).
     pub fn parse(body: &str) -> Result<Config, String> {
@@ -197,6 +205,13 @@ impl Config {
             }
             "segment_bytes" | "segment-bytes" => {
                 self.segment_bytes = Some(num(value)?);
+            }
+            "allreduce_algo" | "allreduce-algo" => {
+                self.allreduce_algo = match value {
+                    "tree" => AllreduceAlgo::Tree,
+                    "rsag" => AllreduceAlgo::Rsag,
+                    other => return Err(format!("unknown allreduce algo `{other}`")),
+                }
             }
             "session_ops" | "ops" => {
                 self.session_ops = num(value)?;
@@ -287,6 +302,7 @@ impl Config {
         spec.payload = self.payload;
         spec.failures = self.failures.clone();
         spec.segment_bytes = self.segment_bytes.map(|b| b as usize);
+        spec.allreduce_algo = self.allreduce_algo;
         spec.session_ops = self.session_ops;
         spec.ops_list = self.ops_list.clone();
         spec
@@ -409,6 +425,16 @@ mod tests {
                 "{payload:?} n={n} bytes={bytes:?}"
             );
         }
+    }
+
+    #[test]
+    fn parse_allreduce_algo() {
+        let cfg = Config::parse("allreduce_algo = rsag\n").unwrap();
+        assert_eq!(cfg.allreduce_algo, AllreduceAlgo::Rsag);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.to_spec().allreduce_algo, AllreduceAlgo::Rsag);
+        assert_eq!(Config::default().allreduce_algo, AllreduceAlgo::Tree);
+        assert!(Config::parse("allreduce_algo = butterfly").is_err());
     }
 
     #[test]

@@ -73,7 +73,7 @@ impl<'a> Ctx for WorkerCtx<'a> {
             }
         }
         *self.send_count += 1;
-        self.metrics.on_send(msg.kind, msg.wire_bytes(), msg.finfo.wire_bytes());
+        self.metrics.on_send(self.rank, msg.kind, msg.wire_bytes(), msg.finfo.wire_bytes());
         self.router.send(to, Envelope::Msg { from: self.rank, msg });
     }
     fn watch(&mut self, peer: Rank) {

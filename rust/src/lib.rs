@@ -7,8 +7,10 @@
 //! * **Layer 3 (this crate)** — the paper's coordination contribution: the
 //!   up-correction phase ([`collectives::up_correction`]), the I(f)-tree
 //!   fault-tolerant reduce ([`collectives::reduce`]), the corrected-tree
-//!   broadcast substrate ([`collectives::broadcast`]) and the root-rotating
-//!   allreduce ([`collectives::allreduce`]), written as executor-agnostic
+//!   broadcast substrate ([`collectives::broadcast`]), the root-rotating
+//!   allreduce ([`collectives::allreduce`]) and its bandwidth-optimal
+//!   reduce-scatter/allgather decomposition ([`collectives::rsag`],
+//!   docs/RSAG.md), written as executor-agnostic
 //!   event-driven state machines. The [`session`] layer chains K such
 //!   operations over an evolving membership, excluding reported failures
 //!   between epochs (§4.4; docs/SESSIONS.md). Two executors drive them: a deterministic
@@ -68,6 +70,7 @@ pub mod prelude {
     pub use crate::collectives::allreduce::AllreduceConfig;
     pub use crate::collectives::failure_info::{FailureInfo, Scheme};
     pub use crate::collectives::reduce::ReduceConfig;
+    pub use crate::collectives::rsag::{AllreduceAlgo, ReduceScatterAllgather, RsagConfig};
     pub use crate::collectives::{CollectiveKind, Outcome, ReduceOp};
     pub use crate::config::{Config, PayloadKind};
     pub use crate::failure::FailureSpec;

@@ -33,6 +33,7 @@ fn main() {
     };
     let code = match args.subcommand.as_str() {
         "reduce" | "allreduce" | "broadcast" => run_sim(&args),
+        "run" => run_unified(&args),
         "baseline" => run_baseline(&args),
         "campaign" => run_campaign_cmd(&args),
         "session" => run_session_cmd(&args),
@@ -65,8 +66,15 @@ USAGE: ftcoll <subcommand> [options]
              [--segment-bytes 65536 — segmented/pipelined execution]
              [--fail pre:1,sends:3:2] [--trace]
              — simulate fault-tolerant reduce
-  allreduce  same options — simulate fault-tolerant allreduce
+  allreduce  same options + [--allreduce-algo tree|rsag]
+             — simulate fault-tolerant allreduce (tree = corrected
+             reduce+broadcast; rsag = reduce-scatter/allgather over
+             per-rank blocks, docs/RSAG.md)
   broadcast  same options (segment-bytes ignored) — corrected-tree bcast
+  run        [--collective reduce|allreduce|broadcast] [--live]
+             + the same options — one entry point over both executors
+             (default: allreduce on the DES; --live uses the threaded
+             engine; e.g. `ftcoll run --allreduce-algo rsag [--live]`)
   baseline   --algo tree|flat|ring|gossip + same options
   campaign   [--count 1000] [--seed 1] [--max-n 128] [--threads 0]
              [--out campaign_result.json] [--check-oracles]
@@ -95,8 +103,18 @@ fn build_config(args: &Args) -> Result<Config, String> {
         let body = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         cfg = Config::parse(&body)?;
     }
-    for key in ["n", "f", "root", "scheme", "op", "payload", "seed", "segment-bytes", "ops-list"]
-    {
+    for key in [
+        "n",
+        "f",
+        "root",
+        "scheme",
+        "op",
+        "payload",
+        "seed",
+        "segment-bytes",
+        "allreduce-algo",
+        "ops-list",
+    ] {
         if let Some(v) = args.get(key) {
             cfg.set(key, v)?;
         }
@@ -135,6 +153,7 @@ fn print_report(rep: &sim::RunReport) {
         }
     }
     println!("total              {:>8} msgs  {:>10} bytes", rep.metrics.total_msgs(), rep.metrics.total_bytes());
+    println!("per-rank max sent           {:>10} bytes", rep.metrics.max_rank_sent_bytes());
     println!("simulated time     {:>8} ns", rep.final_time);
     println!("dead ranks         {:?}", rep.dead);
     for r in 0..rep.n {
@@ -145,7 +164,7 @@ fn print_report(rep: &sim::RunReport) {
                     value.len(),
                     preview(value)
                 ),
-                Outcome::Allreduce { value, attempts } if r == 0 || r < 3 => println!(
+                Outcome::Allreduce { value, attempts } if r < 3 => println!(
                     "rank {r}: allreduce value {:?} after {attempts} attempt(s)",
                     preview(value)
                 ),
@@ -165,19 +184,52 @@ fn preview(v: &ftcoll::types::Value) -> String {
     }
 }
 
+/// The one DES dispatch both `ftcoll <collective>` and `ftcoll run`
+/// share: simulate `collective` under `cfg` and print the report.
+fn run_des_collective(collective: &str, cfg: &Config, trace: bool) -> Result<(), String> {
+    let sc = to_sim(cfg, trace);
+    let rep = match collective {
+        "reduce" => sim::run_reduce(&sc),
+        "allreduce" => sim::run_allreduce(&sc),
+        "broadcast" => sim::run_broadcast(&sc),
+        other => return Err(format!("unknown collective `{other}`")),
+    };
+    print_report(&rep);
+    Ok(())
+}
+
 fn run_sim(args: &Args) -> Result<(), String> {
     let trace = args.flag("trace");
     let cfg = build_config(args)?;
     args.finish().map_err(|e| e.to_string())?;
-    let sc = to_sim(&cfg, trace);
-    let rep = match args.subcommand.as_str() {
-        "reduce" => sim::run_reduce(&sc),
-        "allreduce" => sim::run_allreduce(&sc),
-        "broadcast" => sim::run_broadcast(&sc),
-        _ => unreachable!(),
-    };
-    print_report(&rep);
-    Ok(())
+    run_des_collective(args.subcommand.as_str(), &cfg, trace)
+}
+
+/// `ftcoll run`: one entry point over both executors — the chosen
+/// collective runs on the DES by default, or on the live threaded
+/// engine with `--live`. All the usual config options apply, including
+/// `--allreduce-algo tree|rsag`.
+fn run_unified(args: &Args) -> Result<(), String> {
+    let collective = args.get("collective").unwrap_or("allreduce").to_string();
+    let live = args.flag("live");
+    let trace = args.flag("trace");
+    let cfg = build_config(args)?;
+    args.finish().map_err(|e| e.to_string())?;
+    if live {
+        let ecfg = to_live(&cfg);
+        let rep = match collective.as_str() {
+            "reduce" => live_reduce(&ecfg, cfg.root),
+            "allreduce" => live_allreduce(&ecfg),
+            other => {
+                return Err(format!(
+                    "`run --live` supports reduce|allreduce, not `{other}`"
+                ))
+            }
+        };
+        print_live(&rep);
+        return Ok(());
+    }
+    run_des_collective(collective.as_str(), &cfg, trace)
 }
 
 fn run_baseline(args: &Args) -> Result<(), String> {

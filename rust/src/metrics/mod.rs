@@ -15,6 +15,11 @@ use std::collections::HashMap;
 pub struct Metrics {
     msgs: [u64; 5],
     bytes: [u64; 5],
+    /// Wire bytes sent per rank (grown lazily to the highest sender
+    /// seen). The per-rank *maximum* is the bandwidth bottleneck the
+    /// reduce-scatter/allgather decomposition exists to remove
+    /// (docs/RSAG.md) — `benches/bench_rsag.rs` gates on it.
+    sent_by_rank: Vec<u64>,
     /// Bytes spent on failure-information encodings only (E5).
     finfo_bytes: u64,
     /// Completion (deliver) time per rank.
@@ -33,11 +38,16 @@ impl Metrics {
     }
 
     #[inline]
-    pub fn on_send(&mut self, kind: MsgKind, wire_bytes: usize, finfo_bytes: usize) {
+    pub fn on_send(&mut self, from: Rank, kind: MsgKind, wire_bytes: usize, finfo_bytes: usize) {
         let i = kind.index();
         self.msgs[i] += 1;
         self.bytes[i] += wire_bytes as u64;
         self.finfo_bytes += finfo_bytes as u64;
+        let r = from as usize;
+        if r >= self.sent_by_rank.len() {
+            self.sent_by_rank.resize(r + 1, 0);
+        }
+        self.sent_by_rank[r] += wire_bytes as u64;
     }
 
     pub fn on_send_to_dead(&mut self) {
@@ -72,6 +82,18 @@ impl Metrics {
         self.finfo_bytes
     }
 
+    /// Wire bytes sent by `rank` (0 for ranks that never sent).
+    pub fn sent_bytes_of(&self, rank: Rank) -> u64 {
+        self.sent_by_rank.get(rank as usize).copied().unwrap_or(0)
+    }
+
+    /// The largest per-rank sent-byte total — the run's bandwidth
+    /// bottleneck (the corrected reduce+broadcast concentrates it at
+    /// the root; rsag spreads it, which `bench_rsag` asserts).
+    pub fn max_rank_sent_bytes(&self) -> u64 {
+        self.sent_by_rank.iter().copied().max().unwrap_or(0)
+    }
+
     pub fn sends_to_dead(&self) -> u64 {
         self.to_dead
     }
@@ -103,6 +125,12 @@ impl Metrics {
             self.msgs[i] += other.msgs[i];
             self.bytes[i] += other.bytes[i];
         }
+        if other.sent_by_rank.len() > self.sent_by_rank.len() {
+            self.sent_by_rank.resize(other.sent_by_rank.len(), 0);
+        }
+        for (r, b) in other.sent_by_rank.iter().enumerate() {
+            self.sent_by_rank[r] += b;
+        }
         self.finfo_bytes += other.finfo_bytes;
         self.to_dead += other.to_dead;
         self.events += other.events;
@@ -119,15 +147,19 @@ mod tests {
     #[test]
     fn counters_accumulate_per_kind() {
         let mut m = Metrics::new();
-        m.on_send(MsgKind::UpCorrection, 24, 1);
-        m.on_send(MsgKind::UpCorrection, 24, 1);
-        m.on_send(MsgKind::TreeUp, 40, 5);
+        m.on_send(0, MsgKind::UpCorrection, 24, 1);
+        m.on_send(0, MsgKind::UpCorrection, 24, 1);
+        m.on_send(3, MsgKind::TreeUp, 40, 5);
         assert_eq!(m.msgs(MsgKind::UpCorrection), 2);
         assert_eq!(m.msgs(MsgKind::TreeUp), 1);
         assert_eq!(m.total_msgs(), 3);
         assert_eq!(m.bytes(MsgKind::UpCorrection), 48);
         assert_eq!(m.total_bytes(), 88);
         assert_eq!(m.finfo_bytes(), 7);
+        assert_eq!(m.sent_bytes_of(0), 48);
+        assert_eq!(m.sent_bytes_of(3), 40);
+        assert_eq!(m.sent_bytes_of(9), 0);
+        assert_eq!(m.max_rank_sent_bytes(), 48);
     }
 
     #[test]
@@ -144,12 +176,16 @@ mod tests {
     #[test]
     fn absorb_merges() {
         let mut a = Metrics::new();
-        a.on_send(MsgKind::TreeUp, 10, 0);
+        a.on_send(1, MsgKind::TreeUp, 10, 0);
         let mut b = Metrics::new();
-        b.on_send(MsgKind::TreeUp, 10, 0);
+        b.on_send(2, MsgKind::TreeUp, 10, 0);
+        b.on_send(1, MsgKind::TreeUp, 5, 0);
         b.on_send_to_dead();
         a.absorb(&b);
-        assert_eq!(a.msgs(MsgKind::TreeUp), 2);
+        assert_eq!(a.msgs(MsgKind::TreeUp), 3);
         assert_eq!(a.sends_to_dead(), 1);
+        assert_eq!(a.sent_bytes_of(1), 15);
+        assert_eq!(a.sent_bytes_of(2), 10);
+        assert_eq!(a.max_rank_sent_bytes(), 15);
     }
 }

@@ -1,8 +1,11 @@
 //! The shared run-plane: one [`RunSpec`] describing *what* to run and
 //! one [`Driver`] owning *how* the protocol stack is constructed —
-//! protocol instantiation, segment multiplexing (the pipelined wrapper),
-//! epoch banding (`base_epoch` / session bands) and session folding all
-//! live here, behind a single seam both executors call through.
+//! protocol instantiation, the allreduce decomposition choice
+//! ([`AllreduceAlgo`]: corrected reduce+broadcast vs reduce-scatter/
+//! allgather, docs/RSAG.md), segment multiplexing (the pipelined
+//! wrapper), epoch banding (`base_epoch` / session bands) and session
+//! folding all live here, behind a single seam both executors call
+//! through.
 //!
 //! Before this layer existed every run parameter was plumbed three
 //! times (SimConfig, EngineConfig, CLI `Config`) and the
@@ -20,6 +23,7 @@ use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::pipeline::Pipelined;
 use crate::collectives::reduce::{Reduce, ReduceConfig};
+use crate::collectives::rsag::{AllreduceAlgo, ReduceScatterAllgather, RsagConfig};
 use crate::collectives::{Protocol, ReduceOp};
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
@@ -44,8 +48,17 @@ pub struct RunSpec {
     /// Broadcast ring-correction distance override (`None` → f+1);
     /// exposed for the design-choice ablation (E12).
     pub bcast_distance: Option<u32>,
-    /// Allreduce candidate roots (`None` → `0..=f`).
+    /// Allreduce candidate roots (`None` → `0..=f`). Ignored by the
+    /// `rsag` decomposition, whose per-block candidates are each block
+    /// owner's cyclic correction group.
     pub candidates: Option<Vec<Rank>>,
+    /// Allreduce decomposition (`--allreduce-algo`): the paper's
+    /// corrected reduce+broadcast through one root, or the
+    /// reduce-scatter/allgather over per-rank strided blocks
+    /// ([`crate::collectives::rsag`], docs/RSAG.md). Applies wherever
+    /// an allreduce is built — stand-alone runs, session epochs, and
+    /// under `segment_bytes` pipelining; reduce/broadcast ignore it.
+    pub allreduce_algo: AllreduceAlgo,
     /// Failure-monitor confirmation latency (the §4.2 timeout): virtual
     /// ns on the DES, wall-clock ns on the live engine.
     pub detect_latency: TimeNs,
@@ -76,6 +89,7 @@ impl RunSpec {
             correction: CorrectionMode::Always,
             bcast_distance: None,
             candidates: None,
+            allreduce_algo: AllreduceAlgo::Tree,
             detect_latency: 10_000, // 10 µs timeout
             failures: Vec::new(),
             segment_bytes: None,
@@ -99,6 +113,16 @@ impl RunSpec {
         }
         if self.session_ops == 0 {
             return Err("session_ops must be >= 1".into());
+        }
+        // rsag blocks reuse the segment framing one level below the
+        // (optional) pipeline segment index
+        if self.allreduce_algo == AllreduceAlgo::Rsag && self.n as u64 > segment::MAX_SEGMENTS
+        {
+            return Err(format!(
+                "rsag partitions into n = {} blocks, over the op-id framing limit of {}",
+                self.n,
+                segment::MAX_SEGMENTS
+            ));
         }
         if let Some(ops) = &self.ops_list {
             if ops.is_empty() {
@@ -212,6 +236,17 @@ impl<'a> CollectiveDriver<'a> {
         }
     }
 
+    fn rsag_config(&self) -> RsagConfig {
+        RsagConfig {
+            n: self.spec.n,
+            f: self.spec.f,
+            scheme: self.spec.scheme,
+            correction: self.spec.correction,
+            op_id: 1,
+            base_epoch: self.spec.base_epoch,
+        }
+    }
+
     fn session_config(&self, uniform: OpKind) -> SessionConfig {
         SessionConfig {
             n: self.spec.n,
@@ -221,6 +256,7 @@ impl<'a> CollectiveDriver<'a> {
             ops: self.spec.session_kinds(uniform),
             base_op: 1,
             segment_bytes: self.spec.segment_bytes,
+            allreduce_algo: self.spec.allreduce_algo,
         }
     }
 }
@@ -232,12 +268,22 @@ impl Driver for CollectiveDriver<'_> {
                 Some(bytes) => Box::new(Pipelined::reduce(self.reduce_config(), input, bytes)),
                 None => Box::new(Reduce::new(self.reduce_config(), input)),
             },
-            DriveKind::Allreduce => match self.spec.segment_bytes {
-                Some(bytes) => {
-                    Box::new(Pipelined::allreduce(self.allreduce_config(), input, bytes))
+            DriveKind::Allreduce => {
+                match (self.spec.allreduce_algo, self.spec.segment_bytes) {
+                    (AllreduceAlgo::Tree, Some(bytes)) => {
+                        Box::new(Pipelined::allreduce(self.allreduce_config(), input, bytes))
+                    }
+                    (AllreduceAlgo::Tree, None) => {
+                        Box::new(Allreduce::new(self.allreduce_config(), input))
+                    }
+                    (AllreduceAlgo::Rsag, Some(bytes)) => {
+                        Box::new(Pipelined::rsag(self.rsag_config(), input, bytes))
+                    }
+                    (AllreduceAlgo::Rsag, None) => {
+                        Box::new(ReduceScatterAllgather::new(self.rsag_config(), input))
+                    }
                 }
-                None => Box::new(Allreduce::new(self.allreduce_config(), input)),
-            },
+            }
             DriveKind::Broadcast => {
                 let cfg = self.bcast_config();
                 let input = if rank == cfg.root { Some(input) } else { None };
@@ -295,6 +341,24 @@ mod tests {
         );
         let driver = CollectiveDriver::new(&spec, DriveKind::Session(OpKind::Reduce));
         assert_eq!(driver.deliveries_per_rank(), 3);
+    }
+
+    #[test]
+    fn rsag_driver_builds_per_block_instances() {
+        let mut spec = RunSpec::new(6, 1);
+        spec.allreduce_algo = AllreduceAlgo::Rsag;
+        spec.validate().unwrap();
+        let driver = CollectiveDriver::new(&spec, DriveKind::Allreduce);
+        let mut ctx = crate::collectives::testutil::TestCtx::new(2, 6);
+        let mut proto = driver.make_protocol(2, Value::one_hot(6, 2));
+        proto.on_start(&mut ctx);
+        // every block starts concurrently: traffic flows immediately and
+        // every message is block-framed under base op 1
+        assert!(!ctx.sent.is_empty());
+        for (_, m) in &ctx.sent {
+            assert!(crate::types::segment::seg_index(m.op).is_some());
+            assert_eq!(crate::types::segment::base_op(m.op), 1);
+        }
     }
 
     #[test]

@@ -53,12 +53,21 @@
 //! `CountBit`/`Bit` the session still runs correctly but never shrinks
 //! (it re-pays detection timeouts every epoch) — exclusion is an
 //! optimization, not a correctness requirement. See docs/SESSIONS.md.
+//!
+//! Allreduce epochs run either decomposition
+//! ([`SessionConfig::allreduce_algo`]): the paper's corrected
+//! reduce+broadcast, or reduce-scatter/allgather over per-survivor
+//! blocks (docs/RSAG.md) — rsag epochs derive the membership-sync root
+//! from block 0's winning owner
+//! ([`ReduceScatterAllgather::sync_attempts`]) since their aggregate
+//! `attempts` is a max over blocks and names no single rank.
 
 use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
 use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::pipeline::Pipelined;
 use crate::collectives::reduce::{Reduce, ReduceConfig};
+use crate::collectives::rsag::{AllreduceAlgo, ReduceScatterAllgather, RsagConfig};
 use crate::collectives::{Ctx, Outcome, Protocol};
 use crate::topology::Membership;
 use crate::types::{segment, Msg, Rank, TimeNs, Value};
@@ -104,6 +113,12 @@ pub struct SessionConfig {
     /// Segmented/pipelined execution of reduce/allreduce epochs
     /// (`None` = monolithic). Broadcast epochs ignore it.
     pub segment_bytes: Option<usize>,
+    /// Decomposition of allreduce epochs: the paper's corrected
+    /// reduce+broadcast, or reduce-scatter/allgather over per-survivor
+    /// blocks ([`crate::collectives::rsag`]). Each rsag epoch runs over
+    /// the *dense survivors*, so every live member owns exactly one
+    /// block of that epoch. Reduce/broadcast epochs ignore it.
+    pub allreduce_algo: AllreduceAlgo,
 }
 
 impl SessionConfig {
@@ -116,6 +131,7 @@ impl SessionConfig {
             ops,
             base_op: 1,
             segment_bytes: None,
+            allreduce_algo: AllreduceAlgo::Tree,
         }
     }
 
@@ -147,6 +163,7 @@ pub struct SessionView {
 enum DataInst {
     R(Reduce),
     A(Allreduce),
+    G(ReduceScatterAllgather),
     P(Pipelined),
     B(Broadcast),
 }
@@ -156,6 +173,7 @@ impl DataInst {
         match self {
             DataInst::R(p) => p.on_start(ctx),
             DataInst::A(p) => p.on_start(ctx),
+            DataInst::G(p) => p.on_start(ctx),
             DataInst::P(p) => p.on_start(ctx),
             DataInst::B(p) => p.on_start(ctx),
         }
@@ -165,6 +183,7 @@ impl DataInst {
         match self {
             DataInst::R(p) => p.on_message(from, msg, ctx),
             DataInst::A(p) => p.on_message(from, msg, ctx),
+            DataInst::G(p) => p.on_message(from, msg, ctx),
             DataInst::P(p) => p.on_message(from, msg, ctx),
             DataInst::B(p) => p.on_message(from, msg, ctx),
         }
@@ -174,6 +193,7 @@ impl DataInst {
         match self {
             DataInst::R(p) => p.on_peer_failed(peer, ctx),
             DataInst::A(p) => p.on_peer_failed(peer, ctx),
+            DataInst::G(p) => p.on_peer_failed(peer, ctx),
             DataInst::P(p) => p.on_peer_failed(peer, ctx),
             DataInst::B(p) => p.on_peer_failed(peer, ctx),
         }
@@ -183,6 +203,7 @@ impl DataInst {
         match self {
             DataInst::R(p) => p.on_timer(token, ctx),
             DataInst::A(p) => p.on_timer(token, ctx),
+            DataInst::G(p) => p.on_timer(token, ctx),
             DataInst::P(p) => p.on_timer(token, ctx),
             DataInst::B(p) => p.on_timer(token, ctx),
         }
@@ -372,19 +393,38 @@ impl Session {
                     None => DataInst::R(Reduce::new(rcfg, self.input.clone())),
                 }
             }
-            OpKind::Allreduce => {
-                let mut acfg = AllreduceConfig::new(n, f);
-                acfg.scheme = self.cfg.scheme;
-                acfg.correction = self.cfg.correction;
-                acfg.op_id = self.cfg.base_op;
-                acfg.base_epoch = e;
-                match self.cfg.segment_bytes {
-                    Some(b) => {
-                        DataInst::P(Pipelined::allreduce(acfg, self.input.clone(), b))
+            OpKind::Allreduce => match self.cfg.allreduce_algo {
+                AllreduceAlgo::Tree => {
+                    let mut acfg = AllreduceConfig::new(n, f);
+                    acfg.scheme = self.cfg.scheme;
+                    acfg.correction = self.cfg.correction;
+                    acfg.op_id = self.cfg.base_op;
+                    acfg.base_epoch = e;
+                    match self.cfg.segment_bytes {
+                        Some(b) => {
+                            DataInst::P(Pipelined::allreduce(acfg, self.input.clone(), b))
+                        }
+                        None => DataInst::A(Allreduce::new(acfg, self.input.clone())),
                     }
-                    None => DataInst::A(Allreduce::new(acfg, self.input.clone())),
                 }
-            }
+                AllreduceAlgo::Rsag => {
+                    // over the dense survivors: every live member owns
+                    // exactly one block of this epoch's payload
+                    let mut gcfg = RsagConfig::new(n, f);
+                    gcfg.scheme = self.cfg.scheme;
+                    gcfg.correction = self.cfg.correction;
+                    gcfg.op_id = self.cfg.base_op;
+                    gcfg.base_epoch = e;
+                    match self.cfg.segment_bytes {
+                        Some(b) => {
+                            DataInst::P(Pipelined::rsag(gcfg, self.input.clone(), b))
+                        }
+                        None => {
+                            DataInst::G(ReduceScatterAllgather::new(gcfg, self.input.clone()))
+                        }
+                    }
+                }
+            },
             OpKind::Broadcast => {
                 let bcfg = BcastConfig {
                     n,
@@ -508,12 +548,22 @@ impl Session {
                     self.enter_sync(0, Some(world_failed), ctx);
                 }
                 Outcome::Allreduce { value, attempts } => {
-                    // the winning attempt's candidate is the sync root;
-                    // every survivor derives the same index from its own
-                    // `attempts` (consistent detection, §5.2) — and the
-                    // session's candidate lists are dense 0..=f', so the
-                    // dense sync root is simply attempts-1
-                    let sync_root = attempts.saturating_sub(1);
+                    // the sync root must be a rank every survivor derives
+                    // identically. Tree epochs use the winning attempt's
+                    // candidate: the same index falls out of each
+                    // survivor's own `attempts` (consistent detection,
+                    // §5.2), and the session's candidate lists are dense
+                    // 0..=f', so the dense sync root is attempts-1. Rsag
+                    // epochs use block 0's winning owner instead — the
+                    // aggregate `attempts` is a max over blocks and names
+                    // no single rank, but block 0's attempt count is
+                    // delivered consistently (per-block §5.1 agreement).
+                    let sync_attempts = match self.data.as_ref() {
+                        Some(DataInst::G(g)) => g.sync_attempts().unwrap_or(attempts),
+                        Some(DataInst::P(p)) => p.sync_attempts().unwrap_or(attempts),
+                        _ => attempts,
+                    };
+                    let sync_root = sync_attempts.saturating_sub(1);
                     let me = self
                         .membership
                         .dense_of(self.rank)
@@ -521,6 +571,7 @@ impl Session {
                     let report = if me == sync_root {
                         let dense_report = match self.data.as_ref() {
                             Some(DataInst::A(a)) => a.known_failed().to_vec(),
+                            Some(DataInst::G(g)) => g.known_failed(),
                             Some(DataInst::P(p)) => p.allreduce_report(),
                             _ => Vec::new(),
                         };
@@ -651,10 +702,13 @@ impl Protocol for Session {
             return;
         }
         // ours? monolithic epochs and the sync broadcast use the base op
-        // id itself; segmented epochs frame it (base << SEG_BITS | s+1,
-        // always ≥ 2^20 for base ≥ 1, so the two never collide)
-        let ours =
-            msg.op == self.cfg.base_op || segment::base_op(msg.op) == self.cfg.base_op;
+        // id itself; segmented epochs AND monolithic rsag epochs frame
+        // it once (base << SEG_BITS | i+1, always ≥ 2^20 for base ≥ 1,
+        // so the two never collide); segmented rsag epochs frame twice
+        // (segment above block) — peel both levels
+        let ours = msg.op == self.cfg.base_op
+            || segment::base_op(msg.op) == self.cfg.base_op
+            || segment::base_op(segment::base_op(msg.op)) == self.cfg.base_op;
         if !ours {
             return;
         }
@@ -998,6 +1052,54 @@ mod tests {
                     }
                 }
                 o => panic!("epoch {e}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    /// Rsag session epochs: allreduce epochs run the reduce-scatter/
+    /// allgather decomposition over the dense survivors. A pre-dead
+    /// rank is detected and reported through epoch 0's per-block
+    /// reduces, the block-0 winner syncs the exclusion, and epoch 1's
+    /// blocks span only the survivors (every live member owns one).
+    #[test]
+    fn rsag_session_excludes_dead() {
+        let n = 7u32;
+        let dead = [5u32];
+        let mut sessions: Vec<Session> = (0..n)
+            .map(|r| {
+                let mut cfg = SessionConfig::new(n, 1, vec![OpKind::Allreduce; 2]);
+                cfg.allreduce_algo = AllreduceAlgo::Rsag;
+                Session::new(cfg, Value::one_hot(n as usize, r))
+            })
+            .collect();
+        let mut ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+        start_all(&mut sessions, &mut ctxs, &dead);
+        pump(&mut sessions, &mut ctxs, &dead);
+        for i in 0..n as usize {
+            if dead.contains(&(i as u32)) {
+                continue;
+            }
+            let v = sessions[i].view();
+            assert!(v.done, "rank {i}: {v:?}");
+            assert_eq!(v.excluded, vec![5], "rank {i}");
+            assert_eq!(v, sessions[0].view(), "rank {i} view diverged");
+            assert_eq!(ctxs[i].delivered.len(), 2, "rank {i}");
+            for (e, out) in ctxs[i].delivered.iter().enumerate() {
+                match out {
+                    Outcome::Allreduce { value, attempts } => {
+                        let counts = value.inclusion_counts();
+                        for r in 0..7usize {
+                            let want = if r == 5 { 0 } else { 1 };
+                            assert_eq!(counts[r], want, "rank {i} epoch {e} rank {r}");
+                        }
+                        if e == 1 {
+                            // the dead owner was excluded: no epoch-1 block
+                            // rotates (cf. the RootKill healing oracle)
+                            assert_eq!(*attempts, 1, "rank {i} epoch 1 rotated");
+                        }
+                    }
+                    o => panic!("rank {i} epoch {e}: unexpected {o:?}"),
+                }
             }
         }
     }

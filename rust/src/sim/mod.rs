@@ -17,6 +17,7 @@ use crate::collectives::baseline::{
     FlatGather, Gossip, GossipConfig, RingAllreduce, TreeReduce,
 };
 use crate::collectives::failure_info::Scheme;
+use crate::collectives::rsag::AllreduceAlgo;
 use crate::collectives::{Ctx, NativeReducer, Outcome, Protocol, ReduceOp, Reducer};
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
@@ -123,6 +124,10 @@ impl SimConfig {
     }
     pub fn segment_bytes(mut self, bytes: usize) -> Self {
         self.spec.segment_bytes = Some(bytes);
+        self
+    }
+    pub fn allreduce_algo(mut self, algo: AllreduceAlgo) -> Self {
+        self.spec.allreduce_algo = algo;
         self
     }
     pub fn session_ops(mut self, ops: u32) -> Self {
@@ -344,7 +349,7 @@ impl Sim {
         }
         self.send_count[from as usize] += 1;
         let bytes = msg.wire_bytes();
-        self.metrics.on_send(msg.kind, bytes, msg.finfo.wire_bytes());
+        self.metrics.on_send(from, msg.kind, bytes, msg.finfo.wire_bytes());
         if self.trace.is_enabled() {
             let includes = match &msg.payload {
                 Value::I64(mask) => mask

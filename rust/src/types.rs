@@ -19,13 +19,19 @@
 //! both executors, every per-segment instance the pipelined driver
 //! spawns) bumps a refcount instead of memcpy-ing the payload, and
 //! [`Value::split_segments`] returns per-segment *views* over the one
-//! input buffer instead of owned copies. Mutation ([`ValueView::
-//! make_mut`], used by the reducers) happens in place when the view is
-//! the only owner of its buffer and copies-on-write otherwise, so
+//! input buffer instead of owned copies, and [`Value::stride_blocks`]
+//! partitions one buffer into per-destination sub-windows at a fixed
+//! stride — the reduce-scatter block plane of
+//! [`crate::collectives::rsag`] (docs/RSAG.md). Mutation
+//! ([`ValueView::make_mut`], used by the reducers) happens in place
+//! when the view is the only owner of its buffer and copies-on-write
+//! otherwise, so
 //! protocol semantics are unchanged: a combined accumulator can never be
 //! observed through another live view. [`memstats`] counts the bytes
 //! actually memcpy'd vs the bytes moved by refcount alone —
-//! `benches/bench_value.rs` gates the pipelined hot path on that ratio.
+//! `benches/bench_value.rs` gates the pipelined hot path on that ratio
+//! (view/block creation books *shared* bytes, never *copied* —
+//! rust/tests/memstats_strided.rs pins the split).
 
 use crate::collectives::failure_info::FailureInfo;
 use std::sync::Arc;
@@ -42,9 +48,9 @@ pub type TimeNs = u64;
 /// Payload memcpy accounting for the zero-copy plane.
 ///
 /// `copied` counts element bytes actually memcpy'd by `Value`
-/// operations (copy-on-write in [`ValueView::make_mut`], segment
-/// reassembly in [`Value::concat_segments`], explicit
-/// materializations). `shared` counts element bytes that crossed an
+/// operations (copy-on-write in [`crate::types::ValueView::make_mut`],
+/// segment reassembly in [`crate::types::Value::concat_segments`],
+/// explicit materializations). `shared` counts element bytes that crossed an
 /// ownership boundary by refcount bump alone (clones, segment views) —
 /// exactly the bytes the pre-view implementation deep-copied, so
 /// `copied / (copied + shared)` is the fraction of the old memcpy
@@ -143,6 +149,29 @@ impl<T: Copy> ValueView<T> {
     /// Would [`ValueView::make_mut`] mutate in place (no other owner)?
     pub fn is_unique(&self) -> bool {
         Arc::strong_count(&self.buf) == 1
+    }
+
+    /// Partition this view into `blocks` per-destination sub-windows at
+    /// stride `len / blocks`: block `b` covers
+    /// `[⌊b·len/blocks⌋, ⌊(b+1)·len/blocks⌋)`, so the windows are
+    /// disjoint, cover the view exactly (non-divisible lengths spread
+    /// the remainder one element at a time), and differ in size by at
+    /// most one element. Every block shares this view's buffer (shared
+    /// bytes in [`memstats`], zero copies); mutation through one block
+    /// is CoW-isolated from its siblings like any other sub-view. This
+    /// is the reduce-scatter block plane of
+    /// [`crate::collectives::rsag`]: block `b` is rank `b`'s owned
+    /// window. When `blocks > len`, trailing blocks are empty windows.
+    pub fn stride_blocks(&self, blocks: usize) -> Vec<ValueView<T>> {
+        assert!(blocks >= 1, "need at least one block");
+        let len = self.len as u128;
+        let boundary = |b: usize| -> usize { (b as u128 * len / blocks as u128) as usize };
+        (0..blocks)
+            .map(|b| {
+                let start = boundary(b);
+                self.slice(start, boundary(b + 1) - start)
+            })
+            .collect()
     }
 }
 
@@ -310,6 +339,22 @@ impl Value {
             Value::F32(v) => chunks(v, per).into_iter().map(Value::F32).collect(),
             Value::F64(v) => chunks(v, per).into_iter().map(Value::F64).collect(),
             Value::I64(v) => chunks(v, per).into_iter().map(Value::I64).collect(),
+        }
+    }
+
+    /// Partition into `blocks` per-destination sub-windows
+    /// ([`ValueView::stride_blocks`]): disjoint views at stride
+    /// `len / blocks` covering this value exactly, sharing its buffer
+    /// (no element bytes are copied; [`memstats`] counts them as
+    /// shared). Block `b` is the window rank `b` owns in the
+    /// reduce-scatter/allgather decomposition
+    /// ([`crate::collectives::rsag`]); [`Value::concat_segments`]
+    /// reassembles the blocks in order.
+    pub fn stride_blocks(&self, blocks: usize) -> Vec<Value> {
+        match self {
+            Value::F32(v) => v.stride_blocks(blocks).into_iter().map(Value::F32).collect(),
+            Value::F64(v) => v.stride_blocks(blocks).into_iter().map(Value::F64).collect(),
+            Value::I64(v) => v.stride_blocks(blocks).into_iter().map(Value::I64).collect(),
         }
     }
 
@@ -658,6 +703,47 @@ mod tests {
     #[should_panic(expected = "overflows framing")]
     fn segment_index_overflow_is_a_hard_error() {
         segment::seg_op(1, segment::MAX_SEGMENTS as u32);
+    }
+
+    /// Strided block partition: exact cover, near-equal sizes, shared
+    /// buffer (zero copy), and round trip through concat_segments.
+    #[test]
+    fn stride_blocks_partition_exact() {
+        for (len, blocks) in [(10usize, 3usize), (7, 7), (5, 8), (0, 4), (1, 1), (16, 4)] {
+            let v = Value::i64((0..len as i64).collect());
+            let Value::I64(orig) = &v else { unreachable!() };
+            let parts = v.stride_blocks(blocks);
+            assert_eq!(parts.len(), blocks, "len={len} blocks={blocks}");
+            let total: usize = parts.iter().map(Value::len).sum();
+            assert_eq!(total, len, "len={len} blocks={blocks}");
+            for p in &parts {
+                let (lo, hi) = (len / blocks, len.div_ceil(blocks));
+                assert!(
+                    p.len() >= lo && p.len() <= hi,
+                    "unbalanced block of {} for len={len} blocks={blocks}",
+                    p.len()
+                );
+                let Value::I64(view) = p else { panic!("carrier changed") };
+                assert!(Arc::ptr_eq(&view.buf, &orig.buf), "block copied the buffer");
+            }
+            if len > 0 {
+                assert_eq!(Value::concat_segments(&parts), v, "len={len} blocks={blocks}");
+            }
+        }
+    }
+
+    /// Mutating one strided block never bleeds into a sibling block or
+    /// the parent (the CoW isolation rsag's per-block reduces rely on).
+    #[test]
+    fn stride_blocks_cow_isolated() {
+        let parent = Value::i64(vec![1, 2, 3, 4, 5, 6]);
+        let mut parts = parent.stride_blocks(3);
+        let Value::I64(b1) = &mut parts[1] else { unreachable!() };
+        b1.make_mut()[0] = 99; // parent + siblings alive → CoW
+        assert_eq!(parts[1].inclusion_counts(), &[99, 4]);
+        assert_eq!(parts[0].inclusion_counts(), &[1, 2]);
+        assert_eq!(parts[2].inclusion_counts(), &[5, 6]);
+        assert_eq!(parent.inclusion_counts(), &[1, 2, 3, 4, 5, 6]);
     }
 
     #[test]

@@ -130,36 +130,75 @@ fn check_reduce(s: &Scenario) {
     }
 }
 
-fn check_allreduce(s: &Scenario) {
-    let des = sim::run_allreduce(&s.des_config());
-    let live = live_allreduce(&s.live_config());
-    let dead = s.injected();
+fn compare_allreduce(
+    name: &str,
+    n: u32,
+    dead: &[Rank],
+    des: &sim::RunReport,
+    live: &ftcoll::coordinator::LiveReport,
+) {
     let mut des_first: Option<(&Value, u32)> = None;
-    for r in 0..s.n {
+    for r in 0..n {
         if dead.contains(&r) {
-            assert_eq!(des.deliveries_at(r), 0, "{}: dead rank {r} (DES)", s.name);
-            assert!(live.outcomes[r as usize].is_none(), "{}: dead rank {r} (live)", s.name);
+            assert_eq!(des.deliveries_at(r), 0, "{name}: dead rank {r} (DES)");
+            assert!(live.outcomes[r as usize].is_none(), "{name}: dead rank {r} (live)");
             continue;
         }
         let (dv, da) = match des.outcomes[r as usize].first() {
             Some(Outcome::Allreduce { value, attempts }) => (value, *attempts),
-            o => panic!("{}: DES rank {r}: {o:?}", s.name),
+            o => panic!("{name}: DES rank {r}: {o:?}"),
         };
         let (lv, la) = match live.outcomes[r as usize].as_ref() {
             Some(Outcome::Allreduce { value, attempts }) => (value, *attempts),
-            o => panic!("{}: live rank {r}: {o:?}", s.name),
+            o => panic!("{name}: live rank {r}: {o:?}"),
         };
-        assert_eq!(dv, lv, "{}: rank {r} values differ across executors", s.name);
-        assert_eq!(da, la, "{}: rank {r} attempt counts differ", s.name);
+        assert_eq!(dv, lv, "{name}: rank {r} values differ across executors");
+        assert_eq!(da, la, "{name}: rank {r} attempt counts differ");
         match des_first {
             None => des_first = Some((dv, da)),
             Some((v0, a0)) => {
-                assert_eq!(dv, v0, "{}: rank {r} disagrees within DES", s.name);
-                assert_eq!(da, a0, "{}: rank {r} attempts disagree within DES", s.name);
+                assert_eq!(dv, v0, "{name}: rank {r} disagrees within DES");
+                assert_eq!(da, a0, "{name}: rank {r} attempts disagree within DES");
             }
         }
     }
-    assert!(des_first.is_some(), "{}: nobody delivered", s.name);
+    assert!(des_first.is_some(), "{name}: nobody delivered");
+}
+
+fn check_allreduce(s: &Scenario) {
+    let des = sim::run_allreduce(&s.des_config());
+    let live = live_allreduce(&s.live_config());
+    compare_allreduce(s.name, s.n, &s.injected(), &des, &live);
+}
+
+/// Reduce-scatter/allgather differential: same exact-carrier,
+/// pre-operational-only selection as the rest of the suite (every rank
+/// is a candidate owner under rsag, so in-op kills could legitimately
+/// diverge — the same reason §5.1 restricts candidate failures).
+fn check_rsag(
+    name: &str,
+    n: u32,
+    f: u32,
+    payload: PayloadKind,
+    failures: Vec<FailureSpec>,
+    segment_bytes: Option<usize>,
+) {
+    let dead: Vec<Rank> = failures.iter().map(|s| s.rank()).collect();
+    let mut des_cfg = SimConfig::new(n, f)
+        .payload(payload)
+        .failures(failures.clone())
+        .allreduce_algo(AllreduceAlgo::Rsag);
+    des_cfg.segment_bytes = segment_bytes;
+    let des = sim::run_allreduce(&des_cfg);
+
+    let mut live_cfg = EngineConfig::new(n, f);
+    live_cfg.payload = payload;
+    live_cfg.failures = failures;
+    live_cfg.segment_bytes = segment_bytes;
+    live_cfg.allreduce_algo = AllreduceAlgo::Rsag;
+    let live = live_allreduce(&live_cfg);
+
+    compare_allreduce(name, n, &dead, &des, &live);
 }
 
 #[test]
@@ -249,6 +288,56 @@ fn allreduce_clean_and_rootkill() {
             failures: vec![FailureSpec::Pre { rank: 0 }],
             segment_bytes: None,
         });
+    }
+}
+
+#[test]
+fn rsag_differential() {
+    for (n, f) in [(4u32, 1u32), (7, 1), (8, 2)] {
+        check_rsag("rsag/clean", n, f, PayloadKind::OneHot, vec![], None);
+    }
+    // f=1 single pre-kill: the timing-independent class — the victim's
+    // blocks rotate to the next owner deterministically on both
+    // executors, and every other block completes in one attempt
+    check_rsag(
+        "rsag/pre1",
+        8,
+        1,
+        PayloadKind::OneHot,
+        vec![FailureSpec::Pre { rank: 5 }],
+        None,
+    );
+    // owner-prefix kill: block 0 (and only it) rotates once
+    check_rsag(
+        "rsag/ownerkill",
+        7,
+        1,
+        PayloadKind::OneHot,
+        vec![FailureSpec::Pre { rank: 0 }],
+        None,
+    );
+    // exact small-integer sums are order-independent
+    check_rsag(
+        "rsag/rank",
+        12,
+        2,
+        PayloadKind::RankValue,
+        vec![FailureSpec::Pre { rank: 6 }, FailureSpec::Pre { rank: 9 }],
+        None,
+    );
+}
+
+#[test]
+fn segmented_rsag_differential() {
+    for failures in [vec![], vec![FailureSpec::Pre { rank: 4 }]] {
+        check_rsag(
+            "rsag/segmented",
+            8,
+            1,
+            PayloadKind::SegMask { segments: 3 },
+            failures,
+            Some(8 * 8),
+        );
     }
 }
 

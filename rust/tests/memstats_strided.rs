@@ -1,0 +1,37 @@
+//! Regression pin for `types::memstats` accounting of strided
+//! sub-window creation: `stride_blocks` must book its bytes under the
+//! *shared* bucket (refcount bumps), never under *copied* — otherwise
+//! `bench_value`'s ≥30% memcpy-reduction gate would be flattered by
+//! block creation that never actually moves element bytes.
+//!
+//! Deliberately a single test in its own integration binary: the
+//! counters are process-global relaxed atomics, and any sibling test
+//! running in the same process would make exact pins racy. A separate
+//! test binary is a separate process, so the readings here are exact.
+
+use ftcoll::types::{memstats, Value};
+
+#[test]
+fn strided_split_counts_shared_not_copied() {
+    memstats::reset();
+    let v = Value::i64((0..1000).collect()); // construction: not counted
+    assert_eq!(memstats::copied_bytes(), 0);
+    assert_eq!(memstats::shared_bytes(), 0);
+
+    // the strided partition moves all 1000 elements across an ownership
+    // boundary by refcount bump alone
+    let blocks = v.stride_blocks(7);
+    assert_eq!(memstats::copied_bytes(), 0, "strided windows must not copy");
+    assert_eq!(memstats::shared_bytes(), 8 * 1000, "strided windows count as shared");
+
+    // a clone of one block is shared too, at exactly its window size
+    let block0_bytes = blocks[0].wire_bytes() as u64;
+    let _clone = blocks[0].clone();
+    assert_eq!(memstats::copied_bytes(), 0);
+    assert_eq!(memstats::shared_bytes(), 8 * 1000 + block0_bytes);
+
+    // reassembly at delivery is the one real memcpy
+    let back = Value::concat_segments(&blocks);
+    assert_eq!(back, v);
+    assert_eq!(memstats::copied_bytes(), 8 * 1000, "reassembly is the only copy");
+}

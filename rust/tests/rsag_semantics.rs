@@ -1,0 +1,208 @@
+//! Acceptance tests for the reduce-scatter/allgather allreduce
+//! (`--allreduce-algo rsag`, docs/RSAG.md): exact inclusion masks under
+//! pre-operational failures, the longest-dead-owner-run attempt law,
+//! the per-rank bandwidth-bottleneck win over the corrected
+//! reduce+broadcast, rsag under segmentation and inside self-healing
+//! sessions, and the campaign's `rsag` axis passing its oracles.
+
+use ftcoll::collectives::Outcome;
+use ftcoll::prelude::*;
+
+fn rsag_cfg(n: u32, f: u32) -> SimConfig {
+    SimConfig::new(n, f).payload(PayloadKind::OneHot).allreduce_algo(AllreduceAlgo::Rsag)
+}
+
+/// Clean runs: rsag delivers the exact masks the tree decomposition
+/// delivers, once per rank, across a (n, f) grid including the
+/// degenerate corners.
+#[test]
+fn clean_rsag_matches_tree_allreduce() {
+    for n in [1u32, 2, 3, 7, 8, 16, 33] {
+        for f in [0u32, 1, 2, 3] {
+            let rsag = run_allreduce(&rsag_cfg(n, f));
+            let tree = run_allreduce(&SimConfig::new(n, f).payload(PayloadKind::OneHot));
+            for r in 0..n {
+                assert_eq!(rsag.deliveries_at(r), 1, "rank {r} n={n} f={f}");
+                assert_eq!(
+                    rsag.value_at(r),
+                    tree.value_at(r),
+                    "rank {r} n={n} f={f}: rsag mask differs from tree"
+                );
+            }
+        }
+    }
+}
+
+/// Pre-operational failures: the dead contribute nothing anywhere,
+/// every survivor is included exactly once, and all survivors agree
+/// bit-identically (per-block §5.1 agreement composes).
+#[test]
+fn rsag_excludes_pre_dead_and_agrees() {
+    let cfg = rsag_cfg(12, 2)
+        .failures(vec![FailureSpec::Pre { rank: 5 }, FailureSpec::Pre { rank: 9 }]);
+    let rep = run_allreduce(&cfg);
+    let first = rep.value_at(0).expect("rank 0 delivers").clone();
+    for r in 0..12u32 {
+        if r == 5 || r == 9 {
+            assert_eq!(rep.deliveries_at(r), 0, "dead rank {r} delivered");
+            continue;
+        }
+        match rep.outcomes[r as usize].first() {
+            Some(Outcome::Allreduce { value, attempts }) => {
+                assert_eq!(*value, first, "rank {r} disagrees");
+                // dead ranks 5 and 9 are non-adjacent: longest dead
+                // owner run is 1, so exactly one rotation happens in
+                // blocks 5 and 9 and the aggregate max is 2
+                assert_eq!(*attempts, 2, "rank {r} attempts");
+            }
+            o => panic!("rank {r}: unexpected {o:?}"),
+        }
+    }
+    let counts = first.inclusion_counts();
+    for r in 0..12usize {
+        let want = if r == 5 || r == 9 { 0 } else { 1 };
+        assert_eq!(counts[r], want, "rank {r} inclusion");
+    }
+}
+
+/// The attempt law: the aggregate attempt count is 1 + the longest
+/// cyclic run of dead block owners — an owner-prefix kill of k ranks
+/// (the RootKill analog) costs k+1, an adjacent pair costs 3, and the
+/// same two deaths spread apart cost only 2.
+#[test]
+fn rsag_attempts_follow_longest_dead_owner_run() {
+    let attempts_of = |cfg: &SimConfig| -> u32 {
+        let rep = run_allreduce(cfg);
+        match rep.outcomes.iter().flatten().next() {
+            Some(Outcome::Allreduce { attempts, .. }) => *attempts,
+            o => panic!("unexpected {o:?}"),
+        }
+    };
+    let prefix = rsag_cfg(8, 2)
+        .failures(vec![FailureSpec::Pre { rank: 0 }, FailureSpec::Pre { rank: 1 }]);
+    assert_eq!(attempts_of(&prefix), 3, "owner-prefix kill of 2");
+    let adjacent = rsag_cfg(9, 2)
+        .failures(vec![FailureSpec::Pre { rank: 3 }, FailureSpec::Pre { rank: 4 }]);
+    assert_eq!(attempts_of(&adjacent), 3, "adjacent dead owners");
+    let spread = rsag_cfg(9, 2)
+        .failures(vec![FailureSpec::Pre { rank: 3 }, FailureSpec::Pre { rank: 6 }]);
+    assert_eq!(attempts_of(&spread), 2, "spread dead owners");
+    // cyclic wrap: the dead run n-1 → 0 spans the ring seam, so block
+    // n-1's candidate list [n-1, 0, 1] rotates twice — pins the
+    // `(b + j) % n` wrap in both the rotation and the oracle's law
+    let wrap = rsag_cfg(8, 2)
+        .failures(vec![FailureSpec::Pre { rank: 7 }, FailureSpec::Pre { rank: 0 }]);
+    assert_eq!(attempts_of(&wrap), 3, "wrap-around dead owner run");
+}
+
+/// The point of the decomposition: no rank carries the root's
+/// aggregate traffic. On a bandwidth-shaped payload the maximum
+/// per-rank sent bytes must be strictly lower than the corrected
+/// reduce+broadcast's root bottleneck (benches/bench_rsag.rs gates the
+/// full 1 MiB configuration; this is the quick tier-1 pin).
+#[test]
+fn rsag_lowers_per_rank_bottleneck_bytes() {
+    let tree = SimConfig::new(16, 1)
+        .payload(PayloadKind::VectorF32 { len: 16_384 }) // 64 KiB
+        .net(NetModel::lan());
+    let rsag = tree.clone().allreduce_algo(AllreduceAlgo::Rsag);
+    let a = run_allreduce(&tree);
+    let b = run_allreduce(&rsag);
+    let (ta, tb) = (a.metrics.max_rank_sent_bytes(), b.metrics.max_rank_sent_bytes());
+    assert!(
+        tb < ta,
+        "rsag per-rank bottleneck {tb} B not below the tree root's {ta} B"
+    );
+}
+
+/// Rsag under `--segment-bytes`: per-segment rsag instances (double
+/// op-id framing) deliver the exact masks the monolithic rsag run
+/// delivers.
+#[test]
+fn segmented_rsag_matches_monolithic_masks() {
+    for (n, f, failures) in [
+        (7u32, 1u32, vec![]),
+        (8, 2, vec![FailureSpec::Pre { rank: 5 }]),
+    ] {
+        let mono = SimConfig::new(n, f)
+            .payload(PayloadKind::SegMask { segments: 3 })
+            .allreduce_algo(AllreduceAlgo::Rsag)
+            .failures(failures);
+        let seg = mono.clone().segment_bytes(8 * n as usize);
+        let a = run_allreduce(&mono);
+        let b = run_allreduce(&seg);
+        for r in 0..n {
+            assert_eq!(a.value_at(r), b.value_at(r), "rank {r} n={n} f={f}");
+        }
+    }
+}
+
+/// Rsag inside a self-healing session: epoch 0 detects and reports the
+/// dead owner through its per-block reduces, the membership sync
+/// excludes it, and every later epoch runs over the dense survivors in
+/// a single attempt (the RootKill healing claim, rsag edition).
+#[test]
+fn rsag_session_excludes_and_heals() {
+    let mut cfg = rsag_cfg(8, 2).failures(vec![FailureSpec::Pre { rank: 3 }]);
+    cfg.session_ops = 3;
+    let rep = run_session(&cfg, OpKind::Allreduce);
+    let v0 = &rep.views[0];
+    for r in 0..8u32 {
+        if r == 3 {
+            assert_eq!(rep.run.deliveries_at(r), 0, "dead rank delivered");
+            continue;
+        }
+        let v = &rep.views[r as usize];
+        assert!(v.done, "rank {r}: {v:?}");
+        assert_eq!(v.excluded, vec![3], "rank {r}");
+        assert_eq!(v, v0, "rank {r} view diverged");
+        assert_eq!(rep.run.outcomes[r as usize].len(), 3, "rank {r} epochs");
+        for (e, out) in rep.run.outcomes[r as usize].iter().enumerate() {
+            match out {
+                Outcome::Allreduce { value, attempts } => {
+                    let counts = value.inclusion_counts();
+                    for x in 0..8usize {
+                        let want = if x == 3 { 0 } else { 1 };
+                        assert_eq!(counts[x], want, "rank {r} epoch {e} rank {x}");
+                    }
+                    if e == 0 {
+                        assert_eq!(*attempts, 2, "rank {r}: epoch 0 rotates block 3");
+                    } else {
+                        assert_eq!(*attempts, 1, "rank {r}: epoch {e} must not rotate");
+                    }
+                }
+                o => panic!("rank {r} epoch {e}: unexpected {o:?}"),
+            }
+        }
+    }
+}
+
+/// Determinism: identical configurations produce bit-identical runs.
+#[test]
+fn rsag_is_deterministic() {
+    let cfg = rsag_cfg(16, 2)
+        .failures(vec![FailureSpec::Pre { rank: 7 }, FailureSpec::Pre { rank: 8 }]);
+    let a = run_allreduce(&cfg);
+    let b = run_allreduce(&cfg);
+    assert_eq!(a.final_time, b.final_time);
+    assert_eq!(a.metrics.total_msgs(), b.metrics.total_msgs());
+    assert_eq!(a.value_at(0), b.value_at(0));
+}
+
+/// The campaign's `-rsag` scenarios execute end-to-end and satisfy
+/// every applicable oracle (delivery, value, agreement, the attempt
+/// law, and the Thm-7-style message bound against the rsag baseline).
+#[test]
+fn campaign_rsag_scenarios_pass_oracles() {
+    use ftcoll::campaign::{self, GridConfig};
+    let grid = GridConfig { count: 400, seed: 7, max_n: 64 };
+    let specs = campaign::generate(&grid);
+    let mut seen = 0;
+    for spec in specs.iter().filter(|s| s.id.contains("-rsag")).take(6) {
+        seen += 1;
+        let base = campaign::baseline_of(spec);
+        let (result, _rep) = campaign::run_scenario(spec, &base);
+        assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
+    }
+    assert!(seen >= 1, "no rsag scenario in a 400-scenario grid");
+}

@@ -161,6 +161,65 @@ fn segment_combine_is_isolated() {
     });
 }
 
+/// Strided block partition (`stride_blocks`): the blocks cover the
+/// value exactly — non-divisible lengths included — with sizes
+/// differing by at most one element, wire bytes are conserved, and
+/// reassembly restores the original. This is the reduce-scatter block
+/// plane: block `b` is rank `b`'s owned window.
+#[test]
+fn stride_blocks_partition_is_exact() {
+    run_cases("value_view/stride_partition", PropConfig::default(), |rng| {
+        let v = random_value(rng);
+        let blocks = rng.range(1, 40) as usize;
+        let parts = v.stride_blocks(blocks);
+        prop_assert_eq!(parts.len(), blocks, "block count");
+        let total: usize = parts.iter().map(Value::len).sum();
+        prop_assert_eq!(total, v.len(), "blocks do not cover the value");
+        let (lo, hi) = (v.len() / blocks, v.len().div_ceil(blocks));
+        for (i, p) in parts.iter().enumerate() {
+            prop_assert!(
+                p.len() >= lo && p.len() <= hi,
+                "block {i} of {} elements outside [{lo}, {hi}]",
+                p.len()
+            );
+        }
+        let wire: usize = parts.iter().map(Value::wire_bytes).sum();
+        prop_assert_eq!(wire, v.wire_bytes(), "partition changed total wire bytes");
+        prop_assert_eq!(Value::concat_segments(&parts), v, "reassembly lost data");
+        Ok(())
+    });
+}
+
+/// CoW isolation between sibling strided blocks: combining into one
+/// block never bleeds into its neighbours or the parent buffer (what
+/// rsag's concurrent per-block reduces rely on).
+#[test]
+fn stride_blocks_cow_isolated() {
+    run_cases("value_view/stride_isolation", PropConfig::default(), |rng| {
+        let blocks = rng.range(2, 8) as usize;
+        let len = rng.range(blocks as u64, 100) as usize;
+        let data = random_i64s(rng, len);
+        let parent = Value::i64(data.clone());
+        let mut parts = parent.stride_blocks(blocks);
+        let target = rng.below(blocks as u64) as usize;
+        let tlen = parts[target].len();
+        let add = Value::i64(vec![7; tlen]);
+        NativeReducer(ReduceOp::Sum).combine(&mut parts[target], &add);
+
+        prop_assert_eq!(parent.inclusion_counts(), &data[..], "parent mutated");
+        let mut off = 0usize;
+        for (i, p) in parts.iter().enumerate() {
+            let want: Vec<i64> = data[off..off + p.len()]
+                .iter()
+                .map(|&x| if i == target { x + 7 } else { x })
+                .collect();
+            prop_assert_eq!(p.inclusion_counts(), &want[..], "block {i} corrupted");
+            off += p.len();
+        }
+        Ok(())
+    });
+}
+
 /// Direct `ValueView` API: sub-views window correctly, `make_mut` on a
 /// unique view is in place (same contents, mutation visible), and
 /// `is_unique` tracks sharing.

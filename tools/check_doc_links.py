@@ -1,0 +1,47 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the repo's markdown docs.
+
+Scans the top-level *.md files and docs/*.md for markdown links
+`[text](target)` and verifies every non-external target resolves to an
+existing file or directory (anchors are stripped; http(s)/mailto links
+are skipped). Run from the repo root; exits nonzero listing every
+broken link, so CI catches doc drift the moment a module or doc moves.
+"""
+
+import glob
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def main() -> int:
+    files = sorted(glob.glob("*.md") + glob.glob("docs/*.md"))
+    if not files:
+        print("check_doc_links: no markdown files found — run from the repo root")
+        return 2
+    broken = []
+    checked = 0
+    for path in files:
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for target in LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            checked += 1
+            if not os.path.exists(os.path.join(base, rel)):
+                broken.append(f"{path}: ({target}) -> missing {os.path.join(base, rel)}")
+    for line in broken:
+        print(f"BROKEN {line}")
+    print(f"check_doc_links: {checked} relative links in {len(files)} files, "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
