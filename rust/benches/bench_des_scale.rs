@@ -1,0 +1,123 @@
+//! Large-n DES scale gate (docs/SCALE.md).
+//!
+//! Times the clean corrected Reduce at n = 10^4 on both engines (the
+//! dense per-rank DES vs the compact-replica sparse engine) and at
+//! n = 10^5 on the sparse engine — the acceptance configuration: the
+//! 10^5-rank run must finish in under 5 s wall-clock with the process
+//! peak RSS under 1 GiB (ISSUE 6). Emits `results/bench_des_scale.csv`
+//! and the machine-readable gate record `BENCH_des.json`, and runs in
+//! every mode including the FTCOLL_BENCH_FAST CI smoke — this is a
+//! deterministic-workload timing, not a statistical benchmark.
+
+use ftcoll::benchlib::write_table;
+use ftcoll::prelude::*;
+use std::time::Instant;
+
+const GATE_WALL_S: f64 = 5.0;
+const GATE_RSS_BYTES: u64 = 1 << 30;
+
+/// Peak resident set of this process (VmHWM) in bytes; 0 when the
+/// platform has no /proc.
+fn peak_rss_bytes() -> u64 {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(status) = std::fs::read_to_string("/proc/self/status") {
+            for line in status.lines() {
+                if let Some(rest) = line.strip_prefix("VmHWM:") {
+                    let kb: u64 = rest
+                        .trim()
+                        .trim_end_matches("kB")
+                        .trim()
+                        .parse()
+                        .unwrap_or(0);
+                    return kb * 1024;
+                }
+            }
+        }
+    }
+    0
+}
+
+/// Run one clean reduce, returning (wall seconds, events, total msgs).
+fn timed_run(run: impl Fn(&SimConfig) -> RunReport, cfg: &SimConfig) -> (f64, u64, u64) {
+    let t0 = Instant::now();
+    let rep = run(cfg);
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(rep.aborted.is_none(), "scale run hit the event cap");
+    assert_eq!(rep.delivered_ranks().len(), cfg.n as usize, "incomplete delivery");
+    (wall, rep.metrics.events(), rep.metrics.total_msgs())
+}
+
+fn main() {
+    let fast = std::env::var("FTCOLL_BENCH_FAST").is_ok();
+    let mut rows: Vec<String> = Vec::new();
+
+    // engine comparison at a size the dense engine still handles gladly
+    let small = SimConfig::new(10_000, 2).net(NetModel::unit());
+    let (dense_s, dense_events, _) = timed_run(ftcoll::sim::run_reduce, &small);
+    let sparse_small = ftcoll::sim::sparse::run_reduce_sparse(&small)
+        .expect("clean reduce is in the sparse class");
+    assert!(sparse_small.aborted.is_none());
+    let t0 = Instant::now();
+    let _ = ftcoll::sim::sparse::run_reduce_sparse(&small);
+    let sparse_small_s = t0.elapsed().as_secs_f64();
+    println!(
+        "des_scale/n1e4/f2: dense {dense_s:.3} s vs sparse {sparse_small_s:.3} s \
+         ({dense_events} events)"
+    );
+    rows.push(format!("dense,10000,2,{dense_s:.6},{dense_events}"));
+    rows.push(format!("sparse,10000,2,{sparse_small_s:.6},{dense_events}"));
+
+    // the gate configuration: n = 10^5 clean corrected reduce, sparse
+    let gate_cfg = SimConfig::new(100_000, 2).net(NetModel::unit());
+    let (gate_s, gate_events, gate_msgs) =
+        timed_run(ftcoll::sim::run_reduce_auto, &gate_cfg);
+    let rss = peak_rss_bytes();
+    let events_per_sec = gate_events as f64 / gate_s.max(1e-9);
+    println!(
+        "des_scale/n1e5/f2: sparse {gate_s:.3} s, {gate_events} events \
+         ({events_per_sec:.0} events/s, {gate_msgs} msgs), peak RSS {} MiB",
+        rss >> 20
+    );
+    rows.push(format!("sparse,100000,2,{gate_s:.6},{gate_events}"));
+
+    // optional deep run: one lap at n = 10^6 (skipped in the CI smoke)
+    if !fast {
+        let big = SimConfig::new(1_000_000, 2).net(NetModel::unit());
+        let (big_s, big_events, _) = timed_run(ftcoll::sim::run_reduce_auto, &big);
+        println!(
+            "des_scale/n1e6/f2: sparse {big_s:.3} s, {big_events} events, \
+             peak RSS {} MiB",
+            peak_rss_bytes() >> 20
+        );
+        rows.push(format!("sparse,1000000,2,{big_s:.6},{big_events}"));
+    }
+
+    write_table("bench_des_scale", "engine,n,f,wall_s,events", &rows);
+
+    // machine-readable gate record (hand-rolled: no serde in-tree)
+    let rss_checked = rss > 0; // no /proc → wall gate only
+    let pass = gate_s < GATE_WALL_S && (!rss_checked || rss < GATE_RSS_BYTES);
+    let json = format!(
+        "{{\"bench\":\"des_scale\",\"n\":100000,\"f\":2,\"wall_s\":{gate_s:.6},\
+         \"events\":{gate_events},\"events_per_sec\":{events_per_sec:.0},\
+         \"peak_rss_bytes\":{rss},\"gate_wall_s\":{GATE_WALL_S},\
+         \"gate_rss_bytes\":{GATE_RSS_BYTES},\"pass\":{pass}}}\n"
+    );
+    std::fs::write("BENCH_des.json", &json).expect("write BENCH_des.json");
+    println!("wrote BENCH_des.json");
+
+    // acceptance gate (ISSUE 6): n = 10^5 clean corrected Reduce under
+    // 5 s wall-clock and under 1 GiB peak RSS
+    assert!(
+        gate_s < GATE_WALL_S,
+        "n=10^5 reduce took {gate_s:.2} s (gate {GATE_WALL_S} s)"
+    );
+    if rss_checked {
+        assert!(
+            rss < GATE_RSS_BYTES,
+            "peak RSS {rss} B exceeds the {GATE_RSS_BYTES} B gate"
+        );
+    }
+    println!("GATE des_scale: PASS ({gate_s:.2} s / {} MiB)", rss >> 20);
+}

@@ -46,6 +46,7 @@ use crate::collectives::{Outcome, ReduceOp};
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
 use crate::sim::RunReport;
+use crate::topology::{IfTree, UpCorrectionGroups};
 use crate::types::{MsgKind, Rank, Value};
 use std::collections::HashSet;
 
@@ -64,6 +65,17 @@ impl Baseline {
             upcorr_msgs: rep.metrics.msgs(MsgKind::UpCorrection),
             tree_msgs: rep.metrics.msgs(MsgKind::TreeUp),
         }
+    }
+
+    /// The Theorem 5 closed form for a single rooted reduce:
+    /// `f(f+1)·⌊(n-1)/(f+1)⌋ + a(a-1)` up-correction messages plus one
+    /// `TreeUp` per non-root. The large-n (`bign`) axis baselines this
+    /// way — running an eager failure-free 10^6-rank baseline would
+    /// dwarf the scenario it baselines.
+    pub fn closed_form(n: u32, f: u32) -> Baseline {
+        let upcorr = UpCorrectionGroups::new(n, f).failure_free_messages();
+        let tree = u64::from(n - 1);
+        Baseline { total_msgs: upcorr + tree, upcorr_msgs: upcorr, tree_msgs: tree }
     }
 }
 
@@ -112,6 +124,13 @@ pub fn check(spec: &ScenarioSpec, rep: &RunReport, base: &Baseline) -> OracleRep
     });
     o.check(pre.is_subset(&dead), || {
         format!("pre-operational victims {pre_sorted:?} not all dead ({:?})", rep.dead)
+    });
+
+    // in-contract scenarios always reach quiescence — a cap abort means
+    // the run livelocked (or the cap is too small for its scale)
+    o.check(rep.aborted.is_none(), || {
+        let a = rep.aborted.expect("guarded by the check");
+        format!("run aborted at the event cap: {} events processed, t={}", a.events, a.at)
     });
 
     if spec.is_session() {
@@ -173,7 +192,77 @@ pub fn check(spec: &ScenarioSpec, rep: &RunReport, base: &Baseline) -> OracleRep
         });
     }
 
+    if spec.bign {
+        check_bign_counts(spec, rep, &mut o);
+    }
+
     o
+}
+
+/// Closed-form *exact* counters for the large-n axis: a reduce rooted
+/// at 0 with a purely pre-operational dead set `D` and `n-1 >= f+1`
+/// (so up-correction peers and tree relatives never coincide — group
+/// blocks span `f+1` consecutive virtual ranks while tree edges jump
+/// by multiples of `f+1`). Derived by walking the engine's event
+/// discipline:
+///
+/// * up-correction sends — every live rank messages every group peer
+///   (dead or not), so the failure-free Theorem 5 count loses exactly
+///   the dead ranks' own sends;
+/// * tree sends — every live non-root sends exactly one fire-and-
+///   forget `TreeUp`, even to a dead parent (the root recovers the
+///   lost subtree contributions from its own up-correction value);
+/// * absorbed sends — up-correction messages from each dead rank's
+///   live peers plus `TreeUp`s from its live tree children;
+/// * detections — each dead rank is watched by its live group peers
+///   (up-correction phase) and by its parent (tree phase; the parent
+///   chain above a dead rank is live except where it is itself in `D`);
+/// * events — one `Start` per live rank, one `Deliver` per message not
+///   absorbed by a dead destination, one `Detect` per detection
+///   (pre-operational plans enqueue no `Kill` events).
+fn check_bign_counts(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport) {
+    let groups = UpCorrectionGroups::new(spec.n, spec.f);
+    let tree = IfTree::new(spec.n, spec.f);
+    let dset: HashSet<Rank> = rep.dead.iter().copied().collect();
+    let d = rep.dead.len() as u64;
+
+    let mut upcorr_lost = 0u64;
+    let mut absorbed = 0u64;
+    let mut detects = 0u64;
+    for &v in &rep.dead {
+        let peers = groups.peers_of(v);
+        let live_peers = peers.iter().filter(|p| !dset.contains(p)).count() as u64;
+        upcorr_lost += peers.len() as u64;
+        absorbed += live_peers;
+        detects += live_peers;
+        absorbed += tree.children(v).iter().filter(|c| !dset.contains(c)).count() as u64;
+        if !dset.contains(&tree.parent(v).expect("the root never dies")) {
+            detects += 1;
+        }
+    }
+
+    let upcorr = groups.failure_free_messages() - upcorr_lost;
+    let tree_msgs = u64::from(spec.n - 1) - d;
+    let total = upcorr + tree_msgs;
+    let events = (u64::from(spec.n) - d) + (total - absorbed) + detects;
+
+    let m = &rep.metrics;
+    let got_upcorr = m.msgs(MsgKind::UpCorrection);
+    o.check(got_upcorr == upcorr, || {
+        format!("bign: {got_upcorr} up-correction msgs, closed form {upcorr}")
+    });
+    let got_tree = m.msgs(MsgKind::TreeUp);
+    o.check(got_tree == tree_msgs, || {
+        format!("bign: {got_tree} tree msgs, closed form {tree_msgs}")
+    });
+    let got_dead = m.sends_to_dead();
+    o.check(got_dead == absorbed, || {
+        format!("bign: {got_dead} sends absorbed by dead ranks, closed form {absorbed}")
+    });
+    let got_events = m.events();
+    o.check(got_events == events, || {
+        format!("bign: {got_events} events processed, closed form {events}")
+    });
 }
 
 fn check_reduce(

@@ -51,6 +51,12 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
             "\"allreduce_algo\":\"rsag\",".to_string()
         }
     };
+    // cap aborts are rare and always violations — only aborted rows
+    // carry the field, so normal rows render exactly as before
+    let aborted_field = match &s.aborted {
+        Some(a) => format!("\"aborted_events\":{},\"aborted_at\":{},", a.events, a.at),
+        None => String::new(),
+    };
     format!(
         "    {{\"index\":{},\"id\":\"{}\",\"seed\":{},\
          \"collective\":\"{}\",\"n\":{},\"f\":{},\"root\":{},\
@@ -59,7 +65,7 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
          \"session_ops\":{},{}{}\"pattern\":\"{}\",\"failures\":\"{}\",\
          \"delivered\":{},\"dead\":[{}],\
          \"msgs\":{},\"upcorr\":{},\"tree\":{},\"bytes\":{},\
-         \"final_time_ns\":{},\"makespan_ns\":{},\"attempts\":{},\
+         \"final_time_ns\":{},\"makespan_ns\":{},\"attempts\":{},{}\
          \"checks\":{},\"violations\":[{}]}}",
         s.index,
         json_escape(&s.id),
@@ -89,6 +95,7 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         s.final_time,
         s.makespan.map(|t| t.to_string()).unwrap_or_else(|| "null".to_string()),
         s.attempts,
+        aborted_field,
         s.oracle_checks,
         violations.join(","),
     )
@@ -97,14 +104,16 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
 /// Render the whole campaign result as a JSON document.
 pub fn to_json(result: &CampaignResult) -> String {
     let grid = GridConfig {
-        count: result.scenarios.len() as u32,
+        count: result.scenarios.len() as u32 - result.bign,
         seed: result.seed,
         max_n: result.max_n,
+        bign: result.bign,
     };
     let mut s = String::new();
     s.push_str("{\n");
     let _ = writeln!(s, "  \"seed\": {},", result.seed);
     let _ = writeln!(s, "  \"max_n\": {},", result.max_n);
+    let _ = writeln!(s, "  \"bign\": {},", result.bign);
     let _ = writeln!(s, "  \"scenario_count\": {},", result.scenarios.len());
     let _ = writeln!(s, "  \"passed\": {},", result.passed_count());
     let _ = writeln!(s, "  \"failed\": {},", result.failed_count());
@@ -125,9 +134,10 @@ pub fn to_json(result: &CampaignResult) -> String {
 /// totals row — the human-readable half of the artifact.
 pub fn summary_table(result: &CampaignResult) -> String {
     let grid = GridConfig {
-        count: result.scenarios.len() as u32,
+        count: result.scenarios.len() as u32 - result.bign,
         seed: result.seed,
         max_n: result.max_n,
+        bign: result.bign,
     };
     let specs = generate(&grid);
     // BTreeMap for deterministic row order
@@ -218,6 +228,16 @@ pub fn summary_table(result: &CampaignResult) -> String {
         "rsag: {rsag} reduce-scatter/allgather ({rsag_pass} passed) / {rsag_sess} sessions / \
          {rsag_seg} segmented"
     );
+    // large-n scale-out axis (docs/SCALE.md) — CI greps this line to
+    // catch the axis drifting out of the sweep
+    let (mut bn, mut bn_pass) = (0u64, 0u64);
+    for (spec, sc) in specs.iter().zip(&result.scenarios) {
+        if spec.bign {
+            bn += 1;
+            bn_pass += sc.passed() as u64;
+        }
+    }
+    let _ = writeln!(out, "bign: {bn} large-n ({bn_pass} passed)");
     out
 }
 
@@ -229,7 +249,7 @@ mod tests {
     #[test]
     fn json_is_deterministic_and_shaped() {
         let cfg = CampaignConfig {
-            grid: GridConfig { count: 12, seed: 4, max_n: 32 },
+            grid: GridConfig { count: 12, seed: 4, max_n: 32, bign: 0 },
             threads: 2,
         };
         let a = to_json(&run_campaign(&cfg));
@@ -238,13 +258,16 @@ mod tests {
         assert!(a.starts_with("{\n"));
         assert!(a.trim_end().ends_with('}'));
         assert!(a.contains("\"scenario_count\": 12"));
+        assert!(a.contains("\"bign\": 0"));
         assert!(a.contains("\"scenarios\": ["));
+        // no abort, no field — rows render exactly as before
+        assert!(!a.contains("aborted_events"));
     }
 
     #[test]
     fn summary_counts_add_up() {
         let cfg = CampaignConfig {
-            grid: GridConfig { count: 20, seed: 6, max_n: 32 },
+            grid: GridConfig { count: 20, seed: 6, max_n: 32, bign: 0 },
             threads: 2,
         };
         let result = run_campaign(&cfg);
@@ -256,6 +279,7 @@ mod tests {
         assert!(table.contains("split: "), "{table}");
         assert!(table.contains("sessions: "), "{table}");
         assert!(table.contains("rsag: "), "{table}");
+        assert!(table.contains("bign: 0 large-n (0 passed)"), "{table}");
         let line = table.lines().find(|l| l.starts_with("split: ")).unwrap();
         let nums: Vec<u64> = line
             .split(|c: char| !c.is_ascii_digit())

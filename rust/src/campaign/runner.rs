@@ -53,6 +53,11 @@ pub struct ScenarioResult {
     pub makespan: Option<TimeNs>,
     /// Allreduce attempt count (0 for reduce/broadcast).
     pub attempts: u32,
+    /// Set when the run stopped at the event cap instead of reaching
+    /// quiescence. Recorded — not panicked on — so one livelocked
+    /// scenario cannot take down a whole sweep; the oracle flags it as
+    /// a violation for in-contract scenarios.
+    pub aborted: Option<crate::sim::RunAbort>,
     pub oracle_checks: u32,
     pub violations: Vec<String>,
 }
@@ -68,6 +73,8 @@ impl ScenarioResult {
 pub struct CampaignResult {
     pub seed: u64,
     pub max_n: u32,
+    /// Number of trailing large-n (`bign`) scenarios in `scenarios`.
+    pub bign: u32,
     pub scenarios: Vec<ScenarioResult>,
 }
 
@@ -114,6 +121,7 @@ pub fn run_scenario(spec: &ScenarioSpec, base: &Baseline) -> (ScenarioResult, Ru
         final_time: rep.final_time,
         makespan: rep.makespan(),
         attempts,
+        aborted: rep.aborted,
         oracle_checks: o.checks,
         violations: o.violations,
     };
@@ -130,6 +138,10 @@ pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
         return sim::run_session(&cfg, spec.collective.op_kind()).run;
     }
     match spec.collective {
+        // the large-n axis goes through the engine-selecting entry
+        // point: the compact-replica sparse engine when the scenario is
+        // in its class, the dense engine otherwise (crate::sim::sparse)
+        Collective::Reduce if spec.bign => sim::run_reduce_auto(&cfg),
         Collective::Reduce => sim::run_reduce(&cfg),
         Collective::Allreduce => sim::run_allreduce(&cfg),
         Collective::Broadcast => sim::run_broadcast(&cfg),
@@ -137,7 +149,12 @@ pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
 }
 
 /// The failure-free baseline counts for a scenario's configuration.
+/// `bign` scenarios use the Theorem 5 closed form — an eager
+/// failure-free run at 10^6 ranks would dwarf the scenario itself.
 pub fn baseline_of(spec: &ScenarioSpec) -> Baseline {
+    if spec.bign {
+        return Baseline::closed_form(spec.n, spec.f);
+    }
     let cfg = spec.baseline_sim_config();
     if spec.is_session() {
         return Baseline::of(&sim::run_session(&cfg, spec.collective.op_kind()).run);
@@ -197,7 +214,7 @@ pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
         .into_iter()
         .map(|slot| slot.into_inner().unwrap().expect("scenario slot filled"))
         .collect();
-    CampaignResult { seed: cfg.grid.seed, max_n: cfg.grid.max_n, scenarios }
+    CampaignResult { seed: cfg.grid.seed, max_n: cfg.grid.max_n, bign: cfg.grid.bign, scenarios }
 }
 
 /// Look up a scenario of the grid by id (for `--replay`). Ids start
@@ -207,6 +224,11 @@ pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
 pub fn find_scenario(grid: &GridConfig, id: &str) -> Option<ScenarioSpec> {
     let rest = id.strip_prefix('s')?;
     let index: u32 = rest[..rest.find('-')?].parse().ok()?;
+    // bign ids live past `count` — a graceful None (not the generator's
+    // range assert) when the caller's grid has no such trailing axis
+    if index >= grid.count + grid.bign {
+        return None;
+    }
     let spec = super::spec::scenario_at(grid, index);
     (spec.id == id).then_some(spec)
 }
@@ -217,7 +239,7 @@ mod tests {
 
     #[test]
     fn single_scenario_roundtrip() {
-        let grid = GridConfig { count: 8, seed: 5, max_n: 32 };
+        let grid = GridConfig { count: 8, seed: 5, max_n: 32, bign: 0 };
         let specs = generate(&grid);
         for spec in &specs {
             let base = baseline_of(spec);
@@ -236,7 +258,7 @@ mod tests {
     /// per-epoch per-op-kind oracles.
     #[test]
     fn mixed_session_scenarios_pass_oracles() {
-        let grid = GridConfig { count: 400, seed: 7, max_n: 64 };
+        let grid = GridConfig { count: 400, seed: 7, max_n: 64, bign: 0 };
         let specs = generate(&grid);
         let mut seen = 0;
         for spec in specs.iter().filter(|s| s.ops_list.is_some()).take(5) {
@@ -248,9 +270,25 @@ mod tests {
         assert!(seen >= 1, "no mixed session in a 400-scenario grid");
     }
 
+    /// The first lap of the large-n case table (n = 10^4 and 10^5,
+    /// clean / pre-f / prefix-kill) runs end-to-end on the sparse
+    /// engine and satisfies the closed-form oracles.
+    #[test]
+    fn bign_scenarios_pass_closed_form_oracles() {
+        let grid = GridConfig { count: 0, seed: 11, max_n: 32, bign: 6 };
+        for spec in generate(&grid) {
+            assert!(spec.bign);
+            assert!(spec.n <= 100_000, "{}: CI-sized prefix must stay small", spec.id);
+            let base = baseline_of(&spec);
+            let (result, rep) = run_scenario(&spec, &base);
+            assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
+            assert!(rep.aborted.is_none(), "{}", spec.id);
+        }
+    }
+
     #[test]
     fn thread_count_does_not_change_results() {
-        let grid = GridConfig { count: 40, seed: 9, max_n: 48 };
+        let grid = GridConfig { count: 40, seed: 9, max_n: 48, bign: 0 };
         let a = run_campaign(&CampaignConfig { grid, threads: 1 });
         let b = run_campaign(&CampaignConfig { grid, threads: 4 });
         assert_eq!(a.scenarios.len(), b.scenarios.len());
@@ -264,7 +302,7 @@ mod tests {
 
     #[test]
     fn find_scenario_by_id() {
-        let grid = GridConfig { count: 16, seed: 2, max_n: 32 };
+        let grid = GridConfig { count: 16, seed: 2, max_n: 32, bign: 0 };
         let specs = generate(&grid);
         let found = find_scenario(&grid, &specs[7].id).expect("id resolves");
         assert_eq!(found.index, 7);

@@ -203,6 +203,10 @@ pub struct ScenarioSpec {
     pub pattern: FailurePattern,
     /// Concrete failure plan instantiated from `pattern` and `seed`.
     pub failures: Vec<FailureSpec>,
+    /// Large-n axis scenario (docs/SCALE.md): executed through the
+    /// engine-picking seam ([`crate::sim::run_reduce_auto`]) and checked
+    /// against closed-form oracles instead of a simulated baseline.
+    pub bign: bool,
 }
 
 impl ScenarioSpec {
@@ -329,11 +333,18 @@ pub struct GridConfig {
     pub count: u32,
     pub seed: u64,
     pub max_n: u32,
+    /// Large-n axis (docs/SCALE.md): this many scenarios appended after
+    /// the `count` regular ones, cycling n ∈ {10⁴, 10⁵, 10⁶} ×
+    /// {clean, pre-f, rootkill} corrected Reduces. They run on the
+    /// sparse engine and are checked against closed-form oracles (no
+    /// eagerly-simulated baseline). 0 = off; the first six cases stay
+    /// at n ≤ 10⁵, so a small prefix fits CI smoke time.
+    pub bign: u32,
 }
 
 impl Default for GridConfig {
     fn default() -> Self {
-        GridConfig { count: 1000, seed: 1, max_n: 128 }
+        GridConfig { count: 1000, seed: 1, max_n: 128, bign: 0 }
     }
 }
 
@@ -345,14 +356,19 @@ pub fn derive_seed(base: u64, index: u32) -> u64 {
     z ^ (z >> 31)
 }
 
-/// Expand the grid into `count` concrete scenarios. Pure function of
-/// the grid config; scenario `i` depends only on `(seed, i)`.
+/// Expand the grid into `count + bign` concrete scenarios. Pure
+/// function of the grid config; scenario `i` depends only on
+/// `(seed, i)`.
 pub fn generate(grid: &GridConfig) -> Vec<ScenarioSpec> {
-    (0..grid.count).map(|i| scenario_at(grid, i)).collect()
+    (0..grid.count + grid.bign).map(|i| scenario_at(grid, i)).collect()
 }
 
-/// Generate scenario `index` of the grid in isolation.
+/// Generate scenario `index` of the grid in isolation. Indices past
+/// `grid.count` are the large-n axis ([`GridConfig::bign`]).
 pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
+    if index >= grid.count {
+        return bign_scenario_at(grid, index);
+    }
     let seed = derive_seed(grid.seed, index);
     let mut rng = Pcg::new(seed);
 
@@ -560,6 +576,97 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         ops_list,
         pattern,
         failures,
+        bign: false,
+    }
+}
+
+/// The large-n scenario at `index >= grid.count` (docs/SCALE.md):
+/// monolithic corrected Reduces rooted at 0 — the class the sparse
+/// engine covers and the closed-form oracles can check without an
+/// eagerly-simulated baseline. Cases cycle so any 6-scenario prefix
+/// stays at n ≤ 10⁵ (what CI smoke runs); 10⁶ starts at the seventh.
+fn bign_scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
+    assert!(
+        index >= grid.count && index < grid.count + grid.bign,
+        "bign index {index} outside grid"
+    );
+    let seed = derive_seed(grid.seed, index);
+    let mut rng = Pcg::new(seed);
+
+    // (n, family): 0 = clean, 1 = pre-f, 2 = prefix rootkill
+    const CASES: [(u32, u8); 9] = [
+        (10_000, 0),
+        (10_000, 1),
+        (10_000, 2),
+        (100_000, 0),
+        (100_000, 1),
+        (100_000, 2),
+        (1_000_000, 0),
+        (1_000_000, 1),
+        (1_000_000, 2),
+    ];
+    let (n, family) = CASES[((index - grid.count) % 9) as usize];
+
+    let f = rng.range(1, 5) as u32;
+    let scheme = [Scheme::List, Scheme::CountBit, Scheme::Bit][rng.below(3) as usize];
+    let net = NetKind::ALL[rng.below(3) as usize];
+    let detect_latency: TimeNs = [1_000, 10_000, 100_000][rng.below(3) as usize];
+
+    // failures stay pre-operational and off the root: the paper's
+    // contract for a rooted reduce, and exactly the class the sparse
+    // engine (and the closed-form oracle) covers
+    let (pattern, failures) = match family {
+        0 => (FailurePattern::None, Vec::new()),
+        1 => {
+            let k = rng.range(1, f as u64) as u32;
+            let failures = rng
+                .choose_distinct((n - 1) as u64, k as usize)
+                .into_iter()
+                .map(|i| FailureSpec::Pre { rank: i as Rank + 1 })
+                .collect();
+            (FailurePattern::Pre { k }, failures)
+        }
+        _ => {
+            // the would-be allreduce candidate prefix (sans root):
+            // k cyclically-consecutive dead ranks right of the root
+            let k = rng.range(1, f as u64) as u32;
+            let failures = (1..=k).map(|rank| FailureSpec::Pre { rank }).collect();
+            (FailurePattern::RootKill { k }, failures)
+        }
+    };
+    debug_assert!(crate::failure::validate_plan(n, &failures).is_ok());
+
+    let id = format!(
+        "s{:05}-bign-reduce-n{}-f{}-r0-{}-sum-rank-{}-{}",
+        index,
+        n,
+        f,
+        scheme_label(scheme),
+        net.name(),
+        pattern.label(),
+    );
+
+    ScenarioSpec {
+        index,
+        id,
+        seed,
+        collective: Collective::Reduce,
+        n,
+        f,
+        root: 0,
+        scheme,
+        op: ReduceOp::Sum,
+        payload: PayloadKind::RankValue,
+        net,
+        correction: CorrectionMode::Always,
+        detect_latency,
+        segment_bytes: None,
+        allreduce_algo: AllreduceAlgo::Tree,
+        session_ops: 1,
+        ops_list: None,
+        pattern,
+        failures,
+        bign: true,
     }
 }
 
@@ -770,7 +877,7 @@ mod tests {
 
     #[test]
     fn generation_is_deterministic_and_isolated() {
-        let grid = GridConfig { count: 64, seed: 42, max_n: 64 };
+        let grid = GridConfig { count: 64, seed: 42, max_n: 64, bign: 0 };
         let a = generate(&grid);
         let b = generate(&grid);
         for (x, y) in a.iter().zip(&b) {
@@ -788,14 +895,14 @@ mod tests {
 
     #[test]
     fn ids_are_unique() {
-        let specs = generate(&GridConfig { count: 256, seed: 7, max_n: 128 });
+        let specs = generate(&GridConfig { count: 256, seed: 7, max_n: 128, bign: 0 });
         let ids: std::collections::HashSet<_> = specs.iter().map(|s| s.id.clone()).collect();
         assert_eq!(ids.len(), specs.len());
     }
 
     #[test]
     fn plans_stay_inside_the_contract() {
-        for spec in generate(&GridConfig { count: 512, seed: 3, max_n: 128 }) {
+        for spec in generate(&GridConfig { count: 512, seed: 3, max_n: 128, bign: 0 }) {
             assert!(spec.failures.len() as u32 <= spec.f, "{}", spec.id);
             crate::failure::validate_plan(spec.n, &spec.failures).unwrap();
             // reducing collectives: failures stay strictly below the
@@ -833,14 +940,14 @@ mod tests {
 
     #[test]
     fn different_grid_seeds_differ() {
-        let a = generate(&GridConfig { count: 32, seed: 1, max_n: 64 });
-        let b = generate(&GridConfig { count: 32, seed: 2, max_n: 64 });
+        let a = generate(&GridConfig { count: 32, seed: 1, max_n: 64, bign: 0 });
+        let b = generate(&GridConfig { count: 32, seed: 2, max_n: 64, bign: 0 });
         assert!(a.iter().zip(&b).any(|(x, y)| x.id != y.id));
     }
 
     #[test]
     fn grid_covers_every_collective_and_pattern_family() {
-        let specs = generate(&GridConfig { count: 1000, seed: 1, max_n: 128 });
+        let specs = generate(&GridConfig { count: 1000, seed: 1, max_n: 128, bign: 0 });
         for c in [Collective::Reduce, Collective::Allreduce, Collective::Broadcast] {
             assert!(specs.iter().any(|s| s.collective == c), "{c:?} missing");
         }
@@ -856,8 +963,52 @@ mod tests {
     }
 
     #[test]
+    fn bign_axis_appends_large_n_reduces() {
+        let grid = GridConfig { count: 32, seed: 9, max_n: 64, bign: 9 };
+        let specs = generate(&grid);
+        assert_eq!(specs.len(), 41);
+        let bign: Vec<_> = specs.iter().filter(|s| s.bign).collect();
+        assert_eq!(bign.len(), 9);
+        assert!(specs[..32].iter().all(|s| !s.bign));
+        for (i, s) in bign.iter().enumerate() {
+            assert_eq!(s.index, 32 + i as u32);
+            assert_eq!(s.collective, Collective::Reduce, "{}", s.id);
+            assert_eq!(s.root, 0, "{}", s.id);
+            assert!(s.id.contains("-bign-"), "{}", s.id);
+            assert!((1..=5).contains(&s.f), "{}", s.id);
+            assert!(s.failures.len() as u32 <= s.f, "{}", s.id);
+            assert!(s.segment_bytes.is_none() && s.session_ops == 1, "{}", s.id);
+            // every failure is pre-operational and off the root — the
+            // class the sparse engine and closed-form oracles cover
+            for fs in &s.failures {
+                assert!(
+                    matches!(fs, FailureSpec::Pre { rank } if *rank != 0),
+                    "{}: {fs:?}",
+                    s.id
+                );
+            }
+            // replay isolation: regenerable from the index alone
+            let again = scenario_at(&grid, s.index);
+            assert_eq!(again.id, s.id);
+            assert_eq!(again.failures, s.failures);
+        }
+        // one full lap of the case table: all three n values and all
+        // three failure families appear, and the CI-sized prefix
+        // (--bign 6) never reaches n = 10^6
+        for n in [10_000, 100_000, 1_000_000] {
+            assert!(bign.iter().any(|s| s.n == n), "n={n} missing");
+        }
+        for fam in ["clean", "pre", "rootkill"] {
+            assert!(bign.iter().any(|s| s.pattern.family() == fam), "{fam} missing");
+        }
+        assert!(bign[..6].iter().all(|s| s.n <= 100_000));
+        let ids: std::collections::HashSet<_> = specs.iter().map(|s| &s.id).collect();
+        assert_eq!(ids.len(), specs.len());
+    }
+
+    #[test]
     fn grid_covers_session_scenarios() {
-        let specs = generate(&GridConfig { count: 200, seed: 7, max_n: 128 });
+        let specs = generate(&GridConfig { count: 200, seed: 7, max_n: 128, bign: 0 });
         let sessions: Vec<_> = specs.iter().filter(|s| s.is_session()).collect();
         assert!(
             sessions.len() >= 15,
@@ -879,7 +1030,7 @@ mod tests {
         // epoch-spread kills only ever appear on sessions; presence at
         // scale is asserted on a 1000-scenario grid (generation is pure
         // and cheap — no simulation runs here)
-        let big = generate(&GridConfig { count: 1000, seed: 7, max_n: 128 });
+        let big = generate(&GridConfig { count: 1000, seed: 7, max_n: 128, bign: 0 });
         for s in specs.iter().chain(&big) {
             if s.pattern.family() == "spread" {
                 assert!(s.is_session(), "{}: spread pattern outside a session", s.id);
@@ -898,7 +1049,7 @@ mod tests {
 
     #[test]
     fn grid_covers_mixed_sessions() {
-        let specs = generate(&GridConfig { count: 1000, seed: 7, max_n: 128 });
+        let specs = generate(&GridConfig { count: 1000, seed: 7, max_n: 128, bign: 0 });
         let mixed: Vec<_> = specs.iter().filter(|s| s.ops_list.is_some()).collect();
         assert!(
             mixed.len() >= 10,
@@ -931,7 +1082,7 @@ mod tests {
 
     #[test]
     fn grid_covers_rsag_scenarios() {
-        let specs = generate(&GridConfig { count: 1000, seed: 7, max_n: 128 });
+        let specs = generate(&GridConfig { count: 1000, seed: 7, max_n: 128, bign: 0 });
         let rsag: Vec<_> =
             specs.iter().filter(|s| s.allreduce_algo == AllreduceAlgo::Rsag).collect();
         assert!(
@@ -979,7 +1130,7 @@ mod tests {
 
     #[test]
     fn grid_covers_segmented_scenarios() {
-        let specs = generate(&GridConfig { count: 200, seed: 7, max_n: 128 });
+        let specs = generate(&GridConfig { count: 200, seed: 7, max_n: 128, bign: 0 });
         let seg: Vec<_> = specs.iter().filter(|s| s.segment_bytes.is_some()).collect();
         assert!(
             seg.len() >= 20,

@@ -131,8 +131,10 @@ impl Reducer for NativeReducer {
     }
 }
 
-/// What a protocol delivers to its caller.
-#[derive(Clone, Debug)]
+/// What a protocol delivers to its caller. `PartialEq` (values compare
+/// element-wise) backs the dense↔sparse differential suite
+/// (`rust/tests/des_scale.rs`).
+#[derive(Clone, Debug, PartialEq)]
 pub enum Outcome {
     /// `deliver_reduce(m)` at the root: the combined value plus the
     /// failure report the root accumulated (§4.4 — complete under the

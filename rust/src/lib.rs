@@ -78,8 +78,8 @@ pub mod prelude {
     pub use crate::session::{OpKind, Session, SessionConfig, SessionView};
     pub use crate::sim::net::NetModel;
     pub use crate::sim::{
-        run_allreduce, run_broadcast, run_reduce, run_session, RunReport, SessionReport, Sim,
-        SimConfig,
+        run_allreduce, run_broadcast, run_reduce, run_reduce_auto, run_session, RunReport,
+        SessionReport, Sim, SimConfig,
     };
     pub use crate::types::{Rank, Value};
 }

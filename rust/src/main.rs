@@ -65,6 +65,8 @@ USAGE: ftcoll <subcommand> [options]
              [--payload rank|onehot|vec:256|segmask:4]
              [--segment-bytes 65536 — segmented/pipelined execution]
              [--fail pre:1,sends:3:2] [--trace]
+             [--engine dense|sparse|auto — sparse is the compact-
+             replica large-n engine, docs/SCALE.md]
              — simulate fault-tolerant reduce
   allreduce  same options + [--allreduce-algo tree|rsag]
              — simulate fault-tolerant allreduce (tree = corrected
@@ -77,6 +79,8 @@ USAGE: ftcoll <subcommand> [options]
              engine; e.g. `ftcoll run --allreduce-algo rsag [--live]`)
   baseline   --algo tree|flat|ring|gossip + same options
   campaign   [--count 1000] [--seed 1] [--max-n 128] [--threads 0]
+             [--bign 0 — append that many large-n (10^4..10^6) reduce
+             scenarios checked against closed-form count oracles]
              [--out campaign_result.json] [--check-oracles]
              [--replay <scenario-id> [--trace]]
              — deterministic scenario sweep (incl. segmented/pipelined
@@ -186,13 +190,35 @@ fn preview(v: &ftcoll::types::Value) -> String {
 
 /// The one DES dispatch both `ftcoll <collective>` and `ftcoll run`
 /// share: simulate `collective` under `cfg` and print the report.
-fn run_des_collective(collective: &str, cfg: &Config, trace: bool) -> Result<(), String> {
+/// `engine` selects the reduce implementation: the dense per-rank
+/// engine (default), the compact-replica sparse engine, or `auto`
+/// (sparse when the configuration is in its class — see
+/// docs/SCALE.md).
+fn run_des_collective(
+    collective: &str,
+    cfg: &Config,
+    trace: bool,
+    engine: &str,
+) -> Result<(), String> {
     let sc = to_sim(cfg, trace);
-    let rep = match collective {
-        "reduce" => sim::run_reduce(&sc),
-        "allreduce" => sim::run_allreduce(&sc),
-        "broadcast" => sim::run_broadcast(&sc),
-        other => return Err(format!("unknown collective `{other}`")),
+    let rep = match (collective, engine) {
+        ("reduce", "dense") => sim::run_reduce(&sc),
+        ("reduce", "auto") => sim::run_reduce_auto(&sc),
+        ("reduce", "sparse") => sim::run_reduce_sparse(&sc).ok_or_else(|| {
+            "this configuration is outside the sparse engine's class (tracing, \
+             segmentation, sessions, or failures beyond pre-operational non-root \
+             kills); rerun with --engine dense or auto"
+                .to_string()
+        })?,
+        ("allreduce", "dense") => sim::run_allreduce(&sc),
+        ("broadcast", "dense") => sim::run_broadcast(&sc),
+        ("reduce", other) => {
+            return Err(format!("unknown engine `{other}`; use dense|sparse|auto"))
+        }
+        (c, e) if matches!(c, "allreduce" | "broadcast") => {
+            return Err(format!("--engine {e} is reduce-only (got `{c}`)"))
+        }
+        (other, _) => return Err(format!("unknown collective `{other}`")),
     };
     print_report(&rep);
     Ok(())
@@ -200,9 +226,10 @@ fn run_des_collective(collective: &str, cfg: &Config, trace: bool) -> Result<(),
 
 fn run_sim(args: &Args) -> Result<(), String> {
     let trace = args.flag("trace");
+    let engine = args.get("engine").unwrap_or("dense").to_string();
     let cfg = build_config(args)?;
     args.finish().map_err(|e| e.to_string())?;
-    run_des_collective(args.subcommand.as_str(), &cfg, trace)
+    run_des_collective(args.subcommand.as_str(), &cfg, trace, &engine)
 }
 
 /// `ftcoll run`: one entry point over both executors — the chosen
@@ -213,6 +240,7 @@ fn run_unified(args: &Args) -> Result<(), String> {
     let collective = args.get("collective").unwrap_or("allreduce").to_string();
     let live = args.flag("live");
     let trace = args.flag("trace");
+    let engine = args.get("engine").unwrap_or("dense").to_string();
     let cfg = build_config(args)?;
     args.finish().map_err(|e| e.to_string())?;
     if live {
@@ -229,7 +257,7 @@ fn run_unified(args: &Args) -> Result<(), String> {
         print_live(&rep);
         return Ok(());
     }
-    run_des_collective(collective.as_str(), &cfg, trace)
+    run_des_collective(collective.as_str(), &cfg, trace, &engine)
 }
 
 fn run_baseline(args: &Args) -> Result<(), String> {
@@ -259,13 +287,14 @@ fn run_campaign_cmd(args: &Args) -> Result<(), String> {
     let seed: u64 = args.get_parsed("seed", 1).map_err(|e| e.to_string())?;
     let threads: usize = args.get_parsed("threads", 0).map_err(|e| e.to_string())?;
     let max_n: u32 = args.get_parsed("max-n", 128).map_err(|e| e.to_string())?;
+    let bign: u32 = args.get_parsed("bign", 0).map_err(|e| e.to_string())?;
     let out = args.get("out").unwrap_or("campaign_result.json").to_string();
     let replay = args.get("replay").map(String::from);
     let trace = args.flag("trace");
     let strict = args.flag("check-oracles");
     args.finish().map_err(|e| e.to_string())?;
 
-    let grid = GridConfig { count, seed, max_n };
+    let grid = GridConfig { count, seed, max_n, bign };
 
     if let Some(id) = replay {
         return replay_scenario(&grid, &id, trace);
@@ -289,7 +318,8 @@ fn run_campaign_cmd(args: &Args) -> Result<(), String> {
             println!("    {v}");
         }
         println!(
-            "    replay: ftcoll campaign --seed {seed} --max-n {max_n} --replay {} --trace",
+            "    replay: ftcoll campaign --count {count} --bign {bign} --seed {seed} \
+             --max-n {max_n} --replay {} --trace",
             s.id
         );
     }

@@ -11,7 +11,10 @@ use std::collections::HashMap;
 /// Per-kind message and byte counters plus completion times.
 /// Counters are flat arrays indexed by [`MsgKind::index`] — `on_send`
 /// is on the hot path of both executors (§Perf).
-#[derive(Clone, Debug, Default)]
+/// `PartialEq` backs the dense↔sparse differential suite
+/// (`rust/tests/des_scale.rs`): two engines agree only if every counter,
+/// per-rank byte lane and completion time is bit-identical.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct Metrics {
     msgs: [u64; 5],
     bytes: [u64; 5],

@@ -136,6 +136,13 @@ impl RunSpec {
                 ));
             }
         }
+        // combined bit budget of the nested framings this spec can
+        // stack: pipeline segmenting re-frames the base op, rsag block
+        // framing adds one more level below it, and session epoch bands
+        // raise the largest base op id that has to survive the shifts
+        let framed_levels = u32::from(self.segment_bytes.is_some())
+            + u32::from(self.allreduce_algo == AllreduceAlgo::Rsag);
+        segment::check_budget(u64::from(self.session_ops.max(1)), framed_levels)?;
         Ok(())
     }
 
@@ -203,7 +210,11 @@ impl<'a> CollectiveDriver<'a> {
         self.spec
     }
 
-    fn reduce_config(&self) -> ReduceConfig {
+    /// The [`ReduceConfig`] this driver builds [`Reduce`] instances
+    /// from — also the construction seam of the sparse large-n engine
+    /// ([`crate::sim::sparse`]), so the dense and sparse paths derive
+    /// their topology/op-id/epoch parameters from the same place.
+    pub fn reduce_config(&self) -> ReduceConfig {
         ReduceConfig {
             n: self.spec.n,
             f: self.spec.f,

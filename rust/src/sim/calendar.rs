@@ -1,0 +1,195 @@
+//! Calendar-queue event scheduler (R. Brown, CACM 1988) for the DES.
+//!
+//! The single `BinaryHeap` costs `O(log m)` per operation with `m`
+//! events in flight; at n = 10⁵–10⁶ ranks the up-correction burst keeps
+//! millions of events queued and the sift-down memcpy dominates the
+//! run (§Perf). The calendar spreads events over `NB` time buckets of
+//! fixed `width`; the common case pops from the current bucket in
+//! `O(log bucket)` where buckets hold only the events of one small time
+//! window.
+//!
+//! Correctness: an event at time `t` lives in bucket
+//! `(t / width) % NB`, and [`CalendarQueue::pop`] only yields an entry
+//! whose *window* `t / width` equals the cursor window. Two entries in
+//! the same window always share a bucket (ordered by `(t, seq)` inside
+//! the bucket's heap), and a bucket's heap top is its global minimum,
+//! so an entry of a *later* lap can never shadow one of the current
+//! window. The pop order is therefore exactly the `BinaryHeap`'s total
+//! order by `(t, seq)` — the property the dense↔sparse differential
+//! suite (`rust/tests/des_scale.rs`) and the in-module property tests
+//! pin.
+
+use super::Entry;
+use crate::types::TimeNs;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Number of calendar buckets. 512 windows of one network latency each
+/// cover every in-flight horizon the protocols generate; anything
+/// further wraps laps and is found by the rescan fallback.
+const NB: usize = 512;
+
+pub(crate) struct CalendarQueue {
+    buckets: Vec<BinaryHeap<Reverse<Entry>>>,
+    /// Bucket window width in virtual ns (≥ 1).
+    width: TimeNs,
+    /// Absolute window index (`t / width`) the cursor is inspecting.
+    cursor: u64,
+    len: usize,
+}
+
+impl CalendarQueue {
+    /// `width` is clamped to ≥ 1; one network latency is a good fit
+    /// (most arrivals land one latency ahead of `now`).
+    pub(crate) fn new(width: TimeNs) -> Self {
+        CalendarQueue {
+            buckets: (0..NB).map(|_| BinaryHeap::new()).collect(),
+            width: width.max(1),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    pub(crate) fn push(&mut self, e: Entry) {
+        let w = e.t / self.width;
+        if w < self.cursor {
+            // an out-of-window push (never produced by the monotonic
+            // DES, but cheap to stay correct for): rewind the cursor so
+            // the entry cannot be skipped
+            self.cursor = w;
+        }
+        self.buckets[(w % NB as u64) as usize].push(Reverse(e));
+        self.len += 1;
+    }
+
+    /// Pop the globally minimal entry by `(t, seq)`.
+    pub(crate) fn pop(&mut self) -> Option<Entry> {
+        if self.len == 0 {
+            return None;
+        }
+        let mut misses = 0usize;
+        loop {
+            let b = (self.cursor % NB as u64) as usize;
+            let hit = match self.buckets[b].peek() {
+                Some(Reverse(top)) => top.t / self.width == self.cursor,
+                None => false,
+            };
+            if hit {
+                let Reverse(e) = self.buckets[b].pop().expect("peeked entry");
+                self.len -= 1;
+                return Some(e);
+            }
+            self.cursor += 1;
+            misses += 1;
+            if misses >= NB {
+                // a full lap without a hit: every queued event is more
+                // than NB windows ahead — jump straight to the global
+                // minimum's window instead of walking empty laps
+                let mut best: Option<(TimeNs, u64)> = None;
+                for bh in &self.buckets {
+                    if let Some(Reverse(top)) = bh.peek() {
+                        let key = (top.t, top.seq);
+                        let better = match best {
+                            None => true,
+                            Some(k) => key < k,
+                        };
+                        if better {
+                            best = Some(key);
+                        }
+                    }
+                }
+                let (t, _) = best.expect("len > 0 but all buckets empty");
+                self.cursor = t / self.width;
+                misses = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::EvKind;
+    use super::*;
+    use crate::prng::Pcg;
+
+    fn entry(t: TimeNs, seq: u64) -> Entry {
+        Entry { t, seq, rank: (seq % 7) as u32, kind: EvKind::Start }
+    }
+
+    /// Differential against the plain BinaryHeap over random monotonic
+    /// workloads (pushes never precede the last popped time, like the
+    /// DES): identical (t, seq) pop order at several widths.
+    #[test]
+    fn matches_binary_heap_on_monotonic_workloads() {
+        for width in [1u64, 7, 1000] {
+            let mut rng = Pcg::new(0xCA1E ^ width);
+            let mut cal = CalendarQueue::new(width);
+            let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::new();
+            let mut seq = 0u64;
+            let mut floor = 0u64; // last popped time
+            let mut popped = 0usize;
+            let mut pushed = 0usize;
+            while pushed < 4000 || popped < pushed {
+                let push = pushed < 4000 && (heap.is_empty() || rng.bool(0.55));
+                if push {
+                    // mix of near-future and far-future (lap-wrapping)
+                    // arrival offsets
+                    let dt = if rng.bool(0.9) {
+                        rng.range(0, 3 * width)
+                    } else {
+                        rng.range(0, 2000 * width)
+                    };
+                    seq += 1;
+                    cal.push(entry(floor + dt, seq));
+                    heap.push(Reverse(entry(floor + dt, seq)));
+                    pushed += 1;
+                } else {
+                    let a = cal.pop().expect("calendar entry");
+                    let Reverse(b) = heap.pop().expect("heap entry");
+                    assert_eq!((a.t, a.seq), (b.t, b.seq), "width {width}");
+                    floor = b.t;
+                    popped += 1;
+                }
+            }
+            assert!(cal.pop().is_none());
+        }
+    }
+
+    /// Ties on `t` resolve by push order (seq) — the determinism
+    /// contract of the DES.
+    #[test]
+    fn equal_times_pop_in_push_order() {
+        let mut cal = CalendarQueue::new(100);
+        for seq in 1..=20u64 {
+            cal.push(entry(500, seq));
+        }
+        for want in 1..=20u64 {
+            assert_eq!(cal.pop().expect("entry").seq, want);
+        }
+        assert!(cal.pop().is_none());
+    }
+
+    /// Entries many laps ahead (t ≫ NB·width) are found by the rescan.
+    #[test]
+    fn far_future_entries_survive_lap_wrap() {
+        let mut cal = CalendarQueue::new(1);
+        cal.push(entry(10_000_000, 1));
+        cal.push(entry(3, 2));
+        cal.push(entry(10_000_000, 3));
+        assert_eq!(cal.pop().expect("e").seq, 2);
+        assert_eq!(cal.pop().expect("e").seq, 1);
+        assert_eq!(cal.pop().expect("e").seq, 3);
+        assert!(cal.pop().is_none());
+    }
+
+    /// An out-of-window push (earlier than the cursor) rewinds instead
+    /// of being skipped.
+    #[test]
+    fn earlier_push_rewinds_cursor() {
+        let mut cal = CalendarQueue::new(1);
+        cal.push(entry(5000, 1));
+        assert_eq!(cal.pop().expect("e").t, 5000);
+        cal.push(entry(10, 2));
+        assert_eq!(cal.pop().expect("e").t, 10);
+    }
+}

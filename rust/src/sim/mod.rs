@@ -11,7 +11,9 @@
 //! sequence numbers assigned at push; payload combination follows event
 //! order, so any run with the same configuration is bit-identical.
 
+mod calendar;
 pub mod net;
+pub mod sparse;
 
 use crate::collectives::baseline::{
     FlatGather, Gossip, GossipConfig, RingAllreduce, TreeReduce,
@@ -26,9 +28,10 @@ use crate::runtime::{CollectiveDriver, DriveKind, Driver, RunSpec};
 use crate::session::{OpKind, Session, SessionView};
 use crate::trace::{Trace, TraceEvent};
 use crate::types::{Msg, Rank, TimeNs, Value};
+pub use sparse::run_reduce_sparse;
+
+use calendar::CalendarQueue;
 use net::NetModel;
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 /// Everything a simulated collective run needs: the executor-agnostic
@@ -141,65 +144,69 @@ impl SimConfig {
 }
 
 /// Flat watch bookkeeping for the DES hot path: per watched peer, a
-/// small vector of (watcher, subscription-count). Protocols watch a
-/// handful of peers at a time, so linear scans beat hashing by a wide
-/// margin (the HashMap-of-HashMaps version cost ~25% of DES time —
-/// EXPERIMENTS.md §Perf). Same counted-subscription semantics as
+/// vector of (watcher, subscription-count) kept *sorted by watcher*.
+/// Protocols watch a handful of peers at a time, so the inner vectors
+/// stay tiny (the HashMap-of-HashMaps version cost ~25% of DES time —
+/// EXPERIMENTS.md §Perf); keeping them sorted makes `is_watching`/
+/// `clear` a binary search instead of a linear scan and — the part that
+/// used to be quadratic during failure storms at large n — lets a kill
+/// notify watchers in ascending order straight off the slice, with no
+/// per-kill allocation or sort. Same counted-subscription semantics as
 /// [`crate::failure::monitor::WatchTable`], which the live engine keeps
 /// using (cross-thread, contention-friendly).
-struct SimWatch {
+pub(crate) struct SimWatch {
     per_peer: Vec<Vec<(Rank, u32)>>,
 }
 
 impl SimWatch {
-    fn new(n: u32) -> Self {
+    pub(crate) fn new(n: u32) -> Self {
         SimWatch { per_peer: vec![Vec::new(); n as usize] }
     }
 
     #[inline]
-    fn watch(&mut self, watcher: Rank, peer: Rank) {
+    pub(crate) fn watch(&mut self, watcher: Rank, peer: Rank) {
         let v = &mut self.per_peer[peer as usize];
-        if let Some(e) = v.iter_mut().find(|(w, _)| *w == watcher) {
-            e.1 += 1;
-        } else {
-            v.push((watcher, 1));
+        match v.binary_search_by_key(&watcher, |&(w, _)| w) {
+            Ok(i) => v[i].1 += 1,
+            Err(i) => v.insert(i, (watcher, 1)),
         }
     }
 
     #[inline]
-    fn unwatch(&mut self, watcher: Rank, peer: Rank) {
+    pub(crate) fn unwatch(&mut self, watcher: Rank, peer: Rank) {
         let v = &mut self.per_peer[peer as usize];
-        if let Some(i) = v.iter().position(|(w, _)| *w == watcher) {
+        if let Ok(i) = v.binary_search_by_key(&watcher, |&(w, _)| w) {
             v[i].1 -= 1;
             if v[i].1 == 0 {
-                v.swap_remove(i);
+                v.remove(i);
             }
         }
     }
 
     #[inline]
-    fn is_watching(&self, watcher: Rank, peer: Rank) -> bool {
-        self.per_peer[peer as usize].iter().any(|(w, _)| *w == watcher)
+    pub(crate) fn is_watching(&self, watcher: Rank, peer: Rank) -> bool {
+        self.per_peer[peer as usize].binary_search_by_key(&watcher, |&(w, _)| w).is_ok()
     }
 
     /// Remove all subscriptions of `watcher` on `peer`.
     #[inline]
-    fn clear(&mut self, watcher: Rank, peer: Rank) {
+    pub(crate) fn clear(&mut self, watcher: Rank, peer: Rank) {
         let v = &mut self.per_peer[peer as usize];
-        if let Some(i) = v.iter().position(|(w, _)| *w == watcher) {
-            v.swap_remove(i);
+        if let Ok(i) = v.binary_search_by_key(&watcher, |&(w, _)| w) {
+            v.remove(i);
         }
     }
 
-    fn watchers_of(&self, peer: Rank) -> Vec<Rank> {
-        let mut v: Vec<Rank> = self.per_peer[peer as usize].iter().map(|(w, _)| *w).collect();
-        v.sort_unstable();
-        v
+    /// Watchers of `peer`, ascending (the invariant the sorted insert
+    /// maintains) — the deterministic notification order of a kill.
+    #[inline]
+    pub(crate) fn watchers(&self, peer: Rank) -> &[(Rank, u32)] {
+        &self.per_peer[peer as usize]
     }
 }
 
 #[derive(Debug)]
-enum EvKind {
+pub(crate) enum EvKind {
     Start,
     // boxed: keeps heap entries small (sift-down memcpy is the
     // DES's hottest loop — §Perf)
@@ -209,11 +216,11 @@ enum EvKind {
     Timer { token: u64 },
 }
 
-struct Entry {
-    t: TimeNs,
-    seq: u64,
-    rank: Rank,
-    kind: EvKind,
+pub(crate) struct Entry {
+    pub(crate) t: TimeNs,
+    pub(crate) seq: u64,
+    pub(crate) rank: Rank,
+    pub(crate) kind: EvKind,
 }
 
 impl PartialEq for Entry {
@@ -233,18 +240,51 @@ impl Ord for Entry {
     }
 }
 
+/// SoA arena for the per-rank scalar state of the event loop (one
+/// struct-of-vectors instead of five loose `Vec` fields): the dense and
+/// sparse engines share it, and the hot `do_send`/`run` paths touch
+/// adjacent lanes of one allocation pattern instead of five unrelated
+/// ones.
+pub(crate) struct RankArena {
+    pub(crate) dead: Vec<bool>,
+    pub(crate) send_count: Vec<u32>,
+    pub(crate) send_limit: Vec<Option<u32>>,
+    pub(crate) sender_free: Vec<TimeNs>,
+    pub(crate) recv_free: Vec<TimeNs>,
+}
+
+impl RankArena {
+    pub(crate) fn new(n: u32) -> Self {
+        RankArena {
+            dead: vec![false; n as usize],
+            send_count: vec![0; n as usize],
+            send_limit: vec![None; n as usize],
+            sender_free: vec![0; n as usize],
+            recv_free: vec![0; n as usize],
+        }
+    }
+}
+
+/// A run stopped at the event cap instead of reaching quiescence.
+/// Recorded on the [`RunReport`] (and, via the campaign runner, on the
+/// scenario result) rather than panicking — one livelocked big-n
+/// scenario must not abort a whole campaign sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RunAbort {
+    /// Events processed when the cap was hit.
+    pub events: u64,
+    /// Virtual time at the abort.
+    pub at: TimeNs,
+}
+
 /// The discrete-event engine.
 pub struct Sim {
     n: u32,
     net: NetModel,
     detect_latency: TimeNs,
-    heap: BinaryHeap<Reverse<Entry>>,
+    heap: CalendarQueue,
     procs: Vec<Option<Box<dyn Protocol>>>,
-    dead: Vec<bool>,
-    send_count: Vec<u32>,
-    send_limit: Vec<Option<u32>>,
-    sender_free: Vec<TimeNs>,
-    recv_free: Vec<TimeNs>,
+    ranks: RankArena,
     watch: SimWatch,
     reducer: Arc<dyn Reducer>,
     pub metrics: Metrics,
@@ -252,6 +292,7 @@ pub struct Sim {
     outcomes: Vec<Vec<Outcome>>,
     seq: u64,
     max_events: u64,
+    aborted: Option<RunAbort>,
     now: TimeNs,
 }
 
@@ -261,13 +302,9 @@ impl Sim {
             n,
             net,
             detect_latency,
-            heap: BinaryHeap::new(),
+            heap: CalendarQueue::new(net.latency),
             procs: (0..n).map(|_| None).collect(),
-            dead: vec![false; n as usize],
-            send_count: vec![0; n as usize],
-            send_limit: vec![None; n as usize],
-            sender_free: vec![0; n as usize],
-            recv_free: vec![0; n as usize],
+            ranks: RankArena::new(n),
             watch: SimWatch::new(n),
             reducer,
             metrics: Metrics::new(),
@@ -275,6 +312,7 @@ impl Sim {
             outcomes: (0..n).map(|_| Vec::new()).collect(),
             seq: 0,
             max_events: 200_000_000,
+            aborted: None,
             now: 0,
         }
     }
@@ -297,11 +335,11 @@ impl Sim {
         for spec in specs {
             match *spec {
                 FailureSpec::Pre { rank } => {
-                    self.dead[rank as usize] = true;
+                    self.ranks.dead[rank as usize] = true;
                     self.trace.push(TraceEvent::Kill { t: 0, rank, pre_operational: true });
                 }
                 FailureSpec::AfterSends { rank, sends } => {
-                    self.send_limit[rank as usize] = Some(sends);
+                    self.ranks.send_limit[rank as usize] = Some(sends);
                 }
                 FailureSpec::AtTime { rank, at } => {
                     self.push(at, rank, EvKind::Kill);
@@ -312,42 +350,49 @@ impl Sim {
 
     fn push(&mut self, t: TimeNs, rank: Rank, kind: EvKind) {
         self.seq += 1;
-        self.heap.push(Reverse(Entry { t, seq: self.seq, rank, kind }));
+        self.heap.push(Entry { t, seq: self.seq, rank, kind });
     }
 
     /// Queue `Start` for all live processes at t=0.
     pub fn start_all(&mut self) {
         for r in 0..self.n {
-            if !self.dead[r as usize] {
+            if !self.ranks.dead[r as usize] {
                 self.push(0, r, EvKind::Start);
             }
         }
     }
 
     fn kill(&mut self, rank: Rank, t: TimeNs) {
-        if self.dead[rank as usize] {
+        if self.ranks.dead[rank as usize] {
             return;
         }
-        self.dead[rank as usize] = true;
+        self.ranks.dead[rank as usize] = true;
         self.trace.push(TraceEvent::Kill { t, rank, pre_operational: false });
-        for w in self.watch.watchers_of(rank) {
+        // the watch vector is sorted by watcher and event pushes never
+        // mutate it, so notifying straight off the slice preserves the
+        // ascending order the old collect-and-sort produced — with no
+        // per-kill allocation
+        let mut i = 0;
+        while i < self.watch.watchers(rank).len() {
+            let w = self.watch.watchers(rank)[i].0;
             self.push(t + self.detect_latency, w, EvKind::Detect { peer: rank });
+            i += 1;
         }
     }
 
     fn do_send(&mut self, from: Rank, now: TimeNs, to: Rank, msg: Msg) {
-        if self.dead[from as usize] {
+        if self.ranks.dead[from as usize] {
             return; // died earlier in this callback
         }
-        if let Some(limit) = self.send_limit[from as usize] {
-            if self.send_count[from as usize] >= limit {
+        if let Some(limit) = self.ranks.send_limit[from as usize] {
+            if self.ranks.send_count[from as usize] >= limit {
                 // in-operational failure: dies attempting this send;
                 // the message is never injected (§3 fail-stop)
                 self.kill(from, now);
                 return;
             }
         }
-        self.send_count[from as usize] += 1;
+        self.ranks.send_count[from as usize] += 1;
         let bytes = msg.wire_bytes();
         self.metrics.on_send(from, msg.kind, bytes, msg.finfo.wire_bytes());
         if self.trace.is_enabled() {
@@ -369,9 +414,9 @@ impl Sim {
                 bytes,
             });
         }
-        let depart = now.max(self.sender_free[from as usize]) + self.net.send_ovh;
-        self.sender_free[from as usize] = depart;
-        if self.dead[to as usize] {
+        let depart = now.max(self.ranks.sender_free[from as usize]) + self.net.send_ovh;
+        self.ranks.sender_free[from as usize] = depart;
+        if self.ranks.dead[to as usize] {
             // completes like a normal send; the dead peer absorbs it
             self.metrics.on_send_to_dead();
             return;
@@ -382,35 +427,41 @@ impl Sim {
 
     fn do_watch(&mut self, watcher: Rank, now: TimeNs, peer: Rank) {
         self.watch.watch(watcher, peer);
-        if self.dead[peer as usize] {
+        if self.ranks.dead[peer as usize] {
             self.push(now + self.detect_latency, watcher, EvKind::Detect { peer });
         }
     }
 
-    /// Run to quiescence (or the event cap). Returns the final virtual
-    /// time.
+    /// Whether (and where) the run stopped at the event cap instead of
+    /// draining the queue.
+    pub fn aborted(&self) -> Option<RunAbort> {
+        self.aborted
+    }
+
+    /// Run to quiescence, or to the event cap — a cap hit records a
+    /// structured [`RunAbort`] (readable via [`Sim::aborted`] and on the
+    /// [`RunReport`]) instead of panicking, so one livelocked scenario
+    /// cannot take down a whole campaign sweep. Returns the final
+    /// virtual time.
     pub fn run(&mut self) -> TimeNs {
         let mut events: u64 = 0;
-        while let Some(Reverse(entry)) = self.heap.pop() {
+        while let Some(entry) = self.heap.pop() {
+            if events >= self.max_events {
+                self.aborted = Some(RunAbort { events, at: self.now });
+                break;
+            }
             events += 1;
-            assert!(
-                events <= self.max_events,
-                "event cap exceeded ({events}) — livelock in protocol?"
-            );
             self.metrics.on_event();
             let Entry { t, rank, kind, .. } = entry;
             // `now` tracks the latest *handled* time: receiver-side
             // serialization can push handling past later-popped events'
             // arrival times, so take the max
             self.now = self.now.max(t);
-            match kind {
-                EvKind::Kill => {
-                    self.kill(rank, t);
-                    continue;
-                }
-                _ => {}
+            if let EvKind::Kill = kind {
+                self.kill(rank, t);
+                continue;
             }
-            if self.dead[rank as usize] {
+            if self.ranks.dead[rank as usize] {
                 continue; // events for the dead are dropped
             }
             // take the protocol out to avoid aliasing the engine
@@ -420,8 +471,8 @@ impl Sim {
             };
             let handle_t = match &kind {
                 EvKind::Deliver { .. } => {
-                    let ht = t.max(self.recv_free[rank as usize]) + self.net.recv_ovh;
-                    self.recv_free[rank as usize] = ht;
+                    let ht = t.max(self.ranks.recv_free[rank as usize]) + self.net.recv_ovh;
+                    self.ranks.recv_free[rank as usize] = ht;
                     ht
                 }
                 _ => t,
@@ -457,7 +508,7 @@ impl Sim {
     }
 
     pub fn is_dead(&self, rank: Rank) -> bool {
-        self.dead[rank as usize]
+        self.ranks.dead[rank as usize]
     }
 
     /// The installed protocol instance of `rank` (post-run inspection —
@@ -487,7 +538,7 @@ impl<'a> Ctx for SimCtx<'a> {
         self.sim.do_send(self.rank, self.now, to, msg);
     }
     fn watch(&mut self, peer: Rank) {
-        if !self.sim.dead[self.rank as usize] {
+        if !self.sim.ranks.dead[self.rank as usize] {
             self.sim.do_watch(self.rank, self.now, peer);
         }
     }
@@ -495,7 +546,7 @@ impl<'a> Ctx for SimCtx<'a> {
         self.sim.watch.unwatch(self.rank, peer);
     }
     fn set_timer(&mut self, delay: TimeNs, token: u64) {
-        if !self.sim.dead[self.rank as usize] {
+        if !self.sim.ranks.dead[self.rank as usize] {
             self.sim.push(self.now + delay, self.rank, EvKind::Timer { token });
         }
     }
@@ -504,7 +555,7 @@ impl<'a> Ctx for SimCtx<'a> {
         reducer.combine(acc, other);
     }
     fn deliver(&mut self, out: Outcome) {
-        if self.sim.dead[self.rank as usize] {
+        if self.sim.ranks.dead[self.rank as usize] {
             return; // a process that died mid-callback delivers nothing
         }
         self.sim.metrics.on_complete(self.rank, self.now);
@@ -532,6 +583,9 @@ pub struct RunReport {
     pub final_time: TimeNs,
     /// Ranks dead by the end of the run.
     pub dead: Vec<Rank>,
+    /// Set when the run stopped at the event cap instead of reaching
+    /// quiescence (`None` for every normal run).
+    pub aborted: Option<RunAbort>,
 }
 
 impl RunReport {
@@ -597,6 +651,7 @@ fn finish(mut sim: Sim) -> RunReport {
         trace: sim.trace,
         final_time,
         dead,
+        aborted: sim.aborted,
     }
 }
 
@@ -619,6 +674,20 @@ pub fn run_driver(cfg: &SimConfig, driver: &dyn Driver) -> RunReport {
 /// ([`crate::collectives::pipeline`]).
 pub fn run_reduce(cfg: &SimConfig) -> RunReport {
     run_driver(cfg, &CollectiveDriver::new(&cfg.spec, DriveKind::Reduce))
+}
+
+/// Simulate fault-tolerant reduce, picking the engine automatically:
+/// the sparse large-n engine ([`sparse`]) when the configuration is in
+/// its supported class (monolithic reduce, pre-operational failures
+/// only, no trace — see `sparse::run_reduce_sparse`), else the dense
+/// per-rank engine. Both produce bit-identical reports
+/// (`rust/tests/des_scale.rs` pins this differentially), so callers
+/// only trade memory/speed, never results.
+pub fn run_reduce_auto(cfg: &SimConfig) -> RunReport {
+    match sparse::run_reduce_sparse(cfg) {
+        Some(rep) => rep,
+        None => run_reduce(cfg),
+    }
 }
 
 /// Simulate fault-tolerant allreduce (Algorithm 5); with
@@ -683,6 +752,7 @@ pub fn run_session(cfg: &SimConfig, kind: OpKind) -> SessionReport {
         trace: sim.trace,
         final_time,
         dead,
+        aborted: sim.aborted,
     };
     SessionReport { run, views }
 }
@@ -951,6 +1021,67 @@ mod tests {
         }
         // exactly 2(n-1) messages
         assert_eq!(rep.metrics.total_msgs(), 16);
+    }
+
+    /// PR 6 bugfix pin: hitting the event cap must record a structured
+    /// [`RunAbort`] on the report instead of panicking the runner thread.
+    #[test]
+    fn event_cap_records_structured_abort() {
+        let mut cfg = SimConfig::new(16, 2);
+        cfg.max_events = 10;
+        let rep = run_reduce(&cfg);
+        let ab = rep.aborted.expect("cap hit must be recorded");
+        assert_eq!(ab.events, 10, "processes exactly max_events before stopping");
+        assert!(rep.root_value().is_none(), "no root delivery in 10 events");
+        // an untouched cap never aborts
+        assert!(run_reduce(&SimConfig::new(16, 2)).aborted.is_none());
+    }
+
+    /// Determinism pin for the sorted watch table: watcher lists are
+    /// kept ascending with counted subscriptions, so notification order
+    /// is independent of subscription order.
+    #[test]
+    fn watch_notification_order_is_ascending_and_counted() {
+        let mut w = SimWatch::new(8);
+        for &r in &[5u32, 1, 7, 3, 1] {
+            w.watch(r, 2);
+        }
+        let order: Vec<Rank> = w.watchers(2).iter().map(|&(r, _)| r).collect();
+        assert_eq!(order, vec![1, 3, 5, 7]);
+        w.unwatch(1, 2); // counted twice: still watching after one unwatch
+        assert!(w.is_watching(1, 2));
+        w.unwatch(1, 2);
+        assert!(!w.is_watching(1, 2));
+        w.clear(5, 2); // clear drops every subscription at once
+        assert!(!w.is_watching(5, 2));
+        let order: Vec<Rank> = w.watchers(2).iter().map(|&(r, _)| r).collect();
+        assert_eq!(order, vec![3, 7]);
+    }
+
+    /// End-to-end determinism pin: a kill notifies watchers in ascending
+    /// rank order (same-time Detect events pop in push order, so the
+    /// trace records them ascending).
+    #[test]
+    fn kill_notifies_watchers_in_ascending_rank_order() {
+        // n=10, f=3: ranks 1,3,4 are rank 2's up-correction group peers
+        // and all watch 2 at t=0; the kill at t=1 lands before any of
+        // 2's messages arrive (hpc latency 1000), and detect latency 1
+        // confirms before those arrivals trigger unwatch.
+        let cfg = SimConfig::new(10, 3)
+            .detect_latency(1)
+            .tracing(true)
+            .failure(FailureSpec::AtTime { rank: 2, at: 1 });
+        let rep = run_reduce(&cfg);
+        let detectors: Vec<Rank> = rep
+            .trace
+            .events()
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Detect { at, peer: 2, .. } => Some(*at),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(detectors, vec![1, 3, 4]);
     }
 
     #[test]

@@ -1,0 +1,573 @@
+//! Sparse large-n DES engine for corrected Reduce (docs/SCALE.md).
+//!
+//! The dense engine materializes one boxed [`Protocol`] state machine
+//! per rank — each with its own topology handles, hash sets and stash
+//! buffers — which caps campaigns at a few hundred ranks (ROADMAP item
+//! 3). For the configurations big-n campaigns actually sweep
+//! (monolithic corrected Reduce under pre-operational failure plans),
+//! this module runs the *same* protocol with the per-rank state
+//! flattened into struct-of-arrays lanes and exactly one shared
+//! [`RankMap`]/[`IfTree`]/[`UpCorrectionGroups`]/reducer for the whole
+//! simulation: failure-free ranks cost a few machine words plus their
+//! (regenerated, never stored) input value, instead of a boxed state
+//! machine with per-rank topology clones.
+//!
+//! Bit-identity is structural, not approximate: the event loop below is
+//! a line-for-line replica of `Sim::run` (same `(t, seq)` total order,
+//! same receiver-serialization rule, same metrics calls at the same
+//! points), and the inlined handlers are transcriptions of
+//! [`crate::collectives::reduce::Reduce`] and
+//! [`crate::collectives::up_correction::UpCorrection`] — every send,
+//! watch, combine and deliver happens at the same callback point in the
+//! same relative order as the dense engine. `rust/tests/des_scale.rs`
+//! pins the equivalence differentially (outcomes, failure reports,
+//! metrics, final time) across every scenario family at small n.
+//!
+//! [`run_reduce_sparse`] is the gate: configurations outside the
+//! supported class return `None` and the caller (see
+//! [`super::run_reduce_auto`]) falls back to the dense engine — the
+//! "fully materialize" escape hatch.
+//!
+//! [`Protocol`]: crate::collectives::Protocol
+
+use super::calendar::CalendarQueue;
+use super::{Entry, EvKind, RankArena, RunAbort, RunReport, SimConfig, SimWatch};
+use crate::collectives::failure_info::FailureInfo;
+use crate::collectives::reduce::ReduceConfig;
+use crate::collectives::{NativeReducer, Outcome, Reducer};
+use crate::config::PayloadKind;
+use crate::failure::FailureSpec;
+use crate::metrics::Metrics;
+use crate::runtime::{CollectiveDriver, DriveKind};
+use crate::sim::net::NetModel;
+use crate::topology::{IfTree, RankMap, UpCorrectionGroups};
+use crate::trace::Trace;
+use crate::types::{Msg, MsgKind, ProtoError, Rank, TimeNs, Value};
+
+/// The configuration class the sparse engine handles: a single
+/// monolithic corrected Reduce whose failure plan is pre-operational
+/// and never touches the root, without tracing (the tracer's inclusion
+/// sets would force per-send mask scans) or explicit allreduce
+/// candidates. Everything else falls back to the dense engine.
+fn supported(cfg: &SimConfig) -> bool {
+    if cfg.trace
+        || cfg.segment_bytes.is_some()
+        || cfg.session_ops != 1
+        || cfg.ops_list.is_some()
+        || cfg.candidates.is_some()
+    {
+        return false;
+    }
+    cfg.failures
+        .iter()
+        .all(|f| matches!(f, FailureSpec::Pre { rank } if *rank != cfg.root))
+}
+
+/// Run a corrected Reduce on the sparse engine, or `None` when the
+/// configuration is outside the supported class (callers then use the
+/// dense engine — [`super::run_reduce`]). The report is bit-identical
+/// to the dense engine's for every supported configuration.
+pub fn run_reduce_sparse(cfg: &SimConfig) -> Option<RunReport> {
+    if !supported(cfg) {
+        return None;
+    }
+    // shared construction seam: the same driver (and therefore the same
+    // spec validation and ReduceConfig derivation) the dense path uses
+    let driver = CollectiveDriver::new(&cfg.spec, DriveKind::Reduce);
+    let rcfg = driver.reduce_config();
+    let mut sim = SparseSim::new(cfg, &rcfg);
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    Some(sim.finish())
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SPhase {
+    UpCorr,
+    Tree,
+    Done,
+}
+
+/// The flattened engine: `Sim` + per-rank `Reduce`/`UpCorrection`
+/// state as SoA lanes. Indexed by *real* rank throughout; the shared
+/// `map` translates at the topology boundary exactly like
+/// `Reduce::bind` does per rank in the dense engine.
+struct SparseSim {
+    n: u32,
+    f: u32,
+    root: Rank,
+    op_id: u64,
+    epoch: u32,
+    net: NetModel,
+    detect_latency: TimeNs,
+    payload: PayloadKind,
+    map: RankMap,
+    tree: IfTree,
+    groups: UpCorrectionGroups,
+    reducer: NativeReducer,
+    heap: CalendarQueue,
+    ranks: RankArena,
+    watch: SimWatch,
+    metrics: Metrics,
+    outcomes: Vec<Vec<Outcome>>,
+    seq: u64,
+    max_events: u64,
+    aborted: Option<RunAbort>,
+    now: TimeNs,
+    // ---- inlined protocol state (lazily filled at Start) ----
+    phase: Vec<SPhase>,
+    uc_started: Vec<bool>,
+    /// Up-correction peers not yet received from nor confirmed failed.
+    uc_pending: Vec<Vec<Rank>>,
+    /// Group peers confirmed failed during the up-correction phase.
+    uc_detected: Vec<Vec<Rank>>,
+    /// The ν accumulator (input value, then absorbed group values).
+    uc_value: Vec<Value>,
+    /// Tree-phase accumulator.
+    acc: Vec<Option<Value>>,
+    /// Outstanding tree children (real ranks; order never observed).
+    pending_children: Vec<Vec<Rank>>,
+    finfo: Vec<FailureInfo>,
+    /// Tree messages that raced ahead of our up-correction phase.
+    stash: Vec<Vec<(Rank, Msg)>>,
+    /// Root-only scalars (exactly one root per run — no lane needed).
+    delivered_root: bool,
+    report_root: Vec<Rank>,
+}
+
+impl SparseSim {
+    fn new(cfg: &SimConfig, rcfg: &ReduceConfig) -> Self {
+        let n = rcfg.n;
+        SparseSim {
+            n,
+            f: rcfg.f,
+            root: rcfg.root,
+            op_id: rcfg.op_id,
+            epoch: rcfg.epoch,
+            net: cfg.net,
+            detect_latency: cfg.detect_latency,
+            payload: cfg.payload,
+            map: RankMap::new(rcfg.root),
+            tree: IfTree::new(n, rcfg.f),
+            groups: UpCorrectionGroups::new(n, rcfg.f),
+            reducer: NativeReducer(cfg.op),
+            heap: CalendarQueue::new(cfg.net.latency),
+            ranks: RankArena::new(n),
+            watch: SimWatch::new(n),
+            metrics: Metrics::new(),
+            outcomes: (0..n).map(|_| Vec::new()).collect(),
+            seq: 0,
+            max_events: cfg.max_events,
+            aborted: None,
+            now: 0,
+            phase: vec![SPhase::UpCorr; n as usize],
+            uc_started: vec![false; n as usize],
+            uc_pending: (0..n).map(|_| Vec::new()).collect(),
+            uc_detected: (0..n).map(|_| Vec::new()).collect(),
+            uc_value: (0..n).map(|_| Value::f64(Vec::new())).collect(),
+            acc: (0..n).map(|_| None).collect(),
+            pending_children: (0..n).map(|_| Vec::new()).collect(),
+            finfo: (0..n).map(|_| FailureInfo::empty(rcfg.scheme)).collect(),
+            stash: (0..n).map(|_| Vec::new()).collect(),
+            delivered_root: false,
+            report_root: Vec::new(),
+        }
+    }
+
+    // ---- engine plumbing: line-for-line replicas of `Sim` ----
+
+    fn push(&mut self, t: TimeNs, rank: Rank, kind: EvKind) {
+        self.seq += 1;
+        self.heap.push(Entry { t, seq: self.seq, rank, kind });
+    }
+
+    fn apply_failures(&mut self, specs: &[FailureSpec]) {
+        for spec in specs {
+            match *spec {
+                FailureSpec::Pre { rank } => {
+                    self.ranks.dead[rank as usize] = true;
+                }
+                FailureSpec::AfterSends { rank, sends } => {
+                    self.ranks.send_limit[rank as usize] = Some(sends);
+                }
+                FailureSpec::AtTime { rank, at } => {
+                    self.push(at, rank, EvKind::Kill);
+                }
+            }
+        }
+    }
+
+    fn start_all(&mut self) {
+        for r in 0..self.n {
+            if !self.ranks.dead[r as usize] {
+                self.push(0, r, EvKind::Start);
+            }
+        }
+    }
+
+    fn kill(&mut self, rank: Rank, t: TimeNs) {
+        if self.ranks.dead[rank as usize] {
+            return;
+        }
+        self.ranks.dead[rank as usize] = true;
+        let mut i = 0;
+        while i < self.watch.watchers(rank).len() {
+            let w = self.watch.watchers(rank)[i].0;
+            self.push(t + self.detect_latency, w, EvKind::Detect { peer: rank });
+            i += 1;
+        }
+    }
+
+    fn do_send(&mut self, from: Rank, now: TimeNs, to: Rank, msg: Msg) {
+        if self.ranks.dead[from as usize] {
+            return;
+        }
+        if let Some(limit) = self.ranks.send_limit[from as usize] {
+            if self.ranks.send_count[from as usize] >= limit {
+                self.kill(from, now);
+                return;
+            }
+        }
+        self.ranks.send_count[from as usize] += 1;
+        let bytes = msg.wire_bytes();
+        self.metrics.on_send(from, msg.kind, bytes, msg.finfo.wire_bytes());
+        let depart = now.max(self.ranks.sender_free[from as usize]) + self.net.send_ovh;
+        self.ranks.sender_free[from as usize] = depart;
+        if self.ranks.dead[to as usize] {
+            self.metrics.on_send_to_dead();
+            return;
+        }
+        let arrival = depart + self.net.wire_time(bytes);
+        self.push(arrival, to, EvKind::Deliver { from, msg: Box::new(msg) });
+    }
+
+    /// `SimCtx::watch` + `Sim::do_watch` in one step.
+    fn ctx_watch(&mut self, watcher: Rank, now: TimeNs, peer: Rank) {
+        if self.ranks.dead[watcher as usize] {
+            return;
+        }
+        self.watch.watch(watcher, peer);
+        if self.ranks.dead[peer as usize] {
+            self.push(now + self.detect_latency, watcher, EvKind::Detect { peer });
+        }
+    }
+
+    fn deliver(&mut self, rank: Rank, now: TimeNs, out: Outcome) {
+        if self.ranks.dead[rank as usize] {
+            return;
+        }
+        self.metrics.on_complete(rank, now);
+        self.outcomes[rank as usize].push(out);
+    }
+
+    fn run_loop(&mut self) -> TimeNs {
+        let mut events: u64 = 0;
+        while let Some(entry) = self.heap.pop() {
+            if events >= self.max_events {
+                self.aborted = Some(RunAbort { events, at: self.now });
+                break;
+            }
+            events += 1;
+            self.metrics.on_event();
+            let Entry { t, rank, kind, .. } = entry;
+            self.now = self.now.max(t);
+            if let EvKind::Kill = kind {
+                self.kill(rank, t);
+                continue;
+            }
+            if self.ranks.dead[rank as usize] {
+                continue;
+            }
+            let handle_t = match &kind {
+                EvKind::Deliver { .. } => {
+                    let ht = t.max(self.ranks.recv_free[rank as usize]) + self.net.recv_ovh;
+                    self.ranks.recv_free[rank as usize] = ht;
+                    ht
+                }
+                _ => t,
+            };
+            self.now = self.now.max(handle_t);
+            match kind {
+                EvKind::Start => self.on_start(rank, handle_t),
+                EvKind::Deliver { from, msg } => self.on_message(rank, from, *msg, handle_t),
+                EvKind::Detect { peer } => {
+                    if self.watch.is_watching(rank, peer) {
+                        self.watch.clear(rank, peer);
+                        self.on_peer_failed(rank, peer, handle_t);
+                    }
+                }
+                EvKind::Timer { .. } => {}
+                EvKind::Kill => unreachable!(),
+            }
+        }
+        self.now
+    }
+
+    fn finish(mut self) -> RunReport {
+        let final_time = self.run_loop();
+        let dead: Vec<Rank> =
+            (0..self.n).filter(|&r| self.ranks.dead[r as usize]).collect();
+        let outcomes = std::mem::take(&mut self.outcomes);
+        RunReport {
+            n: self.n,
+            outcomes,
+            metrics: self.metrics,
+            trace: Trace::disabled(),
+            final_time,
+            dead,
+            aborted: self.aborted,
+        }
+    }
+
+    // ---- inlined protocol handlers: transcriptions of
+    // `Reduce`/`UpCorrection` (see module docs) ----
+
+    fn uc_is_done(&self, r: Rank) -> bool {
+        self.uc_started[r as usize] && self.uc_pending[r as usize].is_empty()
+    }
+
+    /// `Reduce::on_start`: bind + `UpCorrection::start`.
+    fn on_start(&mut self, r: Rank, now: TimeNs) {
+        let i = r as usize;
+        let vr = self.map.to_virtual(r);
+        let peers: Vec<Rank> =
+            self.groups.peers_of(vr).into_iter().map(|v| self.map.to_real(v)).collect();
+        self.uc_value[i] = self.payload.initial(r, self.n);
+        self.uc_pending[i] = peers.clone();
+        self.uc_started[i] = true;
+        for &p in &peers {
+            // the dense engine sends `senddata.clone()`; regenerating
+            // the input yields the identical value without storing a
+            // second per-rank copy
+            let msg = Msg {
+                op: self.op_id,
+                epoch: self.epoch,
+                kind: MsgKind::UpCorrection,
+                payload: self.payload.initial(r, self.n),
+                finfo: FailureInfo::Bit(false),
+            };
+            self.do_send(r, now, p, msg);
+            self.ctx_watch(r, now, p);
+        }
+        if self.uc_is_done(r) {
+            self.enter_tree_phase(r, now);
+        }
+    }
+
+    /// `Reduce::enter_tree_phase`.
+    fn enter_tree_phase(&mut self, r: Rank, now: TimeNs) {
+        let i = r as usize;
+        self.phase[i] = SPhase::Tree;
+        let mut j = 0;
+        while j < self.uc_detected[i].len() {
+            let d = self.uc_detected[i][j];
+            self.finfo[i].record_upcorr_failure(d);
+            j += 1;
+        }
+        if r == self.root {
+            self.report_root.extend_from_slice(&self.uc_detected[i]);
+        }
+        self.acc[i] = Some(self.uc_value[i].clone());
+        let vr = self.map.to_virtual(r);
+        let children: Vec<Rank> =
+            self.tree.children(vr).into_iter().map(|v| self.map.to_real(v)).collect();
+        self.pending_children[i] = children.clone();
+        for &c in &children {
+            self.ctx_watch(r, now, c);
+        }
+        for (from, msg) in std::mem::take(&mut self.stash[i]) {
+            self.on_tree_message(r, from, msg, now);
+        }
+        self.maybe_finish_tree(r, now);
+    }
+
+    /// `Reduce::maybe_finish_tree`.
+    fn maybe_finish_tree(&mut self, r: Rank, now: TimeNs) {
+        let i = r as usize;
+        if self.phase[i] != SPhase::Tree || !self.pending_children[i].is_empty() {
+            return;
+        }
+        if r == self.root {
+            if !self.delivered_root {
+                self.delivered_root = true;
+                if self.tree.num_subtrees() == 0 {
+                    let value = self.uc_value[i].clone();
+                    self.deliver(r, now, Outcome::ReduceRoot { value, known_failed: Vec::new() });
+                } else {
+                    self.deliver(r, now, Outcome::Error(ProtoError::NoFailureFreeSubtree));
+                }
+            }
+            self.phase[i] = SPhase::Done;
+            return;
+        }
+        let vr = self.map.to_virtual(r);
+        let parent = self.map.to_real(self.tree.parent(vr).expect("non-root"));
+        let payload = self.acc[i].take().expect("tree accumulator");
+        let msg = Msg {
+            op: self.op_id,
+            epoch: self.epoch,
+            kind: MsgKind::TreeUp,
+            payload,
+            finfo: self.finfo[i].clone(),
+        };
+        self.do_send(r, now, parent, msg);
+        self.phase[i] = SPhase::Done;
+        self.deliver(r, now, Outcome::ReduceDone);
+    }
+
+    /// `Reduce::on_message`.
+    fn on_message(&mut self, r: Rank, from: Rank, msg: Msg, now: TimeNs) {
+        if msg.op != self.op_id || msg.epoch != self.epoch {
+            return;
+        }
+        let i = r as usize;
+        match msg.kind {
+            MsgKind::UpCorrection => {
+                if self.uc_handle_message(r, from, &msg)
+                    && self.uc_is_done(r)
+                    && self.phase[i] == SPhase::UpCorr
+                {
+                    self.enter_tree_phase(r, now);
+                }
+            }
+            MsgKind::TreeUp => match self.phase[i] {
+                SPhase::UpCorr => self.stash[i].push((from, msg)),
+                SPhase::Tree => self.on_tree_message(r, from, msg, now),
+                SPhase::Done => {
+                    if r == self.root {
+                        if let Some(p) =
+                            self.pending_children[i].iter().position(|&c| c == from)
+                        {
+                            self.pending_children[i].swap_remove(p);
+                        }
+                    }
+                }
+            },
+            _ => {}
+        }
+    }
+
+    /// `UpCorrection::handle_message` (the kind check happened at the
+    /// dispatch above, exactly like the dense caller's match arm).
+    fn uc_handle_message(&mut self, r: Rank, from: Rank, msg: &Msg) -> bool {
+        let i = r as usize;
+        if let Some(p) = self.uc_pending[i].iter().position(|&q| q == from) {
+            self.uc_pending[i].swap_remove(p);
+            self.watch.unwatch(r, from);
+            let mut acc = std::mem::replace(&mut self.uc_value[i], Value::f64(Vec::new()));
+            self.reducer.combine(&mut acc, &msg.payload);
+            self.uc_value[i] = acc;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// `Reduce::on_tree_message`.
+    fn on_tree_message(&mut self, r: Rank, from: Rank, msg: Msg, now: TimeNs) {
+        let i = r as usize;
+        let p = match self.pending_children[i].iter().position(|&c| c == from) {
+            Some(p) => p,
+            None => return, // stray/duplicate
+        };
+        self.pending_children[i].swap_remove(p);
+        self.watch.unwatch(r, from);
+        if r == self.root {
+            self.root_child_result(from, msg, now);
+        } else {
+            let mut acc = self.acc[i].take().expect("tree accumulator");
+            self.reducer.combine(&mut acc, &msg.payload);
+            self.acc[i] = Some(acc);
+            self.finfo[i].merge_child(&msg.finfo);
+        }
+        self.maybe_finish_tree(r, now);
+    }
+
+    /// `Reduce::root_child_result`.
+    fn root_child_result(&mut self, from: Rank, msg: Msg, now: TimeNs) {
+        self.report_root.extend_from_slice(msg.finfo.known_failed());
+        if self.delivered_root {
+            return; // already selected; keep consuming
+        }
+        let k = self.tree.subtree_of(self.map.to_virtual(from));
+        let f1 = self.f + 1;
+        let map = self.map;
+        let in_subtree = |r: Rank| {
+            let v = map.to_virtual(r);
+            v >= 1 && (v - 1) % f1 == k - 1
+        };
+        if !msg.finfo.subtree_valid(in_subtree) {
+            return; // failure in this subtree; wait for another
+        }
+        let complete = self.groups.root_in_group() && k <= self.groups.a() - 1;
+        let mut value = msg.payload;
+        if !complete {
+            let nu = self.uc_value[self.root as usize].clone();
+            self.reducer.combine(&mut value, &nu);
+        }
+        self.delivered_root = true;
+        let mut known_failed = std::mem::take(&mut self.report_root);
+        known_failed.sort_unstable();
+        known_failed.dedup();
+        self.deliver(self.root, now, Outcome::ReduceRoot { value, known_failed });
+    }
+
+    /// `Reduce::on_peer_failed` (+ `UpCorrection::handle_peer_failed`).
+    fn on_peer_failed(&mut self, r: Rank, peer: Rank, now: TimeNs) {
+        let i = r as usize;
+        let uc_hit = match self.uc_pending[i].iter().position(|&q| q == peer) {
+            Some(p) => {
+                self.uc_pending[i].swap_remove(p);
+                self.uc_detected[i].push(peer);
+                true
+            }
+            None => false,
+        };
+        if uc_hit && self.phase[i] == SPhase::UpCorr && self.uc_is_done(r) {
+            self.enter_tree_phase(r, now);
+        }
+        if self.phase[i] == SPhase::Tree {
+            if let Some(p) = self.pending_children[i].iter().position(|&c| c == peer) {
+                self.pending_children[i].swap_remove(p);
+                self.finfo[i].record_tree_failure(peer);
+                if r == self.root {
+                    self.report_root.push(peer);
+                }
+                self.maybe_finish_tree(r, now);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsupported_configurations_fall_back() {
+        // tracing forces the dense engine
+        assert!(run_reduce_sparse(&SimConfig::new(8, 1).tracing(true)).is_none());
+        // non-pre failures force the dense engine
+        let cfg = SimConfig::new(8, 1).failure(FailureSpec::AfterSends { rank: 3, sends: 1 });
+        assert!(run_reduce_sparse(&cfg).is_none());
+        // a failure plan touching the root forces the dense engine
+        let cfg = SimConfig::new(8, 1).root(2).failure(FailureSpec::Pre { rank: 2 });
+        assert!(run_reduce_sparse(&cfg).is_none());
+        // segmented/pipelined runs force the dense engine
+        assert!(run_reduce_sparse(&SimConfig::new(8, 1).segment_bytes(64)).is_none());
+    }
+
+    #[test]
+    fn clean_reduce_sums_ranks_on_the_sparse_engine() {
+        for n in [1u32, 2, 3, 7, 8, 16, 33] {
+            for f in [0u32, 1, 2, 3] {
+                let rep = run_reduce_sparse(&SimConfig::new(n, f)).expect("supported");
+                let expect: f64 = (0..n).map(|r| r as f64).sum();
+                assert_eq!(rep.root_value().expect("root value").as_f64_scalar(), expect);
+                for r in 0..n {
+                    assert_eq!(rep.deliveries_at(r), 1, "rank {r} n={n} f={f}");
+                }
+            }
+        }
+    }
+}

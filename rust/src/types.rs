@@ -425,6 +425,11 @@ pub mod segment {
     /// abort in every profile.
     pub fn seg_op(base: u64, seg: u32) -> u64 {
         assert!((seg as u64) < LOW_MASK, "segment index {seg} overflows framing");
+        // the shift must not drop high bits of `base` either: with double
+        // framing (rsag inner ops are re-framed bases) plus session epoch
+        // bands, a large base would silently wrap into — and alias —
+        // another operation's op id
+        assert!(base <= u64::MAX >> SEG_BITS, "base op id {base} overflows framing");
         (base << SEG_BITS) | (seg as u64 + 1)
     }
 
@@ -442,6 +447,26 @@ pub mod segment {
     /// The base operation id encoded in `op`.
     pub fn base_op(op: u64) -> u64 {
         op >> SEG_BITS
+    }
+
+    /// Combined band × segment × block bit-budget check for *nested* op-id
+    /// framing: `framed_levels` framing shifts consume
+    /// `SEG_BITS * framed_levels` high bits, so `base` must fit in the
+    /// remaining `64 - SEG_BITS * framed_levels` bits — otherwise some
+    /// [`seg_op`] along the chain would wrap and alias another
+    /// operation's op id. Checked once at
+    /// [`crate::runtime::RunSpec::validate`] time (and enforced per-call
+    /// by the hard assert in [`seg_op`]), so misconfigured epoch bands
+    /// fail before any message is framed.
+    pub fn check_budget(base: u64, framed_levels: u32) -> Result<(), String> {
+        let need = SEG_BITS * framed_levels;
+        if need >= 64 || base > (u64::MAX >> need) {
+            return Err(format!(
+                "op id framing limit: base op id {base} does not fit in \
+                 {SEG_BITS}-bit framing x {framed_levels} level(s)"
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -744,6 +769,37 @@ mod tests {
         assert_eq!(parts[0].inclusion_counts(), &[1, 2]);
         assert_eq!(parts[2].inclusion_counts(), &[5, 6]);
         assert_eq!(parent.inclusion_counts(), &[1, 2, 3, 4, 5, 6]);
+    }
+
+    /// Regression (PR 6): a base op id whose high bits would be shifted
+    /// out must abort, not alias — exact boundary on both sides.
+    #[test]
+    fn seg_op_accepts_the_largest_unshifted_base() {
+        let base = u64::MAX >> segment::SEG_BITS;
+        let op = segment::seg_op(base, 0);
+        assert_eq!(segment::base_op(op), base);
+        assert_eq!(segment::seg_index(op), Some(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows framing")]
+    fn seg_op_base_overflow_is_a_hard_error() {
+        segment::seg_op((u64::MAX >> segment::SEG_BITS) + 1, 0);
+    }
+
+    #[test]
+    fn framing_bit_budget_boundary() {
+        // single framing level: exactly the seg_op bound
+        assert!(segment::check_budget(u64::MAX >> segment::SEG_BITS, 1).is_ok());
+        assert!(segment::check_budget((u64::MAX >> segment::SEG_BITS) + 1, 1).is_err());
+        // double framing (rsag inner ops over an epoch band): 40 bits
+        assert!(segment::check_budget(u64::MAX >> 40, 2).is_ok());
+        let err = segment::check_budget((u64::MAX >> 40) + 1, 2).unwrap_err();
+        assert!(err.contains("framing limit"), "{err}");
+        // zero levels: any base is fine
+        assert!(segment::check_budget(u64::MAX, 0).is_ok());
+        // a shift of >= 64 bits never fits, whatever the base
+        assert!(segment::check_budget(0, 4).is_err());
     }
 
     #[test]

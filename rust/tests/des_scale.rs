@@ -1,0 +1,183 @@
+//! Dense ↔ sparse engine differentials (docs/SCALE.md).
+//!
+//! The sparse engine (`ftcoll::sim::sparse`) is a compact replica of
+//! the dense per-rank DES: same events at the same callback points in
+//! the same `(t, seq)` order. These tests pin that collapsing the
+//! per-rank processes into SoA lanes changes *no observable*: every
+//! delivered outcome (values, failure reports), the full metrics block
+//! (per-kind message/byte counters, per-rank sent bytes, completion
+//! times, absorbed sends, event count), the final virtual time, the
+//! dead set and the abort record must be bit-identical at every
+//! small-n scenario family the sparse class covers — so the large-n
+//! campaign axis can trust the sparse results without ever running the
+//! dense engine at that scale.
+
+use ftcoll::collectives::failure_info::Scheme;
+use ftcoll::collectives::ReduceOp;
+use ftcoll::config::PayloadKind;
+use ftcoll::failure::FailureSpec;
+use ftcoll::prng::Pcg;
+use ftcoll::sim::net::NetModel;
+use ftcoll::sim::{self, SimConfig};
+
+/// Run `cfg` on both engines and require bit-identical reports.
+fn assert_identical(cfg: &SimConfig, label: &str) {
+    let sparse = ftcoll::sim::sparse::run_reduce_sparse(cfg)
+        .unwrap_or_else(|| panic!("{label}: config unexpectedly outside the sparse class"));
+    let dense = sim::run_reduce(cfg);
+    assert_eq!(sparse.n, dense.n, "{label}: n");
+    assert_eq!(sparse.dead, dense.dead, "{label}: dead set");
+    assert_eq!(sparse.aborted, dense.aborted, "{label}: abort record");
+    assert_eq!(sparse.final_time, dense.final_time, "{label}: final time");
+    assert_eq!(sparse.outcomes, dense.outcomes, "{label}: outcomes");
+    assert_eq!(sparse.metrics, dense.metrics, "{label}: metrics");
+}
+
+#[test]
+fn clean_reduces_are_bit_identical() {
+    for n in [1u32, 2, 3, 4, 7, 8, 9, 16, 17, 33, 64] {
+        for f in [0u32, 1, 2, 3, 5] {
+            let cfg = SimConfig::new(n, f);
+            assert_identical(&cfg, &format!("clean n={n} f={f}"));
+        }
+    }
+}
+
+#[test]
+fn nets_schemes_payloads_ops_are_bit_identical() {
+    for net in [NetModel::hpc(), NetModel::lan(), NetModel::unit()] {
+        for scheme in [Scheme::List, Scheme::CountBit, Scheme::Bit] {
+            let cfg = SimConfig::new(19, 2).net(net).scheme(scheme);
+            assert_identical(&cfg, &format!("net={} scheme={scheme:?}", net.latency));
+        }
+    }
+    for payload in
+        [PayloadKind::RankValue, PayloadKind::OneHot, PayloadKind::VectorF32 { len: 48 }]
+    {
+        for op in [ReduceOp::Sum, ReduceOp::Max] {
+            let cfg = SimConfig::new(21, 3).payload(payload).op(op);
+            assert_identical(&cfg, &format!("payload={payload:?} op={op:?}"));
+        }
+    }
+}
+
+#[test]
+fn pre_operational_failures_are_bit_identical() {
+    // seeded sweep over dead sets drawn like the campaign's pre family
+    let mut rng = Pcg::new(0xd5_5ca1e);
+    for n in [8u32, 15, 16, 31, 48] {
+        for f in [1u32, 2, 4] {
+            let k = rng.range(1, f as u64) as usize;
+            let failures: Vec<FailureSpec> = rng
+                .choose_distinct((n - 1) as u64, k)
+                .into_iter()
+                .map(|i| FailureSpec::Pre { rank: i as u32 + 1 })
+                .collect();
+            let label = format!("pre n={n} f={f} {failures:?}");
+            let cfg = SimConfig::new(n, f).failures(failures);
+            assert_identical(&cfg, &label);
+        }
+    }
+}
+
+#[test]
+fn prefix_kills_and_short_groups_are_bit_identical() {
+    // the bign rootkill family: dead prefix right of the root; n values
+    // chosen so a() sweeps 1..=f+1 (short-group shapes included)
+    for n in [10u32, 11, 12, 13, 14] {
+        for k in [1u32, 2, 3] {
+            let failures = (1..=k).map(|rank| FailureSpec::Pre { rank }).collect();
+            let cfg = SimConfig::new(n, 3).failures(failures);
+            assert_identical(&cfg, &format!("rootkill n={n} k={k}"));
+        }
+    }
+}
+
+#[test]
+fn nonzero_roots_exercise_the_virtual_rank_map_identically() {
+    for root in [1u32, 7, 15] {
+        let cfg = SimConfig::new(16, 2).root(root).failure(FailureSpec::Pre { rank: 3 });
+        assert_identical(&cfg, &format!("root={root}"));
+    }
+}
+
+#[test]
+fn detect_latency_sweep_is_bit_identical() {
+    for d in [1u64, 500, 10_000, 100_000] {
+        let cfg = SimConfig::new(24, 3)
+            .detect_latency(d)
+            .failures(vec![FailureSpec::Pre { rank: 5 }, FailureSpec::Pre { rank: 6 }]);
+        assert_identical(&cfg, &format!("detect={d}"));
+    }
+}
+
+#[test]
+fn event_cap_aborts_identically() {
+    let mut cfg = SimConfig::new(16, 2);
+    cfg.max_events = 25;
+    let sparse = ftcoll::sim::sparse::run_reduce_sparse(&cfg).expect("in class");
+    let dense = sim::run_reduce(&cfg);
+    let ab = sparse.aborted.expect("cap must trip");
+    assert_eq!(ab.events, 25);
+    assert_eq!(sparse.aborted, dense.aborted);
+    assert_eq!(sparse.metrics, dense.metrics);
+    assert_eq!(sparse.outcomes, dense.outcomes);
+}
+
+/// The escape hatch: configurations outside the compact-replica class
+/// are refused by the sparse engine, and `run_reduce_auto` falls back
+/// to (and exactly equals) the dense engine.
+#[test]
+fn unsupported_classes_fall_back_to_dense() {
+    let traced = SimConfig::new(8, 1).tracing(true);
+    let in_op = SimConfig::new(8, 1).failure(FailureSpec::AfterSends { rank: 3, sends: 1 });
+    let timed = SimConfig::new(8, 1).failure(FailureSpec::AtTime { rank: 3, at: 50 });
+    let dead_root = SimConfig::new(8, 1).root(2).failure(FailureSpec::Pre { rank: 2 });
+    let segmented = SimConfig::new(8, 1)
+        .payload(PayloadKind::VectorF32 { len: 64 })
+        .segment_bytes(64);
+    let session = SimConfig::new(8, 1).session_ops(3);
+    for (cfg, label) in [
+        (&traced, "traced"),
+        (&in_op, "in-op failure"),
+        (&timed, "timed failure"),
+        (&dead_root, "root kill"),
+        (&segmented, "segmented"),
+        (&session, "session"),
+    ] {
+        assert!(
+            ftcoll::sim::sparse::run_reduce_sparse(cfg).is_none(),
+            "{label}: must fall back to the dense engine"
+        );
+    }
+    // auto = dense for an out-of-class config
+    let auto = sim::run_reduce_auto(&in_op);
+    let dense = sim::run_reduce(&in_op);
+    assert_eq!(auto.outcomes, dense.outcomes);
+    assert_eq!(auto.metrics, dense.metrics);
+}
+
+/// Tier-1 scale smoke: a clean corrected reduce at n = 10^5 completes
+/// on the sparse engine with the exact fold and one delivery per rank.
+#[test]
+fn hundred_thousand_rank_clean_reduce_smoke() {
+    let n: u32 = 100_000;
+    let cfg = SimConfig::new(n, 2).net(NetModel::unit());
+    let rep = sim::run_reduce_auto(&cfg);
+    assert!(rep.aborted.is_none());
+    assert_eq!(rep.delivered_ranks().len(), n as usize);
+    let root_value = match &rep.outcomes[0][0] {
+        ftcoll::collectives::Outcome::ReduceRoot { value, known_failed } => {
+            assert!(known_failed.is_empty());
+            value.as_f64_scalar()
+        }
+        other => panic!("root outcome {other:?}"),
+    };
+    let expect = (u64::from(n) * (u64::from(n) - 1) / 2) as f64;
+    assert_eq!(root_value, expect);
+    // Theorem 5 failure-free counts hold at scale
+    assert_eq!(
+        rep.metrics.msgs(ftcoll::types::MsgKind::TreeUp),
+        u64::from(n) - 1
+    );
+}
