@@ -1,0 +1,120 @@
+//! Three-way allreduce comparison: corrected reduce+broadcast (tree)
+//! vs reduce-scatter/allgather (rsag) vs the corrected butterfly
+//! (docs/BUTTERFLY.md) on the 1 MiB / lan / n=64 allreduce.
+//!
+//! The butterfly fuses the two rsag sweeps into log2(n') halving plus
+//! log2(n') doubling rounds between *correction groups*, so its message
+//! count is O(n log n) where rsag — which runs one complete corrected
+//! allreduce per block — is O(n^2). Bytes stay balanced: both algorithms
+//! move ~Theta(P) per rank, so `max_rank_sent_bytes` must not regress.
+//! Both quantities come off the deterministic DES, so the two gates
+//! (ISSUE 7) are semantics pins, not flaky perf tests, and run in every
+//! mode including the FTCOLL_BENCH_FAST CI smoke:
+//!
+//!   1. butterfly total messages at least 2x below rsag's, and
+//!   2. butterfly `max_rank_sent_bytes` within 10% of rsag's.
+
+use ftcoll::benchlib::write_table;
+use ftcoll::prelude::*;
+
+const MIB: u32 = 262_144; // 1 MiB of f32
+
+/// Run one DES allreduce; return (total msgs, max per-rank sent bytes,
+/// total bytes, makespan ns).
+fn measure(cfg: &SimConfig) -> (u64, u64, u64, u64) {
+    let rep = run_allreduce(cfg);
+    let makespan = rep.makespan().expect("allreduce did not complete");
+    (
+        rep.metrics.total_msgs(),
+        rep.metrics.max_rank_sent_bytes(),
+        rep.metrics.total_bytes(),
+        makespan,
+    )
+}
+
+fn main() {
+    let fast = std::env::var("FTCOLL_BENCH_FAST").is_ok();
+
+    // (label, n, f, len_f32); the 1 MiB/lan n=64 f=1 row is the gate
+    let configs: &[(&str, u32, u32, u32)] = if fast {
+        &[("n64f1", 64, 1, MIB)]
+    } else {
+        &[
+            ("n64f1", 64, 1, MIB),
+            ("n64f2", 64, 2, MIB),
+            ("n32f1", 32, 1, MIB),
+            ("n61f1", 61, 1, MIB), // non-power-of-two group count
+            ("n64f1-256K", 64, 1, 65_536),
+        ]
+    };
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut gate: Option<[(u64, u64); 2]> = None;
+    for &(label, n, f, len) in configs {
+        let tree_cfg = SimConfig::new(n, f)
+            .payload(PayloadKind::VectorF32 { len })
+            .net(NetModel::lan());
+        let rsag_cfg = tree_cfg.clone().allreduce_algo(AllreduceAlgo::Rsag);
+        let bfly_cfg = tree_cfg.clone().allreduce_algo(AllreduceAlgo::Butterfly);
+        let (tree_msgs, tree_max, _, tree_ns) = measure(&tree_cfg);
+        let (rsag_msgs, rsag_max, _, rsag_ns) = measure(&rsag_cfg);
+        let (bfly_msgs, bfly_max, _, bfly_ns) = measure(&bfly_cfg);
+        println!(
+            "allreduce/lan/{}B/{label}: msgs {tree_msgs} (tree) / {rsag_msgs} (rsag) / \
+             {bfly_msgs} (bfly); per-rank max {} KiB (tree) / {} KiB (rsag) / {} KiB (bfly)",
+            4 * len as usize,
+            tree_max / 1024,
+            rsag_max / 1024,
+            bfly_max / 1024,
+        );
+        println!(
+            "    makespans: tree {tree_ns} ns; rsag {rsag_ns} ns; bfly {bfly_ns} ns"
+        );
+        rows.push(format!(
+            "{label},{n},{f},{len},{tree_msgs},{rsag_msgs},{bfly_msgs},\
+             {tree_max},{rsag_max},{bfly_max},{tree_ns},{rsag_ns},{bfly_ns}"
+        ));
+        if label == "n64f1" && len == MIB {
+            gate = Some([(rsag_msgs, rsag_max), (bfly_msgs, bfly_max)]);
+        }
+    }
+    write_table(
+        "bench_butterfly",
+        "config,n,f,len_f32,tree_msgs,rsag_msgs,bfly_msgs,\
+         tree_max_rank_bytes,rsag_max_rank_bytes,bfly_max_rank_bytes,\
+         tree_ns,rsag_ns,bfly_ns",
+        &rows,
+    );
+
+    // acceptance gates (ISSUE 7), both on the 1 MiB/lan n=64 f=1 row
+    let [(rsag_msgs, rsag_max), (bfly_msgs, bfly_max)] =
+        gate.expect("1 MiB gate row present");
+    assert!(
+        bfly_msgs * 2 <= rsag_msgs,
+        "butterfly sent {bfly_msgs} msgs — not at least 2x below rsag's \
+         {rsag_msgs} on 1 MiB/lan n=64"
+    );
+    assert!(
+        bfly_max * 10 <= rsag_max * 11,
+        "butterfly per-rank bottleneck {bfly_max} B exceeds rsag's \
+         {rsag_max} B by more than 10% on 1 MiB/lan n=64"
+    );
+    let msg_ratio = rsag_msgs as f64 / bfly_msgs.max(1) as f64;
+    let byte_ratio = bfly_max as f64 / rsag_max.max(1) as f64;
+
+    // machine-readable gate record (hand-rolled: no serde in-tree)
+    let json = format!(
+        "{{\"bench\":\"butterfly\",\"n\":64,\"f\":1,\"payload_bytes\":{},\
+         \"rsag_msgs\":{rsag_msgs},\"bfly_msgs\":{bfly_msgs},\
+         \"rsag_max_rank_bytes\":{rsag_max},\"bfly_max_rank_bytes\":{bfly_max},\
+         \"msg_ratio\":{msg_ratio:.3},\"byte_ratio\":{byte_ratio:.3},\
+         \"gate_msg_ratio_min\":2.0,\"gate_byte_ratio_max\":1.1,\"pass\":true}}\n",
+        4 * MIB as u64,
+    );
+    std::fs::write("BENCH_butterfly.json", &json).expect("write BENCH_butterfly.json");
+    println!("wrote BENCH_butterfly.json");
+    println!(
+        "acceptance: butterfly {msg_ratio:.1}x fewer msgs than rsag, per-rank \
+         bytes at {byte_ratio:.2}x rsag (gates: >= 2x, <= 1.1x) on 1 MiB/lan n=64"
+    );
+}

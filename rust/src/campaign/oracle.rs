@@ -38,8 +38,19 @@
 //!   `1 + longest cyclic run of dead ranks` (`rsag_expected_attempts`
 //!   below), exact because the rsag axis draws pre-operational plans
 //!   only.
+//! * **Butterfly laws (docs/BUTTERFLY.md)** — `-bfly` scenarios
+//!   deliver `attempts == 1` under *every* pattern (the butterfly
+//!   never rotates; RootKill is absorbed by group 0's survivors), and
+//!   replace the Thm 7 multiplier with per-round counts: clean runs
+//!   hit the closed form per message kind exactly (round-0 replication
+//!   `Σ L(L−1)`, `log₂ n'` halving and doubling rounds of one window
+//!   per member, plus the remainder folds), and failure runs stay
+//!   within a per-death publication/pull slack of it
+//!   (`bfly_failure_slack`) — failures cost correction traffic, never
+//!   restarts.
 
 use super::spec::{Collective, FailurePattern, ScenarioSpec};
+use crate::collectives::butterfly::ButterflyConfig;
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::rsag::AllreduceAlgo;
 use crate::collectives::{Outcome, ReduceOp};
@@ -179,6 +190,9 @@ pub fn check(spec: &ScenarioSpec, rep: &RunReport, base: &Baseline) -> OracleRep
                 format!("tree msgs {tree} exceed failure-free {}", base.tree_msgs)
             });
         }
+        Collective::Allreduce if spec.allreduce_algo == AllreduceAlgo::Butterfly => {
+            check_bfly_counts(spec, rep, &mut o);
+        }
         Collective::Allreduce => {
             let bound = (spec.f as u64 + 1) * base.total_msgs;
             o.check(total <= bound, || {
@@ -265,6 +279,103 @@ fn check_bign_counts(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport)
     });
 }
 
+/// Closed-form failure-free per-kind counts of a corrected butterfly
+/// (docs/BUTTERFLY.md): `(UpCorrection, BflyHalve, BflyDouble)`.
+/// Round 0 replicates every member's input to every group sibling
+/// (`Σ_j L_j(L_j−1)` UpCorrection messages, no STAT traffic without
+/// deaths). Each of the `k = log₂ n'` halving rounds delivers exactly
+/// one window to every member of the `n'` butterfly groups (`N_b`
+/// messages per round — the sender side partitions the partner group,
+/// one sender per target), plus one fold-in per member of each fold
+/// *target* group; the doubling half mirrors that with one fold-out
+/// per member of each fold *source* group.
+fn bfly_clean_counts(n: u32, f: u32) -> (u64, u64, u64) {
+    let cfg = ButterflyConfig::new(n, f);
+    let m = cfg.num_groups();
+    let np = cfg.butterfly_groups();
+    let k = u64::from(cfg.rounds());
+    let size = |j: u32| -> u64 {
+        let r = cfg.members_of(j);
+        u64::from(r.end - r.start)
+    };
+    let upcorr: u64 = (0..m).map(|j| size(j) * (size(j) - 1)).sum();
+    let nb: u64 = (0..np).map(size).sum();
+    let fold_targets: u64 = (np..m).map(|j| size(j - np)).sum();
+    let fold_sources: u64 = (np..m).map(size).sum();
+    (upcorr, k * nb + fold_targets, k * nb + fold_sources)
+}
+
+/// Per-death message slack of a butterfly run with `d` dead ranks:
+/// `(publication, pull)`. Each death makes every live sibling publish
+/// at most twice (`STAT_NONE` then a relay upgrade), `L−1` sends each
+/// — the publication half, counted as UpCorrection. Each death can
+/// also block round receivers, who broadcast a `REQ` to the dead
+/// sender's whole group per expected-sender escalation and collect up
+/// to one answer per live member — the pull half, counted under the
+/// pulled frame's kind. Both formulas are deliberately generous upper
+/// bounds (wrap-around escalations included): the law being pinned is
+/// that failures cost group-local correction traffic, not an explosion
+/// or a restart.
+fn bfly_failure_slack(n: u32, f: u32, d: u64) -> (u64, u64) {
+    let cfg = ButterflyConfig::new(n, f);
+    let last = cfg.members_of(cfg.num_groups() - 1);
+    let lmax = u64::from(last.end - last.start).max(u64::from(cfg.group_size()));
+    let k = u64::from(cfg.rounds());
+    (d * 2 * lmax * lmax, d * (k + 2) * 4 * lmax * lmax)
+}
+
+/// The butterfly message-count law (replaces the Thm 7 multiplier for
+/// `-bfly` scenarios — the butterfly never rotates): no tree or
+/// broadcast traffic at all; without deaths every kind hits the closed
+/// form exactly; with deaths every kind stays within the
+/// publication/pull slack of it.
+fn check_bfly_counts(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport) {
+    let (upcorr_cf, halve_cf, double_cf) = bfly_clean_counts(spec.n, spec.f);
+    let m = &rep.metrics;
+    let upcorr = m.msgs(MsgKind::UpCorrection);
+    let halve = m.msgs(MsgKind::BflyHalve);
+    let double = m.msgs(MsgKind::BflyDouble);
+    o.check(
+        m.msgs(MsgKind::TreeUp) == 0
+            && m.msgs(MsgKind::BcastTree) == 0
+            && m.msgs(MsgKind::BcastCorrection) == 0,
+        || "butterfly run sent tree/broadcast traffic".to_string(),
+    );
+    let d = rep.dead.len() as u64;
+    if d == 0 {
+        // no deaths ⇒ no STAT publications and no REQ pulls: exact
+        o.check(upcorr == upcorr_cf, || {
+            format!("bfly: {upcorr} replication msgs, closed form {upcorr_cf}")
+        });
+        o.check(halve == halve_cf, || {
+            format!("bfly: {halve} halving msgs, closed form {halve_cf}")
+        });
+        o.check(double == double_cf, || {
+            format!("bfly: {double} doubling msgs, closed form {double_cf}")
+        });
+    } else {
+        let (pub_slack, req_slack) = bfly_failure_slack(spec.n, spec.f, d);
+        o.check(upcorr <= upcorr_cf + pub_slack, || {
+            format!(
+                "bfly: {upcorr} replication msgs exceed closed form {upcorr_cf} \
+                 + publication slack {pub_slack}"
+            )
+        });
+        o.check(halve <= halve_cf + req_slack, || {
+            format!(
+                "bfly: {halve} halving msgs exceed closed form {halve_cf} \
+                 + pull slack {req_slack}"
+            )
+        });
+        o.check(double <= double_cf + req_slack, || {
+            format!(
+                "bfly: {double} doubling msgs exceed closed form {double_cf} \
+                 + pull slack {req_slack}"
+            )
+        });
+    }
+}
+
 fn check_reduce(
     spec: &ScenarioSpec,
     rep: &RunReport,
@@ -336,8 +447,14 @@ fn check_allreduce(
     pre: &HashSet<Rank>,
     o: &mut OracleReport,
 ) {
-    let rsag_expect = (spec.allreduce_algo == AllreduceAlgo::Rsag)
-        .then(|| rsag_expected_attempts(spec.n, pre));
+    // algo-fixed attempt laws: rsag delivers the longest dead cyclic
+    // owner run + 1; the butterfly never rotates — 1 under every
+    // pattern, RootKill included (docs/BUTTERFLY.md)
+    let algo_expect = match spec.allreduce_algo {
+        AllreduceAlgo::Rsag => Some(rsag_expected_attempts(spec.n, pre)),
+        AllreduceAlgo::Butterfly => Some(1),
+        AllreduceAlgo::Tree => None,
+    };
     let mut first: Option<(&Value, u32)> = None;
     for r in 0..spec.n {
         for out in &rep.outcomes[r as usize] {
@@ -346,11 +463,12 @@ fn check_allreduce(
                     o.check(*attempts <= spec.f + 1, || {
                         format!("rank {r}: {attempts} attempts exceed f+1={}", spec.f + 1)
                     });
-                    if let Some(expect) = rsag_expect {
+                    if let Some(expect) = algo_expect {
                         o.check(*attempts == expect, || {
                             format!(
                                 "rank {r}: {attempts} attempts, want {expect} \
-                                 (rsag longest dead owner run)"
+                                 ({} attempt law)",
+                                spec.allreduce_algo.name()
                             )
                         });
                     } else if let FailurePattern::RootKill { k } = spec.pattern {
@@ -501,10 +619,27 @@ fn check_session(
         }
     }
 
+    // butterfly sessions: every epoch delivers in exactly one attempt
+    // under every pattern — dead group-0 prefixes are paid for by the
+    // sync-root hint, never by rotation (docs/BUTTERFLY.md)
+    if spec.allreduce_algo == AllreduceAlgo::Butterfly {
+        for (e, slot) in per_epoch_ar.iter().enumerate() {
+            if let Some((_, a)) = slot {
+                o.check(*a == 1, || {
+                    format!("epoch {e}: {a} attempts — the butterfly never rotates")
+                });
+            }
+        }
+    }
+
     // the self-healing claim: exclusion of the dead candidates makes
     // every post-RootKill epoch a single-attempt run (uniform
-    // allreduce sessions only — RootKill is never generated for -mix)
-    if spec.ops_list.is_none() && spec.collective == Collective::Allreduce {
+    // allreduce sessions only — RootKill is never generated for -mix;
+    // butterfly sessions are covered by the stricter clause above)
+    if spec.allreduce_algo != AllreduceAlgo::Butterfly
+        && spec.ops_list.is_none()
+        && spec.collective == Collective::Allreduce
+    {
         if let FailurePattern::RootKill { k: killed } = spec.pattern {
             if let Some((_, a0)) = per_epoch_ar[0] {
                 o.check(a0 == killed + 1, || {
@@ -589,7 +724,16 @@ fn check_session_msg_bounds(
     let total = rep.metrics.total_msgs();
     match spec.collective {
         Collective::Allreduce => {
-            let bound = (spec.f as u64 + 1) * base.total_msgs;
+            // butterfly epochs never rotate, but dead members cost
+            // publication/pull correction traffic in every epoch they
+            // stay unexcluded — grant the per-epoch slack on top
+            let slack = if spec.allreduce_algo == AllreduceAlgo::Butterfly {
+                let (p, q) = bfly_failure_slack(spec.n, spec.f, rep.dead.len() as u64);
+                u64::from(spec.session_ops) * (p + 2 * q)
+            } else {
+                0
+            };
+            let bound = (spec.f as u64 + 1) * base.total_msgs + slack;
             o.check(total <= bound, || {
                 format!("session msgs {total} exceed the (f+1)-fold bound {bound}")
             });
@@ -705,5 +849,44 @@ fn check_combined_value(
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The butterfly closed form against hand-walked topologies.
+    #[test]
+    fn bfly_clean_counts_hand_checked() {
+        // n=8, f=1: g=2, m=4, n'=4, k=2 — no folds, every group width 2
+        assert_eq!(bfly_clean_counts(8, 1), (8, 16, 16));
+        // n=11, f=1: g=2, m=5, last group {8,9,10}, n'=4, k=2 — group 4
+        // folds into group 0 (fold-in: 2 target members; fold-out: 3
+        // source members)
+        assert_eq!(bfly_clean_counts(11, 1), (14, 18, 19));
+        // n=3, f=4: one group of three, no rounds — flat replication
+        assert_eq!(bfly_clean_counts(3, 4), (6, 0, 0));
+        // n=1: a single rank sends nothing
+        assert_eq!(bfly_clean_counts(1, 2), (0, 0, 0));
+    }
+
+    /// No deaths ⇒ no slack; slack scales linearly in the death count.
+    #[test]
+    fn bfly_slack_shape() {
+        assert_eq!(bfly_failure_slack(12, 2, 0), (0, 0));
+        let (p1, q1) = bfly_failure_slack(12, 2, 1);
+        let (p3, q3) = bfly_failure_slack(12, 2, 3);
+        assert!(p1 > 0 && q1 > 0);
+        assert_eq!((p3, q3), (3 * p1, 3 * q1));
+    }
+
+    /// The rsag attempt law helper: longest cyclic dead run + 1.
+    #[test]
+    fn rsag_attempts_cyclic_run() {
+        let pre: HashSet<Rank> = [0u32, 1, 7].into_iter().collect();
+        // ranks 7,0,1 form a cyclic run of 3 in n=8
+        assert_eq!(rsag_expected_attempts(8, &pre), 4);
+        assert_eq!(rsag_expected_attempts(8, &HashSet::new()), 1);
     }
 }

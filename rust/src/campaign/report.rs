@@ -44,11 +44,14 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         ),
         None => String::new(),
     };
-    // likewise, only rsag rows carry the decomposition field
+    // likewise, only rsag/butterfly rows carry the decomposition field
     let algo_field = match spec.allreduce_algo {
         crate::collectives::rsag::AllreduceAlgo::Tree => String::new(),
         crate::collectives::rsag::AllreduceAlgo::Rsag => {
             "\"allreduce_algo\":\"rsag\",".to_string()
+        }
+        crate::collectives::rsag::AllreduceAlgo::Butterfly => {
+            "\"allreduce_algo\":\"butterfly\",".to_string()
         }
     };
     // cap aborts are rare and always violations — only aborted rows
@@ -228,6 +231,26 @@ pub fn summary_table(result: &CampaignResult) -> String {
         "rsag: {rsag} reduce-scatter/allgather ({rsag_pass} passed) / {rsag_sess} sessions / \
          {rsag_seg} segmented"
     );
+    // corrected-butterfly split (docs/BUTTERFLY.md) — CI greps this
+    // line to catch the axis (and its storm/cascade coverage, which
+    // rsag cannot run) drifting out of the grid
+    let (mut bf, mut bf_pass, mut bf_inop, mut bf_seg) = (0u64, 0u64, 0u64, 0u64);
+    for (spec, sc) in specs.iter().zip(&result.scenarios) {
+        if spec.allreduce_algo == crate::collectives::rsag::AllreduceAlgo::Butterfly {
+            bf += 1;
+            bf_pass += sc.passed() as u64;
+            bf_inop += matches!(
+                spec.pattern.family(),
+                "storm" | "cascade" | "midpipe" | "spread"
+            ) as u64;
+            bf_seg += spec.segment_bytes.is_some() as u64;
+        }
+    }
+    let _ = writeln!(
+        out,
+        "bfly: {bf} butterfly ({bf_pass} passed) / {bf_inop} in-op-failure / \
+         {bf_seg} segmented"
+    );
     // large-n scale-out axis (docs/SCALE.md) — CI greps this line to
     // catch the axis drifting out of the sweep
     let (mut bn, mut bn_pass) = (0u64, 0u64);
@@ -279,6 +302,7 @@ mod tests {
         assert!(table.contains("split: "), "{table}");
         assert!(table.contains("sessions: "), "{table}");
         assert!(table.contains("rsag: "), "{table}");
+        assert!(table.contains("bfly: "), "{table}");
         assert!(table.contains("bign: 0 large-n (0 passed)"), "{table}");
         let line = table.lines().find(|l| l.starts_with("split: ")).unwrap();
         let nums: Vec<u64> = line

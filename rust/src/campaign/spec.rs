@@ -10,6 +10,7 @@
 //! the campaign. See docs/CAMPAIGN.md for the schema.
 
 use crate::collectives::broadcast::CorrectionMode;
+use crate::collectives::butterfly::ButterflyConfig;
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::rsag::AllreduceAlgo;
 use crate::collectives::ReduceOp;
@@ -187,9 +188,10 @@ pub struct ScenarioSpec {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic).
     pub segment_bytes: Option<u32>,
-    /// Allreduce decomposition axis (`-rsag` id suffix): the paper's
-    /// corrected reduce+broadcast, or reduce-scatter/allgather over
-    /// per-rank blocks (docs/RSAG.md). Always `Tree` for
+    /// Allreduce decomposition axis (`-rsag` / `-bfly` id suffixes):
+    /// the paper's corrected reduce+broadcast, reduce-scatter/allgather
+    /// over per-rank blocks (docs/RSAG.md), or the corrected butterfly
+    /// over correction groups (docs/BUTTERFLY.md). Always `Tree` for
     /// reduce/broadcast scenarios and mixed sessions.
     pub allreduce_algo: AllreduceAlgo,
     /// Operations per session: 1 = a single stand-alone collective,
@@ -428,19 +430,23 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         None
     };
 
-    // allreduce-algo axis (docs/RSAG.md): ~1 in 4 allreduce scenarios —
-    // stand-alone, segmented, or uniform sessions — run the
-    // reduce-scatter/allgather decomposition instead of the corrected
-    // reduce+broadcast. Mixed sessions stay tree (their reduce/broadcast
-    // epochs are the point there). Every rank is a candidate owner of
-    // some block under rsag, so those scenarios draw pre-operational
-    // failure plans only (§5.1's candidate assumption applied to every
-    // rank — see pick_pattern).
-    let allreduce_algo = if collective == Collective::Allreduce
-        && ops_list.is_none()
-        && rng.below(4) == 0
-    {
-        AllreduceAlgo::Rsag
+    // allreduce-algo axis (docs/RSAG.md, docs/BUTTERFLY.md): among
+    // allreduce scenarios — stand-alone, segmented, or uniform
+    // sessions — ~1/4 run the reduce-scatter/allgather decomposition
+    // and ~1/4 the corrected butterfly instead of the corrected
+    // reduce+broadcast. Mixed sessions stay tree (their
+    // reduce/broadcast epochs are the point there). Every rank is a
+    // candidate owner of some block under rsag, so those scenarios
+    // draw pre-operational failure plans only (§5.1's candidate
+    // assumption applied to every rank); the butterfly's group
+    // replication absorbs timed in-operation deaths too, so its
+    // pattern pool keeps storm/cascade/midpipe (see pick_pattern).
+    let allreduce_algo = if collective == Collective::Allreduce && ops_list.is_none() {
+        match rng.below(8) {
+            0 | 1 => AllreduceAlgo::Rsag,
+            2 | 3 => AllreduceAlgo::Butterfly,
+            _ => AllreduceAlgo::Tree,
+        }
     } else {
         AllreduceAlgo::Tree
     };
@@ -510,7 +516,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         segments,
         session_ops > 1,
         ops_list.is_some(),
-        allreduce_algo == AllreduceAlgo::Rsag,
+        allreduce_algo,
     );
     let failures = instantiate_pattern(
         &mut rng,
@@ -522,6 +528,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         net,
         segments,
         detect_latency,
+        allreduce_algo,
     );
     debug_assert!(crate::failure::validate_plan(n, &failures).is_ok());
     debug_assert!(failures.len() as u32 <= f);
@@ -529,6 +536,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
     let algo_label = match allreduce_algo {
         AllreduceAlgo::Tree => "",
         AllreduceAlgo::Rsag => "-rsag",
+        AllreduceAlgo::Butterfly => "-bfly",
     };
     let seg_label = match segment_bytes {
         None => String::new(),
@@ -680,6 +688,22 @@ fn victim_pool(collective: Collective, n: u32, f: u32, root: Rank) -> Vec<Rank> 
     }
 }
 
+/// The allreduce victim pool partitioned by butterfly correction group
+/// (docs/BUTTERFLY.md; width `f+1`, remainder folded into the last
+/// group), empty groups dropped. Butterfly mid-send (`AfterSends`)
+/// kills draw at most one victim per group — concurrent mid-send
+/// deaths are only exact across distinct groups — so the partition's
+/// length caps `k` for those patterns.
+fn bfly_pool_groups(n: u32, f: u32) -> Vec<Vec<Rank>> {
+    let cfg = ButterflyConfig::new(n, f);
+    let mut groups: Vec<Vec<Rank>> = vec![Vec::new(); cfg.num_groups() as usize];
+    for r in victim_pool(Collective::Allreduce, n, f, 0) {
+        groups[cfg.group_of(r) as usize].push(r);
+    }
+    groups.retain(|g| !g.is_empty());
+    groups
+}
+
 #[allow(clippy::too_many_arguments)]
 fn pick_pattern(
     rng: &mut Pcg,
@@ -690,7 +714,7 @@ fn pick_pattern(
     segments: u32,
     session: bool,
     mixed: bool,
-    rsag: bool,
+    algo: AllreduceAlgo,
 ) -> FailurePattern {
     let pool_len = victim_pool(collective, n, f, root).len() as u32;
     // Reduce (and allreduce's reduce half) finds a failure-free subtree
@@ -715,7 +739,7 @@ fn pick_pattern(
         0
     };
 
-    if rsag {
+    if algo == AllreduceAlgo::Rsag {
         // reduce-scatter/allgather: every rank is a candidate owner of
         // f+1 blocks, so only pre-operational plans keep the per-block
         // §5.1 agreement exact (docs/RSAG.md) — clean runs, random
@@ -724,6 +748,44 @@ fn pick_pattern(
         if kmax >= 1 {
             let k = rng.range(1, kmax as u64) as u32;
             options.push(FailurePattern::Pre { k });
+        }
+        if rootkill_max >= 1 {
+            let k = rng.range(1, rootkill_max as u64) as u32;
+            options.push(FailurePattern::RootKill { k });
+        }
+        if options.len() > 1 && rng.below(8) != 0 {
+            let i = rng.range(1, options.len() as u64 - 1) as usize;
+            return options[i];
+        }
+        return options[0];
+    }
+
+    if algo == AllreduceAlgo::Butterfly {
+        // corrected butterfly (docs/BUTTERFLY.md): group replication
+        // absorbs instant (timed) deaths anywhere, so — unlike rsag —
+        // storm, cascade and epoch-spread kills stay in the pool. The
+        // one class it cannot decide exactly is concurrent *mid-send*
+        // deaths inside the same correction group, so the send-count
+        // pattern (midpipe) draws one victim per group
+        // (bfly_pool_groups caps its k); RootKill pre-kills a prefix
+        // of group 0 and exercises the sync-root hint — the delivered
+        // attempt count stays 1 (the butterfly never rotates).
+        let mut options: Vec<FailurePattern> = vec![FailurePattern::None];
+        if kmax >= 1 {
+            let k = rng.range(1, kmax as u64) as u32;
+            options.push(FailurePattern::Pre { k });
+            options.push(FailurePattern::Storm { k: kmax });
+            let k = rng.range(1, kmax as u64) as u32;
+            options.push(FailurePattern::Cascade { k });
+            let spread_max = kmax.min(bfly_pool_groups(n, f).len() as u32);
+            if segments > 1 && spread_max >= 1 {
+                let k = rng.range(1, spread_max as u64) as u32;
+                options.push(FailurePattern::MidPipeline { k });
+            }
+            if session {
+                let k = rng.range(1, kmax as u64) as u32;
+                options.push(FailurePattern::EpochSpread { k });
+            }
         }
         if rootkill_max >= 1 {
             let k = rng.range(1, rootkill_max as u64) as u32;
@@ -789,6 +851,7 @@ fn instantiate_pattern(
     net: NetKind,
     segments: u32,
     detect_latency: TimeNs,
+    algo: AllreduceAlgo,
 ) -> Vec<FailureSpec> {
     let pool = victim_pool(collective, n, f, root);
     let pick_victims = |rng: &mut Pcg, k: u32| -> Vec<Rank> {
@@ -844,7 +907,22 @@ fn instantiate_pattern(
             // kill point across the whole pipeline's send range so the
             // death lands between segments s and s+1 for a varied s
             let span = (3 * segments).max(2) as u64;
-            pick_victims(rng, k)
+            let victims: Vec<Rank> = if algo == AllreduceAlgo::Butterfly {
+                // one victim per correction group: concurrent mid-send
+                // deaths are only exact across distinct groups
+                // (docs/BUTTERFLY.md §Failure semantics)
+                let groups = bfly_pool_groups(n, f);
+                rng.choose_distinct(groups.len() as u64, k as usize)
+                    .into_iter()
+                    .map(|gi| {
+                        let grp = &groups[gi as usize];
+                        grp[rng.below(grp.len() as u64) as usize]
+                    })
+                    .collect()
+            } else {
+                pick_victims(rng, k)
+            };
+            victims
                 .into_iter()
                 .map(|rank| FailureSpec::AfterSends {
                     rank,
@@ -1126,6 +1204,81 @@ mod tests {
                 assert_eq!(s.allreduce_algo, AllreduceAlgo::Tree, "{}", s.id);
             }
         }
+    }
+
+    #[test]
+    fn grid_covers_bfly_scenarios() {
+        let specs = generate(&GridConfig { count: 2000, seed: 7, max_n: 128, bign: 0 });
+        let bfly: Vec<_> = specs
+            .iter()
+            .filter(|s| s.allreduce_algo == AllreduceAlgo::Butterfly)
+            .collect();
+        assert!(
+            bfly.len() >= 60,
+            "only {} of 2000 scenarios are butterfly — axis drifted",
+            bfly.len()
+        );
+        for s in &bfly {
+            assert_eq!(s.collective, Collective::Allreduce, "{}", s.id);
+            assert!(s.ops_list.is_none(), "{}: mixed sessions stay tree", s.id);
+            assert!(s.id.contains("-bfly"), "{} lacks the -bfly label", s.id);
+            // unlike rsag, timed in-operation kills are in the pool —
+            // but mid-send (AfterSends) kills appear only under the
+            // midpipe pattern, one victim per correction group
+            assert!(
+                matches!(
+                    s.pattern,
+                    FailurePattern::None
+                        | FailurePattern::Pre { .. }
+                        | FailurePattern::Storm { .. }
+                        | FailurePattern::Cascade { .. }
+                        | FailurePattern::MidPipeline { .. }
+                        | FailurePattern::EpochSpread { .. }
+                        | FailurePattern::RootKill { .. }
+                ),
+                "{}: pattern {:?} not allowed for butterfly",
+                s.id,
+                s.pattern
+            );
+            let cfg = ButterflyConfig::new(s.n, s.f);
+            let mid_send: Vec<Rank> = s
+                .failures
+                .iter()
+                .filter(|fs| matches!(fs, FailureSpec::AfterSends { .. }))
+                .map(|fs| fs.rank())
+                .collect();
+            if !mid_send.is_empty() {
+                assert_eq!(s.pattern.family(), "midpipe", "{}", s.id);
+                let mut groups: Vec<u32> =
+                    mid_send.iter().map(|&r| cfg.group_of(r)).collect();
+                groups.sort_unstable();
+                groups.dedup();
+                assert_eq!(
+                    groups.len(),
+                    mid_send.len(),
+                    "{}: mid-send victims {mid_send:?} share a correction group",
+                    s.id
+                );
+            }
+            // non-RootKill victims spare group 0 (ranks 0..=f), so the
+            // sync root's group always keeps a committed member
+            if s.pattern.family() != "rootkill" {
+                for fs in &s.failures {
+                    assert!(fs.rank() > s.f, "{}: victim {} in group 0", s.id, fs.rank());
+                }
+            }
+            s.sim_config().validate().unwrap();
+        }
+        // the axis crosses failures, the timed in-op patterns rsag
+        // cannot run, sessions and segmentation
+        for fam in ["storm", "cascade", "midpipe", "rootkill"] {
+            assert!(
+                bfly.iter().any(|s| s.pattern.family() == fam),
+                "no butterfly scenario with a {fam} pattern in 2000"
+            );
+        }
+        assert!(bfly.iter().any(|s| s.is_session()), "no butterfly session scenario");
+        assert!(bfly.iter().any(|s| s.segment_bytes.is_some()), "no segmented butterfly");
     }
 
     #[test]

@@ -1,0 +1,1121 @@
+//! Corrected recursive-halving/doubling butterfly Allreduce over
+//! replicated correction groups (docs/BUTTERFLY.md).
+//!
+//! The paper's corrected reduce+broadcast (Algorithm 5) is
+//! latency-optimal but moves the whole payload through one root; the
+//! reduce-scatter/allgather decomposition ([`crate::collectives::rsag`])
+//! removes the bandwidth bottleneck but pays ~n× the message count
+//! (O(n) small per-block messages per rank) and inherits the §5.1
+//! in-operation-owner-death caveat per block. This module is the
+//! log-round construction ROADMAP item 1 calls for — the optimal
+//! non-pipelined butterfly of Träff (arXiv:2410.14234) with the paper's
+//! up-correction pass folded into each round's peer group, in the
+//! spirit of the pairwise redundancy of arXiv:2109.12626's dual-root
+//! scheme:
+//!
+//! * Ranks are partitioned into *correction groups* of `g = f+1`
+//!   consecutive ranks (the cyclic group `p..p+f` of §4.2, aligned);
+//!   the `n mod g` remainder ranks join the last group. **Round 0**
+//!   replicates every member's input to every group sibling and
+//!   combines the committed inputs in ascending member order, so all
+//!   members of a group hold the *bit-identical* partial sum — the
+//!   group as a whole survives any ≤ f failures.
+//! * The largest power of two `n' ≤ m` of the `m` groups then runs a
+//!   classic butterfly **on group nodes**: `log₂ n'` recursive-halving
+//!   rounds (reduce-scatter half) followed by `log₂ n'`
+//!   recursive-doubling rounds (allgather half), exchanging zero-copy
+//!   [`crate::types::Value::stride_blocks`] windows. The remaining
+//!   `m - n'` groups fold their sealed state into group `j - n'` after
+//!   round 0 (fold-in) and receive the finished vector back at the end
+//!   (fold-out) — the non-power-of-two fold.
+//! * Because every member of a group holds the same bits, a dead
+//!   round-peer never stalls an exchange: each receiver watches its
+//!   expected sender and, on a confirmed failure, *pulls* the round
+//!   payload from the dead peer's whole correction group (frame
+//!   `REQ`); any live member answers from its per-round send snapshot,
+//!   even after it delivered. That is the per-round correction of the
+//!   module title: correction groups heal rounds, not just the root.
+//!
+//! ## Round-0 agreement (the up-correction pass, per group)
+//!
+//! A member that dies *while distributing its input* may have reached
+//! only some siblings. On detecting a dead sibling `D`, every live
+//! member *publishes* what it holds of `D`'s input to the whole group
+//! (`STAT_SOME(D)` carrying the value, or `STAT_NONE(D)`), and — once
+//! it has published `STAT_NONE` — never adopts a late direct copy:
+//! inclusion of `D` can then only happen through a published copy,
+//! which by construction reaches every live member. A member whose
+//! knowledge upgrades from none to some re-publishes once (relay).
+//! `D` is *excluded* only when every live sibling published `NONE`.
+//! For process-crash failures injected at an instant (the campaign's
+//! storm/cascade patterns) publications are handler-atomic and this
+//! decision is exact at every member with no timing assumption; see
+//! docs/BUTTERFLY.md §Failure semantics for the one residual class
+//! (≥ 2 mid-send deaths inside the *same* group).
+//!
+//! ## Sessions
+//!
+//! The session layer needs a membership-sync root all survivors agree
+//! on. The butterfly's is *the lowest committed member of group 0*
+//! (`h`): group 0 learns it at its round-0 seal, and every message of
+//! the allgather half whose window contains block 0 piggybacks `h` on
+//! its wire epoch (`base_epoch + h`, inside the same `f+2` session
+//! band an ordinary allreduce claims), so by delivery every rank knows
+//! it ([`CorrectedButterfly::sync_attempts`]).
+
+use super::failure_info::FailureInfo;
+use super::{Ctx, Outcome, Protocol};
+use crate::types::{segment, Msg, MsgKind, Rank, Value};
+use std::collections::HashMap;
+
+/// Largest power of two `≤ m` (`m ≥ 1`).
+pub fn pow2_floor(m: u32) -> u32 {
+    assert!(m >= 1);
+    1 << (31 - m.leading_zeros())
+}
+
+/// Static configuration of one corrected-butterfly allreduce.
+#[derive(Clone, Debug)]
+pub struct ButterflyConfig {
+    pub n: u32,
+    pub f: u32,
+    /// Base op id; round/stat frame `x` runs under
+    /// [`segment::seg_op`]`(op_id, x)`. Must be ≥ 1 (a base of 0 would
+    /// collide with monolithic op ids, like the pipelined driver).
+    pub op_id: u64,
+    /// First wire epoch. The allgather half's sync-root hint occupies
+    /// `[base_epoch, base_epoch + f + 1)` — within the band an
+    /// ordinary allreduce claims, so the butterfly drops into session
+    /// epoch bands (stride `f+2`) unchanged.
+    pub base_epoch: u32,
+}
+
+impl ButterflyConfig {
+    pub fn new(n: u32, f: u32) -> Self {
+        ButterflyConfig { n, f, op_id: 1, base_epoch: 0 }
+    }
+
+    /// Correction-group width `g = min(f+1, n)`.
+    pub fn group_size(&self) -> u32 {
+        (self.f + 1).min(self.n)
+    }
+
+    /// Number of groups `m = max(1, ⌊n/g⌋)`; the `n mod g` remainder
+    /// ranks join the last group.
+    pub fn num_groups(&self) -> u32 {
+        (self.n / self.group_size()).max(1)
+    }
+
+    /// `n'`: the power-of-two group count the butterfly runs on.
+    pub fn butterfly_groups(&self) -> u32 {
+        pow2_floor(self.num_groups())
+    }
+
+    /// Rounds per half: `log₂ n'`.
+    pub fn rounds(&self) -> u32 {
+        self.butterfly_groups().trailing_zeros()
+    }
+
+    /// World ranks of group `j` (the last group absorbs the
+    /// remainder).
+    pub fn members_of(&self, j: u32) -> std::ops::Range<u32> {
+        let g = self.group_size();
+        let m = self.num_groups();
+        assert!(j < m);
+        let end = if j + 1 == m { self.n } else { (j + 1) * g };
+        j * g..end
+    }
+
+    /// Correction group of rank `r`.
+    pub fn group_of(&self, r: Rank) -> u32 {
+        (r / self.group_size()).min(self.num_groups() - 1)
+    }
+
+    /// Reject configurations whose frame layout cannot hold the group:
+    /// the last group absorbs the `n mod g` remainder and the `STAT`
+    /// frames budget a fixed number of member indices per group.
+    /// `RunSpec::validate` surfaces this before any instance is built
+    /// (construction would assert).
+    pub fn check_frames(&self) -> Result<(), String> {
+        let last = self.members_of(self.num_groups() - 1);
+        let width = last.end - last.start;
+        if width > MAX_GROUP_LEN {
+            return Err(format!(
+                "butterfly correction group of {width} members overflows the \
+                 {MAX_GROUP_LEN}-member stat-frame budget (f too large for n)"
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// One butterfly round's exchange, on group indices: the partner
+/// group, the window of `n'` stride blocks kept (halving) or received
+/// (doubling), and the window sent. Windows are `[lo, hi)` pairs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RoundStep {
+    pub partner: u32,
+    pub keep: (u32, u32),
+    pub send: (u32, u32),
+}
+
+fn align(gid: u32, size: u32) -> u32 {
+    gid & !(size - 1)
+}
+
+/// Halving round `r ∈ [0, k)` at group `gid` of `n' = 2^k`: exchange
+/// at distance `n' >> (r+1)`; keep the aligned half containing `gid`,
+/// send the half containing the partner.
+pub fn halve_step(gid: u32, r: u32, nprime: u32) -> RoundStep {
+    let d = nprime >> (r + 1);
+    let partner = gid ^ d;
+    let keep = align(gid, d);
+    let send = align(partner, d);
+    RoundStep { partner, keep: (keep, keep + d), send: (send, send + d) }
+}
+
+/// Doubling round `r ∈ [0, k)` at group `gid`: exchange at distance
+/// `2^r`; send the current (kept) window, receive-and-install the
+/// partner's. Mirrors halving round `k-1-r`.
+pub fn double_step(gid: u32, r: u32) -> RoundStep {
+    let d = 1u32 << r;
+    let partner = gid ^ d;
+    let send = align(gid, d);
+    let keep = align(partner, d);
+    RoundStep { partner, keep: (keep, keep + d), send: (send, send + d) }
+}
+
+// Frame layout under the base op id ([`segment::seg_op`] low bits).
+// All bounds asserted in `CorrectedButterfly::new`.
+const FRAME_INPUT: u32 = 0;
+const FRAME_FOLD_IN: u32 = 1;
+const FRAME_FOLD_OUT: u32 = 2;
+const FRAME_HALVE: u32 = 8; // +r, r < k
+const FRAME_DOUBLE: u32 = 48; // +r
+const FRAME_STAT_SOME: u32 = 96; // + dead member index
+const FRAME_STAT_NONE: u32 = 224; // + dead member index
+const FRAME_REQ: u32 = 512; // + requested frame
+const MAX_GROUP_LEN: u32 = FRAME_STAT_NONE - FRAME_STAT_SOME;
+const MAX_ROUNDS: u32 = FRAME_DOUBLE - FRAME_HALVE;
+// the whole frame layout must fit the op-id framing bit-field
+const _: () = assert!(2 * FRAME_REQ as u64 <= segment::MAX_SEGMENTS);
+
+fn kind_of(frame: u32) -> MsgKind {
+    match frame {
+        f if f >= FRAME_REQ => kind_of(f - FRAME_REQ),
+        FRAME_INPUT => MsgKind::UpCorrection,
+        f if f >= FRAME_STAT_SOME => MsgKind::UpCorrection,
+        FRAME_FOLD_IN => MsgKind::BflyHalve,
+        f if (FRAME_HALVE..FRAME_DOUBLE).contains(&f) => MsgKind::BflyHalve,
+        _ => MsgKind::BflyDouble, // FOLD_OUT and doubling rounds
+    }
+}
+
+/// Sequential per-rank stage plan. Butterfly-group members run
+/// `Seal0 → [FoldInRecv] → Halve(0..k) → Double(0..k) → [FoldOutSend]
+/// → Deliver`; fold-source members run
+/// `Seal0 → FoldInSend → FoldOutRecv → Deliver`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Stage {
+    Seal0,
+    FoldInRecv,
+    FoldInSend,
+    Halve(u32),
+    Double(u32),
+    FoldOutSend,
+    FoldOutRecv,
+    Deliver,
+}
+
+/// Round-0 state of one group sibling's contribution.
+#[derive(Clone, Debug, Default)]
+struct Slot {
+    /// The sibling's input, via direct send or a published copy.
+    input: Option<Value>,
+    /// Failure-monitor confirmed dead (local view).
+    dead: bool,
+    /// We published `STAT_NONE`: late direct copies are rejected and
+    /// inclusion can only happen through a published copy.
+    reconciling: bool,
+    /// 0 = nothing published, 1 = published NONE, 2 = published SOME.
+    published: u8,
+    /// Sibling member indices that published `STAT_NONE` for this slot.
+    none_from: Vec<u32>,
+}
+
+/// Per-process corrected-butterfly allreduce. Delivers one
+/// [`Outcome::Allreduce`] with `attempts = 1` (the butterfly never
+/// rotates roots; failures are absorbed by group replication).
+pub struct CorrectedButterfly {
+    cfg: ButterflyConfig,
+    input: Value,
+    /// World ranks of this rank's correction group.
+    members: Vec<Rank>,
+    my_idx: u32,
+    gid: u32,
+    nprime: u32,
+    rounds: u32,
+    /// One entry per group member (`my_idx` unused).
+    slots: Vec<Slot>,
+    /// Committed round-0 group state (bit-identical across members).
+    sealed: Option<Value>,
+    /// `sealed` partitioned into `n'` stride blocks.
+    blocks: Vec<Value>,
+    /// Element offsets of the `n'` block boundaries (`n' + 1` entries).
+    bounds: Vec<usize>,
+    plan: Vec<Stage>,
+    pos: usize,
+    /// Buffered transfer payloads by frame (first copy wins — takeover
+    /// duplicates and pull answers are bit-identical).
+    recv: HashMap<u32, (Value, u32)>,
+    /// Snapshot of each completed send stage's payload, kept past
+    /// delivery so this member can answer `REQ` pulls for dead
+    /// siblings (the per-round correction).
+    sent: HashMap<u32, Value>,
+    /// Pull requests for stages we have not completed yet.
+    pending_reqs: Vec<(u32, Rank)>,
+    /// Expected-sender chain offset of the current wait stage.
+    wait_chain: u32,
+    watching_sender: Option<Rank>,
+    /// Sync-root hint: lowest committed member of group 0.
+    sync_h: Option<u32>,
+    /// Fold-source members: the installed fold-out result.
+    result: Option<Value>,
+    delivered: bool,
+}
+
+impl CorrectedButterfly {
+    pub fn new(cfg: ButterflyConfig, rank: Rank, input: Value) -> Self {
+        assert!(cfg.n >= 1, "butterfly needs at least one process");
+        assert!(cfg.op_id >= 1, "butterfly base op must be >= 1");
+        let gid = cfg.group_of(rank);
+        let members: Vec<Rank> = cfg.members_of(gid).collect();
+        let my_idx = members.iter().position(|&r| r == rank).expect("rank in group") as u32;
+        let nprime = cfg.butterfly_groups();
+        let rounds = cfg.rounds();
+        assert!(rounds < MAX_ROUNDS, "{nprime} butterfly groups overflow the round frames");
+        assert!(
+            members.len() as u32 <= MAX_GROUP_LEN,
+            "correction group of {} overflows the stat frames (f too large)",
+            members.len()
+        );
+        let m = cfg.num_groups();
+        let mut plan = vec![Stage::Seal0];
+        if gid >= nprime {
+            plan.push(Stage::FoldInSend);
+            plan.push(Stage::FoldOutRecv);
+        } else {
+            let has_src = gid + nprime < m;
+            if has_src {
+                plan.push(Stage::FoldInRecv);
+            }
+            for r in 0..rounds {
+                plan.push(Stage::Halve(r));
+            }
+            for r in 0..rounds {
+                plan.push(Stage::Double(r));
+            }
+            if has_src {
+                plan.push(Stage::FoldOutSend);
+            }
+        }
+        plan.push(Stage::Deliver);
+        let slots = vec![Slot::default(); members.len()];
+        CorrectedButterfly {
+            cfg,
+            input,
+            members,
+            my_idx,
+            gid,
+            nprime,
+            rounds,
+            slots,
+            sealed: None,
+            blocks: Vec::new(),
+            bounds: Vec::new(),
+            plan,
+            pos: 0,
+            recv: HashMap::new(),
+            sent: HashMap::new(),
+            pending_reqs: Vec::new(),
+            wait_chain: 0,
+            watching_sender: None,
+            sync_h: None,
+            result: None,
+            delivered: false,
+        }
+    }
+
+    /// True once round 0 sealed (or the result delivered) — the
+    /// pipelined driver's segment-advance boundary.
+    pub fn upcorr_done(&self) -> bool {
+        self.delivered || self.sealed.is_some()
+    }
+
+    /// `h + 1` where `h` is the sync-root hint (lowest committed
+    /// member of group 0), once known — by delivery, always. The
+    /// session layer roots its membership sync at `h`; the delivered
+    /// `attempts` stays 1.
+    pub fn sync_attempts(&self) -> Option<u32> {
+        self.sync_h.map(|h| h + 1)
+    }
+
+    /// Confirmed-dead group siblings (sorted world ranks) — the
+    /// best-effort §4.4 report this rank can stand behind. Group-local
+    /// by design: docs/BUTTERFLY.md §Sessions.
+    pub fn known_failed(&self) -> Vec<Rank> {
+        let mut out: Vec<Rank> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.dead)
+            .map(|(j, _)| self.members[j])
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    fn frame_op(&self, frame: u32) -> u64 {
+        segment::seg_op(self.cfg.op_id, frame)
+    }
+
+    fn msg(&self, frame: u32, epoch: u32, payload: Value) -> Msg {
+        Msg {
+            op: self.frame_op(frame),
+            epoch,
+            kind: kind_of(frame),
+            payload,
+            finfo: FailureInfo::Bit(false),
+        }
+    }
+
+    /// The peer group a stage exchanges with.
+    fn peer_group(&self, st: Stage) -> u32 {
+        match st {
+            Stage::FoldInRecv | Stage::FoldOutSend => self.gid + self.nprime,
+            Stage::FoldInSend | Stage::FoldOutRecv => self.gid - self.nprime,
+            Stage::Halve(r) => halve_step(self.gid, r, self.nprime).partner,
+            Stage::Double(r) => double_step(self.gid, r).partner,
+            Stage::Seal0 | Stage::Deliver => unreachable!("no peer group"),
+        }
+    }
+
+    fn frame_of(&self, st: Stage) -> u32 {
+        match st {
+            Stage::FoldInRecv | Stage::FoldInSend => FRAME_FOLD_IN,
+            Stage::FoldOutSend | Stage::FoldOutRecv => FRAME_FOLD_OUT,
+            Stage::Halve(r) => FRAME_HALVE + r,
+            Stage::Double(r) => FRAME_DOUBLE + r,
+            Stage::Seal0 | Stage::Deliver => unreachable!("no frame"),
+        }
+    }
+
+    /// Member-`c`-th candidate sender of the current wait stage's
+    /// payload: the peer-group member `(my_idx + c) mod L` (rule:
+    /// target `e` is served by peer member `e mod L_sender`, and on
+    /// its death by the member group's next-live successors).
+    fn expected_sender(&self, st: Stage, chain: u32) -> Rank {
+        let peers: Vec<Rank> = self.cfg.members_of(self.peer_group(st)).collect();
+        peers[((self.my_idx + chain) as usize) % peers.len()]
+    }
+
+    /// World ranks this member sends a stage's payload to: peer-group
+    /// members `e` with `e mod L_mine == my_idx`.
+    fn targets(&self, st: Stage) -> Vec<Rank> {
+        let mine = self.members.len() as u32;
+        self.cfg
+            .members_of(self.peer_group(st))
+            .enumerate()
+            .filter(|(e, _)| (*e as u32) % mine == self.my_idx)
+            .map(|(_, r)| r)
+            .collect()
+    }
+
+    /// Concatenate blocks `[lo, hi)` into one wire payload.
+    fn window_payload(&self, lo: u32, hi: u32) -> Value {
+        Value::concat_segments(&self.blocks[lo as usize..hi as usize])
+    }
+
+    /// Combine a received window payload element-wise into blocks
+    /// `[lo, hi)`.
+    fn combine_window(&mut self, lo: u32, hi: u32, v: &Value, ctx: &mut dyn Ctx) {
+        let mut off = 0;
+        for b in lo..hi {
+            let len = self.bounds[b as usize + 1] - self.bounds[b as usize];
+            let piece = v.slice_elems(off, len);
+            ctx.combine(&mut self.blocks[b as usize], &piece);
+            off += len;
+        }
+        assert_eq!(off, v.len(), "window payload length mismatch");
+    }
+
+    /// Install a received window payload as blocks `[lo, hi)`
+    /// (allgather half: the sender's copy is final — zero-copy views).
+    fn install_window(&mut self, lo: u32, hi: u32, v: &Value) {
+        let mut off = 0;
+        for b in lo..hi {
+            let len = self.bounds[b as usize + 1] - self.bounds[b as usize];
+            self.blocks[b as usize] = v.slice_elems(off, len);
+            off += len;
+        }
+        assert_eq!(off, v.len(), "window payload length mismatch");
+    }
+
+    /// Does a doubling-round send window starting at block `lo` carry
+    /// the sync-root hint? (Any window containing block 0.)
+    fn send_epoch(&self, st: Stage) -> u32 {
+        let hinted = match st {
+            Stage::FoldOutSend => true,
+            Stage::Double(r) => double_step(self.gid, r).send.0 == 0,
+            _ => false,
+        };
+        if hinted {
+            // Inductively known: the sender of any block-0 window has
+            // either sealed group 0 itself or received block 0 earlier
+            // in the allgather half (module docs §Sessions).
+            self.cfg.base_epoch + self.sync_h.expect("hint known at block-0 send")
+        } else {
+            self.cfg.base_epoch
+        }
+    }
+
+    /// Perform a send stage's sends, snapshot the payload for later
+    /// `REQ` pulls, and answer pulls that queued up before we got
+    /// here.
+    fn do_sends(&mut self, st: Stage, ctx: &mut dyn Ctx) {
+        let frame = self.frame_of(st);
+        if self.sent.contains_key(&frame) {
+            return;
+        }
+        let payload = match st {
+            Stage::FoldInSend => self.sealed.clone().expect("sealed before fold-in"),
+            Stage::FoldOutSend => self.window_payload(0, self.nprime),
+            Stage::Halve(r) => {
+                let s = halve_step(self.gid, r, self.nprime);
+                self.window_payload(s.send.0, s.send.1)
+            }
+            Stage::Double(r) => {
+                let s = double_step(self.gid, r);
+                self.window_payload(s.send.0, s.send.1)
+            }
+            _ => unreachable!("not a send stage"),
+        };
+        let epoch = self.send_epoch(st);
+        for to in self.targets(st) {
+            ctx.send(to, self.msg(frame, epoch, payload.clone()));
+        }
+        self.sent.insert(frame, payload);
+        let due: Vec<(u32, Rank)> = std::mem::take(&mut self.pending_reqs);
+        for (rframe, requester) in due {
+            if rframe == frame {
+                self.answer_req(rframe, requester, ctx);
+            } else {
+                self.pending_reqs.push((rframe, requester));
+            }
+        }
+    }
+
+    fn answer_req(&mut self, frame: u32, requester: Rank, ctx: &mut dyn Ctx) {
+        let payload = self.sent.get(&frame).expect("answer after snapshot").clone();
+        // Re-derive the hint epoch: a snapshot frame that carried the
+        // hint still does (sync_h is sticky once known).
+        let epoch = if frame == FRAME_FOLD_OUT
+            || (frame >= FRAME_DOUBLE && double_step(self.gid, frame - FRAME_DOUBLE).send.0 == 0)
+        {
+            self.cfg.base_epoch + self.sync_h.expect("hint known at block-0 send")
+        } else {
+            self.cfg.base_epoch
+        };
+        ctx.send(requester, self.msg(frame, epoch, payload));
+    }
+
+    /// Advance through the stage plan as far as buffered receives
+    /// allow; arms/retargets the expected-sender watch of the stage we
+    /// block on.
+    fn advance(&mut self, ctx: &mut dyn Ctx) {
+        loop {
+            match self.plan[self.pos] {
+                Stage::Seal0 => {
+                    if self.sealed.is_none() {
+                        return;
+                    }
+                }
+                Stage::FoldInSend => self.do_sends(Stage::FoldInSend, ctx),
+                Stage::FoldOutSend => self.do_sends(Stage::FoldOutSend, ctx),
+                st @ (Stage::FoldInRecv | Stage::FoldOutRecv | Stage::Halve(_) | Stage::Double(_)) => {
+                    if matches!(st, Stage::Halve(_) | Stage::Double(_)) {
+                        self.do_sends(st, ctx);
+                    }
+                    let frame = self.frame_of(st);
+                    let Some((v, epoch)) = self.recv.remove(&frame) else {
+                        self.arm_wait_watch(st, ctx);
+                        return;
+                    };
+                    self.clear_wait_watch(ctx);
+                    self.apply_recv(st, &v, epoch, ctx);
+                }
+                Stage::Deliver => {
+                    self.deliver(ctx);
+                    return;
+                }
+            }
+            self.pos += 1;
+        }
+    }
+
+    fn apply_recv(&mut self, st: Stage, v: &Value, epoch: u32, ctx: &mut dyn Ctx) {
+        match st {
+            Stage::FoldInRecv => self.combine_window(0, self.nprime, v, ctx),
+            Stage::Halve(r) => {
+                let s = halve_step(self.gid, r, self.nprime);
+                self.combine_window(s.keep.0, s.keep.1, v, ctx);
+            }
+            Stage::Double(r) => {
+                let s = double_step(self.gid, r);
+                if s.keep.0 == 0 && self.sync_h.is_none() {
+                    self.sync_h = Some(epoch - self.cfg.base_epoch);
+                }
+                self.install_window(s.keep.0, s.keep.1, v);
+            }
+            Stage::FoldOutRecv => {
+                if self.sync_h.is_none() {
+                    self.sync_h = Some(epoch - self.cfg.base_epoch);
+                }
+                self.result = Some(v.clone());
+            }
+            _ => unreachable!("not a receive stage"),
+        }
+    }
+
+    fn arm_wait_watch(&mut self, st: Stage, ctx: &mut dyn Ctx) {
+        let expect = self.expected_sender(st, self.wait_chain);
+        if self.watching_sender != Some(expect) {
+            if let Some(prev) = self.watching_sender.take() {
+                ctx.unwatch(prev);
+            }
+            self.watching_sender = Some(expect);
+            ctx.watch(expect);
+        }
+    }
+
+    fn clear_wait_watch(&mut self, ctx: &mut dyn Ctx) {
+        if let Some(prev) = self.watching_sender.take() {
+            ctx.unwatch(prev);
+        }
+        self.wait_chain = 0;
+    }
+
+    fn deliver(&mut self, ctx: &mut dyn Ctx) {
+        if self.delivered {
+            return;
+        }
+        self.delivered = true;
+        let value = match &self.result {
+            Some(v) => v.clone(),
+            None => {
+                if self.blocks.is_empty() {
+                    self.sealed.clone().expect("sealed before deliver")
+                } else {
+                    Value::concat_segments(&self.blocks)
+                }
+            }
+        };
+        let members = self.members.clone();
+        for (j, &peer) in members.iter().enumerate() {
+            if j as u32 != self.my_idx {
+                ctx.unwatch(peer);
+            }
+        }
+        ctx.deliver(Outcome::Allreduce { value, attempts: 1 });
+    }
+
+    /// Seal round 0 once every sibling slot is resolved: combine the
+    /// committed inputs in ascending member order (bit-identical at
+    /// every member), derive the stride-block plane, and record the
+    /// sync-root hint if this is group 0.
+    fn try_seal(&mut self, ctx: &mut dyn Ctx) {
+        if self.sealed.is_some() {
+            return;
+        }
+        for j in 0..self.slots.len() as u32 {
+            if j != self.my_idx && !self.slot_resolved(j) {
+                return;
+            }
+        }
+        let mut acc: Option<Value> = None;
+        let mut lowest: Option<usize> = None;
+        for (j, slot) in self.slots.iter().enumerate() {
+            let v = if j as u32 == self.my_idx { Some(&self.input) } else { slot.input.as_ref() };
+            if let Some(v) = v {
+                lowest.get_or_insert(j);
+                match acc.as_mut() {
+                    None => acc = Some(v.clone()),
+                    Some(a) => ctx.combine(a, v),
+                }
+            }
+        }
+        let sealed = acc.expect("own input always committed");
+        if self.gid == 0 {
+            self.sync_h = Some(self.members[lowest.expect("nonempty")]);
+        }
+        if self.gid < self.nprime {
+            // butterfly-group member: build the block plane
+            self.blocks = sealed.stride_blocks(self.nprime as usize);
+            let len = sealed.len() as u128;
+            let np = self.nprime as u128;
+            self.bounds =
+                (0..=self.nprime).map(|b| (u128::from(b) * len / np) as usize).collect();
+        }
+        self.sealed = Some(sealed);
+    }
+
+    /// Is sibling `j`'s round-0 contribution decided (included or
+    /// excluded)?
+    fn slot_resolved(&self, j: u32) -> bool {
+        let s = &self.slots[j as usize];
+        if s.input.is_some() {
+            return true;
+        }
+        if !(s.dead && s.reconciling) {
+            return false;
+        }
+        // excluded only when every live sibling published NONE
+        (0..self.slots.len() as u32).all(|x| {
+            x == j
+                || x == self.my_idx
+                || self.slots[x as usize].dead
+                || s.none_from.contains(&x)
+        })
+    }
+
+    /// Publish what we hold of dead sibling `j`'s input to the whole
+    /// group (the round-0 up-correction exchange), upgrading a
+    /// previous `NONE` to `SOME` at most once (relay).
+    fn publish(&mut self, j: u32, ctx: &mut dyn Ctx) {
+        let (frame, payload) = match &self.slots[j as usize].input {
+            Some(v) if self.slots[j as usize].published < 2 => {
+                self.slots[j as usize].published = 2;
+                (FRAME_STAT_SOME + j, v.clone())
+            }
+            None if self.slots[j as usize].published == 0 => {
+                self.slots[j as usize].published = 1;
+                self.slots[j as usize].reconciling = true;
+                (FRAME_STAT_NONE + j, Value::i64(Vec::new()))
+            }
+            _ => return,
+        };
+        let epoch = self.cfg.base_epoch;
+        for (x, &peer) in self.members.iter().enumerate() {
+            if x as u32 != self.my_idx {
+                ctx.send(peer, self.msg(frame, epoch, payload.clone()));
+            }
+        }
+    }
+
+    fn member_index_of(&self, rank: Rank) -> Option<u32> {
+        self.members.iter().position(|&r| r == rank).map(|i| i as u32)
+    }
+
+    fn on_stat(&mut self, from: Rank, frame: u32, payload: Value, ctx: &mut dyn Ctx) {
+        let Some(x) = self.member_index_of(from) else {
+            return;
+        };
+        if frame >= FRAME_STAT_NONE {
+            let j = frame - FRAME_STAT_NONE;
+            if (j as usize) < self.slots.len() && j != self.my_idx {
+                if !self.slots[j as usize].none_from.contains(&x) {
+                    self.slots[j as usize].none_from.push(x);
+                }
+                self.try_seal(ctx);
+                self.advance(ctx);
+            }
+        } else {
+            let j = frame - FRAME_STAT_SOME;
+            if (j as usize) < self.slots.len() && j != self.my_idx {
+                if self.slots[j as usize].input.is_none() {
+                    self.slots[j as usize].input = Some(payload);
+                    // relay: our knowledge upgraded after publishing NONE
+                    if self.slots[j as usize].published == 1 {
+                        self.publish(j, ctx);
+                    }
+                }
+                self.try_seal(ctx);
+                self.advance(ctx);
+            }
+        }
+    }
+}
+
+impl Protocol for CorrectedButterfly {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        // round 0: replicate the input to every group sibling and
+        // watch them all — the correction group is the unit that
+        // survives
+        let epoch = self.cfg.base_epoch;
+        let members = self.members.clone();
+        for (j, &peer) in members.iter().enumerate() {
+            if j as u32 != self.my_idx {
+                ctx.watch(peer);
+                ctx.send(peer, self.msg(FRAME_INPUT, epoch, self.input.clone()));
+            }
+        }
+        self.try_seal(ctx);
+        self.advance(ctx);
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        let Some(frame) = segment::seg_index(msg.op) else {
+            return; // not frame-framed: another operation's traffic
+        };
+        if segment::base_op(msg.op) != self.cfg.op_id {
+            return;
+        }
+        if frame >= FRAME_REQ {
+            // per-round correction pull: answer from the snapshot now,
+            // or as soon as we complete that stage
+            let target = frame - FRAME_REQ;
+            if self.sent.contains_key(&target) {
+                self.answer_req(target, from, ctx);
+            } else if !self.pending_reqs.contains(&(target, from)) {
+                self.pending_reqs.push((target, from));
+            }
+            return;
+        }
+        if self.delivered {
+            return;
+        }
+        match frame {
+            FRAME_INPUT => {
+                let Some(j) = self.member_index_of(from) else {
+                    return;
+                };
+                let slot = &mut self.slots[j as usize];
+                if slot.input.is_none() && !slot.reconciling {
+                    slot.input = Some(msg.payload);
+                    self.try_seal(ctx);
+                    self.advance(ctx);
+                }
+            }
+            f if f >= FRAME_STAT_SOME => self.on_stat(from, f, msg.payload, ctx),
+            _ => {
+                // transfer frame: buffer (first copy wins), consume in
+                // stage order
+                self.recv.entry(frame).or_insert((msg.payload, msg.epoch));
+                self.advance(ctx);
+            }
+        }
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        if self.delivered {
+            return;
+        }
+        if let Some(j) = self.member_index_of(peer) {
+            if j != self.my_idx && !self.slots[j as usize].dead {
+                self.slots[j as usize].dead = true;
+                self.publish(j, ctx);
+                self.try_seal(ctx);
+                self.advance(ctx);
+            }
+        }
+        if self.watching_sender == Some(peer) {
+            // expected round sender died: pull the payload from its
+            // whole correction group and watch the next candidate
+            self.watching_sender = None;
+            let st = self.plan[self.pos];
+            let frame = self.frame_of(st);
+            for to in self.cfg.members_of(self.peer_group(st)) {
+                ctx.send(to, self.msg(FRAME_REQ + frame, self.cfg.base_epoch, Value::i64(Vec::new())));
+            }
+            self.wait_chain += 1;
+            // the message may already be buffered (raced the failure
+            // notification) — re-run the stage before re-watching
+            self.advance(ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+
+    fn mask(n: usize, rank: Rank) -> Value {
+        Value::one_hot(n, rank)
+    }
+
+    struct Mesh {
+        ctxs: Vec<TestCtx>,
+        protos: Vec<CorrectedButterfly>,
+        dead: Vec<bool>,
+    }
+
+    impl Mesh {
+        fn new(n: u32, f: u32) -> Self {
+            let ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+            let protos = (0..n)
+                .map(|r| CorrectedButterfly::new(ButterflyConfig::new(n, f), r, mask(n as usize, r)))
+                .collect();
+            Mesh { ctxs, protos, dead: vec![false; n as usize] }
+        }
+
+        fn start(&mut self) {
+            for r in 0..self.protos.len() {
+                if !self.dead[r] {
+                    self.protos[r].on_start(&mut self.ctxs[r]);
+                }
+            }
+        }
+
+        /// Kill `r` between pump iterations (handler-atomic, like the
+        /// DES `AtTime` kill): queued sends still deliver, watchers
+        /// are notified.
+        fn kill(&mut self, r: usize) {
+            self.dead[r] = true;
+            for w in 0..self.protos.len() {
+                if w == r || self.dead[w] {
+                    continue;
+                }
+                let subs = self.ctxs[w].watched.iter().filter(|&&p| p == r as Rank).count();
+                let cleared =
+                    self.ctxs[w].unwatched.iter().filter(|&&p| p == r as Rank).count();
+                if subs > cleared {
+                    self.protos[w].on_peer_failed(r as Rank, &mut self.ctxs[w]);
+                }
+            }
+        }
+
+        /// Dispatch queued sends until quiescent. New watches on
+        /// already-dead peers fire immediately (accurate detection).
+        fn pump(&mut self) {
+            for _ in 0..256 {
+                let mut moved = false;
+                for r in 0..self.protos.len() {
+                    let sends = self.ctxs[r].take_sent();
+                    if self.dead[r] {
+                        continue; // sends of a dead rank are dropped here
+                    }
+                    for (to, m) in sends {
+                        moved = true;
+                        if !self.dead[to as usize] {
+                            self.protos[to as usize].on_message(r as Rank, m, &mut self.ctxs[to as usize]);
+                        }
+                    }
+                }
+                // watches armed on already-dead peers
+                for w in 0..self.protos.len() {
+                    if self.dead[w] {
+                        continue;
+                    }
+                    let watched: Vec<Rank> = self.ctxs[w].watched.clone();
+                    for p in watched {
+                        if self.dead[p as usize] {
+                            let subs =
+                                self.ctxs[w].watched.iter().filter(|&&x| x == p).count();
+                            let cleared =
+                                self.ctxs[w].unwatched.iter().filter(|&&x| x == p).count();
+                            if subs > cleared {
+                                moved = true;
+                                // one notification clears all subscriptions
+                                for _ in cleared..subs {
+                                    self.ctxs[w].unwatched.push(p);
+                                }
+                                self.protos[w].on_peer_failed(p, &mut self.ctxs[w]);
+                            }
+                        }
+                    }
+                }
+                if !moved {
+                    return;
+                }
+            }
+            panic!("mesh did not quiesce");
+        }
+
+        fn delivered_mask(&self, r: usize) -> Vec<i64> {
+            assert_eq!(self.ctxs[r].delivered.len(), 1, "rank {r} deliveries");
+            match &self.ctxs[r].delivered[0] {
+                Outcome::Allreduce { value, attempts } => {
+                    assert_eq!(*attempts, 1, "butterfly never rotates");
+                    value.inclusion_counts().to_vec()
+                }
+                o => panic!("rank {r}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn topology_and_steps() {
+        assert_eq!(pow2_floor(1), 1);
+        assert_eq!(pow2_floor(5), 4);
+        assert_eq!(pow2_floor(8), 8);
+        let cfg = ButterflyConfig::new(12, 1); // g=2, m=6, n'=4, k=2
+        assert_eq!(cfg.group_size(), 2);
+        assert_eq!(cfg.num_groups(), 6);
+        assert_eq!(cfg.butterfly_groups(), 4);
+        assert_eq!(cfg.rounds(), 2);
+        assert_eq!(cfg.members_of(5), 10..12);
+        assert_eq!(cfg.group_of(11), 5);
+        // n=5, f=2: one group of five
+        let one = ButterflyConfig::new(5, 2);
+        assert_eq!(one.num_groups(), 1);
+        assert_eq!(one.members_of(0), 0..5);
+        // halving round 0 of n'=4: distance 2
+        assert_eq!(
+            halve_step(1, 0, 4),
+            RoundStep { partner: 3, keep: (0, 2), send: (2, 4) }
+        );
+        assert_eq!(
+            halve_step(3, 1, 4),
+            RoundStep { partner: 2, keep: (3, 4), send: (2, 3) }
+        );
+        // doubling mirrors halving in reverse
+        assert_eq!(double_step(3, 0), RoundStep { partner: 2, keep: (2, 3), send: (3, 4) });
+        assert_eq!(double_step(1, 1), RoundStep { partner: 3, keep: (2, 4), send: (0, 2) });
+    }
+
+    #[test]
+    fn clean_power_of_two_all_agree() {
+        let mut m = Mesh::new(8, 1); // g=2, m=4, n'=4, k=2
+        m.start();
+        m.pump();
+        for r in 0..8 {
+            assert_eq!(m.delivered_mask(r), vec![1; 8], "rank {r}");
+        }
+        assert_eq!(m.protos[7].sync_attempts(), Some(1), "sync root is rank 0");
+    }
+
+    #[test]
+    fn clean_non_power_of_two_folds() {
+        let mut m = Mesh::new(11, 1); // g=2, m=5 (last group [8,11)), n'=4
+        m.start();
+        m.pump();
+        for r in 0..11 {
+            assert_eq!(m.delivered_mask(r), vec![1; 11], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn single_rank_delivers_immediately() {
+        let mut m = Mesh::new(1, 2);
+        m.start();
+        assert_eq!(m.delivered_mask(0), vec![1]);
+    }
+
+    #[test]
+    fn single_group_flat_allreduce() {
+        let mut m = Mesh::new(3, 4); // g=3=n: one group, no rounds
+        m.start();
+        m.pump();
+        for r in 0..3 {
+            assert_eq!(m.delivered_mask(r), vec![1, 1, 1], "rank {r}");
+        }
+    }
+
+    /// A pre-dead sibling is excluded by unanimous NONE publications;
+    /// all survivors agree.
+    #[test]
+    fn pre_dead_sibling_excluded_consistently() {
+        let mut m = Mesh::new(8, 1);
+        m.dead[5] = true; // never starts: group 2 = {4, 5}
+        m.start();
+        m.pump();
+        let want = vec![1, 1, 1, 1, 1, 0, 1, 1];
+        for r in 0..8 {
+            if r != 5 {
+                assert_eq!(m.delivered_mask(r), want, "rank {r}");
+            }
+        }
+    }
+
+    /// A sibling that dies *after* replicating its input is included,
+    /// and its round sends are pulled from its group sibling (the
+    /// per-round correction path).
+    #[test]
+    fn mid_run_death_is_corrected_by_its_group() {
+        let mut m = Mesh::new(8, 1);
+        m.start();
+        // one dispatch round: round-0 inputs land everywhere
+        for r in 0..8 {
+            let sends = m.ctxs[r].take_sent();
+            for (to, msg) in sends {
+                m.protos[to as usize].on_message(r as Rank, msg, &mut m.ctxs[to as usize]);
+            }
+        }
+        m.kill(2); // group 1 = {2, 3}: rank 3 must cover rank 2's rounds
+        m.pump();
+        let want = vec![1; 8]; // rank 2's input was fully replicated
+        for r in 0..8 {
+            if r != 2 {
+                assert_eq!(m.delivered_mask(r), want, "rank {r}");
+            }
+        }
+    }
+
+    /// Survivor agreement when a whole storm of ≤ f deaths lands at
+    /// once, across distinct groups.
+    #[test]
+    fn storm_across_groups_agrees() {
+        let mut m = Mesh::new(12, 2); // g=3, m=4, n'=4
+        m.dead[4] = true; // group 1
+        m.dead[9] = true; // group 3
+        m.start();
+        m.pump();
+        let mut want = vec![1i64; 12];
+        want[4] = 0;
+        want[9] = 0;
+        for r in 0..12 {
+            if r != 4 && r != 9 {
+                assert_eq!(m.delivered_mask(r), want, "rank {r}");
+            }
+        }
+    }
+
+    /// Bit-identical determinism: two meshes over f64 payloads produce
+    /// byte-equal results at every rank (ascending-member combine
+    /// order + install-don't-recombine allgather).
+    #[test]
+    fn f64_results_bit_identical_across_ranks() {
+        let run = || {
+            let n = 11u32;
+            let ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+            let protos: Vec<CorrectedButterfly> = (0..n)
+                .map(|r| {
+                    let v: Vec<f64> = (0..23).map(|i| (r as f64) * 0.1 + i as f64).collect();
+                    CorrectedButterfly::new(ButterflyConfig::new(n, 2), r, Value::f64(v))
+                })
+                .collect();
+            let mut mesh = Mesh { ctxs, protos, dead: vec![false; n as usize] };
+            mesh.start();
+            mesh.pump();
+            (0..n as usize)
+                .map(|r| match &mesh.ctxs[r].delivered[0] {
+                    Outcome::Allreduce { value, .. } => value.clone(),
+                    o => panic!("unexpected {o:?}"),
+                })
+                .collect::<Vec<Value>>()
+        };
+        let a = run();
+        let b = run();
+        for r in 1..a.len() {
+            assert_eq!(a[0], a[r], "cross-rank agreement at rank {r}");
+        }
+        assert_eq!(a, b, "cross-run determinism");
+    }
+
+    /// Traffic that is not framed under this base op is ignored.
+    #[test]
+    fn foreign_ops_are_ignored() {
+        let mut c0 = TestCtx::new(0, 4);
+        let mut p0 =
+            CorrectedButterfly::new(ButterflyConfig::new(4, 1), 0, mask(4, 0));
+        p0.on_start(&mut c0);
+        c0.take_sent();
+        p0.on_message(1, TestCtx::msg(MsgKind::BcastTree, 9.0), &mut c0);
+        let mut other = TestCtx::msg(MsgKind::BcastTree, 9.0);
+        other.op = segment::seg_op(7, 0);
+        p0.on_message(1, other, &mut c0);
+        assert!(c0.delivered.is_empty());
+        assert!(c0.take_sent().is_empty());
+    }
+}

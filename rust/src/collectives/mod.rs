@@ -19,6 +19,9 @@
 //! * [`rsag`] — reduce-scatter/allgather allreduce over strided
 //!   per-rank blocks with per-block correction and owner rotation
 //!   (docs/RSAG.md),
+//! * [`butterfly`] — recursive-halving/doubling butterfly allreduce
+//!   over replicated correction groups with per-round correction
+//!   (docs/BUTTERFLY.md),
 //! * [`pipeline`] — segmented/pipelined driver running one per-segment
 //!   Reduce/Allreduce/Rsag instance per payload segment
 //!   (docs/PIPELINE.md),
@@ -27,6 +30,7 @@
 pub mod allreduce;
 pub mod baseline;
 pub mod broadcast;
+pub mod butterfly;
 pub mod failure_info;
 pub mod pipeline;
 pub mod reduce;

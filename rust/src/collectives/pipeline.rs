@@ -38,6 +38,7 @@
 //! (rust/tests/pipeline_semantics.rs pins this).
 
 use super::allreduce::{Allreduce, AllreduceConfig};
+use super::butterfly::{ButterflyConfig, CorrectedButterfly};
 use super::reduce::{Reduce, ReduceConfig};
 use super::rsag::{ReduceScatterAllgather, RsagConfig};
 use super::{CaptureCtx, Ctx, Outcome, Protocol};
@@ -45,14 +46,17 @@ use crate::types::{segment, Msg, Rank, Value};
 
 /// Which collective the pipeline wraps (with its base configuration;
 /// `op_id` therein is the *base* op — per-segment instances derive
-/// theirs via [`segment::seg_op`]. Rsag segments frame *twice*: the
-/// pipeline allocates the segment index, the per-segment rsag instance
-/// allocates the block index below it, so a wire op id reads
-/// `((base << SEG_BITS | s+1) << SEG_BITS) | b+1`).
+/// theirs via [`segment::seg_op`]. Rsag and butterfly segments frame
+/// *twice*: the pipeline allocates the segment index, the per-segment
+/// instance allocates its block/round frame below it, so a wire op id
+/// reads `((base << SEG_BITS | s+1) << SEG_BITS) | x+1`). The
+/// butterfly carries the constructing rank: its group topology is
+/// bound at construction, not at `on_start`.
 pub enum PipelineSpec {
     Reduce(ReduceConfig),
     Allreduce(AllreduceConfig),
     Rsag(RsagConfig),
+    Butterfly(ButterflyConfig, Rank),
 }
 
 /// One per-segment protocol instance.
@@ -60,6 +64,7 @@ enum SegInst {
     R(Reduce),
     A(Allreduce),
     G(ReduceScatterAllgather),
+    Y(CorrectedButterfly),
 }
 
 impl SegInst {
@@ -68,6 +73,7 @@ impl SegInst {
             SegInst::R(p) => p.on_start(ctx),
             SegInst::A(p) => p.on_start(ctx),
             SegInst::G(p) => p.on_start(ctx),
+            SegInst::Y(p) => p.on_start(ctx),
         }
     }
 
@@ -76,6 +82,7 @@ impl SegInst {
             SegInst::R(p) => p.on_message(from, msg, ctx),
             SegInst::A(p) => p.on_message(from, msg, ctx),
             SegInst::G(p) => p.on_message(from, msg, ctx),
+            SegInst::Y(p) => p.on_message(from, msg, ctx),
         }
     }
 
@@ -84,6 +91,7 @@ impl SegInst {
             SegInst::R(p) => p.on_peer_failed(peer, ctx),
             SegInst::A(p) => p.on_peer_failed(peer, ctx),
             SegInst::G(p) => p.on_peer_failed(peer, ctx),
+            SegInst::Y(p) => p.on_peer_failed(peer, ctx),
         }
     }
 
@@ -92,6 +100,7 @@ impl SegInst {
             SegInst::R(p) => p.upcorr_done(),
             SegInst::A(p) => p.upcorr_done(),
             SegInst::G(p) => p.upcorr_done(),
+            SegInst::Y(p) => p.upcorr_done(),
         }
     }
 }
@@ -147,6 +156,21 @@ impl Pipelined {
         Pipelined::new(PipelineSpec::Rsag(cfg), base_op, input, segment_bytes)
     }
 
+    /// Pipelined corrected-butterfly allreduce: each segment runs a
+    /// full per-segment [`CorrectedButterfly`], its round/stat frames
+    /// one level below the segment index. `rank` binds the group
+    /// topology (the butterfly fixes its correction group at
+    /// construction).
+    pub fn butterfly(
+        cfg: ButterflyConfig,
+        rank: Rank,
+        input: Value,
+        segment_bytes: usize,
+    ) -> Self {
+        let base_op = cfg.op_id;
+        Pipelined::new(PipelineSpec::Butterfly(cfg, rank), base_op, input, segment_bytes)
+    }
+
     fn new(spec: PipelineSpec, base_op: u64, input: Value, segment_bytes: usize) -> Self {
         // base 0 would make seg_op(0, 0) == 1 collide with the default
         // monolithic op id — the base_op routing check needs base ≥ 1
@@ -195,6 +219,7 @@ impl Pipelined {
             match inst {
                 SegInst::A(a) => out.extend_from_slice(a.known_failed()),
                 SegInst::G(g) => out.extend(g.known_failed()),
+                SegInst::Y(y) => out.extend(y.known_failed()),
                 SegInst::R(_) => {}
             }
         }
@@ -203,14 +228,16 @@ impl Pipelined {
         out
     }
 
-    /// Rsag only: segment 0's block-0 winning attempt count, once that
-    /// block delivered — the consistent value the session layer derives
-    /// its membership-sync root from (the aggregate `attempts` is a max
+    /// Rsag/butterfly only: segment 0's membership-sync hint, once
+    /// known — block 0's winning attempt count (rsag) or `h + 1` for
+    /// sync root `h` (butterfly). The session layer derives its
+    /// membership-sync root from it (the aggregate `attempts` is a max
     /// over segments × blocks and names no single rank). `None` for
-    /// non-rsag pipelines or before segment 0's block 0 resolves.
+    /// tree pipelines or before segment 0 resolves it.
     pub fn sync_attempts(&self) -> Option<u32> {
         match self.insts.first()? {
             Some(SegInst::G(g)) => g.sync_attempts(),
+            Some(SegInst::Y(y)) => y.sync_attempts(),
             _ => None,
         }
     }
@@ -232,6 +259,11 @@ impl Pipelined {
                 let mut cfg = base.clone();
                 cfg.op_id = segment::seg_op(self.base_op, s as u32);
                 SegInst::G(ReduceScatterAllgather::new(cfg, input))
+            }
+            PipelineSpec::Butterfly(base, rank) => {
+                let mut cfg = base.clone();
+                cfg.op_id = segment::seg_op(self.base_op, s as u32);
+                SegInst::Y(CorrectedButterfly::new(cfg, *rank, input))
             }
         }
     }
@@ -318,7 +350,7 @@ impl Pipelined {
                     ctx.deliver(Outcome::ReduceDone);
                 }
             }
-            PipelineSpec::Allreduce(_) | PipelineSpec::Rsag(_) => {
+            PipelineSpec::Allreduce(_) | PipelineSpec::Rsag(_) | PipelineSpec::Butterfly(..) => {
                 if self.seg_values.iter().all(|v| v.is_some()) {
                     let vals: Vec<Value> =
                         self.seg_values.iter_mut().map(|v| v.take().unwrap()).collect();
@@ -345,7 +377,7 @@ impl Protocol for Pipelined {
         // level — the low bits carry the block and are the inner
         // instance's business
         let s = match &self.spec {
-            PipelineSpec::Rsag(_) => {
+            PipelineSpec::Rsag(_) | PipelineSpec::Butterfly(..) => {
                 let inner = segment::base_op(msg.op);
                 let Some(s) = segment::seg_index(inner) else {
                     return; // not double-framed: another operation
@@ -378,6 +410,10 @@ impl Protocol for Pipelined {
             }
             PipelineSpec::Rsag(cfg) => {
                 msg.epoch >= cfg.base_epoch && msg.epoch < cfg.base_epoch + cfg.rotations()
+            }
+            // the sync-root hint rides epochs [base, base + f + 1)
+            PipelineSpec::Butterfly(cfg, _) => {
+                msg.epoch >= cfg.base_epoch && msg.epoch < cfg.base_epoch + cfg.f + 1
             }
         };
         if !in_band {
@@ -435,6 +471,7 @@ impl Protocol for Pipelined {
                 SegInst::R(p) => p.on_timer(token, &mut cap),
                 SegInst::A(p) => p.on_timer(token, &mut cap),
                 SegInst::G(p) => p.on_timer(token, &mut cap),
+                SegInst::Y(p) => p.on_timer(token, &mut cap),
             }
             let captured = cap.captured;
             self.insts[s] = Some(inst);
@@ -718,6 +755,53 @@ mod tests {
                 o => panic!("{name}: unexpected {o:?}"),
             }
         }
+    }
+
+    /// Pipelined butterfly: every segment runs a per-segment corrected
+    /// butterfly whose round frames sit one level below the segment
+    /// index; aggregate masks are exact and the sync-root hint
+    /// propagates per segment.
+    #[test]
+    fn two_process_pipelined_butterfly() {
+        use crate::collectives::butterfly::ButterflyConfig;
+        // n=2, f=0: two one-member groups, n'=2, one round per half
+        let mut p0 = Pipelined::butterfly(ButterflyConfig::new(2, 0), 0, masks(2, 0, 2), 16);
+        let mut p1 = Pipelined::butterfly(ButterflyConfig::new(2, 0), 1, masks(2, 1, 2), 16);
+        assert_eq!(p0.num_segments(), 2);
+        let mut c0 = TestCtx::new(0, 2);
+        let mut c1 = TestCtx::new(1, 2);
+        p0.on_start(&mut c0);
+        p1.on_start(&mut c1);
+        for _ in 0..12 {
+            let s0 = c0.take_sent();
+            let s1 = c1.take_sent();
+            if s0.is_empty() && s1.is_empty() {
+                break;
+            }
+            for (to, m) in s0 {
+                assert_eq!(to, 1);
+                // double framing: round frame low, segment index above it
+                assert!(segment::seg_index(m.op).is_some());
+                assert!(segment::seg_index(segment::base_op(m.op)).is_some());
+                p1.on_message(0, m, &mut c1);
+            }
+            for (to, m) in s1 {
+                assert_eq!(to, 0);
+                p0.on_message(1, m, &mut c0);
+            }
+        }
+        for (name, c) in [("rank0", &c0), ("rank1", &c1)] {
+            assert_eq!(c.delivered.len(), 1, "{name}");
+            match &c.delivered[0] {
+                Outcome::Allreduce { value, attempts } => {
+                    assert_eq!(value.inclusion_counts(), &[1, 1, 1, 1], "{name}");
+                    assert_eq!(*attempts, 1, "{name}");
+                }
+                o => panic!("{name}: unexpected {o:?}"),
+            }
+        }
+        // the sync-root hint (lowest member of group 0) reached rank 1
+        assert_eq!(p1.sync_attempts(), Some(1));
     }
 
     /// A payload smaller than one segment degenerates to a single

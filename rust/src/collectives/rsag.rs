@@ -61,6 +61,10 @@ pub enum AllreduceAlgo {
     /// Reduce-scatter/allgather over strided per-rank blocks
     /// ([`ReduceScatterAllgather`]).
     Rsag,
+    /// Recursive-halving/doubling butterfly over replicated correction
+    /// groups ([`crate::collectives::butterfly::CorrectedButterfly`],
+    /// docs/BUTTERFLY.md).
+    Butterfly,
 }
 
 impl AllreduceAlgo {
@@ -68,6 +72,7 @@ impl AllreduceAlgo {
         match self {
             AllreduceAlgo::Tree => "tree",
             AllreduceAlgo::Rsag => "rsag",
+            AllreduceAlgo::Butterfly => "butterfly",
         }
     }
 }

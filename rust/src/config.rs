@@ -105,10 +105,11 @@ pub struct Config {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic). Broadcast and the baselines ignore it.
     pub segment_bytes: Option<u32>,
-    /// Allreduce decomposition (`--allreduce-algo tree|rsag`): the
-    /// paper's corrected reduce+broadcast, or reduce-scatter/allgather
-    /// over per-rank strided blocks (docs/RSAG.md). Applies to
-    /// allreduce runs and allreduce session epochs.
+    /// Allreduce decomposition (`--allreduce-algo tree|rsag|butterfly`):
+    /// the paper's corrected reduce+broadcast, reduce-scatter/allgather
+    /// over per-rank strided blocks (docs/RSAG.md), or the corrected
+    /// butterfly over replicated correction groups (docs/BUTTERFLY.md).
+    /// Applies to allreduce runs and allreduce session epochs.
     pub allreduce_algo: AllreduceAlgo,
     /// Operations per session (`ftcoll session --ops K`); 1 = a single
     /// stand-alone collective. See [`crate::session`].
@@ -143,7 +144,8 @@ impl Config {
     /// `n`, `f`, `root`, `scheme` (list|count+bit|bit), `op`
     /// (sum|max|min|prod), `payload` (rank|onehot|vec:<len>|segmask:<s>),
     /// `seed`, `segment_bytes` (pipelined reduce/allreduce segment size),
-    /// `allreduce_algo` (tree|rsag — the allreduce decomposition),
+    /// `allreduce_algo` (tree|rsag|butterfly — the allreduce
+    /// decomposition),
     /// `fail` (repeatable: `pre:<rank>` | `sends:<rank>:<k>` |
     /// `time:<rank>:<ns>`).
     pub fn parse(body: &str) -> Result<Config, String> {
@@ -210,6 +212,7 @@ impl Config {
                 self.allreduce_algo = match value {
                     "tree" => AllreduceAlgo::Tree,
                     "rsag" => AllreduceAlgo::Rsag,
+                    "butterfly" => AllreduceAlgo::Butterfly,
                     other => return Err(format!("unknown allreduce algo `{other}`")),
                 }
             }
@@ -434,7 +437,10 @@ mod tests {
         cfg.validate().unwrap();
         assert_eq!(cfg.to_spec().allreduce_algo, AllreduceAlgo::Rsag);
         assert_eq!(Config::default().allreduce_algo, AllreduceAlgo::Tree);
-        assert!(Config::parse("allreduce_algo = butterfly").is_err());
+        let cfg = Config::parse("allreduce-algo = butterfly\n").unwrap();
+        assert_eq!(cfg.allreduce_algo, AllreduceAlgo::Butterfly);
+        assert_eq!(cfg.to_spec().allreduce_algo, AllreduceAlgo::Butterfly);
+        assert!(Config::parse("allreduce_algo = ring").is_err());
     }
 
     #[test]

@@ -68,10 +68,11 @@ USAGE: ftcoll <subcommand> [options]
              [--engine dense|sparse|auto — sparse is the compact-
              replica large-n engine, docs/SCALE.md]
              — simulate fault-tolerant reduce
-  allreduce  same options + [--allreduce-algo tree|rsag]
+  allreduce  same options + [--allreduce-algo tree|rsag|butterfly]
              — simulate fault-tolerant allreduce (tree = corrected
              reduce+broadcast; rsag = reduce-scatter/allgather over
-             per-rank blocks, docs/RSAG.md)
+             per-rank blocks, docs/RSAG.md; butterfly = corrected
+             halving/doubling over correction groups, docs/BUTTERFLY.md)
   broadcast  same options (segment-bytes ignored) — corrected-tree bcast
   run        [--collective reduce|allreduce|broadcast] [--live]
              + the same options — one entry point over both executors
@@ -235,7 +236,7 @@ fn run_sim(args: &Args) -> Result<(), String> {
 /// `ftcoll run`: one entry point over both executors — the chosen
 /// collective runs on the DES by default, or on the live threaded
 /// engine with `--live`. All the usual config options apply, including
-/// `--allreduce-algo tree|rsag`.
+/// `--allreduce-algo tree|rsag|butterfly`.
 fn run_unified(args: &Args) -> Result<(), String> {
     let collective = args.get("collective").unwrap_or("allreduce").to_string();
     let live = args.flag("live");

@@ -16,8 +16,8 @@ use std::collections::HashMap;
 /// per-rank byte lane and completion time is bit-identical.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Metrics {
-    msgs: [u64; 5],
-    bytes: [u64; 5],
+    msgs: [u64; MsgKind::COUNT],
+    bytes: [u64; MsgKind::COUNT],
     /// Wire bytes sent per rank (grown lazily to the highest sender
     /// seen). The per-rank *maximum* is the bandwidth bottleneck the
     /// reduce-scatter/allgather decomposition exists to remove
@@ -124,7 +124,7 @@ impl Metrics {
     /// Merge another metrics block (used when composing reduce+broadcast
     /// measurements).
     pub fn absorb(&mut self, other: &Metrics) {
-        for i in 0..5 {
+        for i in 0..MsgKind::COUNT {
             self.msgs[i] += other.msgs[i];
             self.bytes[i] += other.bytes[i];
         }

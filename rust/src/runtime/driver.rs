@@ -20,6 +20,7 @@
 
 use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
 use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
+use crate::collectives::butterfly::{ButterflyConfig, CorrectedButterfly};
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::pipeline::Pipelined;
 use crate::collectives::reduce::{Reduce, ReduceConfig};
@@ -53,11 +54,14 @@ pub struct RunSpec {
     /// owner's cyclic correction group.
     pub candidates: Option<Vec<Rank>>,
     /// Allreduce decomposition (`--allreduce-algo`): the paper's
-    /// corrected reduce+broadcast through one root, or the
+    /// corrected reduce+broadcast through one root, the
     /// reduce-scatter/allgather over per-rank strided blocks
-    /// ([`crate::collectives::rsag`], docs/RSAG.md). Applies wherever
-    /// an allreduce is built — stand-alone runs, session epochs, and
-    /// under `segment_bytes` pipelining; reduce/broadcast ignore it.
+    /// ([`crate::collectives::rsag`], docs/RSAG.md), or the corrected
+    /// butterfly over replicated correction groups
+    /// ([`crate::collectives::butterfly`], docs/BUTTERFLY.md). Applies
+    /// wherever an allreduce is built — stand-alone runs, session
+    /// epochs, and under `segment_bytes` pipelining; reduce/broadcast
+    /// ignore it.
     pub allreduce_algo: AllreduceAlgo,
     /// Failure-monitor confirmation latency (the §4.2 timeout): virtual
     /// ns on the DES, wall-clock ns on the live engine.
@@ -124,6 +128,12 @@ impl RunSpec {
                 segment::MAX_SEGMENTS
             ));
         }
+        // the butterfly's round/stat frame layout bounds its correction
+        // group width — reject here instead of panicking at construction
+        if self.allreduce_algo == AllreduceAlgo::Butterfly {
+            ButterflyConfig { n: self.n, f: self.f, op_id: 1, base_epoch: self.base_epoch }
+                .check_frames()?;
+        }
         if let Some(ops) = &self.ops_list {
             if ops.is_empty() {
                 return Err("ops_list must not be empty".into());
@@ -141,7 +151,10 @@ impl RunSpec {
         // framing adds one more level below it, and session epoch bands
         // raise the largest base op id that has to survive the shifts
         let framed_levels = u32::from(self.segment_bytes.is_some())
-            + u32::from(self.allreduce_algo == AllreduceAlgo::Rsag);
+            + u32::from(matches!(
+                self.allreduce_algo,
+                AllreduceAlgo::Rsag | AllreduceAlgo::Butterfly
+            ));
         segment::check_budget(u64::from(self.session_ops.max(1)), framed_levels)?;
         Ok(())
     }
@@ -247,6 +260,15 @@ impl<'a> CollectiveDriver<'a> {
         }
     }
 
+    fn butterfly_config(&self) -> ButterflyConfig {
+        ButterflyConfig {
+            n: self.spec.n,
+            f: self.spec.f,
+            op_id: 1,
+            base_epoch: self.spec.base_epoch,
+        }
+    }
+
     fn rsag_config(&self) -> RsagConfig {
         RsagConfig {
             n: self.spec.n,
@@ -293,6 +315,14 @@ impl Driver for CollectiveDriver<'_> {
                     (AllreduceAlgo::Rsag, None) => {
                         Box::new(ReduceScatterAllgather::new(self.rsag_config(), input))
                     }
+                    (AllreduceAlgo::Butterfly, Some(bytes)) => Box::new(
+                        Pipelined::butterfly(self.butterfly_config(), rank, input, bytes),
+                    ),
+                    (AllreduceAlgo::Butterfly, None) => Box::new(CorrectedButterfly::new(
+                        self.butterfly_config(),
+                        rank,
+                        input,
+                    )),
                 }
             }
             DriveKind::Broadcast => {
@@ -370,6 +400,28 @@ mod tests {
             assert!(crate::types::segment::seg_index(m.op).is_some());
             assert_eq!(crate::types::segment::base_op(m.op), 1);
         }
+    }
+
+    #[test]
+    fn butterfly_driver_builds_group_replication_round() {
+        let mut spec = RunSpec::new(8, 1);
+        spec.allreduce_algo = AllreduceAlgo::Butterfly;
+        spec.validate().unwrap();
+        let driver = CollectiveDriver::new(&spec, DriveKind::Allreduce);
+        let mut ctx = crate::collectives::testutil::TestCtx::new(2, 8);
+        let mut proto = driver.make_protocol(2, Value::one_hot(8, 2));
+        proto.on_start(&mut ctx);
+        // round 0 replicates the input to the group sibling (group {2,3})
+        assert_eq!(ctx.sent.len(), 1);
+        assert_eq!(ctx.sent[0].0, 3);
+        assert_eq!(crate::types::segment::base_op(ctx.sent[0].1.op), 1);
+    }
+
+    #[test]
+    fn validate_rejects_oversized_butterfly_groups() {
+        let mut spec = RunSpec::new(400, 199); // one group of 400 > 128
+        spec.allreduce_algo = AllreduceAlgo::Butterfly;
+        assert!(spec.validate().unwrap_err().contains("stat-frame"));
     }
 
     #[test]

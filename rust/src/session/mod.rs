@@ -54,16 +54,21 @@
 //! (it re-pays detection timeouts every epoch) — exclusion is an
 //! optimization, not a correctness requirement. See docs/SESSIONS.md.
 //!
-//! Allreduce epochs run either decomposition
+//! Allreduce epochs run any decomposition
 //! ([`SessionConfig::allreduce_algo`]): the paper's corrected
-//! reduce+broadcast, or reduce-scatter/allgather over per-survivor
-//! blocks (docs/RSAG.md) — rsag epochs derive the membership-sync root
-//! from block 0's winning owner
+//! reduce+broadcast, reduce-scatter/allgather over per-survivor
+//! blocks (docs/RSAG.md), or the corrected butterfly over replicated
+//! correction groups (docs/BUTTERFLY.md). Rsag epochs derive the
+//! membership-sync root from block 0's winning owner
 //! ([`ReduceScatterAllgather::sync_attempts`]) since their aggregate
-//! `attempts` is a max over blocks and names no single rank.
+//! `attempts` is a max over blocks and names no single rank;
+//! butterfly epochs use the lowest committed member of round 0's
+//! first group ([`CorrectedButterfly::sync_attempts`]), piggybacked
+//! through the allgather half.
 
 use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
 use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
+use crate::collectives::butterfly::{ButterflyConfig, CorrectedButterfly};
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::pipeline::Pipelined;
 use crate::collectives::reduce::{Reduce, ReduceConfig};
@@ -114,10 +119,12 @@ pub struct SessionConfig {
     /// (`None` = monolithic). Broadcast epochs ignore it.
     pub segment_bytes: Option<usize>,
     /// Decomposition of allreduce epochs: the paper's corrected
-    /// reduce+broadcast, or reduce-scatter/allgather over per-survivor
-    /// blocks ([`crate::collectives::rsag`]). Each rsag epoch runs over
-    /// the *dense survivors*, so every live member owns exactly one
-    /// block of that epoch. Reduce/broadcast epochs ignore it.
+    /// reduce+broadcast, reduce-scatter/allgather over per-survivor
+    /// blocks ([`crate::collectives::rsag`]), or the corrected
+    /// butterfly ([`crate::collectives::butterfly`]). Each rsag or
+    /// butterfly epoch runs over the *dense survivors* (one block per
+    /// live member / correction groups over live members).
+    /// Reduce/broadcast epochs ignore it.
     pub allreduce_algo: AllreduceAlgo,
 }
 
@@ -164,6 +171,7 @@ enum DataInst {
     R(Reduce),
     A(Allreduce),
     G(ReduceScatterAllgather),
+    Y(CorrectedButterfly),
     P(Pipelined),
     B(Broadcast),
 }
@@ -174,6 +182,7 @@ impl DataInst {
             DataInst::R(p) => p.on_start(ctx),
             DataInst::A(p) => p.on_start(ctx),
             DataInst::G(p) => p.on_start(ctx),
+            DataInst::Y(p) => p.on_start(ctx),
             DataInst::P(p) => p.on_start(ctx),
             DataInst::B(p) => p.on_start(ctx),
         }
@@ -184,6 +193,7 @@ impl DataInst {
             DataInst::R(p) => p.on_message(from, msg, ctx),
             DataInst::A(p) => p.on_message(from, msg, ctx),
             DataInst::G(p) => p.on_message(from, msg, ctx),
+            DataInst::Y(p) => p.on_message(from, msg, ctx),
             DataInst::P(p) => p.on_message(from, msg, ctx),
             DataInst::B(p) => p.on_message(from, msg, ctx),
         }
@@ -194,6 +204,7 @@ impl DataInst {
             DataInst::R(p) => p.on_peer_failed(peer, ctx),
             DataInst::A(p) => p.on_peer_failed(peer, ctx),
             DataInst::G(p) => p.on_peer_failed(peer, ctx),
+            DataInst::Y(p) => p.on_peer_failed(peer, ctx),
             DataInst::P(p) => p.on_peer_failed(peer, ctx),
             DataInst::B(p) => p.on_peer_failed(peer, ctx),
         }
@@ -204,6 +215,7 @@ impl DataInst {
             DataInst::R(p) => p.on_timer(token, ctx),
             DataInst::A(p) => p.on_timer(token, ctx),
             DataInst::G(p) => p.on_timer(token, ctx),
+            DataInst::Y(p) => p.on_timer(token, ctx),
             DataInst::P(p) => p.on_timer(token, ctx),
             DataInst::B(p) => p.on_timer(token, ctx),
         }
@@ -424,6 +436,29 @@ impl Session {
                         }
                     }
                 }
+                AllreduceAlgo::Butterfly => {
+                    // correction groups partition the dense survivors;
+                    // the sync-root hint band [e, e + f + 1) sits inside
+                    // this epoch's data sub-epochs
+                    let ycfg = ButterflyConfig {
+                        n,
+                        f,
+                        op_id: self.cfg.base_op,
+                        base_epoch: e,
+                    };
+                    let me = self
+                        .membership
+                        .dense_of(self.rank)
+                        .expect("session rank is a member");
+                    match self.cfg.segment_bytes {
+                        Some(b) => {
+                            DataInst::P(Pipelined::butterfly(ycfg, me, self.input.clone(), b))
+                        }
+                        None => {
+                            DataInst::Y(CorrectedButterfly::new(ycfg, me, self.input.clone()))
+                        }
+                    }
+                }
             },
             OpKind::Broadcast => {
                 let bcfg = BcastConfig {
@@ -558,8 +593,12 @@ impl Session {
                     // aggregate `attempts` is a max over blocks and names
                     // no single rank, but block 0's attempt count is
                     // delivered consistently (per-block §5.1 agreement).
+                    // Butterfly epochs deliver attempts = 1 always; their
+                    // sync root is the lowest committed member of group 0
+                    // (h), carried as h+1 through the same seam.
                     let sync_attempts = match self.data.as_ref() {
                         Some(DataInst::G(g)) => g.sync_attempts().unwrap_or(attempts),
+                        Some(DataInst::Y(y)) => y.sync_attempts().unwrap_or(attempts),
                         Some(DataInst::P(p)) => p.sync_attempts().unwrap_or(attempts),
                         _ => attempts,
                     };
@@ -572,6 +611,7 @@ impl Session {
                         let dense_report = match self.data.as_ref() {
                             Some(DataInst::A(a)) => a.known_failed().to_vec(),
                             Some(DataInst::G(g)) => g.known_failed(),
+                            Some(DataInst::Y(y)) => y.known_failed(),
                             Some(DataInst::P(p)) => p.allreduce_report(),
                             _ => Vec::new(),
                         };
@@ -702,10 +742,11 @@ impl Protocol for Session {
             return;
         }
         // ours? monolithic epochs and the sync broadcast use the base op
-        // id itself; segmented epochs AND monolithic rsag epochs frame
-        // it once (base << SEG_BITS | i+1, always ≥ 2^20 for base ≥ 1,
-        // so the two never collide); segmented rsag epochs frame twice
-        // (segment above block) — peel both levels
+        // id itself; segmented epochs AND monolithic rsag/butterfly
+        // epochs frame it once (base << SEG_BITS | i+1, always ≥ 2^20
+        // for base ≥ 1, so the two never collide); segmented rsag/
+        // butterfly epochs frame twice (segment above block/round) —
+        // peel both levels
         let ours = msg.op == self.cfg.base_op
             || segment::base_op(msg.op) == self.cfg.base_op
             || segment::base_op(segment::base_op(msg.op)) == self.cfg.base_op;
@@ -1096,6 +1137,51 @@ mod tests {
                             // the dead owner was excluded: no epoch-1 block
                             // rotates (cf. the RootKill healing oracle)
                             assert_eq!(*attempts, 1, "rank {i} epoch 1 rotated");
+                        }
+                    }
+                    o => panic!("rank {i} epoch {e}: unexpected {o:?}"),
+                }
+            }
+        }
+    }
+
+    /// Butterfly session epochs: allreduce epochs run the corrected
+    /// butterfly over the dense survivors. A pre-dead rank inside the
+    /// sync root's correction group is reported by the round-0
+    /// up-correction pass, the sync (the lowest committed member of
+    /// group 0) folds the exclusion, and epoch 1's groups span only
+    /// the survivors. Neither epoch ever rotates (`attempts` = 1).
+    #[test]
+    fn butterfly_session_excludes_dead() {
+        let n = 7u32;
+        let dead = [1u32]; // group 0 = {0, 1} in epoch 0 (g = f+1 = 2)
+        let mut sessions: Vec<Session> = (0..n)
+            .map(|r| {
+                let mut cfg = SessionConfig::new(n, 1, vec![OpKind::Allreduce; 2]);
+                cfg.allreduce_algo = AllreduceAlgo::Butterfly;
+                Session::new(cfg, Value::one_hot(n as usize, r))
+            })
+            .collect();
+        let mut ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+        start_all(&mut sessions, &mut ctxs, &dead);
+        pump(&mut sessions, &mut ctxs, &dead);
+        for i in 0..n as usize {
+            if dead.contains(&(i as u32)) {
+                continue;
+            }
+            let v = sessions[i].view();
+            assert!(v.done, "rank {i}: {v:?}");
+            assert_eq!(v.excluded, vec![1], "rank {i}");
+            assert_eq!(v, sessions[0].view(), "rank {i} view diverged");
+            assert_eq!(ctxs[i].delivered.len(), 2, "rank {i}");
+            for (e, out) in ctxs[i].delivered.iter().enumerate() {
+                match out {
+                    Outcome::Allreduce { value, attempts } => {
+                        assert_eq!(*attempts, 1, "rank {i} epoch {e}: butterfly rotated");
+                        let counts = value.inclusion_counts();
+                        for r in 0..7usize {
+                            let want = if r == 1 { 0 } else { 1 };
+                            assert_eq!(counts[r], want, "rank {i} epoch {e} rank {r}");
                         }
                     }
                     o => panic!("rank {i} epoch {e}: unexpected {o:?}"),

@@ -358,6 +358,18 @@ impl Value {
         }
     }
 
+    /// Zero-copy sub-view of `len` elements starting at element `off`
+    /// ([`ValueView::slice`]): shares this value's buffer. The butterfly
+    /// collective uses it to cut a received round window back into the
+    /// global stride-block partition (docs/BUTTERFLY.md).
+    pub fn slice_elems(&self, off: usize, len: usize) -> Value {
+        match self {
+            Value::F32(v) => Value::F32(v.slice(off, len)),
+            Value::F64(v) => Value::F64(v.slice(off, len)),
+            Value::I64(v) => Value::I64(v.slice(off, len)),
+        }
+    }
+
     /// Reassemble segments produced by [`Value::split_segments`] (in
     /// order) into one freshly-owned value. Panics on an empty slice or
     /// mixed carriers.
@@ -485,15 +497,27 @@ pub enum MsgKind {
     BcastCorrection,
     /// Baseline traffic (flat gather, ring allreduce, gossip, ...).
     Baseline,
+    /// Butterfly recursive-halving exchange (reduce-scatter half),
+    /// including the remainder-group fold-in (docs/BUTTERFLY.md).
+    BflyHalve,
+    /// Butterfly recursive-doubling exchange (allgather half),
+    /// including the remainder-group fold-out.
+    BflyDouble,
 }
 
 impl MsgKind {
-    pub const ALL: [MsgKind; 5] = [
+    /// Number of kinds — sizes the flat per-kind counter arrays in
+    /// [`crate::metrics::Metrics`].
+    pub const COUNT: usize = 7;
+
+    pub const ALL: [MsgKind; MsgKind::COUNT] = [
         MsgKind::UpCorrection,
         MsgKind::TreeUp,
         MsgKind::BcastTree,
         MsgKind::BcastCorrection,
         MsgKind::Baseline,
+        MsgKind::BflyHalve,
+        MsgKind::BflyDouble,
     ];
 
     /// Dense index for array-backed per-kind counters (hot path).
@@ -505,6 +529,8 @@ impl MsgKind {
             MsgKind::BcastTree => 2,
             MsgKind::BcastCorrection => 3,
             MsgKind::Baseline => 4,
+            MsgKind::BflyHalve => 5,
+            MsgKind::BflyDouble => 6,
         }
     }
 
@@ -515,6 +541,8 @@ impl MsgKind {
             MsgKind::BcastTree => "bcast_tree",
             MsgKind::BcastCorrection => "bcast_correction",
             MsgKind::Baseline => "baseline",
+            MsgKind::BflyHalve => "bfly_halve",
+            MsgKind::BflyDouble => "bfly_double",
         }
     }
 }

@@ -1,0 +1,273 @@
+//! Acceptance tests for the corrected butterfly allreduce
+//! (`--allreduce-algo butterfly`, docs/BUTTERFLY.md): clean-run
+//! equivalence with the tree decomposition, pre-operational exclusion
+//! and agreement, survivor agreement under the in-operation failure
+//! classes the butterfly supports (storm / cascade / mid-pipeline),
+//! non-power-of-two group folding, segmentation, self-healing sessions
+//! (where the butterfly never rotates: attempts stay 1), bit-identical
+//! determinism, and the campaign's `-bfly` axis passing its oracles.
+
+use ftcoll::collectives::Outcome;
+use ftcoll::prelude::*;
+use ftcoll::types::MsgKind;
+
+fn bfly_cfg(n: u32, f: u32) -> SimConfig {
+    SimConfig::new(n, f).payload(PayloadKind::OneHot).allreduce_algo(AllreduceAlgo::Butterfly)
+}
+
+/// Pull the single Allreduce outcome of `rank`, asserting the
+/// butterfly's attempt law on the way: delivered attempts are always 1
+/// (corrections happen inside the rounds, never by restarting).
+fn outcome_of(rep: &RunReport, rank: Rank) -> &Value {
+    match rep.outcomes[rank as usize].first() {
+        Some(Outcome::Allreduce { value, attempts }) => {
+            assert_eq!(*attempts, 1, "rank {rank}: butterfly delivered attempts");
+            value
+        }
+        o => panic!("rank {rank}: unexpected {o:?}"),
+    }
+}
+
+/// Clean runs: the butterfly delivers the exact masks the tree
+/// decomposition delivers, once per rank and in a single attempt,
+/// across an (n, f) grid whose group counts cover power-of-two,
+/// fold-remainder, and degenerate corners — and sends no tree or
+/// broadcast traffic doing it.
+#[test]
+fn clean_butterfly_matches_tree_allreduce() {
+    for n in [1u32, 2, 3, 7, 8, 16, 33, 61] {
+        for f in [0u32, 1, 2, 3] {
+            let bfly = run_allreduce(&bfly_cfg(n, f));
+            let tree = run_allreduce(&SimConfig::new(n, f).payload(PayloadKind::OneHot));
+            for r in 0..n {
+                assert_eq!(bfly.deliveries_at(r), 1, "rank {r} n={n} f={f}");
+                assert_eq!(
+                    bfly.value_at(r),
+                    tree.value_at(r),
+                    "rank {r} n={n} f={f}: butterfly mask differs from tree"
+                );
+                outcome_of(&bfly, r);
+            }
+            for kind in [MsgKind::TreeUp, MsgKind::BcastTree, MsgKind::BcastCorrection] {
+                assert_eq!(bfly.metrics.msgs(kind), 0, "n={n} f={f}: {kind:?} traffic");
+            }
+        }
+    }
+}
+
+/// Pre-operational failures: the dead contribute nothing anywhere,
+/// every survivor is included exactly once, and all survivors agree
+/// bit-identically — in one attempt, unlike rsag's owner rotations.
+#[test]
+fn butterfly_excludes_pre_dead_and_agrees() {
+    let cfg = bfly_cfg(12, 2)
+        .failures(vec![FailureSpec::Pre { rank: 5 }, FailureSpec::Pre { rank: 9 }]);
+    let rep = run_allreduce(&cfg);
+    let first = outcome_of(&rep, 0).clone();
+    for r in 0..12u32 {
+        if r == 5 || r == 9 {
+            assert_eq!(rep.deliveries_at(r), 0, "dead rank {r} delivered");
+            continue;
+        }
+        assert_eq!(rep.deliveries_at(r), 1, "rank {r}");
+        assert_eq!(outcome_of(&rep, r), &first, "rank {r} disagrees");
+    }
+    let counts = first.inclusion_counts();
+    for r in 0..12usize {
+        let want = if r == 5 || r == 9 { 0 } else { 1 };
+        assert_eq!(counts[r], want, "rank {r} inclusion");
+    }
+}
+
+/// In-operation kills, survivor-agreement edition. `AtTime` kills are
+/// handler-atomic — a victim either fully committed its input or never
+/// started — so storms (simultaneous) and cascades (staggered) are
+/// exact even with both victims in the same correction group. Every
+/// survivor delivers once, all agree bit-identically, survivors are
+/// included exactly once, and a victim's inclusion is all-or-nothing.
+#[test]
+fn butterfly_storm_and_cascade_survivors_agree() {
+    // (label, n, f, kills): storm = same-instant pair, cascade =
+    // staggered pair, same_group = both victims in group {3,4,5}
+    let plans: &[(&str, u32, u32, Vec<FailureSpec>)] = &[
+        (
+            "storm",
+            16,
+            2,
+            vec![
+                FailureSpec::AtTime { rank: 6, at: 2_500 },
+                FailureSpec::AtTime { rank: 11, at: 2_500 },
+            ],
+        ),
+        (
+            "cascade",
+            16,
+            2,
+            vec![
+                FailureSpec::AtTime { rank: 4, at: 2_000 },
+                FailureSpec::AtTime { rank: 13, at: 4_500 },
+            ],
+        ),
+        (
+            "same_group",
+            12,
+            2,
+            vec![
+                FailureSpec::AtTime { rank: 4, at: 2_000 },
+                FailureSpec::AtTime { rank: 5, at: 3_000 },
+            ],
+        ),
+    ];
+    for (label, n, f, kills) in plans {
+        let victims: Vec<Rank> = kills.iter().map(|k| k.rank()).collect();
+        let rep = run_allreduce(&bfly_cfg(*n, *f).failures(kills.clone()));
+        assert!(rep.makespan().is_some(), "{label}: run did not complete");
+        let lead: Rank = (0..*n).find(|r| !victims.contains(r)).unwrap();
+        let first = outcome_of(&rep, lead).clone();
+        for r in 0..*n {
+            if victims.contains(&r) {
+                continue;
+            }
+            assert_eq!(rep.deliveries_at(r), 1, "{label}: rank {r}");
+            assert_eq!(outcome_of(&rep, r), &first, "{label}: rank {r} disagrees");
+        }
+        let counts = first.inclusion_counts();
+        for r in 0..*n as usize {
+            if victims.contains(&(r as Rank)) {
+                assert!(counts[r] <= 1, "{label}: victim {r} included {} times", counts[r]);
+            } else {
+                assert_eq!(counts[r], 1, "{label}: rank {r} inclusion");
+            }
+        }
+    }
+}
+
+/// Mid-send (`AfterSends`) kills in *distinct* correction groups — the
+/// mid-pipeline class the campaign draws one-victim-per-group. Each
+/// group's survivors reconcile the victim's partially-replicated input
+/// to a unanimous verdict, so all survivors still agree bit-identically.
+#[test]
+fn butterfly_midpipe_survivors_agree() {
+    // n=12 f=2: groups {0,1,2} {3,4,5} {6,7,8} {9,10,11}; victims in
+    // groups 1 and 2, one dying before any send, one mid-replication
+    let cfg = bfly_cfg(12, 2).failures(vec![
+        FailureSpec::AfterSends { rank: 4, sends: 1 },
+        FailureSpec::AfterSends { rank: 7, sends: 0 },
+    ]);
+    let rep = run_allreduce(&cfg);
+    assert!(rep.makespan().is_some(), "midpipe run did not complete");
+    let first = outcome_of(&rep, 0).clone();
+    for r in 0..12u32 {
+        if r == 4 || r == 7 {
+            continue;
+        }
+        assert_eq!(rep.deliveries_at(r), 1, "rank {r}");
+        assert_eq!(outcome_of(&rep, r), &first, "rank {r} disagrees");
+    }
+    let counts = first.inclusion_counts();
+    for r in 0..12usize {
+        if r == 4 || r == 7 {
+            assert!(counts[r] <= 1, "victim {r} included {} times", counts[r]);
+        } else {
+            assert_eq!(counts[r], 1, "rank {r} inclusion");
+        }
+    }
+}
+
+/// Butterfly under `--segment-bytes`: per-segment butterfly instances
+/// (double op-id framing) deliver the exact masks the monolithic run
+/// delivers, clean and with a pre-dead rank.
+#[test]
+fn segmented_butterfly_matches_monolithic_masks() {
+    for (n, f, failures) in [
+        (7u32, 1u32, vec![]),
+        (8, 2, vec![FailureSpec::Pre { rank: 5 }]),
+    ] {
+        let mono = SimConfig::new(n, f)
+            .payload(PayloadKind::SegMask { segments: 3 })
+            .allreduce_algo(AllreduceAlgo::Butterfly)
+            .failures(failures);
+        let seg = mono.clone().segment_bytes(8 * n as usize);
+        let a = run_allreduce(&mono);
+        let b = run_allreduce(&seg);
+        for r in 0..n {
+            assert_eq!(a.value_at(r), b.value_at(r), "rank {r} n={n} f={f}");
+        }
+    }
+}
+
+/// Butterfly inside a self-healing session: epoch 0's group-local
+/// correction detects and reports the dead sibling, the membership sync
+/// excludes it, and — unlike tree (RootKill rotations) and rsag (owner
+/// rotations) — *every* epoch including epoch 0 completes in a single
+/// attempt, because correction happens inside the rounds.
+#[test]
+fn butterfly_session_excludes_and_heals() {
+    let mut cfg = bfly_cfg(8, 2).failures(vec![FailureSpec::Pre { rank: 3 }]);
+    cfg.session_ops = 3;
+    let rep = run_session(&cfg, OpKind::Allreduce);
+    let v0 = &rep.views[0];
+    for r in 0..8u32 {
+        if r == 3 {
+            assert_eq!(rep.run.deliveries_at(r), 0, "dead rank delivered");
+            continue;
+        }
+        let v = &rep.views[r as usize];
+        assert!(v.done, "rank {r}: {v:?}");
+        assert_eq!(v.excluded, vec![3], "rank {r}");
+        assert_eq!(v, v0, "rank {r} view diverged");
+        assert_eq!(rep.run.outcomes[r as usize].len(), 3, "rank {r} epochs");
+        for (e, out) in rep.run.outcomes[r as usize].iter().enumerate() {
+            match out {
+                Outcome::Allreduce { value, attempts } => {
+                    assert_eq!(*attempts, 1, "rank {r} epoch {e}: the butterfly never rotates");
+                    let counts = value.inclusion_counts();
+                    for x in 0..8usize {
+                        let want = if x == 3 { 0 } else { 1 };
+                        assert_eq!(counts[x], want, "rank {r} epoch {e} rank {x}");
+                    }
+                }
+                o => panic!("rank {r} epoch {e}: unexpected {o:?}"),
+            }
+        }
+    }
+}
+
+/// Determinism: identical configurations — including an in-operation
+/// storm — produce bit-identical runs, down to the per-kind message
+/// counters the campaign replays compare.
+#[test]
+fn butterfly_is_deterministic() {
+    let cfg = bfly_cfg(16, 2).failures(vec![
+        FailureSpec::Pre { rank: 7 },
+        FailureSpec::AtTime { rank: 11, at: 2_500 },
+    ]);
+    let a = run_allreduce(&cfg);
+    let b = run_allreduce(&cfg);
+    assert_eq!(a.final_time, b.final_time);
+    assert_eq!(a.metrics.total_msgs(), b.metrics.total_msgs());
+    for kind in [MsgKind::UpCorrection, MsgKind::BflyHalve, MsgKind::BflyDouble] {
+        assert_eq!(a.metrics.msgs(kind), b.metrics.msgs(kind), "{kind:?}");
+    }
+    assert_eq!(a.value_at(0), b.value_at(0));
+}
+
+/// The campaign's `-bfly` scenarios — which, unlike `-rsag`, include
+/// the in-operation storm/cascade/mid-pipeline families — execute
+/// end-to-end and satisfy every applicable oracle (delivery, value,
+/// agreement, the attempts-stay-1 law, and the per-round closed-form
+/// message counts against the butterfly baseline).
+#[test]
+fn campaign_bfly_scenarios_pass_oracles() {
+    use ftcoll::campaign::{self, GridConfig};
+    let grid = GridConfig { count: 400, seed: 7, max_n: 64 };
+    let specs = campaign::generate(&grid);
+    let mut seen = 0;
+    for spec in specs.iter().filter(|s| s.id.contains("-bfly")).take(6) {
+        seen += 1;
+        let base = campaign::baseline_of(spec);
+        let (result, _rep) = campaign::run_scenario(spec, &base);
+        assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
+    }
+    assert!(seen >= 1, "no butterfly scenario in a 400-scenario grid");
+}

@@ -11,8 +11,10 @@
 //! * only exact carriers (`OneHot`/`SegMask` i64 masks, `RankValue`
 //!   small-integer f64 sums) — f32 vectors combine in timing-dependent
 //!   order and are compared by the campaign oracles instead;
-//! * failures are pre-operational only (in-op inclusion is legitimately
-//!   0-or-1 depending on timing, so the two executors may differ);
+//! * failures are pre-operational, except the butterfly rows' f=1
+//!   `AfterSends` kills, whose commit-or-not verdict is deterministic
+//!   (see `check_bfly`) — other in-op inclusion is legitimately 0-or-1
+//!   depending on timing, so the two executors may differ;
 //! * exact report equality is asserted where the report is provably
 //!   timing-independent — clean runs (empty) and single pre-kills under
 //!   `List` with f=1, where the victim's group peer always records it
@@ -201,6 +203,40 @@ fn check_rsag(
     compare_allreduce(name, n, &dead, &des, &live);
 }
 
+/// Corrected-butterfly differential. Same exact-carrier selection; the
+/// in-round kills use `AfterSends` with f=1, where the group width is 2
+/// and the victim's first send is its init-time input replication to
+/// its single sibling — so `sends: 0` (input never committed, the
+/// sibling's unanimous STAT_NONE excludes it) and `sends: 1` (the
+/// replication landed, STAT_SOME includes it) are both
+/// timing-independent on either executor, unlike `AtTime` kills whose
+/// live-engine meaning is wall-clock.
+fn check_bfly(
+    name: &str,
+    n: u32,
+    f: u32,
+    payload: PayloadKind,
+    failures: Vec<FailureSpec>,
+    segment_bytes: Option<usize>,
+) {
+    let dead: Vec<Rank> = failures.iter().map(|s| s.rank()).collect();
+    let mut des_cfg = SimConfig::new(n, f)
+        .payload(payload)
+        .failures(failures.clone())
+        .allreduce_algo(AllreduceAlgo::Butterfly);
+    des_cfg.segment_bytes = segment_bytes;
+    let des = sim::run_allreduce(&des_cfg);
+
+    let mut live_cfg = EngineConfig::new(n, f);
+    live_cfg.payload = payload;
+    live_cfg.failures = failures;
+    live_cfg.segment_bytes = segment_bytes;
+    live_cfg.allreduce_algo = AllreduceAlgo::Butterfly;
+    let live = live_allreduce(&live_cfg);
+
+    compare_allreduce(name, n, &dead, &des, &live);
+}
+
 #[test]
 fn reduce_clean_all_schemes() {
     for (n, f) in [(2u32, 1u32), (4, 1), (7, 1), (8, 1), (9, 2), (12, 2), (16, 3)] {
@@ -332,6 +368,68 @@ fn segmented_rsag_differential() {
     for failures in [vec![], vec![FailureSpec::Pre { rank: 4 }]] {
         check_rsag(
             "rsag/segmented",
+            8,
+            1,
+            PayloadKind::SegMask { segments: 3 },
+            failures,
+            Some(8 * 8),
+        );
+    }
+}
+
+#[test]
+fn bfly_differential() {
+    for (n, f) in [(4u32, 1u32), (7, 1), (8, 2)] {
+        check_bfly("bfly/clean", n, f, PayloadKind::OneHot, vec![], None);
+    }
+    // f=1 single pre-kill: the victim's sibling reports it group-locally
+    // and every survivor excludes it, in a single attempt on both
+    // executors
+    check_bfly(
+        "bfly/pre1",
+        8,
+        1,
+        PayloadKind::OneHot,
+        vec![FailureSpec::Pre { rank: 5 }],
+        None,
+    );
+    // in-round kill before the replication send: the input never
+    // committed, so the sibling's unanimous STAT_NONE excludes the
+    // victim deterministically
+    check_bfly(
+        "bfly/inround-drop",
+        8,
+        1,
+        PayloadKind::OneHot,
+        vec![FailureSpec::AfterSends { rank: 5, sends: 0 }],
+        None,
+    );
+    // in-round kill after the replication send: the input committed at
+    // the sibling, so STAT_SOME includes the dead victim exactly once
+    check_bfly(
+        "bfly/inround-commit",
+        8,
+        1,
+        PayloadKind::OneHot,
+        vec![FailureSpec::AfterSends { rank: 5, sends: 1 }],
+        None,
+    );
+    // exact small-integer sums are order-independent
+    check_bfly(
+        "bfly/rank",
+        12,
+        2,
+        PayloadKind::RankValue,
+        vec![FailureSpec::Pre { rank: 6 }, FailureSpec::Pre { rank: 9 }],
+        None,
+    );
+}
+
+#[test]
+fn segmented_bfly_differential() {
+    for failures in [vec![], vec![FailureSpec::Pre { rank: 4 }]] {
+        check_bfly(
+            "bfly/segmented",
             8,
             1,
             PayloadKind::SegMask { segments: 3 },

@@ -250,6 +250,135 @@ fn view_api_windows_and_uniqueness() {
     });
 }
 
+/// Butterfly round schedules (docs/BUTTERFLY.md): at every halving
+/// round the partner relation is an involution whose two sides exchange
+/// mirrored windows, keep and send tile the round's parent window, the
+/// kept windows nest (round r+1 subdivides round r's keep), and after
+/// all k rounds each group owns exactly its own stride block. Doubling
+/// is halving played backwards: round r mirrors halving round k-1-r
+/// with keep/send swapped, and growing back up restores [0, n').
+#[test]
+fn butterfly_round_schedules_partition() {
+    use ftcoll::collectives::butterfly::{double_step, halve_step};
+    run_cases("butterfly/schedule", PropConfig::default(), |rng| {
+        let k = rng.below(7) as u32;
+        let nprime = 1u32 << k;
+        for gid in 0..nprime {
+            let mut window = (0u32, nprime);
+            for r in 0..k {
+                let s = halve_step(gid, r, nprime);
+                let p = halve_step(s.partner, r, nprime);
+                prop_assert!(s.partner != gid, "gid {gid} round {r}: self-partner");
+                prop_assert_eq!(p.partner, gid, "gid {gid} round {r}: not an involution");
+                prop_assert_eq!(p.send, s.keep, "gid {gid} round {r}: partner send");
+                prop_assert_eq!(p.keep, s.send, "gid {gid} round {r}: partner keep");
+                // keep and send tile the parent window
+                let (lo, hi) = window;
+                let d = hi - lo;
+                prop_assert_eq!(s.keep.1 - s.keep.0, d / 2, "gid {gid} round {r}: keep width");
+                prop_assert_eq!(s.send.1 - s.send.0, d / 2, "gid {gid} round {r}: send width");
+                let (a, b) = if s.keep.0 < s.send.0 { (s.keep, s.send) } else { (s.send, s.keep) };
+                prop_assert_eq!(a.0, lo, "gid {gid} round {r}: parent lo");
+                prop_assert_eq!(a.1, b.0, "gid {gid} round {r}: windows do not abut");
+                prop_assert_eq!(b.1, hi, "gid {gid} round {r}: parent hi");
+                // doubling round k-1-r mirrors this round with roles swapped
+                let m = double_step(gid, k - 1 - r);
+                prop_assert_eq!(m.partner, s.partner, "gid {gid} round {r}: mirror partner");
+                prop_assert_eq!(m.send, s.keep, "gid {gid} round {r}: mirror send");
+                prop_assert_eq!(m.keep, s.send, "gid {gid} round {r}: mirror keep");
+                window = s.keep;
+            }
+            prop_assert_eq!(window, (gid, gid + 1), "gid {gid}: final ownership");
+            // grow back up: doubling restores the full block range
+            let mut window = (gid, gid + 1);
+            for r in 0..k {
+                let s = double_step(gid, r);
+                prop_assert_eq!(s.send, window, "gid {gid} double {r}: sends current window");
+                let (a, b) = if s.keep.0 < s.send.0 { (s.keep, s.send) } else { (s.send, s.keep) };
+                prop_assert_eq!(a.1, b.0, "gid {gid} double {r}: windows do not abut");
+                window = (a.0, b.1);
+            }
+            prop_assert_eq!(window, (0, nprime), "gid {gid}: doubling must restore [0, n')");
+        }
+        Ok(())
+    });
+}
+
+/// Correction-group geometry: `members_of` partitions the ranks in
+/// ascending order, `group_of` agrees with it, and the non-power-of-two
+/// remainder fold maps each surplus group j ∈ [n', m) to the distinct
+/// butterfly group j - n' — a round-trip, since m < 2n' keeps the
+/// mapping injective.
+#[test]
+fn butterfly_group_fold_round_trips() {
+    use ftcoll::collectives::butterfly::{pow2_floor, ButterflyConfig};
+    run_cases("butterfly/group_fold", PropConfig::default(), |rng| {
+        let n = rng.range(1, 200) as u32;
+        let f = rng.below(7) as u32;
+        let cfg = ButterflyConfig::new(n, f);
+        let m = cfg.num_groups();
+        let np = cfg.butterfly_groups();
+        prop_assert_eq!(np, pow2_floor(m), "n={n} f={f}: butterfly group count");
+        prop_assert!(m < 2 * np, "n={n} f={f}: fold targets collide");
+        let mut next = 0u32;
+        for j in 0..m {
+            let r = cfg.members_of(j);
+            prop_assert_eq!(r.start, next, "n={n} f={f}: group {j} not contiguous");
+            prop_assert!(r.end > r.start, "n={n} f={f}: group {j} empty");
+            for rank in r.clone() {
+                prop_assert_eq!(cfg.group_of(rank), j, "n={n} f={f}: rank {rank}");
+            }
+            next = r.end;
+        }
+        prop_assert_eq!(next, n, "n={n} f={f}: groups do not cover the ranks");
+        // every fold source lands on a real butterfly group, injectively
+        for j in np..m {
+            prop_assert!(j - np < np, "n={n} f={f}: fold source {j} target out of range");
+        }
+        Ok(())
+    });
+}
+
+/// Stride-block conservation along the butterfly's windows: walking a
+/// group's halving schedule over `stride_blocks(n')` windows preserves
+/// element count and wire bytes at every round, ends on exactly the
+/// group's own block, and reassembling the final per-group blocks
+/// restores the original value bit-for-bit.
+#[test]
+fn butterfly_windows_conserve_stride_blocks() {
+    use ftcoll::collectives::butterfly::halve_step;
+    run_cases("butterfly/window_conservation", PropConfig::default(), |rng| {
+        let k = rng.range(1, 5) as u32;
+        let nprime = 1u32 << k;
+        let v = random_value(rng);
+        let parts = v.stride_blocks(nprime as usize);
+        let len_of = |w: (u32, u32)| -> usize {
+            parts[w.0 as usize..w.1 as usize].iter().map(Value::len).sum()
+        };
+        for gid in 0..nprime {
+            let mut window = (0u32, nprime);
+            for r in 0..k {
+                let s = halve_step(gid, r, nprime);
+                prop_assert_eq!(
+                    len_of(s.keep) + len_of(s.send),
+                    len_of(window),
+                    "gid {gid} round {r}: halving lost elements"
+                );
+                window = s.keep;
+            }
+            prop_assert_eq!(
+                len_of(window),
+                parts[gid as usize].len(),
+                "gid {gid}: final window is not the own block"
+            );
+        }
+        let wire: usize = parts.iter().map(Value::wire_bytes).sum();
+        prop_assert_eq!(wire, v.wire_bytes(), "block plane changed wire bytes");
+        prop_assert_eq!(Value::concat_segments(&parts), v, "reassembly lost data");
+        Ok(())
+    });
+}
+
 /// End-to-end: a segmented DES allreduce over the view plane produces
 /// the exact masks the monolithic (single-buffer) run produces — the
 /// refactor is invisible to protocol semantics.
