@@ -19,6 +19,16 @@ use ftcoll::prelude::*;
 
 const MIB: u32 = 262_144; // 1 MiB of f32
 
+/// Resolve `name` against the crate root so the gate record lands at
+/// the repo root (committed + diffed by tools/bench_trajectory.py)
+/// regardless of the invoking directory.
+fn repo_root_path(name: &str) -> std::path::PathBuf {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(root) => std::path::Path::new(&root).join(name),
+        Err(_) => std::path::PathBuf::from(name),
+    }
+}
+
 /// Run one DES allreduce; return (total msgs, max per-rank sent bytes,
 /// total bytes, makespan ns).
 fn measure(cfg: &SimConfig) -> (u64, u64, u64, u64) {
@@ -111,7 +121,8 @@ fn main() {
          \"gate_msg_ratio_min\":2.0,\"gate_byte_ratio_max\":1.1,\"pass\":true}}\n",
         4 * MIB as u64,
     );
-    std::fs::write("BENCH_butterfly.json", &json).expect("write BENCH_butterfly.json");
+    std::fs::write(repo_root_path("BENCH_butterfly.json"), &json)
+        .expect("write BENCH_butterfly.json");
     println!("wrote BENCH_butterfly.json");
     println!(
         "acceptance: butterfly {msg_ratio:.1}x fewer msgs than rsag, per-rank \

@@ -13,8 +13,9 @@ fn main() {
         let label = if threads == 0 { "auto".to_string() } else { threads.to_string() };
         let r = b.bench(&format!("campaign/c{count}_t{label}"), || {
             let res = run_campaign(&CampaignConfig {
-                grid: GridConfig { count, seed: 11, max_n: 64 },
+                grid: GridConfig { count, seed: 11, max_n: 64, bign: 0 },
                 threads,
+                shards: 1,
             });
             assert_eq!(res.failed_count(), 0, "bench campaign must pass oracles");
             std::hint::black_box(res.scenarios.len());
@@ -30,8 +31,9 @@ fn main() {
     let count = if std::env::var("FTCOLL_BENCH_FAST").is_ok() { 100u32 } else { 400 };
     let r = b.bench(&format!("campaign/c{count}_tauto_n128"), || {
         let res = run_campaign(&CampaignConfig {
-            grid: GridConfig { count, seed: 13, max_n: 128 },
+            grid: GridConfig { count, seed: 13, max_n: 128, bign: 0 },
             threads: 0,
+            shards: 1,
         });
         std::hint::black_box(res.total_checks());
     });

@@ -57,7 +57,7 @@ use crate::collectives::{Outcome, ReduceOp};
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
 use crate::sim::RunReport;
-use crate::topology::{IfTree, UpCorrectionGroups};
+use crate::topology::{BinomialTree, IfTree, UpCorrectionGroups};
 use crate::types::{MsgKind, Rank, Value};
 use std::collections::HashSet;
 
@@ -87,6 +87,17 @@ impl Baseline {
         let upcorr = UpCorrectionGroups::new(n, f).failure_free_messages();
         let tree = u64::from(n - 1);
         Baseline { total_msgs: upcorr + tree, upcorr_msgs: upcorr, tree_msgs: tree }
+    }
+
+    /// Closed form for a single-attempt tree allreduce: the reduce half
+    /// above plus the corrected-tree broadcast — one `BcastTree` per
+    /// non-root (the binomial dissemination edges) and `min(f+1, n-1)`
+    /// ring corrections from each of the `n` ranks (every rank that
+    /// acquires the value corrects its successors exactly once).
+    pub fn closed_form_allreduce(n: u32, f: u32) -> Baseline {
+        let r = Baseline::closed_form(n, f);
+        let bcast = u64::from(n - 1) + u64::from(n) * u64::from((f + 1).min(n - 1));
+        Baseline { total_msgs: r.total_msgs + bcast, ..r }
     }
 }
 
@@ -207,10 +218,25 @@ pub fn check(spec: &ScenarioSpec, rep: &RunReport, base: &Baseline) -> OracleRep
     }
 
     if spec.bign {
-        check_bign_counts(spec, rep, &mut o);
+        check_bign(spec, rep, &mut o);
     }
 
     o
+}
+
+/// Dispatch the large-n exact counters by collective and failure shape:
+/// purely pre-operational plans have per-dead-rank closed forms, the
+/// timed in-operation kill (one `AtTime` victim at `t = 1`) its own.
+fn check_bign(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport) {
+    let inop = spec.failures.iter().any(|s| !s.is_pre_operational());
+    match (spec.collective, inop) {
+        (Collective::Reduce, false) => check_bign_counts(spec, rep, o),
+        (Collective::Allreduce, false) => check_bign_allreduce_counts(spec, rep, o),
+        (Collective::Reduce, true) | (Collective::Allreduce, true) => {
+            check_bign_inop_counts(spec, rep, o)
+        }
+        (Collective::Broadcast, _) => {}
+    }
 }
 
 /// Closed-form *exact* counters for the large-n axis: a reduce rooted
@@ -277,6 +303,158 @@ fn check_bign_counts(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport)
     o.check(got_events == events, || {
         format!("bign: {got_events} events processed, closed form {events}")
     });
+}
+
+/// Per-kind count checks shared by the large-n allreduce and in-op
+/// checkers (the reduce-only checker predates them and keeps its
+/// messages unchanged).
+#[allow(clippy::too_many_arguments)]
+fn check_bign_kinds(
+    rep: &RunReport,
+    upcorr: u64,
+    tree_msgs: u64,
+    bcast_tree: u64,
+    bcast_corr: u64,
+    absorbed: u64,
+    events: u64,
+    o: &mut OracleReport,
+) {
+    let m = &rep.metrics;
+    for (kind, want) in [
+        (MsgKind::UpCorrection, upcorr),
+        (MsgKind::TreeUp, tree_msgs),
+        (MsgKind::BcastTree, bcast_tree),
+        (MsgKind::BcastCorrection, bcast_corr),
+    ] {
+        let got = m.msgs(kind);
+        o.check(got == want, || format!("bign: {got} {kind:?} msgs, closed form {want}"));
+    }
+    let got_dead = m.sends_to_dead();
+    o.check(got_dead == absorbed, || {
+        format!("bign: {got_dead} sends absorbed by dead ranks, closed form {absorbed}")
+    });
+    let got_events = m.events();
+    o.check(got_events == events, || {
+        format!("bign: {got_events} events processed, closed form {events}")
+    });
+}
+
+/// Closed-form exact counters for the large-n single-attempt tree
+/// allreduce with a purely pre-operational dead set off the candidate
+/// band (so the first attempt is the only attempt and the broadcast
+/// ring/tree sit in identity position). The reduce half is exactly
+/// [`check_bign_counts`]; the broadcast half adds, per the corrected-
+/// tree discipline:
+///
+/// * `BcastTree` — every *live* rank disseminates once to all its
+///   binomial children (dead or not);
+/// * `BcastCorrection` — `min(f+1, n-1)` ring corrections per live
+///   rank;
+/// * absorbed sends grow by each dead rank's live binomial parent and
+///   its live ring predecessors within correction distance;
+/// * no new detections — broadcast watches no one, and the candidate
+///   watch is on the live root.
+fn check_bign_allreduce_counts(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport) {
+    let n = spec.n;
+    let groups = UpCorrectionGroups::new(n, spec.f);
+    let tree = IfTree::new(n, spec.f);
+    let btree = BinomialTree::new(n);
+    let dset: HashSet<Rank> = rep.dead.iter().copied().collect();
+    let d = rep.dead.len() as u64;
+
+    // reduce half (identical discipline to check_bign_counts)
+    let mut upcorr_lost = 0u64;
+    let mut absorbed = 0u64;
+    let mut detects = 0u64;
+    for &v in &rep.dead {
+        let peers = groups.peers_of(v);
+        let live_peers = peers.iter().filter(|p| !dset.contains(p)).count() as u64;
+        upcorr_lost += peers.len() as u64;
+        absorbed += live_peers;
+        detects += live_peers;
+        absorbed += tree.children(v).iter().filter(|c| !dset.contains(c)).count() as u64;
+        if !dset.contains(&tree.parent(v).expect("the root never dies")) {
+            detects += 1;
+        }
+    }
+    let upcorr = groups.failure_free_messages() - upcorr_lost;
+    let tree_msgs = u64::from(n - 1) - d;
+
+    // broadcast half
+    let dmax = (spec.f + 1).min(n - 1);
+    let mut bcast_tree = 0u64;
+    for r in (0..n).filter(|r| !dset.contains(r)) {
+        for c in btree.children(r) {
+            bcast_tree += 1;
+            if dset.contains(&c) {
+                absorbed += 1;
+            }
+        }
+    }
+    let bcast_corr = (u64::from(n) - d) * u64::from(dmax);
+    for &v in &rep.dead {
+        for dist in 1..=dmax {
+            if !dset.contains(&((v + n - dist) % n)) {
+                absorbed += 1;
+            }
+        }
+    }
+
+    let total = upcorr + tree_msgs + bcast_tree + bcast_corr;
+    let events = (u64::from(n) - d) + (total - absorbed) + detects;
+    check_bign_kinds(rep, upcorr, tree_msgs, bcast_tree, bcast_corr, absorbed, events, o);
+}
+
+/// Closed-form exact counters for the timed in-operation large-n
+/// families: one `AtTime { at: 1 }` kill of an I(f)-tree *leaf* `v`
+/// strictly past the candidate band. The timing is the whole point —
+/// up-corrections all depart at `t = 0` while `v` is still alive, and
+/// every network preset has `send_ovh + latency >= 1`, so the kill
+/// (seq 1, popped before any same-time `Deliver`) lands after every
+/// reduce-phase send but before any arrival:
+///
+/// * `v`'s own up-corrections are already out — the Theorem 5 count
+///   stays whole — but `v` never completes the exchange, so exactly
+///   one `TreeUp` is missing;
+/// * nothing sent at `t = 0` is absorbed: the dead-destination check
+///   runs at *send* time, so messages in flight toward `v` pop as
+///   ordinary (dropped) `Deliver` events;
+/// * detections: every group peer of `v` is still watching at the kill
+///   (they unwatch at arrival, `>= 1`), plus `v`'s tree parent's
+///   watch-on-dead when it enters the tree phase — whether a peer's
+///   `Detect` fires before or after `v`'s value arrives only changes
+///   which guard drops it, never the event count;
+/// * allreduce only: the broadcast starts after the kill, so `v` is
+///   absent from dissemination and every broadcast send into `v` (one
+///   from its live binomial parent, `min(f+1, n-1)` ring corrections)
+///   is absorbed at send time.
+fn check_bign_inop_counts(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport) {
+    let n = spec.n;
+    let groups = UpCorrectionGroups::new(n, spec.f);
+    let v = spec.failures[0].rank();
+    let peers = groups.peers_of(v).len() as u64;
+
+    let upcorr = groups.failure_free_messages();
+    let tree_msgs = u64::from(n - 1) - 1;
+    let detects = peers + 1;
+    let (bcast_tree, bcast_corr, absorbed) = if spec.collective == Collective::Allreduce {
+        let btree = BinomialTree::new(n);
+        let dmax = u64::from((spec.f + 1).min(n - 1));
+        let mut bt = 0u64;
+        let mut parent_sends = 0u64;
+        for r in (0..n).filter(|&r| r != v) {
+            let cs = btree.children(r);
+            bt += cs.len() as u64;
+            parent_sends += cs.iter().filter(|&&c| c == v).count() as u64;
+        }
+        (bt, u64::from(n - 1) * dmax, parent_sends + dmax)
+    } else {
+        (0, 0, 0)
+    };
+
+    let total = upcorr + tree_msgs + bcast_tree + bcast_corr;
+    let events = u64::from(n) + 1 + (total - absorbed) + detects;
+    check_bign_kinds(rep, upcorr, tree_msgs, bcast_tree, bcast_corr, absorbed, events, o);
 }
 
 /// Closed-form failure-free per-kind counts of a corrected butterfly

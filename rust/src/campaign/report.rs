@@ -274,6 +274,7 @@ mod tests {
         let cfg = CampaignConfig {
             grid: GridConfig { count: 12, seed: 4, max_n: 32, bign: 0 },
             threads: 2,
+            shards: 1,
         };
         let a = to_json(&run_campaign(&cfg));
         let b = to_json(&run_campaign(&cfg));
@@ -292,6 +293,7 @@ mod tests {
         let cfg = CampaignConfig {
             grid: GridConfig { count: 20, seed: 6, max_n: 32, bign: 0 },
             threads: 2,
+            shards: 1,
         };
         let result = run_campaign(&cfg);
         let table = summary_table(&result);

@@ -12,6 +12,7 @@
 
 use super::oracle::{self, Baseline};
 use super::spec::{generate, Collective, GridConfig, ScenarioSpec};
+use crate::runtime::DriveKind;
 use crate::sim::{self, RunReport};
 use crate::types::TimeNs;
 use std::collections::HashMap;
@@ -24,11 +25,18 @@ pub struct CampaignConfig {
     pub grid: GridConfig,
     /// Worker threads; 0 = one per available core.
     pub threads: usize,
+    /// Sparse-engine shard count for large-n scenarios (`--shards`):
+    /// 1 = sequential, 0 = auto, K = exactly K when shardable. Kept
+    /// out of [`GridConfig`] on purpose — sharding is an execution
+    /// knob and must never influence scenario generation or ids (and
+    /// the sharded engine is bit-identical anyway, see
+    /// `crate::sim::shard`).
+    pub shards: u32,
 }
 
 impl Default for CampaignConfig {
     fn default() -> Self {
-        CampaignConfig { grid: GridConfig::default(), threads: 0 }
+        CampaignConfig { grid: GridConfig::default(), threads: 0, shards: 1 }
     }
 }
 
@@ -96,8 +104,12 @@ impl CampaignResult {
 /// Borrows the spec throughout — the only per-scenario allocations are
 /// the id string and dead list the result record owns (the run's
 /// payload traffic itself moves by refcount, [`crate::types`]).
-pub fn run_scenario(spec: &ScenarioSpec, base: &Baseline) -> (ScenarioResult, RunReport) {
-    let rep = execute(spec, false);
+pub fn run_scenario(
+    spec: &ScenarioSpec,
+    base: &Baseline,
+    shards: u32,
+) -> (ScenarioResult, RunReport) {
+    let rep = execute(spec, false, shards);
     let o = oracle::check(spec, &rep, base);
     let attempts = rep
         .outcomes
@@ -128,20 +140,30 @@ pub fn run_scenario(spec: &ScenarioSpec, base: &Baseline) -> (ScenarioResult, Ru
     (result, rep)
 }
 
-/// Run the scenario's collective on the DES (optionally traced).
-/// Session scenarios (`session_ops > 1`) run the self-healing session
-/// driver; the per-epoch outcomes land in the report in epoch order.
-pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
+/// Run the scenario's collective on the DES (optionally traced,
+/// optionally sharded — `shards` only reaches the sparse engine, so it
+/// can never change a result, see `crate::sim::shard`). Session
+/// scenarios (`session_ops > 1`) run the self-healing session driver;
+/// the per-epoch outcomes land in the report in epoch order.
+pub fn execute(spec: &ScenarioSpec, trace: bool, shards: u32) -> RunReport {
     let mut cfg = spec.sim_config();
     cfg.trace = trace;
+    cfg.shards = shards;
     if spec.is_session() {
         return sim::run_session(&cfg, spec.collective.op_kind()).run;
     }
+    // the large-n axis goes through the engine-selecting entry point:
+    // the compact-replica sparse engine (sharded when asked and in
+    // class) when the scenario fits, the dense engine otherwise
+    if spec.bign {
+        let kind = match spec.collective {
+            Collective::Reduce => DriveKind::Reduce,
+            Collective::Allreduce => DriveKind::Allreduce,
+            Collective::Broadcast => DriveKind::Broadcast,
+        };
+        return sim::run_collective_auto(&cfg, kind);
+    }
     match spec.collective {
-        // the large-n axis goes through the engine-selecting entry
-        // point: the compact-replica sparse engine when the scenario is
-        // in its class, the dense engine otherwise (crate::sim::sparse)
-        Collective::Reduce if spec.bign => sim::run_reduce_auto(&cfg),
         Collective::Reduce => sim::run_reduce(&cfg),
         Collective::Allreduce => sim::run_allreduce(&cfg),
         Collective::Broadcast => sim::run_broadcast(&cfg),
@@ -149,11 +171,15 @@ pub fn execute(spec: &ScenarioSpec, trace: bool) -> RunReport {
 }
 
 /// The failure-free baseline counts for a scenario's configuration.
-/// `bign` scenarios use the Theorem 5 closed form — an eager
+/// `bign` scenarios use the closed forms (Theorem 5, plus the
+/// corrected-tree broadcast term for allreduce) — an eager
 /// failure-free run at 10^6 ranks would dwarf the scenario itself.
 pub fn baseline_of(spec: &ScenarioSpec) -> Baseline {
     if spec.bign {
-        return Baseline::closed_form(spec.n, spec.f);
+        return match spec.collective {
+            Collective::Allreduce => Baseline::closed_form_allreduce(spec.n, spec.f),
+            _ => Baseline::closed_form(spec.n, spec.f),
+        };
     }
     let cfg = spec.baseline_sim_config();
     if spec.is_session() {
@@ -204,7 +230,7 @@ pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
                     break;
                 }
                 let base = cached_baseline(&cache, &specs[i]);
-                let (result, _rep) = run_scenario(&specs[i], &base);
+                let (result, _rep) = run_scenario(&specs[i], &base, cfg.shards);
                 *slots[i].lock().unwrap() = Some(result);
             });
         }
@@ -243,7 +269,7 @@ mod tests {
         let specs = generate(&grid);
         for spec in &specs {
             let base = baseline_of(spec);
-            let (result, _rep) = run_scenario(spec, &base);
+            let (result, _rep) = run_scenario(spec, &base, 1);
             assert_eq!(result.id, spec.id);
             assert!(
                 result.passed(),
@@ -264,38 +290,112 @@ mod tests {
         for spec in specs.iter().filter(|s| s.ops_list.is_some()).take(5) {
             seen += 1;
             let base = baseline_of(spec);
-            let (result, _rep) = run_scenario(spec, &base);
+            let (result, _rep) = run_scenario(spec, &base, 1);
             assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
         }
         assert!(seen >= 1, "no mixed session in a 400-scenario grid");
     }
 
-    /// The first lap of the large-n case table (n = 10^4 and 10^5,
-    /// clean / pre-f / prefix-kill) runs end-to-end on the sparse
-    /// engine and satisfies the closed-form oracles.
+    /// The first laps of the large-n case table (n = 10^4 and 10^5
+    /// reduces, plus every widened family — allreduce clean/pre and the
+    /// in-op kills — at 10^4) run end-to-end on the sparse engine and
+    /// satisfy the closed-form / per-attempt-sum oracles.
     #[test]
     fn bign_scenarios_pass_closed_form_oracles() {
-        let grid = GridConfig { count: 0, seed: 11, max_n: 32, bign: 6 };
+        let grid = GridConfig { count: 0, seed: 11, max_n: 32, bign: 10 };
+        let mut allreduce_rows = 0;
+        let mut inop_rows = 0;
         for spec in generate(&grid) {
             assert!(spec.bign);
             assert!(spec.n <= 100_000, "{}: CI-sized prefix must stay small", spec.id);
+            if spec.collective == Collective::Allreduce {
+                allreduce_rows += 1;
+            }
+            if spec.failures.iter().any(|s| !s.is_pre_operational()) {
+                inop_rows += 1;
+            }
             let base = baseline_of(&spec);
-            let (result, rep) = run_scenario(&spec, &base);
+            let (result, rep) = run_scenario(&spec, &base, 1);
             assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
             assert!(rep.aborted.is_none(), "{}", spec.id);
+        }
+        assert_eq!(allreduce_rows, 3, "families 3, 4 and 6 are allreduce");
+        assert_eq!(inop_rows, 2, "families 5 and 6 are in-op kills");
+    }
+
+    /// The widened-family oracles are exact at small n too: hand-built
+    /// bign specs (outside the 10^4+ case table) for every family must
+    /// pass the same per-attempt-sum count checks, on both engines'
+    /// worth of sizes — including a non-uniform last group (n-1 not a
+    /// multiple of f+1).
+    #[test]
+    fn widened_bign_families_are_exact_at_small_n() {
+        use super::super::spec::{scenario_at, FailurePattern};
+        for n in [50u32, 100, 257] {
+            for family in 3u8..=6 {
+                // regenerate a grid-shaped spec, then shrink it to n:
+                // cheapest way to an in-variant ScenarioSpec literal
+                let grid = GridConfig { count: 0, seed: 3, max_n: 32, bign: 17 };
+                let mut spec = scenario_at(&grid, 6 + (family - 3) as u32);
+                assert_eq!(spec.pattern.family() == "inop", family >= 5, "{}", spec.id);
+                spec.n = n;
+                spec.id = format!("small-bign-f{family}-n{n}");
+                match family {
+                    4 => {
+                        spec.failures = vec![
+                            crate::failure::FailureSpec::Pre { rank: spec.f + 1 },
+                            crate::failure::FailureSpec::Pre { rank: n - 1 },
+                        ];
+                        spec.pattern = FailurePattern::Pre { k: 2 };
+                    }
+                    5 | 6 => {
+                        let v = super::super::spec::bign_inop_victim(n, spec.f);
+                        spec.failures =
+                            vec![crate::failure::FailureSpec::AtTime { rank: v, at: 1 }];
+                    }
+                    _ => {}
+                }
+                let base = baseline_of(&spec);
+                let (result, _rep) = run_scenario(&spec, &base, 1);
+                assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
+            }
         }
     }
 
     #[test]
     fn thread_count_does_not_change_results() {
         let grid = GridConfig { count: 40, seed: 9, max_n: 48, bign: 0 };
-        let a = run_campaign(&CampaignConfig { grid, threads: 1 });
-        let b = run_campaign(&CampaignConfig { grid, threads: 4 });
+        let a = run_campaign(&CampaignConfig { grid, threads: 1, shards: 1 });
+        let b = run_campaign(&CampaignConfig { grid, threads: 4, shards: 1 });
         assert_eq!(a.scenarios.len(), b.scenarios.len());
         for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
             assert_eq!(x.id, y.id);
             assert_eq!(x.msgs_total, y.msgs_total);
             assert_eq!(x.final_time, y.final_time);
+            assert_eq!(x.violations, y.violations);
+        }
+    }
+
+    /// `--shards` is an execution knob, not a semantics knob: a sharded
+    /// bign campaign is field-for-field identical to the sequential
+    /// one, across every family (the in-op rows exercise the
+    /// out-of-class sequential fallback).
+    #[test]
+    fn sharded_bign_campaign_is_bit_identical() {
+        let grid = GridConfig { count: 0, seed: 11, max_n: 32, bign: 10 };
+        let a = run_campaign(&CampaignConfig { grid, threads: 2, shards: 1 });
+        let b = run_campaign(&CampaignConfig { grid, threads: 2, shards: 4 });
+        assert_eq!(a.scenarios.len(), b.scenarios.len());
+        for (x, y) in a.scenarios.iter().zip(&b.scenarios) {
+            assert_eq!(x.id, y.id);
+            assert!(x.passed(), "{}: {:?}", x.id, x.violations);
+            assert_eq!(x.delivered, y.delivered);
+            assert_eq!(x.dead, y.dead);
+            assert_eq!(x.msgs_total, y.msgs_total);
+            assert_eq!(x.bytes_total, y.bytes_total);
+            assert_eq!(x.final_time, y.final_time);
+            assert_eq!(x.makespan, y.makespan);
+            assert_eq!(x.attempts, y.attempts);
             assert_eq!(x.violations, y.violations);
         }
     }

@@ -20,6 +20,7 @@ use crate::prng::Pcg;
 use crate::session::OpKind;
 use crate::sim::net::NetModel;
 use crate::sim::SimConfig;
+use crate::topology::IfTree;
 use crate::types::{Rank, TimeNs};
 
 /// Which collective a scenario exercises.
@@ -336,11 +337,15 @@ pub struct GridConfig {
     pub seed: u64,
     pub max_n: u32,
     /// Large-n axis (docs/SCALE.md): this many scenarios appended after
-    /// the `count` regular ones, cycling n ∈ {10⁴, 10⁵, 10⁶} ×
-    /// {clean, pre-f, rootkill} corrected Reduces. They run on the
-    /// sparse engine and are checked against closed-form oracles (no
-    /// eagerly-simulated baseline). 0 = off; the first six cases stay
-    /// at n ≤ 10⁵, so a small prefix fits CI smoke time.
+    /// the `count` regular ones, cycling a 17-case table of corrected
+    /// Reduces (n ∈ {10⁴, 10⁵, 10⁶} × {clean, pre-f, rootkill}) and —
+    /// the widened class — single-attempt tree Allreduces and timed
+    /// in-operation kills (n ∈ {10⁴, 10⁵} × {allreduce-clean,
+    /// allreduce-pre, reduce-inop, allreduce-inop}). They run on the
+    /// sparse engine (sharded when asked) and are checked against
+    /// closed-form / per-attempt-sum count oracles (no eagerly-
+    /// simulated baseline). 0 = off; the first fourteen cases stay at
+    /// n ≤ 10⁵, so a `--bign 14` prefix fits CI smoke time.
     pub bign: u32,
 }
 
@@ -588,11 +593,28 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
     }
 }
 
+/// The in-operation bign victim: the first rank past the candidate
+/// band whose I(f)-tree position is a leaf and whose up-correction
+/// group is not a singleton (a peerless rank finishes its exchange
+/// instantly and would send its `TreeUp` at `t = 0`, before the kill).
+/// Killed at `t = 1` the victim has already sent its up-corrections
+/// (those go out at `t = 0`) but has not received, combined or
+/// forwarded anything — the one in-op timing with an exact closed-form
+/// message/event count (docs/SCALE.md).
+pub(crate) fn bign_inop_victim(n: u32, f: u32) -> Rank {
+    let tree = IfTree::new(n, f);
+    let groups = crate::topology::UpCorrectionGroups::new(n, f);
+    (f + 1..n)
+        .find(|&r| tree.children(r).is_empty() && !groups.peers_of(r).is_empty())
+        .expect("an I(f)-tree leaf with peers exists past the candidate band")
+}
+
 /// The large-n scenario at `index >= grid.count` (docs/SCALE.md):
-/// monolithic corrected Reduces rooted at 0 — the class the sparse
-/// engine covers and the closed-form oracles can check without an
-/// eagerly-simulated baseline. Cases cycle so any 6-scenario prefix
-/// stays at n ≤ 10⁵ (what CI smoke runs); 10⁶ starts at the seventh.
+/// monolithic corrected Reduces and tree Allreduces rooted at 0 — the
+/// class the sparse engine covers and the closed-form / per-attempt-sum
+/// oracles can check without an eagerly-simulated baseline. Cases cycle
+/// so any 14-scenario prefix stays at n ≤ 10⁵ (what CI smoke runs);
+/// 10⁶ starts at the fifteenth.
 fn bign_scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
     assert!(
         index >= grid.count && index < grid.count + grid.bign,
@@ -601,30 +623,45 @@ fn bign_scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
     let seed = derive_seed(grid.seed, index);
     let mut rng = Pcg::new(seed);
 
-    // (n, family): 0 = clean, 1 = pre-f, 2 = prefix rootkill
-    const CASES: [(u32, u8); 9] = [
+    // (n, family): 0 = clean reduce, 1 = pre-f reduce, 2 = prefix
+    // rootkill reduce, 3 = clean allreduce, 4 = pre-f allreduce,
+    // 5 = in-op-kill reduce, 6 = in-op-kill allreduce
+    const CASES: [(u32, u8); 17] = [
         (10_000, 0),
         (10_000, 1),
         (10_000, 2),
         (100_000, 0),
         (100_000, 1),
         (100_000, 2),
+        (10_000, 3),
+        (10_000, 4),
+        (10_000, 5),
+        (10_000, 6),
+        (100_000, 3),
+        (100_000, 4),
+        (100_000, 5),
+        (100_000, 6),
         (1_000_000, 0),
         (1_000_000, 1),
         (1_000_000, 2),
     ];
-    let (n, family) = CASES[((index - grid.count) % 9) as usize];
+    let (n, family) = CASES[((index - grid.count) % CASES.len() as u32) as usize];
 
-    let f = rng.range(1, 5) as u32;
+    let drawn_f = rng.range(1, 5) as u32;
+    // the widened families pin f = 2: victims must sit strictly past
+    // the candidate band, and (n−1) ≡ 0 (mod 3) for every case n keeps
+    // the up-correction groups uniform for the per-attempt-sum oracle
+    let f = if family >= 3 { 2 } else { drawn_f };
     let scheme = [Scheme::List, Scheme::CountBit, Scheme::Bit][rng.below(3) as usize];
     let net = NetKind::ALL[rng.below(3) as usize];
     let detect_latency: TimeNs = [1_000, 10_000, 100_000][rng.below(3) as usize];
 
-    // failures stay pre-operational and off the root: the paper's
-    // contract for a rooted reduce, and exactly the class the sparse
-    // engine (and the closed-form oracle) covers
-    let (pattern, failures) = match family {
-        0 => (FailurePattern::None, Vec::new()),
+    // families 0–2 stay pre-operational and off the root (the paper's
+    // contract for a rooted reduce); families 3–6 widen to allreduce
+    // attempt bands and a timed in-operation kill, with victims always
+    // strictly past the candidate band so attempts == 1 exactly
+    let (collective, pattern, failures) = match family {
+        0 => (Collective::Reduce, FailurePattern::None, Vec::new()),
         1 => {
             let k = rng.range(1, f as u64) as u32;
             let failures = rng
@@ -632,21 +669,38 @@ fn bign_scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
                 .into_iter()
                 .map(|i| FailureSpec::Pre { rank: i as Rank + 1 })
                 .collect();
-            (FailurePattern::Pre { k }, failures)
+            (Collective::Reduce, FailurePattern::Pre { k }, failures)
         }
-        _ => {
+        2 => {
             // the would-be allreduce candidate prefix (sans root):
             // k cyclically-consecutive dead ranks right of the root
             let k = rng.range(1, f as u64) as u32;
             let failures = (1..=k).map(|rank| FailureSpec::Pre { rank }).collect();
-            (FailurePattern::RootKill { k }, failures)
+            (Collective::Reduce, FailurePattern::RootKill { k }, failures)
+        }
+        3 => (Collective::Allreduce, FailurePattern::None, Vec::new()),
+        4 => {
+            let k = rng.range(1, f as u64) as u32;
+            let failures = rng
+                .choose_distinct((n - f - 1) as u64, k as usize)
+                .into_iter()
+                .map(|i| FailureSpec::Pre { rank: i as Rank + f + 1 })
+                .collect();
+            (Collective::Allreduce, FailurePattern::Pre { k }, failures)
+        }
+        _ => {
+            let v = bign_inop_victim(n, f);
+            let collective = if family == 5 { Collective::Reduce } else { Collective::Allreduce };
+            let failures = vec![FailureSpec::AtTime { rank: v, at: 1 }];
+            (collective, FailurePattern::InOp { k: 1, max_sends: 0 }, failures)
         }
     };
     debug_assert!(crate::failure::validate_plan(n, &failures).is_ok());
 
     let id = format!(
-        "s{:05}-bign-reduce-n{}-f{}-r0-{}-sum-rank-{}-{}",
+        "s{:05}-bign-{}-n{}-f{}-r0-{}-sum-rank-{}-{}",
         index,
+        collective.name(),
         n,
         f,
         scheme_label(scheme),
@@ -658,7 +712,7 @@ fn bign_scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         index,
         id,
         seed,
-        collective: Collective::Reduce,
+        collective,
         n,
         f,
         root: 0,
@@ -1041,45 +1095,72 @@ mod tests {
     }
 
     #[test]
-    fn bign_axis_appends_large_n_reduces() {
-        let grid = GridConfig { count: 32, seed: 9, max_n: 64, bign: 9 };
+    fn bign_axis_appends_large_n_collectives() {
+        let grid = GridConfig { count: 32, seed: 9, max_n: 64, bign: 17 };
         let specs = generate(&grid);
-        assert_eq!(specs.len(), 41);
+        assert_eq!(specs.len(), 49);
         let bign: Vec<_> = specs.iter().filter(|s| s.bign).collect();
-        assert_eq!(bign.len(), 9);
+        assert_eq!(bign.len(), 17);
         assert!(specs[..32].iter().all(|s| !s.bign));
         for (i, s) in bign.iter().enumerate() {
             assert_eq!(s.index, 32 + i as u32);
-            assert_eq!(s.collective, Collective::Reduce, "{}", s.id);
             assert_eq!(s.root, 0, "{}", s.id);
             assert!(s.id.contains("-bign-"), "{}", s.id);
             assert!((1..=5).contains(&s.f), "{}", s.id);
             assert!(s.failures.len() as u32 <= s.f, "{}", s.id);
             assert!(s.segment_bytes.is_none() && s.session_ops == 1, "{}", s.id);
-            // every failure is pre-operational and off the root — the
-            // class the sparse engine and closed-form oracles cover
+            assert_eq!(s.allreduce_algo, AllreduceAlgo::Tree, "{}", s.id);
             for fs in &s.failures {
-                assert!(
-                    matches!(fs, FailureSpec::Pre { rank } if *rank != 0),
-                    "{}: {fs:?}",
-                    s.id
-                );
+                match fs {
+                    // pre-operational failures stay off the root, and —
+                    // allreduce — off the whole candidate band, so the
+                    // first attempt is the only attempt
+                    FailureSpec::Pre { rank } => {
+                        let min = if s.collective == Collective::Allreduce { s.f + 1 } else { 1 };
+                        assert!(*rank >= min, "{}: {fs:?}", s.id);
+                    }
+                    // the one in-op timing with a closed form: an
+                    // I(f)-leaf past the candidate band, killed at t=1
+                    FailureSpec::AtTime { rank, at } => {
+                        assert_eq!(*at, 1, "{}", s.id);
+                        assert!(*rank > s.f, "{}", s.id);
+                        assert!(
+                            IfTree::new(s.n, s.f).children(*rank).is_empty(),
+                            "{}: in-op victim must be a leaf",
+                            s.id
+                        );
+                    }
+                    other => panic!("{}: unexpected failure {other:?}", s.id),
+                }
+            }
+            if s.pattern.family() == "inop" || s.collective == Collective::Allreduce {
+                assert_eq!(s.f, 2, "{}: widened families pin f = 2", s.id);
             }
             // replay isolation: regenerable from the index alone
             let again = scenario_at(&grid, s.index);
             assert_eq!(again.id, s.id);
             assert_eq!(again.failures, s.failures);
         }
-        // one full lap of the case table: all three n values and all
-        // three failure families appear, and the CI-sized prefix
-        // (--bign 6) never reaches n = 10^6
+        // one full lap of the case table: every n value and family
+        // appears, for both collectives
         for n in [10_000, 100_000, 1_000_000] {
             assert!(bign.iter().any(|s| s.n == n), "n={n} missing");
         }
-        for fam in ["clean", "pre", "rootkill"] {
+        for fam in ["clean", "pre", "rootkill", "inop"] {
             assert!(bign.iter().any(|s| s.pattern.family() == fam), "{fam} missing");
         }
-        assert!(bign[..6].iter().all(|s| s.n <= 100_000));
+        for coll in [Collective::Reduce, Collective::Allreduce] {
+            assert!(bign.iter().any(|s| s.collective == coll), "{coll:?} missing");
+        }
+        // the CI-sized prefix (--bign 14) never reaches n = 10^6 and
+        // already covers every widened family
+        assert!(bign[..14].iter().all(|s| s.n <= 100_000));
+        for fam in ["clean", "pre", "rootkill", "inop"] {
+            assert!(bign[..14].iter().any(|s| s.pattern.family() == fam), "{fam} missing");
+        }
+        assert!(bign[..14]
+            .iter()
+            .any(|s| s.collective == Collective::Allreduce && s.n == 100_000));
         let ids: std::collections::HashSet<_> = specs.iter().map(|s| &s.id).collect();
         assert_eq!(ids.len(), specs.len());
     }

@@ -67,12 +67,15 @@ USAGE: ftcoll <subcommand> [options]
              [--fail pre:1,sends:3:2] [--trace]
              [--engine dense|sparse|auto — sparse is the compact-
              replica large-n engine, docs/SCALE.md]
+             [--shards auto|K — shard the sparse engine's rank lanes
+             over K threads; bit-identical to --shards 1]
              — simulate fault-tolerant reduce
   allreduce  same options + [--allreduce-algo tree|rsag|butterfly]
              — simulate fault-tolerant allreduce (tree = corrected
              reduce+broadcast; rsag = reduce-scatter/allgather over
              per-rank blocks, docs/RSAG.md; butterfly = corrected
-             halving/doubling over correction groups, docs/BUTTERFLY.md)
+             halving/doubling over correction groups, docs/BUTTERFLY.md;
+             --engine sparse|auto covers the tree algorithm)
   broadcast  same options (segment-bytes ignored) — corrected-tree bcast
   run        [--collective reduce|allreduce|broadcast] [--live]
              + the same options — one entry point over both executors
@@ -81,7 +84,10 @@ USAGE: ftcoll <subcommand> [options]
   baseline   --algo tree|flat|ring|gossip + same options
   campaign   [--count 1000] [--seed 1] [--max-n 128] [--threads 0]
              [--bign 0 — append that many large-n (10^4..10^6) reduce
-             scenarios checked against closed-form count oracles]
+             and allreduce scenarios checked against closed-form /
+             per-attempt-sum count oracles]
+             [--shards auto|K — run large-n scenarios on the sharded
+             sparse engine; results are bit-identical to --shards 1]
              [--out campaign_result.json] [--check-oracles]
              [--replay <scenario-id> [--trace]]
              — deterministic scenario sweep (incl. segmented/pipelined
@@ -139,6 +145,25 @@ fn to_sim(cfg: &Config, trace: bool) -> SimConfig {
     let mut s = SimConfig::from_spec(cfg.to_spec()).tracing(trace);
     s.seed = cfg.seed;
     s
+}
+
+/// Parse `--shards auto|K` into the [`SimConfig::shards`] encoding
+/// (0 = auto-size from the core count, K = exactly K when the run is
+/// shardable, 1 = single-threaded). Absent means 1.
+fn parse_shards(args: &Args) -> Result<u32, String> {
+    match args.get("shards") {
+        None => Ok(1),
+        Some("auto") => Ok(0),
+        Some(v) => {
+            let k: u32 = v
+                .parse()
+                .map_err(|_| format!("invalid value `{v}` for --shards: use auto or a count"))?;
+            if k == 0 {
+                return Err("--shards 0 is spelled `--shards auto`".into());
+            }
+            Ok(k)
+        }
+    }
 }
 
 fn to_live(cfg: &Config) -> EngineConfig {
@@ -200,24 +225,33 @@ fn run_des_collective(
     cfg: &Config,
     trace: bool,
     engine: &str,
+    shards: u32,
 ) -> Result<(), String> {
-    let sc = to_sim(cfg, trace);
+    let mut sc = to_sim(cfg, trace);
+    sc.shards = shards;
     let rep = match (collective, engine) {
         ("reduce", "dense") => sim::run_reduce(&sc),
         ("reduce", "auto") => sim::run_reduce_auto(&sc),
         ("reduce", "sparse") => sim::run_reduce_sparse(&sc).ok_or_else(|| {
-            "this configuration is outside the sparse engine's class (tracing, \
-             segmentation, sessions, or failures beyond pre-operational non-root \
-             kills); rerun with --engine dense or auto"
+            "this configuration is outside the sparse engine's reduce class \
+             (tracing, segmentation, sessions, or a pre-operational root kill); \
+             rerun with --engine dense or auto"
                 .to_string()
         })?,
         ("allreduce", "dense") => sim::run_allreduce(&sc),
+        ("allreduce", "auto") => sim::run_allreduce_auto(&sc),
+        ("allreduce", "sparse") => sim::run_allreduce_sparse(&sc).ok_or_else(|| {
+            "this configuration is outside the sparse engine's allreduce class \
+             (tracing, segmentation, sessions, or a non-tree --allreduce-algo); \
+             rerun with --engine dense or auto"
+                .to_string()
+        })?,
         ("broadcast", "dense") => sim::run_broadcast(&sc),
-        ("reduce", other) => {
+        ("reduce" | "allreduce", other) => {
             return Err(format!("unknown engine `{other}`; use dense|sparse|auto"))
         }
-        (c, e) if matches!(c, "allreduce" | "broadcast") => {
-            return Err(format!("--engine {e} is reduce-only (got `{c}`)"))
+        ("broadcast", e) => {
+            return Err(format!("--engine {e} is reduce/allreduce-only (got `broadcast`)"))
         }
         (other, _) => return Err(format!("unknown collective `{other}`")),
     };
@@ -228,9 +262,10 @@ fn run_des_collective(
 fn run_sim(args: &Args) -> Result<(), String> {
     let trace = args.flag("trace");
     let engine = args.get("engine").unwrap_or("dense").to_string();
+    let shards = parse_shards(args)?;
     let cfg = build_config(args)?;
     args.finish().map_err(|e| e.to_string())?;
-    run_des_collective(args.subcommand.as_str(), &cfg, trace, &engine)
+    run_des_collective(args.subcommand.as_str(), &cfg, trace, &engine, shards)
 }
 
 /// `ftcoll run`: one entry point over both executors — the chosen
@@ -242,9 +277,13 @@ fn run_unified(args: &Args) -> Result<(), String> {
     let live = args.flag("live");
     let trace = args.flag("trace");
     let engine = args.get("engine").unwrap_or("dense").to_string();
+    let shards = parse_shards(args)?;
     let cfg = build_config(args)?;
     args.finish().map_err(|e| e.to_string())?;
     if live {
+        if shards != 1 {
+            return Err("--shards is a DES option; `run --live` ignores it".into());
+        }
         let ecfg = to_live(&cfg);
         let rep = match collective.as_str() {
             "reduce" => live_reduce(&ecfg, cfg.root),
@@ -258,7 +297,7 @@ fn run_unified(args: &Args) -> Result<(), String> {
         print_live(&rep);
         return Ok(());
     }
-    run_des_collective(collective.as_str(), &cfg, trace, &engine)
+    run_des_collective(collective.as_str(), &cfg, trace, &engine, shards)
 }
 
 fn run_baseline(args: &Args) -> Result<(), String> {
@@ -289,6 +328,7 @@ fn run_campaign_cmd(args: &Args) -> Result<(), String> {
     let threads: usize = args.get_parsed("threads", 0).map_err(|e| e.to_string())?;
     let max_n: u32 = args.get_parsed("max-n", 128).map_err(|e| e.to_string())?;
     let bign: u32 = args.get_parsed("bign", 0).map_err(|e| e.to_string())?;
+    let shards = parse_shards(args)?;
     let out = args.get("out").unwrap_or("campaign_result.json").to_string();
     let replay = args.get("replay").map(String::from);
     let trace = args.flag("trace");
@@ -298,11 +338,11 @@ fn run_campaign_cmd(args: &Args) -> Result<(), String> {
     let grid = GridConfig { count, seed, max_n, bign };
 
     if let Some(id) = replay {
-        return replay_scenario(&grid, &id, trace);
+        return replay_scenario(&grid, &id, trace, shards);
     }
 
     let t0 = std::time::Instant::now();
-    let result = campaign::run_campaign(&CampaignConfig { grid, threads });
+    let result = campaign::run_campaign(&CampaignConfig { grid, threads, shards });
     let elapsed = t0.elapsed();
     print!("{}", campaign::summary_table(&result));
     println!(
@@ -338,6 +378,7 @@ fn replay_scenario(
     grid: &ftcoll::campaign::GridConfig,
     id: &str,
     trace: bool,
+    shards: u32,
 ) -> Result<(), String> {
     use ftcoll::campaign;
 
@@ -359,7 +400,7 @@ fn replay_scenario(
         spec.failures_str()
     );
     // one execution: the oracle judges exactly the run that was printed
-    let rep = campaign::execute(&spec, trace);
+    let rep = campaign::execute(&spec, trace, shards);
     print_report(&rep);
     let base = campaign::baseline_of(&spec);
     let o = campaign::oracle::check(&spec, &rep, &base);

@@ -238,7 +238,10 @@ impl<'a> CollectiveDriver<'a> {
         }
     }
 
-    fn allreduce_config(&self) -> AllreduceConfig {
+    /// The [`AllreduceConfig`] this driver builds [`Allreduce`]
+    /// instances from — like [`Self::reduce_config`], the construction
+    /// seam shared with the sparse engine's laned allreduce.
+    pub fn allreduce_config(&self) -> AllreduceConfig {
         let mut acfg = AllreduceConfig::new(self.spec.n, self.spec.f).scheme(self.spec.scheme);
         acfg.correction = self.spec.correction;
         acfg.base_epoch = self.spec.base_epoch;

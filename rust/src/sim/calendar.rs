@@ -3,13 +3,13 @@
 //! The single `BinaryHeap` costs `O(log m)` per operation with `m`
 //! events in flight; at n = 10⁵–10⁶ ranks the up-correction burst keeps
 //! millions of events queued and the sift-down memcpy dominates the
-//! run (§Perf). The calendar spreads events over `NB` time buckets of
+//! run (§Perf). The calendar spreads events over `nb` time buckets of
 //! fixed `width`; the common case pops from the current bucket in
 //! `O(log bucket)` where buckets hold only the events of one small time
 //! window.
 //!
 //! Correctness: an event at time `t` lives in bucket
-//! `(t / width) % NB`, and [`CalendarQueue::pop`] only yields an entry
+//! `(t / width) % nb`, and [`CalendarQueue::pop`] only yields an entry
 //! whose *window* `t / width` equals the cursor window. Two entries in
 //! the same window always share a bucket (ordered by `(t, seq)` inside
 //! the bucket's heap), and a bucket's heap top is its global minimum,
@@ -18,19 +18,38 @@
 //! order by `(t, seq)` — the property the dense↔sparse differential
 //! suite (`rust/tests/des_scale.rs`) and the in-module property tests
 //! pin.
+//!
+//! The bucket count starts at 512 and doubles whenever average
+//! occupancy exceeds [`TARGET_OCCUPANCY`]: a degenerate timestamp
+//! distribution (every in-flight event inside a handful of windows —
+//! e.g. a near-zero-latency net model at large n) would otherwise
+//! collapse the calendar into a few huge heaps and give back the
+//! `O(log m)` pops the calendar exists to avoid. Growing only ever
+//! *rehashes* entries by their unchanged absolute window index, so the
+//! pop order is untouched (pinned by `resize_preserves_heap_order`).
 
 use super::Entry;
 use crate::types::TimeNs;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-/// Number of calendar buckets. 512 windows of one network latency each
-/// cover every in-flight horizon the protocols generate; anything
-/// further wraps laps and is found by the rescan fallback.
-const NB: usize = 512;
+/// Initial number of calendar buckets. 512 windows of one network
+/// latency each cover every in-flight horizon the protocols generate;
+/// anything further wraps laps and is found by the rescan fallback.
+const NB0: usize = 512;
+
+/// Average entries per bucket that triggers a doubling of the bucket
+/// count (occupancy-triggered resize).
+const TARGET_OCCUPANCY: usize = 8;
+
+/// Bucket-count ceiling: beyond this, resizing buys little and the
+/// rehash churn isn't worth it.
+const MAX_NB: usize = 1 << 16;
 
 pub(crate) struct CalendarQueue {
     buckets: Vec<BinaryHeap<Reverse<Entry>>>,
+    /// Current bucket count (`buckets.len()`), grown by [`Self::grow`].
+    nb: usize,
     /// Bucket window width in virtual ns (≥ 1).
     width: TimeNs,
     /// Absolute window index (`t / width`) the cursor is inspecting.
@@ -43,11 +62,16 @@ impl CalendarQueue {
     /// (most arrivals land one latency ahead of `now`).
     pub(crate) fn new(width: TimeNs) -> Self {
         CalendarQueue {
-            buckets: (0..NB).map(|_| BinaryHeap::new()).collect(),
+            buckets: (0..NB0).map(|_| BinaryHeap::new()).collect(),
+            nb: NB0,
             width: width.max(1),
             cursor: 0,
             len: 0,
         }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
     }
 
     pub(crate) fn push(&mut self, e: Entry) {
@@ -58,32 +82,51 @@ impl CalendarQueue {
             // the entry cannot be skipped
             self.cursor = w;
         }
-        self.buckets[(w % NB as u64) as usize].push(Reverse(e));
+        self.buckets[(w % self.nb as u64) as usize].push(Reverse(e));
         self.len += 1;
+        if self.len > self.nb * TARGET_OCCUPANCY && self.nb < MAX_NB {
+            self.grow();
+        }
     }
 
-    /// Pop the globally minimal entry by `(t, seq)`.
-    pub(crate) fn pop(&mut self) -> Option<Entry> {
+    /// Double the bucket count and rehash every entry by its (absolute,
+    /// unchanged) window index. The cursor is an absolute window too, so
+    /// it stays valid; pop order is unaffected.
+    fn grow(&mut self) {
+        let nb = (self.nb * 2).min(MAX_NB);
+        let mut buckets: Vec<BinaryHeap<Reverse<Entry>>> =
+            (0..nb).map(|_| BinaryHeap::new()).collect();
+        for heap in self.buckets.drain(..) {
+            for Reverse(e) in heap.into_vec() {
+                let w = e.t / self.width;
+                buckets[(w % nb as u64) as usize].push(Reverse(e));
+            }
+        }
+        self.buckets = buckets;
+        self.nb = nb;
+    }
+
+    /// Advance the cursor to the window of the globally minimal entry
+    /// and return that entry's bucket index. `None` when empty.
+    fn position(&mut self) -> Option<usize> {
         if self.len == 0 {
             return None;
         }
         let mut misses = 0usize;
         loop {
-            let b = (self.cursor % NB as u64) as usize;
+            let b = (self.cursor % self.nb as u64) as usize;
             let hit = match self.buckets[b].peek() {
                 Some(Reverse(top)) => top.t / self.width == self.cursor,
                 None => false,
             };
             if hit {
-                let Reverse(e) = self.buckets[b].pop().expect("peeked entry");
-                self.len -= 1;
-                return Some(e);
+                return Some(b);
             }
             self.cursor += 1;
             misses += 1;
-            if misses >= NB {
+            if misses >= self.nb {
                 // a full lap without a hit: every queued event is more
-                // than NB windows ahead — jump straight to the global
+                // than nb windows ahead — jump straight to the global
                 // minimum's window instead of walking empty laps
                 let mut best: Option<(TimeNs, u64)> = None;
                 for bh in &self.buckets {
@@ -103,6 +146,26 @@ impl CalendarQueue {
                 misses = 0;
             }
         }
+    }
+
+    /// Pop the globally minimal entry by `(t, seq)`.
+    pub(crate) fn pop(&mut self) -> Option<Entry> {
+        let b = self.position()?;
+        let Reverse(e) = self.buckets[b].pop().expect("positioned bucket has a top");
+        self.len -= 1;
+        Some(e)
+    }
+
+    /// `(t, seq)` of the globally minimal entry without removing it —
+    /// the sharded engine's window boundary test (`sim::shard`).
+    pub(crate) fn peek(&mut self) -> Option<(TimeNs, u64)> {
+        let b = self.position()?;
+        self.buckets[b].peek().map(|Reverse(e)| (e.t, e.seq))
+    }
+
+    #[cfg(test)]
+    fn bucket_count(&self) -> usize {
+        self.nb
     }
 }
 
@@ -169,7 +232,7 @@ mod tests {
         assert!(cal.pop().is_none());
     }
 
-    /// Entries many laps ahead (t ≫ NB·width) are found by the rescan.
+    /// Entries many laps ahead (t ≫ nb·width) are found by the rescan.
     #[test]
     fn far_future_entries_survive_lap_wrap() {
         let mut cal = CalendarQueue::new(1);
@@ -191,5 +254,48 @@ mod tests {
         assert_eq!(cal.pop().expect("e").t, 5000);
         cal.push(entry(10, 2));
         assert_eq!(cal.pop().expect("e").t, 10);
+    }
+
+    /// `peek` returns exactly what the next `pop` yields, without
+    /// consuming it.
+    #[test]
+    fn peek_matches_next_pop() {
+        let mut rng = Pcg::new(0xBEEF);
+        let mut cal = CalendarQueue::new(7);
+        let mut seq = 0u64;
+        for _ in 0..500 {
+            seq += 1;
+            cal.push(entry(rng.range(0, 10_000), seq));
+        }
+        while let Some((t, s)) = cal.peek() {
+            let e = cal.pop().expect("peeked entry pops");
+            assert_eq!((e.t, e.seq), (t, s));
+        }
+        assert_eq!(cal.len(), 0);
+    }
+
+    /// Occupancy-triggered resize regression: a degenerate distribution
+    /// (tens of thousands of queued events) must grow the bucket count,
+    /// and the pop order across the resize must equal the binary heap's
+    /// total order by `(t, seq)`.
+    #[test]
+    fn resize_preserves_heap_order() {
+        let mut rng = Pcg::new(0x512E);
+        let mut cal = CalendarQueue::new(1);
+        let mut heap: BinaryHeap<Reverse<Entry>> = BinaryHeap::new();
+        assert_eq!(cal.bucket_count(), NB0);
+        // everything lands in few windows relative to the queue size —
+        // the degenerate case the resize exists for
+        for seq in 1..=40_000u64 {
+            let t = rng.range(0, 100);
+            cal.push(entry(t, seq));
+            heap.push(Reverse(entry(t, seq)));
+        }
+        assert!(cal.bucket_count() > NB0, "occupancy trigger must have grown the calendar");
+        while let Some(Reverse(want)) = heap.pop() {
+            let got = cal.pop().expect("calendar entry");
+            assert_eq!((got.t, got.seq), (want.t, want.seq));
+        }
+        assert!(cal.pop().is_none());
     }
 }

@@ -13,6 +13,7 @@
 
 mod calendar;
 pub mod net;
+pub mod shard;
 pub mod sparse;
 
 use crate::collectives::baseline::{
@@ -28,7 +29,7 @@ use crate::runtime::{CollectiveDriver, DriveKind, Driver, RunSpec};
 use crate::session::{OpKind, Session, SessionView};
 use crate::trace::{Trace, TraceEvent};
 use crate::types::{Msg, Rank, TimeNs, Value};
-pub use sparse::run_reduce_sparse;
+pub use sparse::{run_allreduce_sparse, run_reduce_sparse};
 
 use calendar::CalendarQueue;
 use net::NetModel;
@@ -48,6 +49,12 @@ pub struct SimConfig {
     pub trace: bool,
     pub seed: u64,
     pub max_events: u64,
+    /// Shard count for the sparse engine: `1` = single-threaded
+    /// (default), `0` = auto (pick from the machine when the scenario
+    /// is big and in the shardable class), `K` = exactly K shards when
+    /// shardable. Results are bit-identical at every value — see
+    /// [`shard`].
+    pub shards: u32,
 }
 
 impl std::ops::Deref for SimConfig {
@@ -77,6 +84,7 @@ impl SimConfig {
             trace: false,
             seed: 1,
             max_events: 200_000_000,
+            shards: 1,
         }
     }
 
@@ -139,6 +147,11 @@ impl SimConfig {
     }
     pub fn base_epoch(mut self, epoch: u32) -> Self {
         self.spec.base_epoch = epoch;
+        self
+    }
+    /// `0` = auto; see the field docs.
+    pub fn shards(mut self, shards: u32) -> Self {
+        self.shards = shards;
         self
     }
 }
@@ -678,15 +691,37 @@ pub fn run_reduce(cfg: &SimConfig) -> RunReport {
 
 /// Simulate fault-tolerant reduce, picking the engine automatically:
 /// the sparse large-n engine ([`sparse`]) when the configuration is in
-/// its supported class (monolithic reduce, pre-operational failures
-/// only, no trace — see `sparse::run_reduce_sparse`), else the dense
-/// per-rank engine. Both produce bit-identical reports
-/// (`rust/tests/des_scale.rs` pins this differentially), so callers
-/// only trade memory/speed, never results.
+/// its supported class (monolithic reduce, no root pre-failure, no
+/// trace — see `sparse::run_reduce_sparse`), possibly sharded across
+/// threads ([`shard`]), else the dense per-rank engine. All engines
+/// produce bit-identical reports (`rust/tests/des_scale.rs` pins this
+/// differentially), so callers only trade memory/speed, never results.
 pub fn run_reduce_auto(cfg: &SimConfig) -> RunReport {
     match sparse::run_reduce_sparse(cfg) {
         Some(rep) => rep,
         None => run_reduce(cfg),
+    }
+}
+
+/// [`run_reduce_auto`]'s allreduce sibling: the sparse engine covers
+/// the tree algorithm under any failure plan; rsag/butterfly
+/// decompositions run dense.
+pub fn run_allreduce_auto(cfg: &SimConfig) -> RunReport {
+    match sparse::run_allreduce_sparse(cfg) {
+        Some(rep) => rep,
+        None => run_allreduce(cfg),
+    }
+}
+
+/// Engine-auto entry point over the collective kind — what the
+/// campaign runner and CLI dispatch through for big-n rows.
+/// Non-reduce/allreduce kinds always run dense.
+pub fn run_collective_auto(cfg: &SimConfig, kind: DriveKind) -> RunReport {
+    match kind {
+        DriveKind::Reduce => run_reduce_auto(cfg),
+        DriveKind::Allreduce => run_allreduce_auto(cfg),
+        DriveKind::Broadcast => run_broadcast(cfg),
+        DriveKind::Session(_) => run_driver(cfg, &CollectiveDriver::new(&cfg.spec, kind)),
     }
 }
 

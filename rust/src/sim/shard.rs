@@ -1,0 +1,359 @@
+//! Intra-scenario parallelism: one huge sparse scenario sharded across
+//! threads with **bit-identical** output (docs/SCALE.md §Sharding).
+//!
+//! The rank lanes of a [`SparseSim`] are partitioned into S contiguous
+//! shards; each shard owns a calendar queue and advances through
+//! *conservative time windows* of width
+//!
+//! ```text
+//! W = min(net.send_ovh + net.latency, detect_latency)  (≥ 1)
+//! ```
+//!
+//! Every event a handler generates lands at least `W` after the popped
+//! event's time (a Deliver arrives ≥ `send_ovh + latency` later; a
+//! Detect fires `detect_latency` after a handle time ≥ the popped
+//! time), so an event popped in window `w = t / W` can only generate
+//! events for windows ≥ `w + 1` — never for the window in flight. All
+//! shards can therefore process one window concurrently with no
+//! cross-shard interaction at all: generated events are *staged*, not
+//! pushed ([`super::sparse::Staged`]), and merged at the window
+//! barrier.
+//!
+//! Determinism argument (the reason `--shards K` is bit-identical to
+//! `--shards 1` for every K): the sequential engine's total order is
+//! `(t, seq)` with seqs assigned at push, i.e. in the order source
+//! events are processed (sources ordered by their own `(t, seq)`),
+//! and within one source in generation order. At the barrier the
+//! orchestrator restores exactly that order — concatenate the shards'
+//! staged lists, stable-sort by the *source* key `(src.t, src.seq)`
+//! (unique globally; stability preserves per-source generation order),
+//! and assign global seqs sequentially. Handlers never observe seq
+//! values, so equal seqs ⇒ equal pops ⇒ equal handler calls ⇒ equal
+//! reports, masks and [`Metrics`]. The per-shard metrics absorb in
+//! shard order into the same totals the single engine accumulates.
+//!
+//! The **shardable class** is narrower than the sparse class: all
+//! failures pre-operational, `detect_latency ≥ 1` and a network with
+//! `send_ovh + latency ≥ 1` (else `W = 0` and windows don't advance).
+//! In that class `kill()` never runs, `dead[]` is static (replicated
+//! into every shard), and every lane write is to the handling rank —
+//! so shards share nothing within a window. Anything outside the class
+//! silently runs single-threaded; results are identical either way.
+//!
+//! Event-cap aborts stay bit-identical through a fallback: before
+//! dispatching a window, if the queued backlog already exceeds the
+//! remaining event budget the abort is inevitable (processing an event
+//! removes exactly one from the queues and only ever adds more), and
+//! the orchestrator switches permanently to an *exact sequential
+//! drain* — globally minimal `(t, seq)` pops across the shard
+//! calendars with immediate seq assignment — so the abort lands on
+//! precisely the same event, with the same `RunAbort`, as `--shards 1`.
+
+use super::net::NetModel;
+use super::sparse::{SparseSim, Staged};
+use super::{Entry, EvKind, RunAbort, RunReport, SimConfig};
+use crate::failure::FailureSpec;
+use crate::metrics::Metrics;
+use crate::trace::Trace;
+use crate::types::{Rank, TimeNs};
+
+/// Auto mode (`--shards auto`) only shards scenarios at least this
+/// big: below it the window barriers cost more than the parallelism
+/// buys.
+const AUTO_MIN_N: u32 = 10_000;
+
+/// Auto mode's thread ceiling: window-parallel DES stops scaling well
+/// past the memory bandwidth of a few cores.
+const AUTO_MAX_SHARDS: u32 = 8;
+
+/// Conservative window width: the minimum distance (in virtual ns) any
+/// generated event lands past its source event.
+fn window_width(net: &NetModel, detect_latency: TimeNs) -> TimeNs {
+    (net.send_ovh + net.latency).min(detect_latency).max(1)
+}
+
+/// Whether the configuration is in the shardable class (see module
+/// docs). Outside it the sparse engine still runs, just sequentially.
+fn shardable(cfg: &SimConfig) -> bool {
+    cfg.failures.iter().all(|f| matches!(f, FailureSpec::Pre { .. }))
+        && cfg.detect_latency >= 1
+        && cfg.net.send_ovh + cfg.net.latency >= 1
+}
+
+/// Resolve `cfg.shards` (0 = auto) against the shardable class, the
+/// scenario size and the machine. Returns the shard count to run with
+/// (1 = stay sequential).
+pub(crate) fn effective_shards(cfg: &SimConfig) -> u32 {
+    if !shardable(cfg) {
+        return 1;
+    }
+    let k = match cfg.shards {
+        0 => {
+            if cfg.n >= AUTO_MIN_N {
+                std::thread::available_parallelism()
+                    .map(|p| p.get() as u32)
+                    .unwrap_or(1)
+                    .min(AUTO_MAX_SHARDS)
+            } else {
+                1
+            }
+        }
+        k => k,
+    };
+    k.clamp(1, cfg.n.max(1))
+}
+
+/// Shard owning rank `r` under the contiguous partition
+/// `[i·n/s, (i+1)·n/s)`: the closed form of the range inverse.
+#[inline]
+pub(crate) fn owner(r: Rank, n: u32, s: u32) -> u32 {
+    (((r as u64 + 1) * s as u64 - 1) / n as u64) as u32
+}
+
+/// Run the scenario on `s` window-synchronized shards, each a full
+/// [`SparseSim`] built by `build` (same protocol configuration in
+/// every shard; only the event partition differs). Callers guarantee
+/// `s ≥ 2` and the shardable class.
+pub(crate) fn run_sharded(cfg: &SimConfig, s: u32, build: &dyn Fn() -> SparseSim) -> RunReport {
+    let n = cfg.n;
+    let s = s.clamp(1, n.max(1));
+    let mut shards: Vec<SparseSim> = (0..s)
+        .map(|_| {
+            let mut sh = build();
+            sh.stage = Some(Vec::new());
+            sh
+        })
+        .collect();
+    // the shardable class is pre-operational-only: replicate the static
+    // dead[] into every shard (read cross-rank by do_send/ctx_watch)
+    for spec in &cfg.failures {
+        if let FailureSpec::Pre { rank } = *spec {
+            for sh in shards.iter_mut() {
+                sh.mark_dead(rank);
+            }
+        }
+    }
+    // global Start events with orchestrator-assigned seqs — identical
+    // to the sequential engine's start_all (seq 1..=n_live, rank order)
+    let mut seq: u64 = 0;
+    for r in 0..n {
+        if !shards[0].is_dead(r) {
+            seq += 1;
+            shards[owner(r, n, s) as usize]
+                .heap
+                .push(Entry { t: 0, seq, rank: r, kind: EvKind::Start });
+        }
+    }
+    let w = window_width(&cfg.net, cfg.detect_latency);
+    let mut events: u64 = 0;
+    let mut aborted: Option<RunAbort> = None;
+    // events merged at the last barrier, not yet in shard heaps; each
+    // shard pushes its batch at the start of its next window (keeps the
+    // serial barrier section to the sort + seq assignment)
+    let mut incoming: Vec<Vec<Entry>> = (0..s).map(|_| Vec::new()).collect();
+    loop {
+        let t0 = shards
+            .iter_mut()
+            .filter_map(|sh| sh.heap.peek().map(|(t, _)| t))
+            .chain(incoming.iter().flatten().map(|e| e.t))
+            .min();
+        let t0 = match t0 {
+            Some(t) => t,
+            None => break,
+        };
+        let queued: u64 = shards.iter().map(|sh| sh.heap.len() as u64).sum::<u64>()
+            + incoming.iter().map(|v| v.len() as u64).sum::<u64>();
+        if cfg.max_events - events < queued {
+            aborted = drain_sequential(&mut shards, &mut incoming, &mut events, cfg.max_events, &mut seq, n, s);
+            break;
+        }
+        let end_t = (t0 / w + 1) * w;
+        let counts: Vec<u64> = std::thread::scope(|sc| {
+            let handles: Vec<_> = shards
+                .iter_mut()
+                .zip(incoming.iter_mut())
+                .map(|(sh, inc)| {
+                    sc.spawn(move || {
+                        for e in inc.drain(..) {
+                            sh.heap.push(e);
+                        }
+                        sh.run_window(end_t)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
+        });
+        events += counts.iter().sum::<u64>();
+        merge_staged(&mut shards, &mut incoming, &mut seq, n, s);
+    }
+    assemble(n, s, shards, aborted)
+}
+
+/// The window barrier's serial section: restore the sequential push
+/// order across every staged event of the window and assign global
+/// seqs (see the determinism argument in the module docs).
+fn merge_staged(
+    shards: &mut [SparseSim],
+    incoming: &mut [Vec<Entry>],
+    seq: &mut u64,
+    n: u32,
+    s: u32,
+) {
+    let mut staged: Vec<Staged> = Vec::new();
+    for sh in shards.iter_mut() {
+        staged.append(sh.stage.as_mut().expect("sharded mode stages events"));
+    }
+    // stable: per-shard runs are already in source order, and equal
+    // source keys (one source's events, one shard) keep generation order
+    staged.sort_by_key(|e| e.src);
+    for st in staged {
+        *seq += 1;
+        let Staged { t, rank, kind, .. } = st;
+        incoming[owner(rank, n, s) as usize].push(Entry { t, seq: *seq, rank, kind });
+    }
+}
+
+/// Exact sequential tail for inevitable event-cap aborts: globally
+/// minimal `(t, seq)` pops across the shard calendars, generated
+/// events re-queued immediately with sequentially assigned seqs — a
+/// bit-exact replica of the single-engine loop from this point on.
+fn drain_sequential(
+    shards: &mut [SparseSim],
+    incoming: &mut [Vec<Entry>],
+    events: &mut u64,
+    max_events: u64,
+    seq: &mut u64,
+    n: u32,
+    s: u32,
+) -> Option<RunAbort> {
+    for (sh, inc) in shards.iter_mut().zip(incoming.iter_mut()) {
+        for e in inc.drain(..) {
+            sh.heap.push(e);
+        }
+    }
+    let mut now_max: TimeNs = shards.iter().map(|sh| sh.now).max().unwrap_or(0);
+    loop {
+        let mut best: Option<(TimeNs, u64, usize)> = None;
+        for (i, sh) in shards.iter_mut().enumerate() {
+            if let Some((t, q)) = sh.heap.peek() {
+                if best.map_or(true, |(bt, bq, _)| (t, q) < (bt, bq)) {
+                    best = Some((t, q, i));
+                }
+            }
+        }
+        let (_, _, i) = match best {
+            Some(b) => b,
+            None => return None,
+        };
+        if *events >= max_events {
+            return Some(RunAbort { events: *events, at: now_max });
+        }
+        let entry = shards[i].heap.pop().expect("peeked entry");
+        *events += 1;
+        shards[i].process_one(entry);
+        now_max = now_max.max(shards[i].now);
+        // flush this event's generated events in generation order —
+        // exactly when the sequential engine would assign their seqs
+        let staged = std::mem::take(shards[i].stage.as_mut().expect("sharded mode"));
+        for st in staged {
+            *seq += 1;
+            let Staged { t, rank, kind, .. } = st;
+            shards[owner(rank, n, s) as usize].heap.push(Entry { t, seq: *seq, rank, kind });
+        }
+    }
+}
+
+/// Merge the shards into one [`RunReport`]: outcomes from each rank's
+/// owner, metrics absorbed in shard order (bit-equal to the single
+/// engine's accumulation), final time = max over shard clocks.
+fn assemble(n: u32, s: u32, mut shards: Vec<SparseSim>, aborted: Option<RunAbort>) -> RunReport {
+    let final_time = shards.iter().map(|sh| sh.now).max().unwrap_or(0);
+    let mut metrics = Metrics::new();
+    for sh in &shards {
+        metrics.absorb(&sh.metrics);
+    }
+    let mut outcomes: Vec<Vec<crate::collectives::Outcome>> = (0..n).map(|_| Vec::new()).collect();
+    for r in 0..n {
+        let o = owner(r, n, s) as usize;
+        outcomes[r as usize] = std::mem::take(&mut shards[o].outcomes[r as usize]);
+    }
+    let dead: Vec<Rank> = (0..n).filter(|&r| shards[0].is_dead(r)).collect();
+    RunReport { n, outcomes, metrics, trace: Trace::disabled(), final_time, dead, aborted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The closed-form owner must equal the range definition
+    /// `[i·n/s, (i+1)·n/s)` for every rank, at awkward n/s mixes.
+    #[test]
+    fn owner_matches_range_partition() {
+        for (n, s) in [(10u32, 4u32), (7, 3), (100, 8), (5, 5), (6, 4), (1, 1), (33, 2)] {
+            for r in 0..n {
+                let by_range = (0..s)
+                    .position(|i| {
+                        let lo = (i as u64 * n as u64 / s as u64) as u32;
+                        let hi = ((i as u64 + 1) * n as u64 / s as u64) as u32;
+                        r >= lo && r < hi
+                    })
+                    .expect("every rank owned") as u32;
+                assert_eq!(owner(r, n, s), by_range, "r={r} n={n} s={s}");
+            }
+        }
+    }
+
+    fn identical(a: &RunReport, b: &RunReport) {
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.dead, b.dead);
+        assert_eq!(a.aborted, b.aborted);
+        assert_eq!(a.final_time, b.final_time);
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    /// Bit-identity of the sharded engine against the sequential sparse
+    /// engine (full structs, metrics included) on reduce and allreduce,
+    /// including a failure plan and an awkward shard count.
+    #[test]
+    fn sharded_runs_are_bit_identical_to_sequential()  {
+        let base = SimConfig::new(50, 2).failures(vec![
+            FailureSpec::Pre { rank: 3 },
+            FailureSpec::Pre { rank: 17 },
+        ]);
+        for s in [2u32, 3, 4, 7] {
+            let seq = super::super::run_reduce_auto(&base.clone().shards(1));
+            let par = super::super::run_reduce_auto(&base.clone().shards(s));
+            identical(&seq, &par);
+            let seq = super::super::run_allreduce_auto(&base.clone().shards(1));
+            let par = super::super::run_allreduce_auto(&base.clone().shards(s));
+            identical(&seq, &par);
+        }
+    }
+
+    /// Event-cap aborts land on the same event with the same RunAbort
+    /// under sharding (the sequential-drain fallback).
+    #[test]
+    fn abort_is_bit_identical_under_sharding() {
+        for cap in [5u64, 17, 60, 200] {
+            let mut a = SimConfig::new(40, 2).shards(1);
+            a.max_events = cap;
+            let mut b = a.clone().shards(4);
+            b.max_events = cap;
+            let seq = super::super::run_reduce_auto(&a);
+            let par = super::super::run_reduce_auto(&b);
+            identical(&seq, &par);
+        }
+    }
+
+    /// Outside the shardable class (in-op kills), `--shards K` silently
+    /// runs sequentially — same report, no windows.
+    #[test]
+    fn unshardable_class_falls_back_to_sequential() {
+        let cfg = SimConfig::new(30, 2).failure(FailureSpec::AtTime { rank: 5, at: 40 });
+        assert_eq!(effective_shards(&cfg.clone().shards(4)), 1);
+        let seq = super::super::run_reduce_auto(&cfg.clone().shards(1));
+        let par = super::super::run_reduce_auto(&cfg.clone().shards(4));
+        identical(&seq, &par);
+    }
+}

@@ -1,81 +1,140 @@
-//! Sparse large-n DES engine for corrected Reduce (docs/SCALE.md).
+//! Sparse large-n DES engine for corrected Reduce *and* Allreduce
+//! (docs/SCALE.md).
 //!
 //! The dense engine materializes one boxed [`Protocol`] state machine
 //! per rank — each with its own topology handles, hash sets and stash
 //! buffers — which caps campaigns at a few hundred ranks (ROADMAP item
-//! 3). For the configurations big-n campaigns actually sweep
-//! (monolithic corrected Reduce under pre-operational failure plans),
-//! this module runs the *same* protocol with the per-rank state
-//! flattened into struct-of-arrays lanes and exactly one shared
+//! 3). For the configurations big-n campaigns actually sweep, this
+//! module runs the *same* protocols with the per-rank state flattened
+//! into struct-of-arrays lanes and exactly one shared
 //! [`RankMap`]/[`IfTree`]/[`UpCorrectionGroups`]/reducer for the whole
 //! simulation: failure-free ranks cost a few machine words plus their
 //! (regenerated, never stored) input value, instead of a boxed state
 //! machine with per-rank topology clones.
 //!
+//! The supported class (PR 9, widened from PR 6's pre-operational
+//! Reduce):
+//!
+//! * **Reduce**: monolithic corrected Reduce; pre-operational failures
+//!   anywhere but the root, plus in-operation kills (`AfterSends`,
+//!   `AtTime`) at any rank.
+//! * **Allreduce** (`--allreduce-algo tree`): the full attempt-band
+//!   machinery — rotation past dead candidate roots, future-epoch
+//!   buffering, the corrected-tree broadcast half — under any failure
+//!   plan. Per-rank attempt state is laned exactly like the reduce
+//!   state; one shared [`BinomialTree`] plus O(1) [`Ring`]s per
+//!   candidate replace the per-rank topology clones.
+//!
 //! Bit-identity is structural, not approximate: the event loop below is
 //! a line-for-line replica of `Sim::run` (same `(t, seq)` total order,
 //! same receiver-serialization rule, same metrics calls at the same
 //! points), and the inlined handlers are transcriptions of
-//! [`crate::collectives::reduce::Reduce`] and
-//! [`crate::collectives::up_correction::UpCorrection`] — every send,
-//! watch, combine and deliver happens at the same callback point in the
-//! same relative order as the dense engine. `rust/tests/des_scale.rs`
-//! pins the equivalence differentially (outcomes, failure reports,
-//! metrics, final time) across every scenario family at small n.
+//! [`crate::collectives::reduce::Reduce`],
+//! [`crate::collectives::up_correction::UpCorrection`],
+//! [`crate::collectives::allreduce::Allreduce`] (including its
+//! `SubCtx` capture semantics — inner reduce/broadcast deliveries
+//! never reach the metrics) and
+//! [`crate::collectives::broadcast::Broadcast`] — every send, watch,
+//! combine and deliver happens at the same callback point in the same
+//! relative order as the dense engine. `rust/tests/des_scale.rs` pins
+//! the equivalence differentially (outcomes, failure reports, metrics,
+//! final time) across every scenario family at small n.
 //!
-//! [`run_reduce_sparse`] is the gate: configurations outside the
-//! supported class return `None` and the caller (see
-//! [`super::run_reduce_auto`]) falls back to the dense engine — the
-//! "fully materialize" escape hatch.
+//! [`run_reduce_sparse`]/[`run_allreduce_sparse`] are the gates:
+//! configurations outside the supported class return `None` and the
+//! caller (see [`super::run_collective_auto`]) falls back to the dense
+//! engine — the "fully materialize" escape hatch. Inside the class,
+//! [`super::shard`] may additionally split the run across S window-
+//! synchronized shards (`--shards`) with bit-identical output.
 //!
 //! [`Protocol`]: crate::collectives::Protocol
+//! [`Ring`]: crate::topology::Ring
+//! [`BinomialTree`]: crate::topology::BinomialTree
 
 use super::calendar::CalendarQueue;
 use super::{Entry, EvKind, RankArena, RunAbort, RunReport, SimConfig, SimWatch};
-use crate::collectives::failure_info::FailureInfo;
+use crate::collectives::allreduce::AllreduceConfig;
+use crate::collectives::broadcast::CorrectionMode;
+use crate::collectives::failure_info::{FailureInfo, Scheme};
 use crate::collectives::reduce::ReduceConfig;
+use crate::collectives::rsag::AllreduceAlgo;
 use crate::collectives::{NativeReducer, Outcome, Reducer};
 use crate::config::PayloadKind;
 use crate::failure::FailureSpec;
 use crate::metrics::Metrics;
 use crate::runtime::{CollectiveDriver, DriveKind};
 use crate::sim::net::NetModel;
-use crate::topology::{IfTree, RankMap, UpCorrectionGroups};
+use crate::topology::{BinomialTree, IfTree, RankMap, Ring, UpCorrectionGroups};
 use crate::trace::Trace;
 use crate::types::{Msg, MsgKind, ProtoError, Rank, TimeNs, Value};
 
-/// The configuration class the sparse engine handles: a single
-/// monolithic corrected Reduce whose failure plan is pre-operational
-/// and never touches the root, without tracing (the tracer's inclusion
-/// sets would force per-send mask scans) or explicit allreduce
-/// candidates. Everything else falls back to the dense engine.
-fn supported(cfg: &SimConfig) -> bool {
-    if cfg.trace
-        || cfg.segment_bytes.is_some()
-        || cfg.session_ops != 1
-        || cfg.ops_list.is_some()
-        || cfg.candidates.is_some()
-    {
-        return false;
-    }
-    cfg.failures
-        .iter()
-        .all(|f| matches!(f, FailureSpec::Pre { rank } if *rank != cfg.root))
+/// Knobs no sparse run supports: tracing (the tracer's inclusion sets
+/// would force per-send mask scans), segmentation, and sessions.
+fn class_common(cfg: &SimConfig) -> bool {
+    !(cfg.trace || cfg.segment_bytes.is_some() || cfg.session_ops != 1 || cfg.ops_list.is_some())
+}
+
+/// The Reduce configuration class the sparse engine handles: a single
+/// monolithic corrected Reduce without explicit allreduce candidates,
+/// whose pre-operational failures never touch the root (in-operation
+/// kills may hit any rank — including the root — exactly like the
+/// dense engine). Everything else falls back.
+pub(crate) fn reduce_class(cfg: &SimConfig) -> bool {
+    class_common(cfg)
+        && cfg.candidates.is_none()
+        && cfg.failures.iter().all(|f| match f {
+            FailureSpec::Pre { rank } => *rank != cfg.root,
+            FailureSpec::AfterSends { .. } | FailureSpec::AtTime { .. } => true,
+        })
+}
+
+/// The Allreduce class: the tree (reduce-then-broadcast) algorithm,
+/// monolithic, under any failure plan — candidate rotation and attempt
+/// bands are laned, so dead candidate roots are in-class. The rsag and
+/// butterfly decompositions keep their dense per-rank state machines.
+pub(crate) fn allreduce_class(cfg: &SimConfig) -> bool {
+    class_common(cfg) && cfg.allreduce_algo == AllreduceAlgo::Tree
 }
 
 /// Run a corrected Reduce on the sparse engine, or `None` when the
 /// configuration is outside the supported class (callers then use the
 /// dense engine — [`super::run_reduce`]). The report is bit-identical
-/// to the dense engine's for every supported configuration.
+/// to the dense engine's for every supported configuration, at any
+/// shard count.
 pub fn run_reduce_sparse(cfg: &SimConfig) -> Option<RunReport> {
-    if !supported(cfg) {
+    if !reduce_class(cfg) {
         return None;
     }
     // shared construction seam: the same driver (and therefore the same
     // spec validation and ReduceConfig derivation) the dense path uses
     let driver = CollectiveDriver::new(&cfg.spec, DriveKind::Reduce);
     let rcfg = driver.reduce_config();
-    let mut sim = SparseSim::new(cfg, &rcfg);
+    let shards = super::shard::effective_shards(cfg);
+    if shards > 1 {
+        return Some(super::shard::run_sharded(cfg, shards, &|| SparseSim::new_reduce(cfg, &rcfg)));
+    }
+    let mut sim = SparseSim::new_reduce(cfg, &rcfg);
+    sim.apply_failures(&cfg.failures);
+    sim.start_all();
+    Some(sim.finish())
+}
+
+/// Run a tree-algorithm Allreduce on the sparse engine, or `None` when
+/// the configuration is outside the supported class (callers then use
+/// the dense engine — [`super::run_allreduce`]).
+pub fn run_allreduce_sparse(cfg: &SimConfig) -> Option<RunReport> {
+    if !allreduce_class(cfg) {
+        return None;
+    }
+    let driver = CollectiveDriver::new(&cfg.spec, DriveKind::Allreduce);
+    let acfg = driver.allreduce_config();
+    let shards = super::shard::effective_shards(cfg);
+    if shards > 1 {
+        return Some(super::shard::run_sharded(cfg, shards, &|| {
+            SparseSim::new_allreduce(cfg, &acfg)
+        }));
+    }
+    let mut sim = SparseSim::new_allreduce(cfg, &acfg);
     sim.apply_failures(&cfg.failures);
     sim.start_all();
     Some(sim.finish())
@@ -88,33 +147,63 @@ enum SPhase {
     Done,
 }
 
-/// The flattened engine: `Sim` + per-rank `Reduce`/`UpCorrection`
-/// state as SoA lanes. Indexed by *real* rank throughout; the shared
-/// `map` translates at the topology boundary exactly like
-/// `Reduce::bind` does per rank in the dense engine.
-struct SparseSim {
+/// Which collective the laned state machines implement.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SparseKind {
+    Reduce,
+    Allreduce,
+}
+
+/// An event generated while a shard processes a window: held back until
+/// the window barrier, where the orchestrator assigns global sequence
+/// numbers in the deterministic `(src.t, src.seq, generation order)`
+/// total order (see [`super::shard`]).
+pub(crate) struct Staged {
+    /// `(t, seq)` of the event being handled when this one was pushed.
+    pub(crate) src: (TimeNs, u64),
+    pub(crate) t: TimeNs,
+    pub(crate) rank: Rank,
+    pub(crate) kind: EvKind,
+}
+
+/// The flattened engine: `Sim` + per-rank `Reduce`/`UpCorrection`/
+/// `Allreduce`/`Broadcast` state as SoA lanes. Indexed by *real* rank
+/// throughout; shared `RankMap`s translate at the topology boundary
+/// exactly like `Reduce::bind` does per rank in the dense engine.
+pub(crate) struct SparseSim {
+    kind: SparseKind,
     n: u32,
     f: u32,
+    /// Reduce mode: the fixed root. Allreduce mode: unused (roots come
+    /// from `candidates`).
     root: Rank,
     op_id: u64,
+    /// Reduce mode: the wire epoch of every message.
     epoch: u32,
+    base_epoch: u32,
     net: NetModel,
     detect_latency: TimeNs,
     payload: PayloadKind,
+    scheme: Scheme,
     map: RankMap,
     tree: IfTree,
     groups: UpCorrectionGroups,
     reducer: NativeReducer,
-    heap: CalendarQueue,
+    pub(crate) heap: CalendarQueue,
     ranks: RankArena,
     watch: SimWatch,
-    metrics: Metrics,
-    outcomes: Vec<Vec<Outcome>>,
+    pub(crate) metrics: Metrics,
+    pub(crate) outcomes: Vec<Vec<Outcome>>,
     seq: u64,
     max_events: u64,
-    aborted: Option<RunAbort>,
-    now: TimeNs,
-    // ---- inlined protocol state (lazily filled at Start) ----
+    pub(crate) aborted: Option<RunAbort>,
+    pub(crate) now: TimeNs,
+    /// `Some` in sharded mode: generated events are staged for the
+    /// window barrier instead of being pushed with a local seq.
+    pub(crate) stage: Option<Vec<Staged>>,
+    /// `(t, seq)` of the event currently being processed (staging key).
+    cur_src: (TimeNs, u64),
+    // ---- inlined reduce state (lazily filled at Start) ----
     phase: Vec<SPhase>,
     uc_started: Vec<bool>,
     /// Up-correction peers not yet received from nor confirmed failed.
@@ -130,26 +219,52 @@ struct SparseSim {
     finfo: Vec<FailureInfo>,
     /// Tree messages that raced ahead of our up-correction phase.
     stash: Vec<Vec<(Rank, Msg)>>,
-    /// Root-only scalars (exactly one root per run — no lane needed).
-    delivered_root: bool,
-    report_root: Vec<Rank>,
+    /// Reduce-instance root-side state, laned per rank: exactly the
+    /// lane of each attempt's root rank is used (in reduce mode, only
+    /// `root`'s).
+    r_delivered: Vec<bool>,
+    r_report: Vec<Vec<Rank>>,
+    // ---- allreduce lanes (empty in reduce mode) ----
+    candidates: Vec<Rank>,
+    /// One shared `RankMap` per candidate root (attempt index keys it).
+    maps: Vec<RankMap>,
+    correction: CorrectionMode,
+    btree: BinomialTree,
+    /// Current wire epoch per rank (`base_epoch + attempt`).
+    a_epoch: Vec<u32>,
+    a_delivered: Vec<bool>,
+    a_errored: Vec<bool>,
+    /// Messages from future in-band epochs, replayed on catch-up.
+    a_buffered: Vec<Vec<(Rank, Msg)>>,
+    /// Failure report of the winning attempt's reduce (root only).
+    a_report: Vec<Vec<Rank>>,
+    /// Whether a broadcast instance exists (non-root: from attempt
+    /// start; root: from its `ReduceRoot`).
+    bc_exists: Vec<bool>,
+    bc_value: Vec<Option<Value>>,
+    bc_delivered: Vec<bool>,
+    /// `SubCtx::captured` equivalent: inner-protocol deliveries held
+    /// for the allreduce layer (drained by `split_off` to nest).
+    captured: Vec<Outcome>,
 }
 
 impl SparseSim {
-    fn new(cfg: &SimConfig, rcfg: &ReduceConfig) -> Self {
-        let n = rcfg.n;
+    fn new_common(cfg: &SimConfig, n: u32, f: u32, scheme: Scheme, kind: SparseKind) -> Self {
         SparseSim {
+            kind,
             n,
-            f: rcfg.f,
-            root: rcfg.root,
-            op_id: rcfg.op_id,
-            epoch: rcfg.epoch,
+            f,
+            root: 0,
+            op_id: 1,
+            epoch: 0,
+            base_epoch: 0,
             net: cfg.net,
             detect_latency: cfg.detect_latency,
             payload: cfg.payload,
-            map: RankMap::new(rcfg.root),
-            tree: IfTree::new(n, rcfg.f),
-            groups: UpCorrectionGroups::new(n, rcfg.f),
+            scheme,
+            map: RankMap::new(0),
+            tree: IfTree::new(n, f),
+            groups: UpCorrectionGroups::new(n, f),
             reducer: NativeReducer(cfg.op),
             heap: CalendarQueue::new(cfg.net.latency),
             ranks: RankArena::new(n),
@@ -160,6 +275,8 @@ impl SparseSim {
             max_events: cfg.max_events,
             aborted: None,
             now: 0,
+            stage: None,
+            cur_src: (0, 0),
             phase: vec![SPhase::UpCorr; n as usize],
             uc_started: vec![false; n as usize],
             uc_pending: (0..n).map(|_| Vec::new()).collect(),
@@ -167,21 +284,67 @@ impl SparseSim {
             uc_value: (0..n).map(|_| Value::f64(Vec::new())).collect(),
             acc: (0..n).map(|_| None).collect(),
             pending_children: (0..n).map(|_| Vec::new()).collect(),
-            finfo: (0..n).map(|_| FailureInfo::empty(rcfg.scheme)).collect(),
+            finfo: (0..n).map(|_| FailureInfo::empty(scheme)).collect(),
             stash: (0..n).map(|_| Vec::new()).collect(),
-            delivered_root: false,
-            report_root: Vec::new(),
+            r_delivered: vec![false; n as usize],
+            r_report: (0..n).map(|_| Vec::new()).collect(),
+            candidates: Vec::new(),
+            maps: Vec::new(),
+            correction: CorrectionMode::Always,
+            btree: BinomialTree::new(n.max(1)),
+            a_epoch: Vec::new(),
+            a_delivered: Vec::new(),
+            a_errored: Vec::new(),
+            a_buffered: Vec::new(),
+            a_report: Vec::new(),
+            bc_exists: Vec::new(),
+            bc_value: Vec::new(),
+            bc_delivered: Vec::new(),
+            captured: Vec::new(),
         }
+    }
+
+    pub(crate) fn new_reduce(cfg: &SimConfig, rcfg: &ReduceConfig) -> Self {
+        let mut s = Self::new_common(cfg, rcfg.n, rcfg.f, rcfg.scheme, SparseKind::Reduce);
+        s.root = rcfg.root;
+        s.op_id = rcfg.op_id;
+        s.epoch = rcfg.epoch;
+        s.base_epoch = rcfg.epoch;
+        s.map = RankMap::new(rcfg.root);
+        s
+    }
+
+    pub(crate) fn new_allreduce(cfg: &SimConfig, acfg: &AllreduceConfig) -> Self {
+        let n = acfg.n;
+        let mut s = Self::new_common(cfg, n, acfg.f, acfg.scheme, SparseKind::Allreduce);
+        s.op_id = acfg.op_id;
+        s.base_epoch = acfg.base_epoch;
+        s.candidates = acfg.candidates.clone();
+        s.maps = s.candidates.iter().map(|&c| RankMap::new(c)).collect();
+        s.correction = acfg.correction;
+        s.a_epoch = vec![acfg.base_epoch; n as usize];
+        s.a_delivered = vec![false; n as usize];
+        s.a_errored = vec![false; n as usize];
+        s.a_buffered = (0..n).map(|_| Vec::new()).collect();
+        s.a_report = (0..n).map(|_| Vec::new()).collect();
+        s.bc_exists = vec![false; n as usize];
+        s.bc_value = (0..n).map(|_| None).collect();
+        s.bc_delivered = vec![false; n as usize];
+        s
     }
 
     // ---- engine plumbing: line-for-line replicas of `Sim` ----
 
     fn push(&mut self, t: TimeNs, rank: Rank, kind: EvKind) {
-        self.seq += 1;
-        self.heap.push(Entry { t, seq: self.seq, rank, kind });
+        if let Some(stage) = self.stage.as_mut() {
+            stage.push(Staged { src: self.cur_src, t, rank, kind });
+        } else {
+            self.seq += 1;
+            self.heap.push(Entry { t, seq: self.seq, rank, kind });
+        }
     }
 
-    fn apply_failures(&mut self, specs: &[FailureSpec]) {
+    pub(crate) fn apply_failures(&mut self, specs: &[FailureSpec]) {
         for spec in specs {
             match *spec {
                 FailureSpec::Pre { rank } => {
@@ -203,6 +366,16 @@ impl SparseSim {
                 self.push(0, r, EvKind::Start);
             }
         }
+    }
+
+    pub(crate) fn is_dead(&self, rank: Rank) -> bool {
+        self.ranks.dead[rank as usize]
+    }
+
+    /// Sharded mode: the orchestrator replicates the (static,
+    /// pre-operational) dead set into every shard.
+    pub(crate) fn mark_dead(&mut self, rank: Rank) {
+        self.ranks.dead[rank as usize] = true;
     }
 
     fn kill(&mut self, rank: Rank, t: TimeNs) {
@@ -260,6 +433,66 @@ impl SparseSim {
         self.outcomes[rank as usize].push(out);
     }
 
+    /// One iteration of `Sim::run`'s body after the cap check: the
+    /// sequential loop, the sharded window loop and the sharded abort
+    /// drain all funnel through here.
+    fn process_entry(&mut self, entry: Entry) {
+        self.metrics.on_event();
+        let Entry { t, rank, kind, .. } = entry;
+        self.now = self.now.max(t);
+        if let EvKind::Kill = kind {
+            self.kill(rank, t);
+            return;
+        }
+        if self.ranks.dead[rank as usize] {
+            return;
+        }
+        let handle_t = match &kind {
+            EvKind::Deliver { .. } => {
+                let ht = t.max(self.ranks.recv_free[rank as usize]) + self.net.recv_ovh;
+                self.ranks.recv_free[rank as usize] = ht;
+                ht
+            }
+            _ => t,
+        };
+        self.now = self.now.max(handle_t);
+        match kind {
+            EvKind::Start => self.on_start_ev(rank, handle_t),
+            EvKind::Deliver { from, msg } => self.on_message_ev(rank, from, *msg, handle_t),
+            EvKind::Detect { peer } => {
+                if self.watch.is_watching(rank, peer) {
+                    self.watch.clear(rank, peer);
+                    self.on_peer_failed_ev(rank, peer, handle_t);
+                }
+            }
+            EvKind::Timer { .. } => {}
+            EvKind::Kill => unreachable!(),
+        }
+    }
+
+    /// Process one already-popped entry in sharded mode (window run and
+    /// abort drain), recording the staging key first.
+    pub(crate) fn process_one(&mut self, entry: Entry) {
+        self.cur_src = (entry.t, entry.seq);
+        self.process_entry(entry);
+    }
+
+    /// Sharded mode: process every queued event strictly before `end_t`
+    /// (one conservative window), staging whatever they generate.
+    /// Returns the number of events processed.
+    pub(crate) fn run_window(&mut self, end_t: TimeNs) -> u64 {
+        let mut events = 0u64;
+        while let Some((t, _)) = self.heap.peek() {
+            if t >= end_t {
+                break;
+            }
+            let entry = self.heap.pop().expect("peeked entry");
+            self.process_one(entry);
+            events += 1;
+        }
+        events
+    }
+
     fn run_loop(&mut self) -> TimeNs {
         let mut events: u64 = 0;
         while let Some(entry) = self.heap.pop() {
@@ -268,37 +501,7 @@ impl SparseSim {
                 break;
             }
             events += 1;
-            self.metrics.on_event();
-            let Entry { t, rank, kind, .. } = entry;
-            self.now = self.now.max(t);
-            if let EvKind::Kill = kind {
-                self.kill(rank, t);
-                continue;
-            }
-            if self.ranks.dead[rank as usize] {
-                continue;
-            }
-            let handle_t = match &kind {
-                EvKind::Deliver { .. } => {
-                    let ht = t.max(self.ranks.recv_free[rank as usize]) + self.net.recv_ovh;
-                    self.ranks.recv_free[rank as usize] = ht;
-                    ht
-                }
-                _ => t,
-            };
-            self.now = self.now.max(handle_t);
-            match kind {
-                EvKind::Start => self.on_start(rank, handle_t),
-                EvKind::Deliver { from, msg } => self.on_message(rank, from, *msg, handle_t),
-                EvKind::Detect { peer } => {
-                    if self.watch.is_watching(rank, peer) {
-                        self.watch.clear(rank, peer);
-                        self.on_peer_failed(rank, peer, handle_t);
-                    }
-                }
-                EvKind::Timer { .. } => {}
-                EvKind::Kill => unreachable!(),
-            }
+            self.process_entry(entry);
         }
         self.now
     }
@@ -319,6 +522,72 @@ impl SparseSim {
         }
     }
 
+    // ---- per-rank view of the current reduce instance: in reduce
+    // mode these are the fixed root/map/epoch; in allreduce mode the
+    // current attempt's (the dense engine's per-rank `ReduceConfig`) --
+
+    #[inline]
+    fn attempt_of(&self, r: Rank) -> usize {
+        (self.a_epoch[r as usize] - self.base_epoch) as usize
+    }
+
+    #[inline]
+    fn red_root(&self, r: Rank) -> Rank {
+        match self.kind {
+            SparseKind::Reduce => self.root,
+            SparseKind::Allreduce => self.candidates[self.attempt_of(r)],
+        }
+    }
+
+    #[inline]
+    fn red_map(&self, r: Rank) -> RankMap {
+        match self.kind {
+            SparseKind::Reduce => self.map,
+            SparseKind::Allreduce => self.maps[self.attempt_of(r)],
+        }
+    }
+
+    #[inline]
+    fn red_epoch(&self, r: Rank) -> u32 {
+        match self.kind {
+            SparseKind::Reduce => self.epoch,
+            SparseKind::Allreduce => self.a_epoch[r as usize],
+        }
+    }
+
+    /// The inner reduce's `ctx.deliver`: straight to the run outcomes
+    /// in reduce mode, captured for the allreduce layer otherwise
+    /// (the dense `SubCtx::deliver`).
+    fn red_deliver(&mut self, r: Rank, now: TimeNs, out: Outcome) {
+        match self.kind {
+            SparseKind::Reduce => self.deliver(r, now, out),
+            SparseKind::Allreduce => self.captured.push(out),
+        }
+    }
+
+    // ---- event dispatch by collective kind ----
+
+    fn on_start_ev(&mut self, r: Rank, now: TimeNs) {
+        match self.kind {
+            SparseKind::Reduce => self.red_on_start(r, now),
+            SparseKind::Allreduce => self.ar_start_attempt(r, now),
+        }
+    }
+
+    fn on_message_ev(&mut self, r: Rank, from: Rank, msg: Msg, now: TimeNs) {
+        match self.kind {
+            SparseKind::Reduce => self.red_on_message(r, from, msg, now),
+            SparseKind::Allreduce => self.ar_on_message(r, from, msg, now),
+        }
+    }
+
+    fn on_peer_failed_ev(&mut self, r: Rank, peer: Rank, now: TimeNs) {
+        match self.kind {
+            SparseKind::Reduce => self.red_on_peer_failed(r, peer, now),
+            SparseKind::Allreduce => self.ar_on_peer_failed(r, peer, now),
+        }
+    }
+
     // ---- inlined protocol handlers: transcriptions of
     // `Reduce`/`UpCorrection` (see module docs) ----
 
@@ -327,11 +596,13 @@ impl SparseSim {
     }
 
     /// `Reduce::on_start`: bind + `UpCorrection::start`.
-    fn on_start(&mut self, r: Rank, now: TimeNs) {
+    fn red_on_start(&mut self, r: Rank, now: TimeNs) {
         let i = r as usize;
-        let vr = self.map.to_virtual(r);
+        let map = self.red_map(r);
+        let epoch = self.red_epoch(r);
+        let vr = map.to_virtual(r);
         let peers: Vec<Rank> =
-            self.groups.peers_of(vr).into_iter().map(|v| self.map.to_real(v)).collect();
+            self.groups.peers_of(vr).into_iter().map(|v| map.to_real(v)).collect();
         self.uc_value[i] = self.payload.initial(r, self.n);
         self.uc_pending[i] = peers.clone();
         self.uc_started[i] = true;
@@ -341,7 +612,7 @@ impl SparseSim {
             // second per-rank copy
             let msg = Msg {
                 op: self.op_id,
-                epoch: self.epoch,
+                epoch,
                 kind: MsgKind::UpCorrection,
                 payload: self.payload.initial(r, self.n),
                 finfo: FailureInfo::Bit(false),
@@ -364,13 +635,16 @@ impl SparseSim {
             self.finfo[i].record_upcorr_failure(d);
             j += 1;
         }
-        if r == self.root {
-            self.report_root.extend_from_slice(&self.uc_detected[i]);
+        if r == self.red_root(r) {
+            let detected = std::mem::take(&mut self.uc_detected[i]);
+            self.r_report[i].extend_from_slice(&detected);
+            self.uc_detected[i] = detected;
         }
         self.acc[i] = Some(self.uc_value[i].clone());
-        let vr = self.map.to_virtual(r);
+        let map = self.red_map(r);
+        let vr = map.to_virtual(r);
         let children: Vec<Rank> =
-            self.tree.children(vr).into_iter().map(|v| self.map.to_real(v)).collect();
+            self.tree.children(vr).into_iter().map(|v| map.to_real(v)).collect();
         self.pending_children[i] = children.clone();
         for &c in &children {
             self.ctx_watch(r, now, c);
@@ -387,37 +661,42 @@ impl SparseSim {
         if self.phase[i] != SPhase::Tree || !self.pending_children[i].is_empty() {
             return;
         }
-        if r == self.root {
-            if !self.delivered_root {
-                self.delivered_root = true;
+        if r == self.red_root(r) {
+            if !self.r_delivered[i] {
+                self.r_delivered[i] = true;
                 if self.tree.num_subtrees() == 0 {
                     let value = self.uc_value[i].clone();
-                    self.deliver(r, now, Outcome::ReduceRoot { value, known_failed: Vec::new() });
+                    self.red_deliver(
+                        r,
+                        now,
+                        Outcome::ReduceRoot { value, known_failed: Vec::new() },
+                    );
                 } else {
-                    self.deliver(r, now, Outcome::Error(ProtoError::NoFailureFreeSubtree));
+                    self.red_deliver(r, now, Outcome::Error(ProtoError::NoFailureFreeSubtree));
                 }
             }
             self.phase[i] = SPhase::Done;
             return;
         }
-        let vr = self.map.to_virtual(r);
-        let parent = self.map.to_real(self.tree.parent(vr).expect("non-root"));
+        let map = self.red_map(r);
+        let vr = map.to_virtual(r);
+        let parent = map.to_real(self.tree.parent(vr).expect("non-root"));
         let payload = self.acc[i].take().expect("tree accumulator");
         let msg = Msg {
             op: self.op_id,
-            epoch: self.epoch,
+            epoch: self.red_epoch(r),
             kind: MsgKind::TreeUp,
             payload,
             finfo: self.finfo[i].clone(),
         };
         self.do_send(r, now, parent, msg);
         self.phase[i] = SPhase::Done;
-        self.deliver(r, now, Outcome::ReduceDone);
+        self.red_deliver(r, now, Outcome::ReduceDone);
     }
 
     /// `Reduce::on_message`.
-    fn on_message(&mut self, r: Rank, from: Rank, msg: Msg, now: TimeNs) {
-        if msg.op != self.op_id || msg.epoch != self.epoch {
+    fn red_on_message(&mut self, r: Rank, from: Rank, msg: Msg, now: TimeNs) {
+        if msg.op != self.op_id || msg.epoch != self.red_epoch(r) {
             return;
         }
         let i = r as usize;
@@ -434,7 +713,7 @@ impl SparseSim {
                 SPhase::UpCorr => self.stash[i].push((from, msg)),
                 SPhase::Tree => self.on_tree_message(r, from, msg, now),
                 SPhase::Done => {
-                    if r == self.root {
+                    if r == self.red_root(r) {
                         if let Some(p) =
                             self.pending_children[i].iter().position(|&c| c == from)
                         {
@@ -472,8 +751,8 @@ impl SparseSim {
         };
         self.pending_children[i].swap_remove(p);
         self.watch.unwatch(r, from);
-        if r == self.root {
-            self.root_child_result(from, msg, now);
+        if r == self.red_root(r) {
+            self.root_child_result(r, from, msg, now);
         } else {
             let mut acc = self.acc[i].take().expect("tree accumulator");
             self.reducer.combine(&mut acc, &msg.payload);
@@ -483,17 +762,18 @@ impl SparseSim {
         self.maybe_finish_tree(r, now);
     }
 
-    /// `Reduce::root_child_result`.
-    fn root_child_result(&mut self, from: Rank, msg: Msg, now: TimeNs) {
-        self.report_root.extend_from_slice(msg.finfo.known_failed());
-        if self.delivered_root {
+    /// `Reduce::root_child_result` (`r` is the instance's root rank).
+    fn root_child_result(&mut self, r: Rank, from: Rank, msg: Msg, now: TimeNs) {
+        let i = r as usize;
+        self.r_report[i].extend_from_slice(msg.finfo.known_failed());
+        if self.r_delivered[i] {
             return; // already selected; keep consuming
         }
-        let k = self.tree.subtree_of(self.map.to_virtual(from));
+        let map = self.red_map(r);
+        let k = self.tree.subtree_of(map.to_virtual(from));
         let f1 = self.f + 1;
-        let map = self.map;
-        let in_subtree = |r: Rank| {
-            let v = map.to_virtual(r);
+        let in_subtree = |q: Rank| {
+            let v = map.to_virtual(q);
             v >= 1 && (v - 1) % f1 == k - 1
         };
         if !msg.finfo.subtree_valid(in_subtree) {
@@ -502,18 +782,18 @@ impl SparseSim {
         let complete = self.groups.root_in_group() && k <= self.groups.a() - 1;
         let mut value = msg.payload;
         if !complete {
-            let nu = self.uc_value[self.root as usize].clone();
+            let nu = self.uc_value[i].clone();
             self.reducer.combine(&mut value, &nu);
         }
-        self.delivered_root = true;
-        let mut known_failed = std::mem::take(&mut self.report_root);
+        self.r_delivered[i] = true;
+        let mut known_failed = std::mem::take(&mut self.r_report[i]);
         known_failed.sort_unstable();
         known_failed.dedup();
-        self.deliver(self.root, now, Outcome::ReduceRoot { value, known_failed });
+        self.red_deliver(r, now, Outcome::ReduceRoot { value, known_failed });
     }
 
     /// `Reduce::on_peer_failed` (+ `UpCorrection::handle_peer_failed`).
-    fn on_peer_failed(&mut self, r: Rank, peer: Rank, now: TimeNs) {
+    fn red_on_peer_failed(&mut self, r: Rank, peer: Rank, now: TimeNs) {
         let i = r as usize;
         let uc_hit = match self.uc_pending[i].iter().position(|&q| q == peer) {
             Some(p) => {
@@ -530,11 +810,259 @@ impl SparseSim {
             if let Some(p) = self.pending_children[i].iter().position(|&c| c == peer) {
                 self.pending_children[i].swap_remove(p);
                 self.finfo[i].record_tree_failure(peer);
-                if r == self.root {
-                    self.report_root.push(peer);
+                if r == self.red_root(r) {
+                    self.r_report[i].push(peer);
                 }
                 self.maybe_finish_tree(r, now);
             }
+        }
+    }
+
+    // ---- inlined allreduce handlers: transcriptions of
+    // `Allreduce` + `Broadcast` (see module docs) ----
+
+    /// Reset rank `r`'s inner-reduce lanes: the dense engine's
+    /// `Reduce::new` per attempt.
+    fn reset_reduce_lanes(&mut self, r: Rank) {
+        let i = r as usize;
+        self.phase[i] = SPhase::UpCorr;
+        self.uc_started[i] = false;
+        self.uc_pending[i].clear();
+        self.uc_detected[i].clear();
+        self.uc_value[i] = Value::f64(Vec::new());
+        self.acc[i] = None;
+        self.pending_children[i].clear();
+        self.finfo[i] = FailureInfo::empty(self.scheme);
+        self.stash[i].clear();
+        self.r_delivered[i] = false;
+        self.r_report[i].clear();
+    }
+
+    /// `Allreduce::start_attempt`.
+    fn ar_start_attempt(&mut self, r: Rank, now: TimeNs) {
+        let i = r as usize;
+        let root = self.red_root(r);
+        // watch the candidate root so its (pre-operational) failure is
+        // detected even by processes it owes no protocol message to
+        if root != r {
+            self.ctx_watch(r, now, root);
+        }
+        self.reset_reduce_lanes(r);
+        // the non-root broadcast half is passive and can be created
+        // up-front; the root's is created once the reduce delivers the
+        // value (its passive `on_start` is a no-op)
+        self.bc_exists[i] = root != r;
+        self.bc_value[i] = None;
+        self.bc_delivered[i] = false;
+        let base = self.captured.len();
+        self.red_on_start(r, now);
+        let captured = self.captured.split_off(base);
+        self.ar_handle_captured(r, now, captured);
+        self.ar_replay_buffered(r, now);
+    }
+
+    /// `Allreduce::replay_buffered`.
+    fn ar_replay_buffered(&mut self, r: Rank, now: TimeNs) {
+        let i = r as usize;
+        let epoch = self.a_epoch[i];
+        let (replay, later): (Vec<_>, Vec<_>) = std::mem::take(&mut self.a_buffered[i])
+            .into_iter()
+            .partition(|(_, m)| m.epoch == epoch);
+        self.a_buffered[i] = later;
+        for (from, msg) in replay {
+            self.ar_route_message(r, from, msg, now);
+        }
+    }
+
+    /// `Allreduce::route_message`.
+    fn ar_route_message(&mut self, r: Rank, from: Rank, msg: Msg, now: TimeNs) {
+        let i = r as usize;
+        let base = self.captured.len();
+        match msg.kind {
+            MsgKind::UpCorrection | MsgKind::TreeUp => {
+                // the reduce half always exists once the rank started
+                // (Start events precede every delivery in the DES)
+                self.red_on_message(r, from, msg, now);
+            }
+            MsgKind::BcastTree | MsgKind::BcastCorrection => {
+                if self.bc_exists[i] {
+                    self.bc_on_message(r, from, msg, now);
+                }
+            }
+            _ => {} // baseline/butterfly kinds never reach this op id
+        }
+        let captured = self.captured.split_off(base);
+        self.ar_handle_captured(r, now, captured);
+    }
+
+    /// `Allreduce::handle_captured`.
+    fn ar_handle_captured(&mut self, r: Rank, now: TimeNs, captured: Vec<Outcome>) {
+        let i = r as usize;
+        for out in captured {
+            match out {
+                Outcome::ReduceDone => {
+                    // our subtree duties for this attempt are complete;
+                    // nothing to do — the broadcast half is already live
+                }
+                Outcome::ReduceRoot { value, known_failed } => {
+                    // we are the attempt's root: broadcast the result
+                    debug_assert_eq!(r, self.red_root(r));
+                    self.a_report[i] = known_failed;
+                    self.bc_exists[i] = true;
+                    self.bc_value[i] = None;
+                    self.bc_delivered[i] = false;
+                    let base = self.captured.len();
+                    // `Broadcast::new(bcfg, Some(value))` + root `on_start`
+                    self.bc_acquire(r, now, value);
+                    let nested = self.captured.split_off(base);
+                    self.ar_handle_captured(r, now, nested);
+                }
+                Outcome::Broadcast(value) => {
+                    if !self.a_delivered[i] {
+                        self.a_delivered[i] = true;
+                        let root = self.red_root(r);
+                        if r != root {
+                            self.watch.unwatch(r, root);
+                        }
+                        let attempts = self.attempt_of(r) as u32 + 1;
+                        self.deliver(r, now, Outcome::Allreduce { value, attempts });
+                    }
+                }
+                Outcome::Error(e) => {
+                    // reduce exploded (> f failures): out of contract;
+                    // surface it once
+                    if !self.a_delivered[i] && !self.a_errored[i] {
+                        self.a_errored[i] = true;
+                        self.deliver(r, now, Outcome::Error(e));
+                    }
+                }
+                Outcome::Allreduce { .. } => unreachable!("inner protocols never allreduce"),
+            }
+        }
+    }
+
+    /// `Allreduce::rotate`.
+    fn ar_rotate(&mut self, r: Rank, now: TimeNs) {
+        let i = r as usize;
+        self.a_epoch[i] += 1;
+        if self.attempt_of(r) >= self.candidates.len() {
+            if !self.a_delivered[i] && !self.a_errored[i] {
+                self.a_errored[i] = true;
+                self.deliver(
+                    r,
+                    now,
+                    Outcome::Error(ProtoError::RootCandidatesExhausted(
+                        self.candidates.len() as u32,
+                    )),
+                );
+            }
+            return;
+        }
+        self.ar_start_attempt(r, now);
+    }
+
+    /// `Allreduce::on_message`.
+    fn ar_on_message(&mut self, r: Rank, from: Rank, msg: Msg, now: TimeNs) {
+        let i = r as usize;
+        if msg.op != self.op_id || self.a_errored[i] {
+            return;
+        }
+        let band_end = self.base_epoch + self.candidates.len() as u32;
+        if msg.epoch < self.base_epoch || msg.epoch >= band_end {
+            // outside this operation's epoch band: traffic of a
+            // different operation generation reusing the op id — drop
+            return;
+        }
+        if msg.epoch < self.a_epoch[i] {
+            return; // aborted attempt
+        }
+        if msg.epoch > self.a_epoch[i] {
+            // a peer already rotated (we will once the monitor
+            // confirms) — hold the message for replay
+            self.a_buffered[i].push((from, msg));
+            return;
+        }
+        self.ar_route_message(r, from, msg, now);
+    }
+
+    /// `Allreduce::on_peer_failed`.
+    fn ar_on_peer_failed(&mut self, r: Rank, peer: Rank, now: TimeNs) {
+        let i = r as usize;
+        if self.a_errored[i] {
+            return;
+        }
+        if peer == self.red_root(r) && !self.a_delivered[i] {
+            // consistent detection (§5.2): abandon the attempt — every
+            // live process reaches the same verdict and the same next
+            // root. Stale watches of the dead attempt resolve to
+            // notifications routed to the live attempt below.
+            self.ar_rotate(r, now);
+            return;
+        }
+        // route to the live attempt's reduce (broadcast watches no one)
+        let base = self.captured.len();
+        self.red_on_peer_failed(r, peer, now);
+        let captured = self.captured.split_off(base);
+        self.ar_handle_captured(r, now, captured);
+    }
+
+    /// `Broadcast::acquire` (deliveries captured like every inner one).
+    fn bc_acquire(&mut self, r: Rank, now: TimeNs, value: Value) {
+        let i = r as usize;
+        if self.bc_value[i].is_some() {
+            return; // duplicates are expected (tree + corrections)
+        }
+        self.bc_value[i] = Some(value.clone());
+        if !self.bc_delivered[i] {
+            self.bc_delivered[i] = true;
+            self.captured.push(Outcome::Broadcast(value));
+        }
+        self.bc_disseminate(r, now);
+    }
+
+    /// `Broadcast::disseminate`: binomial tree over ring positions, then
+    /// ring corrections to the `f+1` successors.
+    fn bc_disseminate(&mut self, r: Rank, now: TimeNs) {
+        let i = r as usize;
+        let v = self.bc_value[i].clone().expect("value acquired");
+        let epoch = self.red_epoch(r);
+        let ring = Ring::new(self.n, self.red_root(r));
+        let pos = ring.position(r);
+        for cpos in self.btree.children(pos) {
+            let child = ring.rank_at(cpos);
+            let msg = Msg {
+                op: self.op_id,
+                epoch,
+                kind: MsgKind::BcastTree,
+                payload: v.clone(),
+                finfo: FailureInfo::Bit(false),
+            };
+            self.do_send(r, now, child, msg);
+        }
+        if self.correction == CorrectionMode::Always {
+            let max_d = (self.f + 1).min(self.n - 1);
+            for d in 1..=max_d {
+                let succ = ring.successor(r, d);
+                let msg = Msg {
+                    op: self.op_id,
+                    epoch,
+                    kind: MsgKind::BcastCorrection,
+                    payload: v.clone(),
+                    finfo: FailureInfo::Bit(false),
+                };
+                self.do_send(r, now, succ, msg);
+            }
+        }
+    }
+
+    /// `Broadcast::on_message`.
+    fn bc_on_message(&mut self, r: Rank, _from: Rank, msg: Msg, now: TimeNs) {
+        if msg.op != self.op_id || msg.epoch != self.red_epoch(r) {
+            return;
+        }
+        match msg.kind {
+            MsgKind::BcastTree | MsgKind::BcastCorrection => self.bc_acquire(r, now, msg.payload),
+            _ => {}
         }
     }
 }
@@ -547,14 +1075,27 @@ mod tests {
     fn unsupported_configurations_fall_back() {
         // tracing forces the dense engine
         assert!(run_reduce_sparse(&SimConfig::new(8, 1).tracing(true)).is_none());
-        // non-pre failures force the dense engine
-        let cfg = SimConfig::new(8, 1).failure(FailureSpec::AfterSends { rank: 3, sends: 1 });
-        assert!(run_reduce_sparse(&cfg).is_none());
-        // a failure plan touching the root forces the dense engine
+        // a failure plan touching the root pre-operationally forces the
+        // dense engine
         let cfg = SimConfig::new(8, 1).root(2).failure(FailureSpec::Pre { rank: 2 });
         assert!(run_reduce_sparse(&cfg).is_none());
         // segmented/pipelined runs force the dense engine
         assert!(run_reduce_sparse(&SimConfig::new(8, 1).segment_bytes(64)).is_none());
+        // non-tree allreduce decompositions force the dense engine
+        let cfg = SimConfig::new(8, 1).allreduce_algo(AllreduceAlgo::Rsag);
+        assert!(run_allreduce_sparse(&cfg).is_none());
+        let cfg = SimConfig::new(8, 1).allreduce_algo(AllreduceAlgo::Butterfly);
+        assert!(run_allreduce_sparse(&cfg).is_none());
+        // segmented allreduce likewise
+        assert!(run_allreduce_sparse(&SimConfig::new(8, 1).segment_bytes(64)).is_none());
+    }
+
+    #[test]
+    fn in_op_kills_are_in_class_for_reduce() {
+        let cfg = SimConfig::new(8, 1).failure(FailureSpec::AfterSends { rank: 3, sends: 1 });
+        assert!(run_reduce_sparse(&cfg).is_some(), "in-op kills are in the widened class");
+        let cfg = SimConfig::new(8, 1).failure(FailureSpec::AtTime { rank: 3, at: 50 });
+        assert!(run_reduce_sparse(&cfg).is_some());
     }
 
     #[test]
@@ -567,6 +1108,44 @@ mod tests {
                 for r in 0..n {
                     assert_eq!(rep.deliveries_at(r), 1, "rank {r} n={n} f={f}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn clean_allreduce_agrees_on_the_sparse_engine() {
+        for n in [1u32, 2, 3, 7, 8, 16, 33] {
+            for f in [0u32, 1, 2, 3] {
+                let rep = run_allreduce_sparse(&SimConfig::new(n, f)).expect("supported");
+                let expect: f64 = (0..n).map(|r| r as f64).sum();
+                for r in 0..n {
+                    match rep.outcomes[r as usize].first() {
+                        Some(Outcome::Allreduce { value, attempts }) => {
+                            assert_eq!(value.as_f64_scalar(), expect, "rank {r} n={n} f={f}");
+                            assert_eq!(*attempts, 1, "rank {r} n={n} f={f}");
+                        }
+                        o => panic!("rank {r} n={n} f={f}: unexpected {o:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_allreduce_rotates_past_dead_roots() {
+        let cfg = SimConfig::new(8, 2).failures(vec![
+            FailureSpec::Pre { rank: 0 },
+            FailureSpec::Pre { rank: 1 },
+        ]);
+        let rep = run_allreduce_sparse(&cfg).expect("supported");
+        let expect: f64 = (2..8).map(|r| r as f64).sum();
+        for r in 2..8 {
+            match rep.outcomes[r as usize].first() {
+                Some(Outcome::Allreduce { value, attempts }) => {
+                    assert_eq!(value.as_f64_scalar(), expect, "rank {r}");
+                    assert_eq!(*attempts, 3, "rank {r}: roots 0,1 dead → third attempt");
+                }
+                o => panic!("rank {r}: unexpected {o:?}"),
             }
         }
     }

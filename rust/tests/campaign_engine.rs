@@ -11,8 +11,9 @@ use ftcoll::campaign::{
 #[test]
 fn thousand_scenarios_all_oracles_pass() {
     let cfg = CampaignConfig {
-        grid: GridConfig { count: 1000, seed: 1, max_n: 128 },
+        grid: GridConfig { count: 1000, seed: 1, max_n: 128, bign: 0 },
         threads: 0,
+        shards: 1,
     };
     let result = run_campaign(&cfg);
     assert_eq!(result.scenarios.len(), 1000);
@@ -31,9 +32,9 @@ fn thousand_scenarios_all_oracles_pass() {
 /// produce a bit-identical campaign_result.json.
 #[test]
 fn same_manifest_seed_is_bit_identical() {
-    let grid = GridConfig { count: 200, seed: 7, max_n: 96 };
-    let a = run_campaign(&CampaignConfig { grid, threads: 1 });
-    let b = run_campaign(&CampaignConfig { grid, threads: 4 });
+    let grid = GridConfig { count: 200, seed: 7, max_n: 96, bign: 0 };
+    let a = run_campaign(&CampaignConfig { grid, threads: 1, shards: 1 });
+    let b = run_campaign(&CampaignConfig { grid, threads: 4, shards: 1 });
     let ja = campaign::to_json(&a);
     let jb = campaign::to_json(&b);
     assert_eq!(ja, jb, "campaign_result.json must be bit-identical");
@@ -43,12 +44,14 @@ fn same_manifest_seed_is_bit_identical() {
 #[test]
 fn different_seeds_change_the_campaign() {
     let a = run_campaign(&CampaignConfig {
-        grid: GridConfig { count: 50, seed: 1, max_n: 64 },
+        grid: GridConfig { count: 50, seed: 1, max_n: 64, bign: 0 },
         threads: 2,
+        shards: 1,
     });
     let b = run_campaign(&CampaignConfig {
-        grid: GridConfig { count: 50, seed: 2, max_n: 64 },
+        grid: GridConfig { count: 50, seed: 2, max_n: 64, bign: 0 },
         threads: 2,
+        shards: 1,
     });
     assert_ne!(campaign::to_json(&a), campaign::to_json(&b));
 }
@@ -57,13 +60,13 @@ fn different_seeds_change_the_campaign() {
 /// run reproduces the recorded counters exactly.
 #[test]
 fn replay_by_id_reproduces_the_run() {
-    let grid = GridConfig { count: 120, seed: 11, max_n: 64 };
-    let result = run_campaign(&CampaignConfig { grid, threads: 0 });
+    let grid = GridConfig { count: 120, seed: 11, max_n: 64, bign: 0 };
+    let result = run_campaign(&CampaignConfig { grid, threads: 0, shards: 1 });
     // pick scenarios with failures (the interesting replays)
     let mut replayed = 0;
     for s in result.scenarios.iter().filter(|s| !s.dead.is_empty()).take(10) {
         let spec = campaign::find_scenario(&grid, &s.id).expect("id resolves");
-        let rep = campaign::execute(&spec, false);
+        let rep = campaign::execute(&spec, false, 1);
         assert_eq!(rep.metrics.total_msgs(), s.msgs_total, "{}", s.id);
         assert_eq!(rep.final_time, s.final_time, "{}", s.id);
         let dead: Vec<u32> = rep.dead.clone();
@@ -77,7 +80,7 @@ fn replay_by_id_reproduces_the_run() {
 /// (storm, cascade, root-kill, correction-phase, …) at campaign scale.
 #[test]
 fn campaign_exercises_the_whole_grid() {
-    let specs = campaign::generate(&GridConfig { count: 1000, seed: 1, max_n: 128 });
+    let specs = campaign::generate(&GridConfig { count: 1000, seed: 1, max_n: 128, bign: 0 });
     let count = |p: fn(&campaign::ScenarioSpec) -> bool| specs.iter().filter(|s| p(s)).count();
     assert!(count(|s| s.collective == Collective::Reduce) > 200);
     assert!(count(|s| s.collective == Collective::Allreduce) > 200);

@@ -20,17 +20,31 @@ use ftcoll::prng::Pcg;
 use ftcoll::sim::net::NetModel;
 use ftcoll::sim::{self, SimConfig};
 
-/// Run `cfg` on both engines and require bit-identical reports.
+/// Require two reports bit-identical in every observable field.
+fn assert_reports_identical(a: &ftcoll::sim::RunReport, b: &ftcoll::sim::RunReport, label: &str) {
+    assert_eq!(a.n, b.n, "{label}: n");
+    assert_eq!(a.dead, b.dead, "{label}: dead set");
+    assert_eq!(a.aborted, b.aborted, "{label}: abort record");
+    assert_eq!(a.final_time, b.final_time, "{label}: final time");
+    assert_eq!(a.outcomes, b.outcomes, "{label}: outcomes");
+    assert_eq!(a.metrics, b.metrics, "{label}: metrics");
+}
+
+/// Run `cfg` on both reduce engines and require bit-identical reports.
 fn assert_identical(cfg: &SimConfig, label: &str) {
     let sparse = ftcoll::sim::sparse::run_reduce_sparse(cfg)
         .unwrap_or_else(|| panic!("{label}: config unexpectedly outside the sparse class"));
     let dense = sim::run_reduce(cfg);
-    assert_eq!(sparse.n, dense.n, "{label}: n");
-    assert_eq!(sparse.dead, dense.dead, "{label}: dead set");
-    assert_eq!(sparse.aborted, dense.aborted, "{label}: abort record");
-    assert_eq!(sparse.final_time, dense.final_time, "{label}: final time");
-    assert_eq!(sparse.outcomes, dense.outcomes, "{label}: outcomes");
-    assert_eq!(sparse.metrics, dense.metrics, "{label}: metrics");
+    assert_reports_identical(&sparse, &dense, label);
+}
+
+/// Run `cfg` on both allreduce engines and require bit-identical
+/// reports (the tree algorithm; rsag/butterfly stay dense-only).
+fn assert_allreduce_identical(cfg: &SimConfig, label: &str) {
+    let sparse = ftcoll::sim::sparse::run_allreduce_sparse(cfg)
+        .unwrap_or_else(|| panic!("{label}: config unexpectedly outside the sparse class"));
+    let dense = sim::run_allreduce(cfg);
+    assert_reports_identical(&sparse, &dense, label);
 }
 
 #[test]
@@ -124,14 +138,111 @@ fn event_cap_aborts_identically() {
     assert_eq!(sparse.outcomes, dense.outcomes);
 }
 
+/// In-operation kills — the class widened by docs/SCALE.md §Widened
+/// class: `AtTime` and `AfterSends` victims (including the root) run on
+/// the sparse engine and stay bit-identical to the dense one across
+/// kill times that land before, inside, and after the correction phase.
+#[test]
+fn in_operation_kills_are_bit_identical() {
+    for n in [8u32, 13, 24, 48] {
+        for f in [1u32, 2, 3] {
+            for at in [1u64, 50, 1_500, 40_000] {
+                let cfg = SimConfig::new(n, f)
+                    .failure(FailureSpec::AtTime { rank: n / 2, at });
+                assert_identical(&cfg, &format!("attime n={n} f={f} at={at}"));
+            }
+            for sends in [0u32, 1, 3] {
+                let cfg = SimConfig::new(n, f)
+                    .failure(FailureSpec::AfterSends { rank: n - 1, sends });
+                assert_identical(&cfg, &format!("aftersends n={n} f={f} sends={sends}"));
+            }
+        }
+    }
+    // the root dying mid-operation is in-class (unlike a pre-dead root)
+    let root_kill = SimConfig::new(16, 2).failure(FailureSpec::AtTime { rank: 0, at: 800 });
+    assert_identical(&root_kill, "in-op root kill");
+    // and a two-victim mix of both kill kinds
+    let mixed = SimConfig::new(24, 3).failures(vec![
+        FailureSpec::AtTime { rank: 5, at: 900 },
+        FailureSpec::AfterSends { rank: 17, sends: 2 },
+    ]);
+    assert_identical(&mixed, "mixed in-op kills");
+}
+
+/// Allreduce (tree algorithm) — the other half of the widened class:
+/// clean runs, pre-operational exclusions, dead candidate roots
+/// (attempt-band rotation), and in-operation kills all bit-identical.
+#[test]
+fn tree_allreduces_are_bit_identical() {
+    for n in [1u32, 2, 3, 8, 17, 33] {
+        for f in [0u32, 1, 2, 3] {
+            let cfg = SimConfig::new(n, f);
+            assert_allreduce_identical(&cfg, &format!("clean allreduce n={n} f={f}"));
+        }
+    }
+    let pre = SimConfig::new(20, 2)
+        .failures(vec![FailureSpec::Pre { rank: 5 }, FailureSpec::Pre { rank: 11 }]);
+    assert_allreduce_identical(&pre, "pre allreduce");
+    // rank 0 is the first candidate root: its death rotates attempts
+    let rotate = SimConfig::new(16, 2).failure(FailureSpec::Pre { rank: 0 });
+    assert_allreduce_identical(&rotate, "rotating allreduce");
+    for at in [1u64, 500, 20_000] {
+        let inop = SimConfig::new(24, 2).failure(FailureSpec::AtTime { rank: 13, at });
+        assert_allreduce_identical(&inop, &format!("in-op allreduce at={at}"));
+    }
+    let payload = SimConfig::new(21, 3).payload(PayloadKind::OneHot).net(NetModel::hpc());
+    assert_allreduce_identical(&payload, "one-hot hpc allreduce");
+}
+
+/// `--shards K` determinism at the tier-1 integration level: reduce and
+/// allreduce runs through the public auto entry points are bit-identical
+/// across shard counts — full structs, `Metrics` included — over nets,
+/// failure plans, and awkward n/K mixes.
+#[test]
+fn sharded_runs_are_bit_identical_across_shard_counts() {
+    for (n, f, net) in [
+        (64u32, 2u32, NetModel::unit()),
+        (97, 3, NetModel::hpc()),
+        (96, 2, NetModel::lan()),
+    ] {
+        let base = SimConfig::new(n, f)
+            .net(net)
+            .failures(vec![FailureSpec::Pre { rank: f + 1 }, FailureSpec::Pre { rank: n - 1 }]);
+        let seq_r = sim::run_reduce_auto(&base.clone().shards(1));
+        let seq_a = sim::run_allreduce_auto(&base.clone().shards(1));
+        for s in [2u32, 4] {
+            let par_r = sim::run_reduce_auto(&base.clone().shards(s));
+            assert_reports_identical(&seq_r, &par_r, &format!("reduce n={n} shards={s}"));
+            let par_a = sim::run_allreduce_auto(&base.clone().shards(s));
+            assert_reports_identical(&seq_a, &par_a, &format!("allreduce n={n} shards={s}"));
+        }
+    }
+}
+
+/// Event-cap aborts land on the same event with the same `RunAbort`
+/// under sharding (the orchestrator's exact sequential drain).
+#[test]
+fn sharded_event_cap_aborts_identically() {
+    for cap in [10u64, 40, 120] {
+        let mut a = SimConfig::new(48, 2).shards(1);
+        a.max_events = cap;
+        let mut b = a.clone().shards(4);
+        b.max_events = cap;
+        let seq = sim::run_reduce_auto(&a);
+        let par = sim::run_reduce_auto(&b);
+        assert!(seq.aborted.is_some(), "cap {cap} must trip");
+        assert_reports_identical(&seq, &par, &format!("abort cap={cap}"));
+    }
+}
+
 /// The escape hatch: configurations outside the compact-replica class
 /// are refused by the sparse engine, and `run_reduce_auto` falls back
-/// to (and exactly equals) the dense engine.
+/// to (and exactly equals) the dense engine. In-operation kills left
+/// this list in docs/SCALE.md §Widened class; the rsag and butterfly
+/// allreduce decompositions stay dense-only.
 #[test]
 fn unsupported_classes_fall_back_to_dense() {
     let traced = SimConfig::new(8, 1).tracing(true);
-    let in_op = SimConfig::new(8, 1).failure(FailureSpec::AfterSends { rank: 3, sends: 1 });
-    let timed = SimConfig::new(8, 1).failure(FailureSpec::AtTime { rank: 3, at: 50 });
     let dead_root = SimConfig::new(8, 1).root(2).failure(FailureSpec::Pre { rank: 2 });
     let segmented = SimConfig::new(8, 1)
         .payload(PayloadKind::VectorF32 { len: 64 })
@@ -139,9 +250,7 @@ fn unsupported_classes_fall_back_to_dense() {
     let session = SimConfig::new(8, 1).session_ops(3);
     for (cfg, label) in [
         (&traced, "traced"),
-        (&in_op, "in-op failure"),
-        (&timed, "timed failure"),
-        (&dead_root, "root kill"),
+        (&dead_root, "pre-dead root"),
         (&segmented, "segmented"),
         (&session, "session"),
     ] {
@@ -150,9 +259,24 @@ fn unsupported_classes_fall_back_to_dense() {
             "{label}: must fall back to the dense engine"
         );
     }
+    for algo in [
+        ftcoll::collectives::rsag::AllreduceAlgo::Rsag,
+        ftcoll::collectives::rsag::AllreduceAlgo::Butterfly,
+    ] {
+        let cfg = SimConfig::new(8, 1).allreduce_algo(algo);
+        assert!(
+            ftcoll::sim::sparse::run_allreduce_sparse(&cfg).is_none(),
+            "{algo:?}: must fall back to the dense engine"
+        );
+    }
     // auto = dense for an out-of-class config
-    let auto = sim::run_reduce_auto(&in_op);
-    let dense = sim::run_reduce(&in_op);
+    let auto = sim::run_reduce_auto(&segmented);
+    let dense = sim::run_reduce(&segmented);
+    assert_eq!(auto.outcomes, dense.outcomes);
+    assert_eq!(auto.metrics, dense.metrics);
+    let rsag = SimConfig::new(8, 1).allreduce_algo(ftcoll::collectives::rsag::AllreduceAlgo::Rsag);
+    let auto = sim::run_allreduce_auto(&rsag);
+    let dense = sim::run_allreduce(&rsag);
     assert_eq!(auto.outcomes, dense.outcomes);
     assert_eq!(auto.metrics, dense.metrics);
 }

@@ -195,13 +195,13 @@ fn rsag_is_deterministic() {
 #[test]
 fn campaign_rsag_scenarios_pass_oracles() {
     use ftcoll::campaign::{self, GridConfig};
-    let grid = GridConfig { count: 400, seed: 7, max_n: 64 };
+    let grid = GridConfig { count: 400, seed: 7, max_n: 64, bign: 0 };
     let specs = campaign::generate(&grid);
     let mut seen = 0;
     for spec in specs.iter().filter(|s| s.id.contains("-rsag")).take(6) {
         seen += 1;
         let base = campaign::baseline_of(spec);
-        let (result, _rep) = campaign::run_scenario(spec, &base);
+        let (result, _rep) = campaign::run_scenario(spec, &base, 1);
         assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
     }
     assert!(seen >= 1, "no rsag scenario in a 400-scenario grid");

@@ -311,7 +311,7 @@ fn session_runs_are_deterministic() {
 /// every oracle.
 #[test]
 fn campaign_session_scenarios_pass_all_oracles() {
-    let grid = campaign::GridConfig { count: 400, seed: 21, max_n: 96 };
+    let grid = campaign::GridConfig { count: 400, seed: 21, max_n: 96, bign: 0 };
     let specs = campaign::generate(&grid);
     let sessions: Vec<_> = specs.iter().filter(|s| s.is_session()).collect();
     assert!(sessions.len() >= 30, "only {} session scenarios in 400", sessions.len());
@@ -322,7 +322,7 @@ fn campaign_session_scenarios_pass_all_oracles() {
     let mut checks = 0u64;
     for spec in &sessions {
         let base = campaign::baseline_of(spec);
-        let (result, _rep) = campaign::run_scenario(spec, &base);
+        let (result, _rep) = campaign::run_scenario(spec, &base, 1);
         assert!(result.passed(), "{}: {:?}", spec.id, result.violations);
         checks += result.oracle_checks as u64;
     }

@@ -1,0 +1,188 @@
+#!/usr/bin/env python3
+"""Per-PR perf trajectory: fold BENCH_*.json gate records into
+BENCH_trajectory.json and diff fresh runs against the committed series.
+
+The benches (rust/benches/bench_des_scale.rs, bench_butterfly.rs) write
+one-line machine-readable gate records at the repo root. This tool
+maintains the committed per-PR series next to them:
+
+    BENCH_trajectory.json = [ {"pr": N, "bench": "...",
+                               "key_metrics": {...}}, ... ]
+
+Modes (run from anywhere; paths resolve against the repo root):
+
+    --update --pr N   replace-or-append one row per BENCH_*.json found,
+                      keyed on (pr, bench), and rewrite the series
+    --check [--pr N]  compare each fresh BENCH_*.json against the most
+                      recent committed row for the same bench from an
+                      earlier PR (any PR when --pr is omitted): fail on
+                      a wall-clock metric regressing by more than
+                      --tolerance (default 20%), or on pass == false
+    (no mode)         print the series as a table
+
+Wall-clock keys (``wall_s*``) are machine-dependent, so --check only
+hard-fails when both sides were measured (a null/absent baseline —
+e.g. a freshly appended row awaiting its first CI run — records the
+new value and passes). Deterministic counters (events, msg_ratio, ...)
+ride along in key_metrics for the record but are gated by the benches
+themselves, not re-diffed here.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SERIES = os.path.join(ROOT, "BENCH_trajectory.json")
+
+# per-bench key_metrics pulled out of the raw gate record; everything
+# else in the record is a gate constant or redundant with these
+KEYS = {
+    "des_scale": [
+        "wall_s", "events", "events_per_sec",
+        "wall_s_1shard", "wall_s_4shard", "shard_speedup", "pass",
+    ],
+    "butterfly": [
+        "rsag_msgs", "bfly_msgs", "msg_ratio", "byte_ratio", "pass",
+    ],
+}
+
+
+def load_series():
+    if not os.path.exists(SERIES):
+        return []
+    with open(SERIES, encoding="utf-8") as fh:
+        return json.load(fh)
+
+
+def write_series(rows):
+    rows.sort(key=lambda r: (r["pr"], r["bench"]))
+    with open(SERIES, "w", encoding="utf-8") as fh:
+        json.dump(rows, fh, indent=2)
+        fh.write("\n")
+
+
+def fresh_records():
+    """Parse every BENCH_*.json gate record at the repo root."""
+    out = {}
+    for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
+        if os.path.basename(path) == "BENCH_trajectory.json":
+            continue
+        with open(path, encoding="utf-8") as fh:
+            rec = json.load(fh)
+        name = rec.get("bench")
+        if not name:
+            print(f"bench_trajectory: {path} has no \"bench\" field, skipped")
+            continue
+        keys = KEYS.get(name, sorted(rec.keys()))
+        out[name] = {k: rec[k] for k in keys if k in rec}
+    return out
+
+
+def update(pr):
+    rows = load_series()
+    fresh = fresh_records()
+    if not fresh:
+        print("bench_trajectory: no BENCH_*.json records at the repo root "
+              "— run the benches first")
+        return 2
+    for bench, metrics in fresh.items():
+        row = {"pr": pr, "bench": bench, "key_metrics": metrics}
+        for i, r in enumerate(rows):
+            if r["pr"] == pr and r["bench"] == bench:
+                rows[i] = row
+                break
+        else:
+            rows.append(row)
+        print(f"bench_trajectory: pr {pr} {bench}: {json.dumps(metrics)}")
+    write_series(rows)
+    print(f"bench_trajectory: wrote {len(rows)} rows to {SERIES}")
+    return 0
+
+
+def baseline_for(rows, bench, pr):
+    """Most recent committed row for `bench` strictly before `pr`
+    (or the latest row at all when pr is None)."""
+    cands = [r for r in rows if r["bench"] == bench
+             and (pr is None or r["pr"] < pr)]
+    return max(cands, key=lambda r: r["pr"]) if cands else None
+
+
+def check(pr, tolerance):
+    rows = load_series()
+    fresh = fresh_records()
+    if not fresh:
+        print("bench_trajectory: no BENCH_*.json records at the repo root "
+              "— run the benches first")
+        return 2
+    failures = []
+    for bench, metrics in sorted(fresh.items()):
+        if metrics.get("pass") is False:
+            failures.append(f"{bench}: gate record says pass=false")
+        base = baseline_for(rows, bench, pr)
+        if base is None:
+            print(f"bench_trajectory: {bench}: no committed baseline yet, "
+                  f"recording only")
+            continue
+        for key, now in metrics.items():
+            if not key.startswith("wall_s"):
+                continue
+            ref = base["key_metrics"].get(key)
+            if ref is None or now is None:
+                print(f"bench_trajectory: {bench}.{key}: baseline not yet "
+                      f"measured (pr {base['pr']}), recording {now}")
+                continue
+            ratio = now / ref if ref > 0 else float("inf")
+            verdict = "ok" if ratio <= 1.0 + tolerance else "REGRESSION"
+            print(f"bench_trajectory: {bench}.{key}: {ref:.4f} s "
+                  f"(pr {base['pr']}) -> {now:.4f} s ({ratio:.2f}x) {verdict}")
+            if ratio > 1.0 + tolerance:
+                failures.append(
+                    f"{bench}.{key}: {now:.4f} s is {ratio:.2f}x the pr "
+                    f"{base['pr']} baseline {ref:.4f} s "
+                    f"(tolerance {1.0 + tolerance:.2f}x)")
+    for f in failures:
+        print(f"FAIL {f}")
+    print(f"bench_trajectory: {len(fresh)} benches checked, "
+          f"{len(failures)} failures")
+    return 1 if failures else 0
+
+
+def show():
+    rows = load_series()
+    if not rows:
+        print("bench_trajectory: series is empty")
+        return 0
+    for r in rows:
+        print(f"pr {r['pr']:>3}  {r['bench']:<12} "
+              f"{json.dumps(r['key_metrics'])}")
+    print(f"bench_trajectory: {len(rows)} rows")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="fold fresh BENCH_*.json rows into the series")
+    ap.add_argument("--check", action="store_true",
+                    help="diff fresh BENCH_*.json against the series")
+    ap.add_argument("--pr", type=int, default=None,
+                    help="PR number for --update rows / --check baseline cut")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional wall-clock growth (default 0.20)")
+    args = ap.parse_args()
+    if args.update and args.check:
+        ap.error("--update and --check are mutually exclusive")
+    if args.update:
+        if args.pr is None:
+            ap.error("--update requires --pr")
+        return update(args.pr)
+    if args.check:
+        return check(args.pr, args.tolerance)
+    return show()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
