@@ -1,0 +1,114 @@
+"""Unit tests for tools/bench_trajectory.py's null-rejection path: a
+gate record carrying a null metric must never fold into the committed
+series or silently pass --check, and a committed row whose metrics are
+all null must never anchor a baseline (the bug that let the seeded
+all-null PR 9 rows turn --check into a no-op).
+
+Stdlib-only on purpose: these must collect and run without jax.
+"""
+
+import importlib.util
+import json
+import os
+
+_TOOL = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     os.pardir, os.pardir, "tools", "bench_trajectory.py")
+_spec = importlib.util.spec_from_file_location("bench_trajectory", _TOOL)
+bt = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bt)
+
+
+def _point_at(tmp_path, monkeypatch):
+    monkeypatch.setattr(bt, "ROOT", str(tmp_path))
+    monkeypatch.setattr(bt, "SERIES", str(tmp_path / "BENCH_trajectory.json"))
+
+
+def _write_record(tmp_path, name, rec):
+    (tmp_path / name).write_text(json.dumps(rec), encoding="utf-8")
+
+
+def _write_series(tmp_path, rows):
+    (tmp_path / "BENCH_trajectory.json").write_text(
+        json.dumps(rows), encoding="utf-8")
+
+
+GOOD_BFLY = {"bench": "butterfly", "rsag_msgs": 20352, "bfly_msgs": 2176,
+             "msg_ratio": 9.3, "byte_ratio": 1.05, "pass": True}
+
+
+def test_null_record_rejected(tmp_path, monkeypatch):
+    _point_at(tmp_path, monkeypatch)
+    _write_record(tmp_path, "BENCH_butterfly.json",
+                  {"bench": "butterfly", "rsag_msgs": None,
+                   "bfly_msgs": None, "msg_ratio": None,
+                   "byte_ratio": None, "pass": None})
+    fresh, rejected = bt.fresh_records()
+    assert fresh == {}
+    assert rejected == ["butterfly"]
+
+
+def test_single_null_metric_rejects_whole_record(tmp_path, monkeypatch):
+    _point_at(tmp_path, monkeypatch)
+    rec = dict(GOOD_BFLY, byte_ratio=None)
+    _write_record(tmp_path, "BENCH_butterfly.json", rec)
+    fresh, rejected = bt.fresh_records()
+    assert fresh == {}
+    assert rejected == ["butterfly"]
+
+
+def test_good_record_accepted(tmp_path, monkeypatch):
+    _point_at(tmp_path, monkeypatch)
+    _write_record(tmp_path, "BENCH_butterfly.json", GOOD_BFLY)
+    fresh, rejected = bt.fresh_records()
+    assert rejected == []
+    assert fresh["butterfly"]["rsag_msgs"] == 20352
+    assert fresh["butterfly"]["pass"] is True
+
+
+def test_update_refuses_null_record(tmp_path, monkeypatch):
+    _point_at(tmp_path, monkeypatch)
+    _write_record(tmp_path, "BENCH_butterfly.json",
+                  dict(GOOD_BFLY, msg_ratio=None))
+    assert bt.update(10) == 2
+    assert not os.path.exists(str(tmp_path / "BENCH_trajectory.json"))
+
+
+def test_update_folds_good_record(tmp_path, monkeypatch):
+    _point_at(tmp_path, monkeypatch)
+    _write_record(tmp_path, "BENCH_butterfly.json", GOOD_BFLY)
+    assert bt.update(10) == 0
+    rows = json.loads(
+        (tmp_path / "BENCH_trajectory.json").read_text(encoding="utf-8"))
+    assert rows == [{"pr": 10, "bench": "butterfly",
+                     "key_metrics": {k: GOOD_BFLY[k]
+                                     for k in bt.KEYS["butterfly"]}}]
+
+
+def test_check_fails_on_null_record(tmp_path, monkeypatch):
+    _point_at(tmp_path, monkeypatch)
+    _write_series(tmp_path, [])
+    _write_record(tmp_path, "BENCH_butterfly.json",
+                  dict(GOOD_BFLY, rsag_msgs=None))
+    assert bt.check(None, 0.20) == 1
+
+
+def test_all_null_baseline_never_anchors(tmp_path, monkeypatch):
+    _point_at(tmp_path, monkeypatch)
+    null_row = {"pr": 9, "bench": "des_scale",
+                "key_metrics": {"wall_s": None, "pass": None}}
+    assert bt.baseline_for([null_row], "des_scale", 10) is None
+    real_row = {"pr": 8, "bench": "des_scale",
+                "key_metrics": {"wall_s": 1.5, "pass": True}}
+    assert bt.baseline_for([null_row, real_row], "des_scale", 10) == real_row
+
+
+def test_check_actually_compares_against_real_baseline(tmp_path, monkeypatch):
+    _point_at(tmp_path, monkeypatch)
+    _write_series(tmp_path, [{"pr": 9, "bench": "des_scale",
+                              "key_metrics": {"wall_s": 1.0, "pass": True}}])
+    _write_record(tmp_path, "BENCH_des.json",
+                  {"bench": "des_scale", "wall_s": 2.0, "pass": True})
+    assert bt.check(10, 0.20) == 1  # 2.0x the baseline: regression
+    _write_record(tmp_path, "BENCH_des.json",
+                  {"bench": "des_scale", "wall_s": 1.1, "pass": True})
+    assert bt.check(10, 0.20) == 0  # within tolerance

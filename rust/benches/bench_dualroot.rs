@@ -1,0 +1,144 @@
+//! Four-way allreduce comparison: corrected reduce+broadcast (tree) vs
+//! reduce-scatter/allgather (rsag) vs the corrected butterfly vs the
+//! doubly-pipelined dual-root (docs/DUALROOT.md) on the 1 MiB / lan
+//! n=64 allreduce.
+//!
+//! The dual root reduces each payload half toward its own root and
+//! re-broadcasts it down the other root's tree, keeping a warm standby
+//! sum at the opposite root so a root death costs zero extra attempts.
+//! That redundancy doubles the reduce sweeps but leaves the broadcast
+//! sweeps single (the backup broadcast is silent while its primary is
+//! alive), so against rsag — which runs one complete corrected
+//! allreduce per rank-owned block, O(n^2) messages — the dual root
+//! lands at O(n) messages for a bounded constant-factor byte overhead.
+//! Both quantities come off the deterministic DES, so the two gates
+//! (ISSUE 10) are semantics pins, not flaky perf tests, and run in
+//! every mode including the FTCOLL_BENCH_FAST CI smoke:
+//!
+//!   1. dual-root total messages at least 4x below rsag's, and
+//!   2. dual-root total wire bytes within 2x of rsag's.
+
+use ftcoll::benchlib::write_table;
+use ftcoll::prelude::*;
+
+const MIB: u32 = 262_144; // 1 MiB of f32
+
+/// Resolve `name` against the crate root so the gate record lands at
+/// the repo root (committed + diffed by tools/bench_trajectory.py)
+/// regardless of the invoking directory.
+fn repo_root_path(name: &str) -> std::path::PathBuf {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(root) => std::path::Path::new(&root).join(name),
+        Err(_) => std::path::PathBuf::from(name),
+    }
+}
+
+/// Run one DES allreduce; return (total msgs, total bytes, max per-rank
+/// sent bytes, makespan ns).
+fn measure(cfg: &SimConfig) -> (u64, u64, u64, u64) {
+    let rep = run_allreduce(cfg);
+    let makespan = rep.makespan().expect("allreduce did not complete");
+    (
+        rep.metrics.total_msgs(),
+        rep.metrics.total_bytes(),
+        rep.metrics.max_rank_sent_bytes(),
+        makespan,
+    )
+}
+
+fn main() {
+    let fast = std::env::var("FTCOLL_BENCH_FAST").is_ok();
+
+    // (label, n, f, len_f32); the 1 MiB/lan n=64 f=1 row is the gate
+    let configs: &[(&str, u32, u32, u32)] = if fast {
+        &[("n64f1", 64, 1, MIB)]
+    } else {
+        &[
+            ("n64f1", 64, 1, MIB),
+            ("n64f2", 64, 2, MIB),
+            ("n32f1", 32, 1, MIB),
+            ("n61f1", 61, 1, MIB), // non-power-of-two, uneven halves
+            ("n64f1-256K", 64, 1, 65_536),
+        ]
+    };
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut gate: Option<[(u64, u64); 2]> = None;
+    let mut gate_bfly = 0u64;
+    for &(label, n, f, len) in configs {
+        let tree_cfg = SimConfig::new(n, f)
+            .payload(PayloadKind::VectorF32 { len })
+            .net(NetModel::lan());
+        let rsag_cfg = tree_cfg.clone().allreduce_algo(AllreduceAlgo::Rsag);
+        let bfly_cfg = tree_cfg.clone().allreduce_algo(AllreduceAlgo::Butterfly);
+        let dpdr_cfg = tree_cfg.clone().allreduce_algo(AllreduceAlgo::DualRoot);
+        let (tree_msgs, tree_total, _, tree_ns) = measure(&tree_cfg);
+        let (rsag_msgs, rsag_total, _, rsag_ns) = measure(&rsag_cfg);
+        let (bfly_msgs, bfly_total, _, bfly_ns) = measure(&bfly_cfg);
+        let (dpdr_msgs, dpdr_total, _, dpdr_ns) = measure(&dpdr_cfg);
+        println!(
+            "allreduce/lan/{}B/{label}: msgs {tree_msgs} (tree) / {rsag_msgs} (rsag) / \
+             {bfly_msgs} (bfly) / {dpdr_msgs} (dpdr); total {} KiB (tree) / {} KiB (rsag) / \
+             {} KiB (bfly) / {} KiB (dpdr)",
+            4 * len as usize,
+            tree_total / 1024,
+            rsag_total / 1024,
+            bfly_total / 1024,
+            dpdr_total / 1024,
+        );
+        println!(
+            "    makespans: tree {tree_ns} ns; rsag {rsag_ns} ns; bfly {bfly_ns} ns; \
+             dpdr {dpdr_ns} ns"
+        );
+        rows.push(format!(
+            "{label},{n},{f},{len},{tree_msgs},{rsag_msgs},{bfly_msgs},{dpdr_msgs},\
+             {tree_total},{rsag_total},{bfly_total},{dpdr_total},\
+             {tree_ns},{rsag_ns},{bfly_ns},{dpdr_ns}"
+        ));
+        if label == "n64f1" && len == MIB {
+            gate = Some([(rsag_msgs, rsag_total), (dpdr_msgs, dpdr_total)]);
+            gate_bfly = bfly_msgs;
+        }
+    }
+    write_table(
+        "bench_dualroot",
+        "config,n,f,len_f32,tree_msgs,rsag_msgs,bfly_msgs,dpdr_msgs,\
+         tree_bytes,rsag_bytes,bfly_bytes,dpdr_bytes,\
+         tree_ns,rsag_ns,bfly_ns,dpdr_ns",
+        &rows,
+    );
+
+    // acceptance gates (ISSUE 10), both on the 1 MiB/lan n=64 f=1 row
+    let [(rsag_msgs, rsag_total), (dpdr_msgs, dpdr_total)] =
+        gate.expect("1 MiB gate row present");
+    assert!(
+        dpdr_msgs * 4 <= rsag_msgs,
+        "dual root sent {dpdr_msgs} msgs — not at least 4x below rsag's \
+         {rsag_msgs} on 1 MiB/lan n=64"
+    );
+    assert!(
+        dpdr_total <= 2 * rsag_total,
+        "dual root moved {dpdr_total} B — more than 2x rsag's {rsag_total} B \
+         on 1 MiB/lan n=64 (redundant-sweep overhead must stay a bounded \
+         constant)"
+    );
+    let msg_ratio = rsag_msgs as f64 / dpdr_msgs.max(1) as f64;
+    let byte_ratio = dpdr_total as f64 / rsag_total.max(1) as f64;
+
+    // machine-readable gate record (hand-rolled: no serde in-tree)
+    let json = format!(
+        "{{\"bench\":\"dualroot\",\"n\":64,\"f\":1,\"payload_bytes\":{},\
+         \"rsag_msgs\":{rsag_msgs},\"bfly_msgs\":{gate_bfly},\"dpdr_msgs\":{dpdr_msgs},\
+         \"rsag_total_bytes\":{rsag_total},\"dpdr_total_bytes\":{dpdr_total},\
+         \"msg_ratio\":{msg_ratio:.3},\"byte_ratio\":{byte_ratio:.3},\
+         \"gate_msg_ratio_min\":4.0,\"gate_byte_ratio_max\":2.0,\"pass\":true}}\n",
+        4 * MIB as u64,
+    );
+    std::fs::write(repo_root_path("BENCH_dualroot.json"), &json)
+        .expect("write BENCH_dualroot.json");
+    println!("wrote BENCH_dualroot.json");
+    println!(
+        "acceptance: dual root {msg_ratio:.1}x fewer msgs than rsag, total \
+         bytes at {byte_ratio:.2}x rsag (gates: >= 4x, <= 2x) on 1 MiB/lan n=64"
+    );
+}

@@ -48,6 +48,16 @@
 //!   within a per-death publication/pull slack of it
 //!   (`bfly_failure_slack`) — failures cost correction traffic, never
 //!   restarts.
+//! * **Dual-root laws (docs/DUALROOT.md)** — `-dpdr` scenarios deliver
+//!   `attempts == 1` under *every* pattern (the dual root never
+//!   rotates; a dead root is absorbed by the warm standby and the
+//!   backup sweep), and replace the Thm 7 multiplier with per-kind
+//!   counts: clean runs hit the closed form exactly (four reduction
+//!   sweeps plus two root exchanges per chunk, two primary broadcast
+//!   sweeps; backups silent), failure runs stay at or below it for the
+//!   reduce kinds (Thm 5 per sweep) and within one full backup
+//!   broadcast per chunk per dead *root* for the broadcast kinds —
+//!   non-root deaths only remove traffic.
 
 use super::spec::{Collective, FailurePattern, ScenarioSpec};
 use crate::collectives::butterfly::ButterflyConfig;
@@ -203,6 +213,9 @@ pub fn check(spec: &ScenarioSpec, rep: &RunReport, base: &Baseline) -> OracleRep
         }
         Collective::Allreduce if spec.allreduce_algo == AllreduceAlgo::Butterfly => {
             check_bfly_counts(spec, rep, &mut o);
+        }
+        Collective::Allreduce if spec.allreduce_algo == AllreduceAlgo::DualRoot => {
+            check_dpdr_counts(spec, rep, &mut o);
         }
         Collective::Allreduce => {
             let bound = (spec.f as u64 + 1) * base.total_msgs;
@@ -554,6 +567,104 @@ fn check_bfly_counts(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport)
     }
 }
 
+/// Closed-form failure-free per-kind counts of ONE doubly-pipelined
+/// dual-root instance over `chunks` chunks (docs/DUALROOT.md):
+/// `(UpCorrection, TreeUp, BcastTree, BcastCorrection)`. Per chunk:
+/// four reduction sweeps (own + standby per half) cost four Theorem 5
+/// up-correction phases and `4(n-1)` tree contributions, plus the two
+/// root-to-root value exchanges (framed `TreeUp`); the two primary
+/// broadcast sweeps cost `2(n-1)` dissemination edges and
+/// `2·n·min(f+1, n-1)` ring corrections. Backup sweeps are silent in a
+/// clean run. A solo rank (`n == 1`) delivers its own input and sends
+/// nothing.
+fn dpdr_clean_counts(n: u32, f: u32, chunks: u64) -> (u64, u64, u64, u64) {
+    if n < 2 {
+        return (0, 0, 0, 0);
+    }
+    let uc = UpCorrectionGroups::new(n, f).failure_free_messages();
+    let nm1 = u64::from(n - 1);
+    let corr = u64::from(n) * u64::from((f + 1).min(n - 1));
+    (4 * chunks * uc, chunks * (4 * nm1 + 2), chunks * 2 * nm1, chunks * 2 * corr)
+}
+
+/// Per-dead-*root* broadcast slack of a dual-root run: each dead root
+/// makes the surviving root originate the backup sweep for every chunk
+/// of the half the dead root would have broadcast — at most one full
+/// corrected broadcast (`n-1` tree edges, `n·min(f+1, n-1)` ring
+/// corrections) per chunk per dead root, on top of whatever the
+/// partially-run primary already sent. The reduce kinds get no slack:
+/// Theorem 5 holds per sweep, and the takeover traffic of a dead rank
+/// never exceeds its unsent messages.
+fn dpdr_failure_slack(n: u32, f: u32, chunks: u64, dead_roots: u64) -> (u64, u64) {
+    if n < 2 {
+        return (0, 0);
+    }
+    let tree = dead_roots * chunks * u64::from(n - 1);
+    let corr = dead_roots * chunks * u64::from(n) * u64::from((f + 1).min(n - 1));
+    (tree, corr)
+}
+
+/// The dual-root message-count law (replaces the Thm 7 multiplier for
+/// `-dpdr` scenarios — the dual root never rotates): no butterfly or
+/// baseline traffic at all; without deaths every kind hits the closed
+/// form exactly (scaled by the pipeline segment count — each segment
+/// runs a full per-segment instance); with deaths the reduce kinds
+/// stay at or below it (Thm 5) and the broadcast kinds within one
+/// backup sweep per chunk per dead root of it.
+fn check_dpdr_counts(spec: &ScenarioSpec, rep: &RunReport, o: &mut OracleReport) {
+    let chunks = u64::from(crate::collectives::dualroot::DEFAULT_CHUNKS);
+    let segs = u64::from(spec.num_segments());
+    let (uc_cf, tu_cf, bt_cf, bc_cf) = dpdr_clean_counts(spec.n, spec.f, chunks);
+    let (uc_cf, tu_cf, bt_cf, bc_cf) = (segs * uc_cf, segs * tu_cf, segs * bt_cf, segs * bc_cf);
+    let m = &rep.metrics;
+    let upcorr = m.msgs(MsgKind::UpCorrection);
+    let treeup = m.msgs(MsgKind::TreeUp);
+    let btree = m.msgs(MsgKind::BcastTree);
+    let bcorr = m.msgs(MsgKind::BcastCorrection);
+    o.check(
+        m.msgs(MsgKind::BflyHalve) == 0
+            && m.msgs(MsgKind::BflyDouble) == 0
+            && m.msgs(MsgKind::Baseline) == 0,
+        || "dual-root run sent butterfly/baseline traffic".to_string(),
+    );
+    if rep.dead.is_empty() {
+        o.check(upcorr == uc_cf, || {
+            format!("dpdr: {upcorr} up-correction msgs, closed form {uc_cf}")
+        });
+        o.check(treeup == tu_cf, || {
+            format!("dpdr: {treeup} tree msgs, closed form {tu_cf}")
+        });
+        o.check(btree == bt_cf, || {
+            format!("dpdr: {btree} broadcast-tree msgs, closed form {bt_cf}")
+        });
+        o.check(bcorr == bc_cf, || {
+            format!("dpdr: {bcorr} broadcast-correction msgs, closed form {bc_cf}")
+        });
+    } else {
+        let dead_roots = rep.dead.iter().filter(|&&r| r < 2).count() as u64;
+        let (bt_slack, bc_slack) =
+            dpdr_failure_slack(spec.n, spec.f, segs * chunks, dead_roots);
+        o.check(upcorr <= uc_cf, || {
+            format!("dpdr: {upcorr} up-correction msgs exceed failure-free {uc_cf} (Thm 5)")
+        });
+        o.check(treeup <= tu_cf, || {
+            format!("dpdr: {treeup} tree msgs exceed failure-free {tu_cf} (Thm 5)")
+        });
+        o.check(btree <= bt_cf + bt_slack, || {
+            format!(
+                "dpdr: {btree} broadcast-tree msgs exceed closed form {bt_cf} \
+                 + backup slack {bt_slack}"
+            )
+        });
+        o.check(bcorr <= bc_cf + bc_slack, || {
+            format!(
+                "dpdr: {bcorr} broadcast-correction msgs exceed closed form {bc_cf} \
+                 + backup slack {bc_slack}"
+            )
+        });
+    }
+}
+
 fn check_reduce(
     spec: &ScenarioSpec,
     rep: &RunReport,
@@ -627,10 +738,12 @@ fn check_allreduce(
 ) {
     // algo-fixed attempt laws: rsag delivers the longest dead cyclic
     // owner run + 1; the butterfly never rotates — 1 under every
-    // pattern, RootKill included (docs/BUTTERFLY.md)
+    // pattern, RootKill included (docs/BUTTERFLY.md); the dual root
+    // never rotates either — a single dead root costs zero extra
+    // attempts, even in-operation (docs/DUALROOT.md)
     let algo_expect = match spec.allreduce_algo {
         AllreduceAlgo::Rsag => Some(rsag_expected_attempts(spec.n, pre)),
-        AllreduceAlgo::Butterfly => Some(1),
+        AllreduceAlgo::Butterfly | AllreduceAlgo::DualRoot => Some(1),
         AllreduceAlgo::Tree => None,
     };
     let mut first: Option<(&Value, u32)> = None;
@@ -797,14 +910,21 @@ fn check_session(
         }
     }
 
-    // butterfly sessions: every epoch delivers in exactly one attempt
-    // under every pattern — dead group-0 prefixes are paid for by the
-    // sync-root hint, never by rotation (docs/BUTTERFLY.md)
-    if spec.allreduce_algo == AllreduceAlgo::Butterfly {
+    // butterfly and dual-root sessions: every epoch delivers in exactly
+    // one attempt under every pattern — dead group-0 prefixes (or a
+    // dead lower root) are paid for by the sync-root hint, never by
+    // rotation (docs/BUTTERFLY.md, docs/DUALROOT.md)
+    if matches!(
+        spec.allreduce_algo,
+        AllreduceAlgo::Butterfly | AllreduceAlgo::DualRoot
+    ) {
         for (e, slot) in per_epoch_ar.iter().enumerate() {
             if let Some((_, a)) = slot {
                 o.check(*a == 1, || {
-                    format!("epoch {e}: {a} attempts — the butterfly never rotates")
+                    format!(
+                        "epoch {e}: {a} attempts — {} never rotates",
+                        spec.allreduce_algo.name()
+                    )
                 });
             }
         }
@@ -813,8 +933,9 @@ fn check_session(
     // the self-healing claim: exclusion of the dead candidates makes
     // every post-RootKill epoch a single-attempt run (uniform
     // allreduce sessions only — RootKill is never generated for -mix;
-    // butterfly sessions are covered by the stricter clause above)
-    if spec.allreduce_algo != AllreduceAlgo::Butterfly
+    // butterfly and dual-root sessions are covered by the stricter
+    // single-attempt clause above)
+    if matches!(spec.allreduce_algo, AllreduceAlgo::Tree | AllreduceAlgo::Rsag)
         && spec.ops_list.is_none()
         && spec.collective == Collective::Allreduce
     {
@@ -904,7 +1025,11 @@ fn check_session_msg_bounds(
         Collective::Allreduce => {
             // butterfly epochs never rotate, but dead members cost
             // publication/pull correction traffic in every epoch they
-            // stay unexcluded — grant the per-epoch slack on top
+            // stay unexcluded — grant the per-epoch slack on top.
+            // Dual-root epochs need none: a dead root's backup sweep
+            // replaces (at most doubles) broadcast traffic, and with
+            // any failure present f >= 1, so 2x the failure-free
+            // session already fits inside the (f+1)-fold allowance.
             let slack = if spec.allreduce_algo == AllreduceAlgo::Butterfly {
                 let (p, q) = bfly_failure_slack(spec.n, spec.f, rep.dead.len() as u64);
                 u64::from(spec.session_ops) * (p + 2 * q)
@@ -1057,6 +1182,35 @@ mod tests {
         let (p3, q3) = bfly_failure_slack(12, 2, 3);
         assert!(p1 > 0 && q1 > 0);
         assert_eq!((p3, q3), (3 * p1, 3 * q1));
+    }
+
+    /// The dual-root closed form against hand-walked topologies.
+    #[test]
+    fn dpdr_clean_counts_hand_checked() {
+        // n=8, f=1, chunks=2: uc per sweep = 8 (three pairs + the
+        // root's short group — Thm 5), so 4 sweeps x 2 chunks = 64;
+        // tree = 2*(4*7 + 2) = 60; bcast tree = 2*2*7 = 28; ring
+        // corrections = 2*2*8*min(2,7) = 64
+        assert_eq!(dpdr_clean_counts(8, 1, 2), (64, 60, 28, 64));
+        // n=2, f=1: both ranks are roots; uc = a(a-1) = 2 per sweep
+        // (the pair {0,1} exchanges), tree = 2*(4*1 + 2) = 12,
+        // bcast tree = 2*2*1 = 4, corrections = 2*2*2*1 = 8
+        assert_eq!(dpdr_clean_counts(2, 1, 2), (16, 12, 4, 8));
+        // a solo rank delivers its own input without sending
+        assert_eq!(dpdr_clean_counts(1, 3, 2), (0, 0, 0, 0));
+    }
+
+    /// No dead roots => no slack; slack scales linearly in the dead-
+    /// root count and covers exactly one backup sweep per chunk.
+    #[test]
+    fn dpdr_slack_shape() {
+        assert_eq!(dpdr_failure_slack(12, 2, 2, 0), (0, 0));
+        // one dead root, 2 chunks: 2*(n-1) = 22 tree edges and
+        // 2*n*min(f+1,n-1) = 72 ring corrections
+        assert_eq!(dpdr_failure_slack(12, 2, 2, 1), (22, 72));
+        let (t1, c1) = dpdr_failure_slack(12, 2, 2, 1);
+        let (t2, c2) = dpdr_failure_slack(12, 2, 2, 2);
+        assert_eq!((t2, c2), (2 * t1, 2 * c1));
     }
 
     /// The rsag attempt law helper: longest cyclic dead run + 1.

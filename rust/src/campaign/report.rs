@@ -44,7 +44,8 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         ),
         None => String::new(),
     };
-    // likewise, only rsag/butterfly rows carry the decomposition field
+    // likewise, only rsag/butterfly/dualroot rows carry the
+    // decomposition field
     let algo_field = match spec.allreduce_algo {
         crate::collectives::rsag::AllreduceAlgo::Tree => String::new(),
         crate::collectives::rsag::AllreduceAlgo::Rsag => {
@@ -52,6 +53,9 @@ fn scenario_json(s: &ScenarioResult, grid: &GridConfig) -> String {
         }
         crate::collectives::rsag::AllreduceAlgo::Butterfly => {
             "\"allreduce_algo\":\"butterfly\",".to_string()
+        }
+        crate::collectives::rsag::AllreduceAlgo::DualRoot => {
+            "\"allreduce_algo\":\"dualroot\",".to_string()
         }
     };
     // cap aborts are rare and always violations — only aborted rows
@@ -251,6 +255,27 @@ pub fn summary_table(result: &CampaignResult) -> String {
         "bfly: {bf} butterfly ({bf_pass} passed) / {bf_inop} in-op-failure / \
          {bf_seg} segmented"
     );
+    // doubly-pipelined dual-root split (docs/DUALROOT.md) — CI greps
+    // this line to catch the axis (and its in-op owner-death and
+    // same-group multi-death coverage, which no other algorithm can
+    // run) drifting out of the grid
+    let (mut dr, mut dr_pass, mut dr_inop, mut dr_seg) = (0u64, 0u64, 0u64, 0u64);
+    for (spec, sc) in specs.iter().zip(&result.scenarios) {
+        if spec.allreduce_algo == crate::collectives::rsag::AllreduceAlgo::DualRoot {
+            dr += 1;
+            dr_pass += sc.passed() as u64;
+            dr_inop += spec
+                .failures
+                .iter()
+                .any(|fs| !fs.is_pre_operational()) as u64;
+            dr_seg += spec.segment_bytes.is_some() as u64;
+        }
+    }
+    let _ = writeln!(
+        out,
+        "dpdr: {dr} dual-root ({dr_pass} passed) / {dr_inop} in-op-failure / \
+         {dr_seg} segmented"
+    );
     // large-n scale-out axis (docs/SCALE.md) — CI greps this line to
     // catch the axis drifting out of the sweep
     let (mut bn, mut bn_pass) = (0u64, 0u64);
@@ -305,6 +330,7 @@ mod tests {
         assert!(table.contains("sessions: "), "{table}");
         assert!(table.contains("rsag: "), "{table}");
         assert!(table.contains("bfly: "), "{table}");
+        assert!(table.contains("dpdr: "), "{table}");
         assert!(table.contains("bign: 0 large-n (0 passed)"), "{table}");
         let line = table.lines().find(|l| l.starts_with("split: ")).unwrap();
         let nums: Vec<u64> = line

@@ -435,21 +435,26 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         None
     };
 
-    // allreduce-algo axis (docs/RSAG.md, docs/BUTTERFLY.md): among
-    // allreduce scenarios — stand-alone, segmented, or uniform
-    // sessions — ~1/4 run the reduce-scatter/allgather decomposition
-    // and ~1/4 the corrected butterfly instead of the corrected
+    // allreduce-algo axis (docs/RSAG.md, docs/BUTTERFLY.md,
+    // docs/DUALROOT.md): among allreduce scenarios — stand-alone,
+    // segmented, or uniform sessions — ~1/4 run the reduce-scatter/
+    // allgather decomposition, ~1/4 the corrected butterfly and ~1/8
+    // the doubly-pipelined dual root instead of the corrected
     // reduce+broadcast. Mixed sessions stay tree (their
     // reduce/broadcast epochs are the point there). Every rank is a
     // candidate owner of some block under rsag, so those scenarios
     // draw pre-operational failure plans only (§5.1's candidate
     // assumption applied to every rank); the butterfly's group
     // replication absorbs timed in-operation deaths too, so its
-    // pattern pool keeps storm/cascade/midpipe (see pick_pattern).
+    // pattern pool keeps storm/cascade/midpipe; the dual root's warm
+    // standby absorbs even an in-operation death of a root, so its
+    // pool leads with the owner-death and same-group multi-death
+    // families no other algorithm can draw (see pick_pattern).
     let allreduce_algo = if collective == Collective::Allreduce && ops_list.is_none() {
         match rng.below(8) {
             0 | 1 => AllreduceAlgo::Rsag,
             2 | 3 => AllreduceAlgo::Butterfly,
+            4 => AllreduceAlgo::DualRoot,
             _ => AllreduceAlgo::Tree,
         }
     } else {
@@ -542,6 +547,7 @@ pub fn scenario_at(grid: &GridConfig, index: u32) -> ScenarioSpec {
         AllreduceAlgo::Tree => "",
         AllreduceAlgo::Rsag => "-rsag",
         AllreduceAlgo::Butterfly => "-bfly",
+        AllreduceAlgo::DualRoot => "-dpdr",
     };
     let seg_label = match segment_bytes {
         None => String::new(),
@@ -758,6 +764,25 @@ fn bfly_pool_groups(n: u32, f: u32) -> Vec<Vec<Rank>> {
     groups
 }
 
+/// The allreduce victim pool partitioned by *up-correction* group of
+/// the half-0 reduce (roots at 0 and 1; the pool never contains
+/// either, so every partition member is a plain group peer). The
+/// dual-root same-group multi-death family draws all its timed victims
+/// from ONE of these partitions — the concurrent same-group class the
+/// butterfly documents as residual and the dual root's second sweep
+/// absorbs (docs/DUALROOT.md).
+fn dpdr_pool_groups(n: u32, f: u32) -> Vec<Vec<Rank>> {
+    let uc = crate::topology::UpCorrectionGroups::new(n, f);
+    let mut groups: Vec<Vec<Rank>> = vec![Vec::new(); uc.num_groups().max(1) as usize];
+    for r in victim_pool(Collective::Allreduce, n, f, 0) {
+        if let Some(g) = uc.group_of(r) {
+            groups[g as usize].push(r);
+        }
+    }
+    groups.retain(|g| !g.is_empty());
+    groups
+}
+
 #[allow(clippy::too_many_arguments)]
 fn pick_pattern(
     rng: &mut Pcg,
@@ -852,6 +877,52 @@ fn pick_pattern(
         return options[0];
     }
 
+    if algo == AllreduceAlgo::DualRoot {
+        // doubly-pipelined dual root (docs/DUALROOT.md): the warm
+        // standby absorbs an in-operation death of either root and the
+        // second reduction sweep absorbs concurrent timed deaths inside
+        // one up-correction group — exactly the two classes rsag
+        // (§5.1 owners) and the butterfly (same-group mid-send) leave
+        // residual, so the pattern pool leads with them. The InOp
+        // pattern here is the owner-death family: its single mid-send
+        // victim is one of the two roots (instantiate_pattern), never
+        // both — two dead roots is the documented residual class.
+        // Storm is the same-group family: all its timed victims land in
+        // one up-correction group of the half-0 reduce. Sessions stay
+        // pre-operational (plus the rank-0 RootKill prefix) so the
+        // sync-root hint is rank-independent.
+        let mut options: Vec<FailurePattern> = vec![FailurePattern::None];
+        if kmax >= 1 {
+            let k = rng.range(1, kmax as u64) as u32;
+            options.push(FailurePattern::Pre { k });
+            if !session {
+                let max_sends = rng.range(0, (f + 2) as u64) as u32;
+                options.push(FailurePattern::InOp { k: 1, max_sends });
+                let grp_max = dpdr_pool_groups(n, f)
+                    .iter()
+                    .map(|g| g.len() as u32)
+                    .max()
+                    .unwrap_or(0);
+                let same_max = kmax.min(grp_max);
+                if same_max >= 2 {
+                    let k = rng.range(2, same_max as u64) as u32;
+                    options.push(FailurePattern::Storm { k });
+                }
+            }
+        }
+        if rootkill_max >= 1 {
+            // k = 1 only: pre-killing rank 0 exercises the surviving-
+            // lower-root sync hint; killing rank 1 too would take both
+            // roots out (out of the dual-root contract)
+            options.push(FailurePattern::RootKill { k: 1 });
+        }
+        if options.len() > 1 && rng.below(8) != 0 {
+            let i = rng.range(1, options.len() as u64 - 1) as usize;
+            return options[i];
+        }
+        return options[0];
+    }
+
     let mut options: Vec<FailurePattern> = vec![FailurePattern::None];
     if kmax >= 1 {
         let k = rng.range(1, kmax as u64) as u32;
@@ -923,6 +994,17 @@ fn instantiate_pattern(
             .into_iter()
             .map(|rank| FailureSpec::Pre { rank })
             .collect(),
+        FailurePattern::InOp { k, max_sends } if algo == AllreduceAlgo::DualRoot => {
+            // the owner-death family: the single mid-send victim is one
+            // of the two dual roots (docs/DUALROOT.md) — the warm
+            // standby absorbs it without a second attempt
+            debug_assert_eq!(k, 1);
+            let rank = rng.below(2) as Rank;
+            vec![FailureSpec::AfterSends {
+                rank,
+                sends: rng.range(0, max_sends as u64) as u32,
+            }]
+        }
         FailurePattern::InOp { k, max_sends } => pick_victims(rng, k)
             .into_iter()
             .map(|rank| FailureSpec::AfterSends {
@@ -930,6 +1012,20 @@ fn instantiate_pattern(
                 sends: rng.range(0, max_sends as u64) as u32,
             })
             .collect(),
+        FailurePattern::Storm { k } if algo == AllreduceAlgo::DualRoot => {
+            // the same-group multi-death family: every timed victim
+            // lands inside ONE up-correction group of the half-0 reduce
+            // (pick_pattern only drew this when such a group exists)
+            let groups = dpdr_pool_groups(n, f);
+            let eligible: Vec<&Vec<Rank>> =
+                groups.iter().filter(|g| g.len() >= k as usize).collect();
+            let grp = eligible[rng.below(eligible.len() as u64) as usize];
+            let at = lat * rng.range(1, 30);
+            rng.choose_distinct(grp.len() as u64, k as usize)
+                .into_iter()
+                .map(|i| FailureSpec::AtTime { rank: grp[i as usize], at: at + rng.below(lat) })
+                .collect()
+        }
         FailurePattern::Storm { k } => {
             let at = lat * rng.range(1, 30);
             pick_victims(rng, k)
@@ -1049,6 +1145,18 @@ mod tests {
                     spec.failures.len(),
                     subtrees
                 );
+            }
+            if spec.collective == Collective::Allreduce
+                && spec.allreduce_algo == AllreduceAlgo::DualRoot
+            {
+                // the dual-root contract differs: either root (0 or 1)
+                // MAY die in-operation — the warm standby absorbs one
+                // root death without rotation — but a plan never takes
+                // both roots, which is the documented residual class
+                // (docs/DUALROOT.md)
+                let roots_hit = spec.failures.iter().filter(|s| s.rank() < 2).count();
+                assert!(roots_hit <= 1, "{}: both dual roots fail", spec.id);
+                continue;
             }
             for s in &spec.failures {
                 match spec.collective {
@@ -1360,6 +1468,96 @@ mod tests {
         }
         assert!(bfly.iter().any(|s| s.is_session()), "no butterfly session scenario");
         assert!(bfly.iter().any(|s| s.segment_bytes.is_some()), "no segmented butterfly");
+    }
+
+    #[test]
+    fn grid_covers_dpdr_scenarios() {
+        let specs = generate(&GridConfig { count: 2000, seed: 7, max_n: 128, bign: 0 });
+        let dpdr: Vec<_> = specs
+            .iter()
+            .filter(|s| s.allreduce_algo == AllreduceAlgo::DualRoot)
+            .collect();
+        assert!(
+            dpdr.len() >= 30,
+            "only {} of 2000 scenarios are dual-root — axis drifted",
+            dpdr.len()
+        );
+        for s in &dpdr {
+            assert_eq!(s.collective, Collective::Allreduce, "{}", s.id);
+            assert!(s.ops_list.is_none(), "{}: mixed sessions stay tree", s.id);
+            assert!(s.id.contains("-dpdr"), "{} lacks the -dpdr label", s.id);
+            assert!(
+                matches!(
+                    s.pattern,
+                    FailurePattern::None
+                        | FailurePattern::Pre { .. }
+                        | FailurePattern::InOp { .. }
+                        | FailurePattern::Storm { .. }
+                        | FailurePattern::RootKill { .. }
+                ),
+                "{}: pattern {:?} not allowed for dual root",
+                s.id,
+                s.pattern
+            );
+            // the owner-death family: exactly one mid-send victim, and
+            // it is one of the two roots
+            if let FailurePattern::InOp { k, .. } = s.pattern {
+                assert_eq!(k, 1, "{}", s.id);
+                assert_eq!(s.failures.len(), 1, "{}", s.id);
+                assert!(s.failures[0].rank() < 2, "{}: owner death off-root", s.id);
+                assert!(!s.failures[0].is_pre_operational(), "{}", s.id);
+            }
+            // the same-group family: >= 2 timed victims, all in one
+            // up-correction group of the half-0 reduce, none a root
+            if let FailurePattern::Storm { k } = s.pattern {
+                assert!(k >= 2, "{}", s.id);
+                let uc = crate::topology::UpCorrectionGroups::new(s.n, s.f);
+                let gids: Vec<u32> = s
+                    .failures
+                    .iter()
+                    .map(|fs| {
+                        assert!(fs.rank() > s.f, "{}: victim {} a root", s.id, fs.rank());
+                        uc.group_of(fs.rank()).expect("non-root always grouped")
+                    })
+                    .collect();
+                assert!(
+                    gids.windows(2).all(|w| w[0] == w[1]),
+                    "{}: storm victims span groups {gids:?}",
+                    s.id
+                );
+            }
+            // RootKill stays single: both roots dead is out of contract
+            if let FailurePattern::RootKill { k } = s.pattern {
+                assert_eq!(k, 1, "{}", s.id);
+            }
+            // sessions draw pre-operational plans only (the sync-root
+            // hint must be rank-independent)
+            if s.is_session() {
+                for fs in &s.failures {
+                    assert!(fs.is_pre_operational(), "{}: timed kill in a session", s.id);
+                }
+            }
+            s.sim_config().validate().unwrap();
+        }
+        // the axis crosses the two families no other algorithm can,
+        // clean runs, sessions and segmentation
+        assert!(
+            dpdr.iter().any(|s| s
+                .failures
+                .iter()
+                .any(|fs| fs.rank() < 2 && !fs.is_pre_operational())),
+            "no in-operation owner-death scenario in 2000"
+        );
+        assert!(
+            dpdr.iter().any(|s| matches!(s.pattern, FailurePattern::Storm { .. })),
+            "no same-group multi-death scenario in 2000"
+        );
+        assert!(
+            dpdr.iter().any(|s| s.pattern == FailurePattern::None),
+            "no clean dual-root scenario in 2000"
+        );
+        assert!(dpdr.iter().any(|s| s.is_session()), "no dual-root session scenario");
+        assert!(dpdr.iter().any(|s| s.segment_bytes.is_some()), "no segmented dual root");
     }
 
     #[test]

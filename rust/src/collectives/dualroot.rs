@@ -1,0 +1,1002 @@
+//! Doubly-pipelined dual-root Allreduce (docs/DUALROOT.md).
+//!
+//! The paper's Algorithm 5 moves the whole payload through one root and
+//! pays for a dead root candidate with a rotation (an extra attempt).
+//! The doubly-pipelined dual-root schedule (arXiv:2109.12626) splits the
+//! payload into two halves with *two* simultaneously active roots —
+//! ranks 0 and 1 — and the redundant-computation framing of ABFT
+//! (arXiv:1511.00212) turns the second root into a warm standby: a
+//! single dead root is absorbed, never re-attempted.
+//!
+//! Per payload half `h ∈ {0, 1}` and pipeline chunk `c`:
+//!
+//! * **Own-root reduce** — half `h` is reduced up the paper's corrected
+//!   I(f)-tree toward root `h` (up-correction pass included), producing
+//!   the *canonical* half value `V` at root `h`.
+//! * **Warm-standby reduce** — the same half is independently reduced
+//!   toward root `1-h`. Its result `W` is used only if root `h` dies
+//!   before handing over `V`; it keeps the redundancy warm without any
+//!   failure-time restart.
+//! * **Exchange** — root `h` hands `V` to root `1-h` (one point-to-point
+//!   `TreeUp` message on the primary frame).
+//! * **Primary broadcast** — root `1-h` broadcasts the half down *its*
+//!   corrected tree (each half travels down the other root's tree, so
+//!   both trees are busy in both sweeps).
+//! * **Backup broadcast** — a second, passive corrected-broadcast frame
+//!   rooted at `h`. Nobody sends on it in a clean run; if root `1-h` is
+//!   confirmed dead, root `h` broadcasts `V` on it.
+//!
+//! Exactly **one value per half ever circulates**, which is what keeps
+//! §5.1 item 5 (bit-identical agreement) intact under an in-operational
+//! root death: if the primary root dies mid-broadcast, the backup frame
+//! carries the *same* `V` (handed over before the death or re-broadcast
+//! by its producer), and a corrected broadcast started by a live root
+//! reaches every live rank. If the producing root `h` dies instead, the
+//! primary root broadcasts the handed-over `V` if it arrived, else its
+//! own `W` — again a single value. The one residual class is *both*
+//! roots dying in the same operation (docs/DUALROOT.md §4).
+//!
+//! **Double pipelining**: each half is cut into `chunks` zero-copy
+//! [`crate::types::Value::stride_blocks`] windows one framing level
+//! below `--segment-bytes`; chunk `c+1`'s reduces start as soon as chunk
+//! `c`'s reduces leave their up-correction phase, so chunk `c+1`'s
+//! reduce overlaps chunk `c`'s tree phase and broadcast on both trees
+//! at once. Delivered `attempts` is always 1 — the dual root never
+//! rotates.
+//!
+//! ## Sessions
+//!
+//! The session layer needs a sync root all survivors agree on: *the
+//! surviving lower root*. A rank infers "root 0 is dead" exactly when
+//! some chunk of half 1 (whose primary broadcaster is root 0) was
+//! delivered over the backup frame — under the pre-operational failure
+//! plans the campaign's session axis draws, either every rank receives
+//! half 1 on the backup frame (root 0 dead from the start) or none does
+//! ([`DualRootPipelined::sync_attempts`]).
+
+use super::broadcast::{BcastConfig, Broadcast, CorrectionMode};
+use super::failure_info::{FailureInfo, Scheme};
+use super::reduce::{Reduce, ReduceConfig};
+use super::{CaptureCtx, Ctx, Outcome, Protocol};
+use crate::types::{segment, Msg, MsgKind, Rank, Value};
+
+/// Sub-protocol frame slots of one (chunk, half) unit: unit `(c, h)`
+/// frame `u` runs under [`segment::seg_op`]`(op_id, (c*2 + h)*4 + u)`.
+const U_RED_OWN: u32 = 0;
+const U_RED_OTHER: u32 = 1;
+const U_PRIMARY: u32 = 2;
+const U_BACKUP: u32 = 3;
+const FRAMES_PER_UNIT: u32 = 4;
+
+/// Default pipeline depth per half (chunk count).
+pub const DEFAULT_CHUNKS: u32 = 2;
+
+/// Static configuration of one dual-root allreduce.
+#[derive(Clone, Debug)]
+pub struct DualRootConfig {
+    pub n: u32,
+    pub f: u32,
+    /// Failure-information scheme of the corrected reduces (§4.4).
+    pub scheme: Scheme,
+    /// Base op id; frames run under [`segment::seg_op`]`(op_id, ...)`.
+    /// Must be ≥ 1 (a base of 0 would collide with monolithic op ids,
+    /// like the pipelined driver).
+    pub op_id: u64,
+    /// Wire epoch of every frame — the dual root never rotates, so the
+    /// whole operation occupies a single epoch and drops into session
+    /// epoch bands (stride `f+2`) unchanged.
+    pub base_epoch: u32,
+    /// Pipeline chunks per half (≥ 1); chunk `c+1`'s reduce overlaps
+    /// chunk `c`'s broadcast.
+    pub chunks: u32,
+}
+
+impl DualRootConfig {
+    pub fn new(n: u32, f: u32) -> Self {
+        DualRootConfig {
+            n,
+            f,
+            scheme: Scheme::List,
+            op_id: 1,
+            base_epoch: 0,
+            chunks: DEFAULT_CHUNKS,
+        }
+    }
+
+    /// Reject configurations whose frame layout cannot be encoded:
+    /// `chunks` must fit the [`segment`] low-bit budget and the base op
+    /// must survive one framing shift. `RunSpec::validate` surfaces
+    /// this before any instance is built.
+    pub fn check_frames(&self) -> Result<(), String> {
+        if self.op_id == 0 {
+            return Err("dual-root base op id must be >= 1".to_string());
+        }
+        if self.chunks == 0 {
+            return Err("dual-root chunk count must be >= 1".to_string());
+        }
+        let top_frame = u64::from(self.chunks) * 2 * u64::from(FRAMES_PER_UNIT);
+        if top_frame > segment::MAX_SEGMENTS {
+            return Err(format!(
+                "dual-root chunk count {} overflows the op-id frame budget",
+                self.chunks
+            ));
+        }
+        segment::check_budget(self.op_id, 1)
+    }
+}
+
+/// Which sub-protocol of a unit produced a captured outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Role {
+    RedOwn,
+    RedOther,
+    Primary,
+    Backup,
+}
+
+/// Per-(chunk, half) sub-protocol slots. `h` is the half index: root
+/// `h` owns the half (canonical reduce target), root `1-h` broadcasts
+/// it (primary frame).
+struct Unit {
+    c: u32,
+    h: u32,
+    red_own: Reduce,
+    red_other: Reduce,
+    /// Primary broadcast instance: passive receiver everywhere except
+    /// at the primary root, which constructs it when its input value
+    /// (exchanged `V` or warm `W`) is ready.
+    primary: Option<Broadcast>,
+    backup: Option<Broadcast>,
+    /// Frame traffic that raced ahead of a lazily-built root instance.
+    primary_stash: Vec<(Rank, Msg)>,
+    backup_stash: Vec<(Rank, Msg)>,
+    /// At root `h`: the canonical half value `V` (own-root reduce).
+    own_val: Option<Value>,
+    /// At root `1-h`: the exchanged `V` / the warm-standby `W`.
+    exch_val: Option<Value>,
+    warm_val: Option<Value>,
+    exchanged: bool,
+    primary_originated: bool,
+    backup_originated: bool,
+}
+
+/// Per-process state machine for the doubly-pipelined dual-root
+/// allreduce. One instance handles every chunk and both halves,
+/// multiplexed by op-id framing.
+pub struct DualRootPipelined {
+    cfg: DualRootConfig,
+    rank: Rank,
+    /// Input chunk of unit `c*2 + h` (zero-copy window).
+    inputs: Vec<Value>,
+    units: Vec<Unit>,
+    started_chunks: u32,
+    /// Messages for chunks that have not started yet.
+    stash: Vec<(Rank, Msg)>,
+    /// Delivered half values, indexed `c*2 + h`.
+    half_vals: Vec<Option<Value>>,
+    /// Some chunk of half 1 arrived over the backup frame ⇒ root 0 is
+    /// dead (half 1's primary broadcaster is root 0).
+    backup_used_h1: bool,
+    /// Roots only: the failure monitor confirmed the other root dead.
+    other_root_dead: bool,
+    watching_other: bool,
+    report: Vec<Rank>,
+    delivered: bool,
+    /// `n == 1` fast path: deliver the input on start, send nothing.
+    solo_input: Option<Value>,
+}
+
+impl DualRootPipelined {
+    /// `me` is this process's rank (sessions pass the dense rank, like
+    /// the butterfly).
+    pub fn new(cfg: DualRootConfig, me: Rank, input: Value) -> Self {
+        cfg.check_frames().expect("dual-root frame layout");
+        assert!(me < cfg.n, "rank out of range");
+        if cfg.n == 1 {
+            return DualRootPipelined {
+                cfg,
+                rank: me,
+                inputs: Vec::new(),
+                units: Vec::new(),
+                started_chunks: 0,
+                stash: Vec::new(),
+                half_vals: Vec::new(),
+                backup_used_h1: false,
+                other_root_dead: false,
+                watching_other: false,
+                report: Vec::new(),
+                delivered: false,
+                solo_input: Some(input),
+            };
+        }
+        let halves = input.stride_blocks(2);
+        let mut inputs = Vec::with_capacity(cfg.chunks as usize * 2);
+        let per_half: Vec<Vec<Value>> =
+            halves.iter().map(|hv| hv.stride_blocks(cfg.chunks as usize)).collect();
+        for c in 0..cfg.chunks as usize {
+            for h in 0..2usize {
+                inputs.push(per_half[h][c].clone());
+            }
+        }
+        let n_units = cfg.chunks as usize * 2;
+        DualRootPipelined {
+            cfg,
+            rank: me,
+            inputs,
+            units: Vec::with_capacity(n_units),
+            started_chunks: 0,
+            stash: Vec::new(),
+            half_vals: vec![None; n_units],
+            backup_used_h1: false,
+            other_root_dead: false,
+            watching_other: false,
+            report: Vec::new(),
+            delivered: false,
+            solo_input: None,
+        }
+    }
+
+    fn unit_op(&self, c: u32, h: u32, u: u32) -> u64 {
+        segment::seg_op(self.cfg.op_id, (c * 2 + h) * FRAMES_PER_UNIT + u)
+    }
+
+    fn other_root(&self) -> Rank {
+        1 - self.rank
+    }
+
+    fn is_a_root(&self) -> bool {
+        self.rank <= 1
+    }
+
+    /// True once every chunk's reduces have left their up-correction
+    /// phase at this rank (the outer pipelined driver starts the next
+    /// payload segment at exactly this boundary).
+    pub fn upcorr_done(&self) -> bool {
+        if self.delivered {
+            return true;
+        }
+        self.started_chunks == self.cfg.chunks
+            && self.last_chunk_upcorr_done()
+    }
+
+    fn last_chunk_upcorr_done(&self) -> bool {
+        if self.started_chunks == 0 {
+            return false;
+        }
+        let c = self.started_chunks - 1;
+        (0..2).all(|h| {
+            let u = &self.units[(c * 2 + h) as usize];
+            u.red_own.upcorr_done() && u.red_other.upcorr_done()
+        })
+    }
+
+    /// Session sync hint: 1 + the surviving lower root. `Some(1)` when
+    /// root 0 delivered every half-1 chunk over the primary frame,
+    /// `Some(2)` when some half-1 chunk arrived on the backup frame
+    /// (⇒ root 0 is dead); `None` before delivery.
+    pub fn sync_attempts(&self) -> Option<u32> {
+        if !self.delivered {
+            None
+        } else if self.backup_used_h1 {
+            Some(2)
+        } else {
+            Some(1)
+        }
+    }
+
+    /// Failed ranks this process learned about (root reduce reports +
+    /// the root-death detection), sorted and deduplicated.
+    pub fn known_failed(&self) -> Vec<Rank> {
+        let mut v = self.report.clone();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    fn reduce_cfg(&self, root: Rank, frame_op: u64) -> ReduceConfig {
+        ReduceConfig {
+            n: self.cfg.n,
+            f: self.cfg.f,
+            root,
+            scheme: self.cfg.scheme,
+            op_id: frame_op,
+            epoch: self.cfg.base_epoch,
+        }
+    }
+
+    fn bcast_cfg(&self, root: Rank, frame_op: u64) -> BcastConfig {
+        BcastConfig {
+            n: self.cfg.n,
+            f: self.cfg.f,
+            root,
+            mode: CorrectionMode::Always,
+            distance: None,
+            op_id: frame_op,
+            epoch: self.cfg.base_epoch,
+        }
+    }
+
+    /// Start chunk `c` at this rank: both reduces plus the passive
+    /// broadcast receiver frames, then replay stashed traffic.
+    fn start_chunk(&mut self, ctx: &mut dyn Ctx) {
+        let c = self.started_chunks;
+        debug_assert_eq!(self.units.len(), (c * 2) as usize);
+        for h in 0..2u32 {
+            let own_root = h;
+            let primary_root = 1 - h;
+            let red_own = Reduce::new(
+                self.reduce_cfg(own_root, self.unit_op(c, h, U_RED_OWN)),
+                self.inputs[(c * 2 + h) as usize].clone(),
+            );
+            let red_other = Reduce::new(
+                self.reduce_cfg(primary_root, self.unit_op(c, h, U_RED_OTHER)),
+                self.inputs[(c * 2 + h) as usize].clone(),
+            );
+            let primary = (self.rank != primary_root)
+                .then(|| Broadcast::new(self.bcast_cfg(primary_root, self.unit_op(c, h, U_PRIMARY)), None));
+            let backup = (self.rank != own_root)
+                .then(|| Broadcast::new(self.bcast_cfg(own_root, self.unit_op(c, h, U_BACKUP)), None));
+            self.units.push(Unit {
+                c,
+                h,
+                red_own,
+                red_other,
+                primary,
+                backup,
+                primary_stash: Vec::new(),
+                backup_stash: Vec::new(),
+                own_val: None,
+                exch_val: None,
+                warm_val: None,
+                exchanged: false,
+                primary_originated: false,
+                backup_originated: false,
+            });
+        }
+        self.started_chunks = c + 1;
+        for h in 0..2u32 {
+            for role in [Role::RedOwn, Role::RedOther, Role::Primary, Role::Backup] {
+                self.drive(c, h, role, ctx, |p, cx| p.on_start(cx));
+            }
+        }
+        // replay traffic that arrived before this chunk started
+        let stash = std::mem::take(&mut self.stash);
+        let mut rest = Vec::new();
+        for (from, msg) in stash {
+            let unit = segment::seg_index(msg.op).expect("stashed frames are framed");
+            if unit / (2 * FRAMES_PER_UNIT) == c {
+                self.route(from, msg, ctx);
+            } else {
+                rest.push((from, msg));
+            }
+        }
+        self.stash.extend(rest);
+    }
+
+    /// Drive one sub-protocol through a capture context and fold its
+    /// outcomes into the aggregate state.
+    fn drive(
+        &mut self,
+        c: u32,
+        h: u32,
+        role: Role,
+        ctx: &mut dyn Ctx,
+        f: impl FnOnce(&mut dyn Protocol, &mut dyn Ctx),
+    ) {
+        let idx = (c * 2 + h) as usize;
+        let mut cap = CaptureCtx { inner: ctx, captured: Vec::new() };
+        {
+            let unit = &mut self.units[idx];
+            let proto: Option<&mut dyn Protocol> = match role {
+                Role::RedOwn => Some(&mut unit.red_own),
+                Role::RedOther => Some(&mut unit.red_other),
+                Role::Primary => unit.primary.as_mut().map(|b| b as &mut dyn Protocol),
+                Role::Backup => unit.backup.as_mut().map(|b| b as &mut dyn Protocol),
+            };
+            match proto {
+                Some(p) => f(p, &mut cap),
+                None => return,
+            }
+        }
+        let outs = cap.captured;
+        for out in outs {
+            self.absorb(c, h, role, out, ctx);
+        }
+    }
+
+    fn absorb(&mut self, c: u32, h: u32, role: Role, out: Outcome, ctx: &mut dyn Ctx) {
+        match out {
+            Outcome::ReduceDone => {}
+            Outcome::ReduceRoot { value, known_failed } => {
+                self.report.extend_from_slice(&known_failed);
+                let idx = (c * 2 + h) as usize;
+                match role {
+                    Role::RedOwn => {
+                        // we are root h: V is ready — hand it to the
+                        // primary root (fire-and-forget; absorbed if it
+                        // is dead) and remember it for the backup frame
+                        self.units[idx].own_val = Some(value.clone());
+                        if !self.units[idx].exchanged {
+                            self.units[idx].exchanged = true;
+                            let to = 1 - h;
+                            ctx.send(
+                                to,
+                                Msg {
+                                    op: self.unit_op(c, h, U_PRIMARY),
+                                    epoch: self.cfg.base_epoch,
+                                    kind: MsgKind::TreeUp,
+                                    payload: value,
+                                    finfo: FailureInfo::Bit(false),
+                                },
+                            );
+                        }
+                        self.try_originate(c, h, ctx);
+                    }
+                    Role::RedOther => {
+                        // we are root 1-h: the warm standby W is ready
+                        self.units[idx].warm_val = Some(value);
+                        self.try_originate(c, h, ctx);
+                    }
+                    _ => {}
+                }
+            }
+            Outcome::Broadcast(value) => self.record_half(c, h, role, value, ctx),
+            Outcome::Allreduce { .. } => unreachable!("no nested allreduce"),
+            Outcome::Error(e) => {
+                if !self.delivered {
+                    self.delivered = true;
+                    ctx.deliver(Outcome::Error(e));
+                }
+            }
+        }
+    }
+
+    /// Originate a broadcast whose input just became available (or
+    /// whose trigger — the other root's confirmed death — just fired).
+    fn try_originate(&mut self, c: u32, h: u32, ctx: &mut dyn Ctx) {
+        let idx = (c * 2 + h) as usize;
+        let primary_root = 1 - h;
+        if self.rank == primary_root && !self.units[idx].primary_originated {
+            // prefer the canonical exchanged V; fall back to the warm
+            // standby W only once the producer is confirmed dead
+            let input = match (&self.units[idx].exch_val, self.other_root_dead) {
+                (Some(v), _) => Some(v.clone()),
+                (None, true) => self.units[idx].warm_val.clone(),
+                (None, false) => None,
+            };
+            if let Some(v) = input {
+                self.units[idx].primary_originated = true;
+                let op = self.unit_op(c, h, U_PRIMARY);
+                self.units[idx].primary =
+                    Some(Broadcast::new(self.bcast_cfg(primary_root, op), Some(v)));
+                self.drive(c, h, Role::Primary, ctx, |p, cx| p.on_start(cx));
+                let stash = std::mem::take(&mut self.units[idx].primary_stash);
+                for (from, msg) in stash {
+                    self.drive(c, h, Role::Primary, ctx, |p, cx| p.on_message(from, msg, cx));
+                }
+            }
+        }
+        if self.rank == h
+            && self.other_root_dead
+            && !self.units[idx].backup_originated
+            && self.units[idx].own_val.is_some()
+        {
+            self.units[idx].backup_originated = true;
+            let v = self.units[idx].own_val.clone().expect("guarded");
+            let op = self.unit_op(c, h, U_BACKUP);
+            self.units[idx].backup = Some(Broadcast::new(self.bcast_cfg(h, op), Some(v)));
+            self.drive(c, h, Role::Backup, ctx, |p, cx| p.on_start(cx));
+            let stash = std::mem::take(&mut self.units[idx].backup_stash);
+            for (from, msg) in stash {
+                self.drive(c, h, Role::Backup, ctx, |p, cx| p.on_message(from, msg, cx));
+            }
+        }
+    }
+
+    fn record_half(&mut self, c: u32, h: u32, role: Role, value: Value, ctx: &mut dyn Ctx) {
+        let idx = (c * 2 + h) as usize;
+        if self.half_vals[idx].is_none() {
+            if role == Role::Backup && h == 1 {
+                self.backup_used_h1 = true;
+            }
+            self.half_vals[idx] = Some(value);
+            self.maybe_deliver(ctx);
+        }
+    }
+
+    fn maybe_deliver(&mut self, ctx: &mut dyn Ctx) {
+        if self.delivered || self.half_vals.iter().any(Option::is_none) {
+            return;
+        }
+        // reassemble: chunks of half 0 in order, then chunks of half 1
+        let mut parts = Vec::with_capacity(self.half_vals.len());
+        for h in 0..2u32 {
+            for c in 0..self.cfg.chunks {
+                parts.push(
+                    self.half_vals[(c * 2 + h) as usize].clone().expect("all halves present"),
+                );
+            }
+        }
+        let value = Value::concat_segments(&parts);
+        self.delivered = true;
+        if self.watching_other && !self.other_root_dead {
+            self.watching_other = false;
+            ctx.unwatch(self.other_root());
+        }
+        ctx.deliver(Outcome::Allreduce { value, attempts: 1 });
+    }
+
+    /// Route a message of an already-started chunk to its sub-protocol.
+    fn route(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        let unit = segment::seg_index(msg.op).expect("framed");
+        let c = unit / (2 * FRAMES_PER_UNIT);
+        let rem = unit % (2 * FRAMES_PER_UNIT);
+        let (h, u) = (rem / FRAMES_PER_UNIT, rem % FRAMES_PER_UNIT);
+        let idx = (c * 2 + h) as usize;
+        match u {
+            U_RED_OWN => self.drive(c, h, Role::RedOwn, ctx, |p, cx| p.on_message(from, msg, cx)),
+            U_RED_OTHER => {
+                self.drive(c, h, Role::RedOther, ctx, |p, cx| p.on_message(from, msg, cx))
+            }
+            U_PRIMARY if msg.kind == MsgKind::TreeUp => {
+                // the root-to-root exchange: V arrived at the primary root
+                if self.units[idx].exch_val.is_none() {
+                    self.units[idx].exch_val = Some(msg.payload);
+                    self.try_originate(c, h, ctx);
+                }
+            }
+            U_PRIMARY => {
+                if self.units[idx].primary.is_some() {
+                    self.drive(c, h, Role::Primary, ctx, |p, cx| p.on_message(from, msg, cx));
+                } else {
+                    self.units[idx].primary_stash.push((from, msg));
+                }
+            }
+            _ => {
+                if self.units[idx].backup.is_some() {
+                    self.drive(c, h, Role::Backup, ctx, |p, cx| p.on_message(from, msg, cx));
+                } else {
+                    self.units[idx].backup_stash.push((from, msg));
+                }
+            }
+        }
+    }
+
+    /// Start further chunks while the pipeline gate is open (the last
+    /// started chunk's reduces have left up-correction).
+    fn pump(&mut self, ctx: &mut dyn Ctx) {
+        while self.started_chunks < self.cfg.chunks && self.last_chunk_upcorr_done() {
+            self.start_chunk(ctx);
+        }
+    }
+}
+
+impl Protocol for DualRootPipelined {
+    fn on_start(&mut self, ctx: &mut dyn Ctx) {
+        if let Some(v) = self.solo_input.take() {
+            self.delivered = true;
+            ctx.deliver(Outcome::Allreduce { value: v, attempts: 1 });
+            return;
+        }
+        debug_assert_eq!(self.rank, ctx.rank(), "constructed with the wrong rank");
+        if self.is_a_root() {
+            self.watching_other = true;
+            ctx.watch(self.other_root());
+        }
+        self.start_chunk(ctx);
+        self.pump(ctx);
+    }
+
+    fn on_message(&mut self, from: Rank, msg: Msg, ctx: &mut dyn Ctx) {
+        if self.solo_input.is_some() || self.cfg.n == 1 {
+            return;
+        }
+        let Some(unit) = segment::seg_index(msg.op) else {
+            return; // unframed: another operation's traffic
+        };
+        if segment::base_op(msg.op) != self.cfg.op_id || msg.epoch != self.cfg.base_epoch {
+            return;
+        }
+        let c = unit / (2 * FRAMES_PER_UNIT);
+        if c >= self.cfg.chunks {
+            return;
+        }
+        if c >= self.started_chunks {
+            self.stash.push((from, msg));
+            return;
+        }
+        self.route(from, msg, ctx);
+        self.pump(ctx);
+    }
+
+    fn on_peer_failed(&mut self, peer: Rank, ctx: &mut dyn Ctx) {
+        if self.cfg.n == 1 {
+            return;
+        }
+        if self.is_a_root() && peer == self.other_root() && !self.other_root_dead {
+            self.other_root_dead = true;
+            self.watching_other = false;
+            self.report.push(peer);
+        }
+        // fan out to every started reduce (they watch group peers and
+        // tree children; one monitor notification clears all)
+        for c in 0..self.started_chunks {
+            for h in 0..2u32 {
+                self.drive(c, h, Role::RedOwn, ctx, |p, cx| p.on_peer_failed(peer, cx));
+                self.drive(c, h, Role::RedOther, ctx, |p, cx| p.on_peer_failed(peer, cx));
+            }
+        }
+        if self.other_root_dead {
+            for c in 0..self.started_chunks {
+                for h in 0..2u32 {
+                    self.try_originate(c, h, ctx);
+                }
+            }
+        }
+        self.pump(ctx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::TestCtx;
+    use crate::topology::UpCorrectionGroups;
+    use std::collections::HashMap;
+
+    fn mask(n: usize, rank: Rank) -> Value {
+        Value::one_hot(n, rank)
+    }
+
+    struct Mesh {
+        ctxs: Vec<TestCtx>,
+        protos: Vec<DualRootPipelined>,
+        dead: Vec<bool>,
+        counts: HashMap<MsgKind, u64>,
+    }
+
+    impl Mesh {
+        fn new(n: u32, f: u32) -> Self {
+            Mesh::with_chunks(n, f, DEFAULT_CHUNKS)
+        }
+
+        fn with_chunks(n: u32, f: u32, chunks: u32) -> Self {
+            let ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+            let protos = (0..n)
+                .map(|r| {
+                    let mut cfg = DualRootConfig::new(n, f);
+                    cfg.chunks = chunks;
+                    DualRootPipelined::new(cfg, r, mask(n as usize, r))
+                })
+                .collect();
+            Mesh { ctxs, protos, dead: vec![false; n as usize], counts: HashMap::new() }
+        }
+
+        fn start(&mut self) {
+            for r in 0..self.protos.len() {
+                if !self.dead[r] {
+                    self.protos[r].on_start(&mut self.ctxs[r]);
+                }
+            }
+        }
+
+        /// Kill `r` between pump iterations (handler-atomic, like the
+        /// DES kill): queued sends still deliver, watchers are notified.
+        fn kill(&mut self, r: usize) {
+            self.dead[r] = true;
+            for w in 0..self.protos.len() {
+                if w == r || self.dead[w] {
+                    continue;
+                }
+                let subs = self.ctxs[w].watched.iter().filter(|&&p| p == r as Rank).count();
+                let cleared =
+                    self.ctxs[w].unwatched.iter().filter(|&&p| p == r as Rank).count();
+                if subs > cleared {
+                    for _ in cleared..subs {
+                        self.ctxs[w].unwatched.push(r as Rank);
+                    }
+                    self.protos[w].on_peer_failed(r as Rank, &mut self.ctxs[w]);
+                }
+            }
+        }
+
+        /// Dispatch queued sends until quiescent. New watches on
+        /// already-dead peers fire immediately.
+        fn pump(&mut self) {
+            for _ in 0..4096 {
+                let mut moved = false;
+                for r in 0..self.protos.len() {
+                    let sends = self.ctxs[r].take_sent();
+                    if self.dead[r] {
+                        continue; // a dead rank's queued sends are dropped
+                    }
+                    for (to, m) in sends {
+                        moved = true;
+                        *self.counts.entry(m.kind).or_insert(0) += 1;
+                        if !self.dead[to as usize] {
+                            self.protos[to as usize].on_message(
+                                r as Rank,
+                                m,
+                                &mut self.ctxs[to as usize],
+                            );
+                        }
+                    }
+                }
+                for w in 0..self.protos.len() {
+                    if self.dead[w] {
+                        continue;
+                    }
+                    let watched: Vec<Rank> = self.ctxs[w].watched.clone();
+                    for p in watched {
+                        if self.dead[p as usize] {
+                            let subs =
+                                self.ctxs[w].watched.iter().filter(|&&x| x == p).count();
+                            let cleared =
+                                self.ctxs[w].unwatched.iter().filter(|&&x| x == p).count();
+                            if subs > cleared {
+                                moved = true;
+                                for _ in cleared..subs {
+                                    self.ctxs[w].unwatched.push(p);
+                                }
+                                self.protos[w].on_peer_failed(p, &mut self.ctxs[w]);
+                            }
+                        }
+                    }
+                }
+                if !moved {
+                    return;
+                }
+            }
+            panic!("mesh did not quiesce");
+        }
+
+        fn delivered_mask(&self, r: usize) -> Vec<i64> {
+            assert_eq!(self.ctxs[r].delivered.len(), 1, "rank {r} deliveries");
+            match &self.ctxs[r].delivered[0] {
+                Outcome::Allreduce { value, attempts } => {
+                    assert_eq!(*attempts, 1, "the dual root never rotates");
+                    value.inclusion_counts().to_vec()
+                }
+                o => panic!("rank {r}: unexpected {o:?}"),
+            }
+        }
+    }
+
+    /// Clean closed form per kind (docs/DUALROOT.md §3):
+    /// `(UpCorrection, TreeUp, BcastTree, BcastCorrection)`. Per chunk:
+    /// four corrected reduces (own + standby per half), two exchanges,
+    /// two primary broadcasts, silent backup frames.
+    fn clean_counts(n: u32, f: u32, chunks: u32) -> (u64, u64, u64, u64) {
+        let uc = UpCorrectionGroups::new(n, f).failure_free_messages();
+        let c = u64::from(chunks);
+        (
+            4 * c * uc,
+            c * (4 * u64::from(n - 1) + 2),
+            2 * c * u64::from(n - 1),
+            2 * c * u64::from(n) * u64::from((f + 1).min(n - 1)),
+        )
+    }
+
+    #[test]
+    fn frame_layout_and_config_checks() {
+        let cfg = DualRootConfig::new(8, 1);
+        assert!(cfg.check_frames().is_ok());
+        let mut bad = cfg.clone();
+        bad.op_id = 0;
+        assert!(bad.check_frames().is_err());
+        let mut bad = cfg.clone();
+        bad.chunks = 0;
+        assert!(bad.check_frames().is_err());
+        let mut bad = cfg.clone();
+        bad.chunks = (segment::MAX_SEGMENTS / 8) as u32 + 1;
+        assert!(bad.check_frames().is_err());
+        // frame ops are distinct across (c, h, u)
+        let p = DualRootPipelined::new(cfg, 3, mask(8, 3));
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..2 {
+            for h in 0..2 {
+                for u in 0..4 {
+                    assert!(seen.insert(p.unit_op(c, h, u)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clean_all_agree_with_exact_counts() {
+        for (n, f) in [(8u32, 1u32), (9, 2), (12, 3), (2, 1), (3, 1)] {
+            let mut m = Mesh::new(n, f);
+            m.start();
+            m.pump();
+            let expect = vec![1i64; n as usize];
+            for r in 0..n as usize {
+                assert_eq!(m.delivered_mask(r), expect, "n={n} f={f} rank {r}");
+                assert_eq!(m.protos[r].sync_attempts(), Some(1));
+                assert!(m.protos[r].known_failed().is_empty());
+            }
+            let (uc, tu, bt, bc) = clean_counts(n, f, DEFAULT_CHUNKS);
+            let got = |k: MsgKind| m.counts.get(&k).copied().unwrap_or(0);
+            assert_eq!(got(MsgKind::UpCorrection), uc, "n={n} f={f} upcorr");
+            assert_eq!(got(MsgKind::TreeUp), tu, "n={n} f={f} treeup");
+            assert_eq!(got(MsgKind::BcastTree), bt, "n={n} f={f} bcast tree");
+            assert_eq!(got(MsgKind::BcastCorrection), bc, "n={n} f={f} bcast corr");
+        }
+    }
+
+    /// Pre-operationally dead root 0: every survivor delivers in one
+    /// attempt; half 1 travels on the backup frame, so the sync root
+    /// moves to the surviving lower root (rank 1).
+    #[test]
+    fn pre_dead_root0_single_attempt_sync_moves() {
+        let mut m = Mesh::new(9, 1);
+        m.dead[0] = true;
+        m.start();
+        m.pump();
+        let mut expect = vec![1i64; 9];
+        expect[0] = 0;
+        for r in 1..9 {
+            assert_eq!(m.delivered_mask(r), expect, "rank {r}");
+            assert_eq!(m.protos[r].sync_attempts(), Some(2), "rank {r}");
+        }
+    }
+
+    /// Pre-operationally dead root 1: the lower root survives, sync
+    /// stays at rank 0.
+    #[test]
+    fn pre_dead_root1_sync_stays() {
+        let mut m = Mesh::new(9, 1);
+        m.dead[1] = true;
+        m.start();
+        m.pump();
+        let mut expect = vec![1i64; 9];
+        expect[1] = 0;
+        for r in [0usize, 2, 3, 4, 5, 6, 7, 8] {
+            assert_eq!(m.delivered_mask(r), expect, "rank {r}");
+            assert_eq!(m.protos[r].sync_attempts(), Some(1), "rank {r}");
+        }
+    }
+
+    /// In-operational death of root 0 after its first sends: one
+    /// attempt, bit-identical agreement everywhere (§5.1 item 5) —
+    /// exactly one value per half ever circulates.
+    #[test]
+    fn inop_root0_death_agreement() {
+        let mut m = Mesh::new(12, 2);
+        m.start();
+        m.kill(0);
+        m.pump();
+        let first = m.delivered_mask(1);
+        for r in 2..12 {
+            assert_eq!(m.delivered_mask(r), first, "rank {r} disagrees");
+        }
+        // live contributors included exactly once; victim 0-or-1
+        for r in 1..12 {
+            assert_eq!(first[r], 1, "live rank {r}");
+        }
+        assert!(first[0] == 0 || first[0] == 1, "all-or-nothing for the victim");
+    }
+
+    /// In-operational death of root 0 mid-run (after the reduce phase
+    /// made progress): survivors still agree and finish in 1 attempt.
+    #[test]
+    fn inop_root0_death_mid_run() {
+        let mut m = Mesh::new(8, 1);
+        m.start();
+        // let the first wave of sends land, then kill root 0
+        for r in 0..8usize {
+            let sends = m.ctxs[r].take_sent();
+            for (to, msg) in sends {
+                *m.counts.entry(msg.kind).or_insert(0) += 1;
+                m.protos[to as usize].on_message(r as Rank, msg, &mut m.ctxs[to as usize]);
+            }
+        }
+        m.kill(0);
+        m.pump();
+        let first = m.delivered_mask(1);
+        for r in 2..8 {
+            assert_eq!(m.delivered_mask(r), first, "rank {r} disagrees");
+        }
+    }
+
+    /// Two in-operational deaths inside the same up-correction group —
+    /// the family the butterfly documents as residual; the dual root's
+    /// corrected reduces absorb it.
+    #[test]
+    fn same_group_multi_death() {
+        let n = 12u32;
+        let f = 3u32;
+        let mut m = Mesh::new(n, f);
+        m.start();
+        m.kill(5);
+        m.kill(6); // same f+1-wide correction group as 5
+        m.pump();
+        let first = m.delivered_mask(0);
+        for r in [0usize, 1, 2, 3, 4, 7, 8, 9, 10, 11] {
+            assert_eq!(m.delivered_mask(r), first, "rank {r} disagrees");
+            assert_eq!(first[r], 1, "live rank {r} included once");
+        }
+        for v in [5usize, 6] {
+            assert!(first[v] == 0 || first[v] == 1, "all-or-nothing for {v}");
+        }
+    }
+
+    /// The pipeline gate: at start only chunk 0's frames are on the
+    /// wire — chunk 1's reduces wait for chunk 0 to leave its
+    /// up-correction phase.
+    #[test]
+    fn chunk1_waits_for_chunk0_upcorr() {
+        let n = 8u32;
+        let mut ctx = TestCtx::new(4, n);
+        let mut p = DualRootPipelined::new(DualRootConfig::new(n, 2), 4, mask(8, 4));
+        p.on_start(&mut ctx);
+        for (_, msg) in ctx.take_sent() {
+            let unit = segment::seg_index(msg.op).expect("framed");
+            assert!(unit < 8, "chunk-1 frame {unit} sent before the gate opened");
+        }
+        assert!(!p.upcorr_done());
+    }
+
+    /// Per-chunk masks reassemble to the original payload order: run
+    /// with a distinctive ramp payload and check the delivered sum.
+    #[test]
+    fn reassembly_preserves_element_order() {
+        let n = 6u32;
+        let len = 10usize;
+        let ctxs: Vec<TestCtx> = (0..n).map(|r| TestCtx::new(r, n)).collect();
+        let mut m = Mesh {
+            ctxs,
+            protos: (0..n)
+                .map(|r| {
+                    // rank r contributes r at every element
+                    DualRootPipelined::new(
+                        DualRootConfig::new(n, 1),
+                        r,
+                        Value::i64(vec![i64::from(r); len]),
+                    )
+                })
+                .collect(),
+            dead: vec![false; n as usize],
+            counts: HashMap::new(),
+        };
+        m.start();
+        m.pump();
+        let total: i64 = (0..n as i64).sum();
+        for r in 0..n as usize {
+            assert_eq!(m.delivered_mask(r), vec![total; len], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn solo_rank_delivers_immediately() {
+        let mut ctx = TestCtx::new(0, 1);
+        let mut p = DualRootPipelined::new(DualRootConfig::new(1, 2), 0, mask(1, 0));
+        p.on_start(&mut ctx);
+        assert!(ctx.take_sent().is_empty());
+        assert_eq!(ctx.delivered.len(), 1);
+        assert!(matches!(
+            &ctx.delivered[0],
+            Outcome::Allreduce { attempts: 1, .. }
+        ));
+        assert!(p.upcorr_done());
+    }
+
+    /// Non-root ranks send only chunk-0 up-corrections at start — the
+    /// backup frames stay silent on a clean run.
+    #[test]
+    fn backup_frames_silent_when_clean() {
+        let mut m = Mesh::new(10, 2);
+        m.start();
+        m.pump();
+        // all four kinds accounted for by the closed form means no
+        // backup-frame traffic happened (it would add BcastTree /
+        // BcastCorrection beyond the form) — checked in
+        // clean_all_agree_with_exact_counts; here pin the frame level:
+        // nothing was ever stashed waiting for a backup originator.
+        for p in &m.protos {
+            for u in &p.units {
+                assert!(u.backup_stash.is_empty());
+                assert!(!u.backup_originated);
+            }
+        }
+    }
+}

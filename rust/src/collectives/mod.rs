@@ -22,6 +22,10 @@
 //! * [`butterfly`] — recursive-halving/doubling butterfly allreduce
 //!   over replicated correction groups with per-round correction
 //!   (docs/BUTTERFLY.md),
+//! * [`dualroot`] — doubly-pipelined dual-root allreduce: two payload
+//!   halves, each reduced toward its own root and broadcast down the
+//!   other root's tree, chunk-pipelined with redundant warm-standby
+//!   sweeps (docs/DUALROOT.md),
 //! * [`pipeline`] — segmented/pipelined driver running one per-segment
 //!   Reduce/Allreduce/Rsag instance per payload segment
 //!   (docs/PIPELINE.md),
@@ -31,6 +35,7 @@ pub mod allreduce;
 pub mod baseline;
 pub mod broadcast;
 pub mod butterfly;
+pub mod dualroot;
 pub mod failure_info;
 pub mod pipeline;
 pub mod reduce;

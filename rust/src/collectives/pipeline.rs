@@ -39,6 +39,7 @@
 
 use super::allreduce::{Allreduce, AllreduceConfig};
 use super::butterfly::{ButterflyConfig, CorrectedButterfly};
+use super::dualroot::{DualRootConfig, DualRootPipelined};
 use super::reduce::{Reduce, ReduceConfig};
 use super::rsag::{ReduceScatterAllgather, RsagConfig};
 use super::{CaptureCtx, Ctx, Outcome, Protocol};
@@ -57,6 +58,9 @@ pub enum PipelineSpec {
     Allreduce(AllreduceConfig),
     Rsag(RsagConfig),
     Butterfly(ButterflyConfig, Rank),
+    /// Dual-root segments carry the constructing rank too (the root
+    /// pair's watch topology is bound at construction).
+    DualRoot(DualRootConfig, Rank),
 }
 
 /// One per-segment protocol instance.
@@ -65,6 +69,7 @@ enum SegInst {
     A(Allreduce),
     G(ReduceScatterAllgather),
     Y(CorrectedButterfly),
+    D(DualRootPipelined),
 }
 
 impl SegInst {
@@ -74,6 +79,7 @@ impl SegInst {
             SegInst::A(p) => p.on_start(ctx),
             SegInst::G(p) => p.on_start(ctx),
             SegInst::Y(p) => p.on_start(ctx),
+            SegInst::D(p) => p.on_start(ctx),
         }
     }
 
@@ -83,6 +89,7 @@ impl SegInst {
             SegInst::A(p) => p.on_message(from, msg, ctx),
             SegInst::G(p) => p.on_message(from, msg, ctx),
             SegInst::Y(p) => p.on_message(from, msg, ctx),
+            SegInst::D(p) => p.on_message(from, msg, ctx),
         }
     }
 
@@ -92,6 +99,7 @@ impl SegInst {
             SegInst::A(p) => p.on_peer_failed(peer, ctx),
             SegInst::G(p) => p.on_peer_failed(peer, ctx),
             SegInst::Y(p) => p.on_peer_failed(peer, ctx),
+            SegInst::D(p) => p.on_peer_failed(peer, ctx),
         }
     }
 
@@ -101,6 +109,7 @@ impl SegInst {
             SegInst::A(p) => p.upcorr_done(),
             SegInst::G(p) => p.upcorr_done(),
             SegInst::Y(p) => p.upcorr_done(),
+            SegInst::D(p) => p.upcorr_done(),
         }
     }
 }
@@ -171,6 +180,20 @@ impl Pipelined {
         Pipelined::new(PipelineSpec::Butterfly(cfg, rank), base_op, input, segment_bytes)
     }
 
+    /// Pipelined doubly-pipelined dual-root allreduce: each segment
+    /// runs a full per-segment [`DualRootPipelined`], its chunk/half
+    /// frames one level below the segment index. `rank` binds the root
+    /// pair's watch topology at construction.
+    pub fn dualroot(
+        cfg: DualRootConfig,
+        rank: Rank,
+        input: Value,
+        segment_bytes: usize,
+    ) -> Self {
+        let base_op = cfg.op_id;
+        Pipelined::new(PipelineSpec::DualRoot(cfg, rank), base_op, input, segment_bytes)
+    }
+
     fn new(spec: PipelineSpec, base_op: u64, input: Value, segment_bytes: usize) -> Self {
         // base 0 would make seg_op(0, 0) == 1 collide with the default
         // monolithic op id — the base_op routing check needs base ≥ 1
@@ -220,6 +243,7 @@ impl Pipelined {
                 SegInst::A(a) => out.extend_from_slice(a.known_failed()),
                 SegInst::G(g) => out.extend(g.known_failed()),
                 SegInst::Y(y) => out.extend(y.known_failed()),
+                SegInst::D(d) => out.extend(d.known_failed()),
                 SegInst::R(_) => {}
             }
         }
@@ -238,6 +262,7 @@ impl Pipelined {
         match self.insts.first()? {
             Some(SegInst::G(g)) => g.sync_attempts(),
             Some(SegInst::Y(y)) => y.sync_attempts(),
+            Some(SegInst::D(d)) => d.sync_attempts(),
             _ => None,
         }
     }
@@ -264,6 +289,11 @@ impl Pipelined {
                 let mut cfg = base.clone();
                 cfg.op_id = segment::seg_op(self.base_op, s as u32);
                 SegInst::Y(CorrectedButterfly::new(cfg, *rank, input))
+            }
+            PipelineSpec::DualRoot(base, rank) => {
+                let mut cfg = base.clone();
+                cfg.op_id = segment::seg_op(self.base_op, s as u32);
+                SegInst::D(DualRootPipelined::new(cfg, *rank, input))
             }
         }
     }
@@ -350,7 +380,10 @@ impl Pipelined {
                     ctx.deliver(Outcome::ReduceDone);
                 }
             }
-            PipelineSpec::Allreduce(_) | PipelineSpec::Rsag(_) | PipelineSpec::Butterfly(..) => {
+            PipelineSpec::Allreduce(_)
+            | PipelineSpec::Rsag(_)
+            | PipelineSpec::Butterfly(..)
+            | PipelineSpec::DualRoot(..) => {
                 if self.seg_values.iter().all(|v| v.is_some()) {
                     let vals: Vec<Value> =
                         self.seg_values.iter_mut().map(|v| v.take().unwrap()).collect();
@@ -377,7 +410,7 @@ impl Protocol for Pipelined {
         // level — the low bits carry the block and are the inner
         // instance's business
         let s = match &self.spec {
-            PipelineSpec::Rsag(_) | PipelineSpec::Butterfly(..) => {
+            PipelineSpec::Rsag(_) | PipelineSpec::Butterfly(..) | PipelineSpec::DualRoot(..) => {
                 let inner = segment::base_op(msg.op);
                 let Some(s) = segment::seg_index(inner) else {
                     return; // not double-framed: another operation
@@ -415,6 +448,8 @@ impl Protocol for Pipelined {
             PipelineSpec::Butterfly(cfg, _) => {
                 msg.epoch >= cfg.base_epoch && msg.epoch < cfg.base_epoch + cfg.f + 1
             }
+            // the dual root never rotates: one epoch, exactly
+            PipelineSpec::DualRoot(cfg, _) => msg.epoch == cfg.base_epoch,
         };
         if !in_band {
             return;
@@ -472,6 +507,7 @@ impl Protocol for Pipelined {
                 SegInst::A(p) => p.on_timer(token, &mut cap),
                 SegInst::G(p) => p.on_timer(token, &mut cap),
                 SegInst::Y(p) => p.on_timer(token, &mut cap),
+                SegInst::D(p) => p.on_timer(token, &mut cap),
             }
             let captured = cap.captured;
             self.insts[s] = Some(inst);

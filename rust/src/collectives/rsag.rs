@@ -65,6 +65,11 @@ pub enum AllreduceAlgo {
     /// groups ([`crate::collectives::butterfly::CorrectedButterfly`],
     /// docs/BUTTERFLY.md).
     Butterfly,
+    /// Doubly-pipelined dual-root halves: each half reduced toward its
+    /// own root, broadcast down the other root's tree, chunk-pipelined
+    /// ([`crate::collectives::dualroot::DualRootPipelined`],
+    /// docs/DUALROOT.md).
+    DualRoot,
 }
 
 impl AllreduceAlgo {
@@ -73,6 +78,7 @@ impl AllreduceAlgo {
             AllreduceAlgo::Tree => "tree",
             AllreduceAlgo::Rsag => "rsag",
             AllreduceAlgo::Butterfly => "butterfly",
+            AllreduceAlgo::DualRoot => "dualroot",
         }
     }
 }

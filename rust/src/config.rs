@@ -105,10 +105,12 @@ pub struct Config {
     /// Segment size for the pipelined reduce/allreduce (`None` =
     /// monolithic). Broadcast and the baselines ignore it.
     pub segment_bytes: Option<u32>,
-    /// Allreduce decomposition (`--allreduce-algo tree|rsag|butterfly`):
+    /// Allreduce decomposition (`--allreduce-algo
+    /// tree|rsag|butterfly|dualroot`):
     /// the paper's corrected reduce+broadcast, reduce-scatter/allgather
     /// over per-rank strided blocks (docs/RSAG.md), or the corrected
-    /// butterfly over replicated correction groups (docs/BUTTERFLY.md).
+    /// butterfly over replicated correction groups (docs/BUTTERFLY.md),
+    /// or the doubly-pipelined dual-root schedule (docs/DUALROOT.md).
     /// Applies to allreduce runs and allreduce session epochs.
     pub allreduce_algo: AllreduceAlgo,
     /// Operations per session (`ftcoll session --ops K`); 1 = a single
@@ -144,7 +146,7 @@ impl Config {
     /// `n`, `f`, `root`, `scheme` (list|count+bit|bit), `op`
     /// (sum|max|min|prod), `payload` (rank|onehot|vec:<len>|segmask:<s>),
     /// `seed`, `segment_bytes` (pipelined reduce/allreduce segment size),
-    /// `allreduce_algo` (tree|rsag|butterfly — the allreduce
+    /// `allreduce_algo` (tree|rsag|butterfly|dualroot — the allreduce
     /// decomposition),
     /// `fail` (repeatable: `pre:<rank>` | `sends:<rank>:<k>` |
     /// `time:<rank>:<ns>`).
@@ -213,6 +215,7 @@ impl Config {
                     "tree" => AllreduceAlgo::Tree,
                     "rsag" => AllreduceAlgo::Rsag,
                     "butterfly" => AllreduceAlgo::Butterfly,
+                    "dualroot" => AllreduceAlgo::DualRoot,
                     other => return Err(format!("unknown allreduce algo `{other}`")),
                 }
             }
@@ -440,6 +443,9 @@ mod tests {
         let cfg = Config::parse("allreduce-algo = butterfly\n").unwrap();
         assert_eq!(cfg.allreduce_algo, AllreduceAlgo::Butterfly);
         assert_eq!(cfg.to_spec().allreduce_algo, AllreduceAlgo::Butterfly);
+        let cfg = Config::parse("allreduce_algo = dualroot\n").unwrap();
+        assert_eq!(cfg.allreduce_algo, AllreduceAlgo::DualRoot);
+        assert_eq!(cfg.to_spec().allreduce_algo, AllreduceAlgo::DualRoot);
         assert!(Config::parse("allreduce_algo = ring").is_err());
     }
 

@@ -70,17 +70,19 @@ USAGE: ftcoll <subcommand> [options]
              [--shards auto|K — shard the sparse engine's rank lanes
              over K threads; bit-identical to --shards 1]
              — simulate fault-tolerant reduce
-  allreduce  same options + [--allreduce-algo tree|rsag|butterfly]
+  allreduce  same options + [--allreduce-algo tree|rsag|butterfly|dualroot]
              — simulate fault-tolerant allreduce (tree = corrected
              reduce+broadcast; rsag = reduce-scatter/allgather over
              per-rank blocks, docs/RSAG.md; butterfly = corrected
              halving/doubling over correction groups, docs/BUTTERFLY.md;
-             --engine sparse|auto covers the tree algorithm)
+             dualroot = doubly-pipelined dual-root halves with a warm
+             standby root, docs/DUALROOT.md; --engine sparse|auto
+             covers the tree algorithm)
   broadcast  same options (segment-bytes ignored) — corrected-tree bcast
   run        [--collective reduce|allreduce|broadcast] [--live]
              + the same options — one entry point over both executors
              (default: allreduce on the DES; --live uses the threaded
-             engine; e.g. `ftcoll run --allreduce-algo rsag [--live]`)
+             engine; e.g. `ftcoll run --allreduce-algo dualroot [--live]`)
   baseline   --algo tree|flat|ring|gossip + same options
   campaign   [--count 1000] [--seed 1] [--max-n 128] [--threads 0]
              [--bign 0 — append that many large-n (10^4..10^6) reduce
@@ -271,7 +273,7 @@ fn run_sim(args: &Args) -> Result<(), String> {
 /// `ftcoll run`: one entry point over both executors — the chosen
 /// collective runs on the DES by default, or on the live threaded
 /// engine with `--live`. All the usual config options apply, including
-/// `--allreduce-algo tree|rsag|butterfly`.
+/// `--allreduce-algo tree|rsag|butterfly|dualroot`.
 fn run_unified(args: &Args) -> Result<(), String> {
     let collective = args.get("collective").unwrap_or("allreduce").to_string();
     let live = args.flag("live");

@@ -21,6 +21,7 @@
 use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
 use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
 use crate::collectives::butterfly::{ButterflyConfig, CorrectedButterfly};
+use crate::collectives::dualroot::{DualRootConfig, DualRootPipelined};
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::pipeline::Pipelined;
 use crate::collectives::reduce::{Reduce, ReduceConfig};
@@ -134,6 +135,13 @@ impl RunSpec {
             ButterflyConfig { n: self.n, f: self.f, op_id: 1, base_epoch: self.base_epoch }
                 .check_frames()?;
         }
+        // the dual root's chunk×half×frame layout must fit the op-id
+        // budget one level below the (optional) pipeline segment index
+        if self.allreduce_algo == AllreduceAlgo::DualRoot {
+            let mut dcfg = DualRootConfig::new(self.n, self.f);
+            dcfg.base_epoch = self.base_epoch;
+            dcfg.check_frames()?;
+        }
         if let Some(ops) = &self.ops_list {
             if ops.is_empty() {
                 return Err("ops_list must not be empty".into());
@@ -153,7 +161,7 @@ impl RunSpec {
         let framed_levels = u32::from(self.segment_bytes.is_some())
             + u32::from(matches!(
                 self.allreduce_algo,
-                AllreduceAlgo::Rsag | AllreduceAlgo::Butterfly
+                AllreduceAlgo::Rsag | AllreduceAlgo::Butterfly | AllreduceAlgo::DualRoot
             ));
         segment::check_budget(u64::from(self.session_ops.max(1)), framed_levels)?;
         Ok(())
@@ -272,6 +280,13 @@ impl<'a> CollectiveDriver<'a> {
         }
     }
 
+    fn dualroot_config(&self) -> DualRootConfig {
+        let mut dcfg = DualRootConfig::new(self.spec.n, self.spec.f);
+        dcfg.scheme = self.spec.scheme;
+        dcfg.base_epoch = self.spec.base_epoch;
+        dcfg
+    }
+
     fn rsag_config(&self) -> RsagConfig {
         RsagConfig {
             n: self.spec.n,
@@ -323,6 +338,14 @@ impl Driver for CollectiveDriver<'_> {
                     ),
                     (AllreduceAlgo::Butterfly, None) => Box::new(CorrectedButterfly::new(
                         self.butterfly_config(),
+                        rank,
+                        input,
+                    )),
+                    (AllreduceAlgo::DualRoot, Some(bytes)) => Box::new(
+                        Pipelined::dualroot(self.dualroot_config(), rank, input, bytes),
+                    ),
+                    (AllreduceAlgo::DualRoot, None) => Box::new(DualRootPipelined::new(
+                        self.dualroot_config(),
                         rank,
                         input,
                     )),
@@ -418,6 +441,26 @@ mod tests {
         assert_eq!(ctx.sent.len(), 1);
         assert_eq!(ctx.sent[0].0, 3);
         assert_eq!(crate::types::segment::base_op(ctx.sent[0].1.op), 1);
+    }
+
+    #[test]
+    fn dualroot_driver_builds_chunk0_frames() {
+        let mut spec = RunSpec::new(8, 1);
+        spec.allreduce_algo = AllreduceAlgo::DualRoot;
+        spec.validate().unwrap();
+        let driver = CollectiveDriver::new(&spec, DriveKind::Allreduce);
+        let mut ctx = crate::collectives::testutil::TestCtx::new(4, 8);
+        let mut proto = driver.make_protocol(4, Value::one_hot(8, 4));
+        proto.on_start(&mut ctx);
+        // chunk 0's four reduces start immediately; every message is
+        // unit-framed under base op 1, units 0..8 (chunk 0 only — the
+        // pipeline gate holds chunk 1 back)
+        assert!(!ctx.sent.is_empty());
+        for (_, m) in &ctx.sent {
+            let unit = crate::types::segment::seg_index(m.op).expect("unit-framed");
+            assert!(unit < 8, "chunk-1 frame escaped the gate");
+            assert_eq!(crate::types::segment::base_op(m.op), 1);
+        }
     }
 
     #[test]

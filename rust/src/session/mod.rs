@@ -64,11 +64,17 @@
 //! `attempts` is a max over blocks and names no single rank;
 //! butterfly epochs use the lowest committed member of round 0's
 //! first group ([`CorrectedButterfly::sync_attempts`]), piggybacked
-//! through the allgather half.
+//! through the allgather half. Dual-root epochs (docs/DUALROOT.md)
+//! use the surviving lower root
+//! ([`DualRootPipelined::sync_attempts`]): a half delivered over the
+//! backup frame names root 0 dead, and under the session axis's
+//! pre-operational failure plans every survivor observes the same
+//! frame per half.
 
 use crate::collectives::allreduce::{Allreduce, AllreduceConfig};
 use crate::collectives::broadcast::{BcastConfig, Broadcast, CorrectionMode};
 use crate::collectives::butterfly::{ButterflyConfig, CorrectedButterfly};
+use crate::collectives::dualroot::{DualRootConfig, DualRootPipelined};
 use crate::collectives::failure_info::Scheme;
 use crate::collectives::pipeline::Pipelined;
 use crate::collectives::reduce::{Reduce, ReduceConfig};
@@ -172,6 +178,7 @@ enum DataInst {
     A(Allreduce),
     G(ReduceScatterAllgather),
     Y(CorrectedButterfly),
+    D(DualRootPipelined),
     P(Pipelined),
     B(Broadcast),
 }
@@ -183,6 +190,7 @@ impl DataInst {
             DataInst::A(p) => p.on_start(ctx),
             DataInst::G(p) => p.on_start(ctx),
             DataInst::Y(p) => p.on_start(ctx),
+            DataInst::D(p) => p.on_start(ctx),
             DataInst::P(p) => p.on_start(ctx),
             DataInst::B(p) => p.on_start(ctx),
         }
@@ -194,6 +202,7 @@ impl DataInst {
             DataInst::A(p) => p.on_message(from, msg, ctx),
             DataInst::G(p) => p.on_message(from, msg, ctx),
             DataInst::Y(p) => p.on_message(from, msg, ctx),
+            DataInst::D(p) => p.on_message(from, msg, ctx),
             DataInst::P(p) => p.on_message(from, msg, ctx),
             DataInst::B(p) => p.on_message(from, msg, ctx),
         }
@@ -205,6 +214,7 @@ impl DataInst {
             DataInst::A(p) => p.on_peer_failed(peer, ctx),
             DataInst::G(p) => p.on_peer_failed(peer, ctx),
             DataInst::Y(p) => p.on_peer_failed(peer, ctx),
+            DataInst::D(p) => p.on_peer_failed(peer, ctx),
             DataInst::P(p) => p.on_peer_failed(peer, ctx),
             DataInst::B(p) => p.on_peer_failed(peer, ctx),
         }
@@ -216,6 +226,7 @@ impl DataInst {
             DataInst::A(p) => p.on_timer(token, ctx),
             DataInst::G(p) => p.on_timer(token, ctx),
             DataInst::Y(p) => p.on_timer(token, ctx),
+            DataInst::D(p) => p.on_timer(token, ctx),
             DataInst::P(p) => p.on_timer(token, ctx),
             DataInst::B(p) => p.on_timer(token, ctx),
         }
@@ -436,6 +447,27 @@ impl Session {
                         }
                     }
                 }
+                AllreduceAlgo::DualRoot => {
+                    // two simultaneously active roots (dense ranks 0
+                    // and 1) over the survivors; a single dead root is
+                    // absorbed without a rotation (docs/DUALROOT.md)
+                    let mut dcfg = DualRootConfig::new(n, f);
+                    dcfg.scheme = self.cfg.scheme;
+                    dcfg.op_id = self.cfg.base_op;
+                    dcfg.base_epoch = e;
+                    let me = self
+                        .membership
+                        .dense_of(self.rank)
+                        .expect("session rank is a member");
+                    match self.cfg.segment_bytes {
+                        Some(b) => {
+                            DataInst::P(Pipelined::dualroot(dcfg, me, self.input.clone(), b))
+                        }
+                        None => {
+                            DataInst::D(DualRootPipelined::new(dcfg, me, self.input.clone()))
+                        }
+                    }
+                }
                 AllreduceAlgo::Butterfly => {
                     // correction groups partition the dense survivors;
                     // the sync-root hint band [e, e + f + 1) sits inside
@@ -599,6 +631,7 @@ impl Session {
                     let sync_attempts = match self.data.as_ref() {
                         Some(DataInst::G(g)) => g.sync_attempts().unwrap_or(attempts),
                         Some(DataInst::Y(y)) => y.sync_attempts().unwrap_or(attempts),
+                        Some(DataInst::D(d)) => d.sync_attempts().unwrap_or(attempts),
                         Some(DataInst::P(p)) => p.sync_attempts().unwrap_or(attempts),
                         _ => attempts,
                     };
@@ -612,6 +645,7 @@ impl Session {
                             Some(DataInst::A(a)) => a.known_failed().to_vec(),
                             Some(DataInst::G(g)) => g.known_failed(),
                             Some(DataInst::Y(y)) => y.known_failed(),
+                            Some(DataInst::D(d)) => d.known_failed(),
                             Some(DataInst::P(p)) => p.allreduce_report(),
                             _ => Vec::new(),
                         };

@@ -1,0 +1,204 @@
+//! Cross-algorithm equivalence harness (ISSUE 10): the four allreduce
+//! decompositions — tree (corrected reduce+broadcast), rsag
+//! (reduce-scatter/allgather), the corrected butterfly, and the
+//! doubly-pipelined dual root — are interchangeable. On the same
+//! in-contract scenario they must deliver bit-identical values, the
+//! same per-rank delivery sets, and the same inclusion masks, on clean
+//! runs and under pre-operational failures, across an (n, f, scheme,
+//! payload, net) grid including non-power-of-two n.
+//!
+//! This replaces the scattered pairwise clean≡tree pins that
+//! rsag_semantics.rs and butterfly_semantics.rs used to carry: one
+//! parameterized harness, every algorithm pair at once.
+//!
+//! The grid uses exactly-associative payloads (integer inclusion masks,
+//! and rank sums that are exact in f64) so bit-identity is well-defined
+//! across the algorithms' different combine orders; f32 rounding
+//! equivalence is deliberately not a law the paper states.
+
+use ftcoll::collectives::Outcome;
+use ftcoll::prelude::*;
+use ftcoll::types::MsgKind;
+
+const ALGOS: [AllreduceAlgo; 4] = [
+    AllreduceAlgo::Tree,
+    AllreduceAlgo::Rsag,
+    AllreduceAlgo::Butterfly,
+    AllreduceAlgo::DualRoot,
+];
+
+/// Run `base` under every algorithm and assert rank-by-rank that the
+/// delivery sets match and every delivered value is bit-identical to
+/// the tree decomposition's. Returns the four reports for extra
+/// algorithm-specific checks at the call site.
+fn assert_equivalent(base: &SimConfig, label: &str) -> Vec<RunReport> {
+    let reps: Vec<RunReport> = ALGOS
+        .iter()
+        .map(|&algo| run_allreduce(&base.clone().allreduce_algo(algo)))
+        .collect();
+    let tree = &reps[0];
+    for (rep, algo) in reps.iter().zip(ALGOS).skip(1) {
+        for r in 0..base.n {
+            assert_eq!(
+                rep.deliveries_at(r),
+                tree.deliveries_at(r),
+                "{label}: rank {r} delivery set differs ({} vs tree)",
+                algo.name()
+            );
+            assert_eq!(
+                rep.value_at(r),
+                tree.value_at(r),
+                "{label}: rank {r} value differs ({} vs tree)",
+                algo.name()
+            );
+        }
+    }
+    reps
+}
+
+/// Clean runs over the full (n, f) grid — power-of-two, odd, prime and
+/// fold-remainder sizes: every rank delivers exactly once, in exactly
+/// one attempt, with the same mask under every algorithm; and no
+/// algorithm leaks another's wire traffic (the butterfly sends no
+/// tree/broadcast frames, the dual root no butterfly/baseline frames).
+#[test]
+fn clean_grid_all_four_algos_bit_identical() {
+    for n in [1u32, 2, 3, 5, 7, 8, 12, 16, 33, 61] {
+        for f in [0u32, 1, 2, 3] {
+            let base = SimConfig::new(n, f).payload(PayloadKind::OneHot);
+            let label = format!("clean n={n} f={f}");
+            let reps = assert_equivalent(&base, &label);
+            for (rep, algo) in reps.iter().zip(ALGOS) {
+                for r in 0..n {
+                    assert_eq!(rep.deliveries_at(r), 1, "{label}: {} rank {r}", algo.name());
+                    match rep.outcomes[r as usize].first() {
+                        Some(Outcome::Allreduce { value, attempts }) => {
+                            assert_eq!(
+                                *attempts,
+                                1,
+                                "{label}: {} rank {r} attempts",
+                                algo.name()
+                            );
+                            let counts = value.inclusion_counts();
+                            assert!(
+                                counts.iter().all(|&c| c == 1),
+                                "{label}: {} rank {r} mask {counts:?}",
+                                algo.name()
+                            );
+                        }
+                        o => panic!("{label}: {} rank {r} unexpected {o:?}", algo.name()),
+                    }
+                }
+                let foreign: &[MsgKind] = match algo {
+                    AllreduceAlgo::Butterfly => {
+                        &[MsgKind::TreeUp, MsgKind::BcastTree, MsgKind::BcastCorrection]
+                    }
+                    AllreduceAlgo::DualRoot => {
+                        &[MsgKind::Baseline, MsgKind::BflyHalve, MsgKind::BflyDouble]
+                    }
+                    _ => &[MsgKind::BflyHalve, MsgKind::BflyDouble],
+                };
+                for &kind in foreign {
+                    assert_eq!(
+                        rep.metrics.msgs(kind),
+                        0,
+                        "{label}: {} sent foreign {kind:?} traffic",
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The clean equivalence is insensitive to the failure-information
+/// scheme, the payload encoding, and the network cost model: delivered
+/// values are semantics, not timing.
+#[test]
+fn clean_equivalence_across_scheme_payload_net() {
+    for &(n, f) in &[(7u32, 1u32), (12, 2)] {
+        for scheme in [Scheme::List, Scheme::CountBit, Scheme::Bit] {
+            for payload in [PayloadKind::OneHot, PayloadKind::RankValue] {
+                for (net_name, net) in [("hpc", NetModel::hpc()), ("lan", NetModel::lan())] {
+                    let base =
+                        SimConfig::new(n, f).payload(payload).scheme(scheme).net(net);
+                    assert_equivalent(
+                        &base,
+                        &format!("n={n} f={f} {scheme:?} {payload:?} {net_name}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Pre-operational failures: with every victim strictly past the
+/// candidate band (so no algorithm's roots/owners are touched), the
+/// dead deliver nowhere, every survivor delivers once, and all four
+/// algorithms produce the same survivor mask bit for bit — including
+/// non-power-of-two n and a multi-death in one correction group.
+#[test]
+fn pre_operational_failures_all_four_algos_agree() {
+    let grids: &[(u32, u32, &[Rank])] = &[
+        (8, 1, &[5]),
+        (12, 2, &[5, 9]),
+        (12, 2, &[4, 5]), // same up-correction group
+        (16, 3, &[7, 11, 14]),
+        (33, 2, &[20, 31]),
+        (61, 1, &[60]),
+    ];
+    for &(n, f, dead) in grids {
+        assert!(dead.iter().all(|&d| d > f), "victims must sit past the band");
+        let base = SimConfig::new(n, f)
+            .payload(PayloadKind::OneHot)
+            .failures(dead.iter().map(|&rank| FailureSpec::Pre { rank }).collect());
+        let label = format!("pre n={n} f={f} dead={dead:?}");
+        let reps = assert_equivalent(&base, &label);
+        for (rep, algo) in reps.iter().zip(ALGOS) {
+            for r in 0..n {
+                let want = usize::from(!dead.contains(&r));
+                assert_eq!(
+                    rep.deliveries_at(r),
+                    want,
+                    "{label}: {} rank {r} deliveries",
+                    algo.name()
+                );
+            }
+            let first = rep.value_at(if dead.contains(&0) { 1 } else { 0 }).unwrap();
+            let counts = first.inclusion_counts();
+            for r in 0..n as usize {
+                let want = i64::from(!dead.contains(&(r as Rank)));
+                assert_eq!(counts[r], want, "{label}: {} inclusion of {r}", algo.name());
+            }
+        }
+    }
+}
+
+/// Segmentation composes with every algorithm: the segmented pipelines
+/// (double op-id framing) deliver the same per-segment masks as each
+/// other and as the monolithic tree run, clean and under a
+/// pre-operational kill.
+#[test]
+fn segmented_equivalence_clean_and_pre_kill() {
+    for &(n, f, dead) in &[(8u32, 1u32, None), (12, 2, Some(7u32))] {
+        let mut base = SimConfig::new(n, f)
+            .payload(PayloadKind::SegMask { segments: 3 })
+            .segment_bytes(8 * n as usize);
+        if let Some(d) = dead {
+            base = base.failures(vec![FailureSpec::Pre { rank: d }]);
+        }
+        let label = format!("seg n={n} f={f} dead={dead:?}");
+        let reps = assert_equivalent(&base, &label);
+        // and the segmented runs match the *monolithic* tree run too
+        let mut mono_cfg = base.clone();
+        mono_cfg.spec.segment_bytes = None;
+        let mono = run_allreduce(&mono_cfg);
+        for r in 0..n {
+            assert_eq!(
+                reps[0].value_at(r),
+                mono.value_at(r),
+                "{label}: rank {r} segmented != monolithic"
+            );
+        }
+    }
+}

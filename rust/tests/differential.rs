@@ -237,6 +237,39 @@ fn check_bfly(
     compare_allreduce(name, n, &dead, &des, &live);
 }
 
+/// Doubly-pipelined dual-root differential (docs/DUALROOT.md). Same
+/// exact-carrier selection; the in-op row kills root 0 with
+/// `AfterSends { sends: 0 }`, which is timing-independent on either
+/// executor: zero sends means the root's input never escaped its
+/// process, so every unit's correction excludes it deterministically
+/// and the backup sweeps deliver the same survivor sum — in one
+/// attempt, the dual root's whole point.
+fn check_dpdr(
+    name: &str,
+    n: u32,
+    f: u32,
+    payload: PayloadKind,
+    failures: Vec<FailureSpec>,
+    segment_bytes: Option<usize>,
+) {
+    let dead: Vec<Rank> = failures.iter().map(|s| s.rank()).collect();
+    let mut des_cfg = SimConfig::new(n, f)
+        .payload(payload)
+        .failures(failures.clone())
+        .allreduce_algo(AllreduceAlgo::DualRoot);
+    des_cfg.segment_bytes = segment_bytes;
+    let des = sim::run_allreduce(&des_cfg);
+
+    let mut live_cfg = EngineConfig::new(n, f);
+    live_cfg.payload = payload;
+    live_cfg.failures = failures;
+    live_cfg.segment_bytes = segment_bytes;
+    live_cfg.allreduce_algo = AllreduceAlgo::DualRoot;
+    let live = live_allreduce(&live_cfg);
+
+    compare_allreduce(name, n, &dead, &des, &live);
+}
+
 #[test]
 fn reduce_clean_all_schemes() {
     for (n, f) in [(2u32, 1u32), (4, 1), (7, 1), (8, 1), (9, 2), (12, 2), (16, 3)] {
@@ -430,6 +463,69 @@ fn segmented_bfly_differential() {
     for failures in [vec![], vec![FailureSpec::Pre { rank: 4 }]] {
         check_bfly(
             "bfly/segmented",
+            8,
+            1,
+            PayloadKind::SegMask { segments: 3 },
+            failures,
+            Some(8 * 8),
+        );
+    }
+}
+
+#[test]
+fn dpdr_differential() {
+    for (n, f) in [(4u32, 1u32), (7, 1), (8, 2)] {
+        check_dpdr("dpdr/clean", n, f, PayloadKind::OneHot, vec![], None);
+    }
+    // f=1 single pre-kill past the root pair: every unit excludes the
+    // victim and both executors deliver the same survivor mask in a
+    // single attempt
+    check_dpdr(
+        "dpdr/pre1",
+        8,
+        1,
+        PayloadKind::OneHot,
+        vec![FailureSpec::Pre { rank: 5 }],
+        None,
+    );
+    // pre-operational death of root 0: the surviving root's warm
+    // standby and backup broadcasts carry both halves — still one
+    // attempt (the RootKill analog that costs tree a rotation)
+    check_dpdr(
+        "dpdr/rootkill",
+        8,
+        1,
+        PayloadKind::OneHot,
+        vec![FailureSpec::Pre { rank: 0 }],
+        None,
+    );
+    // in-operation death of root 0 before its first send: the root's
+    // input never escaped, so exclusion is deterministic on both
+    // executors (see check_dpdr docs)
+    check_dpdr(
+        "dpdr/inop-root-drop",
+        8,
+        1,
+        PayloadKind::OneHot,
+        vec![FailureSpec::AfterSends { rank: 0, sends: 0 }],
+        None,
+    );
+    // exact small-integer sums are order-independent
+    check_dpdr(
+        "dpdr/rank",
+        12,
+        2,
+        PayloadKind::RankValue,
+        vec![FailureSpec::Pre { rank: 6 }, FailureSpec::Pre { rank: 9 }],
+        None,
+    );
+}
+
+#[test]
+fn segmented_dpdr_differential() {
+    for failures in [vec![], vec![FailureSpec::Pre { rank: 4 }]] {
+        check_dpdr(
+            "dpdr/segmented",
             8,
             1,
             PayloadKind::SegMask { segments: 3 },

@@ -5,10 +5,11 @@
 //! conserved, and — the property the whole refactor hangs on — a
 //! mutation through one view must never be observable through another.
 
-use ftcoll::collectives::{NativeReducer, ReduceOp, Reducer};
+use ftcoll::collectives::dualroot::{DualRootConfig, DualRootPipelined};
+use ftcoll::collectives::{Ctx, NativeReducer, Outcome, Protocol, ReduceOp, Reducer};
 use ftcoll::prng::Pcg;
 use ftcoll::proptest_lite::{run_cases, PropConfig};
-use ftcoll::types::{Value, ValueView};
+use ftcoll::types::{segment, Msg, MsgKind, Rank, TimeNs, Value, ValueView};
 use ftcoll::{prop_assert, prop_assert_eq};
 
 fn random_i64s(rng: &mut Pcg, len: usize) -> Vec<i64> {
@@ -377,6 +378,251 @@ fn butterfly_windows_conserve_stride_blocks() {
         prop_assert_eq!(Value::concat_segments(&parts), v, "reassembly lost data");
         Ok(())
     });
+}
+
+/// The dual root's payload plan (docs/DUALROOT.md): the two half-trees
+/// partition the value exactly — `stride_blocks(2)` halves balanced
+/// within one element, concat restores the original — and each half's
+/// pipeline chunks partition the half the same way.
+#[test]
+fn dualroot_half_trees_partition_exactly() {
+    run_cases("dualroot/half_partition", PropConfig::default(), |rng| {
+        let v = random_value(rng);
+        let halves = v.stride_blocks(2);
+        prop_assert_eq!(halves.len(), 2, "half count");
+        prop_assert_eq!(halves[0].len() + halves[1].len(), v.len(), "halves lose elements");
+        prop_assert!(
+            halves[0].len().abs_diff(halves[1].len()) <= 1,
+            "halves unbalanced: {} vs {}",
+            halves[0].len(),
+            halves[1].len()
+        );
+        prop_assert_eq!(Value::concat_segments(&halves), v, "half reassembly lost data");
+        let chunks = rng.range(1, 6) as usize;
+        for (h, half) in halves.iter().enumerate() {
+            let parts = half.stride_blocks(chunks);
+            prop_assert_eq!(parts.len(), chunks, "half {h} chunk count");
+            let total: usize = parts.iter().map(Value::len).sum();
+            prop_assert_eq!(total, half.len(), "half {h} chunks lose elements");
+            prop_assert_eq!(
+                Value::concat_segments(&parts),
+                half.clone(),
+                "half {h} chunk reassembly lost data"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Window conservation over the dual root's full (chunk, half) grid:
+/// the `2 * chunks` zero-copy unit windows, enumerated in the
+/// protocol's `c*2 + h` interleave order, cover every element and every
+/// wire byte of the original value exactly once.
+#[test]
+fn dualroot_unit_windows_conserve_stride_blocks() {
+    run_cases("dualroot/window_conservation", PropConfig::default(), |rng| {
+        let v = random_value(rng);
+        let chunks = rng.range(1, 6) as usize;
+        let halves = v.stride_blocks(2);
+        let per_half: Vec<Vec<Value>> =
+            halves.iter().map(|hv| hv.stride_blocks(chunks)).collect();
+        // the protocol's unit order: (c, h) at index c*2 + h
+        let mut units = Vec::with_capacity(chunks * 2);
+        for c in 0..chunks {
+            for half in &per_half {
+                units.push(half[c].clone());
+            }
+        }
+        let elems: usize = units.iter().map(Value::len).sum();
+        prop_assert_eq!(elems, v.len(), "unit windows do not cover the value");
+        let wire: usize = units.iter().map(Value::wire_bytes).sum();
+        prop_assert_eq!(wire, v.wire_bytes(), "unit windows changed wire bytes");
+        // de-interleaving restores both halves and then the value
+        for h in 0..2usize {
+            let back: Vec<Value> =
+                (0..chunks).map(|c| units[c * 2 + h].clone()).collect();
+            prop_assert_eq!(
+                Value::concat_segments(&back),
+                halves[h].clone(),
+                "half {h} de-interleave lost data"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Captures every send/delivery of one mesh rank instead of routing it,
+/// so the test below can replay the dual root's wire schedule through a
+/// global FIFO and inspect frame ordering. Timers are a safe no-op:
+/// among the collectives only the gossip baseline arms them.
+struct MeshCtx {
+    rank: Rank,
+    n: u32,
+    reducer: NativeReducer,
+    sent: Vec<(Rank, Msg)>,
+    delivered: Vec<Outcome>,
+}
+
+impl Ctx for MeshCtx {
+    fn rank(&self) -> Rank {
+        self.rank
+    }
+    fn n(&self) -> u32 {
+        self.n
+    }
+    fn now(&self) -> TimeNs {
+        0
+    }
+    fn send(&mut self, to: Rank, msg: Msg) {
+        self.sent.push((to, msg));
+    }
+    fn watch(&mut self, _peer: Rank) {}
+    fn unwatch(&mut self, _peer: Rank) {}
+    fn set_timer(&mut self, _delay: TimeNs, _token: u64) {}
+    fn combine(&mut self, acc: &mut Value, other: &Value) {
+        self.reducer.combine(acc, other);
+    }
+    fn deliver(&mut self, out: Outcome) {
+        self.delivered.push(out);
+    }
+}
+
+/// Move rank `r`'s fresh sends into the global FIFO, stamping each with
+/// the next global sequence number and logging its decoded frame.
+/// Frames are `seg_op(op_id, (c*2 + h)*4 + u)` (dualroot.rs), so the
+/// seg index alone recovers (chunk, half, sweep).
+fn drain_sends(
+    r: usize,
+    ctxs: &mut [MeshCtx],
+    queue: &mut std::collections::VecDeque<(Rank, Rank, Msg)>,
+    log: &mut Vec<(u64, Rank, u32, MsgKind)>,
+    seq: &mut u64,
+) {
+    let from = ctxs[r].rank;
+    for (to, msg) in std::mem::take(&mut ctxs[r].sent) {
+        let k = segment::seg_index(msg.op).expect("dual-root frames carry a seg index");
+        log.push((*seq, from, k, msg.kind));
+        *seq += 1;
+        queue.push_back((from, to, msg));
+    }
+}
+
+/// The doubly-pipelined schedule law (docs/DUALROOT.md §2): replayed
+/// through a causal FIFO mesh, (a) no unit's broadcast-sweep frame is
+/// ever sent before the last reduce-sweep frame of the *same* unit —
+/// a segment's reduce and its own re-broadcast never overlap; (b) the
+/// backup broadcast stays silent on a clean run; (c) each rank enters
+/// chunk `c` only after finishing its chunk `c-1` up-correction
+/// obligations — the `upcorr_done` pipeline gate; (d) every rank
+/// delivers the full mask in one attempt.
+#[test]
+fn dualroot_pipeline_never_overlaps_reduce_with_own_broadcast() {
+    // n=8/f=1 and n=9/f=2 leave every rank inside a full-width
+    // up-correction group, so every rank sends UC frames on every chunk
+    for (n, f, chunks) in [(8u32, 1u32, 2u32), (9, 2, 3)] {
+        let mut cfg = DualRootConfig::new(n, f);
+        cfg.chunks = chunks;
+        let mut protos: Vec<DualRootPipelined> = (0..n)
+            .map(|r| DualRootPipelined::new(cfg.clone(), r, Value::one_hot(n as usize, r)))
+            .collect();
+        let mut ctxs: Vec<MeshCtx> = (0..n)
+            .map(|r| MeshCtx {
+                rank: r,
+                n,
+                reducer: NativeReducer(ReduceOp::Sum),
+                sent: Vec::new(),
+                delivered: Vec::new(),
+            })
+            .collect();
+
+        let mut queue = std::collections::VecDeque::new();
+        let mut log: Vec<(u64, Rank, u32, MsgKind)> = Vec::new();
+        let mut seq = 0u64;
+        for r in 0..n as usize {
+            protos[r].on_start(&mut ctxs[r]);
+            drain_sends(r, &mut ctxs, &mut queue, &mut log, &mut seq);
+        }
+        while let Some((from, to, msg)) = queue.pop_front() {
+            protos[to as usize].on_message(from, msg, &mut ctxs[to as usize]);
+            drain_sends(to as usize, &mut ctxs, &mut queue, &mut log, &mut seq);
+        }
+        let case = format!("n={n} f={f} chunks={chunks}");
+
+        // (b) the backup broadcast (sweep u=3) is silent while the
+        // primary root lives
+        assert!(
+            log.iter().all(|&(_, _, k, _)| k % 4 != 3),
+            "{case}: backup-sweep traffic on a clean run"
+        );
+
+        // (a) per unit: every reduce-sweep send (u=0, the canonical
+        // reduce) precedes every broadcast-sweep send (u>=2)
+        for unit in 0..chunks * 2 {
+            let last_reduce = log
+                .iter()
+                .filter(|&&(_, _, k, _)| k / 4 == unit && k % 4 == 0)
+                .map(|&(s, ..)| s)
+                .max()
+                .unwrap_or_else(|| panic!("{case}: unit {unit} sent no reduce frames"));
+            let first_bcast = log
+                .iter()
+                .filter(|&&(_, _, k, _)| k / 4 == unit && k % 4 >= 2)
+                .map(|&(s, ..)| s)
+                .min()
+                .unwrap_or_else(|| panic!("{case}: unit {unit} sent no broadcast frames"));
+            assert!(
+                first_bcast > last_reduce,
+                "{case}: unit {unit} broadcast frame #{first_bcast} overtook \
+                 reduce frame #{last_reduce}"
+            );
+        }
+
+        // (c) per rank: the first chunk-c send follows the rank's last
+        // chunk-(c-1) up-correction send
+        for r in 0..n {
+            for c in 1..chunks {
+                let last_prev_uc = log
+                    .iter()
+                    .filter(|&&(_, from, k, kind)| {
+                        from == r && (k / 4) / 2 == c - 1 && kind == MsgKind::UpCorrection
+                    })
+                    .map(|&(s, ..)| s)
+                    .max()
+                    .unwrap_or_else(|| {
+                        panic!("{case}: rank {r} sent no chunk-{} UC frames", c - 1)
+                    });
+                let first_this = log
+                    .iter()
+                    .filter(|&&(_, from, k, _)| from == r && (k / 4) / 2 == c)
+                    .map(|&(s, ..)| s)
+                    .min()
+                    .unwrap_or_else(|| panic!("{case}: rank {r} sent no chunk-{c} frames"));
+                assert!(
+                    first_this > last_prev_uc,
+                    "{case}: rank {r} started chunk {c} (frame #{first_this}) before \
+                     finishing chunk {} up-correction (frame #{last_prev_uc})",
+                    c - 1
+                );
+            }
+        }
+
+        // (d) one full-mask delivery per rank, single attempt
+        for (r, ctx) in ctxs.iter().enumerate() {
+            assert_eq!(ctx.delivered.len(), 1, "{case}: rank {r} deliveries");
+            match &ctx.delivered[0] {
+                Outcome::Allreduce { value, attempts } => {
+                    assert_eq!(*attempts, 1, "{case}: rank {r} attempts");
+                    let counts = value.inclusion_counts();
+                    assert_eq!(counts.len(), n as usize, "{case}: rank {r} length");
+                    assert!(
+                        counts.iter().all(|&x| x == 1),
+                        "{case}: rank {r} mask {counts:?}"
+                    );
+                }
+                o => panic!("{case}: rank {r} delivered {o:?}"),
+            }
+        }
+    }
 }
 
 /// End-to-end: a segmented DES allreduce over the view plane produces

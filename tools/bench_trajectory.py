@@ -21,11 +21,21 @@ Modes (run from anywhere; paths resolve against the repo root):
     (no mode)         print the series as a table
 
 Wall-clock keys (``wall_s*``) are machine-dependent, so --check only
-hard-fails when both sides were measured (a null/absent baseline —
-e.g. a freshly appended row awaiting its first CI run — records the
-new value and passes). Deterministic counters (events, msg_ratio, ...)
-ride along in key_metrics for the record but are gated by the benches
-themselves, not re-diffed here.
+hard-fails when both sides were measured (an *absent* baseline key —
+e.g. a FAST-mode record that skipped a lap — records the new value and
+passes). Deterministic counters (events, msg_ratio, ...) ride along in
+key_metrics for the record but are gated by the benches themselves,
+not re-diffed here.
+
+Null metric *values* are different from absent keys: a bench never
+writes ``null``, so a null can only mean a hand-seeded placeholder or
+a broken record, and folding one in poisons every later --check into
+comparing nothing. Both directions therefore reject nulls: a fresh
+gate record carrying a null metric fails --update/--check outright,
+and a committed row whose metrics are empty or all-null is never used
+as a baseline (PR 10 dropped the two all-null seed rows; the real
+series rows come out of CI's post-bench --update, published in the
+campaign-smoke artifact).
 """
 
 import argparse
@@ -47,6 +57,10 @@ KEYS = {
     "butterfly": [
         "rsag_msgs", "bfly_msgs", "msg_ratio", "byte_ratio", "pass",
     ],
+    "dualroot": [
+        "rsag_msgs", "bfly_msgs", "dpdr_msgs",
+        "msg_ratio", "byte_ratio", "pass",
+    ],
 }
 
 
@@ -65,8 +79,14 @@ def write_series(rows):
 
 
 def fresh_records():
-    """Parse every BENCH_*.json gate record at the repo root."""
+    """Parse every BENCH_*.json gate record at the repo root.
+
+    Returns ``(records, rejected)``: records maps bench name to its
+    extracted key metrics; rejected lists the names of records dropped
+    for carrying a null metric value (see module docstring).
+    """
     out = {}
+    rejected = []
     for path in sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json"))):
         if os.path.basename(path) == "BENCH_trajectory.json":
             continue
@@ -77,13 +97,25 @@ def fresh_records():
             print(f"bench_trajectory: {path} has no \"bench\" field, skipped")
             continue
         keys = KEYS.get(name, sorted(rec.keys()))
-        out[name] = {k: rec[k] for k in keys if k in rec}
-    return out
+        metrics = {k: rec[k] for k in keys if k in rec}
+        nulls = sorted(k for k, v in metrics.items() if v is None)
+        if nulls:
+            print(f"bench_trajectory: {path} REJECTED — null metrics "
+                  f"{nulls} (benches never emit null; placeholder or "
+                  f"broken record)")
+            rejected.append(name)
+            continue
+        out[name] = metrics
+    return out, rejected
 
 
 def update(pr):
     rows = load_series()
-    fresh = fresh_records()
+    fresh, rejected = fresh_records()
+    if rejected:
+        print(f"bench_trajectory: refusing --update: rejected records "
+              f"{rejected} would poison the series")
+        return 2
     if not fresh:
         print("bench_trajectory: no BENCH_*.json records at the repo root "
               "— run the benches first")
@@ -104,20 +136,23 @@ def update(pr):
 
 def baseline_for(rows, bench, pr):
     """Most recent committed row for `bench` strictly before `pr`
-    (or the latest row at all when pr is None)."""
+    (or the latest row at all when pr is None). Rows whose metrics are
+    empty or all-null cannot anchor a comparison and are skipped."""
     cands = [r for r in rows if r["bench"] == bench
-             and (pr is None or r["pr"] < pr)]
+             and (pr is None or r["pr"] < pr)
+             and any(v is not None for v in r["key_metrics"].values())]
     return max(cands, key=lambda r: r["pr"]) if cands else None
 
 
 def check(pr, tolerance):
     rows = load_series()
-    fresh = fresh_records()
-    if not fresh:
+    fresh, rejected = fresh_records()
+    failures = [f"{name}: gate record rejected (null metrics)"
+                for name in rejected]
+    if not fresh and not failures:
         print("bench_trajectory: no BENCH_*.json records at the repo root "
               "— run the benches first")
         return 2
-    failures = []
     for bench, metrics in sorted(fresh.items()):
         if metrics.get("pass") is False:
             failures.append(f"{bench}: gate record says pass=false")
